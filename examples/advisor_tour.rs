@@ -1,0 +1,93 @@
+//! Tour of the configuration advisor — the paper's three guidelines as
+//! an interactive-style walkthrough on the K80/P2 models:
+//!
+//! 1. §3.1  mini-batch + conv-algorithm ILP (Eq. 6) on AlexNet
+//! 2. §3.2  multi-GPU sizing via Lemma 3.1 (incl. the paper's examples)
+//! 3. §3.3  parameter-server sizing via Lemma 3.2 (AlexNet / 1GbE story)
+//!
+//!     cargo run --release --example advisor_tour
+
+use dtlsda::advisor::{self, lemmas, memmodel::MemoryModel, netdefs};
+use dtlsda::sim::device::DeviceModel;
+use dtlsda::sim::netmodel::NetModel;
+use dtlsda::util::bench::Table;
+
+fn main() {
+    let net = netdefs::alexnet();
+    let dev = DeviceModel::k80();
+
+    // ---------------------------------------------------------- §3.1
+    println!("== 1. Mini-batch & convolution algorithms (Eq. 6, K80 12GB) ==\n");
+    let mm = MemoryModel::new(&net);
+    println!(
+        "memory model: M_MP = {:.1} MB, M_C = {:.1} MB, M_FM = {:.1} MB/sample",
+        mm.m_mp() as f64 / 1e6,
+        mm.m_c() as f64 / 1e6,
+        mm.m_fm(1) as f64 / 1e6
+    );
+    let plan = advisor::optimize_minibatch(&net, &dev, &[32, 64, 128, 256, 384, 512]).unwrap();
+    let mut t = Table::new(&["X_mini", "M_bound GB", "step ms", "imgs/s", "conv algos"]);
+    for (b, lp) in &plan.sweep {
+        match lp {
+            Some(lp) => t.row(&[
+                b.to_string(),
+                format!("{:.2}", lp.m_bound as f64 / 1e9),
+                format!("{:.1}", lp.step_time * 1e3),
+                format!("{:.0}", lp.xmini as f64 / lp.step_time),
+                format!("{:?}", lp.algos.iter().map(|a| a.name()).collect::<Vec<_>>()),
+            ]),
+            None => t.row(&[b.to_string(), "-".into(), "infeasible".into(), "-".into(), "-".into()]),
+        }
+    }
+    t.print();
+    println!("recommended X_mini = {}\n", plan.best.xmini);
+
+    // ---------------------------------------------------------- §3.2
+    println!("== 2. Multi-GPU sizing (Lemma 3.1) ==\n");
+    println!("paper example A: target α=80% on G=4 GPUs:");
+    println!(
+        "  max tolerable R_O = {:.1}%  (paper: 9%)",
+        lemmas::max_overhead_ratio(4, 0.8) * 100.0
+    );
+    println!("paper example B: need 3x speedup, measured R_O = 10%:");
+    println!(
+        "  required G = {:?}  (paper: 4 GPUs)",
+        lemmas::gpus_for_speedup(3.0, 0.10).unwrap()
+    );
+    let mut t = Table::new(&["G", "α", "speedup"]);
+    for g in [1usize, 2, 4, 8, 16] {
+        t.row(&[
+            g.to_string(),
+            format!("{:.1}%", lemmas::efficiency(g, 0.10) * 100.0),
+            format!("{:.2}x", lemmas::speedup(g, 0.10)),
+        ]);
+    }
+    t.print();
+
+    // ---------------------------------------------------------- §3.3
+    println!("\n== 3. Parameter-server sizing (Lemma 3.2, AlexNet) ==\n");
+    let s_p = net.params as f64 * 4.0;
+    println!(
+        "S_p = {:.0} MB of f32 parameters; paper: pushing updates ≈ 180MB+ of traffic",
+        s_p / 1e6
+    );
+    let mut t = Table::new(&["network", "N_w", "T_C (s)", "N_ps"]);
+    for (netm, t_c) in [
+        (NetModel::gbe1(), 2.0),
+        (NetModel::gbe10(), 2.0),
+        (NetModel::gbe10(), 0.5),
+        (NetModel::gbe20(), 0.5),
+    ] {
+        for n_w in [4usize, 8, 16] {
+            t.row(&[
+                netm.name.to_string(),
+                n_w.to_string(),
+                format!("{t_c}"),
+                lemmas::num_param_servers(s_p, n_w, netm.bw, t_c).to_string(),
+            ]);
+        }
+    }
+    t.print();
+    println!("\n1GbE cannot hide AlexNet updates behind sub-second compute — the");
+    println!("paper's 'high speed networking is highly recommended' conclusion.");
+}

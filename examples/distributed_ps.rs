@@ -1,0 +1,69 @@
+//! Distributed parameter-server training (§3.3) on a loopback cluster:
+//! N_ps TCP parameter servers + N_w PJRT workers, async updates, with
+//! Lemma 3.2 bookkeeping printed at the end.
+//!
+//!     cargo run --release --example distributed_ps -- [workers] [servers] [steps]
+
+use std::path::PathBuf;
+
+use dtlsda::advisor;
+use dtlsda::coordinator::distributed::{run_distributed, DistConfig};
+use dtlsda::runtime::artifact::ArtifactIndex;
+
+fn main() -> Result<(), String> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let workers: usize = args.first().map_or(2, |s| s.parse().expect("workers"));
+    let servers: usize = args.get(1).map_or(2, |s| s.parse().expect("servers"));
+    let steps: usize = args.get(2).map_or(8, |s| s.parse().expect("steps"));
+
+    let artifacts = PathBuf::from("artifacts");
+    let cfg = DistConfig {
+        grad_artifact: "cnn_gemm_b32_grad".into(),
+        n_workers: workers,
+        n_servers: servers,
+        steps_per_worker: steps,
+        lr: 0.02,
+        momentum: 0.9,
+        sync: false,
+        seed: 3,
+    };
+    println!(
+        "spawning {} parameter servers + {} workers ({} steps each, async momentum SGD) ...",
+        servers, workers, steps
+    );
+    let report = run_distributed(&artifacts, &cfg)?;
+
+    println!("\ncluster throughput: {:.1} samples/s", report.throughput);
+    for (w, losses) in report.worker_losses.iter().enumerate() {
+        println!(
+            "  worker {w}: loss {:.4} -> {:.4}   R_O = {:.3}",
+            losses.first().unwrap(),
+            losses.last().unwrap(),
+            report.worker_r_o[w]
+        );
+    }
+    let (pulls, pushes, updates) = report.ps_stats;
+    println!(
+        "  ps counters: pulls={pulls} pushes={pushes} updates={updates} shard imbalance={:.3}",
+        report.router_imbalance
+    );
+
+    // Close the loop with Lemma 3.2: what does the paper's rule say this
+    // topology needed? (S_p from the manifest; T_C measured in vivo.)
+    let index = ArtifactIndex::load(&artifacts)?;
+    let manifest = index.manifest("cnn")?;
+    let s_p = manifest.total_bytes() as f64;
+    // Use the loopback's practical bandwidth as B_ps.
+    let b_ps = 2e9; // ~2 GB/s effective loopback per connection
+    let mean_ro: f64 =
+        report.worker_r_o.iter().sum::<f64>() / report.worker_r_o.len() as f64;
+    println!(
+        "\nLemma 3.2 check: S_p = {:.1} MB, measured mean R_O = {mean_ro:.3}",
+        s_p / 1e6
+    );
+    for t_c in [0.05, 0.2, 1.0] {
+        let n = advisor::num_param_servers(s_p, workers, b_ps, t_c);
+        println!("  at T_C={t_c:>4}s and B_ps=16Gbps: N_ps >= {n}");
+    }
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Quickstart: load an AOT artifact, train the CNN on the synthetic
+//! image task for a few dozen steps, evaluate, print the profile.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Demonstrates the whole stack: python-lowered Pallas/JAX HLO ->
+//! rust PJRT runtime -> prefetching data pipeline -> 7-step worker ->
+//! evaluation, with the overhead profile (R_O) the advisor consumes.
+
+use std::path::PathBuf;
+
+use dtlsda::coordinator::local::{evaluate, train_local, LocalConfig};
+use dtlsda::runtime::exec::Runtime;
+
+fn main() -> Result<(), String> {
+    let artifacts = PathBuf::from("artifacts");
+    let rt = Runtime::new(&artifacts)?;
+    println!("PJRT platform: {}", rt.platform());
+
+    let cfg = LocalConfig {
+        artifact: "cnn_gemm_b32_train".into(),
+        steps: 40,
+        lr: 0.02,
+        seed: 7,
+        prefetch_depth: 2,
+        log_every: 10,
+    };
+    println!("training {} for {} steps ...", cfg.artifact, cfg.steps);
+    let (params, stats) = train_local(&rt, &cfg)?;
+
+    println!(
+        "\nloss: {:.4} -> {:.4}   throughput: {:.1} samples/s",
+        stats.losses.first().unwrap(),
+        stats.losses.last().unwrap(),
+        stats.throughput
+    );
+    println!("\nFig.1 step profile (means):\n{}", stats.profiler.report());
+
+    let eval = evaluate(&rt, "cnn_gemm_b256_eval", &params, 1 << 20, 2, cfg.seed)?;
+    println!(
+        "held-out: loss {:.4}, top-1 error {:.1}% ({} samples)",
+        eval.mean_loss,
+        eval.error_rate * 100.0,
+        eval.samples
+    );
+    Ok(())
+}

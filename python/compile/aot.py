@@ -1,0 +1,176 @@
+"""AOT pipeline: lower every artifact variant to HLO **text** + sidecar
+metadata, into ``artifacts/``.
+
+HLO text (NOT ``lowered.compiler_ir("hlo")``/.serialize()) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the rust `xla`
+0.1.6 crate binds) rejects; the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/gen_hlo.py.
+
+Outputs per model:
+  <model>.manifest.json   parameter names/shapes/offsets (+ config)
+  <model>.init.bin        raw little-endian f32 init blob, param order
+Outputs per artifact variant:
+  <name>.hlo.txt          the lowered step
+And one global:
+  index.json              all artifacts with shapes and calling convention
+
+Usage: python -m compile.aot --out-dir ../artifacts [--only NAME_SUBSTR]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    MODELS,
+    Cnn,
+    CnnConfig,
+    TransformerLm,
+    LmConfig,
+    STEP_BUILDERS,
+    step_specs,
+)
+from .models.cnn import ConvSpec
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ------------------------------------------------------------ model zoo
+
+def build_models():
+    """The artifact matrix: models x conv-algo variants x step x batch."""
+    cnn_gemm = Cnn(CnnConfig(algos=("gemm", "gemm", "gemm")))
+    cnn_fft = Cnn(CnnConfig(algos=("fft", "fft", "fft")))
+    # Mixed assignment, as the ILP would produce under a tight M_bound:
+    # big first-layer filter -> fft, cheap 3x3 -> gemm.
+    cnn_mixed = Cnn(CnnConfig(algos=("fft", "gemm", "gemm")))
+    lm = TransformerLm(LmConfig())
+    return {
+        "cnn": (cnn_gemm, "cnn"),      # (model, manifest/init family)
+        "cnn_fft": (cnn_fft, "cnn"),
+        "cnn_mixed": (cnn_mixed, "cnn"),
+        "lm": (lm, "lm"),
+    }
+
+
+# One entry per artifact: (artifact name, model key, step kind, batch).
+ARTIFACTS = [
+    ("cnn_gemm_b16_train", "cnn", "train_step", 16),
+    ("cnn_gemm_b32_train", "cnn", "train_step", 32),
+    ("cnn_gemm_b64_train", "cnn", "train_step", 64),
+    ("cnn_gemm_b128_train", "cnn", "train_step", 128),
+    ("cnn_fft_b32_train", "cnn_fft", "train_step", 32),
+    ("cnn_mixed_b32_train", "cnn_mixed", "train_step", 32),
+    ("cnn_gemm_b32_grad", "cnn", "grad_step", 32),
+    ("cnn_gemm_b256_eval", "cnn", "eval_step", 256),
+    ("lm_b8_train", "lm", "train_step", 8),
+    ("lm_b8_grad", "lm", "grad_step", 8),
+    ("lm_b32_eval", "lm", "eval_step", 32),
+]
+
+
+def _spec_json(s: jax.ShapeDtypeStruct) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def write_family(out_dir: str, family: str, model) -> None:
+    """Write <family>.manifest.json + <family>.init.bin once per family."""
+    specs = model.param_specs()
+    init = model.init(seed=0)
+    offset = 0
+    params = []
+    for (name, shape), arr in zip(specs, init):
+        assert tuple(arr.shape) == tuple(shape), (name, arr.shape, shape)
+        size = int(np.prod(shape)) if shape else 1
+        params.append(
+            {"name": name, "shape": list(shape), "size": size, "offset": offset}
+        )
+        offset += size
+    manifest = {
+        "family": family,
+        "params": params,
+        "total_elems": offset,
+        "config": {k: v for k, v in vars(model.cfg).items() if _jsonable(v)},
+    }
+    with open(os.path.join(out_dir, f"{family}.manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    blob = np.concatenate([a.reshape(-1).astype("<f4") for a in init])
+    assert blob.size == offset
+    blob.tofile(os.path.join(out_dir, f"{family}.init.bin"))
+    print(f"  {family}: {len(params)} params, {offset} elems "
+          f"({offset * 4 / 1e6:.1f} MB init blob)")
+
+
+def _jsonable(v):
+    if isinstance(v, (int, float, str, bool)) or v is None:
+        return True
+    if isinstance(v, (list, tuple)):
+        return all(_jsonable(x) for x in v)
+    return False
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    models = build_models()
+    families_written = set()
+    index = {"convention": {
+        "train_step": "(params..., x, y, lr) -> (params'..., loss)",
+        "grad_step": "(params..., x, y) -> (grads..., loss)",
+        "eval_step": "(params..., x, y) -> (loss, correct)",
+    }, "artifacts": []}
+
+    for name, model_key, kind, batch in ARTIFACTS:
+        if args.only and args.only not in name:
+            continue
+        model, family = models[model_key]
+        if family not in families_written:
+            write_family(args.out_dir, family, model)
+            families_written.add(family)
+
+        specs = step_specs(model, kind, batch)
+        fn = STEP_BUILDERS[kind](model)
+        print(f"  lowering {name} ({kind}, batch={batch}) ...", flush=True)
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        hlo_path = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, hlo_path), "w") as f:
+            f.write(text)
+
+        out_tree = jax.eval_shape(fn, *specs)
+        index["artifacts"].append({
+            "name": name,
+            "model": model_key,
+            "family": family,
+            "kind": kind,
+            "batch": batch,
+            "hlo": hlo_path,
+            "num_params": len(model.param_specs()),
+            "inputs": [_spec_json(s) for s in specs],
+            "outputs": [_spec_json(s) for s in out_tree],
+        })
+        print(f"    -> {hlo_path} ({len(text)/1e6:.2f} MB hlo text)")
+
+    with open(os.path.join(args.out_dir, "index.json"), "w") as f:
+        json.dump(index, f, indent=1)
+    print(f"wrote {len(index['artifacts'])} artifacts to {args.out_dir}/index.json")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

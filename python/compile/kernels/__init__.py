@@ -1,0 +1,20 @@
+"""L1: Pallas kernels for the paper's compute hot-spots.
+
+- matmul: MXU-tiled GEMM (the paper's "GEMM-based" substrate), custom-vjp
+- conv: im2col-GEMM and FFT conv2d — the §3.1.2 algorithm choice
+- sgd: fused SGD / momentum parameter-update kernels (Fig. 1 step 6)
+- layernorm: row-blocked normalization for the transformer model
+- ref: pure-jnp oracles for all of the above
+"""
+
+from .matmul import matmul, matmul_pallas
+from .conv import conv2d, conv2d_gemm, conv2d_fft, im2col, CONV_ALGOS
+from .sgd import sgd_update, momentum_update
+from .layernorm import layernorm, layernorm_pallas
+
+__all__ = [
+    "matmul", "matmul_pallas",
+    "conv2d", "conv2d_gemm", "conv2d_fft", "im2col", "CONV_ALGOS",
+    "sgd_update", "momentum_update",
+    "layernorm", "layernorm_pallas",
+]

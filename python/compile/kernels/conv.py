@@ -1,0 +1,93 @@
+"""Convolution algorithms — the paper's §3.1.2 speed/memory trade-off.
+
+Two interchangeable implementations of NHWC conv2d, mirroring the paper's
+cuDNN GEMM-vs-FFT choice (Table 2, Figure 2):
+
+* ``conv2d_gemm`` — im2col lowering into the L1 Pallas tiled-matmul kernel
+  (the "GEMM-based" algorithm [10]).  Less memory, slower on large
+  filters.
+* ``conv2d_fft``  — FFT-domain convolution (the "FFT-based" algorithm
+  [37]): pad filters to input size, pointwise multiply in the frequency
+  domain.  Faster for large filters, memory-hungry — exactly the Table 2
+  ratio the advisor's ILP trades off.
+
+Both produce identical numerics (pytest checks them against
+``ref.conv2d_ref`` and each other), so the rust coordinator can switch
+artifacts per the ILP solution without affecting convergence.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul
+
+
+def _out_dim(size: int, f: int, stride: int, pad: int) -> int:
+    # Paper Eq. (1): B_{i+1} = (B_i - F + 2P)/S + 1
+    return (size - f + 2 * pad) // stride + 1
+
+
+def im2col(x: jax.Array, fh: int, fw: int, stride: int, padding: int) -> jax.Array:
+    """NHWC -> (N*OH*OW, FH*FW*C) patch matrix (the "lowering" of [23])."""
+    n, h, w, c = x.shape
+    oh = _out_dim(h, fh, stride, padding)
+    ow = _out_dim(w, fw, stride, padding)
+    # conv_general_dilated_patches yields NCHW-grouped patches; dimension
+    # numbers keep us in NHWC, feature dim = C*FH*FW ordered (c, fh, fw).
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(fh, fw),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # (N, OH, OW, C*FH*FW)
+    return patches.reshape(n * oh * ow, c * fh * fw), (n, oh, ow)
+
+
+def conv2d_gemm(x: jax.Array, w: jax.Array, *, stride: int = 1, padding: int = 0) -> jax.Array:
+    """GEMM-based conv: im2col + Pallas tiled matmul.  NHWC x HWIO -> NHWC."""
+    fh, fw, c, k = w.shape
+    cols, (n, oh, ow) = im2col(x, fh, fw, stride, padding)
+    # Patch feature order is (c, fh, fw); reorder the filter to match.
+    wmat = jnp.transpose(w, (2, 0, 1, 3)).reshape(c * fh * fw, k)
+    out = matmul(cols, wmat)
+    return out.reshape(n, oh, ow, k)
+
+
+def conv2d_fft(x: jax.Array, w: jax.Array, *, stride: int = 1, padding: int = 0) -> jax.Array:
+    """FFT-based conv (Mathieu et al. [37]).
+
+    Zero-pads input by `padding`, pads the filter to the padded-input
+    spatial size (this is the memory blow-up of Table 2), multiplies in
+    the rfft2 domain, and samples the valid/strided output grid.
+    Cross-correlation semantics to match cuDNN/`conv2d_ref`.
+    """
+    n, h, wd, c = x.shape
+    fh, fw, c2, k = w.shape
+    assert c == c2, (x.shape, w.shape)
+    xp = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    hp, wp = h + 2 * padding, wd + 2 * padding
+
+    # Frequency-domain cross-correlation: conj(fft(filter)) * fft(input).
+    # Filter is zero-padded to (hp, wp) — the FFT memory cost.
+    fx = jnp.fft.rfft2(xp.astype(jnp.float32), axes=(1, 2))          # (N, hp, wf, C)
+    wpad = jnp.pad(w.astype(jnp.float32), ((0, hp - fh), (0, wp - fw), (0, 0), (0, 0)))
+    fw_ = jnp.conj(jnp.fft.rfft2(wpad, axes=(0, 1)))                  # (hp, wf, C, K)
+    prod = jnp.einsum("nhwc,hwck->nhwk", fx, fw_)
+    full = jnp.fft.irfft2(prod, s=(hp, wp), axes=(1, 2))              # (N, hp, wp, K)
+
+    oh = _out_dim(h, fh, stride, padding)
+    ow = _out_dim(wd, fw, stride, padding)
+    return full[:, : oh * stride : stride, : ow * stride : stride, :]
+
+
+CONV_ALGOS = {"gemm": conv2d_gemm, "fft": conv2d_fft}
+
+
+def conv2d(x, w, *, stride=1, padding=0, algo: str = "gemm"):
+    """Algorithm-dispatched conv2d; `algo` is chosen by the L3 advisor ILP."""
+    try:
+        fn = CONV_ALGOS[algo]
+    except KeyError:
+        raise ValueError(f"unknown conv algo {algo!r}; have {sorted(CONV_ALGOS)}") from None
+    return fn(x, w, stride=stride, padding=padding)

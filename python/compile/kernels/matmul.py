@@ -1,0 +1,138 @@
+"""L1 Pallas tiled matmul kernel — the GEMM substrate of the paper.
+
+The paper's convolution hot path is "GEMM-based" (cuDNN im2col + SGEMM on
+K80 SMs).  The TPU adaptation (DESIGN.md §Hardware-Adaptation) tiles the
+matmul for the 128x128 MXU systolic array instead of CUDA threadblocks:
+BlockSpec expresses the HBM->VMEM schedule, block shapes are kept to
+multiples of the (8, 128) f32 tile, and accumulation is f32
+(`preferred_element_type`), the MXU-native contraction.
+
+Kernels are lowered with ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode is the correctness target
+and the TPU schedule is an estimate (DESIGN.md §8).
+
+Reverse-mode AD does not trace through ``pallas_call``; ``matmul`` is
+wrapped in ``jax.custom_vjp`` whose backward pass re-uses the same kernel
+on transposed operands, so the entire train-step (fwd+bwd) lowers into one
+HLO module built from this kernel.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly tile floor: the f32 native tile is (8, 128); on a real
+# TPU 128-512 blocks keep the systolic array busy within the ~16 MiB
+# VMEM budget. Under interpret=True on CPU-PJRT, however, each grid
+# step's dynamic-update-slice copies the whole output buffer (XLA CPU
+# does not make the loop carry in-place), so execution cost is
+# grid_steps x M x N — we therefore pick blocks ADAPTIVELY to bound the
+# grid to ~8 steps per dimension (EXPERIMENTS.md §Perf: 18-45x step-time
+# reduction at M=65k). Explicit block_* overrides restore the TPU-shaped
+# schedule for the DESIGN.md §8 estimates.
+DEFAULT_BLOCK_M = None  # adaptive
+DEFAULT_BLOCK_N = None
+DEFAULT_BLOCK_K = None
+
+_MIN_BLOCK_M = 128
+_MAX_BLOCK_M = 32768
+_MAX_BLOCK_NK = 32768
+_TARGET_GRID = 8
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _adaptive_block(dim: int, tile: int, lo: int, hi: int) -> int:
+    """Smallest tile-multiple block that keeps grid_steps <= _TARGET_GRID,
+    clamped to [lo, hi]."""
+    want = _ceil_to((dim + _TARGET_GRID - 1) // _TARGET_GRID, tile)
+    return max(lo, min(hi, want))
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, nk: int):
+    """Grid = (M/bm, N/bn, K/bk), K innermost: sequential accumulation."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def matmul_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_m: int | None = DEFAULT_BLOCK_M,
+    block_n: int | None = DEFAULT_BLOCK_N,
+    block_k: int | None = DEFAULT_BLOCK_K,
+) -> jax.Array:
+    """(M, K) @ (K, N) -> (M, N) via the tiled Pallas kernel.
+
+    Operands are zero-padded up to block multiples (zeros do not change
+    the contraction), the kernel runs over the padded grid, and the
+    result is sliced back.  Output dtype is f32 (MXU accumulate dtype).
+    """
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"matmul_pallas expects 2-D operands, got {x.shape} @ {w.shape}")
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+
+    if block_m is None:
+        block_m = _adaptive_block(m, 8, _MIN_BLOCK_M, _MAX_BLOCK_M)
+    if block_n is None:
+        block_n = _adaptive_block(n, 128, 128, _MAX_BLOCK_NK)
+    if block_k is None:
+        block_k = _adaptive_block(k, 128, 128, _MAX_BLOCK_NK)
+    bm = min(block_m, _ceil_to(m, 8))
+    bn = min(block_n, _ceil_to(n, 128))
+    bk = min(block_k, _ceil_to(k, 128))
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k))) if (mp, kp) != (m, k) else x
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n))) if (kp, np_) != (k, n) else w
+
+    nk = kp // bk
+    out = pl.pallas_call(
+        partial(_matmul_kernel, nk=nk),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    if (mp, np_) != (m, n):
+        out = out[:m, :n]
+    return out
+
+
+@jax.custom_vjp
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Differentiable tiled matmul; fwd and bwd both run the Pallas kernel."""
+    return matmul_pallas(x, w)
+
+
+def _matmul_fwd(x, w):
+    return matmul_pallas(x, w), (x, w)
+
+
+def _matmul_bwd(res, g):
+    x, w = res
+    # dL/dx = g @ w^T, dL/dw = x^T @ g — same kernel, transposed operands.
+    dx = matmul_pallas(g, w.T).astype(x.dtype)
+    dw = matmul_pallas(x.T, g).astype(w.dtype)
+    return dx, dw
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

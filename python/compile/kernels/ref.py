@@ -1,0 +1,38 @@
+"""Pure-jnp correctness oracles for every Pallas kernel.
+
+pytest asserts allclose(kernel, ref) — this is the core L1 correctness
+signal (no Pallas, no custom_vjp: plain jnp/lax only).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, *, stride: int = 1, padding: int = 0) -> jax.Array:
+    """NHWC x HWIO -> NHWC convolution (cross-correlation, like cuDNN)."""
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def sgd_ref(w: jax.Array, g: jax.Array, lr) -> jax.Array:
+    return w - lr * g
+
+
+def momentum_ref(w: jax.Array, v: jax.Array, g: jax.Array, lr, mu):
+    v2 = mu * v + g
+    return w - lr * v2, v2
+
+
+def layernorm_ref(x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * gamma + beta

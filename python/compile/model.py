@@ -1,0 +1,80 @@
+"""L2 step builders: turn a model into the flat-signature jax functions
+that AOT-lower to the HLO artifacts the rust runtime executes.
+
+Artifact calling conventions (the rust side mirrors these in
+``rust/src/runtime/artifact.rs``):
+
+  train_step : (p_0..p_{K-1}, x, y, lr)  -> (p'_0..p'_{K-1}, loss)
+  grad_step  : (p_0..p_{K-1}, x, y)      -> (g_0..g_{K-1}, loss)
+  eval_step  : (p_0..p_{K-1}, x, y)      -> (loss, correct)
+
+Parameters travel as K separate arrays in ``param_specs()`` order — the
+parameter-server shards them by index.  The fused SGD update inside
+train_step runs on the L1 Pallas update kernel (Fig. 1 step 6).
+"""
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import sgd_update
+from .models import MODELS, Cnn, CnnConfig, TransformerLm, LmConfig  # re-export
+
+
+def build_train_step(model) -> Callable:
+    """fwd + bwd + fused Pallas SGD update, one jittable function."""
+    nparams = len(model.param_specs())
+
+    def train_step(*args):
+        params, (x, y, lr) = args[:nparams], args[nparams:]
+        loss, grads = jax.value_and_grad(
+            lambda ps: model.loss(ps, x, y), argnums=0
+        )(list(params))
+        new = [sgd_update(p, g, lr) for p, g in zip(params, grads)]
+        return (*new, loss)
+
+    return train_step
+
+
+def build_grad_step(model) -> Callable:
+    """fwd + bwd only — workers push these gradients to parameter servers."""
+    nparams = len(model.param_specs())
+
+    def grad_step(*args):
+        params, (x, y) = args[:nparams], args[nparams:]
+        loss, grads = jax.value_and_grad(
+            lambda ps: model.loss(ps, x, y), argnums=0
+        )(list(params))
+        return (*[g.astype(jnp.float32) for g in grads], loss)
+
+    return grad_step
+
+
+def build_eval_step(model) -> Callable:
+    nparams = len(model.param_specs())
+
+    def eval_step(*args):
+        params, (x, y) = args[:nparams], args[nparams:]
+        loss, correct = model.metrics(list(params), x, y)
+        return loss, correct
+
+    return eval_step
+
+
+STEP_BUILDERS = {
+    "train_step": build_train_step,
+    "grad_step": build_grad_step,
+    "eval_step": build_eval_step,
+}
+
+
+def step_specs(model, kind: str, batch: int) -> Sequence[jax.ShapeDtypeStruct]:
+    """Input ShapeDtypeStructs for AOT-lowering `kind` at `batch`."""
+    param_in = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in model.param_specs()]
+    x, y = model.input_specs(batch)
+    if kind == "train_step":
+        return [*param_in, x, y, jax.ShapeDtypeStruct((), jnp.float32)]
+    if kind in ("grad_step", "eval_step"):
+        return [*param_in, x, y]
+    raise ValueError(f"unknown step kind {kind!r}")

@@ -1,0 +1,16 @@
+"""L2 model zoo: the compute graphs the coordinator trains.
+
+Each model exposes:
+  param_specs() -> [(name, shape), ...]       (deterministic order)
+  init(seed)    -> [np.ndarray, ...]          (matching param_specs)
+  loss(params, x, y) -> scalar mean loss
+  metrics(params, x, y) -> (loss, correct)    (evaluation path)
+plus input_specs(batch) for AOT lowering.
+"""
+
+from .cnn import CnnConfig, Cnn
+from .transformer import LmConfig, TransformerLm
+
+MODELS = {"cnn": Cnn, "lm": TransformerLm}
+
+__all__ = ["CnnConfig", "Cnn", "LmConfig", "TransformerLm", "MODELS"]

@@ -1,0 +1,145 @@
+"""AlexNet-lite CNN — the paper's CNN workload, scaled to the synthetic
+32x32 image task (DESIGN.md §4: ImageNet -> synthetic substitution).
+
+The architecture follows AlexNet's shape grammar (§3.1.3: stacked
+conv[+pool] feature extraction, then fully-connected classification) so
+the paper's memory model (Eqs. 2-5) applies layer-by-layer.  Every conv
+layer takes a per-layer algorithm choice ("gemm" | "fft") — the knob the
+advisor's ILP (Eq. 6) optimizes.  All matmuls/convs run on the L1 Pallas
+kernels; the FFT path is the L2 jnp.fft alternative.
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..kernels import conv2d, matmul
+
+
+@dataclass(frozen=True)
+class ConvSpec:
+    """One feature-extraction layer (paper Eq. 1 geometry)."""
+
+    filters: int      # K_i
+    size: int         # F_i
+    stride: int       # S_i
+    pad: int          # P_i
+    pool: int         # max-pool window/stride after the conv (0 = none)
+
+
+@dataclass(frozen=True)
+class CnnConfig:
+    image: int = 32
+    channels: int = 3
+    classes: int = 10
+    convs: Tuple[ConvSpec, ...] = (
+        ConvSpec(32, 5, 1, 2, 2),
+        ConvSpec(64, 5, 1, 2, 2),
+        ConvSpec(128, 3, 1, 1, 2),
+    )
+    fc: Tuple[int, ...] = (256,)
+    # Per-conv-layer algorithm, chosen by the L3 advisor ILP.
+    algos: Tuple[str, ...] = ("gemm", "gemm", "gemm")
+
+    def out_hw(self) -> int:
+        hw = self.image
+        for c in self.convs:
+            hw = (hw - c.size + 2 * c.pad) // c.stride + 1
+            if c.pool:
+                hw //= c.pool
+        return hw
+
+
+class Cnn:
+    name = "cnn"
+
+    def __init__(self, cfg: CnnConfig = CnnConfig()):
+        assert len(cfg.algos) == len(cfg.convs), "one algo per conv layer"
+        self.cfg = cfg
+
+    # ------------------------------------------------------------ params
+
+    def param_specs(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        cfg = self.cfg
+        specs = []
+        cin = cfg.channels
+        for i, c in enumerate(cfg.convs):
+            specs.append((f"conv{i}.w", (c.size, c.size, cin, c.filters)))
+            specs.append((f"conv{i}.b", (c.filters,)))
+            cin = c.filters
+        dim = cfg.out_hw() ** 2 * cin
+        for j, width in enumerate(cfg.fc):
+            specs.append((f"fc{j}.w", (dim, width)))
+            specs.append((f"fc{j}.b", (width,)))
+            dim = width
+        specs.append(("head.w", (dim, cfg.classes)))
+        specs.append(("head.b", (cfg.classes,)))
+        return specs
+
+    def init(self, seed: int = 0) -> List[np.ndarray]:
+        rng = np.random.default_rng(seed)
+        out = []
+        for name, shape in self.param_specs():
+            if name.endswith(".b") or name == "head.w":
+                # zero-init the classifier head: initial loss = ln(classes),
+                # keeps early SGD steps stable at practical learning rates.
+                out.append(np.zeros(shape, np.float32))
+            else:
+                fan_in = int(np.prod(shape[:-1]))
+                scale = np.sqrt(2.0 / fan_in)  # He init (ReLU network)
+                out.append((rng.standard_normal(shape) * scale).astype(np.float32))
+        return out
+
+    # ----------------------------------------------------------- forward
+
+    def logits(self, params: Sequence[jax.Array], x: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        p = list(params)
+        h = x
+        for i, c in enumerate(cfg.convs):
+            w, b = p[2 * i], p[2 * i + 1]
+            h = conv2d(h, w, stride=c.stride, padding=c.pad, algo=cfg.algos[i])
+            h = jax.nn.relu(h + b)
+            if c.pool:
+                h = jax.lax.reduce_window(
+                    h,
+                    -jnp.inf,
+                    jax.lax.max,
+                    (1, c.pool, c.pool, 1),
+                    (1, c.pool, c.pool, 1),
+                    "VALID",
+                )
+        n = h.shape[0]
+        h = h.reshape(n, -1)
+        base = 2 * len(cfg.convs)
+        for j in range(len(cfg.fc)):
+            w, b = p[base + 2 * j], p[base + 2 * j + 1]
+            h = jax.nn.relu(matmul(h, w) + b)
+        w, b = p[-2], p[-1]
+        return matmul(h, w) + b
+
+    def loss(self, params, x, y) -> jax.Array:
+        logits = self.logits(params, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+
+    def metrics(self, params, x, y):
+        """(mean loss, top-1 correct count).  The paper plots top-5 error on
+        1000 classes (Fig. 3); with 10 synthetic classes top-1 is the analog."""
+        logits = self.logits(params, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+        return loss, correct
+
+    # --------------------------------------------------------------- AOT
+
+    def input_specs(self, batch: int):
+        cfg = self.cfg
+        return (
+            jax.ShapeDtypeStruct((batch, cfg.image, cfg.image, cfg.channels), jnp.float32),
+            jax.ShapeDtypeStruct((batch,), jnp.int32),
+        )

@@ -1,0 +1,157 @@
+"""Decoder-only transformer LM — the e2e-validation workload.
+
+Byte-level language model: pre-LN blocks of causal self-attention + MLP.
+All linear algebra routes through the L1 Pallas tiled-matmul kernel and
+the Pallas layernorm kernel, so the fwd+bwd train step lowers into one
+HLO module dominated by the MXU-tiled GEMM.
+
+The paper predates transformers; we use one because the repro mandate
+requires an end-to-end LM training driver.  The configuration below is
+CPU-feasible (the paper's 60M-param AlexNet / "100M-scale" regime is not
+trainable for hundreds of steps on one CPU core — see DESIGN.md §4); the
+config scales to arbitrary width/depth for lowering-only studies.
+"""
+
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..kernels import matmul, layernorm
+
+
+@dataclass(frozen=True)
+class LmConfig:
+    vocab: int = 256
+    seq: int = 64
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ff: int = 512
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def _mm(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Batched (.., d_in) @ (d_in, d_out) through the 2-D Pallas kernel."""
+    lead = x.shape[:-1]
+    rows = 1
+    for s in lead:
+        rows *= s
+    return matmul(x.reshape(rows, x.shape[-1]), w).reshape(*lead, w.shape[-1])
+
+
+class TransformerLm:
+    name = "lm"
+
+    def __init__(self, cfg: LmConfig = LmConfig()):
+        assert cfg.d_model % cfg.n_heads == 0
+        self.cfg = cfg
+
+    # ------------------------------------------------------------ params
+
+    def param_specs(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        cfg = self.cfg
+        specs = [("embed", (cfg.vocab, cfg.d_model)), ("pos", (cfg.seq, cfg.d_model))]
+        for i in range(cfg.n_layers):
+            p = f"block{i}."
+            specs += [
+                (p + "ln1.g", (cfg.d_model,)),
+                (p + "ln1.b", (cfg.d_model,)),
+                (p + "attn.wqkv", (cfg.d_model, 3 * cfg.d_model)),
+                (p + "attn.wo", (cfg.d_model, cfg.d_model)),
+                (p + "ln2.g", (cfg.d_model,)),
+                (p + "ln2.b", (cfg.d_model,)),
+                (p + "mlp.w1", (cfg.d_model, cfg.d_ff)),
+                (p + "mlp.b1", (cfg.d_ff,)),
+                (p + "mlp.w2", (cfg.d_ff, cfg.d_model)),
+                (p + "mlp.b2", (cfg.d_model,)),
+            ]
+        specs += [
+            ("lnf.g", (cfg.d_model,)),
+            ("lnf.b", (cfg.d_model,)),
+            ("head", (cfg.d_model, cfg.vocab)),
+        ]
+        return specs
+
+    def init(self, seed: int = 0) -> List[np.ndarray]:
+        rng = np.random.default_rng(seed)
+        out = []
+        for name, shape in self.param_specs():
+            if name.endswith(".g"):
+                out.append(np.ones(shape, np.float32))  # layernorm gain
+            elif len(shape) == 1 or name == "head":
+                # biases / ln shift / zero-init head (loss starts at
+                # exactly ln(vocab), stabilizing early SGD — as the CNN).
+                out.append(np.zeros(shape, np.float32))
+            else:
+                scale = 0.02 if name in ("embed", "pos") else np.sqrt(1.0 / shape[0])
+                out.append((rng.standard_normal(shape) * scale).astype(np.float32))
+        return out
+
+    # ----------------------------------------------------------- forward
+
+    def logits(self, params: Sequence[jax.Array], x: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        it = iter(params)
+        embed, pos = next(it), next(it)
+        b, t = x.shape
+        h = embed[x] + pos[None, :t, :]
+
+        mask = jnp.tril(jnp.ones((t, t), jnp.float32))
+        neg = jnp.float32(-1e9)
+
+        for _ in range(cfg.n_layers):
+            ln1g, ln1b = next(it), next(it)
+            wqkv, wo = next(it), next(it)
+            ln2g, ln2b = next(it), next(it)
+            w1, b1, w2, b2 = next(it), next(it), next(it), next(it)
+
+            # -- causal self-attention (pre-LN)
+            hn = layernorm(h, ln1g, ln1b)
+            qkv = _mm(hn, wqkv)  # (b, t, 3d)
+            q, k, v = jnp.split(qkv, 3, axis=-1)
+
+            def heads(z):
+                return z.reshape(b, t, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+
+            q, k, v = heads(q), heads(k), heads(v)
+            att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(cfg.d_head)
+            att = jnp.where(mask[None, None] > 0, att, neg)
+            att = jax.nn.softmax(att, axis=-1)
+            ctx = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+            ctx = ctx.transpose(0, 2, 1, 3).reshape(b, t, cfg.d_model)
+            h = h + _mm(ctx, wo)
+
+            # -- MLP
+            hn = layernorm(h, ln2g, ln2b)
+            h = h + _mm(jax.nn.gelu(_mm(hn, w1) + b1), w2) + b2
+
+        lnfg, lnfb = next(it), next(it)
+        head = next(it)
+        return _mm(layernorm(h, lnfg, lnfb), head)
+
+    def loss(self, params, x, y) -> jax.Array:
+        logits = self.logits(params, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.mean(jnp.take_along_axis(logp, y[..., None], axis=-1))
+
+    def metrics(self, params, x, y):
+        logits = self.logits(params, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        loss = -jnp.mean(jnp.take_along_axis(logp, y[..., None], axis=-1))
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+        return loss, correct
+
+    # --------------------------------------------------------------- AOT
+
+    def input_specs(self, batch: int):
+        cfg = self.cfg
+        return (
+            jax.ShapeDtypeStruct((batch, cfg.seq), jnp.int32),
+            jax.ShapeDtypeStruct((batch, cfg.seq), jnp.int32),
+        )

@@ -1,0 +1,113 @@
+"""AOT pipeline tests: HLO text validity, sidecar metadata consistency,
+and the lowering round-trip for a tiny model (fast — does not re-lower
+the full artifact matrix)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import aot
+from compile.model import Cnn, CnnConfig, build_train_step, step_specs
+from compile.models.cnn import ConvSpec
+
+
+def tiny_cnn():
+    return Cnn(CnnConfig(
+        image=8,
+        convs=(ConvSpec(4, 3, 1, 1, 2),),
+        fc=(),
+        algos=("gemm",),
+    ))
+
+
+def test_to_hlo_text_roundtrip():
+    """Lower a small jitted fn to HLO text; it must parse as HLO and
+    contain an entry computation (what HloModuleProto::from_text_file
+    consumes on the rust side)."""
+    model = tiny_cnn()
+    fn = build_train_step(model)
+    specs = step_specs(model, "train_step", 2)
+    lowered = jax.jit(fn).lower(*specs)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # Parameter count visible in the entry signature:
+    nparams = len(model.param_specs())
+    assert f"parameter({nparams + 2})" in text  # lr is the last input
+
+
+def test_artifact_matrix_is_consistent():
+    """Every ARTIFACTS entry references a defined model and valid kind."""
+    models = aot.build_models()
+    kinds = {"train_step", "grad_step", "eval_step"}
+    names = set()
+    for name, model_key, kind, batch in aot.ARTIFACTS:
+        assert name not in names, f"duplicate artifact {name}"
+        names.add(name)
+        assert model_key in models, name
+        assert kind in kinds, name
+        assert batch >= 1
+
+
+def test_write_family_blob_layout(tmp_path):
+    model = tiny_cnn()
+    aot.write_family(str(tmp_path), "tiny", model)
+    with open(tmp_path / "tiny.manifest.json") as f:
+        manifest = json.load(f)
+    specs = model.param_specs()
+    assert len(manifest["params"]) == len(specs)
+    offset = 0
+    for p, (name, shape) in zip(manifest["params"], specs):
+        assert p["name"] == name
+        assert tuple(p["shape"]) == tuple(shape)
+        assert p["offset"] == offset
+        offset += p["size"]
+    assert manifest["total_elems"] == offset
+    blob = np.fromfile(tmp_path / "tiny.init.bin", dtype="<f4")
+    assert blob.size == offset
+    # First param round-trips exactly.
+    init0 = model.init(0)[0].reshape(-1)
+    np.testing.assert_array_equal(blob[: init0.size], init0)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/index.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_built_artifacts_index_valid():
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    with open(os.path.join(root, "index.json")) as f:
+        index = json.load(f)
+    assert len(index["artifacts"]) == len(aot.ARTIFACTS)
+    for a in index["artifacts"]:
+        hlo = os.path.join(root, a["hlo"])
+        assert os.path.exists(hlo), a["name"]
+        with open(hlo) as f:
+            head = f.read(4096)
+        assert "HloModule" in head, a["name"]
+        # Calling convention arity:
+        if a["kind"] == "train_step":
+            assert len(a["inputs"]) == a["num_params"] + 3
+            assert len(a["outputs"]) == a["num_params"] + 1
+        elif a["kind"] == "grad_step":
+            assert len(a["inputs"]) == a["num_params"] + 2
+            assert len(a["outputs"]) == a["num_params"] + 1
+        else:
+            assert len(a["outputs"]) == 2
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/index.json")),
+    reason="artifacts not built",
+)
+def test_built_init_blob_matches_model():
+    """The shipped cnn init blob equals a fresh init(seed=0) — rust and
+    python agree on initial parameters."""
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    blob = np.fromfile(os.path.join(root, "cnn.init.bin"), dtype="<f4")
+    fresh = np.concatenate([a.reshape(-1) for a in Cnn().init(0)])
+    np.testing.assert_array_equal(blob, fresh)

@@ -1,0 +1,109 @@
+"""Hypothesis sweeps over kernel shapes/dtypes (property-based L1 tests).
+
+Shapes are drawn adversarially around tile boundaries; every draw is
+checked against the pure-jnp oracle with assert_allclose.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul_pallas, conv2d_gemm, conv2d_fft, sgd_update, layernorm
+from compile.kernels import ref
+
+# interpret-mode pallas is slow; keep example counts tight but adversarial.
+_SETTINGS = dict(max_examples=20, deadline=None)
+
+dims = st.integers(min_value=1, max_value=160)
+small_dims = st.integers(min_value=1, max_value=24)
+dtypes = st.sampled_from(["float32", "bfloat16"])
+
+
+def _mk(rng, shape, dtype="float32"):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32)).astype(dtype)
+
+
+@settings(**_SETTINGS)
+@given(m=dims, k=dims, n=dims, dtype=dtypes, seed=st.integers(0, 2**31 - 1))
+def test_matmul_any_shape_dtype(m, k, n, dtype, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _mk(rng, (m, k), dtype), _mk(rng, (k, n), dtype)
+    got = matmul_pallas(x, w)
+    want = ref.matmul_ref(x, w)
+    assert got.shape == (m, n)
+    assert got.dtype == jnp.float32  # MXU accumulate dtype
+    tol = 5e-2 if dtype == "bfloat16" else 1e-3
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+@settings(**_SETTINGS)
+@given(
+    n=st.integers(1, 3),
+    h=st.integers(4, 20),
+    c=st.integers(1, 5),
+    k=st.integers(1, 6),
+    f=st.integers(1, 5),
+    stride=st.integers(1, 3),
+    pad=st.integers(0, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_gemm_any_geometry(n, h, c, k, f, stride, pad, seed):
+    if h + 2 * pad < f:
+        return  # filter larger than padded input: not a valid conv
+    rng = np.random.default_rng(seed)
+    x = _mk(rng, (n, h, h, c))
+    w = _mk(rng, (f, f, c, k))
+    got = conv2d_gemm(x, w, stride=stride, padding=pad)
+    want = ref.conv2d_ref(x, w, stride=stride, padding=pad)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-3, atol=5e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(1, 2),
+    h=st.integers(6, 16),
+    c=st.integers(1, 3),
+    k=st.integers(1, 4),
+    f=st.integers(1, 5),
+    pad=st.integers(0, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_fft_any_geometry(n, h, c, k, f, pad, seed):
+    if h + 2 * pad < f:
+        return
+    rng = np.random.default_rng(seed)
+    x = _mk(rng, (n, h, h, c))
+    w = _mk(rng, (f, f, c, k))
+    got = conv2d_fft(x, w, stride=1, padding=pad)
+    want = ref.conv2d_ref(x, w, stride=1, padding=pad)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-3, atol=5e-3)
+
+
+@settings(**_SETTINGS)
+@given(
+    numel=st.integers(1, 200_000),
+    lr=st.floats(1e-5, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sgd_any_size(numel, lr, seed):
+    rng = np.random.default_rng(seed)
+    w = _mk(rng, (numel,))
+    g = _mk(rng, (numel,))
+    got = sgd_update(w, g, lr)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.sgd_ref(w, g, lr)), rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(**_SETTINGS)
+@given(rows=st.integers(1, 64), d=st.integers(2, 300), seed=st.integers(0, 2**31 - 1))
+def test_layernorm_any_shape(rows, d, seed):
+    rng = np.random.default_rng(seed)
+    x = _mk(rng, (rows, d))
+    gamma = _mk(rng, (d,))
+    beta = _mk(rng, (d,))
+    got = layernorm(x, gamma, beta)
+    want = ref.layernorm_ref(x, gamma, beta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-3)

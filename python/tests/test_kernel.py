@@ -1,0 +1,217 @@
+"""L1 kernel vs ref oracle — the CORE correctness signal.
+
+Every Pallas kernel is checked against its pure-jnp oracle, on both the
+forward and (where differentiable) backward paths, across shape grids that
+exercise padding/tiling boundaries.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import (
+    matmul,
+    matmul_pallas,
+    conv2d,
+    conv2d_gemm,
+    conv2d_fft,
+    im2col,
+    sgd_update,
+    momentum_update,
+    layernorm,
+)
+from compile.kernels import ref
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def _arr(rng, shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+# ---------------------------------------------------------------- matmul
+
+MATMUL_SHAPES = [
+    (1, 1, 1),          # degenerate
+    (8, 128, 16),       # exactly one tile
+    (128, 128, 128),    # exactly one block
+    (129, 130, 131),    # every dim crosses a block boundary by 1
+    (37, 53, 29),       # odd, sub-block
+    (256, 64, 512),     # multi-block K (accumulation loop)
+    (3, 300, 5),        # wide K, skinny M/N
+]
+
+
+@pytest.mark.parametrize("m,k,n", MATMUL_SHAPES)
+def test_matmul_forward(m, k, n):
+    rng = _rng(m * 7 + k * 3 + n)
+    x, w = _arr(rng, (m, k)), _arr(rng, (k, n))
+    np.testing.assert_allclose(
+        matmul(x, w), ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("m,k,n", [(37, 53, 29), (128, 128, 128), (16, 200, 8)])
+def test_matmul_vjp(m, k, n):
+    rng = _rng(42)
+    x, w = _arr(rng, (m, k)), _arr(rng, (k, n))
+    got = jax.grad(lambda a, b: jnp.sum(matmul(a, b) ** 2), argnums=(0, 1))(x, w)
+    want = jax.grad(lambda a, b: jnp.sum(jnp.matmul(a, b) ** 2), argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(got[0], want[0], rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(got[1], want[1], rtol=1e-3, atol=1e-3)
+
+
+def test_matmul_block_override():
+    rng = _rng(1)
+    x, w = _arr(rng, (64, 96)), _arr(rng, (96, 48))
+    out = matmul_pallas(x, w, block_m=32, block_n=32, block_k=32)
+    np.testing.assert_allclose(out, ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_rejects_bad_shapes():
+    rng = _rng(2)
+    with pytest.raises(ValueError):
+        matmul_pallas(_arr(rng, (4, 5)), _arr(rng, (6, 7)))
+    with pytest.raises(ValueError):
+        matmul_pallas(_arr(rng, (4,)), _arr(rng, (4, 2)))
+
+
+def test_matmul_zero_inputs():
+    x = jnp.zeros((17, 33), jnp.float32)
+    w = jnp.zeros((33, 9), jnp.float32)
+    np.testing.assert_array_equal(matmul(x, w), jnp.zeros((17, 9)))
+
+
+# ------------------------------------------------------------------ conv
+
+CONV_CASES = [
+    # (n, h, w, c, fh, fw, k, stride, pad)
+    (1, 8, 8, 1, 3, 3, 4, 1, 1),
+    (2, 16, 16, 3, 5, 5, 8, 1, 2),     # AlexNet-ish same-conv
+    (2, 13, 13, 4, 3, 3, 6, 1, 1),     # odd spatial (paper's conv3-5 shape)
+    (1, 11, 11, 2, 4, 4, 3, 1, 0),     # even filter, valid
+    (2, 16, 16, 3, 5, 5, 8, 2, 2),     # strided
+    (1, 28, 28, 3, 11, 11, 8, 4, 2),   # AlexNet conv1 geometry, scaled
+]
+
+
+@pytest.mark.parametrize("algo", ["gemm", "fft"])
+@pytest.mark.parametrize("n,h,w,c,fh,fw,k,stride,pad", CONV_CASES)
+def test_conv_matches_ref(algo, n, h, w, c, fh, fw, k, stride, pad):
+    rng = _rng(n * h + fh * 13 + stride)
+    x, wt = _arr(rng, (n, h, w, c)), _arr(rng, (fh, fw, c, k))
+    out = conv2d(x, wt, stride=stride, padding=pad, algo=algo)
+    want = ref.conv2d_ref(x, wt, stride=stride, padding=pad)
+    assert out.shape == want.shape
+    np.testing.assert_allclose(out, want, rtol=2e-3, atol=2e-3)
+
+
+def test_conv_algos_agree():
+    """The ILP may pick either algorithm; numerics must be interchangeable."""
+    rng = _rng(7)
+    x, wt = _arr(rng, (2, 12, 12, 3)), _arr(rng, (3, 3, 3, 5))
+    a = conv2d_gemm(x, wt, stride=1, padding=1)
+    b = conv2d_fft(x, wt, stride=1, padding=1)
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+
+
+def test_conv_gemm_grad():
+    rng = _rng(8)
+    x, wt = _arr(rng, (1, 8, 8, 2)), _arr(rng, (3, 3, 2, 4))
+
+    def loss_pallas(w_):
+        return jnp.sum(conv2d_gemm(x, w_, stride=1, padding=1) ** 2)
+
+    def loss_ref(w_):
+        return jnp.sum(ref.conv2d_ref(x, w_, stride=1, padding=1) ** 2)
+
+    np.testing.assert_allclose(
+        jax.grad(loss_pallas)(wt), jax.grad(loss_ref)(wt), rtol=1e-3, atol=1e-3
+    )
+
+
+def test_im2col_shape():
+    rng = _rng(9)
+    x = _arr(rng, (2, 10, 10, 3))
+    cols, (n, oh, ow) = im2col(x, 3, 3, 1, 1)
+    assert (n, oh, ow) == (2, 10, 10)
+    assert cols.shape == (2 * 10 * 10, 3 * 3 * 3)
+
+
+def test_conv_unknown_algo():
+    rng = _rng(10)
+    with pytest.raises(ValueError, match="unknown conv algo"):
+        conv2d(_arr(rng, (1, 4, 4, 1)), _arr(rng, (3, 3, 1, 1)), algo="winograd9000")
+
+
+# ------------------------------------------------------------- optimizers
+
+@pytest.mark.parametrize("numel", [1, 127, 128, 129, 32768, 32769, 100_000])
+def test_sgd_update(numel):
+    rng = _rng(numel)
+    w, g = _arr(rng, (numel,)), _arr(rng, (numel,))
+    np.testing.assert_allclose(
+        sgd_update(w, g, 0.05), ref.sgd_ref(w, g, 0.05), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_sgd_update_nd_shape():
+    rng = _rng(3)
+    w, g = _arr(rng, (5, 5, 3, 7)), _arr(rng, (5, 5, 3, 7))
+    out = sgd_update(w, g, 0.01)
+    assert out.shape == w.shape
+    np.testing.assert_allclose(out, ref.sgd_ref(w, g, 0.01), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("numel", [63, 4096, 70_001])
+def test_momentum_update(numel):
+    rng = _rng(numel + 1)
+    w, v, g = _arr(rng, (numel,)), _arr(rng, (numel,)), _arr(rng, (numel,))
+    mw, mv = momentum_update(w, v, g, 0.1, 0.9)
+    rw, rv = ref.momentum_ref(w, v, g, 0.1, 0.9)
+    np.testing.assert_allclose(mw, rw, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(mv, rv, rtol=1e-5, atol=1e-6)
+
+
+def test_momentum_zero_mu_is_sgd():
+    rng = _rng(4)
+    w, v, g = _arr(rng, (500,)), _arr(rng, (500,)), _arr(rng, (500,))
+    mw, mv = momentum_update(w, v, g, 0.2, 0.0)
+    np.testing.assert_allclose(mw, ref.sgd_ref(w, g, 0.2), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(mv, g, rtol=1e-6)
+
+
+# -------------------------------------------------------------- layernorm
+
+@pytest.mark.parametrize("shape", [(4, 64), (3, 5, 100), (2, 7, 128), (1, 129)])
+def test_layernorm(shape):
+    rng = _rng(shape[-1])
+    x = _arr(rng, shape)
+    gamma, beta = _arr(rng, (shape[-1],)), _arr(rng, (shape[-1],))
+    np.testing.assert_allclose(
+        layernorm(x, gamma, beta),
+        ref.layernorm_ref(x, gamma, beta),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_layernorm_moments():
+    """With unit gamma / zero beta, rows are ~zero-mean unit-var."""
+    rng = _rng(11)
+    x = _arr(rng, (16, 200)) * 3.0 + 2.0
+    y = layernorm(x, jnp.ones(200), jnp.zeros(200))
+    np.testing.assert_allclose(np.mean(np.asarray(y), axis=-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.var(np.asarray(y), axis=-1), 1.0, atol=1e-3)
+
+
+def test_layernorm_vjp():
+    rng = _rng(12)
+    x = _arr(rng, (6, 96))
+    gamma, beta = _arr(rng, (96,)), _arr(rng, (96,))
+    got = jax.grad(lambda a: jnp.sum(layernorm(a, gamma, beta) ** 2))(x)
+    want = jax.grad(lambda a: jnp.sum(ref.layernorm_ref(a, gamma, beta) ** 2))(x)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,225 @@
+"""L2 model tests: shapes, gradients, step builders, and the artifact
+calling conventions the rust runtime depends on."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile.model import (
+    Cnn,
+    CnnConfig,
+    TransformerLm,
+    LmConfig,
+    build_train_step,
+    build_grad_step,
+    build_eval_step,
+    step_specs,
+)
+from compile.models.cnn import ConvSpec
+
+
+def _params(model, seed=0):
+    return [jnp.asarray(a) for a in model.init(seed)]
+
+
+def _cnn_batch(rng, n=4, classes=10):
+    x = jnp.asarray(rng.standard_normal((n, 32, 32, 3)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, classes, (n,)), jnp.int32)
+    return x, y
+
+
+def _lm_batch(rng, model, n=2):
+    cfg = model.cfg
+    x = jnp.asarray(rng.integers(0, cfg.vocab, (n, cfg.seq)), jnp.int32)
+    y = jnp.asarray(rng.integers(0, cfg.vocab, (n, cfg.seq)), jnp.int32)
+    return x, y
+
+
+# ------------------------------------------------------------------ CNN
+
+def test_cnn_param_specs_order_and_count():
+    cnn = Cnn()
+    specs = cnn.param_specs()
+    assert len(specs) == 10
+    assert specs[0] == ("conv0.w", (5, 5, 3, 32))
+    assert specs[-2] == ("head.w", (256, 10))
+    total = sum(int(np.prod(s)) for _, s in specs)
+    assert total == 654_666
+
+
+def test_cnn_init_matches_specs():
+    cnn = Cnn()
+    init = cnn.init(0)
+    for (name, shape), arr in zip(cnn.param_specs(), init):
+        assert arr.shape == tuple(shape), name
+        assert arr.dtype == np.float32
+    # zero-init head => initial loss is exactly ln(classes)
+    rng = np.random.default_rng(0)
+    x, y = _cnn_batch(rng)
+    loss = cnn.loss(_params(cnn), x, y)
+    np.testing.assert_allclose(float(loss), np.log(10), rtol=1e-5)
+
+
+def test_cnn_logits_shape():
+    cnn = Cnn()
+    rng = np.random.default_rng(1)
+    x, _ = _cnn_batch(rng, n=3)
+    logits = cnn.logits(_params(cnn), x)
+    assert logits.shape == (3, 10)
+
+
+def test_cnn_grads_nonzero_everywhere():
+    # At the zero-head init only the head receives gradient (backprop
+    # through a zero matrix); after one SGD step every layer must.
+    cnn = Cnn()
+    rng = np.random.default_rng(2)
+    x, y = _cnn_batch(rng)
+    p = _params(cnn)
+    loss_fn = lambda ps: cnn.loss(ps, x, y)  # noqa: E731
+    g0 = jax.grad(loss_fn)(p)
+    names = [n for n, _ in cnn.param_specs()]
+    assert float(jnp.linalg.norm(g0[names.index("head.w")])) > 0
+    assert float(jnp.linalg.norm(g0[names.index("conv0.w")])) == 0.0
+    p1 = [pi - 0.05 * gi for pi, gi in zip(p, g0)]
+    g1 = jax.grad(loss_fn)(p1)
+    for name, g in zip(names, g1):
+        norm = float(jnp.linalg.norm(g))
+        assert np.isfinite(norm), name
+        if name.endswith(".w"):
+            assert norm > 0, f"{name} grad is zero after one step"
+
+
+def test_cnn_fft_and_gemm_same_loss():
+    rng = np.random.default_rng(3)
+    x, y = _cnn_batch(rng)
+    gemm = Cnn(CnnConfig(algos=("gemm", "gemm", "gemm")))
+    fft = Cnn(CnnConfig(algos=("fft", "fft", "fft")))
+    p = _params(gemm)  # same init works for both (same specs)
+    np.testing.assert_allclose(
+        float(gemm.loss(p, x, y)), float(fft.loss(p, x, y)), rtol=1e-4
+    )
+
+
+def test_cnn_metrics_counts():
+    cnn = Cnn()
+    rng = np.random.default_rng(4)
+    x, y = _cnn_batch(rng, n=8)
+    loss, correct = cnn.metrics(_params(cnn), x, y)
+    assert 0.0 <= float(correct) <= 8.0
+    assert float(loss) > 0
+
+
+def test_cnn_custom_config_geometry():
+    cfg = CnnConfig(
+        image=16,
+        convs=(ConvSpec(8, 3, 1, 1, 2), ConvSpec(16, 3, 1, 1, 2)),
+        fc=(32,),
+        algos=("gemm", "gemm"),
+    )
+    cnn = Cnn(cfg)
+    assert cfg.out_hw() == 4
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((2, 16, 16, 3)), jnp.float32)
+    logits = cnn.logits(_params(cnn), x)
+    assert logits.shape == (2, 10)
+
+
+def test_cnn_algo_arity_checked():
+    with pytest.raises(AssertionError):
+        Cnn(CnnConfig(algos=("gemm",)))  # 3 convs need 3 algos
+
+
+# ------------------------------------------------------------------- LM
+
+def test_lm_param_count():
+    lm = TransformerLm()
+    specs = lm.param_specs()
+    assert len(specs) == 2 + 2 * 10 + 3  # embed/pos + 2 blocks + lnf/head
+    total = sum(int(np.prod(s)) for _, s in specs)
+    assert total == 469_504
+
+
+def test_lm_loss_starts_near_uniform():
+    lm = TransformerLm()
+    rng = np.random.default_rng(6)
+    x, y = _lm_batch(rng, lm)
+    loss = float(lm.loss(_params(lm), x, y))
+    np.testing.assert_allclose(loss, np.log(256), rtol=1e-4)
+
+
+def test_lm_causality():
+    """Changing a future token must not affect earlier logits."""
+    lm = TransformerLm()
+    p = _params(lm)
+    rng = np.random.default_rng(7)
+    # Zero-init head maps every hidden state to zero logits; randomize it
+    # so perturbations are visible.
+    p[-1] = jnp.asarray(rng.standard_normal(p[-1].shape), jnp.float32) * 0.1
+    x, _ = _lm_batch(rng, lm, n=1)
+    base = lm.logits(p, x)
+    x2 = x.at[0, -1].set((int(x[0, -1]) + 1) % 256)
+    pert = lm.logits(p, x2)
+    np.testing.assert_allclose(base[0, :-1], pert[0, :-1], atol=1e-5)
+    assert not np.allclose(base[0, -1], pert[0, -1])
+
+
+def test_lm_grads_finite():
+    lm = TransformerLm(LmConfig(n_layers=1))
+    rng = np.random.default_rng(8)
+    x, y = _lm_batch(rng, lm)
+    grads = jax.grad(lambda ps: lm.loss(ps, x, y))(_params(lm))
+    for (name, _), g in zip(lm.param_specs(), grads):
+        assert np.all(np.isfinite(np.asarray(g))), name
+
+
+# ---------------------------------------------------------- step builders
+
+@pytest.mark.parametrize("model_f", [Cnn, TransformerLm])
+def test_train_step_signature(model_f):
+    model = model_f()
+    nparams = len(model.param_specs())
+    specs = step_specs(model, "train_step", 2)
+    assert len(specs) == nparams + 3  # params + x + y + lr
+    out = jax.eval_shape(build_train_step(model), *specs)
+    assert len(out) == nparams + 1  # params' + loss
+    assert out[-1].shape == ()
+
+
+@pytest.mark.parametrize("kind,extra_in,extra_out", [
+    ("grad_step", 2, 1),
+    ("eval_step", 2, None),
+])
+def test_other_step_signatures(kind, extra_in, extra_out):
+    model = Cnn()
+    nparams = len(model.param_specs())
+    specs = step_specs(model, kind, 4)
+    assert len(specs) == nparams + extra_in
+    fn = {"grad_step": build_grad_step, "eval_step": build_eval_step}[kind](model)
+    out = jax.eval_shape(fn, *specs)
+    if kind == "eval_step":
+        assert len(out) == 2
+    else:
+        assert len(out) == nparams + 1
+
+
+def test_train_step_equals_grad_plus_sgd():
+    """train_step must equal grad_step + w - lr*g (the rust runtime
+    relies on this equivalence to mix local and distributed modes)."""
+    model = Cnn()
+    p = _params(model)
+    rng = np.random.default_rng(9)
+    x, y = _cnn_batch(rng)
+    lr = jnp.float32(0.05)
+    t_out = build_train_step(model)(*p, x, y, lr)
+    g_out = build_grad_step(model)(*p, x, y)
+    np.testing.assert_allclose(float(t_out[-1]), float(g_out[-1]), rtol=1e-6)
+    for pi, ti, gi in zip(p, t_out[:-1], g_out[:-1]):
+        np.testing.assert_allclose(
+            np.asarray(ti), np.asarray(pi - lr * gi), rtol=1e-4, atol=1e-5
+        )
+
+
+def test_step_specs_rejects_unknown_kind():
+    with pytest.raises(ValueError):
+        step_specs(Cnn(), "predict_step", 4)

@@ -1,0 +1,107 @@
+//! Lemma 3.2 validation: parameter-server count vs training throughput.
+//!
+//! Two experiments:
+//! 1. SIMULATED (K80/10GbE scale): sweep N_ps for AlexNet-sized
+//!    parameters across worker counts; throughput must saturate exactly
+//!    at the lemma's N_ps (more servers add nothing, fewer expose I/O).
+//!    Includes the imbalance ablation (§3.3 measure 3).
+//! 2. MEASURED (real loopback cluster): the in-process TCP PS cluster
+//!    with PJRT workers at N_ps = 1..4 — a real-system sanity check
+//!    that the protocol scales. Enable with DTLSDA_L32_RUNTIME=1.
+
+use dtlsda::advisor::lemmas;
+use dtlsda::sim::cluster::simulate_ps_cluster;
+use dtlsda::sim::netmodel::NetModel;
+use dtlsda::util::bench::Table;
+
+fn main() {
+    println!("# Lemma 3.2 — N_ps sizing vs throughput (simulated, AlexNet S_p = 244 MB)\n");
+    let s_p = 61e6 * 4.0;
+    let net = NetModel::gbe10();
+    let xmini = 128;
+
+    for (n_w, t_c) in [(4usize, 2.0f64), (8, 2.0), (8, 0.5)] {
+        let rec = lemmas::num_param_servers(s_p, n_w, net.bw, t_c);
+        println!("## N_w={n_w}, T_C={t_c}s, 10GbE  →  lemma says N_ps = {rec}");
+        let mut t = Table::new(&["N_ps", "round s", "exposed I/O s", "samples/s", "vs lemma"]);
+        let mut at_rec = 0.0;
+        for n_ps in 1..=(rec + 2) {
+            let r = simulate_ps_cluster(n_w, n_ps, s_p, t_c, &net, 0.0, xmini, 40, 42);
+            if n_ps == rec {
+                at_rec = r.throughput;
+            }
+            t.row(&[
+                n_ps.to_string(),
+                format!("{:.3}", r.round_s),
+                format!("{:.3}", r.io_exposed_s),
+                format!("{:.0}", r.throughput),
+                if n_ps < rec { "under".into() } else if n_ps == rec { "= rec".into() } else { "over".into() },
+            ]);
+        }
+        t.print();
+
+        // Saturation checks.
+        let under = simulate_ps_cluster(n_w, (rec / 2).max(1), s_p, t_c, &net, 0.0, xmini, 40, 42);
+        let over = simulate_ps_cluster(n_w, rec + 2, s_p, t_c, &net, 0.0, xmini, 40, 42);
+        if rec > 1 {
+            assert!(under.throughput < at_rec * 0.97, "undersized cluster should be slower");
+        }
+        assert!(over.throughput < at_rec * 1.10, "extra servers should not help");
+        println!("saturation check PASSED at N_ps = {rec}\n");
+    }
+
+    println!("## imbalance ablation (N_w=8, T_C=2s, N_ps=rec): hottest server carries (1+imb)x fair share");
+    let n_w = 8;
+    let t_c = 2.0;
+    let rec = lemmas::num_param_servers(s_p, n_w, net.bw, t_c);
+    let mut t = Table::new(&["imbalance", "samples/s", "exposed I/O s"]);
+    for imb in [0.0, 0.3, 0.8, 1.5] {
+        let r = simulate_ps_cluster(n_w, rec, s_p, t_c, &net, imb, xmini, 40, 43);
+        t.row(&[
+            format!("{imb}"),
+            format!("{:.0}", r.throughput),
+            format!("{:.3}", r.io_exposed_s),
+        ]);
+    }
+    t.print();
+    println!("(skew reintroduces exposed I/O at the recommended N_ps — the paper's balancing measure)\n");
+
+    if std::env::var("DTLSDA_L32_RUNTIME").ok().as_deref() == Some("1") {
+        measured();
+    } else {
+        println!("(set DTLSDA_L32_RUNTIME=1 for the measured loopback-cluster series)");
+    }
+}
+
+fn measured() {
+    use dtlsda::coordinator::distributed::{run_distributed, DistConfig};
+
+    println!("## measured loopback cluster (cnn grad_step, 2 workers x 5 steps)");
+    let mut t = Table::new(&["N_ps", "samples/s", "mean R_O", "imbalance"]);
+    for n_servers in [1usize, 2, 4] {
+        let cfg = DistConfig {
+            grad_artifact: "cnn_gemm_b32_grad".into(),
+            n_workers: 2,
+            n_servers,
+            steps_per_worker: 5,
+            lr: 0.02,
+            momentum: 0.0,
+            sync: false,
+            seed: 1,
+        };
+        match run_distributed(std::path::Path::new("artifacts"), &cfg) {
+            Ok(r) => {
+                let mean_ro: f64 =
+                    r.worker_r_o.iter().sum::<f64>() / r.worker_r_o.len() as f64;
+                t.row(&[
+                    n_servers.to_string(),
+                    format!("{:.1}", r.throughput),
+                    format!("{mean_ro:.3}"),
+                    format!("{:.3}", r.router_imbalance),
+                ]);
+            }
+            Err(e) => t.row(&[n_servers.to_string(), format!("error: {e}"), "-".into(), "-".into()]),
+        }
+    }
+    t.print();
+}

@@ -1,0 +1,136 @@
+//! Microbenchmarks of the L3 hot paths (the §Perf baseline/iteration
+//! harness): codec encode/decode, PS shard apply, router placement,
+//! ILP solve, in-proc PS round-trip, tensor axpy.
+//!
+//! Run: cargo bench --bench bench_micro
+
+use dtlsda::ilp::{solve_ilp, Constraint, LpProblem};
+use dtlsda::net::codec::{Reader, Writer};
+use dtlsda::net::message::Message;
+use dtlsda::net::transport::{InProcTransport, Transport};
+use dtlsda::ps::router::Router;
+use dtlsda::ps::server::{serve, PsShared, UpdateMode};
+use dtlsda::ps::shard::{Optimizer, ShardStore};
+use dtlsda::tensor::Tensor;
+use dtlsda::util::bench::{bench_for_ms, Table};
+
+fn main() {
+    let mut t = Table::new(&["bench", "mean", "p50", "p99", "throughput"]);
+    let row = |t: &mut Table, r: &dtlsda::util::bench::BenchResult, unit: &str, items: f64| {
+        t.row(&[
+            r.name.clone(),
+            format!("{:.1} µs", r.mean_ns / 1e3),
+            format!("{:.1} µs", r.p50_ns / 1e3),
+            format!("{:.1} µs", r.p99_ns / 1e3),
+            format!("{:.1} {unit}", r.throughput(items)),
+        ]);
+    };
+
+    // --- codec: 1 MB gradient tensor encode + decode ------------------
+    let grad = Tensor::from_vec(&[262_144], vec![0.123f32; 262_144]);
+    let r = bench_for_ms("codec encode 1MB", 300.0, 10, || {
+        let mut w = Writer::with_capacity(1 << 20);
+        w.tensor(&grad);
+        std::hint::black_box(w.finish());
+    });
+    row(&mut t, &r, "MB/s", 1.048576);
+    let mut w = Writer::new();
+    w.tensor(&grad);
+    let buf = w.finish();
+    let r = bench_for_ms("codec decode 1MB", 300.0, 10, || {
+        let mut rd = Reader::new(&buf);
+        std::hint::black_box(rd.tensor().unwrap());
+    });
+    row(&mut t, &r, "MB/s", 1.048576);
+
+    // --- message encode (full Push with 10 cnn-sized params) ----------
+    let entries: Vec<(u32, Tensor)> = (0..10)
+        .map(|k| (k, Tensor::from_vec(&[65_536], vec![0.5f32; 65_536])))
+        .collect();
+    let msg = Message::Push { worker: 0, step: 1, entries };
+    let r = bench_for_ms("message push 2.6MB", 300.0, 10, || {
+        std::hint::black_box(msg.encode());
+    });
+    row(&mut t, &r, "MB/s", 2.62144);
+
+    // --- shard apply (sgd + momentum, 654k params like the cnn) -------
+    for (name, opt) in [
+        ("shard sgd 654k", Optimizer::Sgd { lr: 0.01 }),
+        ("shard momentum 654k", Optimizer::Momentum { lr: 0.01, mu: 0.9 }),
+    ] {
+        let mut store = ShardStore::new(opt);
+        store.insert(0, Tensor::from_vec(&[654_666], vec![0.1f32; 654_666]));
+        let g = Tensor::from_vec(&[654_666], vec![0.01f32; 654_666]);
+        let r = bench_for_ms(name, 300.0, 10, || {
+            store.apply_grad(0, &g).unwrap();
+        });
+        row(&mut t, &r, "Mparam/s", 0.654666);
+    }
+
+    // --- router placement over 200 keys -------------------------------
+    let sizes: Vec<usize> = (0..200).map(|i| (i * 7919 + 13) % 1_000_000 + 1).collect();
+    let r = bench_for_ms("router 200 keys x 8 srv", 200.0, 100, || {
+        std::hint::black_box(Router::new(&sizes, 8));
+    });
+    row(&mut t, &r, "Mplacements/s", 200e-6);
+
+    // --- Eq. 6-style ILP (5 layers x 3 algos) --------------------------
+    let p = eq6_instance();
+    let r = bench_for_ms("ilp eq6 5x3", 200.0, 20, || {
+        std::hint::black_box(solve_ilp(&p, &vec![true; 15], &vec![1.0; 15]));
+    });
+    row(&mut t, &r, "Msolves/s", 1e-6);
+
+    // --- in-proc PS round trip (pull+push of a 256 KB shard) -----------
+    {
+        let mut store = ShardStore::new(Optimizer::Sgd { lr: 0.01 });
+        store.insert(0, Tensor::from_vec(&[65_536], vec![0.1f32; 65_536]));
+        let shared = PsShared::new(store, UpdateMode::Async);
+        let (client_end, server_end) = InProcTransport::pair();
+        let h = std::thread::spawn({
+            let sh = shared.clone();
+            move || serve(Box::new(server_end), sh)
+        });
+        let mut c: Box<dyn Transport> = Box::new(client_end);
+        let g = Tensor::from_vec(&[65_536], vec![0.01f32; 65_536]);
+        let r = bench_for_ms("ps pull+push 256KB", 400.0, 10, || {
+            c.send(&Message::Pull { worker: 0, keys: vec![0] }).unwrap();
+            std::hint::black_box(c.recv().unwrap());
+            c.send(&Message::Push { worker: 0, step: 0, entries: vec![(0, g.clone())] })
+                .unwrap();
+            std::hint::black_box(c.recv().unwrap());
+        });
+        row(&mut t, &r, "MB/s (2-way)", 0.524288);
+        c.send(&Message::Shutdown).unwrap();
+        drop(c);
+        h.join().unwrap();
+    }
+
+    // --- tensor axpy 1M ------------------------------------------------
+    let mut a = Tensor::from_vec(&[1_000_000], vec![1.0f32; 1_000_000]);
+    let b = Tensor::from_vec(&[1_000_000], vec![0.5f32; 1_000_000]);
+    let r = bench_for_ms("tensor axpy 1M", 300.0, 10, || {
+        a.axpy(0.001, &b);
+    });
+    row(&mut t, &r, "Gelem/s", 1e-3);
+
+    t.print();
+}
+
+fn eq6_instance() -> LpProblem {
+    let times = [
+        5.0, 2.0, 3.0, 7.0, 3.0, 2.5, 4.0, 1.5, 1.2, 6.0, 2.0, 1.8, 3.0, 1.0, 0.9,
+    ];
+    let mems = [
+        1.0, 8.0, 3.0, 1.0, 9.0, 4.0, 1.0, 7.0, 3.0, 1.0, 6.0, 2.0, 1.0, 5.0, 2.0,
+    ];
+    let mut cons = vec![Constraint::le(mems.to_vec(), 15.0)];
+    for layer in 0..5 {
+        let mut row = vec![0.0; 15];
+        for a in 0..3 {
+            row[layer * 3 + a] = 1.0;
+        }
+        cons.push(Constraint::eq(row, 1.0));
+    }
+    LpProblem { objective: times.to_vec(), constraints: cons }
+}

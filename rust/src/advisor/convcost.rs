@@ -1,0 +1,126 @@
+//! Per-layer, per-algorithm time model (the T_{k,l} of Eq. 6).
+//!
+//! Times are analytic: FLOP counts divided by the device's effective
+//! throughput for the operation class, plus a per-call fixed overhead.
+//! The paper measured these on K80s with cuDNN; we derive them from the
+//! same first-order arithmetic the cuDNN algorithms perform (see
+//! DESIGN.md §4 — the *relative* ordering is what Fig. 2 and the ILP
+//! need).
+
+use super::memmodel::{ConvAlgo, ConvGeom};
+use crate::sim::device::DeviceModel;
+
+/// Forward+backward FLOPs for a conv layer under each algorithm.
+/// Backward ~= 2x forward (grad wrt input + grad wrt weights).
+pub fn conv_flops(g: &ConvGeom, algo: ConvAlgo, xmini: usize) -> Option<f64> {
+    let m = (xmini * g.h_out * g.h_out) as f64; // output positions x batch
+    let direct = 2.0 * m * (g.f * g.f * g.d_in) as f64 * g.d_out as f64;
+    match algo {
+        ConvAlgo::Gemm => Some(3.0 * direct),
+        ConvAlgo::Fft => {
+            if g.s != 1 {
+                return None; // FFT conv cannot exploit stride (as cuDNN)
+            }
+            let hp = g.padded() as f64;
+            let n = hp * hp;
+            // Tiled rfft2 (cuDNN-style 32x32 tiles): per-pixel transform
+            // cost ~ 5 log2(tile) ≈ 40 flops; transforms for input,
+            // filters and inverse-output; pointwise complex multiply-add
+            // across D_in x D_out at n/2 frequency bins (8 flops each).
+            let c_t = 40.0;
+            let xf = (xmini * g.d_in) as f64 * n * c_t;
+            let ff = (g.d_in * g.d_out) as f64 * n * c_t;
+            let of = (xmini * g.d_out) as f64 * n * c_t;
+            let pw = xmini as f64 * (g.d_in * g.d_out) as f64 * (n / 2.0) * 8.0;
+            // bwd reuses forward transforms: ~2x fwd instead of 3x.
+            Some(2.0 * (xf + ff + of + pw))
+        }
+        ConvAlgo::Winograd => {
+            if g.f != 3 || g.s != 1 {
+                return None;
+            }
+            // F(2x2,3x3): 2.25x multiplication reduction vs direct,
+            // plus ~15% transform overhead.
+            Some(3.0 * direct / 2.25 * 1.15)
+        }
+    }
+}
+
+/// Wall-clock seconds for one layer under `algo` on `dev` (the Eq. 6
+/// T_{k,l} entries).
+pub fn conv_time(g: &ConvGeom, algo: ConvAlgo, xmini: usize, dev: &DeviceModel) -> Option<f64> {
+    let flops = conv_flops(g, algo, xmini)?;
+    let eff = match algo {
+        ConvAlgo::Gemm => dev.gemm_efficiency,
+        ConvAlgo::Fft => dev.fft_efficiency,
+        ConvAlgo::Winograd => dev.gemm_efficiency * 0.9, // transform-bound
+    };
+    Some(flops / (dev.peak_flops * eff) + dev.kernel_launch_s)
+}
+
+/// FC layer fwd+bwd time: 3 x (2 M N K) GEMM on the device.
+pub fn fc_time(inputs: usize, outputs: usize, xmini: usize, dev: &DeviceModel) -> f64 {
+    let flops = 3.0 * 2.0 * (xmini * inputs * outputs) as f64;
+    flops / (dev.peak_flops * dev.gemm_efficiency) + dev.kernel_launch_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::advisor::memmodel::MemoryModel;
+    use crate::advisor::netdefs::alexnet;
+    use crate::sim::device::DeviceModel;
+
+    fn k80() -> DeviceModel {
+        DeviceModel::k80()
+    }
+
+    #[test]
+    fn fft_beats_gemm_on_big_filters() {
+        // AlexNet conv2: 5x5 stride-1 — FFT runs faster (the paper's
+        // §3.1.2 claim), GEMM is cheaper in memory.
+        let mm = MemoryModel::new(&alexnet());
+        let g2 = mm.geoms[1];
+        let t_gemm = conv_time(&g2, ConvAlgo::Gemm, 128, &k80()).unwrap();
+        let t_fft = conv_time(&g2, ConvAlgo::Fft, 128, &k80()).unwrap();
+        assert!(
+            t_fft < t_gemm,
+            "5x5: fft {t_fft:.4}s should beat gemm {t_gemm:.4}s"
+        );
+    }
+
+    #[test]
+    fn fft_requires_unit_stride() {
+        // conv1 is stride-4: FFT cannot subsample, cuDNN rejects it.
+        let mm = MemoryModel::new(&alexnet());
+        let g1 = mm.geoms[0];
+        assert!(conv_time(&g1, ConvAlgo::Fft, 128, &k80()).is_none());
+        assert!(conv_time(&g1, ConvAlgo::Gemm, 128, &k80()).is_some());
+    }
+
+    #[test]
+    fn winograd_fastest_on_3x3() {
+        let mm = MemoryModel::new(&alexnet());
+        let g3 = mm.geoms[2];
+        let t_gemm = conv_time(&g3, ConvAlgo::Gemm, 128, &k80()).unwrap();
+        let t_wino = conv_time(&g3, ConvAlgo::Winograd, 128, &k80()).unwrap();
+        assert!(t_wino < t_gemm);
+    }
+
+    #[test]
+    fn times_scale_with_batch() {
+        let mm = MemoryModel::new(&alexnet());
+        let g = mm.geoms[1];
+        let t64 = conv_time(&g, ConvAlgo::Gemm, 64, &k80()).unwrap();
+        let t128 = conv_time(&g, ConvAlgo::Gemm, 128, &k80()).unwrap();
+        assert!(t128 > 1.8 * t64 && t128 < 2.2 * t64);
+    }
+
+    #[test]
+    fn fc_time_positive_and_linear() {
+        let d = k80();
+        let t1 = fc_time(9216, 4096, 64, &d);
+        let t2 = fc_time(9216, 4096, 128, &d);
+        assert!(t1 > 0.0 && t2 > 1.5 * t1);
+    }
+}

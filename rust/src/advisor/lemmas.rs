@@ -1,0 +1,153 @@
+//! Lemmas 3.1 and 3.2 — the paper's closed-form sizing rules.
+//!
+//! Lemma 3.1 (multi-GPU efficiency): `α = (1 + R_O) / (1 + G·R_O)` where
+//! `R_O = T_O / T_C` is the ratio of non-hideable overhead to compute.
+//! Lemma 3.2 (parameter servers): `N_ps ≈ ceil(2·S_p·N_w / (B_ps·T_C))`.
+
+/// Lemma 3.1: efficiency `α` of `g` GPUs given overhead ratio `r_o`.
+pub fn efficiency(g: usize, r_o: f64) -> f64 {
+    assert!(g >= 1 && r_o >= 0.0);
+    (1.0 + r_o) / (1.0 + g as f64 * r_o)
+}
+
+/// Speedup of `g` GPUs: `α · G`.
+pub fn speedup(g: usize, r_o: f64) -> f64 {
+    efficiency(g, r_o) * g as f64
+}
+
+/// Inverse form (Eq. 12): the largest `R_O` that still achieves target
+/// efficiency `alpha` on `g` GPUs. The paper's example: α=80%, G=4 →
+/// R_O ≤ 1/11 ≈ 9%.
+pub fn max_overhead_ratio(g: usize, alpha: f64) -> f64 {
+    assert!(g >= 2, "single GPU always has α = 1");
+    assert!(alpha > 0.0 && alpha <= 1.0);
+    let denom = alpha * g as f64 - 1.0;
+    assert!(denom > 0.0, "target α·G must exceed 1");
+    (1.0 - alpha) / denom
+}
+
+/// Smallest `G` achieving `target_speedup` given `r_o`; None if the
+/// speedup is unreachable (caps at (1+R_O)/R_O as G → ∞).
+pub fn gpus_for_speedup(target_speedup: f64, r_o: f64) -> Option<usize> {
+    if target_speedup <= 1.0 {
+        return Some(1);
+    }
+    if r_o <= 0.0 {
+        return Some(target_speedup.ceil() as usize);
+    }
+    let cap = (1.0 + r_o) / r_o;
+    if target_speedup >= cap {
+        return None;
+    }
+    // s(G) = G (1+r) / (1 + G r)  ⇒  G = s / (1 + r - s r)
+    let g = target_speedup / (1.0 + r_o - target_speedup * r_o);
+    Some(g.ceil() as usize)
+}
+
+/// Lemma 3.2: minimum parameter servers to hide push/pull I/O behind
+/// compute. `s_p_bytes` = parameter size, `n_w` workers, `b_ps` network
+/// bandwidth bytes/s per server, `t_c` seconds of compute per round.
+pub fn num_param_servers(s_p_bytes: f64, n_w: usize, b_ps: f64, t_c: f64) -> usize {
+    assert!(s_p_bytes > 0.0 && b_ps > 0.0 && t_c > 0.0 && n_w >= 1);
+    let nps = 2.0 * s_p_bytes * n_w as f64 / (b_ps * t_c);
+    (nps.ceil() as usize).max(1)
+}
+
+/// Communication time for one pull+push round with `n_ps` servers
+/// (Eq. 7's left side) — used by the simulator and its tests.
+pub fn ps_round_io_time(s_p_bytes: f64, n_w: usize, b_ps: f64, n_ps: usize) -> f64 {
+    2.0 * s_p_bytes * n_w as f64 / (n_ps as f64 * b_ps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_alpha80_g4() {
+        // §3.2: "given four GPUs and target efficiency α = 80%, the ratio
+        // of overhead must not exceed 9%."
+        let r = max_overhead_ratio(4, 0.80);
+        assert!((r - 1.0 / 11.0).abs() < 1e-12);
+        assert!((r - 0.0909).abs() < 1e-3);
+        // And the forward direction agrees:
+        assert!((efficiency(4, r) - 0.80).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_gpu_perfect() {
+        assert_eq!(efficiency(1, 0.5), 1.0);
+        assert_eq!(speedup(1, 0.5), 1.0);
+    }
+
+    #[test]
+    fn zero_overhead_linear() {
+        for g in 1..16 {
+            assert!((speedup(g, 0.0) - g as f64).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn efficiency_monotone_decreasing_in_g() {
+        for g in 2..32 {
+            assert!(efficiency(g, 0.1) < efficiency(g - 1, 0.1));
+        }
+    }
+
+    #[test]
+    fn speedup_saturates_at_amdahl_cap() {
+        let r_o = 0.25;
+        let cap = (1.0 + r_o) / r_o; // 5x
+        assert!(speedup(1024, r_o) < cap);
+        assert!(speedup(1024, r_o) > cap * 0.95);
+    }
+
+    #[test]
+    fn paper_example_3x_speedup_with_10pct() {
+        // §3.2: "asked to make 3x speedup ... measures R_O = 10% ... she
+        // can configure a 4 GPU system."
+        assert_eq!(gpus_for_speedup(3.0, 0.10), Some(4));
+    }
+
+    #[test]
+    fn unreachable_speedup() {
+        // cap = 11x at R_O = 10%
+        assert_eq!(gpus_for_speedup(11.0, 0.10), None);
+        // s(G) = G(1+r)/(1+Gr): reaching 10.9x of an 11x cap takes 1090 GPUs.
+        assert_eq!(gpus_for_speedup(10.9, 0.10), Some(1090));
+    }
+
+    #[test]
+    fn lemma32_alexnet_1gbe() {
+        // §3.3: AlexNet pushes ~180 MB of updates; 1 Gbit Ethernet
+        // (125 MB/s) with 4 workers and T_C = 2 s needs many servers.
+        let s_p = 61e6 * 4.0; // 61M params f32 ≈ 244 MB... paper: ~180MB
+        let nps = num_param_servers(s_p, 4, 125e6, 2.0);
+        assert!(nps >= 6, "1GbE should need several PS, got {nps}");
+        // 10 GbE reduces the count by ~10x:
+        let nps10 = num_param_servers(s_p, 4, 1.25e9, 2.0);
+        assert!(nps10 <= nps / 5);
+    }
+
+    #[test]
+    fn lemma32_io_hidden_iff_enough_servers() {
+        let (s_p, n_w, b_ps, t_c) = (100e6, 8usize, 1e9, 1.0);
+        let nps = num_param_servers(s_p, n_w, b_ps, t_c);
+        // At the recommended count, I/O fits within compute…
+        assert!(ps_round_io_time(s_p, n_w, b_ps, nps) <= t_c + 1e-9);
+        // …and one fewer server would not (unless ceil was exact).
+        if nps > 1 {
+            let t_short = ps_round_io_time(s_p, n_w, b_ps, nps - 1);
+            assert!(t_short > t_c - 1e-9);
+        }
+    }
+
+    #[test]
+    fn nps_monotonic_in_workers_and_params() {
+        let base = num_param_servers(50e6, 4, 1e9, 1.0);
+        assert!(num_param_servers(50e6, 8, 1e9, 1.0) >= base);
+        assert!(num_param_servers(100e6, 4, 1e9, 1.0) >= base);
+        assert!(num_param_servers(50e6, 4, 2e9, 1.0) <= base);
+        assert!(num_param_servers(50e6, 4, 1e9, 2.0) <= base);
+    }
+}

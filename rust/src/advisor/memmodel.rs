@@ -1,0 +1,263 @@
+//! §3.1.3 memory model — Eqs. 2–5 plus per-algorithm conv workspace
+//! (the Table 2 quantity).
+//!
+//! All quantities are in **bytes** (the paper's equations count bits;
+//! `x32` there = `x4` here). Values are f32 single precision throughout,
+//! matching the paper's assumption.
+//!
+//! Workspace model (calibrated against the paper's Table 2; see
+//! DESIGN.md §4 for the derivation):
+//! * GEMM: per-image im2col patch matrix `OHxOWxF²D_in` — cuDNN lowers
+//!   one image at a time, so the workspace does not scale with X_mini.
+//! * FFT: rfft2 frequency buffers for input, padded filters and output
+//!   at the padded spatial size; filters padded to input size is the
+//!   blow-up the paper describes.
+//! * Winograd (extension; §3.1.3 mentions it as a further choice):
+//!   tile-transform workspace ~ 2.25x the input tile volume, only valid
+//!   for 3x3 stride-1 layers.
+
+use super::netdefs::{Layer, Network};
+
+pub const BYTES_F32: usize = 4;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ConvAlgo {
+    Gemm,
+    Fft,
+    Winograd,
+}
+
+impl ConvAlgo {
+    pub const ALL: [ConvAlgo; 3] = [ConvAlgo::Gemm, ConvAlgo::Fft, ConvAlgo::Winograd];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ConvAlgo::Gemm => "gemm",
+            ConvAlgo::Fft => "fft",
+            ConvAlgo::Winograd => "winograd",
+        }
+    }
+}
+
+/// Per-conv-layer geometry resolved from the network tables.
+#[derive(Debug, Clone, Copy)]
+pub struct ConvGeom {
+    pub h_in: usize,  // B_i = H_i
+    pub d_in: usize,  // D_i
+    pub h_out: usize, // B_{i+1}
+    pub d_out: usize, // D_{i+1} = K
+    pub f: usize,
+    pub s: usize,
+    pub p: usize,
+}
+
+impl ConvGeom {
+    /// Spatial size after padding (the FFT transform size).
+    pub fn padded(&self) -> usize {
+        self.h_in + 2 * self.p
+    }
+
+    /// rfft2 buffer elements per (image, channel): Hp x (Wp/2 + 1) complex.
+    fn rfft_elems(&self) -> usize {
+        let hp = self.padded();
+        hp * (hp / 2 + 1) * 2
+    }
+
+    /// Algorithm workspace in bytes for mini-batch `xmini` (Table 2 model).
+    pub fn workspace_bytes(&self, algo: ConvAlgo, xmini: usize) -> Option<usize> {
+        match algo {
+            ConvAlgo::Gemm => {
+                // Per-image im2col lowering.
+                Some(self.h_out * self.h_out * self.f * self.f * self.d_in * BYTES_F32)
+            }
+            ConvAlgo::Fft => {
+                let fr = self.rfft_elems();
+                let input_f = xmini * self.d_in * fr;
+                let filter_f = self.d_in * self.d_out * fr; // filters padded to input size
+                let output_f = xmini * self.d_out * fr;
+                Some((input_f + filter_f + output_f) * BYTES_F32)
+            }
+            ConvAlgo::Winograd => {
+                if self.f != 3 || self.s != 1 {
+                    return None; // F(2x2, 3x3) tiles only
+                }
+                let tiles = (self.h_out.div_ceil(2)).pow(2);
+                // 4x4 input tile transform + 4x4 M buffers, per image.
+                let ws = tiles * 16 * (self.d_in + self.d_out) * BYTES_F32;
+                Some(ws)
+            }
+        }
+    }
+
+    /// Total memory charged to this layer under `algo`: input activations
+    /// + output activations + weights + workspace (what Table 2 ratios).
+    pub fn layer_bytes(&self, algo: ConvAlgo, xmini: usize) -> Option<usize> {
+        let ws = self.workspace_bytes(algo, xmini)?;
+        let input = xmini * self.h_in * self.h_in * self.d_in * BYTES_F32;
+        let output = xmini * self.h_out * self.h_out * self.d_out * BYTES_F32;
+        let weights = self.f * self.f * self.d_in * self.d_out * BYTES_F32;
+        Some(input + output + weights + ws)
+    }
+}
+
+/// Eqs. 2–5 evaluated over a network.
+#[derive(Debug, Clone)]
+pub struct MemoryModel {
+    pub geoms: Vec<ConvGeom>,
+    /// (inputs, outputs) neuron counts of FC layers, Eq. 4's L_j chain.
+    fc_dims: Vec<(usize, usize)>,
+    /// Feature-map elements per sample: sum_i B_i x H_i x D_i (Eq. 2 / X_mini).
+    fm_elems_per_sample: usize,
+    /// Conv/pool part parameter elements (weights + biases), Eq. 3 base.
+    mp_elems: usize,
+}
+
+impl MemoryModel {
+    pub fn new(net: &Network) -> Self {
+        let geom = net.geometry();
+        let mut geoms = Vec::new();
+        let mut fc_dims = Vec::new();
+        let mut fm = geom[0].0 * geom[0].0 * geom[0].1; // input data term (i = 0)
+        let mut mp = 0usize;
+        for (i, l) in net.layers.iter().enumerate() {
+            let (h_in, d_in) = geom[i];
+            let (h_out, d_out) = geom[i + 1];
+            match *l {
+                Layer::Conv { f, s, p, k } => {
+                    geoms.push(ConvGeom { h_in, d_in, h_out, d_out, f, s, p });
+                    fm += h_out * h_out * d_out;
+                    mp += f * f * d_in * k + k; // weights + biases
+                }
+                Layer::Pool { .. } => {
+                    fm += h_out * h_out * d_out;
+                }
+                Layer::Fc { out } => {
+                    let inputs = h_in * h_in * d_in;
+                    fc_dims.push((inputs, out));
+                }
+            }
+        }
+        MemoryModel { geoms, fc_dims, fm_elems_per_sample: fm, mp_elems: mp }
+    }
+
+    /// Eq. 2: feature maps scale with X_mini.
+    pub fn m_fm(&self, xmini: usize) -> usize {
+        self.fm_elems_per_sample * xmini * BYTES_F32
+    }
+
+    /// Eq. 3: conv parameters + gradients (paper: gradients = 2x params,
+    /// hence the x3).
+    pub fn m_mp(&self) -> usize {
+        self.mp_elems * 3 * BYTES_F32
+    }
+
+    /// Eq. 4: classifier outputs + weights(+gradients) + biases.
+    pub fn m_c(&self) -> usize {
+        let outputs: usize = self.fc_dims.iter().map(|&(_, o)| o).sum();
+        let weights: usize = self.fc_dims.iter().map(|&(i, o)| i * o).sum();
+        let biases: usize = self.fc_dims.iter().map(|&(_, o)| o).sum();
+        (outputs + weights * 3 + biases * 3) * BYTES_F32
+    }
+
+    /// Eq. 5: free budget left for algorithm workspaces.
+    pub fn m_bound(&self, gpu_bytes: usize, xmini: usize) -> i64 {
+        gpu_bytes as i64 - self.m_fm(xmini) as i64 - self.m_mp() as i64 - self.m_c() as i64
+    }
+
+    /// Table 2: FFT/GEMM layer-memory ratio per conv layer.
+    pub fn fft_gemm_ratios(&self, xmini: usize) -> Vec<f64> {
+        self.geoms
+            .iter()
+            .map(|g| {
+                let fft = g.layer_bytes(ConvAlgo::Fft, xmini).unwrap() as f64;
+                let gemm = g.layer_bytes(ConvAlgo::Gemm, xmini).unwrap() as f64;
+                fft / gemm
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::advisor::netdefs::{alexnet, cnn_lite};
+
+    #[test]
+    fn alexnet_conv_geoms() {
+        let mm = MemoryModel::new(&alexnet());
+        assert_eq!(mm.geoms.len(), 5);
+        let g1 = mm.geoms[0];
+        assert_eq!((g1.h_in, g1.h_out, g1.d_in, g1.d_out), (227, 55, 3, 96));
+        let g5 = mm.geoms[4];
+        assert_eq!((g5.h_in, g5.h_out, g5.d_in, g5.d_out), (13, 13, 384, 256));
+    }
+
+    #[test]
+    fn table2_shape_holds() {
+        // Paper Table 2 (X_mini = 128): conv1 ratio 11.6x dominates, all
+        // layers > 1x. Our analytic model must reproduce that ordering.
+        let mm = MemoryModel::new(&alexnet());
+        let r = mm.fft_gemm_ratios(128);
+        assert_eq!(r.len(), 5);
+        assert!(r[0] > 5.0, "conv1 ratio should dominate, got {r:?}");
+        for (i, x) in r.iter().enumerate() {
+            assert!(*x > 1.0, "layer {i} ratio {x} should exceed 1");
+            if i > 0 {
+                assert!(r[0] > *x, "conv1 must be the largest ratio");
+            }
+        }
+    }
+
+    #[test]
+    fn m_bound_decreases_with_batch() {
+        let mm = MemoryModel::new(&alexnet());
+        let g12 = 12usize << 30; // K80: 12 GB
+        let b32 = mm.m_bound(g12, 32);
+        let b256 = mm.m_bound(g12, 256);
+        assert!(b32 > b256);
+    }
+
+    #[test]
+    fn m_bound_can_go_negative() {
+        // A tiny GPU cannot even hold the feature maps at large batch.
+        let mm = MemoryModel::new(&alexnet());
+        assert!(mm.m_bound(256 << 20, 512) < 0);
+    }
+
+    #[test]
+    fn winograd_only_3x3_s1() {
+        let mm = MemoryModel::new(&alexnet());
+        assert!(mm.geoms[0].workspace_bytes(ConvAlgo::Winograd, 32).is_none()); // 11x11
+        assert!(mm.geoms[2].workspace_bytes(ConvAlgo::Winograd, 32).is_some()); // 3x3
+    }
+
+    #[test]
+    fn fft_workspace_scales_with_batch() {
+        let mm = MemoryModel::new(&cnn_lite());
+        let g = mm.geoms[0];
+        let w32 = g.workspace_bytes(ConvAlgo::Fft, 32).unwrap();
+        let w64 = g.workspace_bytes(ConvAlgo::Fft, 64).unwrap();
+        assert!(w64 > w32 && w64 < 2 * w32 + 1); // filter term batch-independent
+        // GEMM per-image workspace is batch-independent:
+        assert_eq!(
+            g.workspace_bytes(ConvAlgo::Gemm, 32),
+            g.workspace_bytes(ConvAlgo::Gemm, 64)
+        );
+    }
+
+    #[test]
+    fn eq2_matches_hand_count_tiny() {
+        // cnn_lite: fm/sample = 32*32*3 (input) + 32*32*32 + 16*16*32
+        //  + 16*16*64 + 8*8*64 + 8*8*128 + 4*4*128 = 64 * ...
+        let mm = MemoryModel::new(&cnn_lite());
+        let expect = 32 * 32 * 3
+            + 32 * 32 * 32
+            + 16 * 16 * 32
+            + 16 * 16 * 64
+            + 8 * 8 * 64
+            + 8 * 8 * 128
+            + 4 * 4 * 128;
+        assert_eq!(mm.m_fm(1), expect * BYTES_F32);
+        assert_eq!(mm.m_fm(10), expect * BYTES_F32 * 10);
+    }
+}

@@ -1,0 +1,221 @@
+//! §3.1.3 — optimal mini-batch size via per-layer algorithm ILP (Eq. 6).
+//!
+//! For a candidate `X_mini`, the per-layer algorithm choice is the 0/1
+//! program
+//!
+//!   min  Σ_k Σ_l x_{k,l} · T_{k,l}
+//!   s.t. Σ_k Σ_l x_{k,l} · M_{k,l} ≤ M_bound,   Σ_l x_{k,l} = 1 ∀k
+//!
+//! solved exactly by the `ilp` branch-and-bound. The outer procedure
+//! (`optimize_minibatch`) sweeps the algorithmically-acceptable batch
+//! range (Fig. 3 shows a wide range converges equally well) and returns
+//! the `X_mini` maximizing modeled throughput — reproducing the Fig. 2
+//! knee where a larger batch forces slower, memory-lean algorithms.
+
+use super::convcost::{conv_time, fc_time};
+use super::memmodel::{ConvAlgo, MemoryModel};
+use super::netdefs::{Layer, Network};
+use crate::ilp::{solve_ilp, Constraint, IlpStatus, LpProblem};
+use crate::sim::device::DeviceModel;
+
+/// Result of the per-layer algorithm ILP at one batch size.
+#[derive(Debug, Clone)]
+pub struct LayerPlan {
+    pub xmini: usize,
+    /// Chosen algorithm per conv layer.
+    pub algos: Vec<ConvAlgo>,
+    /// Modeled conv+fc step compute time, seconds.
+    pub step_time: f64,
+    /// Workspace bytes consumed by the chosen algorithms.
+    pub workspace_bytes: usize,
+    /// Eq. 5 budget that constrained the choice.
+    pub m_bound: i64,
+}
+
+/// Solve Eq. 6 for a fixed `xmini`; `None` if even the leanest
+/// algorithm set does not fit (X_mini infeasible on this device).
+pub fn solve_layer_algos(
+    net: &Network,
+    dev: &DeviceModel,
+    xmini: usize,
+) -> Option<LayerPlan> {
+    let mm = MemoryModel::new(net);
+    let m_bound = mm.m_bound(dev.mem_bytes, xmini);
+    if m_bound < 0 {
+        return None;
+    }
+
+    // Enumerate (layer, algo) pairs with their T and M entries.
+    let q = mm.geoms.len();
+    let mut vars: Vec<(usize, ConvAlgo, f64, f64)> = Vec::new(); // (layer, algo, T, M)
+    for (k, g) in mm.geoms.iter().enumerate() {
+        for algo in ConvAlgo::ALL {
+            if let (Some(t), Some(m)) = (
+                conv_time(g, algo, xmini, dev),
+                g.workspace_bytes(algo, xmini),
+            ) {
+                vars.push((k, algo, t, m as f64));
+            }
+        }
+    }
+
+    let n = vars.len();
+    let objective: Vec<f64> = vars.iter().map(|v| v.2).collect();
+    let mut constraints = Vec::new();
+    // Memory cap.
+    constraints.push(Constraint::le(
+        vars.iter().map(|v| v.3).collect(),
+        m_bound as f64,
+    ));
+    // Exactly-one per layer.
+    for k in 0..q {
+        let row: Vec<f64> = vars
+            .iter()
+            .map(|v| if v.0 == k { 1.0 } else { 0.0 })
+            .collect();
+        constraints.push(Constraint::eq(row, 1.0));
+    }
+
+    let p = LpProblem { objective, constraints };
+    let sol = solve_ilp(&p, &vec![true; n], &vec![1.0; n]);
+    let (x, conv_t) = match sol {
+        IlpStatus::Optimal { x, objective } => (x, objective),
+        IlpStatus::Infeasible => return None,
+    };
+
+    let mut algos = vec![ConvAlgo::Gemm; q];
+    let mut ws = 0usize;
+    for (i, v) in vars.iter().enumerate() {
+        if x[i] > 0.5 {
+            algos[v.0] = v.1;
+            ws += v.3 as usize;
+        }
+    }
+
+    // Add FC time (algorithm-independent) for the full step estimate.
+    let mut fc_t = 0.0;
+    let geom = net.geometry();
+    for (i, l) in net.layers.iter().enumerate() {
+        if let Layer::Fc { out } = l {
+            let (h, d) = geom[i];
+            fc_t += fc_time(h * h * d, *out, xmini, dev);
+        }
+    }
+
+    Some(LayerPlan {
+        xmini,
+        algos,
+        step_time: conv_t + fc_t,
+        workspace_bytes: ws,
+        m_bound,
+    })
+}
+
+/// Outcome of the §3.1 mini-batch sweep.
+#[derive(Debug, Clone)]
+pub struct MinibatchPlan {
+    /// The recommended X_mini.
+    pub best: LayerPlan,
+    /// Every evaluated candidate (for Fig. 2-style reporting).
+    pub sweep: Vec<(usize, Option<LayerPlan>)>,
+}
+
+/// §3.1 procedure: evaluate the ILP across `candidates` (the range that
+/// converges acceptably per Fig. 3) and pick the throughput maximizer.
+pub fn optimize_minibatch(
+    net: &Network,
+    dev: &DeviceModel,
+    candidates: &[usize],
+) -> Option<MinibatchPlan> {
+    let mut sweep = Vec::new();
+    let mut best: Option<LayerPlan> = None;
+    for &b in candidates {
+        let plan = solve_layer_algos(net, dev, b);
+        if let Some(p) = &plan {
+            let tput = p.xmini as f64 / p.step_time;
+            let better = match &best {
+                None => true,
+                Some(cur) => tput > cur.xmini as f64 / cur.step_time,
+            };
+            if better {
+                best = Some(p.clone());
+            }
+        }
+        sweep.push((b, plan));
+    }
+    best.map(|best| MinibatchPlan { best, sweep })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::advisor::netdefs::alexnet;
+    use crate::sim::device::DeviceModel;
+
+    #[test]
+    fn plentiful_memory_picks_fastest_algos() {
+        // On a 12 GB K80 at small batch: conv1 is stride-4 so only GEMM
+        // is eligible; the stride-1 layers pick the faster, memory-hungry
+        // FFT — the per-layer time minimizers.
+        let plan = solve_layer_algos(&alexnet(), &DeviceModel::k80(), 32).unwrap();
+        assert_eq!(plan.algos[0], ConvAlgo::Gemm, "{:?}", plan.algos);
+        assert_eq!(plan.algos[1], ConvAlgo::Fft, "{:?}", plan.algos);
+    }
+
+    #[test]
+    fn tight_memory_forces_lean_algos() {
+        // Shrink the device memory until FFT's workspace no longer fits;
+        // the ILP must fall back to leaner algorithms, not fail.
+        let mut dev = DeviceModel::k80();
+        let rich = solve_layer_algos(&alexnet(), &dev, 128).unwrap();
+        dev.mem_bytes = 3usize << 29; // 1.5 GB
+        let lean = solve_layer_algos(&alexnet(), &dev, 128).unwrap();
+        assert!(lean.workspace_bytes < rich.workspace_bytes);
+        assert!(lean.step_time >= rich.step_time - 1e-9);
+        // Fewer FFT layers under pressure.
+        let count_fft = |p: &LayerPlan| p.algos.iter().filter(|a| **a == ConvAlgo::Fft).count();
+        assert!(count_fft(&lean) <= count_fft(&rich));
+    }
+
+    #[test]
+    fn infeasible_when_memory_exhausted() {
+        let mut dev = DeviceModel::k80();
+        dev.mem_bytes = 64 << 20; // 64 MB: activations alone overflow
+        assert!(solve_layer_algos(&alexnet(), &dev, 256).is_none());
+    }
+
+    #[test]
+    fn sweep_finds_knee() {
+        // Fig. 2: throughput rises with batch until workspace pressure
+        // forces slower algorithms — the curve has an interior knee on a
+        // memory-limited device.
+        let mut dev = DeviceModel::k80();
+        dev.mem_bytes = 3usize << 30;
+        let cands: Vec<usize> = vec![16, 32, 64, 128, 256, 384, 512];
+        let plan = optimize_minibatch(&alexnet(), &dev, &cands).unwrap();
+        // Throughput at the chosen batch beats both the smallest feasible
+        // candidate and the largest feasible candidate.
+        let tput = |p: &LayerPlan| p.xmini as f64 / p.step_time;
+        let best_t = tput(&plan.best);
+        let feasible: Vec<&LayerPlan> =
+            plan.sweep.iter().filter_map(|(_, p)| p.as_ref()).collect();
+        assert!(feasible.len() >= 3);
+        for p in &feasible {
+            assert!(best_t >= tput(p) - 1e-9);
+        }
+        // And the largest batch is NOT the winner (the knee exists).
+        let largest = feasible.last().unwrap();
+        assert!(
+            plan.best.xmini < largest.xmini || best_t > tput(largest) + 1e-9,
+            "expected an interior optimum, got best={} largest={}",
+            plan.best.xmini,
+            largest.xmini
+        );
+    }
+
+    #[test]
+    fn per_layer_exactly_one_algo() {
+        let plan = solve_layer_algos(&alexnet(), &DeviceModel::k80(), 64).unwrap();
+        assert_eq!(plan.algos.len(), 5);
+    }
+}

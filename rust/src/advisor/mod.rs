@@ -1,0 +1,22 @@
+//! The paper's contribution: configuration guidelines as executable code.
+//!
+//! * [`netdefs`]   — layer tables / cost profiles for the four evaluated
+//!   networks (AlexNet, VGG16, GoogLeNet, ResNet-50).
+//! * [`memmodel`]  — the §3.1.3 memory model: Eq. 1 geometry, Eqs. 2–4
+//!   memory terms, Eq. 5 `M_bound`, per-algorithm conv memory (Table 2).
+//! * [`convcost`]  — per-layer per-algorithm time model on a device.
+//! * [`minibatch`] — Eq. 6: per-layer algorithm selection as 0/1 ILP, and
+//!   the §3.1 procedure choosing the throughput-optimal `X_mini`.
+//! * [`lemmas`]    — Lemma 3.1 (multi-GPU efficiency) and Lemma 3.2
+//!   (parameter-server count), plus their inverse forms.
+
+pub mod convcost;
+pub mod lemmas;
+pub mod memmodel;
+pub mod minibatch;
+pub mod netdefs;
+
+pub use lemmas::{efficiency, max_overhead_ratio, num_param_servers, speedup};
+pub use memmodel::{ConvAlgo, MemoryModel};
+pub use minibatch::{optimize_minibatch, solve_layer_algos, MinibatchPlan};
+pub use netdefs::{alexnet, googlenet_profile, resnet50_profile, vgg16, Layer, Network};

@@ -1,0 +1,203 @@
+//! Network definitions for the paper's four evaluated architectures.
+//!
+//! AlexNet and VGG16 carry full layer tables (needed by the Table 2 /
+//! Fig. 2 memory analysis); GoogLeNet and ResNet-50 are encoded as cost
+//! profiles (total params + FLOPs/image) — sufficient for the Fig. 4
+//! speedup study, which depends only on aggregate compute and parameter
+//! traffic.
+
+/// One feature-extraction or classifier layer (paper Eq. 1 notation).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Layer {
+    /// F (filter), S (stride), P (pad), K (output depth).
+    Conv { f: usize, s: usize, p: usize, k: usize },
+    /// Window/stride pooling; depth-preserving (K_i = 0 in the paper).
+    Pool { f: usize, s: usize },
+    /// Fully-connected with `out` neurons (classification part, Eq. 4).
+    Fc { out: usize },
+}
+
+/// A network: input geometry + ordered layers + aggregate profile.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: &'static str,
+    /// Input spatial size B_0 = H_0 (square) and depth D_0.
+    pub input: (usize, usize),
+    pub layers: Vec<Layer>,
+    /// Total trainable parameters (for Lemma 3.2's S_p).
+    pub params: u64,
+    /// Forward+backward FLOPs per image (3x forward-only rule of thumb).
+    pub flops_per_image: f64,
+}
+
+/// AlexNet with the 227x227 Caffe geometry, the network of Table 2.
+/// (224 in the paper's table header; 227 makes Eq. 1 integral — the
+/// well-known AlexNet off-by-one.)
+pub fn alexnet() -> Network {
+    Network {
+        name: "alexnet",
+        input: (227, 3),
+        layers: vec![
+            Layer::Conv { f: 11, s: 4, p: 0, k: 96 },   // -> 55x55x96
+            Layer::Pool { f: 3, s: 2 },                 // -> 27
+            Layer::Conv { f: 5, s: 1, p: 2, k: 256 },   // -> 27x27x256
+            Layer::Pool { f: 3, s: 2 },                 // -> 13
+            Layer::Conv { f: 3, s: 1, p: 1, k: 384 },
+            Layer::Conv { f: 3, s: 1, p: 1, k: 384 },
+            Layer::Conv { f: 3, s: 1, p: 1, k: 256 },
+            Layer::Pool { f: 3, s: 2 },                 // -> 6
+            Layer::Fc { out: 4096 },
+            Layer::Fc { out: 4096 },
+            Layer::Fc { out: 1000 },
+        ],
+        params: 61_000_000,
+        flops_per_image: 2.1e9, // ~0.7 GFLOP fwd x3
+    }
+}
+
+/// VGG16 (configuration D).
+pub fn vgg16() -> Network {
+    let mut layers = Vec::new();
+    let blocks: &[(usize, usize)] = &[(2, 64), (2, 128), (3, 256), (3, 512), (3, 512)];
+    for &(reps, k) in blocks {
+        for _ in 0..reps {
+            layers.push(Layer::Conv { f: 3, s: 1, p: 1, k });
+        }
+        layers.push(Layer::Pool { f: 2, s: 2 });
+    }
+    layers.push(Layer::Fc { out: 4096 });
+    layers.push(Layer::Fc { out: 4096 });
+    layers.push(Layer::Fc { out: 1000 });
+    Network {
+        name: "vgg16",
+        input: (224, 3),
+        layers,
+        params: 138_000_000,
+        flops_per_image: 46.5e9, // 15.5 GFLOP fwd x3
+    }
+}
+
+/// GoogLeNet aggregate profile (Fig. 4 workload).
+pub fn googlenet_profile() -> Network {
+    Network {
+        name: "googlenet",
+        input: (224, 3),
+        layers: vec![],
+        params: 6_800_000,
+        flops_per_image: 4.5e9, // 1.5 GFLOP fwd x3
+    }
+}
+
+/// ResNet-50 aggregate profile (Fig. 4 workload).
+pub fn resnet50_profile() -> Network {
+    Network {
+        name: "resnet50",
+        input: (224, 3),
+        layers: vec![],
+        params: 25_600_000,
+        flops_per_image: 11.7e9, // 3.9 GFLOP fwd x3
+    }
+}
+
+/// The dtlsda-quickstart CNN (32x32 synthetic task) — mirrors
+/// `python/compile/models/cnn.py` so the advisor can reason about the
+/// artifacts the runtime actually executes.
+pub fn cnn_lite() -> Network {
+    Network {
+        name: "cnn_lite",
+        input: (32, 3),
+        layers: vec![
+            Layer::Conv { f: 5, s: 1, p: 2, k: 32 },
+            Layer::Pool { f: 2, s: 2 },
+            Layer::Conv { f: 5, s: 1, p: 2, k: 64 },
+            Layer::Pool { f: 2, s: 2 },
+            Layer::Conv { f: 3, s: 1, p: 1, k: 128 },
+            Layer::Pool { f: 2, s: 2 },
+            Layer::Fc { out: 256 },
+            Layer::Fc { out: 10 },
+        ],
+        params: 654_666,
+        flops_per_image: 3.0 * 2.0 * 19_000_000.0,
+    }
+}
+
+impl Network {
+    /// Propagate Eq. 1 through the feature-extraction part: returns
+    /// (spatial size, depth) entering each layer, plus the final pair.
+    pub fn geometry(&self) -> Vec<(usize, usize)> {
+        let (mut b, mut d) = self.input;
+        let mut out = vec![(b, d)];
+        for l in &self.layers {
+            match *l {
+                Layer::Conv { f, s, p, k } => {
+                    b = (b - f + 2 * p) / s + 1;
+                    d = k;
+                }
+                Layer::Pool { f, s } => {
+                    b = (b - f) / s + 1;
+                }
+                Layer::Fc { out: o } => {
+                    // Flatten happens implicitly before the first FC.
+                    b = 1;
+                    d = o;
+                }
+            }
+            out.push((b, d));
+        }
+        out
+    }
+
+    pub fn conv_layers(&self) -> impl Iterator<Item = (usize, &Layer)> {
+        self.layers
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| matches!(l, Layer::Conv { .. }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alexnet_geometry_matches_paper() {
+        let net = alexnet();
+        let g = net.geometry();
+        // Entering sizes for the five conv layers (paper Table 2):
+        // 227(=224 nominal) -> 55 -> 27 -> 13 -> 13 -> 13
+        assert_eq!(g[0], (227, 3));
+        assert_eq!(g[1], (55, 96)); // after conv1
+        assert_eq!(g[2], (27, 96)); // after pool1
+        assert_eq!(g[3], (27, 256)); // after conv2
+        assert_eq!(g[5], (13, 384)); // after conv3
+        assert_eq!(g[8], (6, 256)); // after pool5 (entering FC)
+    }
+
+    #[test]
+    fn alexnet_has_five_convs() {
+        assert_eq!(alexnet().conv_layers().count(), 5);
+    }
+
+    #[test]
+    fn vgg_downsamples_to_7() {
+        let g = vgg16().geometry();
+        // 224 / 2^5 = 7 entering the first FC.
+        let before_fc = g[vgg16().layers.len() - 3];
+        assert_eq!(before_fc, (7, 512));
+    }
+
+    #[test]
+    fn cnn_lite_matches_python_model() {
+        let net = cnn_lite();
+        let g = net.geometry();
+        // 32 -> 32 -> 16 -> 16 -> 8 -> 8 -> 4 (entering FC: 4*4*128 = 2048)
+        assert_eq!(g[6], (4, 128));
+        // param count matches the python manifest total.
+        let expected = 5 * 5 * 3 * 32 + 32
+            + 5 * 5 * 32 * 64 + 64
+            + 3 * 3 * 64 * 128 + 128
+            + 2048 * 256 + 256
+            + 256 * 10 + 10;
+        assert_eq!(net.params, expected as u64);
+    }
+}

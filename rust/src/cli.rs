@@ -1,0 +1,384 @@
+//! Command-line interface — the leader entrypoint.
+//!
+//! Subcommands:
+//!   info                         list artifacts and platform
+//!   advisor-minibatch            §3.1: X_mini sweep + per-layer ILP
+//!   advisor-gpus                 §3.2: Lemma 3.1 sizing
+//!   advisor-ps                   §3.3: Lemma 3.2 sizing
+//!   train                        local training on one artifact
+//!   train-dist                   in-process distributed cluster
+//!   ps / worker                  one role of a real multi-machine job
+
+use std::path::PathBuf;
+
+use crate::advisor::{self, netdefs};
+use crate::coordinator::{distributed, local};
+use crate::runtime::exec::Runtime;
+use crate::sim::device::DeviceModel;
+use crate::util::args::ArgSpec;
+use crate::util::bench::Table;
+
+fn net_by_name(name: &str) -> Result<netdefs::Network, String> {
+    Ok(match name {
+        "alexnet" => netdefs::alexnet(),
+        "vgg16" => netdefs::vgg16(),
+        "cnn_lite" => netdefs::cnn_lite(),
+        other => return Err(format!("unknown network {other:?} (alexnet|vgg16|cnn_lite)")),
+    })
+}
+
+fn artifacts_dir(p: &crate::util::args::Parsed) -> PathBuf {
+    PathBuf::from(p.str("artifacts"))
+}
+
+pub fn cli_main() -> i32 {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    }
+}
+
+const USAGE: &str = "dtlsda — distributed training of large-scale deep architectures
+
+subcommands:
+  info               list artifacts and runtime platform
+  advisor-minibatch  optimal X_mini + per-layer conv algorithms (Eq. 6)
+  advisor-gpus       GPU count / efficiency estimates (Lemma 3.1)
+  advisor-ps         parameter-server count (Lemma 3.2)
+  train              local training on a train_step artifact
+  train-dist         distributed training (in-process cluster)
+  ps                 run one parameter-server role (real deployment)
+
+run `dtlsda <subcommand> --help` for options.";
+
+pub fn run(argv: &[String]) -> Result<(), String> {
+    let Some(cmd) = argv.first() else {
+        return Err(USAGE.to_string());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "info" => cmd_info(rest),
+        "advisor-minibatch" => cmd_advisor_minibatch(rest),
+        "advisor-gpus" => cmd_advisor_gpus(rest),
+        "advisor-ps" => cmd_advisor_ps(rest),
+        "train" => cmd_train(rest),
+        "train-dist" => cmd_train_dist(rest),
+        "ps" => cmd_ps_role(rest),
+        "--help" | "-h" | "help" => Err(USAGE.to_string()),
+        other => Err(format!("unknown subcommand {other:?}\n\n{USAGE}")),
+    }
+}
+
+fn cmd_info(argv: &[String]) -> Result<(), String> {
+    let spec = ArgSpec::new("dtlsda info", "list artifacts and platform")
+        .opt("artifacts", Some("artifacts"), "artifacts directory");
+    let p = spec.parse(argv)?;
+    let rt = Runtime::new(&artifacts_dir(&p))?;
+    println!("platform: {}", rt.platform());
+    let mut t = Table::new(&["artifact", "kind", "batch", "params"]);
+    for a in &rt.index.artifacts {
+        t.row(&[
+            a.name.clone(),
+            a.kind.clone(),
+            a.batch.to_string(),
+            a.num_params.to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_advisor_minibatch(argv: &[String]) -> Result<(), String> {
+    let spec = ArgSpec::new("dtlsda advisor-minibatch", "Eq. 6 mini-batch optimization")
+        .opt("net", Some("alexnet"), "network (alexnet|vgg16|cnn_lite)")
+        .opt("mem-gb", Some("12"), "device memory in GB")
+        .opt("candidates", Some("16,32,64,128,256,384,512"), "batch sizes to sweep");
+    let p = spec.parse(argv)?;
+    let net = net_by_name(&p.str("net"))?;
+    let mut dev = DeviceModel::k80();
+    dev.mem_bytes = (p.f64("mem-gb") * (1u64 << 30) as f64) as usize;
+    let cands: Vec<usize> = p
+        .str("candidates")
+        .split(',')
+        .map(|s| s.trim().parse().map_err(|e| format!("bad candidate: {e}")))
+        .collect::<Result<_, _>>()?;
+
+    let Some(plan) = advisor::optimize_minibatch(&net, &dev, &cands) else {
+        return Err("no feasible mini-batch size on this device".into());
+    };
+    let mut t = Table::new(&["X_mini", "feasible", "step_ms", "imgs/s", "algos", "ws_MB"]);
+    for (b, lp) in &plan.sweep {
+        match lp {
+            Some(lp) => t.row(&[
+                b.to_string(),
+                "yes".into(),
+                format!("{:.1}", lp.step_time * 1e3),
+                format!("{:.0}", lp.xmini as f64 / lp.step_time),
+                lp.algos.iter().map(|a| a.name().chars().next().unwrap()).collect(),
+                format!("{:.0}", lp.workspace_bytes as f64 / 1e6),
+            ]),
+            None => t.row(&[b.to_string(), "no".into(), "-".into(), "-".into(), "-".into(), "-".into()]),
+        }
+    }
+    t.print();
+    println!(
+        "\nrecommended X_mini = {} ({} algos: {:?})",
+        plan.best.xmini,
+        net.name,
+        plan.best.algos.iter().map(|a| a.name()).collect::<Vec<_>>()
+    );
+    Ok(())
+}
+
+fn cmd_advisor_gpus(argv: &[String]) -> Result<(), String> {
+    let spec = ArgSpec::new("dtlsda advisor-gpus", "Lemma 3.1 multi-GPU sizing")
+        .opt("ro", Some("0.1"), "measured overhead ratio R_O = T_O/T_C")
+        .opt("speedup", None, "target speedup (prints required G)")
+        .opt("alpha", None, "target efficiency with --gpus (prints max R_O)")
+        .opt("gpus", None, "GPU count for --alpha / efficiency table");
+    let p = spec.parse(argv)?;
+    let r_o = p.f64("ro");
+    if let Some(s) = p.get("speedup") {
+        let target: f64 = s.parse().map_err(|e| format!("bad speedup: {e}"))?;
+        match advisor::lemmas::gpus_for_speedup(target, r_o) {
+            Some(g) => println!(
+                "target {target}x at R_O={r_o}: G = {g} (efficiency {:.1}%)",
+                advisor::efficiency(g, r_o) * 100.0
+            ),
+            None => println!(
+                "target {target}x unreachable: speedup caps at {:.2}x as G->inf",
+                (1.0 + r_o) / r_o
+            ),
+        }
+        return Ok(());
+    }
+    if let (Some(a), Some(g)) = (p.get("alpha"), p.get("gpus")) {
+        let alpha: f64 = a.parse().map_err(|e| format!("bad alpha: {e}"))?;
+        let g: usize = g.parse().map_err(|e| format!("bad gpus: {e}"))?;
+        println!(
+            "G={g}, target α={alpha}: overhead must satisfy R_O <= {:.4}",
+            advisor::max_overhead_ratio(g, alpha)
+        );
+        return Ok(());
+    }
+    let mut t = Table::new(&["G", "efficiency", "speedup"]);
+    for g in [1usize, 2, 4, 8, 16, 32] {
+        t.row(&[
+            g.to_string(),
+            format!("{:.1}%", advisor::efficiency(g, r_o) * 100.0),
+            format!("{:.2}x", advisor::speedup(g, r_o)),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_advisor_ps(argv: &[String]) -> Result<(), String> {
+    let spec = ArgSpec::new("dtlsda advisor-ps", "Lemma 3.2 parameter-server sizing")
+        .opt("params-mb", Some("244"), "parameter size S_p in MB (AlexNet f32 ≈ 244)")
+        .opt("workers", Some("8"), "number of workers N_w")
+        .opt("bw-gbps", Some("10"), "per-server network bandwidth, Gbit/s")
+        .opt("tc", Some("2.0"), "compute seconds per round T_C");
+    let p = spec.parse(argv)?;
+    let s_p = p.f64("params-mb") * 1e6;
+    let n_w = p.usize("workers");
+    let b_ps = p.f64("bw-gbps") * 1e9 / 8.0;
+    let t_c = p.f64("tc");
+    let n_ps = advisor::num_param_servers(s_p, n_w, b_ps, t_c);
+    println!("Lemma 3.2: N_ps = ceil(2 S_p N_w / (B_ps T_C)) = {n_ps}");
+    let mut t = Table::new(&["N_ps", "round I/O (s)", "hidden?"]);
+    for n in 1..=(n_ps + 2) {
+        let io = advisor::lemmas::ps_round_io_time(s_p, n_w, b_ps, n);
+        t.row(&[
+            n.to_string(),
+            format!("{io:.3}"),
+            if io <= t_c { "yes".into() } else { "no".into() },
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_train(argv: &[String]) -> Result<(), String> {
+    let spec = ArgSpec::new("dtlsda train", "local training")
+        .opt("artifacts", Some("artifacts"), "artifacts directory")
+        .opt("artifact", Some("cnn_gemm_b32_train"), "train_step artifact")
+        .opt("steps", Some("50"), "training steps")
+        .opt("lr", Some("0.02"), "learning rate")
+        .opt("seed", Some("1"), "data seed")
+        .opt("eval", None, "eval_step artifact to run afterwards")
+        .opt("prefetch", Some("2"), "loader queue depth (0 = unpipelined)")
+        .opt("log-every", Some("10"), "loss log cadence");
+    let p = spec.parse(argv)?;
+    let rt = Runtime::new(&artifacts_dir(&p))?;
+    let cfg = local::LocalConfig {
+        artifact: p.str("artifact"),
+        steps: p.usize("steps"),
+        lr: p.f64("lr") as f32,
+        seed: p.u64("seed"),
+        prefetch_depth: p.usize("prefetch"),
+        log_every: p.usize("log-every"),
+    };
+    let (params, stats) = local::train_local(&rt, &cfg)?;
+    println!(
+        "trained {} for {} steps: loss {:.4} -> {:.4}, {:.1} samples/s, R_O={:.3}",
+        cfg.artifact,
+        cfg.steps,
+        stats.losses.first().unwrap_or(&f32::NAN),
+        stats.losses.last().unwrap_or(&f32::NAN),
+        stats.throughput,
+        stats.profiler.r_o()
+    );
+    print!("{}", stats.profiler.report());
+    if let Some(eval) = p.get("eval") {
+        let report = local::evaluate(&rt, eval, &params, 1 << 20, 2, cfg.seed)?;
+        println!(
+            "eval: loss {:.4}, top-1 error {:.1}% over {} samples",
+            report.mean_loss,
+            report.error_rate * 100.0,
+            report.samples
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train_dist(argv: &[String]) -> Result<(), String> {
+    let spec = ArgSpec::new("dtlsda train-dist", "distributed training (loopback cluster)")
+        .opt("artifacts", Some("artifacts"), "artifacts directory")
+        .opt("artifact", Some("cnn_gemm_b32_grad"), "grad_step artifact")
+        .opt("workers", Some("2"), "worker count N_w")
+        .opt("servers", Some("2"), "parameter-server count N_ps")
+        .opt("steps", Some("10"), "steps per worker")
+        .opt("lr", Some("0.02"), "learning rate")
+        .opt("momentum", Some("0"), "server-side momentum")
+        .flag("sync", "synchronous SGD (default async)");
+    let p = spec.parse(argv)?;
+    let cfg = distributed::DistConfig {
+        grad_artifact: p.str("artifact"),
+        n_workers: p.usize("workers"),
+        n_servers: p.usize("servers"),
+        steps_per_worker: p.usize("steps"),
+        lr: p.f64("lr") as f32,
+        momentum: p.f64("momentum") as f32,
+        sync: p.flag("sync"),
+        seed: 1,
+    };
+    let report = distributed::run_distributed(&PathBuf::from(p.str("artifacts")), &cfg)?;
+    println!(
+        "distributed run: {} workers x {} steps, {} servers ({}): {:.1} samples/s",
+        cfg.n_workers,
+        cfg.steps_per_worker,
+        cfg.n_servers,
+        if cfg.sync { "sync" } else { "async" },
+        report.throughput
+    );
+    for (w, losses) in report.worker_losses.iter().enumerate() {
+        println!(
+            "worker {w}: loss {:.4} -> {:.4}, R_O={:.3}",
+            losses.first().unwrap_or(&f32::NAN),
+            losses.last().unwrap_or(&f32::NAN),
+            report.worker_r_o[w]
+        );
+    }
+    let (pulls, pushes, updates) = report.ps_stats;
+    println!(
+        "ps: pulls={pulls} pushes={pushes} updates={updates} imbalance={:.3}",
+        report.router_imbalance
+    );
+    Ok(())
+}
+
+/// Real multi-machine role: run one parameter server on a fixed port.
+fn cmd_ps_role(argv: &[String]) -> Result<(), String> {
+    let spec = ArgSpec::new("dtlsda ps", "serve one parameter-server shard")
+        .opt("artifacts", Some("artifacts"), "artifacts directory")
+        .opt("family", Some("cnn"), "model family to serve")
+        .opt("bind", Some("0.0.0.0:7070"), "listen address")
+        .opt("shard", Some("0"), "this server's shard index")
+        .opt("num-shards", Some("1"), "total shard count")
+        .opt("lr", Some("0.02"), "learning rate")
+        .opt("momentum", Some("0"), "momentum")
+        .opt("sync-workers", Some("0"), "if >0, sync mode with this many workers");
+    let p = spec.parse(argv)?;
+    let index = crate::runtime::artifact::ArtifactIndex::load(&artifacts_dir(&p))?;
+    let manifest = index.manifest(&p.str("family"))?;
+    let init = manifest.load_init()?;
+    let router = crate::ps::router::Router::new(&manifest.byte_sizes(), p.usize("num-shards"));
+    let shard = p.usize("shard");
+    let momentum = p.f64("momentum") as f32;
+    let opt = if momentum > 0.0 {
+        crate::ps::shard::Optimizer::Momentum { lr: p.f64("lr") as f32, mu: momentum }
+    } else {
+        crate::ps::shard::Optimizer::Sgd { lr: p.f64("lr") as f32 }
+    };
+    let mut store = crate::ps::shard::ShardStore::new(opt);
+    for &k in router.keys_of(shard) {
+        store.insert(k, init[k as usize].clone());
+    }
+    let sync_workers = p.usize("sync-workers");
+    let mode = if sync_workers > 0 {
+        crate::ps::server::UpdateMode::Sync { expected_workers: sync_workers, backup_workers: 0 }
+    } else {
+        crate::ps::server::UpdateMode::Async
+    };
+    let srv = PsServerRoleGuard(crate::ps::server::PsServerHandle::spawn_tcp(
+        &p.str("bind"),
+        store,
+        mode,
+    )?);
+    crate::info!(
+        "ps",
+        "serving",
+        addr = srv.0.addr,
+        shard = shard,
+        keys = router.keys_of(shard).len()
+    );
+    // Serve until killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+struct PsServerRoleGuard(crate::ps::server::PsServerHandle);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn usage_on_empty() {
+        assert!(run(&[]).is_err());
+        assert!(run(&argv(&["help"])).unwrap_err().contains("subcommands"));
+    }
+
+    #[test]
+    fn unknown_subcommand() {
+        assert!(run(&argv(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn advisor_gpus_table() {
+        run(&argv(&["advisor-gpus", "--ro", "0.1"])).unwrap();
+        run(&argv(&["advisor-gpus", "--ro", "0.1", "--speedup", "3"])).unwrap();
+        run(&argv(&["advisor-gpus", "--alpha", "0.8", "--gpus", "4", "--ro", "0"])).unwrap();
+    }
+
+    #[test]
+    fn advisor_ps_table() {
+        run(&argv(&["advisor-ps", "--params-mb", "244", "--workers", "8"])).unwrap();
+    }
+
+    #[test]
+    fn advisor_minibatch_runs() {
+        run(&argv(&["advisor-minibatch", "--net", "alexnet", "--mem-gb", "4"])).unwrap();
+        assert!(run(&argv(&["advisor-minibatch", "--net", "nope"])).is_err());
+    }
+}

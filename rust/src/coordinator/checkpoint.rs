@@ -1,0 +1,153 @@
+//! Checkpointing: durable snapshots of model parameters (+ step/meta),
+//! written with the in-house binary codec. Enables resuming long
+//! training jobs and exporting trained parameters to other tools —
+//! the "ease of management" direction of the paper's §4 future work.
+//!
+//! Format: magic "DTCKPT01" || u64 step || u32 n || n x (name, tensor),
+//! then a u32 crc32-like checksum of everything before it.
+
+use std::path::Path;
+
+use crate::net::codec::{Reader, Writer};
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 8] = b"DTCKPT01";
+
+/// Cheap rolling checksum (FNV-1a over bytes) — corruption detection,
+/// not cryptography.
+fn checksum(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811C_9DC5;
+    for b in bytes {
+        h ^= *b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// A parameter snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub entries: Vec<(String, Tensor)>,
+}
+
+impl Checkpoint {
+    pub fn new(step: u64, names: &[String], params: &[Tensor]) -> Self {
+        assert_eq!(names.len(), params.len());
+        Checkpoint {
+            step,
+            entries: names.iter().cloned().zip(params.iter().cloned()).collect(),
+        }
+    }
+
+    pub fn params(&self) -> Vec<Tensor> {
+        self.entries.iter().map(|(_, t)| t.clone()).collect()
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::with_capacity(64);
+        // magic written raw (not length-prefixed)
+        let mut out = MAGIC.to_vec();
+        w.u64(self.step);
+        w.u32(self.entries.len() as u32);
+        for (name, t) in &self.entries {
+            w.str(name);
+            w.tensor(t);
+        }
+        out.extend_from_slice(&w.finish());
+        let crc = checksum(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Checkpoint, String> {
+        if bytes.len() < 12 || &bytes[..8] != MAGIC {
+            return Err("not a dtlsda checkpoint".into());
+        }
+        let body_end = bytes.len() - 4;
+        let want = u32::from_le_bytes(bytes[body_end..].try_into().unwrap());
+        let got = checksum(&bytes[..body_end]);
+        if want != got {
+            return Err(format!("checkpoint corrupt: crc {got:#x} != {want:#x}"));
+        }
+        let mut r = Reader::new(&bytes[8..body_end]);
+        let step = r.u64()?;
+        let n = r.u32()? as usize;
+        let mut entries = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name = r.str()?;
+            entries.push((name, r.tensor()?));
+        }
+        if r.remaining() != 0 {
+            return Err("trailing bytes in checkpoint".into());
+        }
+        Ok(Checkpoint { step, entries })
+    }
+
+    /// Atomic save: write to `.tmp`, then rename.
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).map_err(|e| e.to_string())?;
+        }
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, self.encode()).map_err(|e| e.to_string())?;
+        std::fs::rename(&tmp, path).map_err(|e| e.to_string())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint, String> {
+        let bytes = std::fs::read(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        Checkpoint::decode(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            step: 1234,
+            entries: vec![
+                ("conv0.w".into(), Tensor::from_vec(&[2, 3], vec![1.0; 6])),
+                ("head.b".into(), Tensor::from_vec(&[4], vec![-0.5, 0.0, 0.5, 2.0])),
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let c = sample();
+        assert_eq!(Checkpoint::decode(&c.encode()).unwrap(), c);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let mut p = std::env::temp_dir();
+        p.push(format!("dtlsda_ckpt_{}.bin", std::process::id()));
+        let c = sample();
+        c.save(&p).unwrap();
+        assert_eq!(Checkpoint::load(&p).unwrap(), c);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let mut bytes = sample().encode();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        assert!(Checkpoint::decode(&bytes).unwrap_err().contains("corrupt"));
+    }
+
+    #[test]
+    fn wrong_magic_rejected() {
+        assert!(Checkpoint::decode(b"NOTACKPT0000").is_err());
+    }
+
+    #[test]
+    fn params_accessor_preserves_order() {
+        let c = sample();
+        let p = c.params();
+        assert_eq!(p[0].shape(), &[2, 3]);
+        assert_eq!(p[1].data()[3], 2.0);
+    }
+}

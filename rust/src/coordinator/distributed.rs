@@ -1,0 +1,228 @@
+//! In-process distributed training: the full §3.3 topology on loopback
+//! TCP — N_ps parameter servers (threads), N_w workers (threads, each
+//! with its own PJRT runtime), async or synchronous updates.
+//!
+//! This is a real deployment of the protocol (sockets, framing, shard
+//! routing, barriers), not a simulation; only the machines are folded
+//! into one process. `--role ps|worker` in the CLI runs the same code
+//! across real machines.
+
+use std::thread;
+
+use crate::net::transport::{connect, Transport};
+use crate::ps::client::PsClient;
+use crate::ps::router::Router;
+use crate::ps::server::{PsServerHandle, UpdateMode};
+use crate::ps::shard::{Optimizer, ShardStore};
+use crate::runtime::exec::Runtime;
+use crate::tensor::Tensor;
+use crate::worker::pipeline::{run_ps_worker, PipelineConfig};
+
+/// Distributed job description.
+#[derive(Debug, Clone)]
+pub struct DistConfig {
+    /// grad_step artifact every worker runs.
+    pub grad_artifact: String,
+    pub n_workers: usize,
+    pub n_servers: usize,
+    pub steps_per_worker: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub sync: bool,
+    pub seed: u64,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        DistConfig {
+            grad_artifact: "cnn_gemm_b32_grad".into(),
+            n_workers: 2,
+            n_servers: 2,
+            steps_per_worker: 10,
+            lr: 0.02,
+            momentum: 0.0,
+            sync: false,
+            seed: 1,
+        }
+    }
+}
+
+/// Aggregate outcome.
+#[derive(Debug)]
+pub struct DistReport {
+    /// Per-worker loss traces.
+    pub worker_losses: Vec<Vec<f32>>,
+    /// Per-worker mean R_O (Lemma 3.1 input measured in vivo).
+    pub worker_r_o: Vec<f64>,
+    /// Final parameters pulled from the servers.
+    pub final_params: Vec<Tensor>,
+    /// Total samples / wall seconds.
+    pub throughput: f64,
+    /// (pulls, pushes, updates) across all servers.
+    pub ps_stats: (u64, u64, u64),
+    pub router_imbalance: f64,
+}
+
+/// Spawn servers + workers, train, tear down.
+pub fn run_distributed(artifacts_dir: &std::path::Path, cfg: &DistConfig) -> Result<DistReport, String> {
+    // Leader-side metadata (cheap: no PJRT client needed for the index).
+    let index = crate::runtime::artifact::ArtifactIndex::load(artifacts_dir)?;
+    let meta = index.find(&cfg.grad_artifact)?.clone();
+    if meta.kind != "grad_step" {
+        return Err(format!("{} is a {}, need grad_step", cfg.grad_artifact, meta.kind));
+    }
+    let manifest = index.manifest(&meta.family)?;
+    let init = manifest.load_init()?;
+    let router = Router::new(&manifest.byte_sizes(), cfg.n_servers);
+
+    // --- parameter servers -------------------------------------------
+    let opt = if cfg.momentum > 0.0 {
+        Optimizer::Momentum { lr: cfg.lr, mu: cfg.momentum }
+    } else {
+        Optimizer::Sgd { lr: cfg.lr }
+    };
+    let mode = if cfg.sync {
+        UpdateMode::Sync { expected_workers: cfg.n_workers, backup_workers: 0 }
+    } else {
+        UpdateMode::Async
+    };
+    let mut servers = Vec::new();
+    for s in 0..cfg.n_servers {
+        let mut store = ShardStore::new(opt);
+        for &k in router.keys_of(s) {
+            store.insert(k, init[k as usize].clone());
+        }
+        servers.push(PsServerHandle::spawn_tcp("127.0.0.1:0", store, mode)?);
+    }
+    let addrs: Vec<std::net::SocketAddr> = servers.iter().map(|s| s.addr).collect();
+
+    // --- workers -------------------------------------------------------
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for w in 0..cfg.n_workers {
+        let addrs = addrs.clone();
+        let router = router.clone();
+        let cfg = cfg.clone();
+        let dir = artifacts_dir.to_path_buf();
+        handles.push(thread::spawn(move || -> Result<(Vec<f32>, f64), String> {
+            // Each worker owns a full runtime (mirrors a real machine).
+            let rt = Runtime::new(&dir)?;
+            let exe = rt.load(&cfg.grad_artifact)?;
+            let transports: Vec<Box<dyn Transport>> = addrs
+                .iter()
+                .map(|a| connect(a).map(|t| Box::new(t) as Box<dyn Transport>))
+                .collect::<Result<_, _>>()?;
+            let mut client = PsClient::new(w as u32, transports, router);
+            let pcfg = PipelineConfig {
+                lr: cfg.lr,
+                steps: cfg.steps_per_worker,
+                prefetch_depth: 2,
+                log_every: 0,
+            };
+            // Disjoint data streams per worker via the seed fork.
+            let batcher = crate::coordinator::local::family_batcher(
+                &exe.meta.family,
+                cfg.seed ^ (w as u64 + 1).wrapping_mul(0x9E37_79B9),
+            );
+            let stats = run_ps_worker(&exe, &mut client, batcher, &pcfg, cfg.sync)?;
+            Ok((stats.losses, stats.profiler.r_o()))
+        }));
+    }
+
+    let mut worker_losses = Vec::new();
+    let mut worker_r_o = Vec::new();
+    for h in handles {
+        let (losses, r_o) = h.join().map_err(|_| "worker panicked".to_string())??;
+        worker_losses.push(losses);
+        worker_r_o.push(r_o);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    // --- final state ----------------------------------------------------
+    let transports: Vec<Box<dyn Transport>> = addrs
+        .iter()
+        .map(|a| connect(a).map(|t| Box::new(t) as Box<dyn Transport>))
+        .collect::<Result<_, _>>()?;
+    let mut client = PsClient::new(u32::MAX, transports, router.clone());
+    let final_params = client.pull_all()?;
+    let ps_stats = client.stats()?;
+    drop(client);
+    for s in &mut servers {
+        s.shutdown();
+    }
+
+    let samples = cfg.n_workers * cfg.steps_per_worker * meta.batch;
+    Ok(DistReport {
+        worker_losses,
+        worker_r_o,
+        final_params,
+        throughput: samples as f64 / wall_s,
+        ps_stats,
+        router_imbalance: router.imbalance(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("index.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn async_two_workers_two_servers() {
+        let Some(dir) = artifacts_dir() else { return };
+        let cfg = DistConfig {
+            n_workers: 2,
+            n_servers: 2,
+            steps_per_worker: 4,
+            lr: 0.01,
+            ..Default::default()
+        };
+        let report = run_distributed(&dir, &cfg).unwrap();
+        assert_eq!(report.worker_losses.len(), 2);
+        // Async SGD loss is noisy over 4 steps (stale pulls, 2x update
+        // rate) — convergence proper is integration-tested on the
+        // deterministic quadratic task and demonstrated at length in
+        // examples/distributed_ps. Here we assert protocol semantics:
+        // both workers ran every step from the shared ln(10) start and
+        // produced finite losses.
+        for losses in &report.worker_losses {
+            assert_eq!(losses.len(), 4);
+            assert!(losses.iter().all(|l| l.is_finite()), "{losses:?}");
+            assert!((losses[0] - 10f32.ln()).abs() < 0.05, "{losses:?}");
+        }
+        // 2 workers x 4 steps x 2 servers = 16 pushes; updates = pushes
+        // per-key sum (async applies each key of each push).
+        let (pulls, pushes, _) = report.ps_stats;
+        // +2 for the final state pull.
+        assert_eq!(pulls, 2 * 4 * 2 + 2);
+        assert_eq!(pushes, 16);
+        // fc1.w alone is ~80% of the model's bytes; with 2 servers the
+        // best possible max/mean is ~1.6 (indivisible item — the paper's
+        // load-balancing subgoal is limited by tensor granularity).
+        assert!(report.router_imbalance < 1.7, "{}", report.router_imbalance);
+        assert!(!report.final_params.is_empty());
+    }
+
+    #[test]
+    fn sync_mode_converges_identically_across_workers() {
+        let Some(dir) = artifacts_dir() else { return };
+        let cfg = DistConfig {
+            n_workers: 2,
+            n_servers: 1,
+            steps_per_worker: 3,
+            sync: true,
+            lr: 0.02,
+            ..Default::default()
+        };
+        let report = run_distributed(&dir, &cfg).unwrap();
+        // In sync mode every worker sees the same parameter sequence, so
+        // updates count = steps * n_keys (one aggregated apply per step).
+        let (_, _, updates) = report.ps_stats;
+        assert_eq!(updates, 3 * 10);
+    }
+}

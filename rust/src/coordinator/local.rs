@@ -1,0 +1,169 @@
+//! Single-process training + evaluation drivers.
+
+use crate::data::loader::Batch;
+use crate::data::synth::{ImageTask, LmTask};
+use crate::runtime::exec::Runtime;
+use crate::tensor::Tensor;
+use crate::worker::pipeline::{run_local, PipelineConfig, WorkerStats};
+
+/// One local training job.
+#[derive(Debug, Clone)]
+pub struct LocalConfig {
+    pub artifact: String,
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub prefetch_depth: usize,
+    pub log_every: usize,
+}
+
+impl Default for LocalConfig {
+    fn default() -> Self {
+        LocalConfig {
+            artifact: "cnn_gemm_b32_train".into(),
+            steps: 50,
+            lr: 0.02,
+            seed: 1,
+            prefetch_depth: 2,
+            log_every: 10,
+        }
+    }
+}
+
+/// Batch generator for whichever family the artifact belongs to.
+pub fn family_batcher(
+    family: &str,
+    seed: u64,
+) -> Box<dyn FnMut(u64, usize) -> Batch + Send + 'static> {
+    match family {
+        "cnn" => {
+            let task = ImageTask::cifar_like(seed);
+            Box::new(move |start, n| {
+                let (x, y) = task.batch(start, n);
+                Batch { start, x_f32: x.into_vec(), x_i32: vec![], y_i32: y }
+            })
+        }
+        "lm" => {
+            let task = LmTask::byte_level(seed);
+            Box::new(move |start, n| {
+                let (xs, ys) = task.batch(start, n);
+                Batch { start, x_f32: vec![], x_i32: xs, y_i32: ys }
+            })
+        }
+        other => panic!("unknown artifact family {other:?}"),
+    }
+}
+
+/// Train `cfg.artifact` from its python init; returns final params and
+/// worker stats (losses, profile, throughput).
+pub fn train_local(rt: &Runtime, cfg: &LocalConfig) -> Result<(Vec<Tensor>, WorkerStats), String> {
+    let exe = rt.load(&cfg.artifact)?;
+    if exe.meta.kind != "train_step" {
+        return Err(format!("{} is a {}, need train_step", cfg.artifact, exe.meta.kind));
+    }
+    let (_, params) = rt.family_init(&exe.meta.family)?;
+    let pcfg = PipelineConfig {
+        lr: cfg.lr,
+        steps: cfg.steps,
+        prefetch_depth: cfg.prefetch_depth,
+        log_every: cfg.log_every,
+    };
+    run_local(&exe, params, family_batcher(&exe.meta.family, cfg.seed), &pcfg)
+}
+
+/// Evaluation over a held-out range of synthetic samples.
+#[derive(Debug, Clone)]
+pub struct EvalReport {
+    pub mean_loss: f64,
+    /// Top-1 error rate in [0, 1] (the Fig. 3 y-axis analog).
+    pub error_rate: f64,
+    pub samples: usize,
+}
+
+/// Run `eval_artifact` over `batches` batches starting at sample offset
+/// `val_start` (use a range disjoint from training indices).
+pub fn evaluate(
+    rt: &Runtime,
+    eval_artifact: &str,
+    params: &[Tensor],
+    val_start: u64,
+    batches: usize,
+    seed: u64,
+) -> Result<EvalReport, String> {
+    let exe = rt.load(eval_artifact)?;
+    evaluate_with(&exe, params, val_start, batches, seed)
+}
+
+/// Same as [`evaluate`] but reusing an already-compiled executable
+/// (the Fig. 3 bench evaluates after every epoch).
+pub fn evaluate_with(
+    exe: &crate::runtime::exec::TrainExecutable,
+    params: &[Tensor],
+    val_start: u64,
+    batches: usize,
+    seed: u64,
+) -> Result<EvalReport, String> {
+    if exe.meta.kind != "eval_step" {
+        return Err(format!("{} is a {}, need eval_step", exe.meta.name, exe.meta.kind));
+    }
+    let mut make = family_batcher(&exe.meta.family, seed);
+    let bs = exe.meta.batch;
+    let mut loss_sum = 0.0f64;
+    let mut correct = 0.0f64;
+    for i in 0..batches {
+        let b = make(val_start + (i * bs) as u64, bs);
+        let out = exe.run(params, &b, None)?;
+        loss_sum += out.loss as f64;
+        correct += out.correct as f64;
+    }
+    let samples = batches * bs;
+    Ok(EvalReport {
+        mean_loss: loss_sum / batches as f64,
+        error_rate: 1.0 - correct / samples as f64,
+        samples,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("index.json").exists() {
+            return None;
+        }
+        Some(Runtime::new(&dir).unwrap())
+    }
+
+    #[test]
+    fn train_then_eval_improves_over_init() {
+        let Some(rt) = runtime() else { return };
+        let cfg = LocalConfig {
+            artifact: "cnn_gemm_b32_train".into(),
+            steps: 12,
+            lr: 0.02,
+            seed: 5,
+            prefetch_depth: 2,
+            log_every: 0,
+        };
+        let (_, init_params) = rt.family_init("cnn").unwrap();
+        let (trained, stats) = train_local(&rt, &cfg).unwrap();
+        assert_eq!(stats.losses.len(), 12);
+
+        let eval_exe = rt.load("cnn_gemm_b256_eval").unwrap();
+        let before = evaluate_with(&eval_exe, &init_params, 1_000_000, 1, 5).unwrap();
+        let after = evaluate_with(&eval_exe, &trained, 1_000_000, 1, 5).unwrap();
+        // Init (zero head) is exactly chance; trained must beat it.
+        assert!(after.error_rate < before.error_rate, "{after:?} !< {before:?}");
+        assert!(after.mean_loss < before.mean_loss);
+    }
+
+    #[test]
+    fn rejects_wrong_kind() {
+        let Some(rt) = runtime() else { return };
+        let cfg = LocalConfig { artifact: "cnn_gemm_b32_grad".into(), ..Default::default() };
+        assert!(train_local(&rt, &cfg).is_err());
+    }
+}

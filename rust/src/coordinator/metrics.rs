@@ -1,0 +1,109 @@
+//! Run reports: loss curves, throughput and overhead accounting, with
+//! CSV emission for the paper-figure benches.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A (x, value) series — epochs vs error, steps vs loss, etc.
+#[derive(Debug, Clone, Default)]
+pub struct LossCurve {
+    pub label: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl LossCurve {
+    pub fn new(label: &str) -> Self {
+        LossCurve { label: label.to_string(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    /// Final value (for convergence assertions).
+    pub fn last(&self) -> Option<f64> {
+        self.points.last().map(|p| p.1)
+    }
+
+    /// First x where the curve dips below `threshold`, if ever.
+    pub fn first_below(&self, threshold: f64) -> Option<f64> {
+        self.points.iter().find(|p| p.1 < threshold).map(|p| p.0)
+    }
+}
+
+/// Whole-run summary (one worker or one cluster).
+#[derive(Debug, Clone, Default)]
+pub struct RunReport {
+    pub name: String,
+    pub steps: usize,
+    pub wall_s: f64,
+    pub throughput: f64,
+    pub final_loss: f64,
+    pub r_o: f64,
+    pub curves: Vec<LossCurve>,
+}
+
+/// Render curves as a wide CSV: x, then one column per curve label.
+pub fn curves_to_csv(curves: &[LossCurve]) -> String {
+    let mut out = String::from("x");
+    for c in curves {
+        let _ = write!(out, ",{}", c.label);
+    }
+    out.push('\n');
+    let max_len = curves.iter().map(|c| c.points.len()).max().unwrap_or(0);
+    for i in 0..max_len {
+        let x = curves
+            .iter()
+            .find_map(|c| c.points.get(i).map(|p| p.0))
+            .unwrap_or(i as f64);
+        let _ = write!(out, "{x}");
+        for c in curves {
+            match c.points.get(i) {
+                Some(p) => {
+                    let _ = write!(out, ",{}", p.1);
+                }
+                None => out.push(','),
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Write curves to `path` as CSV (best-effort directory creation).
+pub fn write_csv(path: &Path, curves: &[LossCurve]) -> Result<(), String> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent).map_err(|e| e.to_string())?;
+    }
+    std::fs::write(path, curves_to_csv(curves)).map_err(|e| e.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn curve_queries() {
+        let mut c = LossCurve::new("b32");
+        c.push(0.0, 0.9);
+        c.push(1.0, 0.5);
+        c.push(2.0, 0.2);
+        assert_eq!(c.last(), Some(0.2));
+        assert_eq!(c.first_below(0.6), Some(1.0));
+        assert_eq!(c.first_below(0.1), None);
+    }
+
+    #[test]
+    fn csv_rendering() {
+        let mut a = LossCurve::new("a");
+        a.push(0.0, 1.0);
+        a.push(1.0, 0.5);
+        let mut b = LossCurve::new("b");
+        b.push(0.0, 2.0);
+        let csv = curves_to_csv(&[a, b]);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "x,a,b");
+        assert_eq!(lines[1], "0,1,2");
+        assert_eq!(lines[2], "1,0.5,");
+    }
+}

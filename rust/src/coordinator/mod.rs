@@ -1,0 +1,18 @@
+//! Leader-side orchestration: compose runtime, data, PS cluster and
+//! workers into runnable training jobs.
+//!
+//! * [`local`]       — single-process jobs: one-device training and the
+//!   evaluation loop (Fig. 3's error-vs-epoch measurements).
+//! * [`distributed`] — in-process distributed cluster: N_ps TCP
+//!   parameter servers + N_w worker threads, async or synchronous.
+//! * [`metrics`]     — run reports and CSV emission for the benches.
+
+pub mod checkpoint;
+pub mod distributed;
+pub mod local;
+pub mod metrics;
+
+pub use checkpoint::Checkpoint;
+pub use distributed::{run_distributed, DistConfig, DistReport};
+pub use local::{evaluate, train_local, EvalReport, LocalConfig};
+pub use metrics::{LossCurve, RunReport};

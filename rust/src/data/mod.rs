@@ -1,0 +1,18 @@
+//! Training-data pipeline (Fig. 1 steps 2–3: data loading + preparation).
+//!
+//! * [`synth`]  — deterministic synthetic datasets standing in for the
+//!   paper's ImageNet (DESIGN.md §4): a learnable class-conditional image
+//!   task for the CNN and a Markov byte corpus for the LM.
+//! * [`shard`]  — record-oriented shard files (sequential reads — the
+//!   paper's "rearrange training samples so that the data can be read in
+//!   sequentially" remedy).
+//! * [`loader`] — background prefetching double-buffered batch loader
+//!   (the pipelining that hides I/O behind GPU compute).
+
+pub mod loader;
+pub mod shard;
+pub mod synth;
+
+pub use loader::{Batch, PrefetchLoader};
+pub use shard::{ShardReader, ShardWriter};
+pub use synth::{ImageTask, LmTask};

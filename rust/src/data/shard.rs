@@ -1,0 +1,142 @@
+//! Record-oriented shard files.
+//!
+//! The paper's I/O remedy: "rearrange training samples so that the data
+//! can be read in sequentially" (like MXNet's RecordIO / TF's TFRecord).
+//! Format: magic, record count, then `u32 label-bytes || u32 data-bytes
+//! || payloads` per record, fully sequential on read.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"DTLSDA01";
+
+/// Sequential shard writer.
+pub struct ShardWriter {
+    out: BufWriter<File>,
+    count: u64,
+}
+
+impl ShardWriter {
+    pub fn create<P: AsRef<Path>>(path: P) -> Result<Self, String> {
+        let f = File::create(&path).map_err(|e| format!("create shard: {e}"))?;
+        let mut out = BufWriter::new(f);
+        out.write_all(MAGIC).map_err(|e| e.to_string())?;
+        out.write_all(&0u64.to_le_bytes()).map_err(|e| e.to_string())?;
+        Ok(ShardWriter { out, count: 0 })
+    }
+
+    pub fn append(&mut self, label: &[u8], data: &[u8]) -> Result<(), String> {
+        self.out
+            .write_all(&(label.len() as u32).to_le_bytes())
+            .and_then(|_| self.out.write_all(&(data.len() as u32).to_le_bytes()))
+            .and_then(|_| self.out.write_all(label))
+            .and_then(|_| self.out.write_all(data))
+            .map_err(|e| format!("append: {e}"))?;
+        self.count += 1;
+        Ok(())
+    }
+
+    /// Seal the shard: rewrites the record count in the header.
+    pub fn finish(mut self) -> Result<u64, String> {
+        use std::io::Seek;
+        self.out.flush().map_err(|e| e.to_string())?;
+        let mut f = self.out.into_inner().map_err(|e| e.to_string())?;
+        f.seek(std::io::SeekFrom::Start(8)).map_err(|e| e.to_string())?;
+        f.write_all(&self.count.to_le_bytes()).map_err(|e| e.to_string())?;
+        f.flush().map_err(|e| e.to_string())?;
+        Ok(self.count)
+    }
+}
+
+/// Sequential shard reader.
+pub struct ShardReader {
+    input: BufReader<File>,
+    remaining: u64,
+}
+
+impl ShardReader {
+    pub fn open<P: AsRef<Path>>(path: P) -> Result<Self, String> {
+        let f = File::open(&path).map_err(|e| format!("open shard: {e}"))?;
+        let mut input = BufReader::new(f);
+        let mut magic = [0u8; 8];
+        input.read_exact(&mut magic).map_err(|e| e.to_string())?;
+        if &magic != MAGIC {
+            return Err("bad shard magic".into());
+        }
+        let mut cnt = [0u8; 8];
+        input.read_exact(&mut cnt).map_err(|e| e.to_string())?;
+        Ok(ShardReader { input, remaining: u64::from_le_bytes(cnt) })
+    }
+
+    pub fn remaining(&self) -> u64 {
+        self.remaining
+    }
+
+    /// Next `(label, data)` record, or `None` at end.
+    #[allow(clippy::type_complexity)]
+    pub fn next_record(&mut self) -> Result<Option<(Vec<u8>, Vec<u8>)>, String> {
+        if self.remaining == 0 {
+            return Ok(None);
+        }
+        let mut hdr = [0u8; 8];
+        self.input.read_exact(&mut hdr).map_err(|e| e.to_string())?;
+        let label_len = u32::from_le_bytes(hdr[0..4].try_into().unwrap()) as usize;
+        let data_len = u32::from_le_bytes(hdr[4..8].try_into().unwrap()) as usize;
+        let mut label = vec![0u8; label_len];
+        let mut data = vec![0u8; data_len];
+        self.input.read_exact(&mut label).map_err(|e| e.to_string())?;
+        self.input.read_exact(&mut data).map_err(|e| e.to_string())?;
+        self.remaining -= 1;
+        Ok(Some((label, data)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("dtlsda_test_{name}_{}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let path = tmp("rt");
+        let mut w = ShardWriter::create(&path).unwrap();
+        for i in 0..10u32 {
+            w.append(&i.to_le_bytes(), &vec![i as u8; i as usize]).unwrap();
+        }
+        assert_eq!(w.finish().unwrap(), 10);
+
+        let mut r = ShardReader::open(&path).unwrap();
+        assert_eq!(r.remaining(), 10);
+        for i in 0..10u32 {
+            let (label, data) = r.next_record().unwrap().unwrap();
+            assert_eq!(label, i.to_le_bytes());
+            assert_eq!(data.len(), i as usize);
+        }
+        assert!(r.next_record().unwrap().is_none());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn empty_shard() {
+        let path = tmp("empty");
+        let w = ShardWriter::create(&path).unwrap();
+        assert_eq!(w.finish().unwrap(), 0);
+        let mut r = ShardReader::open(&path).unwrap();
+        assert!(r.next_record().unwrap().is_none());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let path = tmp("magic");
+        std::fs::write(&path, b"NOTASHARD0000000").unwrap();
+        assert!(ShardReader::open(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

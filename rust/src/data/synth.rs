@@ -1,0 +1,257 @@
+//! Synthetic datasets — the ImageNet substitution (DESIGN.md §4).
+//!
+//! Requirements: deterministic from a seed, cheap to generate, and
+//! *learnable* so convergence experiments (Fig. 3's error-vs-epoch
+//! curves) are meaningful:
+//! * [`ImageTask`] — each class is a fixed random spatial template;
+//!   samples are the template plus noise and a random brightness shift.
+//!   A CNN reaches low error quickly, and harder noise settings slow
+//!   convergence the way harder datasets do.
+//! * [`LmTask`] — byte sequences from a seeded order-1 Markov chain with
+//!   skewed transitions; cross-entropy has a known-ish floor and drops
+//!   as the model learns the transition table.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Class-conditional image classification task (NHWC f32 in [-1, 1]).
+#[derive(Debug, Clone)]
+pub struct ImageTask {
+    pub size: usize,
+    pub channels: usize,
+    pub classes: usize,
+    pub noise: f32,
+    templates: Vec<Vec<f32>>,
+}
+
+impl ImageTask {
+    pub fn new(size: usize, channels: usize, classes: usize, noise: f32, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x1111_2222_3333_4444);
+        let n = size * size * channels;
+        let templates = (0..classes)
+            .map(|_| (0..n).map(|_| rng.normal() as f32 * 0.7).collect())
+            .collect();
+        ImageTask { size, channels, classes, noise, templates }
+    }
+
+    /// The CNN artifact's task: 32x32x3, 10 classes.
+    pub fn cifar_like(seed: u64) -> Self {
+        ImageTask::new(32, 3, 10, 0.35, seed)
+    }
+
+    pub fn sample_bytes(&self) -> usize {
+        self.size * self.size * self.channels * 4
+    }
+
+    /// Generate sample `index` deterministically: (image, label).
+    pub fn sample(&self, index: u64) -> (Vec<f32>, i32) {
+        let mut rng = Rng::new(index.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xABCD);
+        let label = (rng.below(self.classes as u64)) as i32;
+        let shift = rng.normal() as f32 * 0.2;
+        let img = self.templates[label as usize]
+            .iter()
+            .map(|&t| (t + shift + rng.normal() as f32 * self.noise).clamp(-3.0, 3.0))
+            .collect();
+        (img, label)
+    }
+
+    /// Materialize a contiguous batch: (x: [n,h,w,c], y: [n]).
+    pub fn batch(&self, start: u64, n: usize) -> (Tensor, Vec<i32>) {
+        let mut xs = Vec::with_capacity(n * self.size * self.size * self.channels);
+        let mut ys = Vec::with_capacity(n);
+        for i in 0..n {
+            let (img, label) = self.sample(start + i as u64);
+            xs.extend_from_slice(&img);
+            ys.push(label);
+        }
+        (
+            Tensor::from_vec(&[n, self.size, self.size, self.channels], xs),
+            ys,
+        )
+    }
+}
+
+/// Order-1 Markov byte corpus for the LM artifacts.
+#[derive(Debug, Clone)]
+pub struct LmTask {
+    pub vocab: usize,
+    pub seq: usize,
+    /// transition[c] = skewed distribution over next bytes (CDF).
+    cdf: Vec<Vec<f64>>,
+}
+
+impl LmTask {
+    pub fn new(vocab: usize, seq: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x5555_AAAA);
+        // Each state strongly prefers ~4 successors (low-entropy chain —
+        // a model that learns it gets loss well under ln(vocab)).
+        let cdf = (0..vocab)
+            .map(|_| {
+                let mut weights = vec![0.01f64; vocab];
+                for _ in 0..4 {
+                    let j = rng.below(vocab as u64) as usize;
+                    weights[j] += 2.0 + rng.next_f64() * 4.0;
+                }
+                let total: f64 = weights.iter().sum();
+                let mut acc = 0.0;
+                weights
+                    .iter()
+                    .map(|w| {
+                        acc += w / total;
+                        acc
+                    })
+                    .collect()
+            })
+            .collect();
+        LmTask { vocab, seq, cdf }
+    }
+
+    /// The LM artifact's task: byte vocab 256, seq 64.
+    pub fn byte_level(seed: u64) -> Self {
+        LmTask::new(256, 64, seed)
+    }
+
+    fn next_byte(&self, state: usize, rng: &mut Rng) -> usize {
+        let u = rng.next_f64();
+        match self.cdf[state].binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+            Ok(i) | Err(i) => i.min(self.vocab - 1),
+        }
+    }
+
+    /// Sequence `index`: (inputs[seq], targets[seq]) with targets = next
+    /// byte (teacher forcing).
+    pub fn sample(&self, index: u64) -> (Vec<i32>, Vec<i32>) {
+        let mut rng = Rng::new(index.wrapping_mul(0xD134_2543_DE82_EF95) ^ 0xEF01);
+        let mut state = rng.below(self.vocab as u64) as usize;
+        let mut bytes = Vec::with_capacity(self.seq + 1);
+        bytes.push(state as i32);
+        for _ in 0..self.seq {
+            state = self.next_byte(state, &mut rng);
+            bytes.push(state as i32);
+        }
+        (bytes[..self.seq].to_vec(), bytes[1..].to_vec())
+    }
+
+    /// Batch of token id tensors encoded as f32 bit-patterns is avoided:
+    /// the runtime converts i32 directly; here we return raw id vectors.
+    pub fn batch(&self, start: u64, n: usize) -> (Vec<i32>, Vec<i32>) {
+        let mut xs = Vec::with_capacity(n * self.seq);
+        let mut ys = Vec::with_capacity(n * self.seq);
+        for i in 0..n {
+            let (x, y) = self.sample(start + i as u64);
+            xs.extend_from_slice(&x);
+            ys.extend_from_slice(&y);
+        }
+        (xs, ys)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_samples_deterministic() {
+        let t = ImageTask::cifar_like(7);
+        let (a, la) = t.sample(42);
+        let (b, lb) = t.sample(42);
+        assert_eq!(a, b);
+        assert_eq!(la, lb);
+        let (c, _) = t.sample(43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn image_labels_cover_classes() {
+        let t = ImageTask::cifar_like(7);
+        let mut seen = vec![false; t.classes];
+        for i in 0..500 {
+            let (_, l) = t.sample(i);
+            seen[l as usize] = true;
+        }
+        assert!(seen.iter().all(|&b| b), "all classes should appear");
+    }
+
+    #[test]
+    fn image_classes_are_separable() {
+        // Nearest-template classification should beat chance by a lot —
+        // otherwise Fig. 3 curves could never drop.
+        let t = ImageTask::cifar_like(3);
+        let mut correct = 0;
+        let total = 200;
+        for i in 0..total {
+            let (img, label) = t.sample(i);
+            let mut best = (f32::INFINITY, 0usize);
+            for (c, tmpl) in t.templates.iter().enumerate() {
+                let d: f32 = img
+                    .iter()
+                    .zip(tmpl)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                if d < best.0 {
+                    best = (d, c);
+                }
+            }
+            if best.1 == label as usize {
+                correct += 1;
+            }
+        }
+        assert!(
+            correct as f64 / total as f64 > 0.8,
+            "separability {correct}/{total}"
+        );
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let t = ImageTask::cifar_like(1);
+        let (x, y) = t.batch(0, 8);
+        assert_eq!(x.shape(), &[8, 32, 32, 3]);
+        assert_eq!(y.len(), 8);
+    }
+
+    #[test]
+    fn lm_deterministic_and_shifted() {
+        let t = LmTask::byte_level(9);
+        let (x, y) = t.sample(5);
+        let (x2, _) = t.sample(5);
+        assert_eq!(x, x2);
+        assert_eq!(x.len(), 64);
+        // Target is input shifted by one.
+        assert_eq!(&x[1..], &y[..63]);
+    }
+
+    #[test]
+    fn lm_chain_is_low_entropy() {
+        // Empirical conditional entropy must sit well below ln(256):
+        // that's what makes the LM loss curve fall.
+        let t = LmTask::byte_level(2);
+        let mut counts = std::collections::HashMap::new();
+        let mut ctx_counts = std::collections::HashMap::new();
+        for i in 0..400 {
+            let (x, y) = t.sample(i);
+            for (a, b) in x.iter().zip(&y) {
+                *counts.entry((*a, *b)).or_insert(0u32) += 1;
+                *ctx_counts.entry(*a).or_insert(0u32) += 1;
+            }
+        }
+        let mut h = 0.0f64;
+        let total: u32 = ctx_counts.values().sum();
+        for ((a, _), &c) in &counts {
+            let p_joint = c as f64 / total as f64;
+            let p_cond = c as f64 / ctx_counts[a] as f64;
+            h -= p_joint * p_cond.ln();
+        }
+        assert!(h < 3.0, "conditional entropy {h} should be far below ln256=5.55");
+    }
+
+    #[test]
+    fn lm_tokens_in_vocab() {
+        let t = LmTask::byte_level(4);
+        let (xs, ys) = t.batch(0, 4);
+        assert_eq!(xs.len(), 4 * 64);
+        for v in xs.iter().chain(&ys) {
+            assert!(*v >= 0 && (*v as usize) < t.vocab);
+        }
+    }
+}

@@ -1,0 +1,246 @@
+//! Exact branch-and-bound over the simplex LP relaxation.
+//!
+//! Minimizes `c·x` with some variables constrained integer (the Eq. 6
+//! instance is pure-binary: x_{k,l} ∈ {0,1}). Branching: most-fractional
+//! variable; bounding: LP relaxation objective vs incumbent; depth-first
+//! with best-bound tie-breaking is unnecessary at our sizes.
+
+use super::simplex::{solve_lp, Constraint, LpProblem, LpStatus};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum IlpStatus {
+    Optimal { x: Vec<f64>, objective: f64 },
+    Infeasible,
+}
+
+const INT_EPS: f64 = 1e-6;
+
+/// Solve `p` with the variables in `integer_mask` required integral.
+/// `upper_bounds[i]`, when finite, adds `x_i <= ub` (use 1.0 for 0/1).
+pub fn solve_ilp(p: &LpProblem, integer_mask: &[bool], upper_bounds: &[f64]) -> IlpStatus {
+    let n = p.objective.len();
+    assert_eq!(integer_mask.len(), n);
+    assert_eq!(upper_bounds.len(), n);
+
+    let mut base = p.clone();
+    for (i, &ub) in upper_bounds.iter().enumerate() {
+        if ub.is_finite() {
+            let mut row = vec![0.0; n];
+            row[i] = 1.0;
+            base.constraints.push(Constraint::le(row, ub));
+        }
+    }
+
+    let mut best: Option<(Vec<f64>, f64)> = None;
+    let mut stack = vec![base];
+    let mut nodes = 0usize;
+
+    while let Some(node) = stack.pop() {
+        nodes += 1;
+        if nodes > 200_000 {
+            panic!("branch&bound node explosion ({nodes}); instance too big for exact solve");
+        }
+        let (x, obj) = match solve_lp(&node) {
+            LpStatus::Optimal { x, objective } => (x, objective),
+            LpStatus::Infeasible => continue,
+            LpStatus::Unbounded => {
+                // Integral restriction of an unbounded LP is unbounded or
+                // infeasible; our advisor instances are bounded, so treat
+                // as a modelling error.
+                panic!("ILP relaxation unbounded — missing upper bounds?");
+            }
+        };
+        // Bound: relaxation can't beat the incumbent.
+        if let Some((_, inc)) = &best {
+            if obj >= inc - 1e-9 {
+                continue;
+            }
+        }
+        // Find most-fractional integer variable.
+        let mut frac_var: Option<(usize, f64)> = None;
+        for i in 0..n {
+            if integer_mask[i] {
+                let f = x[i] - x[i].floor();
+                let dist = (f - 0.5).abs();
+                if f > INT_EPS && f < 1.0 - INT_EPS {
+                    match frac_var {
+                        None => frac_var = Some((i, dist)),
+                        Some((_, bd)) if dist < bd => frac_var = Some((i, dist)),
+                        _ => {}
+                    }
+                }
+            }
+        }
+        match frac_var {
+            None => {
+                // Integral — candidate incumbent.
+                let rounded: Vec<f64> = x
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &v)| if integer_mask[i] { v.round() } else { v })
+                    .collect();
+                let better = best.as_ref().map_or(true, |(_, inc)| obj < inc - 1e-9);
+                if better {
+                    best = Some((rounded, obj));
+                }
+            }
+            Some((i, _)) => {
+                let floor = x[i].floor();
+                // x_i <= floor branch
+                let mut lo = node.clone();
+                let mut row = vec![0.0; n];
+                row[i] = 1.0;
+                lo.constraints.push(Constraint::le(row.clone(), floor));
+                // x_i >= floor + 1 branch
+                let mut hi = node;
+                hi.constraints.push(Constraint::ge(row, floor + 1.0));
+                stack.push(lo);
+                stack.push(hi);
+            }
+        }
+    }
+
+    match best {
+        Some((x, objective)) => IlpStatus::Optimal { x, objective },
+        None => IlpStatus::Infeasible,
+    }
+}
+
+/// Convenience for pure 0/1 problems.
+pub fn solve_binary(p: &LpProblem) -> IlpStatus {
+    let n = p.objective.len();
+    solve_ilp(p, &vec![true; n], &vec![1.0; n])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn knapsack_small() {
+        // max 10a + 6b + 4c s.t. a+b+c<=2 (binary) → min form.
+        let p = LpProblem {
+            objective: vec![-10.0, -6.0, -4.0],
+            constraints: vec![Constraint::le(vec![1.0, 1.0, 1.0], 2.0)],
+        };
+        match solve_binary(&p) {
+            IlpStatus::Optimal { x, objective } => {
+                assert!((objective + 16.0).abs() < 1e-6);
+                assert!((x[0] - 1.0).abs() < 1e-6);
+                assert!((x[1] - 1.0).abs() < 1e-6);
+                assert!(x[2].abs() < 1e-6);
+            }
+            s => panic!("{s:?}"),
+        }
+    }
+
+    #[test]
+    fn integrality_matters() {
+        // LP relaxation picks x=2.5; ILP must pick an integer.
+        // min -x s.t. 2x <= 5, x integer → x=2.
+        let p = LpProblem {
+            objective: vec![-1.0],
+            constraints: vec![Constraint::le(vec![2.0], 5.0)],
+        };
+        match solve_ilp(&p, &[true], &[f64::INFINITY]) {
+            IlpStatus::Optimal { x, objective } => {
+                assert!((x[0] - 2.0).abs() < 1e-6);
+                assert!((objective + 2.0).abs() < 1e-6);
+            }
+            s => panic!("{s:?}"),
+        }
+    }
+
+    #[test]
+    fn infeasible_binary() {
+        // a + b >= 3 with binaries is infeasible.
+        let p = LpProblem {
+            objective: vec![1.0, 1.0],
+            constraints: vec![Constraint::ge(vec![1.0, 1.0], 3.0)],
+        };
+        assert_eq!(solve_binary(&p), IlpStatus::Infeasible);
+    }
+
+    #[test]
+    fn assignment_constraint_like_eq6() {
+        // Two layers x two algos; per-layer exactly-one; memory cap forces
+        // the cheap algo on layer 2.
+        // vars: x11 x12 x21 x22 ; times 5 2 7 3 ; mem 1 4 1 6 ; cap 6
+        let p = LpProblem {
+            objective: vec![5.0, 2.0, 7.0, 3.0],
+            constraints: vec![
+                Constraint::eq(vec![1.0, 1.0, 0.0, 0.0], 1.0),
+                Constraint::eq(vec![0.0, 0.0, 1.0, 1.0], 1.0),
+                Constraint::le(vec![1.0, 4.0, 1.0, 6.0], 6.0),
+            ],
+        };
+        match solve_binary(&p) {
+            IlpStatus::Optimal { x, objective } => {
+                // best: x12 (t=2,m=4) + x21 (t=7,m=1) → t=9, m=5 <= 6
+                assert!((objective - 9.0).abs() < 1e-6, "obj={objective} x={x:?}");
+                assert!((x[1] - 1.0).abs() < 1e-6);
+                assert!((x[2] - 1.0).abs() < 1e-6);
+            }
+            s => panic!("{s:?}"),
+        }
+    }
+
+    /// Property: B&B matches exhaustive enumeration on random small
+    /// binary knapsack-with-assignment instances (the Eq. 6 family).
+    #[test]
+    fn matches_bruteforce_random() {
+        let mut rng = Rng::new(0xDEADBEEF);
+        for _case in 0..60 {
+            let layers = 1 + (rng.below(3) as usize);
+            let algos = 2 + (rng.below(2) as usize);
+            let n = layers * algos;
+            let times: Vec<f64> = (0..n).map(|_| 1.0 + rng.next_f64() * 9.0).collect();
+            let mems: Vec<f64> = (0..n).map(|_| 1.0 + rng.next_f64() * 9.0).collect();
+            let cap = layers as f64 * (2.0 + rng.next_f64() * 6.0);
+
+            let mut cons = Vec::new();
+            for l in 0..layers {
+                let mut row = vec![0.0; n];
+                for a in 0..algos {
+                    row[l * algos + a] = 1.0;
+                }
+                cons.push(Constraint::eq(row, 1.0));
+            }
+            cons.push(Constraint::le(mems.clone(), cap));
+            let p = LpProblem {
+                objective: times.clone(),
+                constraints: cons,
+            };
+
+            // brute force
+            let mut best: Option<f64> = None;
+            let combos = (algos as u32).pow(layers as u32);
+            for combo in 0..combos {
+                let mut c = combo;
+                let mut t = 0.0;
+                let mut m = 0.0;
+                for l in 0..layers {
+                    let a = (c % algos as u32) as usize;
+                    c /= algos as u32;
+                    t += times[l * algos + a];
+                    m += mems[l * algos + a];
+                }
+                if m <= cap + 1e-9 {
+                    best = Some(best.map_or(t, |b: f64| b.min(t)));
+                }
+            }
+
+            match (solve_binary(&p), best) {
+                (IlpStatus::Optimal { objective, .. }, Some(b)) => {
+                    assert!(
+                        (objective - b).abs() < 1e-6,
+                        "bb {objective} vs brute {b}"
+                    );
+                }
+                (IlpStatus::Infeasible, None) => {}
+                (got, want) => panic!("bb {got:?} vs brute {want:?}"),
+            }
+        }
+    }
+}

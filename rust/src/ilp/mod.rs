@@ -1,0 +1,15 @@
+//! Integer linear programming — the GLPK substitute the paper's §3.1.3
+//! mini-batch optimization (Eq. 6) calls for.
+//!
+//! * [`simplex`]: dense two-phase primal simplex over standard-form LPs.
+//! * [`branch_bound`]: exact 0/1 + general-integer branch-and-bound using
+//!   the LP relaxation as the bound.
+//!
+//! Eq. 6 instances are tiny (layers × algorithms ≤ a few dozen binaries),
+//! so an exact solver is both feasible and preferable to a heuristic.
+
+pub mod branch_bound;
+pub mod simplex;
+
+pub use branch_bound::{solve_ilp, IlpStatus};
+pub use simplex::{solve_lp, Constraint, LpProblem, LpStatus, Relation};

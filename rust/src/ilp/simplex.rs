@@ -1,0 +1,383 @@
+//! Dense two-phase primal simplex.
+//!
+//! Problem form: minimize `c·x` subject to linear constraints
+//! (`<=`, `>=`, `==`) and `x >= 0` (upper bounds are expressed as
+//! constraints by the caller; `branch_bound` adds them during branching).
+//!
+//! Implementation: standard tableau simplex with Bland's rule (no
+//! cycling), phase I artificial variables, phase II optimization.
+//! Dense is fine — advisor instances have tens of variables.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Relation {
+    Le,
+    Ge,
+    Eq,
+}
+
+#[derive(Debug, Clone)]
+pub struct Constraint {
+    pub coeffs: Vec<f64>,
+    pub rel: Relation,
+    pub rhs: f64,
+}
+
+impl Constraint {
+    pub fn le(coeffs: Vec<f64>, rhs: f64) -> Self {
+        Constraint { coeffs, rel: Relation::Le, rhs }
+    }
+
+    pub fn ge(coeffs: Vec<f64>, rhs: f64) -> Self {
+        Constraint { coeffs, rel: Relation::Ge, rhs }
+    }
+
+    pub fn eq(coeffs: Vec<f64>, rhs: f64) -> Self {
+        Constraint { coeffs, rel: Relation::Eq, rhs }
+    }
+}
+
+/// minimize `objective · x` s.t. `constraints`, `x >= 0`.
+#[derive(Debug, Clone, Default)]
+pub struct LpProblem {
+    pub objective: Vec<f64>,
+    pub constraints: Vec<Constraint>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum LpStatus {
+    Optimal { x: Vec<f64>, objective: f64 },
+    Infeasible,
+    Unbounded,
+}
+
+const EPS: f64 = 1e-9;
+
+/// Solve with two-phase tableau simplex.
+pub fn solve_lp(p: &LpProblem) -> LpStatus {
+    let n = p.objective.len();
+    let m = p.constraints.len();
+    for c in &p.constraints {
+        assert_eq!(c.coeffs.len(), n, "constraint arity mismatch");
+    }
+
+    // Build standard form: every row gets rhs >= 0; slack/surplus columns
+    // for Le/Ge; artificial columns for Ge/Eq rows (and Le rows whose rhs
+    // flipped sign).
+    #[derive(Clone, Copy, PartialEq)]
+    enum Extra {
+        Slack(usize),
+        Artificial(usize),
+    }
+    let mut rows: Vec<(Vec<f64>, f64, Relation)> = Vec::with_capacity(m);
+    for c in &p.constraints {
+        let (mut coeffs, mut rhs, mut rel) = (c.coeffs.clone(), c.rhs, c.rel);
+        if rhs < 0.0 {
+            for a in &mut coeffs {
+                *a = -*a;
+            }
+            rhs = -rhs;
+            rel = match rel {
+                Relation::Le => Relation::Ge,
+                Relation::Ge => Relation::Le,
+                Relation::Eq => Relation::Eq,
+            };
+        }
+        rows.push((coeffs, rhs, rel));
+    }
+
+    let mut slack_cols = 0usize;
+    let mut art_cols = 0usize;
+    let mut row_extra: Vec<(Option<Extra>, Option<Extra>)> = Vec::with_capacity(m);
+    for (_, _, rel) in &rows {
+        match rel {
+            Relation::Le => {
+                row_extra.push((Some(Extra::Slack(slack_cols)), None));
+                slack_cols += 1;
+            }
+            Relation::Ge => {
+                row_extra.push((
+                    Some(Extra::Slack(slack_cols)),
+                    Some(Extra::Artificial(art_cols)),
+                ));
+                slack_cols += 1;
+                art_cols += 1;
+            }
+            Relation::Eq => {
+                row_extra.push((None, Some(Extra::Artificial(art_cols))));
+                art_cols += 1;
+            }
+        }
+    }
+
+    let total = n + slack_cols + art_cols;
+    // Tableau: m rows x (total + 1) columns (last = rhs).
+    let mut t = vec![vec![0.0f64; total + 1]; m];
+    let mut basis = vec![usize::MAX; m];
+    for (i, (coeffs, rhs, rel)) in rows.iter().enumerate() {
+        t[i][..n].copy_from_slice(coeffs);
+        t[i][total] = *rhs;
+        let (slack, art) = row_extra[i];
+        if let Some(Extra::Slack(s)) = slack {
+            let sign = if *rel == Relation::Ge { -1.0 } else { 1.0 };
+            t[i][n + s] = sign;
+            if *rel == Relation::Le {
+                basis[i] = n + s;
+            }
+        }
+        if let Some(Extra::Artificial(a)) = art {
+            t[i][n + slack_cols + a] = 1.0;
+            basis[i] = n + slack_cols + a;
+        }
+    }
+    debug_assert!(basis.iter().all(|&b| b != usize::MAX));
+
+    // ---- phase I: minimize sum of artificials -------------------------
+    if art_cols > 0 {
+        let mut obj = vec![0.0f64; total + 1];
+        for a in 0..art_cols {
+            obj[n + slack_cols + a] = 1.0;
+        }
+        // Price out basic artificials.
+        let mut z = vec![0.0f64; total + 1];
+        for (i, &b) in basis.iter().enumerate() {
+            if b >= n + slack_cols {
+                for j in 0..=total {
+                    z[j] += t[i][j];
+                }
+            }
+        }
+        let reduced: Vec<f64> = (0..=total).map(|j| obj[j] - z[j]).collect();
+        let mut red = reduced;
+        if !pivot_loop(&mut t, &mut basis, &mut red, total) {
+            return LpStatus::Unbounded; // cannot happen in phase I
+        }
+        let phase1_obj = -red[total];
+        if phase1_obj > 1e-7 {
+            return LpStatus::Infeasible;
+        }
+        // Drive any remaining basic artificials out of the basis.
+        for i in 0..m {
+            if basis[i] >= n + slack_cols {
+                if let Some(j) = (0..n + slack_cols).find(|&j| t[i][j].abs() > EPS) {
+                    pivot(&mut t, &mut red, i, j);
+                    basis[i] = j;
+                }
+                // else: redundant row; harmless.
+            }
+        }
+    }
+
+    // ---- phase II: minimize the real objective ------------------------
+    let mut obj = vec![0.0f64; total + 1];
+    obj[..n].copy_from_slice(&p.objective);
+    // Artificials must not re-enter: give them +inf-ish cost by exclusion
+    // (we simply bar them in the pivot column choice via `limit`).
+    let limit = n + slack_cols;
+    let mut z = vec![0.0f64; total + 1];
+    for (i, &b) in basis.iter().enumerate() {
+        let cb = if b < n { p.objective[b] } else { 0.0 };
+        if cb != 0.0 {
+            for j in 0..=total {
+                z[j] += cb * t[i][j];
+            }
+        }
+    }
+    let mut red: Vec<f64> = (0..=total).map(|j| obj[j] - z[j]).collect();
+    if !pivot_loop_limited(&mut t, &mut basis, &mut red, total, limit) {
+        return LpStatus::Unbounded;
+    }
+
+    let mut x = vec![0.0f64; n];
+    for (i, &b) in basis.iter().enumerate() {
+        if b < n {
+            x[b] = t[i][total];
+        }
+    }
+    let objective = p.objective.iter().zip(&x).map(|(c, v)| c * v).sum();
+    LpStatus::Optimal { x, objective }
+}
+
+fn pivot(t: &mut [Vec<f64>], red: &mut [f64], row: usize, col: usize) {
+    let piv = t[row][col];
+    debug_assert!(piv.abs() > EPS);
+    let w = t[row].len();
+    for j in 0..w {
+        t[row][j] /= piv;
+    }
+    for i in 0..t.len() {
+        if i != row && t[i][col].abs() > EPS {
+            let f = t[i][col];
+            for j in 0..w {
+                t[i][j] -= f * t[row][j];
+            }
+        }
+    }
+    if red[col].abs() > EPS {
+        let f = red[col];
+        for j in 0..w {
+            red[j] -= f * t[row][j];
+        }
+    }
+}
+
+fn pivot_loop(t: &mut [Vec<f64>], basis: &mut [usize], red: &mut [f64], total: usize) -> bool {
+    pivot_loop_limited(t, basis, red, total, total)
+}
+
+/// Returns false on unboundedness. Bland's rule (least-index entering and
+/// leaving) guarantees termination.
+fn pivot_loop_limited(
+    t: &mut [Vec<f64>],
+    basis: &mut [usize],
+    red: &mut [f64],
+    total: usize,
+    col_limit: usize,
+) -> bool {
+    let m = t.len();
+    loop {
+        // Entering column: first with negative reduced cost (Bland).
+        let Some(col) = (0..col_limit.min(total)).find(|&j| red[j] < -EPS) else {
+            return true; // optimal
+        };
+        // Leaving row: min ratio, ties by least basis index (Bland).
+        let mut best: Option<(usize, f64)> = None;
+        for i in 0..m {
+            if t[i][col] > EPS {
+                let ratio = t[i][total] / t[i][col];
+                match best {
+                    None => best = Some((i, ratio)),
+                    Some((bi, br)) => {
+                        if ratio < br - EPS || (ratio < br + EPS && basis[i] < basis[bi]) {
+                            best = Some((i, ratio));
+                        }
+                    }
+                }
+            }
+        }
+        let Some((row, _)) = best else {
+            return false; // unbounded
+        };
+        pivot(t, red, row, col);
+        basis[row] = col;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opt(p: &LpProblem) -> (Vec<f64>, f64) {
+        match solve_lp(p) {
+            LpStatus::Optimal { x, objective } => (x, objective),
+            s => panic!("expected optimal, got {s:?}"),
+        }
+    }
+
+    #[test]
+    fn basic_le() {
+        // min -x - 2y s.t. x + y <= 4, x <= 2  → x=0, y=4, obj -8
+        let p = LpProblem {
+            objective: vec![-1.0, -2.0],
+            constraints: vec![
+                Constraint::le(vec![1.0, 1.0], 4.0),
+                Constraint::le(vec![1.0, 0.0], 2.0),
+            ],
+        };
+        let (x, obj) = opt(&p);
+        assert!((obj + 8.0).abs() < 1e-6, "obj={obj}");
+        assert!(x[0].abs() < 1e-6);
+        assert!((x[1] - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ge_and_eq_need_phase1() {
+        // min x + y s.t. x + y >= 3, x == 1 → y=2, obj 3
+        let p = LpProblem {
+            objective: vec![1.0, 1.0],
+            constraints: vec![
+                Constraint::ge(vec![1.0, 1.0], 3.0),
+                Constraint::eq(vec![1.0, 0.0], 1.0),
+            ],
+        };
+        let (x, obj) = opt(&p);
+        assert!((obj - 3.0).abs() < 1e-6);
+        assert!((x[0] - 1.0).abs() < 1e-6);
+        assert!((x[1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let p = LpProblem {
+            objective: vec![1.0],
+            constraints: vec![
+                Constraint::le(vec![1.0], 1.0),
+                Constraint::ge(vec![1.0], 2.0),
+            ],
+        };
+        assert_eq!(solve_lp(&p), LpStatus::Infeasible);
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        // min -x, x >= 0 unbounded below.
+        let p = LpProblem {
+            objective: vec![-1.0],
+            constraints: vec![Constraint::ge(vec![1.0], 0.0)],
+        };
+        assert_eq!(solve_lp(&p), LpStatus::Unbounded);
+    }
+
+    #[test]
+    fn negative_rhs_normalized() {
+        // min x s.t. -x <= -2  (i.e. x >= 2)
+        let p = LpProblem {
+            objective: vec![1.0],
+            constraints: vec![Constraint::le(vec![-1.0], -2.0)],
+        };
+        let (x, obj) = opt(&p);
+        assert!((x[0] - 2.0).abs() < 1e-6);
+        assert!((obj - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn degenerate_no_cycle() {
+        // Klee-Minty-ish degenerate instance; Bland's rule must terminate.
+        let p = LpProblem {
+            objective: vec![-0.75, 150.0, -0.02, 6.0],
+            constraints: vec![
+                Constraint::le(vec![0.25, -60.0, -0.04, 9.0], 0.0),
+                Constraint::le(vec![0.5, -90.0, -0.02, 3.0], 0.0),
+                Constraint::le(vec![0.0, 0.0, 1.0, 0.0], 1.0),
+            ],
+        };
+        let (_, obj) = opt(&p);
+        assert!((obj + 0.05).abs() < 1e-6, "obj={obj}");
+    }
+
+    #[test]
+    fn matches_bruteforce_on_grid() {
+        // min c·x over box-and-sum constraints; compare with a fine grid.
+        let p = LpProblem {
+            objective: vec![2.0, 3.0],
+            constraints: vec![
+                Constraint::ge(vec![1.0, 2.0], 4.0),
+                Constraint::le(vec![1.0, 1.0], 10.0),
+            ],
+        };
+        let (_, obj) = opt(&p);
+        let mut best = f64::INFINITY;
+        let step = 0.01;
+        let mut x0 = 0.0;
+        while x0 <= 10.0 {
+            let mut x1: f64 = 0.0;
+            while x1 <= 10.0 {
+                if x0 + 2.0 * x1 >= 4.0 - 1e-9 && x0 + x1 <= 10.0 + 1e-9 {
+                    best = best.min(2.0 * x0 + 3.0 * x1);
+                }
+                x1 += step;
+            }
+            x0 += step;
+        }
+        assert!((obj - best).abs() < 0.05, "simplex {obj} vs grid {best}");
+    }
+}

@@ -1,0 +1,30 @@
+//! dtlsda — Distributed Training of Large-Scale Deep Architectures.
+//!
+//! Production-shaped reproduction of Zou et al., "Distributed Training
+//! Large-Scale Deep Architectures" (HTC Research, 2017): a rust
+//! coordinator (parameter servers, worker pipeline, configuration
+//! advisor) driving AOT-compiled JAX/Pallas compute via PJRT.
+//!
+//! Layering (see DESIGN.md):
+//! - `advisor` — the paper's contribution: mini-batch ILP (Eq. 6),
+//!   Lemma 3.1 (multi-GPU efficiency), Lemma 3.2 (PS sizing).
+//! - `ps` / `worker` / `coordinator` / `net` / `data` — the distributed
+//!   training system those guidelines configure.
+//! - `sim` — analytic device/cluster models standing in for K80 testbeds.
+//! - `runtime` — PJRT execution of `artifacts/*.hlo.txt`.
+//! - `ilp`, `tensor`, `util` — from-scratch substrates.
+
+pub mod advisor;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod ilp;
+pub mod net;
+pub mod ps;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod util;
+pub mod worker;
+
+pub use cli::cli_main;

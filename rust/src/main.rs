@@ -1,0 +1,5 @@
+//! Leader entrypoint — see `cli` module for subcommands.
+fn main() {
+    dtlsda::util::logfmt::level_from_env();
+    std::process::exit(dtlsda::cli_main());
+}

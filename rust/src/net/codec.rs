@@ -1,0 +1,245 @@
+//! Binary wire codec (serde substitute).
+//!
+//! Little-endian, length-prefixed primitives. `Writer` appends into a
+//! reusable byte buffer; `Reader` is a zero-copy cursor over a received
+//! frame. Tensors are encoded as shape + raw f32 payload; on the hot
+//! path the payload is appended with a single bulk copy.
+
+use crate::tensor::Tensor;
+
+/// Append-only encoder over an owned buffer.
+#[derive(Debug, Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Writer { buf: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Writer { buf: Vec::with_capacity(n) }
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn str(&mut self, v: &str) {
+        self.bytes(v.as_bytes());
+    }
+
+    /// f32 slice with one bulk copy (hot path: gradients/parameters).
+    pub fn f32_slice(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        let start = self.buf.len();
+        self.buf.resize(start + v.len() * 4, 0);
+        // Safe per-element encode; LLVM vectorizes this loop.
+        for (i, x) in v.iter().enumerate() {
+            self.buf[start + i * 4..start + i * 4 + 4].copy_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn tensor(&mut self, t: &Tensor) {
+        self.u32(t.shape().len() as u32);
+        for d in t.shape() {
+            self.u32(*d as u32);
+        }
+        self.f32_slice(t.data());
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+/// Cursor decoder over a borrowed frame.
+#[derive(Debug)]
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.buf.len() {
+            return Err(format!(
+                "frame underrun: need {n} bytes at {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32, String> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, String> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32, String> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, String> {
+        let b = self.take(8)?;
+        Ok(f64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    pub fn bytes(&mut self) -> Result<&'a [u8], String> {
+        let n = self.u32()? as usize;
+        self.take(n)
+    }
+
+    pub fn str(&mut self) -> Result<String, String> {
+        let b = self.bytes()?;
+        String::from_utf8(b.to_vec()).map_err(|e| format!("invalid utf8: {e}"))
+    }
+
+    pub fn f32_vec(&mut self) -> Result<Vec<f32>, String> {
+        let n = self.u32()? as usize;
+        let b = self.take(n * 4)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn tensor(&mut self) -> Result<Tensor, String> {
+        let rank = self.u32()? as usize;
+        if rank > 16 {
+            return Err(format!("implausible tensor rank {rank}"));
+        }
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(self.u32()? as usize);
+        }
+        let data = self.f32_vec()?;
+        if shape.iter().product::<usize>() != data.len() {
+            return Err(format!(
+                "tensor shape {shape:?} disagrees with payload {}",
+                data.len()
+            ));
+        }
+        Ok(Tensor::from_vec(&shape, data))
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut w = Writer::new();
+        w.u8(7);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX);
+        w.f32(-1.5);
+        w.f64(std::f64::consts::PI);
+        w.str("héllo");
+        let buf = w.finish();
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX);
+        assert_eq!(r.f32().unwrap(), -1.5);
+        assert_eq!(r.f64().unwrap(), std::f64::consts::PI);
+        assert_eq!(r.str().unwrap(), "héllo");
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn tensor_roundtrip() {
+        let t = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let mut w = Writer::new();
+        w.tensor(&t);
+        let buf = w.finish();
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.tensor().unwrap(), t);
+    }
+
+    #[test]
+    fn underrun_detected() {
+        let mut r = Reader::new(&[1, 2]);
+        assert!(r.u32().is_err());
+    }
+
+    #[test]
+    fn corrupt_tensor_shape_detected() {
+        let mut w = Writer::new();
+        w.u32(1); // rank 1
+        w.u32(10); // shape [10]
+        w.f32_slice(&[1.0, 2.0]); // only 2 elements
+        let buf = w.finish();
+        assert!(Reader::new(&buf).tensor().is_err());
+    }
+
+    #[test]
+    fn prop_roundtrip_random_tensors() {
+        prop::run(50, 0xC0DEC, |g| {
+            let rank = g.usize(0, 3);
+            let shape: Vec<usize> = (0..rank).map(|_| g.usize(1, 8)).collect();
+            let n: usize = shape.iter().product();
+            let data = g.vec_f32(n, -1e6, 1e6);
+            let t = Tensor::from_vec(&shape, data);
+            let mut w = Writer::new();
+            w.tensor(&t);
+            w.str("trailer");
+            let buf = w.finish();
+            let mut r = Reader::new(&buf);
+            assert_eq!(r.tensor().unwrap(), t);
+            assert_eq!(r.str().unwrap(), "trailer");
+        });
+    }
+}

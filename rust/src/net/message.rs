@@ -1,0 +1,218 @@
+//! Parameter-server wire protocol (Fig. 1 steps 1 and 7).
+//!
+//! Workers `Pull` the latest parameter shard values at the start of a
+//! mini-batch (step 1, "parameter refresh") and `Push` gradient deltas
+//! after compute (step 7, "distributed update"). `Barrier` supports
+//! synchronous SGD; `Stats`/`Shutdown` are control-plane.
+
+use super::codec::{Reader, Writer};
+use crate::tensor::Tensor;
+
+/// Protocol messages. `key` identifies a parameter tensor (its index in
+/// the artifact manifest); routing to servers is the `ps::router`'s job.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// Worker -> server: request current values of `keys`.
+    Pull { worker: u32, keys: Vec<u32> },
+    /// Server -> worker: requested values with the server's clock.
+    PullReply { clock: u64, entries: Vec<(u32, Tensor)> },
+    /// Worker -> server: gradients for `entries` (step `step` at worker).
+    Push { worker: u32, step: u64, entries: Vec<(u32, Tensor)> },
+    /// Server -> worker: push accepted (async mode acks immediately).
+    PushAck { clock: u64 },
+    /// Worker -> server: enter sync barrier for `step`.
+    Barrier { worker: u32, step: u64 },
+    /// Server -> worker: barrier released, proceed to `step`.
+    BarrierRelease { step: u64 },
+    /// Control: ask the server for counters.
+    Stats,
+    /// Server -> control: counters.
+    StatsReply { pulls: u64, pushes: u64, updates: u64 },
+    /// Control: stop serving.
+    Shutdown,
+    /// Either direction: protocol error.
+    Error { what: String },
+}
+
+const T_PULL: u8 = 1;
+const T_PULL_REPLY: u8 = 2;
+const T_PUSH: u8 = 3;
+const T_PUSH_ACK: u8 = 4;
+const T_BARRIER: u8 = 5;
+const T_BARRIER_RELEASE: u8 = 6;
+const T_STATS: u8 = 7;
+const T_STATS_REPLY: u8 = 8;
+const T_SHUTDOWN: u8 = 9;
+const T_ERROR: u8 = 10;
+
+impl Message {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::with_capacity(64);
+        match self {
+            Message::Pull { worker, keys } => {
+                w.u8(T_PULL);
+                w.u32(*worker);
+                w.u32(keys.len() as u32);
+                for k in keys {
+                    w.u32(*k);
+                }
+            }
+            Message::PullReply { clock, entries } => {
+                w.u8(T_PULL_REPLY);
+                w.u64(*clock);
+                w.u32(entries.len() as u32);
+                for (k, t) in entries {
+                    w.u32(*k);
+                    w.tensor(t);
+                }
+            }
+            Message::Push { worker, step, entries } => {
+                w.u8(T_PUSH);
+                w.u32(*worker);
+                w.u64(*step);
+                w.u32(entries.len() as u32);
+                for (k, t) in entries {
+                    w.u32(*k);
+                    w.tensor(t);
+                }
+            }
+            Message::PushAck { clock } => {
+                w.u8(T_PUSH_ACK);
+                w.u64(*clock);
+            }
+            Message::Barrier { worker, step } => {
+                w.u8(T_BARRIER);
+                w.u32(*worker);
+                w.u64(*step);
+            }
+            Message::BarrierRelease { step } => {
+                w.u8(T_BARRIER_RELEASE);
+                w.u64(*step);
+            }
+            Message::Stats => w.u8(T_STATS),
+            Message::StatsReply { pulls, pushes, updates } => {
+                w.u8(T_STATS_REPLY);
+                w.u64(*pulls);
+                w.u64(*pushes);
+                w.u64(*updates);
+            }
+            Message::Shutdown => w.u8(T_SHUTDOWN),
+            Message::Error { what } => {
+                w.u8(T_ERROR);
+                w.str(what);
+            }
+        }
+        w.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Message, String> {
+        let mut r = Reader::new(buf);
+        let tag = r.u8()?;
+        let msg = match tag {
+            T_PULL => {
+                let worker = r.u32()?;
+                let n = r.u32()? as usize;
+                let mut keys = Vec::with_capacity(n);
+                for _ in 0..n {
+                    keys.push(r.u32()?);
+                }
+                Message::Pull { worker, keys }
+            }
+            T_PULL_REPLY => {
+                let clock = r.u64()?;
+                let n = r.u32()? as usize;
+                let mut entries = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let k = r.u32()?;
+                    entries.push((k, r.tensor()?));
+                }
+                Message::PullReply { clock, entries }
+            }
+            T_PUSH => {
+                let worker = r.u32()?;
+                let step = r.u64()?;
+                let n = r.u32()? as usize;
+                let mut entries = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let k = r.u32()?;
+                    entries.push((k, r.tensor()?));
+                }
+                Message::Push { worker, step, entries }
+            }
+            T_PUSH_ACK => Message::PushAck { clock: r.u64()? },
+            T_BARRIER => Message::Barrier { worker: r.u32()?, step: r.u64()? },
+            T_BARRIER_RELEASE => Message::BarrierRelease { step: r.u64()? },
+            T_STATS => Message::Stats,
+            T_STATS_REPLY => Message::StatsReply {
+                pulls: r.u64()?,
+                pushes: r.u64()?,
+                updates: r.u64()?,
+            },
+            T_SHUTDOWN => Message::Shutdown,
+            T_ERROR => Message::Error { what: r.str()? },
+            other => return Err(format!("unknown message tag {other}")),
+        };
+        if r.remaining() != 0 {
+            return Err(format!("{} trailing bytes after message", r.remaining()));
+        }
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn roundtrip(m: Message) {
+        let buf = m.encode();
+        assert_eq!(Message::decode(&buf).unwrap(), m);
+    }
+
+    #[test]
+    fn all_variants_roundtrip() {
+        roundtrip(Message::Pull { worker: 3, keys: vec![0, 5, 9] });
+        roundtrip(Message::PullReply {
+            clock: 42,
+            entries: vec![(1, Tensor::from_vec(&[2], vec![1.0, 2.0]))],
+        });
+        roundtrip(Message::Push {
+            worker: 1,
+            step: 7,
+            entries: vec![(0, Tensor::scalar(1.5)), (2, Tensor::zeros(&[3, 3]))],
+        });
+        roundtrip(Message::PushAck { clock: 9 });
+        roundtrip(Message::Barrier { worker: 2, step: 11 });
+        roundtrip(Message::BarrierRelease { step: 11 });
+        roundtrip(Message::Stats);
+        roundtrip(Message::StatsReply { pulls: 1, pushes: 2, updates: 3 });
+        roundtrip(Message::Shutdown);
+        roundtrip(Message::Error { what: "boom".into() });
+    }
+
+    #[test]
+    fn rejects_unknown_tag() {
+        assert!(Message::decode(&[99]).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut buf = Message::Stats.encode();
+        buf.push(0);
+        assert!(Message::decode(&buf).is_err());
+    }
+
+    #[test]
+    fn prop_push_roundtrip() {
+        prop::run(40, 0x3355, |g| {
+            let n = g.usize(0, 5);
+            let entries: Vec<(u32, Tensor)> = (0..n)
+                .map(|i| {
+                    let len = g.usize(1, 64);
+                    (i as u32, Tensor::from_vec(&[len], g.vec_f32(len, -10.0, 10.0)))
+                })
+                .collect();
+            roundtrip(Message::Push { worker: g.u64(0, 100) as u32, step: g.u64(0, 1 << 40), entries });
+        });
+    }
+}

@@ -1,0 +1,10 @@
+//! Networking substrate: binary codec, protocol messages, and framed
+//! transports (TCP and in-process) for the parameter-server protocol.
+
+pub mod codec;
+pub mod message;
+pub mod transport;
+
+pub use codec::{Reader, Writer};
+pub use message::Message;
+pub use transport::{connect, listen, InProcTransport, TcpTransport, Transport};

@@ -1,0 +1,198 @@
+//! Worker-side parameter-server client: fans pull/push/barrier out to
+//! every server per the [`Router`] placement and reassembles full
+//! parameter vectors in manifest order.
+
+use super::router::Router;
+use crate::net::message::Message;
+use crate::net::transport::Transport;
+use crate::tensor::Tensor;
+
+/// Connections to all parameter servers, in router server order.
+pub struct PsClient {
+    worker_id: u32,
+    transports: Vec<Box<dyn Transport>>,
+    router: Router,
+}
+
+impl PsClient {
+    pub fn new(worker_id: u32, transports: Vec<Box<dyn Transport>>, router: Router) -> Self {
+        assert_eq!(
+            transports.len(),
+            router.n_servers(),
+            "one transport per server"
+        );
+        PsClient { worker_id, transports, router }
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Pull every key; returns tensors in key order (the artifact's
+    /// parameter order). Fig. 1 step 1, "parameter refresh".
+    pub fn pull_all(&mut self) -> Result<Vec<Tensor>, String> {
+        let n_keys = self.router.n_keys();
+        let mut out: Vec<Option<Tensor>> = (0..n_keys).map(|_| None).collect();
+        // Send all requests first (the transfers overlap on the wire),
+        // then collect replies.
+        for s in 0..self.transports.len() {
+            let keys = self.router.keys_of(s).to_vec();
+            if keys.is_empty() {
+                continue;
+            }
+            self.transports[s].send(&Message::Pull { worker: self.worker_id, keys })?;
+        }
+        for s in 0..self.transports.len() {
+            if self.router.keys_of(s).is_empty() {
+                continue;
+            }
+            match self.transports[s].recv()? {
+                Message::PullReply { entries, .. } => {
+                    for (k, t) in entries {
+                        out[k as usize] = Some(t);
+                    }
+                }
+                Message::Error { what } => return Err(format!("server {s}: {what}")),
+                m => return Err(format!("unexpected pull reply {m:?}")),
+            }
+        }
+        out.into_iter()
+            .enumerate()
+            .map(|(k, t)| t.ok_or_else(|| format!("server never returned key {k}")))
+            .collect()
+    }
+
+    /// Push per-key gradients (indexed by key). Fig. 1 step 7.
+    pub fn push(&mut self, step: u64, grads: &[Tensor]) -> Result<(), String> {
+        assert_eq!(grads.len(), self.router.n_keys());
+        for s in 0..self.transports.len() {
+            let entries: Vec<(u32, Tensor)> = self
+                .router
+                .keys_of(s)
+                .iter()
+                .map(|&k| (k, grads[k as usize].clone()))
+                .collect();
+            if entries.is_empty() {
+                continue;
+            }
+            self.transports[s].send(&Message::Push {
+                worker: self.worker_id,
+                step,
+                entries,
+            })?;
+        }
+        for s in 0..self.transports.len() {
+            if self.router.keys_of(s).is_empty() {
+                continue;
+            }
+            match self.transports[s].recv()? {
+                Message::PushAck { .. } => {}
+                Message::Error { what } => return Err(format!("server {s}: {what}")),
+                m => return Err(format!("unexpected push reply {m:?}")),
+            }
+        }
+        Ok(())
+    }
+
+    /// Enter the synchronous barrier for `step` on every server.
+    pub fn barrier(&mut self, step: u64) -> Result<(), String> {
+        for t in &mut self.transports {
+            t.send(&Message::Barrier { worker: self.worker_id, step })?;
+        }
+        for t in &mut self.transports {
+            match t.recv()? {
+                Message::BarrierRelease { .. } => {}
+                m => return Err(format!("unexpected barrier reply {m:?}")),
+            }
+        }
+        Ok(())
+    }
+
+    /// Fetch aggregate counters across servers.
+    pub fn stats(&mut self) -> Result<(u64, u64, u64), String> {
+        let (mut pulls, mut pushes, mut updates) = (0, 0, 0);
+        for t in &mut self.transports {
+            t.send(&Message::Stats)?;
+            match t.recv()? {
+                Message::StatsReply { pulls: a, pushes: b, updates: c } => {
+                    pulls += a;
+                    pushes += b;
+                    updates += c;
+                }
+                m => return Err(format!("unexpected stats reply {m:?}")),
+            }
+        }
+        Ok((pulls, pushes, updates))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::transport::InProcTransport;
+    use crate::ps::server::{serve, PsShared, UpdateMode};
+    use crate::ps::shard::{Optimizer, ShardStore};
+    use std::thread;
+
+    /// Build a 2-server in-proc cluster over 3 keys of distinct sizes.
+    fn cluster(opt: Optimizer, mode: UpdateMode) -> (PsClient, Vec<thread::JoinHandle<()>>) {
+        let sizes = vec![4 * 100, 4 * 10, 4 * 50];
+        let values = [
+            Tensor::from_vec(&[100], vec![1.0; 100]),
+            Tensor::from_vec(&[10], vec![2.0; 10]),
+            Tensor::from_vec(&[50], vec![3.0; 50]),
+        ];
+        let router = Router::new(&sizes, 2);
+        let mut transports: Vec<Box<dyn Transport>> = Vec::new();
+        let mut handles = Vec::new();
+        for s in 0..2 {
+            let mut store = ShardStore::new(opt);
+            for &k in router.keys_of(s) {
+                store.insert(k, values[k as usize].clone());
+            }
+            let shared = PsShared::new(store, mode);
+            let (client_end, server_end) = InProcTransport::pair();
+            handles.push(thread::spawn(move || serve(Box::new(server_end), shared)));
+            transports.push(Box::new(client_end));
+        }
+        (PsClient::new(0, transports, router), handles)
+    }
+
+    #[test]
+    fn pull_reassembles_in_key_order() {
+        let (mut client, handles) = cluster(Optimizer::Sgd { lr: 0.1 }, UpdateMode::Async);
+        let params = client.pull_all().unwrap();
+        assert_eq!(params.len(), 3);
+        assert_eq!(params[0].len(), 100);
+        assert_eq!(params[0].data()[0], 1.0);
+        assert_eq!(params[1].data()[0], 2.0);
+        assert_eq!(params[2].data()[0], 3.0);
+        drop(client);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn push_then_pull_roundtrip() {
+        let (mut client, handles) = cluster(Optimizer::Sgd { lr: 1.0 }, UpdateMode::Async);
+        let grads = vec![
+            Tensor::from_vec(&[100], vec![0.5; 100]),
+            Tensor::from_vec(&[10], vec![1.0; 10]),
+            Tensor::from_vec(&[50], vec![2.0; 50]),
+        ];
+        client.push(0, &grads).unwrap();
+        let params = client.pull_all().unwrap();
+        assert_eq!(params[0].data()[0], 0.5); // 1 - 0.5
+        assert_eq!(params[1].data()[0], 1.0); // 2 - 1
+        assert_eq!(params[2].data()[0], 1.0); // 3 - 2
+        let (pulls, pushes, updates) = client.stats().unwrap();
+        assert_eq!(pulls, 2); // one pull fan-out = 2 server pulls
+        assert_eq!(pushes, 2);
+        assert_eq!(updates, 3); // one per key
+        drop(client);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

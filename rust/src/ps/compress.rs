@@ -1,0 +1,237 @@
+//! Gradient compression (paper §1.1.1: "compression algorithms are
+//! developed for both good compression ratios and fast decompression
+//! speed" [18]) — reduces the 2·S_p·N_w traffic term of Lemma 3.2, i.e.
+//! lowers the required N_ps at fixed bandwidth.
+//!
+//! Two codecs, both with exact size accounting so the advisor can model
+//! them:
+//! * [`TopK`]   — magnitude top-k sparsification with error feedback
+//!   residual kept worker-side (the standard convergence-preserving
+//!   trick).
+//! * [`Quant8`] — linear int8 quantization with per-tensor scale.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// A compressed gradient: (indices, values) sparse or quantized dense.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Compressed {
+    /// (numel, sorted indices, values)
+    Sparse { numel: usize, idx: Vec<u32>, val: Vec<f32> },
+    /// (shape numel, scale, int8 payload): x ≈ scale * q
+    Quant8 { numel: usize, scale: f32, q: Vec<i8> },
+}
+
+impl Compressed {
+    /// Wire size in bytes (what Lemma 3.2's S_p becomes).
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            Compressed::Sparse { idx, val, .. } => 8 + idx.len() * 4 + val.len() * 4,
+            Compressed::Quant8 { q, .. } => 8 + 4 + q.len(),
+        }
+    }
+
+    /// Densify back to a full tensor of `shape`.
+    pub fn decompress(&self, shape: &[usize]) -> Tensor {
+        match self {
+            Compressed::Sparse { numel, idx, val } => {
+                let mut data = vec![0.0f32; *numel];
+                for (i, v) in idx.iter().zip(val) {
+                    data[*i as usize] = *v;
+                }
+                Tensor::from_vec(shape, data)
+            }
+            Compressed::Quant8 { scale, q, .. } => {
+                Tensor::from_vec(shape, q.iter().map(|x| *x as f32 * scale).collect())
+            }
+        }
+    }
+}
+
+/// Top-k sparsifier with error feedback.
+///
+/// `compress` keeps the k largest-|x| entries of (grad + residual) and
+/// stores the remainder in the residual, so dropped mass is re-sent on
+/// later steps — SGD stays convergent (error-feedback compression).
+#[derive(Debug)]
+pub struct TopK {
+    /// Fraction of entries kept, in (0, 1].
+    pub fraction: f64,
+    residual: Vec<f32>,
+}
+
+impl TopK {
+    pub fn new(fraction: f64, numel: usize) -> Self {
+        assert!(fraction > 0.0 && fraction <= 1.0);
+        TopK { fraction, residual: vec![0.0; numel] }
+    }
+
+    pub fn compress(&mut self, grad: &Tensor) -> Compressed {
+        let n = grad.len();
+        assert_eq!(n, self.residual.len(), "TopK bound to a fixed tensor size");
+        let k = ((n as f64 * self.fraction).ceil() as usize).clamp(1, n);
+        // accumulated = grad + residual
+        let mut acc: Vec<f32> = grad
+            .data()
+            .iter()
+            .zip(&self.residual)
+            .map(|(g, r)| g + r)
+            .collect();
+        // Select k largest |.| via partial sort of indices.
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        order.select_nth_unstable_by(k - 1, |&a, &b| {
+            acc[b as usize]
+                .abs()
+                .partial_cmp(&acc[a as usize].abs())
+                .unwrap()
+        });
+        let mut idx: Vec<u32> = order[..k].to_vec();
+        idx.sort_unstable();
+        let val: Vec<f32> = idx.iter().map(|&i| acc[i as usize]).collect();
+        // Residual keeps what we did not send.
+        for &i in &idx {
+            acc[i as usize] = 0.0;
+        }
+        self.residual = acc;
+        Compressed::Sparse { numel: n, idx, val }
+    }
+}
+
+/// Linear int8 quantizer with optional stochastic rounding.
+pub fn quantize8(grad: &Tensor, stochastic: Option<&mut Rng>) -> Compressed {
+    let max = grad.data().iter().fold(0.0f32, |m, x| m.max(x.abs()));
+    let scale = if max == 0.0 { 1.0 } else { max / 127.0 };
+    let mut rng = stochastic;
+    let q: Vec<i8> = grad
+        .data()
+        .iter()
+        .map(|x| {
+            let v = x / scale;
+            let r = match rng.as_deref_mut() {
+                Some(rng) => {
+                    let floor = v.floor();
+                    let frac = v - floor;
+                    floor + if (rng.next_f32()) < frac { 1.0 } else { 0.0 }
+                }
+                None => v.round(),
+            };
+            r.clamp(-127.0, 127.0) as i8
+        })
+        .collect();
+    Compressed::Quant8 { numel: grad.len(), scale, q }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: &[f32]) -> Tensor {
+        Tensor::from_vec(&[v.len()], v.to_vec())
+    }
+
+    #[test]
+    fn topk_keeps_largest() {
+        let mut c = TopK::new(0.25, 8);
+        let g = t(&[0.1, -5.0, 0.2, 0.0, 3.0, -0.1, 0.05, 0.3]);
+        let out = c.compress(&g);
+        let dense = out.decompress(&[8]);
+        // k = 2: entries -5.0 and 3.0 survive.
+        assert_eq!(dense.data()[1], -5.0);
+        assert_eq!(dense.data()[4], 3.0);
+        assert_eq!(dense.data().iter().filter(|x| **x != 0.0).count(), 2);
+    }
+
+    #[test]
+    fn topk_error_feedback_preserves_mass() {
+        // Sum of all sends over time equals the sum of all grads (no
+        // gradient mass is lost, only delayed).
+        let mut c = TopK::new(0.34, 3);
+        let grads = [t(&[1.0, 0.5, 0.25]), t(&[1.0, 0.5, 0.25]), t(&[1.0, 0.5, 0.25])];
+        let mut sent = vec![0.0f32; 3];
+        for g in &grads {
+            let d = c.compress(g).decompress(&[3]);
+            for (s, v) in sent.iter_mut().zip(d.data()) {
+                *s += v;
+            }
+        }
+        let total: f32 = sent.iter().sum::<f32>() + c.residual.iter().sum::<f32>();
+        assert!((total - 5.25).abs() < 1e-5, "mass {total} != 5.25");
+        // And the big coordinate got through every round.
+        assert!(sent[0] >= 3.0 - 1e-6);
+    }
+
+    #[test]
+    fn topk_wire_size_shrinks() {
+        let mut c = TopK::new(0.01, 10_000);
+        let g = Tensor::from_vec(&[10_000], (0..10_000).map(|i| i as f32).collect());
+        let out = c.compress(&g);
+        // k=100 entries -> 8 + 100*8 = 808 bytes vs 40 KB dense (~50x)
+        assert!(out.wire_bytes() <= 850, "{}", out.wire_bytes());
+    }
+
+    #[test]
+    fn quant8_roundtrip_error_bounded() {
+        let g = t(&[1.0, -0.5, 0.25, 0.9, -1.27]);
+        let q = quantize8(&g, None);
+        let d = q.decompress(&[5]);
+        let maxerr = g
+            .data()
+            .iter()
+            .zip(d.data())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        // error <= scale/2 = max/254
+        assert!(maxerr <= 1.27 / 254.0 + 1e-6, "maxerr {maxerr}");
+        assert_eq!(q.wire_bytes(), 8 + 4 + 5);
+    }
+
+    #[test]
+    fn quant8_zero_tensor() {
+        let g = t(&[0.0; 16]);
+        let d = quantize8(&g, None).decompress(&[16]);
+        assert!(d.data().iter().all(|x| *x == 0.0));
+    }
+
+    #[test]
+    fn quant8_stochastic_unbiased() {
+        // Stochastic rounding is unbiased: mean of many draws ≈ value.
+        let mut rng = Rng::new(3);
+        let g = t(&[0.005]); // far below one quantum of scale=0.005/127
+        let mut sum = 0.0;
+        let trials = 2000;
+        for _ in 0..trials {
+            let d = quantize8(&t(&[0.005, 0.635]), Some(&mut rng)).decompress(&[2]);
+            sum += d.data()[0];
+        }
+        let mean = sum / trials as f32;
+        assert!((mean - 0.005).abs() < 0.0008, "mean {mean}");
+        let _ = g;
+    }
+
+    #[test]
+    fn sgd_with_topk_converges_on_quadratic() {
+        // w <- w - lr * decompress(topk(grad)) still reaches the target
+        // thanks to error feedback (the Lemma 3.2 traffic saver is safe).
+        let target: Vec<f32> = (0..50).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut w = vec![0.0f32; 50];
+        let mut c = TopK::new(0.1, 50);
+        for _ in 0..400 {
+            let grad = t(&w
+                .iter()
+                .zip(&target)
+                .map(|(wi, ti)| 2.0 * (wi - ti))
+                .collect::<Vec<_>>());
+            let d = c.compress(&grad).decompress(&[50]);
+            for (wi, gi) in w.iter_mut().zip(d.data()) {
+                *wi -= 0.1 * gi;
+            }
+        }
+        let dist: f32 = w
+            .iter()
+            .zip(&target)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            .sqrt();
+        assert!(dist < 0.05, "top-k SGD did not converge: {dist}");
+    }
+}

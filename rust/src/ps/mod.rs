@@ -1,0 +1,22 @@
+//! Parameter-server cluster (§3.3).
+//!
+//! * [`router`] — key -> server placement with size-balanced assignment
+//!   (the "distribute parameter-update workload evenly" subgoal).
+//! * [`shard`]  — one server's parameter store + optimizer application.
+//! * [`server`] — serve loop over any [`crate::net::Transport`]:
+//!   async (apply-on-push) and synchronous (barrier + aggregate) modes.
+//! * [`client`] — worker-side connection fan-out: pull/push across all
+//!   servers, with a prefetch thread to hide I/O behind compute (§3.3's
+//!   ideal-pipeline condition).
+
+pub mod client;
+pub mod compress;
+pub mod router;
+pub mod server;
+pub mod shard;
+
+pub use client::PsClient;
+pub use compress::{quantize8, Compressed, TopK};
+pub use router::Router;
+pub use server::{serve, PsServerHandle, UpdateMode};
+pub use shard::{Optimizer, ShardStore};

@@ -1,0 +1,483 @@
+//! Parameter-server serve loop.
+//!
+//! One handler thread per worker connection; the shard store is shared
+//! behind a mutex. Two update modes (§3.3):
+//! * [`UpdateMode::Async`] — gradients apply on arrival (Hogwild-style
+//!   [48]; the paper's assumed policy, hides I/O behind compute).
+//! * [`UpdateMode::Sync`]  — gradients buffer until every worker reaches
+//!   the barrier, then the mean gradient applies once (synchronous SGD).
+
+use std::collections::BTreeMap;
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::{self, JoinHandle};
+
+use super::shard::ShardStore;
+use crate::net::message::Message;
+use crate::net::transport::{TcpTransport, Transport};
+use crate::tensor::Tensor;
+
+/// How long a worker may wait inside a sync barrier before the server
+/// reports an error instead of deadlocking (peer death detection).
+pub const BARRIER_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(300);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UpdateMode {
+    Async,
+    /// Synchronous with `expected_workers` participants per barrier.
+    /// `backup_workers` > 0 enables Chen et al.'s backup-worker scheme
+    /// [8] (cited in §1.1.2): the barrier releases once
+    /// `expected_workers - backup_workers` gradients arrived and
+    /// straggler gradients for that step are discarded — mitigating the
+    /// sync-SGD "performance dragger" the paper describes.
+    Sync { expected_workers: usize, backup_workers: usize },
+}
+
+/// Counters exported via `Message::Stats`.
+#[derive(Debug, Default)]
+pub struct Counters {
+    pub pulls: AtomicU64,
+    pub pushes: AtomicU64,
+    pub updates: AtomicU64,
+}
+
+#[derive(Default)]
+struct SyncState {
+    /// step -> (arrived worker count, key -> pending grads)
+    pending: BTreeMap<u64, (usize, BTreeMap<u32, Vec<Tensor>>)>,
+    /// Steps < `released_below` have been aggregated and released.
+    /// (Half-open so step 0 is NOT considered released at init — a
+    /// closed `released: u64 = 0` sentinel let step-0 barriers pass
+    /// before aggregation, a pull-before-apply race.)
+    released_below: u64,
+}
+
+/// Shared server state handed to every connection handler.
+pub struct PsShared {
+    pub store: Mutex<ShardStore>,
+    pub counters: Counters,
+    mode: UpdateMode,
+    sync: Mutex<SyncState>,
+    barrier_cv: Condvar,
+    stop: AtomicBool,
+}
+
+impl PsShared {
+    pub fn new(store: ShardStore, mode: UpdateMode) -> Arc<Self> {
+        Arc::new(PsShared {
+            store: Mutex::new(store),
+            counters: Counters::default(),
+            mode,
+            sync: Mutex::new(SyncState::default()),
+            barrier_cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+        })
+    }
+
+    pub fn stopped(&self) -> bool {
+        self.stop.load(Ordering::Relaxed)
+    }
+}
+
+/// Handle one connection until Shutdown/disconnect. Usable directly with
+/// in-process transports or spawned per TCP accept.
+pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
+    loop {
+        let msg = match t.recv() {
+            Ok(m) => m,
+            Err(_) => return, // peer hung up
+        };
+        match msg {
+            Message::Pull { keys, .. } => {
+                shared.counters.pulls.fetch_add(1, Ordering::Relaxed);
+                let store = shared.store.lock().unwrap();
+                let mut entries = Vec::with_capacity(keys.len());
+                let mut missing = None;
+                for k in keys {
+                    match store.get(k) {
+                        Some(v) => entries.push((k, v.clone())),
+                        None => {
+                            missing = Some(k);
+                            break;
+                        }
+                    }
+                }
+                let clock = store.clock();
+                drop(store);
+                let reply = match missing {
+                    Some(k) => Message::Error { what: format!("unknown key {k}") },
+                    None => Message::PullReply { clock, entries },
+                };
+                if t.send(&reply).is_err() {
+                    return;
+                }
+            }
+            Message::Push { step, entries, .. } => {
+                shared.counters.pushes.fetch_add(1, Ordering::Relaxed);
+                let reply = match shared.mode {
+                    UpdateMode::Async => {
+                        let mut store = shared.store.lock().unwrap();
+                        let mut err = None;
+                        for (k, g) in &entries {
+                            if let Err(e) = store.apply_grad(*k, g) {
+                                err = Some(e);
+                                break;
+                            }
+                            shared.counters.updates.fetch_add(1, Ordering::Relaxed);
+                        }
+                        let clock = store.clock();
+                        drop(store);
+                        match err {
+                            Some(e) => Message::Error { what: e },
+                            None => Message::PushAck { clock },
+                        }
+                    }
+                    UpdateMode::Sync { .. } => {
+                        let mut sync = shared.sync.lock().unwrap();
+                        if step >= sync.released_below {
+                            let slot = sync.pending.entry(step).or_default();
+                            for (k, g) in entries {
+                                slot.1.entry(k).or_default().push(g);
+                            }
+                        } // else: straggler push for a released step — discarded
+                        drop(sync);
+                        let clock = shared.store.lock().unwrap().clock();
+                        Message::PushAck { clock }
+                    }
+                };
+                if t.send(&reply).is_err() {
+                    return;
+                }
+            }
+            Message::Barrier { step, .. } => {
+                let UpdateMode::Sync { expected_workers, backup_workers } = shared.mode else {
+                    let _ = t.send(&Message::Error {
+                        what: "barrier in async mode".into(),
+                    });
+                    continue;
+                };
+                let mut sync = shared.sync.lock().unwrap();
+                if step < sync.released_below {
+                    // Straggler past an already-released barrier (backup-
+                    // worker mode): wave it through, its grads are void.
+                    drop(sync);
+                    if t.send(&Message::BarrierRelease { step }).is_err() {
+                        return;
+                    }
+                    continue;
+                }
+                let quorum = expected_workers.saturating_sub(backup_workers).max(1);
+                let slot = sync.pending.entry(step).or_default();
+                slot.0 += 1;
+                if slot.0 >= quorum {
+                    // Last arriver applies the aggregated gradients.
+                    let (_, grads) = sync.pending.remove(&step).unwrap();
+                    let mut store = shared.store.lock().unwrap();
+                    for (k, gs) in grads {
+                        store
+                            .apply_aggregated(k, &gs)
+                            .unwrap_or_else(|e| crate::warn_log!("ps", "sync apply failed", err = e));
+                        shared.counters.updates.fetch_add(1, Ordering::Relaxed);
+                    }
+                    drop(store);
+                    sync.released_below = sync.released_below.max(step + 1);
+                    shared.barrier_cv.notify_all();
+                } else {
+                    // Bounded wait: if a peer worker dies mid-step the
+                    // barrier can never fill — error out instead of
+                    // deadlocking the cluster.
+                    let deadline = std::time::Instant::now() + BARRIER_TIMEOUT;
+                    let mut timed_out = false;
+                    while sync.released_below <= step && !shared.stopped() {
+                        let now = std::time::Instant::now();
+                        if now >= deadline {
+                            timed_out = true;
+                            break;
+                        }
+                        let (guard, _) = shared
+                            .barrier_cv
+                            .wait_timeout(sync, deadline - now)
+                            .unwrap();
+                        sync = guard;
+                    }
+                    if timed_out {
+                        drop(sync);
+                        let _ = t.send(&Message::Error {
+                            what: format!("barrier timeout at step {step}"),
+                        });
+                        continue;
+                    }
+                }
+                drop(sync);
+                if t.send(&Message::BarrierRelease { step }).is_err() {
+                    return;
+                }
+            }
+            Message::Stats => {
+                let reply = Message::StatsReply {
+                    pulls: shared.counters.pulls.load(Ordering::Relaxed),
+                    pushes: shared.counters.pushes.load(Ordering::Relaxed),
+                    updates: shared.counters.updates.load(Ordering::Relaxed),
+                };
+                if t.send(&reply).is_err() {
+                    return;
+                }
+            }
+            Message::Shutdown => {
+                shared.stop.store(true, Ordering::Relaxed);
+                shared.barrier_cv.notify_all();
+                return;
+            }
+            other => {
+                let _ = t.send(&Message::Error {
+                    what: format!("unexpected message {other:?}"),
+                });
+            }
+        }
+    }
+}
+
+/// A running TCP parameter server.
+pub struct PsServerHandle {
+    pub addr: std::net::SocketAddr,
+    pub shared: Arc<PsShared>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl PsServerHandle {
+    /// Bind `addr` (use port 0 for ephemeral) and serve in background
+    /// threads until `Shutdown`.
+    pub fn spawn_tcp(
+        addr: &str,
+        store: ShardStore,
+        mode: UpdateMode,
+    ) -> Result<PsServerHandle, String> {
+        let listener = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
+        let local = listener.local_addr().map_err(|e| e.to_string())?;
+        let shared = PsShared::new(store, mode);
+        let shared2 = shared.clone();
+        let accept_thread = thread::spawn(move || {
+            for stream in listener.incoming() {
+                if shared2.stopped() {
+                    return;
+                }
+                match stream {
+                    Ok(s) => {
+                        let sh = shared2.clone();
+                        if let Ok(t) = TcpTransport::new(s) {
+                            thread::spawn(move || serve(Box::new(t), sh));
+                        }
+                    }
+                    Err(_) => return,
+                }
+            }
+        });
+        Ok(PsServerHandle {
+            addr: local,
+            shared,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    /// Request shutdown: connect once to deliver Shutdown and unblock the
+    /// accept loop.
+    pub fn shutdown(&mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        self.shared.barrier_cv.notify_all();
+        if let Ok(mut t) = crate::net::transport::connect(self.addr) {
+            let _ = t.send(&Message::Shutdown);
+        }
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for PsServerHandle {
+    fn drop(&mut self) {
+        if self.accept_thread.is_some() {
+            self.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::transport::{connect, InProcTransport};
+    use crate::ps::shard::Optimizer;
+
+    fn store_with(keys: &[(u32, Vec<f32>)], opt: Optimizer) -> ShardStore {
+        let mut s = ShardStore::new(opt);
+        for (k, v) in keys {
+            s.insert(*k, Tensor::from_vec(&[v.len()], v.clone()));
+        }
+        s
+    }
+
+    #[test]
+    fn inproc_pull_push_async() {
+        let store = store_with(&[(0, vec![1.0, 2.0])], Optimizer::Sgd { lr: 0.5 });
+        let shared = PsShared::new(store, UpdateMode::Async);
+        let (client_end, server_end) = InProcTransport::pair();
+        let sh = shared.clone();
+        let h = thread::spawn(move || serve(Box::new(server_end), sh));
+        let mut c: Box<dyn Transport> = Box::new(client_end);
+
+        c.send(&Message::Pull { worker: 0, keys: vec![0] }).unwrap();
+        match c.recv().unwrap() {
+            Message::PullReply { entries, .. } => {
+                assert_eq!(entries[0].1.data(), &[1.0, 2.0]);
+            }
+            m => panic!("{m:?}"),
+        }
+
+        c.send(&Message::Push {
+            worker: 0,
+            step: 0,
+            entries: vec![(0, Tensor::from_vec(&[2], vec![2.0, 2.0]))],
+        })
+        .unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+
+        c.send(&Message::Pull { worker: 0, keys: vec![0] }).unwrap();
+        match c.recv().unwrap() {
+            Message::PullReply { entries, .. } => {
+                assert_eq!(entries[0].1.data(), &[0.0, 1.0]); // 1-0.5*2, 2-0.5*2
+            }
+            m => panic!("{m:?}"),
+        }
+        drop(c);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn unknown_key_pull_errors() {
+        let store = store_with(&[], Optimizer::Sgd { lr: 0.1 });
+        let shared = PsShared::new(store, UpdateMode::Async);
+        let (client_end, server_end) = InProcTransport::pair();
+        let h = thread::spawn({
+            let sh = shared.clone();
+            move || serve(Box::new(server_end), sh)
+        });
+        let mut c: Box<dyn Transport> = Box::new(client_end);
+        c.send(&Message::Pull { worker: 0, keys: vec![9] }).unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::Error { .. }));
+        drop(c);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_sync_barrier_aggregates() {
+        let store = store_with(&[(0, vec![0.0])], Optimizer::Sgd { lr: 1.0 });
+        let mut srv = PsServerHandle::spawn_tcp(
+            "127.0.0.1:0",
+            store,
+            UpdateMode::Sync { expected_workers: 2, backup_workers: 0 },
+        )
+        .unwrap();
+        let addr = srv.addr;
+
+        let worker = |grad: f32| {
+            let addr = addr;
+            thread::spawn(move || {
+                let mut c = connect(addr).unwrap();
+                c.send(&Message::Push {
+                    worker: 0,
+                    step: 1,
+                    entries: vec![(0, Tensor::from_vec(&[1], vec![grad]))],
+                })
+                .unwrap();
+                assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+                c.send(&Message::Barrier { worker: 0, step: 1 }).unwrap();
+                assert!(matches!(
+                    c.recv().unwrap(),
+                    Message::BarrierRelease { step: 1 }
+                ));
+            })
+        };
+        let (w1, w2) = (worker(2.0), worker(4.0));
+        w1.join().unwrap();
+        w2.join().unwrap();
+
+        // Mean grad = 3.0, lr = 1 → w = -3.
+        let mut c = connect(addr).unwrap();
+        c.send(&Message::Pull { worker: 0, keys: vec![0] }).unwrap();
+        match c.recv().unwrap() {
+            Message::PullReply { entries, .. } => assert_eq!(entries[0].1.data(), &[-3.0]),
+            m => panic!("{m:?}"),
+        }
+        // Exactly ONE aggregated update happened.
+        c.send(&Message::Stats).unwrap();
+        match c.recv().unwrap() {
+            Message::StatsReply { updates, pushes, .. } => {
+                assert_eq!(updates, 1);
+                assert_eq!(pushes, 2);
+            }
+            m => panic!("{m:?}"),
+        }
+        srv.shutdown();
+    }
+
+    #[test]
+    fn backup_workers_release_early_and_drop_stragglers() {
+        // Chen et al. [8]: 3 workers, 1 backup — the barrier releases on
+        // the first 2 arrivals; the straggler's gradient is discarded.
+        let store = store_with(&[(0, vec![0.0])], Optimizer::Sgd { lr: 1.0 });
+        let mut srv = PsServerHandle::spawn_tcp(
+            "127.0.0.1:0",
+            store,
+            UpdateMode::Sync { expected_workers: 3, backup_workers: 1 },
+        )
+        .unwrap();
+        let addr = srv.addr;
+
+        let fast = |grad: f32| {
+            thread::spawn(move || {
+                let mut c = connect(addr).unwrap();
+                c.send(&Message::Push {
+                    worker: 0,
+                    step: 0,
+                    entries: vec![(0, Tensor::from_vec(&[1], vec![grad]))],
+                })
+                .unwrap();
+                assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+                c.send(&Message::Barrier { worker: 0, step: 0 }).unwrap();
+                assert!(matches!(c.recv().unwrap(), Message::BarrierRelease { step: 0 }));
+            })
+        };
+        let (a, b) = (fast(2.0), fast(4.0));
+        a.join().unwrap();
+        b.join().unwrap();
+
+        // Straggler arrives after release; it must NOT block or change w.
+        let mut c = connect(addr).unwrap();
+        c.send(&Message::Push {
+            worker: 2,
+            step: 0,
+            entries: vec![(0, Tensor::from_vec(&[1], vec![100.0]))],
+        })
+        .unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+        c.send(&Message::Barrier { worker: 2, step: 0 }).unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::BarrierRelease { step: 0 }));
+
+        // w = -(mean of 2.0 and 4.0) = -3; straggler's 100.0 discarded.
+        c.send(&Message::Pull { worker: 2, keys: vec![0] }).unwrap();
+        match c.recv().unwrap() {
+            Message::PullReply { entries, .. } => assert_eq!(entries[0].1.data(), &[-3.0]),
+            m => panic!("{m:?}"),
+        }
+        srv.shutdown();
+    }
+
+    #[test]
+    fn tcp_shutdown_idempotent() {
+        let store = store_with(&[], Optimizer::Sgd { lr: 0.1 });
+        let mut srv =
+            PsServerHandle::spawn_tcp("127.0.0.1:0", store, UpdateMode::Async).unwrap();
+        srv.shutdown();
+        srv.shutdown(); // second call is a no-op
+    }
+}

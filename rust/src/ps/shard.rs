@@ -1,0 +1,160 @@
+//! One parameter server's store: the authoritative copy of its shard of
+//! the model plus the optimizer state (Fig. 1 step 6, applied server-side
+//! in distributed training).
+
+use std::collections::BTreeMap;
+
+use crate::tensor::Tensor;
+
+/// Server-side optimizer for applying pushed gradients.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Optimizer {
+    /// w -= lr * g
+    Sgd { lr: f32 },
+    /// v = mu v + g; w -= lr v   (Polyak momentum [41])
+    Momentum { lr: f32, mu: f32 },
+}
+
+/// Parameter shard: key -> tensor, plus per-key velocity for momentum.
+#[derive(Debug)]
+pub struct ShardStore {
+    params: BTreeMap<u32, Tensor>,
+    velocity: BTreeMap<u32, Tensor>,
+    opt: Optimizer,
+    /// Monotone update clock (for async staleness accounting).
+    clock: u64,
+}
+
+impl ShardStore {
+    pub fn new(opt: Optimizer) -> Self {
+        ShardStore {
+            params: BTreeMap::new(),
+            velocity: BTreeMap::new(),
+            opt,
+            clock: 0,
+        }
+    }
+
+    /// Install initial values (from the artifact init blob).
+    pub fn insert(&mut self, key: u32, value: Tensor) {
+        self.params.insert(key, value);
+    }
+
+    pub fn get(&self, key: u32) -> Option<&Tensor> {
+        self.params.get(&key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = u32> + '_ {
+        self.params.keys().copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.params.is_empty()
+    }
+
+    pub fn clock(&self) -> u64 {
+        self.clock
+    }
+
+    pub fn optimizer(&self) -> Optimizer {
+        self.opt
+    }
+
+    /// Apply one gradient to one key (async mode: called per push).
+    pub fn apply_grad(&mut self, key: u32, grad: &Tensor) -> Result<(), String> {
+        let w = self
+            .params
+            .get_mut(&key)
+            .ok_or_else(|| format!("unknown key {key}"))?;
+        if w.shape() != grad.shape() {
+            return Err(format!(
+                "grad shape {:?} != param shape {:?} for key {key}",
+                grad.shape(),
+                w.shape()
+            ));
+        }
+        match self.opt {
+            Optimizer::Sgd { lr } => {
+                w.axpy(-lr, grad);
+            }
+            Optimizer::Momentum { lr, mu } => {
+                let v = self
+                    .velocity
+                    .entry(key)
+                    .or_insert_with(|| Tensor::zeros(grad.shape()));
+                v.scale(mu);
+                v.axpy(1.0, grad);
+                w.axpy(-lr, v);
+            }
+        }
+        self.clock += 1;
+        Ok(())
+    }
+
+    /// Apply the average of `grads` (sync mode: after the barrier).
+    pub fn apply_aggregated(&mut self, key: u32, grads: &[Tensor]) -> Result<(), String> {
+        if grads.is_empty() {
+            return Ok(());
+        }
+        let mut avg = grads[0].clone();
+        for g in &grads[1..] {
+            avg.axpy(1.0, g);
+        }
+        avg.scale(1.0 / grads.len() as f32);
+        self.apply_grad(key, &avg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: &[f32]) -> Tensor {
+        Tensor::from_vec(&[v.len()], v.to_vec())
+    }
+
+    #[test]
+    fn sgd_apply() {
+        let mut s = ShardStore::new(Optimizer::Sgd { lr: 0.1 });
+        s.insert(0, t(&[1.0, 2.0]));
+        s.apply_grad(0, &t(&[10.0, -10.0])).unwrap();
+        assert_eq!(s.get(0).unwrap().data(), &[0.0, 3.0]);
+        assert_eq!(s.clock(), 1);
+    }
+
+    #[test]
+    fn momentum_matches_reference() {
+        // Two steps of momentum against hand-computed values.
+        let mut s = ShardStore::new(Optimizer::Momentum { lr: 0.1, mu: 0.9 });
+        s.insert(0, t(&[1.0]));
+        s.apply_grad(0, &t(&[1.0])).unwrap(); // v=1, w=1-0.1=0.9
+        assert!((s.get(0).unwrap().data()[0] - 0.9).abs() < 1e-6);
+        s.apply_grad(0, &t(&[1.0])).unwrap(); // v=1.9, w=0.9-0.19=0.71
+        assert!((s.get(0).unwrap().data()[0] - 0.71).abs() < 1e-6);
+    }
+
+    #[test]
+    fn aggregated_is_mean() {
+        let mut s = ShardStore::new(Optimizer::Sgd { lr: 1.0 });
+        s.insert(0, t(&[0.0]));
+        s.apply_aggregated(0, &[t(&[1.0]), t(&[3.0])]).unwrap();
+        assert_eq!(s.get(0).unwrap().data(), &[-2.0]); // mean 2, lr 1
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut s = ShardStore::new(Optimizer::Sgd { lr: 0.1 });
+        assert!(s.apply_grad(7, &t(&[1.0])).is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let mut s = ShardStore::new(Optimizer::Sgd { lr: 0.1 });
+        s.insert(0, t(&[1.0, 2.0]));
+        assert!(s.apply_grad(0, &t(&[1.0])).is_err());
+    }
+}

@@ -1,0 +1,250 @@
+//! Artifact sidecar metadata: `index.json` (the artifact registry) and
+//! per-family `*.manifest.json` + `*.init.bin` (parameter layout and
+//! initial values). Produced by `python/compile/aot.py`; parsed with the
+//! in-house JSON substrate.
+
+use std::path::{Path, PathBuf};
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+/// One parameter tensor's layout in the flat init blob.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub size: usize,
+    pub offset: usize,
+}
+
+/// A model family's parameter manifest (+ lazily-loadable init blob).
+#[derive(Debug, Clone)]
+pub struct ParamManifest {
+    pub family: String,
+    pub params: Vec<ParamSpec>,
+    pub total_elems: usize,
+    init_path: PathBuf,
+}
+
+impl ParamManifest {
+    pub fn load(dir: &Path, family: &str) -> Result<Self, String> {
+        let path = dir.join(format!("{family}.manifest.json"));
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let j = Json::parse(&text)?;
+        let mut params = Vec::new();
+        for p in j.arr_field("params")? {
+            let shape = p
+                .arr_field("shape")?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| "bad shape dim".to_string()))
+                .collect::<Result<Vec<_>, _>>()?;
+            params.push(ParamSpec {
+                name: p.str_field("name")?.to_string(),
+                shape,
+                size: p.usize_field("size")?,
+                offset: p.usize_field("offset")?,
+            });
+        }
+        let total_elems = j.usize_field("total_elems")?;
+        // Layout sanity: offsets are contiguous and sizes match shapes.
+        let mut expect = 0usize;
+        for p in &params {
+            if p.offset != expect {
+                return Err(format!("{}: non-contiguous offset", p.name));
+            }
+            let numel: usize = p.shape.iter().product::<usize>().max(1);
+            if numel != p.size {
+                return Err(format!("{}: size {} != shape numel {numel}", p.name, p.size));
+            }
+            expect += p.size;
+        }
+        if expect != total_elems {
+            return Err(format!("manifest total {total_elems} != sum {expect}"));
+        }
+        Ok(ParamManifest {
+            family: j.str_field("family")?.to_string(),
+            params,
+            total_elems,
+            init_path: dir.join(format!("{family}.init.bin")),
+        })
+    }
+
+    /// Parameter sizes in bytes (router placement input).
+    pub fn byte_sizes(&self) -> Vec<usize> {
+        self.params.iter().map(|p| p.size * 4).collect()
+    }
+
+    /// Total parameter bytes (Lemma 3.2's S_p).
+    pub fn total_bytes(&self) -> usize {
+        self.total_elems * 4
+    }
+
+    /// Load the python-side initial parameter values.
+    pub fn load_init(&self) -> Result<Vec<Tensor>, String> {
+        let bytes = std::fs::read(&self.init_path)
+            .map_err(|e| format!("read {}: {e}", self.init_path.display()))?;
+        if bytes.len() != self.total_elems * 4 {
+            return Err(format!(
+                "init blob {} bytes != manifest {} elems",
+                bytes.len(),
+                self.total_elems
+            ));
+        }
+        self.params
+            .iter()
+            .map(|p| {
+                let start = p.offset * 4;
+                Tensor::from_le_bytes(&p.shape, &bytes[start..start + p.size * 4])
+            })
+            .collect()
+    }
+}
+
+/// One runnable artifact from `index.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub model: String,
+    pub family: String,
+    /// "train_step" | "grad_step" | "eval_step".
+    pub kind: String,
+    pub batch: usize,
+    pub hlo_path: PathBuf,
+    pub num_params: usize,
+    /// Input/output shapes as (shape, dtype) pairs, in call order.
+    pub inputs: Vec<(Vec<usize>, String)>,
+    pub outputs: Vec<(Vec<usize>, String)>,
+}
+
+/// The artifact registry.
+#[derive(Debug, Clone)]
+pub struct ArtifactIndex {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+fn parse_specs(j: &Json, key: &str) -> Result<Vec<(Vec<usize>, String)>, String> {
+    j.arr_field(key)?
+        .iter()
+        .map(|s| {
+            let shape = s
+                .arr_field("shape")?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| "bad dim".to_string()))
+                .collect::<Result<Vec<_>, _>>()?;
+            Ok((shape, s.str_field("dtype")?.to_string()))
+        })
+        .collect()
+}
+
+impl ArtifactIndex {
+    pub fn load(dir: &Path) -> Result<Self, String> {
+        let path = dir.join("index.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {} (run `make artifacts`?): {e}", path.display()))?;
+        let j = Json::parse(&text)?;
+        let mut artifacts = Vec::new();
+        for a in j.arr_field("artifacts")? {
+            artifacts.push(ArtifactMeta {
+                name: a.str_field("name")?.to_string(),
+                model: a.str_field("model")?.to_string(),
+                family: a.str_field("family")?.to_string(),
+                kind: a.str_field("kind")?.to_string(),
+                batch: a.usize_field("batch")?,
+                hlo_path: dir.join(a.str_field("hlo")?),
+                num_params: a.usize_field("num_params")?,
+                inputs: parse_specs(a, "inputs")?,
+                outputs: parse_specs(a, "outputs")?,
+            });
+        }
+        Ok(ArtifactIndex { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Result<&ArtifactMeta, String> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| {
+                let names: Vec<&str> = self.artifacts.iter().map(|a| a.name.as_str()).collect();
+                format!("no artifact {name:?}; available: {names:?}")
+            })
+    }
+
+    /// All artifacts of one family+kind (e.g. the Fig. 3 batch sweep).
+    pub fn find_all(&self, family: &str, kind: &str) -> Vec<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.family == family && a.kind == kind)
+            .collect()
+    }
+
+    pub fn manifest(&self, family: &str) -> Result<ParamManifest, String> {
+        ParamManifest::load(&self.dir, family)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        // CARGO_MANIFEST_DIR = repo root (Cargo.toml lives there).
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("index.json").exists()
+    }
+
+    #[test]
+    fn load_real_index() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let idx = ArtifactIndex::load(&artifacts_dir()).unwrap();
+        assert!(idx.artifacts.len() >= 10);
+        let a = idx.find("cnn_gemm_b32_train").unwrap();
+        assert_eq!(a.kind, "train_step");
+        assert_eq!(a.batch, 32);
+        assert_eq!(a.num_params, 10);
+        // train inputs: 10 params + x + y + lr; outputs: 10 params + loss
+        assert_eq!(a.inputs.len(), 13);
+        assert_eq!(a.outputs.len(), 11);
+        assert!(a.hlo_path.exists());
+        assert!(idx.find("nonexistent").is_err());
+    }
+
+    #[test]
+    fn load_real_manifest_and_init() {
+        if !have_artifacts() {
+            return;
+        }
+        let idx = ArtifactIndex::load(&artifacts_dir()).unwrap();
+        let m = idx.manifest("cnn").unwrap();
+        assert_eq!(m.params.len(), 10);
+        assert_eq!(m.params[0].name, "conv0.w");
+        assert_eq!(m.params[0].shape, vec![5, 5, 3, 32]);
+        assert_eq!(m.total_elems, 654_666);
+        let init = m.load_init().unwrap();
+        assert_eq!(init.len(), 10);
+        assert_eq!(init[0].shape(), &[5, 5, 3, 32]);
+        // conv biases start at zero; conv weights don't.
+        assert!(init[0].l2_norm() > 0.0);
+        assert_eq!(init[1].l2_norm(), 0.0);
+    }
+
+    #[test]
+    fn fig3_batch_sweep_present() {
+        if !have_artifacts() {
+            return;
+        }
+        let idx = ArtifactIndex::load(&artifacts_dir()).unwrap();
+        let sweep = idx.find_all("cnn", "train_step");
+        let batches: Vec<usize> = sweep.iter().map(|a| a.batch).collect();
+        for b in [16, 32, 64, 128] {
+            assert!(batches.contains(&b), "missing cnn train batch {b}");
+        }
+    }
+}

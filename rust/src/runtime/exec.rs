@@ -1,0 +1,334 @@
+//! PJRT execution (Fig. 1 steps 4–6 for real numerics).
+//!
+//! `Runtime` owns the PJRT CPU client; `TrainExecutable` is one compiled
+//! artifact with its calling convention resolved. HLO **text** is the
+//! interchange format (see aot.py / DESIGN.md): `HloModuleProto::
+//! from_text_file` reassigns instruction ids, avoiding the 64-bit-id
+//! incompatibility between jax ≥ 0.5 protos and xla_extension 0.5.1.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::artifact::{ArtifactIndex, ArtifactMeta, ParamManifest};
+use crate::data::loader::Batch;
+use crate::tensor::Tensor;
+
+/// Owns the PJRT client; compiles artifacts on demand.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub index: ArtifactIndex,
+}
+
+/// Output of one step execution.
+#[derive(Debug)]
+pub struct StepOutput {
+    /// Updated params (train_step) or gradients (grad_step); empty for
+    /// eval_step.
+    pub tensors: Vec<Tensor>,
+    /// Scalar loss.
+    pub loss: f32,
+    /// eval_step's correct-prediction count (0 otherwise).
+    pub correct: f32,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &Path) -> Result<Self, String> {
+        let index = ArtifactIndex::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("pjrt cpu client: {e}"))?;
+        Ok(Runtime { client, index })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile `name` into a ready-to-run executable.
+    pub fn load(&self, name: &str) -> Result<TrainExecutable, String> {
+        let meta = self.index.find(name)?.clone();
+        let proto = xla::HloModuleProto::from_text_file(&meta.hlo_path)
+            .map_err(|e| format!("parse {}: {e}", meta.hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| format!("compile {name}: {e}"))?;
+        Ok(TrainExecutable { meta, exe })
+    }
+
+    /// Parameter manifest + init values for a family.
+    pub fn family_init(&self, family: &str) -> Result<(ParamManifest, Vec<Tensor>), String> {
+        let m = self.index.manifest(family)?;
+        let init = m.load_init()?;
+        Ok((m, init))
+    }
+}
+
+/// One compiled artifact.
+pub struct TrainExecutable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl TrainExecutable {
+    fn literal_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal, String> {
+        let lit = xla::Literal::vec1(data);
+        if shape.len() == 1 && shape[0] == data.len() {
+            return Ok(lit);
+        }
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        lit.reshape(&dims).map_err(|e| format!("reshape: {e}"))
+    }
+
+    fn literal_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal, String> {
+        let lit = xla::Literal::vec1(data);
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        lit.reshape(&dims).map_err(|e| format!("reshape: {e}"))
+    }
+
+    /// Build the input literal list for `params` + `batch` (+ lr for
+    /// train steps), following the aot.py calling convention.
+    fn build_inputs(
+        &self,
+        params: &[Tensor],
+        batch: &Batch,
+        lr: Option<f32>,
+    ) -> Result<Vec<xla::Literal>, String> {
+        let np = self.meta.num_params;
+        if params.len() != np {
+            return Err(format!("expected {np} params, got {}", params.len()));
+        }
+        let mut inputs = Vec::with_capacity(self.meta.inputs.len());
+        for (p, (shape, _)) in params.iter().zip(&self.meta.inputs) {
+            if p.shape() != &shape[..] {
+                return Err(format!(
+                    "param shape {:?} != artifact {:?}",
+                    p.shape(),
+                    shape
+                ));
+            }
+            inputs.push(Self::literal_f32(shape, p.data())?);
+        }
+        let (x_shape, x_dtype) = &self.meta.inputs[np];
+        let x_numel: usize = x_shape.iter().product();
+        if x_dtype.starts_with("int") {
+            if batch.x_i32.len() != x_numel {
+                return Err(format!(
+                    "x payload {} != artifact numel {x_numel}",
+                    batch.x_i32.len()
+                ));
+            }
+            inputs.push(Self::literal_i32(x_shape, &batch.x_i32)?);
+        } else {
+            if batch.x_f32.len() != x_numel {
+                return Err(format!(
+                    "x payload {} != artifact numel {x_numel}",
+                    batch.x_f32.len()
+                ));
+            }
+            inputs.push(Self::literal_f32(x_shape, &batch.x_f32)?);
+        }
+        let (y_shape, _) = &self.meta.inputs[np + 1];
+        let y_numel: usize = y_shape.iter().product();
+        if batch.y_i32.len() != y_numel {
+            return Err(format!(
+                "y payload {} != artifact numel {y_numel}",
+                batch.y_i32.len()
+            ));
+        }
+        inputs.push(Self::literal_i32(y_shape, &batch.y_i32)?);
+        match (self.meta.kind.as_str(), lr) {
+            ("train_step", Some(lr)) => inputs.push(xla::Literal::scalar(lr)),
+            ("train_step", None) => return Err("train_step needs lr".into()),
+            (_, None) => {}
+            (k, Some(_)) => return Err(format!("{k} takes no lr")),
+        }
+        Ok(inputs)
+    }
+
+    /// Execute one step. `lr` only for train steps.
+    pub fn run(
+        &self,
+        params: &[Tensor],
+        batch: &Batch,
+        lr: Option<f32>,
+    ) -> Result<StepOutput, String> {
+        let inputs = self.build_inputs(params, batch, lr)?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&inputs)
+            .map_err(|e| format!("execute {}: {e}", self.meta.name))?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("to_literal: {e}"))?
+            .to_tuple()
+            .map_err(|e| format!("to_tuple: {e}"))?;
+
+        match self.meta.kind.as_str() {
+            "eval_step" => {
+                // outputs: (loss, correct)
+                if tuple.len() != 2 {
+                    return Err(format!("eval tuple arity {}", tuple.len()));
+                }
+                let correct = tuple
+                    .pop()
+                    .unwrap()
+                    .to_vec::<f32>()
+                    .map_err(|e| e.to_string())?[0];
+                let loss = tuple
+                    .pop()
+                    .unwrap()
+                    .to_vec::<f32>()
+                    .map_err(|e| e.to_string())?[0];
+                Ok(StepOutput { tensors: vec![], loss, correct })
+            }
+            _ => {
+                // outputs: (tensors..., loss)
+                let np = self.meta.num_params;
+                if tuple.len() != np + 1 {
+                    return Err(format!("step tuple arity {} != {}", tuple.len(), np + 1));
+                }
+                let loss = tuple
+                    .pop()
+                    .unwrap()
+                    .to_vec::<f32>()
+                    .map_err(|e| e.to_string())?[0];
+                let mut tensors = Vec::with_capacity(np);
+                for (lit, (shape, _)) in tuple.into_iter().zip(&self.meta.outputs) {
+                    let data = lit.to_vec::<f32>().map_err(|e| e.to_string())?;
+                    tensors.push(Tensor::from_vec(shape, data));
+                }
+                Ok(StepOutput { tensors, loss, correct: 0.0 })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{ImageTask, LmTask};
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn runtime() -> Option<Runtime> {
+        if !artifacts_dir().join("index.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(Runtime::new(&artifacts_dir()).unwrap())
+    }
+
+    fn image_batch(task: &ImageTask, start: u64, n: usize) -> Batch {
+        let (x, y) = task.batch(start, n);
+        Batch { start, x_f32: x.into_vec(), x_i32: vec![], y_i32: y }
+    }
+
+    #[test]
+    fn cnn_train_step_descends() {
+        let Some(rt) = runtime() else { return };
+        let exe = rt.load("cnn_gemm_b16_train").unwrap();
+        let (_, mut params) = rt.family_init("cnn").unwrap();
+        let task = ImageTask::cifar_like(1);
+        let batch = image_batch(&task, 0, 16);
+        // First loss must be ln(10) (zero-init head).
+        let out = exe.run(&params, &batch, Some(0.01)).unwrap();
+        assert!(
+            (out.loss - 10f32.ln()).abs() < 0.05,
+            "initial loss {} != ln10",
+            out.loss
+        );
+        params = out.tensors;
+        // A few steps on the same batch must reduce the loss.
+        let mut losses = vec![out.loss];
+        for _ in 0..4 {
+            let out = exe.run(&params, &batch, Some(0.01)).unwrap();
+            params = out.tensors;
+            losses.push(out.loss);
+        }
+        assert!(
+            losses.last().unwrap() < &losses[0],
+            "loss should drop: {losses:?}"
+        );
+    }
+
+    #[test]
+    fn grad_step_matches_train_step_direction() {
+        let Some(rt) = runtime() else { return };
+        let train = rt.load("cnn_gemm_b32_train").unwrap();
+        let grad = rt.load("cnn_gemm_b32_grad").unwrap();
+        let (_, params) = rt.family_init("cnn").unwrap();
+        let task = ImageTask::cifar_like(2);
+        let batch = image_batch(&task, 0, 32);
+        let lr = 0.01f32;
+
+        let t_out = train.run(&params, &batch, Some(lr)).unwrap();
+        let g_out = grad.run(&params, &batch, None).unwrap();
+        assert!((t_out.loss - g_out.loss).abs() < 1e-4);
+        // train_step's new params == params - lr * grad_step's grads.
+        for ((p_new, p_old), g) in t_out.tensors.iter().zip(&params).zip(&g_out.tensors) {
+            for ((a, b), gg) in p_new.data().iter().zip(p_old.data()).zip(g.data()) {
+                let expect = b - lr * gg;
+                assert!(
+                    (a - expect).abs() < 1e-4 + 1e-3 * expect.abs(),
+                    "param update mismatch: {a} vs {expect}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn eval_step_counts_correct() {
+        let Some(rt) = runtime() else { return };
+        let eval = rt.load("cnn_gemm_b256_eval").unwrap();
+        let (_, params) = rt.family_init("cnn").unwrap();
+        let task = ImageTask::cifar_like(3);
+        let batch = image_batch(&task, 0, 256);
+        let out = eval.run(&params, &batch, None).unwrap();
+        // Zero-init head: ~uniform predictions, correct ≈ 10% of 256.
+        assert!(out.correct >= 0.0 && out.correct <= 256.0);
+        assert!((out.loss - 10f32.ln()).abs() < 0.05);
+    }
+
+    #[test]
+    fn lm_train_step_runs() {
+        let Some(rt) = runtime() else { return };
+        let exe = rt.load("lm_b8_train").unwrap();
+        let (_, mut params) = rt.family_init("lm").unwrap();
+        let task = LmTask::byte_level(1);
+        let (xs, ys) = task.batch(0, 8);
+        let batch = Batch { start: 0, x_f32: vec![], x_i32: xs, y_i32: ys };
+        let mut last = f32::INFINITY;
+        for i in 0..3 {
+            let out = exe.run(&params, &batch, Some(0.05)).unwrap();
+            params = out.tensors;
+            if i > 0 {
+                assert!(out.loss < last + 0.5, "lm loss exploding: {last} -> {}", out.loss);
+            }
+            last = out.loss;
+        }
+        assert!(last < 5.6, "lm loss {last} should be under ln(256)+eps");
+    }
+
+    #[test]
+    fn wrong_param_count_rejected() {
+        let Some(rt) = runtime() else { return };
+        let exe = rt.load("cnn_gemm_b16_train").unwrap();
+        let task = ImageTask::cifar_like(1);
+        let batch = image_batch(&task, 0, 16);
+        assert!(exe.run(&[], &batch, Some(0.1)).is_err());
+    }
+
+    #[test]
+    fn wrong_batch_size_rejected() {
+        let Some(rt) = runtime() else { return };
+        let exe = rt.load("cnn_gemm_b16_train").unwrap();
+        let (_, params) = rt.family_init("cnn").unwrap();
+        let task = ImageTask::cifar_like(1);
+        let batch = image_batch(&task, 0, 8); // artifact wants 16
+        assert!(exe.run(&params, &batch, Some(0.1)).is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! PJRT runtime: load `artifacts/*.hlo.txt`, compile once, execute on
+//! the hot path. Python never runs here — the HLO text is the contract.
+
+pub mod artifact;
+pub mod exec;
+
+pub use artifact::{ArtifactIndex, ArtifactMeta, ParamManifest, ParamSpec};
+pub use exec::{Runtime, StepOutput, TrainExecutable};

@@ -1,0 +1,287 @@
+//! Discrete-event cluster simulator — the Fig. 4 / Lemma 3.2 testbed.
+//!
+//! Simulates training iterations at the fidelity the paper's analysis
+//! needs: compute time from the device model, data staging over a shared
+//! host bus, parameter synchronization either staged through host memory
+//! (naive) or GPU peer-to-peer (§3.2's remedy), and parameter-server
+//! push/pull over the network model. Stochastic jitter (lognormal-ish)
+//! reflects the paper's observation that "in real-time overheads could
+//! be stochastic".
+
+use super::device::DeviceModel;
+use super::netmodel::NetModel;
+use crate::advisor::netdefs::Network;
+use crate::util::rng::Rng;
+
+/// How multi-GPU weight updates travel (§3.2 "peer-to-peer parameter
+/// updates" remedy).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncMode {
+    /// Stage every GPU's updates through host memory (bus hot-spot).
+    HostStaged,
+    /// Direct GPU DMA ring all-reduce.
+    PeerToPeer,
+}
+
+/// One multi-GPU iteration accounting.
+#[derive(Debug, Clone)]
+pub struct MultiGpuReport {
+    pub g: usize,
+    /// Mean iteration wall-clock seconds.
+    pub iter_s: f64,
+    /// Compute seconds per iteration (per GPU).
+    pub t_c: f64,
+    /// Non-hidden overhead seconds per iteration.
+    pub t_o: f64,
+    /// Images/second across all GPUs.
+    pub throughput: f64,
+}
+
+impl MultiGpuReport {
+    pub fn overhead_ratio(&self) -> f64 {
+        self.t_o / self.t_c
+    }
+}
+
+/// Simulate `iters` data-parallel iterations of `net` on `g` GPUs.
+///
+/// Per iteration and GPU: load + prep a mini-batch (shared host bus,
+/// overlapped with compute by `pipeline_eff`), compute fwd/bwd, then
+/// synchronize weights. Returns averaged accounting.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_multi_gpu(
+    net: &Network,
+    dev: &DeviceModel,
+    g: usize,
+    xmini: usize,
+    host_bus_bw: f64,
+    sync: SyncMode,
+    pipeline_eff: f64,
+    iters: usize,
+    seed: u64,
+) -> MultiGpuReport {
+    assert!(g >= 1 && iters >= 1);
+    let mut rng = Rng::new(seed ^ 0x5151_0000);
+
+    // Compute: fwd+bwd FLOPs for one mini-batch on one GPU.
+    let t_c = net.flops_per_image * xmini as f64 / (dev.peak_flops * dev.gemm_efficiency);
+
+    // Data staging: all G GPUs pull batches over the shared host bus.
+    // (ImageNet-like samples: input tensor bytes + decode amplification.)
+    let sample_bytes = net.input.0 * net.input.0 * net.input.1 * 4;
+    let batch_bytes = sample_bytes * xmini;
+
+    // Parameter sync volume per iteration.
+    let param_bytes = net.params as f64 * 4.0;
+
+    let mut total = 0.0;
+    let mut total_overhead = 0.0;
+    for _ in 0..iters {
+        let jitter = 1.0 + 0.05 * rng.normal().abs();
+
+        // Shared-bus staging: G transfers contend.
+        let t_load = batch_bytes as f64 * g as f64 / host_bus_bw;
+        // Pipelining hides `pipeline_eff` of loading behind compute.
+        let t_load_exposed = (t_load - pipeline_eff * t_c).max(0.0)
+            + t_load * (1.0 - pipeline_eff) * 0.0; // fully modeled above
+
+        let t_sync = match sync {
+            SyncMode::HostStaged => {
+                // Every GPU DMAs its delta to host and back, serialized on
+                // the bus, plus host-side reduce at memory bandwidth.
+                2.0 * param_bytes * g as f64 / host_bus_bw + param_bytes / dev.mem_bw
+            }
+            SyncMode::PeerToPeer => {
+                // Ring all-reduce: 2 (G-1)/G volumes over p2p links.
+                if g == 1 {
+                    0.0
+                } else {
+                    2.0 * param_bytes * (g - 1) as f64 / (g as f64 * dev.h2d_bw)
+                }
+            }
+        };
+
+        let overhead = (t_load_exposed + t_sync) * jitter;
+        total += t_c + overhead;
+        total_overhead += overhead;
+    }
+
+    let iter_s = total / iters as f64;
+    MultiGpuReport {
+        g,
+        iter_s,
+        t_c,
+        t_o: total_overhead / iters as f64,
+        throughput: (g * xmini) as f64 / iter_s,
+    }
+}
+
+/// Parameter-server round accounting (Lemma 3.2 validation).
+#[derive(Debug, Clone)]
+pub struct PsReport {
+    pub n_ps: usize,
+    pub round_s: f64,
+    /// Exposed (non-hidden) I/O seconds per round.
+    pub io_exposed_s: f64,
+    pub throughput: f64,
+}
+
+/// Simulate an async parameter-server cluster: `n_w` workers each
+/// compute `t_c` seconds per round and exchange `s_p_bytes` of
+/// parameters with `n_ps` servers over `net`.
+///
+/// Async pipelining prefetches the next round's pull during compute, so
+/// exposed I/O = max(0, io - t_c) (§3.3's ideal-pipeline case [36]).
+/// `imbalance` > 0 models uneven key distribution: the hottest server
+/// carries `(1 + imbalance)` of its fair share.
+pub fn simulate_ps_cluster(
+    n_w: usize,
+    n_ps: usize,
+    s_p_bytes: f64,
+    t_c: f64,
+    net: &NetModel,
+    imbalance: f64,
+    xmini: usize,
+    iters: usize,
+    seed: u64,
+) -> PsReport {
+    assert!(n_w >= 1 && n_ps >= 1);
+    let mut rng = Rng::new(seed ^ 0x9595_1111);
+    let mut total = 0.0;
+    let mut total_exposed = 0.0;
+    for _ in 0..iters {
+        let jitter = 1.0 + 0.03 * rng.normal().abs();
+        // Each server handles all workers' pull+push of its key share;
+        // the slowest (hottest) server gates the round.
+        let hot_share = (1.0 + imbalance) / n_ps as f64;
+        let io = 2.0 * s_p_bytes * n_w as f64 * hot_share / net.bw
+            + 2.0 * net.latency_s * n_w as f64;
+        let exposed = (io - t_c).max(0.0);
+        total += (t_c + exposed) * jitter;
+        total_exposed += exposed * jitter;
+    }
+    let round_s = total / iters as f64;
+    PsReport {
+        n_ps,
+        round_s,
+        io_exposed_s: total_exposed / iters as f64,
+        throughput: (n_w * xmini) as f64 / round_s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::advisor::lemmas;
+    use crate::advisor::netdefs::{alexnet, vgg16};
+
+    #[test]
+    fn single_gpu_no_sync_overhead() {
+        let r = simulate_multi_gpu(
+            &alexnet(),
+            &DeviceModel::k80(),
+            1,
+            128,
+            24e9,
+            SyncMode::PeerToPeer,
+            1.0,
+            20,
+            1,
+        );
+        assert!(r.t_o < r.t_c * 0.05, "t_o={} t_c={}", r.t_o, r.t_c);
+    }
+
+    #[test]
+    fn p2p_beats_host_staged() {
+        for g in [2, 4, 8] {
+            let host = simulate_multi_gpu(
+                &alexnet(), &DeviceModel::k80(), g, 128, 24e9,
+                SyncMode::HostStaged, 1.0, 20, 2,
+            );
+            let p2p = simulate_multi_gpu(
+                &alexnet(), &DeviceModel::k80(), g, 128, 24e9,
+                SyncMode::PeerToPeer, 1.0, 20, 2,
+            );
+            assert!(
+                p2p.throughput > host.throughput,
+                "g={g}: p2p {} <= host {}",
+                p2p.throughput,
+                host.throughput
+            );
+        }
+    }
+
+    #[test]
+    fn actual_speedup_tracks_lemma31() {
+        // Fig. 4's claim: estimated speedup (Lemma 3.1 with R_O profiled
+        // on a 1-GPU run, §3.2) matches actual speedup. The lemma models
+        // overhead that grows linearly with G — true for host-staged
+        // updates and shared-bus loading, the default framework behavior
+        // the paper benchmarks.
+        let dev = DeviceModel::k80();
+        for net in [alexnet(), vgg16()] {
+            let base = simulate_multi_gpu(
+                &net, &dev, 1, 128, 24e9, SyncMode::HostStaged, 1.0, 50, 3,
+            );
+            let r_o = base.overhead_ratio();
+            for g in [2usize, 4, 8] {
+                let run = simulate_multi_gpu(
+                    &net, &dev, g, 128, 24e9, SyncMode::HostStaged, 1.0, 50, 3,
+                );
+                let actual = run.throughput / base.throughput;
+                let estimated = lemmas::speedup(g, r_o);
+                let err = (actual - estimated).abs() / estimated;
+                assert!(
+                    err < 0.15,
+                    "{}: g={g} actual {actual:.2} vs lemma {estimated:.2}",
+                    net.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn p2p_exceeds_lemma_prediction() {
+        // §3.2's remedy: peer-to-peer updates makes overhead sub-linear
+        // in G, so actual speedup beats the (host-staged-profiled) lemma
+        // estimate at high G.
+        let dev = DeviceModel::k80();
+        let net = alexnet();
+        let base = simulate_multi_gpu(
+            &net, &dev, 1, 128, 24e9, SyncMode::HostStaged, 1.0, 50, 7,
+        );
+        let r_o = base.overhead_ratio();
+        let run = simulate_multi_gpu(
+            &net, &dev, 8, 128, 24e9, SyncMode::PeerToPeer, 1.0, 50, 7,
+        );
+        let actual = run.throughput / base.throughput;
+        assert!(actual > lemmas::speedup(8, r_o));
+    }
+
+    #[test]
+    fn ps_throughput_saturates_at_lemma_nps() {
+        let net = NetModel::gbe10();
+        let (s_p, n_w, t_c) = (244e6, 8usize, 2.0);
+        let rec = lemmas::num_param_servers(s_p, n_w, net.bw, t_c);
+        let at_rec = simulate_ps_cluster(n_w, rec, s_p, t_c, &net, 0.0, 128, 30, 4);
+        let above = simulate_ps_cluster(n_w, rec + 2, s_p, t_c, &net, 0.0, 128, 30, 4);
+        let below = simulate_ps_cluster(n_w, (rec / 2).max(1), s_p, t_c, &net, 0.0, 128, 30, 4);
+        // Below the recommendation I/O is exposed; above it adds nothing.
+        assert!(below.throughput < at_rec.throughput * 0.95);
+        assert!(above.throughput < at_rec.throughput * 1.10);
+        assert!(at_rec.io_exposed_s < 0.25 * t_c);
+    }
+
+    #[test]
+    fn imbalance_needs_more_servers() {
+        // §3.3 measure 3: skewed key distribution exposes I/O at the
+        // balanced recommendation — more servers (or balancing) required.
+        let net = NetModel::gbe10();
+        let (s_p, n_w, t_c) = (244e6, 8usize, 2.0);
+        let rec = lemmas::num_param_servers(s_p, n_w, net.bw, t_c);
+        let balanced = simulate_ps_cluster(n_w, rec, s_p, t_c, &net, 0.0, 128, 30, 5);
+        let skewed = simulate_ps_cluster(n_w, rec, s_p, t_c, &net, 0.8, 128, 30, 5);
+        assert!(skewed.throughput < balanced.throughput);
+        assert!(skewed.io_exposed_s > balanced.io_exposed_s);
+    }
+}

@@ -1,0 +1,98 @@
+//! Accelerator device model — the "GPU" of the paper's analysis.
+//!
+//! Parameters are first-order datasheet numbers; the K80 preset matches
+//! the paper's testbed (one GK210 die of a Tesla K80). A TPU-ish preset
+//! is provided for the DESIGN.md §Hardware-Adaptation estimates.
+
+/// Analytic accelerator description.
+#[derive(Debug, Clone)]
+pub struct DeviceModel {
+    pub name: &'static str,
+    /// Peak dense f32 FLOP/s.
+    pub peak_flops: f64,
+    /// Device memory capacity, bytes.
+    pub mem_bytes: usize,
+    /// Device memory bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// Host-to-device (PCIe/interconnect) bandwidth, bytes/s.
+    pub h2d_bw: f64,
+    /// Achievable fraction of peak for large GEMMs.
+    pub gemm_efficiency: f64,
+    /// Achievable fraction of peak for FFT-class (bandwidth-bound) work.
+    pub fft_efficiency: f64,
+    /// Fixed per-kernel launch overhead, seconds.
+    pub kernel_launch_s: f64,
+}
+
+impl DeviceModel {
+    /// One GK210 die of a Tesla K80 (the paper's EC2 P2 accelerator):
+    /// 12 GB, 2496 cores, ~4.4 TFLOP/s f32 (per-die peak with boost off
+    /// as the paper configures), 240 GB/s HBM... GDDR5, PCIe gen3 x16.
+    pub fn k80() -> Self {
+        DeviceModel {
+            name: "k80-gk210",
+            peak_flops: 4.4e12 / 2.0, // autoboost disabled halves clocks
+            mem_bytes: 12usize << 30,
+            mem_bw: 240e9 / 2.0,
+            h2d_bw: 12e9,
+            gemm_efficiency: 0.70,
+            fft_efficiency: 0.35,
+            kernel_launch_s: 10e-6,
+        }
+    }
+
+    /// TPU-core-like model used for the Pallas §Perf estimates: 128x128
+    /// MXU, ~16 MiB VMEM treated as cache, big HBM bandwidth.
+    pub fn tpu_core() -> Self {
+        DeviceModel {
+            name: "tpu-core",
+            peak_flops: 45e12,
+            mem_bytes: 16usize << 30,
+            mem_bw: 600e9,
+            h2d_bw: 50e9,
+            gemm_efficiency: 0.80,
+            fft_efficiency: 0.25, // FFT maps poorly onto the MXU
+            kernel_launch_s: 3e-6,
+        }
+    }
+
+    /// The host CPU this repo actually runs on — used to sanity-scale
+    /// measured PJRT step times into simulator units.
+    pub fn cpu_host() -> Self {
+        DeviceModel {
+            name: "cpu-host",
+            peak_flops: 5e10,
+            mem_bytes: 8usize << 30,
+            mem_bw: 20e9,
+            h2d_bw: 20e9, // host == device
+            gemm_efficiency: 0.5,
+            fft_efficiency: 0.3,
+            kernel_launch_s: 1e-6,
+        }
+    }
+
+    /// Time to move `bytes` host->device.
+    pub fn h2d_time(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.h2d_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn k80_matches_paper_testbed() {
+        let d = DeviceModel::k80();
+        assert_eq!(d.mem_bytes, 12usize << 30); // "each GPU provides 12 GB"
+        assert!(d.gemm_efficiency > d.fft_efficiency);
+    }
+
+    #[test]
+    fn h2d_time_linear() {
+        let d = DeviceModel::k80();
+        let t1 = d.h2d_time(1 << 20);
+        let t2 = d.h2d_time(2 << 20);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,17 @@
+//! Analytic hardware models + discrete-event cluster simulator.
+//!
+//! The paper's testbed (AWS P2: K80 GPUs, PCIe buses, 10/20 Gbps
+//! networking) is not available here; these models supply the *times and
+//! sizes* the paper's guidelines consume (DESIGN.md §4 substitution
+//! table). Numerics always run on the real PJRT runtime — the simulator
+//! only answers "how long would this take on the paper's hardware".
+
+pub mod cluster;
+pub mod device;
+pub mod netmodel;
+pub mod presets;
+
+pub use cluster::{simulate_multi_gpu, simulate_ps_cluster, MultiGpuReport, PsReport};
+pub use device::DeviceModel;
+pub use netmodel::NetModel;
+pub use presets::{p2_16xlarge, p2_8xlarge, p2_xlarge, InstancePreset};

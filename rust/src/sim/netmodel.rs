@@ -1,0 +1,58 @@
+//! Network bandwidth/latency model for the distributed (§3.3) analysis.
+
+/// Point-to-point network model with shared-capacity semantics.
+#[derive(Debug, Clone)]
+pub struct NetModel {
+    pub name: &'static str,
+    /// Per-link bandwidth, bytes/s.
+    pub bw: f64,
+    /// Per-message latency, seconds.
+    pub latency_s: f64,
+}
+
+impl NetModel {
+    pub fn gbe1() -> Self {
+        NetModel { name: "1GbE", bw: 125e6, latency_s: 50e-6 }
+    }
+
+    pub fn gbe10() -> Self {
+        NetModel { name: "10GbE", bw: 1.25e9, latency_s: 20e-6 }
+    }
+
+    pub fn gbe20() -> Self {
+        NetModel { name: "20GbE", bw: 2.5e9, latency_s: 20e-6 }
+    }
+
+    /// Transfer time for one message of `bytes`.
+    pub fn xfer_time(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 / self.bw
+    }
+
+    /// Transfer time when `sharers` flows share the link fairly.
+    pub fn shared_xfer_time(&self, bytes: usize, sharers: usize) -> f64 {
+        self.latency_s + bytes as f64 * sharers.max(1) as f64 / self.bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_alexnet_1gbe_example() {
+        // §3.3: "pushing parameter updates produces around 180MB network
+        // traffic, which exceeds the capacity of commonly used 1Gbit
+        // Ethernet" — 180 MB over 1GbE takes ~1.4s, far beyond typical
+        // sub-second compute rounds.
+        let t = NetModel::gbe1().xfer_time(180 << 20);
+        assert!(t > 1.0, "180MB/1GbE = {t:.2}s should exceed 1s");
+        let t10 = NetModel::gbe10().xfer_time(180 << 20);
+        assert!(t10 < 0.2);
+    }
+
+    #[test]
+    fn sharing_slows_down() {
+        let n = NetModel::gbe10();
+        assert!(n.shared_xfer_time(1 << 20, 4) > 3.0 * n.xfer_time(1 << 20));
+    }
+}

@@ -1,0 +1,84 @@
+//! Table 1 — AWS P2 instance presets (the paper's evaluation machines).
+
+use super::device::DeviceModel;
+use super::netmodel::NetModel;
+
+/// An EC2 instance shape from the paper's Table 1.
+#[derive(Debug, Clone)]
+pub struct InstancePreset {
+    pub name: &'static str,
+    pub gpus: usize,
+    pub gpu: DeviceModel,
+    pub net: NetModel,
+    /// Whether full GPU peer-to-peer is available (footnote 3: the
+    /// 16xlarge lacks full p2p, which is why the paper excludes it).
+    pub full_p2p: bool,
+    /// Host PCIe bus bandwidth shared by all GPUs, bytes/s.
+    pub host_bus_bw: f64,
+}
+
+/// p2.xlarge — 1 GPU, 12 GB, "High" networking (~1.25 Gbps effective).
+pub fn p2_xlarge() -> InstancePreset {
+    InstancePreset {
+        name: "p2.xlarge",
+        gpus: 1,
+        gpu: DeviceModel::k80(),
+        net: NetModel { name: "high", bw: 156e6, latency_s: 40e-6 },
+        full_p2p: true,
+        host_bus_bw: 12e9,
+    }
+}
+
+/// p2.8xlarge — 8 GPUs, 96 GB total GPU memory, 10 Gbps.
+pub fn p2_8xlarge() -> InstancePreset {
+    InstancePreset {
+        name: "p2.8xlarge",
+        gpus: 8,
+        gpu: DeviceModel::k80(),
+        net: NetModel::gbe10(),
+        full_p2p: true,
+        host_bus_bw: 24e9,
+    }
+}
+
+/// p2.16xlarge — 16 GPUs, 192 GB, 20 Gbps, no full p2p.
+pub fn p2_16xlarge() -> InstancePreset {
+    InstancePreset {
+        name: "p2.16xlarge",
+        gpus: 16,
+        gpu: DeviceModel::k80(),
+        net: NetModel::gbe20(),
+        full_p2p: false,
+        host_bus_bw: 24e9,
+    }
+}
+
+/// Render the paper's Table 1 for bench headers.
+pub fn table1_rows() -> Vec<[String; 4]> {
+    [p2_xlarge(), p2_8xlarge(), p2_16xlarge()]
+        .iter()
+        .map(|p| {
+            [
+                p.name.to_string(),
+                p.gpus.to_string(),
+                format!("{} GB", p.gpus * (p.gpu.mem_bytes >> 30)),
+                p.net.name.to_string(),
+            ]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper() {
+        let rows = table1_rows();
+        assert_eq!(rows[0][1], "1");
+        assert_eq!(rows[1][1], "8");
+        assert_eq!(rows[1][2], "96 GB"); // 8 x 12 GB
+        assert_eq!(rows[2][2], "192 GB");
+        assert!(!p2_16xlarge().full_p2p); // footnote 3
+    }
+}

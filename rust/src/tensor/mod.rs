@@ -1,0 +1,184 @@
+//! Dense host tensor: the L3-side value type for parameters, gradients
+//! and batches. Row-major contiguous f32; conversion to/from the byte
+//! wire format and (in `runtime`) to PJRT literals.
+
+use std::fmt;
+
+/// Row-major dense f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} != data len {}",
+            data.len()
+        );
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn scalar(x: f32) -> Self {
+        Tensor {
+            shape: vec![],
+            data: vec![x],
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of equal element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Bytes in little-endian f32 wire order (zero-copy on LE hosts in
+    /// spirit; here an explicit encode for portability).
+    pub fn to_le_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.data.len() * 4);
+        for x in &self.data {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn from_le_bytes(shape: &[usize], bytes: &[u8]) -> Result<Self, String> {
+        let n: usize = shape.iter().product();
+        if bytes.len() != n * 4 {
+            return Err(format!(
+                "byte length {} != 4 * numel {n} for shape {shape:?}",
+                bytes.len()
+            ));
+        }
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Tensor {
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+
+    // --- arithmetic used on the PS/worker hot path ---------------------
+
+    /// `self += alpha * other` (axpy); shapes must match.
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.shape, other.shape, "axpy shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// `self *= s`.
+    pub fn scale(&mut self, s: f32) {
+        for a in &mut self.data {
+            *a *= s;
+        }
+    }
+
+    pub fn l2_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{} elems]", self.shape, self.data.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert!(t.data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn from_vec_checks_len() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let t = Tensor::from_vec(&[2, 2], vec![1.0, -2.5, 3.25, 0.0]);
+        let b = t.to_le_bytes();
+        let t2 = Tensor::from_le_bytes(&[2, 2], &b).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn bytes_length_checked() {
+        assert!(Tensor::from_le_bytes(&[3], &[0u8; 8]).is_err());
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::from_vec(&[3], vec![10.0, 20.0, 30.0]);
+        a.axpy(0.5, &b);
+        assert_eq!(a.data(), &[6.0, 12.0, 18.0]);
+        a.scale(2.0);
+        assert_eq!(a.data(), &[12.0, 24.0, 36.0]);
+    }
+
+    #[test]
+    fn scalar_and_reshape() {
+        let s = Tensor::scalar(7.0);
+        assert_eq!(s.shape(), &[] as &[usize]);
+        let t = Tensor::zeros(&[4, 2]).reshape(&[2, 4]);
+        assert_eq!(t.shape(), &[2, 4]);
+    }
+
+    #[test]
+    fn l2_norm() {
+        let t = Tensor::from_vec(&[2], vec![3.0, 4.0]);
+        assert!((t.l2_norm() - 5.0).abs() < 1e-6);
+    }
+}

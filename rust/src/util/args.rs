@@ -1,0 +1,247 @@
+//! Tiny declarative CLI argument parser (clap substitute).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! subcommands (first bare word), defaults, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative parser for one (sub)command.
+#[derive(Debug, Default)]
+pub struct ArgSpec {
+    program: String,
+    about: String,
+    opts: Vec<OptSpec>,
+    positionals: Vec<(String, String)>, // (name, help)
+}
+
+/// Parse result: option/flag/positional lookups with typed accessors.
+#[derive(Debug, Default, Clone)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+}
+
+impl ArgSpec {
+    pub fn new(program: &str, about: &str) -> Self {
+        ArgSpec {
+            program: program.to_string(),
+            about: about.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn opt(mut self, name: &str, default: Option<&str>, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: default.map(|s| s.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positionals.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n", self.program, self.about);
+        let _ = write!(s, "usage: {}", self.program);
+        for (p, _) in &self.positionals {
+            let _ = write!(s, " <{p}>");
+        }
+        let _ = writeln!(s, " [options]\n\noptions:");
+        for o in &self.opts {
+            let head = if o.is_flag {
+                format!("  --{}", o.name)
+            } else {
+                format!("  --{} <v>", o.name)
+            };
+            let dflt = o
+                .default
+                .as_ref()
+                .map(|d| format!(" (default: {d})"))
+                .unwrap_or_default();
+            let _ = writeln!(s, "{head:28} {}{dflt}", o.help);
+        }
+        s
+    }
+
+    /// Parse `argv` (without the program name). Returns Err with a usage
+    /// string on `--help` or malformed input.
+    pub fn parse(&self, argv: &[String]) -> Result<Parsed, String> {
+        let mut out = Parsed::default();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                out.values.insert(o.name.clone(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(format!("flag --{key} takes no value"));
+                    }
+                    out.flags.push(key);
+                } else {
+                    let val = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("option --{key} needs a value"))?
+                        }
+                    };
+                    out.values.insert(key, val);
+                }
+            } else {
+                out.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        if out.positionals.len() < self.positionals.len() {
+            return Err(format!(
+                "missing positional <{}>\n\n{}",
+                self.positionals[out.positionals.len()].0,
+                self.usage()
+            ));
+        }
+        Ok(out)
+    }
+}
+
+impl Parsed {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, key: &str) -> String {
+        self.values
+            .get(key)
+            .unwrap_or_else(|| panic!("missing option --{key} (no default)"))
+            .clone()
+    }
+
+    pub fn u64(&self, key: &str) -> u64 {
+        self.str(key)
+            .parse()
+            .unwrap_or_else(|e| panic!("--{key}: not an integer: {e}"))
+    }
+
+    pub fn usize(&self, key: &str) -> usize {
+        self.u64(key) as usize
+    }
+
+    pub fn f64(&self, key: &str) -> f64 {
+        self.str(key)
+            .parse()
+            .unwrap_or_else(|e| panic!("--{key}: not a number: {e}"))
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("t", "test")
+            .opt("batch", Some("32"), "batch size")
+            .opt("name", None, "a name")
+            .flag("verbose", "chatty")
+            .positional("cmd", "what to do")
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let p = spec().parse(&argv(&["run", "--batch", "64"])).unwrap();
+        assert_eq!(p.u64("batch"), 64);
+        assert_eq!(p.positional(0), Some("run"));
+        assert!(!p.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_flag() {
+        let p = spec()
+            .parse(&argv(&["run", "--batch=128", "--verbose"]))
+            .unwrap();
+        assert_eq!(p.u64("batch"), 128);
+        assert!(p.flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(spec().parse(&argv(&["run", "--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_positional_rejected() {
+        assert!(spec().parse(&argv(&[])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(spec().parse(&argv(&["run", "--batch"])).is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let err = spec().parse(&argv(&["--help"])).unwrap_err();
+        assert!(err.contains("usage:"));
+        assert!(err.contains("--batch"));
+    }
+
+    #[test]
+    fn optional_opt_absent() {
+        let p = spec().parse(&argv(&["run"])).unwrap();
+        assert_eq!(p.get("name"), None);
+    }
+}

@@ -1,0 +1,15 @@
+//! Self-contained utility substrates.
+//!
+//! The build is fully offline against a vendored crate set that contains
+//! no `rand`/`clap`/`serde`/`log`/`criterion`/`proptest`, so this module
+//! provides the from-scratch equivalents the rest of the system uses:
+//! deterministic RNG, CLI parsing, structured logging, streaming
+//! statistics, JSON, a property-test harness and a bench harness.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod logfmt;
+pub mod prop;
+pub mod rng;
+pub mod stats;

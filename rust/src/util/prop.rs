@@ -1,0 +1,121 @@
+//! Mini property-testing harness (proptest substitute).
+//!
+//! `run(cases, seed, |g| ...)` runs a closure against `cases` generated
+//! inputs drawn through the [`Gen`] handle; on failure it reports the
+//! failing case's seed so the case can be replayed deterministically:
+//! `replay(seed, |g| ...)`.
+
+use super::rng::Rng;
+
+/// Value source handed to each property case.
+pub struct Gen {
+    rng: Rng,
+    /// Seed that reproduces exactly this case.
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.u64(lo as u64, hi as u64) as usize
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f64(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32(lo, hi)).collect()
+    }
+
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize(0, xs.len() - 1)]
+    }
+
+    pub fn string(&mut self, max_len: usize) -> String {
+        let len = self.usize(0, max_len);
+        (0..len)
+            .map(|_| char::from(b'a' + self.u64(0, 25) as u8))
+            .collect()
+    }
+}
+
+/// Run `property` against `cases` generated inputs. Panics with the
+/// case seed on the first failure (propagating the inner panic message).
+pub fn run<F: FnMut(&mut Gen)>(cases: usize, seed: u64, mut property: F) {
+    let mut meta = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = meta.next_u64();
+        let mut g = Gen {
+            rng: Rng::new(case_seed),
+            case_seed,
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| property(&mut g)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed (case {case}, replay seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case by its reported seed.
+pub fn replay<F: FnMut(&mut Gen)>(case_seed: u64, mut property: F) {
+    let mut g = Gen {
+        rng: Rng::new(case_seed),
+        case_seed,
+    };
+    property(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        run(100, 1, |g| {
+            let a = g.u64(0, 1000);
+            let b = g.u64(0, 1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let err = std::panic::catch_unwind(|| {
+            run(100, 2, |g| {
+                let v = g.usize(0, 100);
+                assert!(v < 90, "drew {v}");
+            })
+        })
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("replay seed"), "{msg}");
+    }
+
+    #[test]
+    fn bounds_respected() {
+        run(200, 3, |g| {
+            let v = g.u64(10, 20);
+            assert!((10..=20).contains(&v));
+            let f = g.f64(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        });
+    }
+}

@@ -1,0 +1,12 @@
+//! Worker runtime: the 7-step mini-batch pipeline of Fig. 1, with
+//! per-step instrumentation that yields the `R_O` Lemma 3.1 consumes.
+
+pub mod pipeline;
+pub mod schedule;
+pub mod trace;
+pub mod profiler;
+
+pub use pipeline::{PipelineConfig, WorkerStats};
+pub use schedule::LrSchedule;
+pub use trace::TraceRecorder;
+pub use profiler::{Step, StepProfiler};

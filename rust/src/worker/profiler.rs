@@ -1,0 +1,176 @@
+//! Per-step timing for the Fig. 1 pipeline.
+//!
+//! §3.2: "a practitioner can quickly profile the training program for a
+//! couple of epochs" to estimate `R_O` — this is that profiler. Step 5
+//! (device compute) is the hideable-behind budget; every other step's
+//! *exposed* time is overhead.
+
+use std::time::Instant;
+
+use crate::util::stats::Welford;
+
+/// The paper's seven mini-batch steps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Step {
+    ParamRefresh = 0, // 1. pull W from parameter servers
+    DataLoad = 1,     // 2. mini-batch from storage (exposed wait)
+    DataPrep = 2,     // 3. decode/augment
+    H2d = 3,          // 4. host -> device transfer
+    Compute = 4,      // 5. device fwd/bwd
+    Update = 5,       // 6. apply ΔW
+    DistUpdate = 6,   // 7. push to parameter servers
+}
+
+pub const ALL_STEPS: [Step; 7] = [
+    Step::ParamRefresh,
+    Step::DataLoad,
+    Step::DataPrep,
+    Step::H2d,
+    Step::Compute,
+    Step::Update,
+    Step::DistUpdate,
+];
+
+impl Step {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Step::ParamRefresh => "param_refresh",
+            Step::DataLoad => "data_load",
+            Step::DataPrep => "data_prep",
+            Step::H2d => "h2d",
+            Step::Compute => "compute",
+            Step::Update => "update",
+            Step::DistUpdate => "dist_update",
+        }
+    }
+}
+
+/// Accumulates per-step seconds across iterations.
+#[derive(Debug, Default)]
+pub struct StepProfiler {
+    stats: [Welford; 7],
+}
+
+/// RAII timer for one step.
+pub struct StepTimer<'a> {
+    profiler: &'a mut StepProfiler,
+    step: Step,
+    t0: Instant,
+}
+
+impl StepProfiler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn time(&mut self, step: Step) -> StepTimer<'_> {
+        StepTimer { step, t0: Instant::now(), profiler: self }
+    }
+
+    pub fn record(&mut self, step: Step, seconds: f64) {
+        self.stats[step as usize].push(seconds);
+    }
+
+    pub fn mean(&self, step: Step) -> f64 {
+        self.stats[step as usize].mean()
+    }
+
+    pub fn iterations(&self) -> u64 {
+        self.stats[Step::Compute as usize].count()
+    }
+
+    /// Mean compute seconds per iteration (T_C).
+    pub fn t_c(&self) -> f64 {
+        self.mean(Step::Compute)
+    }
+
+    /// Mean *exposed* overhead seconds per iteration (T_O): everything
+    /// that is not step 5.
+    pub fn t_o(&self) -> f64 {
+        ALL_STEPS
+            .iter()
+            .filter(|s| **s != Step::Compute)
+            .map(|s| self.mean(*s))
+            .sum()
+    }
+
+    /// R_O = T_O / T_C — the Lemma 3.1 input.
+    pub fn r_o(&self) -> f64 {
+        let tc = self.t_c();
+        if tc == 0.0 {
+            0.0
+        } else {
+            self.t_o() / tc
+        }
+    }
+
+    /// Human-readable per-step report.
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for step in ALL_STEPS {
+            s.push_str(&format!(
+                "{:14} {:9.3} ms\n",
+                step.name(),
+                self.mean(step) * 1e3
+            ));
+        }
+        s.push_str(&format!(
+            "T_C={:.3}ms T_O={:.3}ms R_O={:.3}\n",
+            self.t_c() * 1e3,
+            self.t_o() * 1e3,
+            self.r_o()
+        ));
+        s
+    }
+}
+
+impl Drop for StepTimer<'_> {
+    fn drop(&mut self) {
+        let dt = self.t0.elapsed().as_secs_f64();
+        self.profiler.record(self.step, dt);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn r_o_arithmetic() {
+        let mut p = StepProfiler::new();
+        for _ in 0..10 {
+            p.record(Step::Compute, 1.0);
+            p.record(Step::DataLoad, 0.05);
+            p.record(Step::DistUpdate, 0.05);
+        }
+        assert!((p.t_c() - 1.0).abs() < 1e-12);
+        assert!((p.t_o() - 0.1).abs() < 1e-12);
+        assert!((p.r_o() - 0.1).abs() < 1e-12);
+        assert_eq!(p.iterations(), 10);
+    }
+
+    #[test]
+    fn timer_records() {
+        let mut p = StepProfiler::new();
+        {
+            let _t = p.time(Step::Compute);
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(p.t_c() >= 0.004);
+    }
+
+    #[test]
+    fn zero_compute_safe() {
+        let p = StepProfiler::new();
+        assert_eq!(p.r_o(), 0.0);
+    }
+
+    #[test]
+    fn report_contains_all_steps() {
+        let p = StepProfiler::new();
+        let r = p.report();
+        for s in ALL_STEPS {
+            assert!(r.contains(s.name()));
+        }
+    }
+}

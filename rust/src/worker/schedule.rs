@@ -1,0 +1,118 @@
+//! Learning-rate schedules (paper §1.1.1: "the settings of
+//! hyper-parameters such as learning rate ... are crucial" [6, 17, 25]).
+//!
+//! Pure functions of the step index so every worker computes the same
+//! rate without coordination — important in the async PS mode, where a
+//! server-side schedule would race with in-flight pushes.
+
+/// A learning-rate schedule.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LrSchedule {
+    /// Constant `lr`.
+    Const { lr: f32 },
+    /// Multiply by `gamma` every `every` steps (classic step decay).
+    StepDecay { lr: f32, gamma: f32, every: usize },
+    /// Linear warmup to `lr` over `warmup` steps, then cosine decay to
+    /// `final_lr` at `total` steps.
+    WarmupCosine { lr: f32, final_lr: f32, warmup: usize, total: usize },
+}
+
+impl LrSchedule {
+    pub fn at(&self, step: usize) -> f32 {
+        match *self {
+            LrSchedule::Const { lr } => lr,
+            LrSchedule::StepDecay { lr, gamma, every } => {
+                assert!(every > 0);
+                lr * gamma.powi((step / every) as i32)
+            }
+            LrSchedule::WarmupCosine { lr, final_lr, warmup, total } => {
+                if warmup > 0 && step < warmup {
+                    return lr * (step + 1) as f32 / warmup as f32;
+                }
+                let t = (step - warmup) as f32 / (total.saturating_sub(warmup)).max(1) as f32;
+                let t = t.clamp(0.0, 1.0);
+                final_lr + 0.5 * (lr - final_lr) * (1.0 + (std::f32::consts::PI * t).cos())
+            }
+        }
+    }
+
+    /// Parse "const:0.01", "step:0.1,0.5,1000", "cosine:0.1,0.001,100,5000".
+    pub fn parse(s: &str) -> Result<LrSchedule, String> {
+        let (kind, rest) = s.split_once(':').ok_or("schedule needs kind:args")?;
+        let parts: Vec<&str> = rest.split(',').collect();
+        let f = |i: usize| -> Result<f32, String> {
+            parts
+                .get(i)
+                .ok_or_else(|| format!("missing arg {i} in {s:?}"))?
+                .parse()
+                .map_err(|e| format!("bad number in {s:?}: {e}"))
+        };
+        let u = |i: usize| -> Result<usize, String> { Ok(f(i)? as usize) };
+        match kind {
+            "const" => Ok(LrSchedule::Const { lr: f(0)? }),
+            "step" => Ok(LrSchedule::StepDecay { lr: f(0)?, gamma: f(1)?, every: u(2)? }),
+            "cosine" => Ok(LrSchedule::WarmupCosine {
+                lr: f(0)?,
+                final_lr: f(1)?,
+                warmup: u(2)?,
+                total: u(3)?,
+            }),
+            other => Err(format!("unknown schedule kind {other:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn const_schedule() {
+        let s = LrSchedule::Const { lr: 0.1 };
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(10_000), 0.1);
+    }
+
+    #[test]
+    fn step_decay() {
+        let s = LrSchedule::StepDecay { lr: 1.0, gamma: 0.5, every: 10 };
+        assert_eq!(s.at(0), 1.0);
+        assert_eq!(s.at(9), 1.0);
+        assert_eq!(s.at(10), 0.5);
+        assert_eq!(s.at(25), 0.25);
+    }
+
+    #[test]
+    fn warmup_then_cosine() {
+        let s = LrSchedule::WarmupCosine { lr: 1.0, final_lr: 0.0, warmup: 10, total: 110 };
+        assert!(s.at(0) < 0.2); // warming up
+        assert!((s.at(9) - 1.0).abs() < 1e-6); // warmup done
+        assert!((s.at(10) - 1.0).abs() < 1e-6); // cosine start
+        let mid = s.at(60);
+        assert!((mid - 0.5).abs() < 0.01); // halfway
+        assert!(s.at(110) < 1e-6); // decayed out
+                                   // monotone decreasing after warmup
+        for step in 10..109 {
+            assert!(s.at(step + 1) <= s.at(step) + 1e-6);
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(
+            LrSchedule::parse("const:0.01").unwrap(),
+            LrSchedule::Const { lr: 0.01 }
+        );
+        assert_eq!(
+            LrSchedule::parse("step:0.1,0.5,1000").unwrap(),
+            LrSchedule::StepDecay { lr: 0.1, gamma: 0.5, every: 1000 }
+        );
+        assert!(matches!(
+            LrSchedule::parse("cosine:0.1,0.001,100,5000").unwrap(),
+            LrSchedule::WarmupCosine { .. }
+        ));
+        assert!(LrSchedule::parse("exp:1").is_err());
+        assert!(LrSchedule::parse("const").is_err());
+        assert!(LrSchedule::parse("step:0.1").is_err());
+    }
+}

@@ -1,0 +1,239 @@
+//! Cross-module integration tests that do NOT require PJRT artifacts:
+//! the full PS protocol over real TCP with a synthetic quadratic model,
+//! advisor pipelines end-to-end, and failure injection.
+//!
+//! (PJRT-backed integration lives in the module tests of `runtime`,
+//! `worker::pipeline` and `coordinator`, gated on `make artifacts`.)
+
+use dtlsda::advisor;
+use dtlsda::advisor::netdefs;
+use dtlsda::net::message::Message;
+use dtlsda::net::transport::{connect, Transport};
+use dtlsda::ps::client::PsClient;
+use dtlsda::ps::router::Router;
+use dtlsda::ps::server::{PsServerHandle, UpdateMode};
+use dtlsda::ps::shard::{Optimizer, ShardStore};
+use dtlsda::sim::device::DeviceModel;
+use dtlsda::tensor::Tensor;
+use dtlsda::util::prop;
+use dtlsda::util::rng::Rng;
+
+/// Synthetic convex task: params w (3 tensors), loss = Σ|w - target|²,
+/// grad = 2(w - target). SGD through the real PS cluster must converge
+/// to the target — validates the whole pull/push/update path numerically
+/// without PJRT.
+fn quad_cluster(
+    n_servers: usize,
+    n_workers: usize,
+    sync: bool,
+    steps: usize,
+    lr: f32,
+) -> (Vec<Tensor>, Vec<Tensor>) {
+    let shapes: Vec<Vec<usize>> = vec![vec![64], vec![8, 8], vec![128]];
+    let sizes: Vec<usize> = shapes.iter().map(|s| s.iter().product::<usize>() * 4).collect();
+    let router = Router::new(&sizes, n_servers);
+
+    let mut rng = Rng::new(77);
+    let targets: Vec<Tensor> = shapes
+        .iter()
+        .map(|s| {
+            let n: usize = s.iter().product();
+            Tensor::from_vec(s, (0..n).map(|_| rng.normal() as f32).collect())
+        })
+        .collect();
+
+    let mode = if sync {
+        UpdateMode::Sync { expected_workers: n_workers, backup_workers: 0 }
+    } else {
+        UpdateMode::Async
+    };
+    let mut servers = Vec::new();
+    for s in 0..n_servers {
+        let mut store = ShardStore::new(Optimizer::Sgd { lr });
+        for &k in router.keys_of(s) {
+            store.insert(k, Tensor::zeros(&shapes[k as usize]));
+        }
+        servers.push(PsServerHandle::spawn_tcp("127.0.0.1:0", store, mode).unwrap());
+    }
+    let addrs: Vec<_> = servers.iter().map(|s| s.addr).collect();
+
+    let mut handles = Vec::new();
+    for w in 0..n_workers {
+        let addrs = addrs.clone();
+        let router = router.clone();
+        let targets = targets.clone();
+        handles.push(std::thread::spawn(move || {
+            let transports: Vec<Box<dyn Transport>> = addrs
+                .iter()
+                .map(|a| Box::new(connect(a).unwrap()) as Box<dyn Transport>)
+                .collect();
+            let mut client = PsClient::new(w as u32, transports, router);
+            for step in 0..steps {
+                let params = client.pull_all().unwrap();
+                let grads: Vec<Tensor> = params
+                    .iter()
+                    .zip(&targets)
+                    .map(|(p, t)| {
+                        let mut g = p.clone();
+                        g.axpy(-1.0, t);
+                        g.scale(2.0);
+                        g
+                    })
+                    .collect();
+                client.push(step as u64, &grads).unwrap();
+                if sync {
+                    client.barrier(step as u64).unwrap();
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let transports: Vec<Box<dyn Transport>> = addrs
+        .iter()
+        .map(|a| Box::new(connect(a).unwrap()) as Box<dyn Transport>)
+        .collect();
+    let mut client = PsClient::new(99, transports, router);
+    let finals = client.pull_all().unwrap();
+    drop(client);
+    for s in &mut servers {
+        s.shutdown();
+    }
+    (finals, targets)
+}
+
+fn l2_distance(a: &[Tensor], b: &[Tensor]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let mut d = x.clone();
+            d.axpy(-1.0, y);
+            d.l2_norm().powi(2)
+        })
+        .sum::<f32>()
+        .sqrt()
+}
+
+#[test]
+fn quadratic_converges_async() {
+    let (finals, targets) = quad_cluster(3, 2, false, 60, 0.05);
+    let d = l2_distance(&finals, &targets);
+    assert!(d < 0.1, "async SGD did not converge: distance {d}");
+}
+
+#[test]
+fn quadratic_converges_sync() {
+    let (finals, targets) = quad_cluster(2, 3, true, 60, 0.1);
+    let d = l2_distance(&finals, &targets);
+    assert!(d < 0.05, "sync SGD did not converge: distance {d}");
+}
+
+#[test]
+fn sync_is_deterministic() {
+    // Two identical sync runs must agree bit-for-bit (aggregation order
+    // inside a barrier is mean over a fixed set).
+    let (a, _) = quad_cluster(2, 2, true, 10, 0.1);
+    let (b, _) = quad_cluster(2, 2, true, 10, 0.1);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.data(), y.data());
+    }
+}
+
+#[test]
+fn advisor_end_to_end_consistency() {
+    // The three guidelines agree with each other on a coherent scenario:
+    // AlexNet on K80s, 8 workers.
+    let net = netdefs::alexnet();
+    let dev = DeviceModel::k80();
+    let plan = advisor::optimize_minibatch(&net, &dev, &[64, 128, 256]).unwrap();
+    let t_c = plan.best.step_time;
+    assert!(t_c > 0.0);
+
+    // Lemma 3.1: with R_O = 10%, 4 GPUs give ~2.9-3.1x.
+    let s = advisor::speedup(4, 0.10);
+    assert!((2.8..=3.2).contains(&s));
+
+    // Lemma 3.2 with the plan's T_C and 10GbE:
+    let n_ps = advisor::num_param_servers(net.params as f64 * 4.0, 8, 1.25e9, t_c);
+    assert!(n_ps >= 1);
+    // More bandwidth never increases the count.
+    let n_ps_20 = advisor::num_param_servers(net.params as f64 * 4.0, 8, 2.5e9, t_c);
+    assert!(n_ps_20 <= n_ps);
+}
+
+#[test]
+fn server_rejects_malformed_use() {
+    // Barrier against an async server errors but doesn't kill the server.
+    let mut store = ShardStore::new(Optimizer::Sgd { lr: 0.1 });
+    store.insert(0, Tensor::from_vec(&[2], vec![1.0, 2.0]));
+    let mut srv = PsServerHandle::spawn_tcp("127.0.0.1:0", store, UpdateMode::Async).unwrap();
+    let mut c = connect(srv.addr).unwrap();
+    c.send(&Message::Barrier { worker: 0, step: 0 }).unwrap();
+    assert!(matches!(c.recv().unwrap(), Message::Error { .. }));
+    // Server still serves afterwards:
+    c.send(&Message::Pull { worker: 0, keys: vec![0] }).unwrap();
+    assert!(matches!(c.recv().unwrap(), Message::PullReply { .. }));
+    srv.shutdown();
+}
+
+#[test]
+fn prop_cluster_state_matches_sequential() {
+    // Property: a single-worker async cluster applies exactly the same
+    // updates as a sequential in-memory loop, for random shapes/steps.
+    prop::run(10, 0xBEEF, |g| {
+        let n_keys = g.usize(1, 4);
+        let shapes: Vec<Vec<usize>> = (0..n_keys).map(|_| vec![g.usize(1, 32)]).collect();
+        let sizes: Vec<usize> = shapes.iter().map(|s| s[0] * 4).collect();
+        let n_servers = g.usize(1, 3);
+        let steps = g.usize(1, 5);
+        let lr = 0.1f32;
+        let router = Router::new(&sizes, n_servers);
+
+        let mut servers = Vec::new();
+        for s in 0..n_servers {
+            let mut store = ShardStore::new(Optimizer::Sgd { lr });
+            for &k in router.keys_of(s) {
+                store.insert(k, Tensor::zeros(&shapes[k as usize]));
+            }
+            servers.push(
+                PsServerHandle::spawn_tcp("127.0.0.1:0", store, UpdateMode::Async).unwrap(),
+            );
+        }
+        let transports: Vec<Box<dyn Transport>> = servers
+            .iter()
+            .map(|s| Box::new(connect(s.addr).unwrap()) as Box<dyn Transport>)
+            .collect();
+        let mut client = PsClient::new(0, transports, router);
+
+        // Sequential reference.
+        let mut reference: Vec<Tensor> = shapes.iter().map(|s| Tensor::zeros(s)).collect();
+        for step in 0..steps {
+            let grads: Vec<Tensor> = shapes
+                .iter()
+                .enumerate()
+                .map(|(k, s)| {
+                    Tensor::from_vec(
+                        s,
+                        (0..s[0]).map(|i| ((step + k + i) % 7) as f32 - 3.0).collect(),
+                    )
+                })
+                .collect();
+            client.push(step as u64, &grads).unwrap();
+            for (r, gt) in reference.iter_mut().zip(&grads) {
+                r.axpy(-lr, gt);
+            }
+        }
+        let finals = client.pull_all().unwrap();
+        for (f, r) in finals.iter().zip(&reference) {
+            for (a, b) in f.data().iter().zip(r.data()) {
+                assert!((a - b).abs() < 1e-5, "cluster {a} vs sequential {b}");
+            }
+        }
+        drop(client);
+        for s in &mut servers {
+            s.shutdown();
+        }
+    });
+}
