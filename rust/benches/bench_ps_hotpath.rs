@@ -1,0 +1,252 @@
+//! PS hot-path throughput: multi-worker pull/push rounds against one
+//! parameter server, async and sync, over in-proc channels and real
+//! loopback TCP, at 1/2/4/8 workers.
+//!
+//! The in-proc async series also runs with a single stripe — which
+//! reproduces the old global-lock server (every handler serializes on
+//! one lock) — so the table and `BENCH_ps_hotpath.json` record the
+//! striped-store speedup over that baseline at each worker count. The
+//! JSON lands at the repo root so later PRs can track the trajectory.
+
+use std::collections::BTreeMap;
+use std::thread;
+use std::time::Instant;
+
+use dtlsda::net::transport::{connect, InProcTransport, Transport};
+use dtlsda::ps::client::PsClient;
+use dtlsda::ps::router::Router;
+use dtlsda::ps::server::{serve, PsServerHandle, PsShared, UpdateMode};
+use dtlsda::ps::shard::{Optimizer, ShardStore, DEFAULT_STRIPES};
+use dtlsda::tensor::Tensor;
+use dtlsda::util::bench::{fmt2, Table};
+use dtlsda::util::json::Json;
+
+const N_KEYS: usize = 16;
+const ELEMS: usize = 2048; // 8 KB per tensor, 128 KB per direction per round
+const ROUNDS_INPROC: usize = 60;
+const ROUNDS_TCP: usize = 30;
+
+#[derive(Debug, Clone)]
+struct RunResult {
+    transport: &'static str,
+    mode: &'static str,
+    workers: usize,
+    stripes: usize,
+    wall_s: f64,
+    /// Aggregate pull+push operations per second across all workers.
+    ops_per_s: f64,
+    mb_per_s: f64,
+}
+
+fn seeded_store() -> ShardStore {
+    let mut store = ShardStore::new(Optimizer::Sgd { lr: 1e-3 });
+    for k in 0..N_KEYS {
+        store.insert(k as u32, Tensor::zeros(&[ELEMS]));
+    }
+    store
+}
+
+fn router() -> Router {
+    let sizes = [ELEMS * 4; N_KEYS];
+    Router::new(&sizes, 1)
+}
+
+/// One worker's measured loop: pull_all + push (+ barrier in sync mode).
+fn worker_loop(mut client: PsClient, rounds: usize, sync: bool) {
+    let grads: Vec<Tensor> =
+        (0..N_KEYS).map(|_| Tensor::from_vec(&[ELEMS], vec![1e-4; ELEMS])).collect();
+    let mut params = Vec::new();
+    for step in 0..rounds {
+        client.pull_all_into(&mut params).unwrap();
+        client.push(step as u64, &grads).unwrap();
+        if sync {
+            client.barrier(step as u64).unwrap();
+        }
+    }
+}
+
+fn result(
+    transport: &'static str,
+    mode: &'static str,
+    workers: usize,
+    stripes: usize,
+    rounds: usize,
+    wall_s: f64,
+) -> RunResult {
+    let ops = (workers * rounds * 2) as f64;
+    let bytes = (workers * rounds * 2 * N_KEYS * ELEMS * 4) as f64;
+    RunResult {
+        transport,
+        mode,
+        workers,
+        stripes,
+        wall_s,
+        ops_per_s: ops / wall_s,
+        mb_per_s: bytes / 1e6 / wall_s,
+    }
+}
+
+fn run_inproc(workers: usize, sync: bool, stripes: usize) -> RunResult {
+    let mode = if sync {
+        UpdateMode::Sync { expected_workers: workers, backup_workers: 0 }
+    } else {
+        UpdateMode::Async
+    };
+    let shared = PsShared::with_stripes(seeded_store(), mode, stripes);
+    let rt = router();
+
+    let mut serve_handles = Vec::new();
+    let mut worker_handles = Vec::new();
+    let t0 = Instant::now();
+    for w in 0..workers {
+        let (client_end, server_end) = InProcTransport::pair();
+        let sh = shared.clone();
+        serve_handles.push(thread::spawn(move || serve(Box::new(server_end), sh)));
+        let rt = rt.clone();
+        worker_handles.push(thread::spawn(move || {
+            let client =
+                PsClient::new(w as u32, vec![Box::new(client_end) as Box<dyn Transport>], rt);
+            worker_loop(client, ROUNDS_INPROC, sync);
+        }));
+    }
+    for h in worker_handles {
+        h.join().unwrap();
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    for h in serve_handles {
+        h.join().unwrap(); // clients dropped in worker threads → serve exits
+    }
+    result(
+        "inproc",
+        if sync { "sync" } else { "async" },
+        workers,
+        stripes,
+        ROUNDS_INPROC,
+        wall_s,
+    )
+}
+
+fn run_tcp(workers: usize, sync: bool) -> RunResult {
+    let mode = if sync {
+        UpdateMode::Sync { expected_workers: workers, backup_workers: 0 }
+    } else {
+        UpdateMode::Async
+    };
+    let mut srv = PsServerHandle::spawn_tcp("127.0.0.1:0", seeded_store(), mode).unwrap();
+    let addr = srv.addr;
+    let rt = router();
+
+    let mut worker_handles = Vec::new();
+    let t0 = Instant::now();
+    for w in 0..workers {
+        let rt = rt.clone();
+        worker_handles.push(thread::spawn(move || {
+            let t = connect(addr).unwrap();
+            let client = PsClient::new(w as u32, vec![Box::new(t) as Box<dyn Transport>], rt);
+            worker_loop(client, ROUNDS_TCP, sync);
+        }));
+    }
+    for h in worker_handles {
+        h.join().unwrap();
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    srv.shutdown();
+    result(
+        "tcp",
+        if sync { "sync" } else { "async" },
+        workers,
+        DEFAULT_STRIPES,
+        ROUNDS_TCP,
+        wall_s,
+    )
+}
+
+fn main() {
+    println!(
+        "# PS hot path — {N_KEYS} keys x {ELEMS} f32 ({} KB/direction/round), 1 server\n",
+        N_KEYS * ELEMS * 4 / 1024
+    );
+
+    let mut results: Vec<RunResult> = Vec::new();
+
+    // In-proc: striped vs single-stripe (global-lock baseline), async+sync.
+    for &sync in &[false, true] {
+        for &w in &[1usize, 2, 4, 8] {
+            results.push(run_inproc(w, sync, 1));
+            results.push(run_inproc(w, sync, DEFAULT_STRIPES));
+        }
+    }
+    // TCP loopback: striped only, async+sync.
+    for &sync in &[false, true] {
+        for &w in &[1usize, 2, 4, 8] {
+            results.push(run_tcp(w, sync));
+        }
+    }
+
+    let mut t = Table::new(&["transport", "mode", "workers", "stripes", "ops/s", "MB/s"]);
+    for r in &results {
+        t.row(&[
+            r.transport.into(),
+            r.mode.into(),
+            r.workers.to_string(),
+            r.stripes.to_string(),
+            fmt2(r.ops_per_s),
+            fmt2(r.mb_per_s),
+        ]);
+    }
+    t.print();
+
+    // Headline: striped vs global-lock at 8 in-proc workers, per mode.
+    let find = |mode: &str, workers: usize, stripes: usize| {
+        results
+            .iter()
+            .find(|r| {
+                r.transport == "inproc" && r.mode == mode && r.workers == workers && r.stripes == stripes
+            })
+            .map(|r| r.ops_per_s)
+            .unwrap_or(0.0)
+    };
+    let speedup_async = find("async", 8, DEFAULT_STRIPES) / find("async", 8, 1).max(1e-9);
+    let speedup_sync = find("sync", 8, DEFAULT_STRIPES) / find("sync", 8, 1).max(1e-9);
+    println!("\nstriped vs single-lock @ 8 in-proc workers: async {speedup_async:.2}x, sync {speedup_sync:.2}x");
+
+    // Persist for trajectory tracking across PRs.
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("ps_hotpath".into()));
+    root.insert("n_keys".into(), Json::Num(N_KEYS as f64));
+    root.insert("elems_per_key".into(), Json::Num(ELEMS as f64));
+    root.insert("default_stripes".into(), Json::Num(DEFAULT_STRIPES as f64));
+    root.insert(
+        "speedup_8w_inproc_async_striped_vs_single_lock".into(),
+        Json::Num(speedup_async),
+    );
+    root.insert(
+        "speedup_8w_inproc_sync_striped_vs_single_lock".into(),
+        Json::Num(speedup_sync),
+    );
+    root.insert(
+        "results".into(),
+        Json::Arr(
+            results
+                .iter()
+                .map(|r| {
+                    let mut o: BTreeMap<String, Json> = BTreeMap::new();
+                    o.insert("transport".into(), Json::Str(r.transport.into()));
+                    o.insert("mode".into(), Json::Str(r.mode.into()));
+                    o.insert("workers".into(), Json::Num(r.workers as f64));
+                    o.insert("stripes".into(), Json::Num(r.stripes as f64));
+                    o.insert("wall_s".into(), Json::Num(r.wall_s));
+                    o.insert("ops_per_s".into(), Json::Num(r.ops_per_s));
+                    o.insert("mb_per_s".into(), Json::Num(r.mb_per_s));
+                    Json::Obj(o)
+                })
+                .collect(),
+        ),
+    );
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate dir has a parent")
+        .join("BENCH_ps_hotpath.json");
+    std::fs::write(&out, Json::Obj(root).to_string()).expect("write BENCH_ps_hotpath.json");
+    println!("wrote {}", out.display());
+}

@@ -52,13 +52,26 @@ impl Writer {
     }
 
     /// f32 slice with one bulk copy (hot path: gradients/parameters).
+    ///
+    /// On little-endian hosts the in-memory `[f32]` layout IS the wire
+    /// format, so the payload is appended with a single `memcpy`; other
+    /// hosts fall back to per-element encoding.
     pub fn f32_slice(&mut self, v: &[f32]) {
         self.u32(v.len() as u32);
-        let start = self.buf.len();
-        self.buf.resize(start + v.len() * 4, 0);
-        // Safe per-element encode; LLVM vectorizes this loop.
-        for (i, x) in v.iter().enumerate() {
-            self.buf[start + i * 4..start + i * 4 + 4].copy_from_slice(&x.to_le_bytes());
+        #[cfg(target_endian = "little")]
+        {
+            // SAFETY: every bit pattern of f32 is valid to view as bytes,
+            // u8 has alignment 1, and `size_of_val(v) == 4 * v.len()`.
+            let bytes = unsafe {
+                std::slice::from_raw_parts(v.as_ptr().cast::<u8>(), std::mem::size_of_val(v))
+            };
+            self.buf.extend_from_slice(bytes);
+        }
+        #[cfg(not(target_endian = "little"))]
+        {
+            for x in v {
+                self.buf.extend_from_slice(&x.to_le_bytes());
+            }
         }
     }
 
@@ -72,6 +85,39 @@ impl Writer {
 
     pub fn finish(self) -> Vec<u8> {
         self.buf
+    }
+
+    /// Reset for reuse, keeping the allocation (hot-path frame buffers).
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+
+    /// Shrink the backing allocation to at most `min_capacity` (or the
+    /// current length, if larger) — lets long-lived frame buffers drop
+    /// the memory of a one-off oversized frame.
+    pub fn shrink_to(&mut self, min_capacity: usize) {
+        self.buf.shrink_to(min_capacity);
+    }
+
+    /// Roll back to an earlier length (abort a partially-encoded body
+    /// and re-encode, e.g. replacing it with an error message).
+    pub fn truncate(&mut self, len: usize) {
+        self.buf.truncate(len);
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buf.capacity()
+    }
+
+    /// Borrow the encoded bytes without consuming the buffer.
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.buf
+    }
+
+    /// Overwrite 4 bytes at `pos` (length-prefix patching after the body
+    /// has been encoded in place). Panics if `pos + 4 > len`.
+    pub fn set_u32(&mut self, pos: usize, v: u32) {
+        self.buf[pos..pos + 4].copy_from_slice(&v.to_le_bytes());
     }
 
     pub fn len(&self) -> usize {
@@ -142,12 +188,31 @@ impl<'a> Reader<'a> {
         String::from_utf8(b.to_vec()).map_err(|e| format!("invalid utf8: {e}"))
     }
 
+    /// Decode a length-prefixed f32 payload. Little-endian hosts copy the
+    /// raw bytes straight into the output vector in one `memcpy`; other
+    /// hosts decode per element.
     pub fn f32_vec(&mut self) -> Result<Vec<f32>, String> {
         let n = self.u32()? as usize;
         let b = self.take(n * 4)?;
-        Ok(b.chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect())
+        #[cfg(target_endian = "little")]
+        {
+            let mut out = vec![0.0f32; n];
+            // SAFETY: `out` owns exactly n*4 bytes, viewing them as &mut
+            // [u8] is valid (alignment 1), and on LE hosts the wire bytes
+            // are the in-memory representation. Every bit pattern is a
+            // valid f32.
+            unsafe {
+                std::slice::from_raw_parts_mut(out.as_mut_ptr().cast::<u8>(), n * 4)
+                    .copy_from_slice(b);
+            }
+            Ok(out)
+        }
+        #[cfg(not(target_endian = "little"))]
+        {
+            Ok(b.chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect())
+        }
     }
 
     pub fn tensor(&mut self) -> Result<Tensor, String> {
@@ -223,6 +288,47 @@ mod tests {
         w.f32_slice(&[1.0, 2.0]); // only 2 elements
         let buf = w.finish();
         assert!(Reader::new(&buf).tensor().is_err());
+    }
+
+    #[test]
+    fn f32_bulk_roundtrip_special_values() {
+        // The bulk-copy fast path must preserve every bit pattern the
+        // per-element path did, including negative zero and infinities.
+        let vals = vec![0.0f32, -0.0, 1.5, -1.5, f32::INFINITY, f32::NEG_INFINITY, f32::MIN, f32::MAX, f32::EPSILON];
+        let mut w = Writer::new();
+        w.f32_slice(&vals);
+        let buf = w.finish();
+        // Wire layout: u32 count then per-element to_le_bytes.
+        assert_eq!(buf.len(), 4 + vals.len() * 4);
+        for (i, v) in vals.iter().enumerate() {
+            assert_eq!(&buf[4 + i * 4..8 + i * 4], &v.to_le_bytes());
+        }
+        let got = Reader::new(&buf).f32_vec().unwrap();
+        assert_eq!(got.len(), vals.len());
+        for (a, b) in got.iter().zip(&vals) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn f32_bulk_roundtrip_empty() {
+        let mut w = Writer::new();
+        w.f32_slice(&[]);
+        let buf = w.finish();
+        assert_eq!(Reader::new(&buf).f32_vec().unwrap(), Vec::<f32>::new());
+    }
+
+    #[test]
+    fn writer_reuse_and_patching() {
+        let mut w = Writer::new();
+        w.u32(0); // placeholder
+        w.str("body");
+        w.set_u32(0, (w.len() - 4) as u32);
+        assert_eq!(w.as_bytes()[0..4], ((w.len() - 4) as u32).to_le_bytes());
+        w.clear();
+        assert!(w.is_empty());
+        w.u8(9);
+        assert_eq!(w.as_bytes(), &[9]);
     }
 
     #[test]

@@ -48,6 +48,14 @@ const T_ERROR: u8 = 10;
 impl Message {
     pub fn encode(&self) -> Vec<u8> {
         let mut w = Writer::with_capacity(64);
+        self.encode_into(&mut w);
+        w.finish()
+    }
+
+    /// Encode into a caller-owned (typically reused) buffer. This is the
+    /// hot-path entry: transports append frames into a persistent
+    /// `Writer` instead of allocating a fresh `Vec` per message.
+    pub fn encode_into(&self, w: &mut Writer) {
         match self {
             Message::Pull { worker, keys } => {
                 w.u8(T_PULL);
@@ -102,7 +110,6 @@ impl Message {
                 w.str(what);
             }
         }
-        w.finish()
     }
 
     pub fn decode(buf: &[u8]) -> Result<Message, String> {
@@ -159,6 +166,52 @@ impl Message {
     }
 }
 
+/// Streaming encoders for the hot-path messages.
+///
+/// The serve loop and `PsClient` use these to write `PullReply`/`Push`
+/// bodies straight from borrowed tensors into a transport's frame
+/// buffer — no intermediate `Message` with cloned tensors is ever
+/// built. The byte layout is identical to `Message::encode` (asserted
+/// by `wire_helpers_match_message_encoding`), so the receive side stays
+/// `Message::decode`.
+pub mod wire {
+    use super::*;
+
+    /// `Pull { worker, keys }` in one pass from a borrowed key slice.
+    pub fn pull(w: &mut Writer, worker: u32, keys: &[u32]) {
+        w.u8(T_PULL);
+        w.u32(worker);
+        w.u32(keys.len() as u32);
+        for &k in keys {
+            w.u32(k);
+        }
+    }
+
+    /// Header of `PullReply { clock, entries }`; follow with exactly
+    /// `n` [`entry`] calls.
+    pub fn pull_reply_header(w: &mut Writer, clock: u64, n: u32) {
+        w.u8(T_PULL_REPLY);
+        w.u64(clock);
+        w.u32(n);
+    }
+
+    /// Header of `Push { worker, step, entries }`; follow with exactly
+    /// `n` [`entry`] calls.
+    pub fn push_header(w: &mut Writer, worker: u32, step: u64, n: u32) {
+        w.u8(T_PUSH);
+        w.u32(worker);
+        w.u64(step);
+        w.u32(n);
+    }
+
+    /// One `(key, tensor)` entry of a `PullReply` or `Push` body,
+    /// encoded from a borrowed tensor.
+    pub fn entry(w: &mut Writer, key: u32, t: &Tensor) {
+        w.u32(key);
+        w.tensor(t);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -200,6 +253,37 @@ mod tests {
         let mut buf = Message::Stats.encode();
         buf.push(0);
         assert!(Message::decode(&buf).is_err());
+    }
+
+    #[test]
+    fn wire_helpers_match_message_encoding() {
+        let t0 = Tensor::from_vec(&[3], vec![1.0, -2.0, 3.5]);
+        let t1 = Tensor::zeros(&[2, 2]);
+
+        let msg = Message::Pull { worker: 7, keys: vec![3, 5, 8] };
+        let mut w = Writer::new();
+        wire::pull(&mut w, 7, &[3, 5, 8]);
+        assert_eq!(w.finish(), msg.encode());
+
+        let msg = Message::Push {
+            worker: 2,
+            step: 9,
+            entries: vec![(4, t0.clone()), (6, t1.clone())],
+        };
+        let mut w = Writer::new();
+        wire::push_header(&mut w, 2, 9, 2);
+        wire::entry(&mut w, 4, &t0);
+        wire::entry(&mut w, 6, &t1);
+        assert_eq!(w.finish(), msg.encode());
+
+        let msg = Message::PullReply { clock: 42, entries: vec![(1, t0.clone())] };
+        let mut w = Writer::new();
+        wire::pull_reply_header(&mut w, 42, 1);
+        wire::entry(&mut w, 1, &t0);
+        let buf = w.finish();
+        assert_eq!(buf, msg.encode());
+        // And the streamed bytes decode to the owned message.
+        assert_eq!(Message::decode(&buf).unwrap(), msg);
     }
 
     #[test]

@@ -11,21 +11,48 @@ use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::mpsc::{channel, Receiver, Sender};
 
+use super::codec::Writer;
 use super::message::Message;
 
 /// Bidirectional message pipe.
 pub trait Transport: Send {
     fn send(&mut self, msg: &Message) -> Result<(), String>;
     fn recv(&mut self) -> Result<Message, String>;
+
+    /// Send a frame whose body the caller encodes in place.
+    ///
+    /// This is the zero-copy send path: `encode` writes the message body
+    /// directly into the transport's frame buffer (for TCP, a persistent
+    /// buffer already holding the length prefix), so hot-path senders
+    /// can stream borrowed tensors without building an owned `Message`.
+    fn send_with(&mut self, encode: &mut dyn FnMut(&mut Writer)) -> Result<(), String>;
 }
 
 /// Hard cap on frame size (guards against corrupt length prefixes).
 const MAX_FRAME: u32 = 1 << 30;
 
+/// Persistent frame buffers keep their allocation across messages (the
+/// hot path), but shrink back once capacity exceeds both this floor and
+/// 4x the frame just processed — a single outlier frame must not pin
+/// its memory for the connection's lifetime, while steady-state large
+/// frames (whose size ≈ capacity) keep their buffer.
+const BUF_RETAIN_CAP: usize = 1 << 20;
+
+/// Single copy of the retention policy, shared by the send (`Writer`)
+/// and receive (`Vec<u8>`) buffers.
+fn buf_oversized(capacity: usize, last_frame: usize) -> bool {
+    capacity > BUF_RETAIN_CAP && capacity > 4 * last_frame
+}
+
 // ------------------------------------------------------------------ TCP
 
 pub struct TcpTransport {
     stream: TcpStream,
+    /// Reusable send buffer holding `u32 len || body`; cleared (but not
+    /// shrunk) per frame so steady-state sends do zero allocations.
+    wbuf: Writer,
+    /// Reusable receive buffer for frame bodies.
+    rbuf: Vec<u8>,
 }
 
 impl TcpTransport {
@@ -33,7 +60,11 @@ impl TcpTransport {
         stream
             .set_nodelay(true)
             .map_err(|e| format!("set_nodelay: {e}"))?;
-        Ok(TcpTransport { stream })
+        Ok(TcpTransport {
+            stream,
+            wbuf: Writer::with_capacity(256),
+            rbuf: Vec::new(),
+        })
     }
 
     pub fn peer(&self) -> String {
@@ -46,15 +77,7 @@ impl TcpTransport {
 
 impl Transport for TcpTransport {
     fn send(&mut self, msg: &Message) -> Result<(), String> {
-        let body = msg.encode();
-        let len = (body.len() as u32).to_le_bytes();
-        // One write for header+body halves syscalls on small messages.
-        let mut frame = Vec::with_capacity(4 + body.len());
-        frame.extend_from_slice(&len);
-        frame.extend_from_slice(&body);
-        self.stream
-            .write_all(&frame)
-            .map_err(|e| format!("send: {e}"))
+        self.send_with(&mut |w| msg.encode_into(w))
     }
 
     fn recv(&mut self) -> Result<Message, String> {
@@ -66,11 +89,39 @@ impl Transport for TcpTransport {
         if len > MAX_FRAME {
             return Err(format!("frame length {len} exceeds cap"));
         }
-        let mut body = vec![0u8; len as usize];
+        self.rbuf.clear();
+        self.rbuf.resize(len as usize, 0);
         self.stream
-            .read_exact(&mut body)
+            .read_exact(&mut self.rbuf)
             .map_err(|e| format!("recv body: {e}"))?;
-        Message::decode(&body)
+        let msg = Message::decode(&self.rbuf);
+        if buf_oversized(self.rbuf.capacity(), len as usize) {
+            self.rbuf.shrink_to(BUF_RETAIN_CAP.max(len as usize));
+        }
+        msg
+    }
+
+    fn send_with(&mut self, encode: &mut dyn FnMut(&mut Writer)) -> Result<(), String> {
+        // Header + body in one buffer and one write: the length prefix
+        // is patched after the body lands, so small messages still cost
+        // a single syscall and large ones a single memcpy-free encode.
+        self.wbuf.clear();
+        self.wbuf.u32(0); // length placeholder
+        encode(&mut self.wbuf);
+        let body_len = self.wbuf.len() - 4;
+        if body_len as u64 > MAX_FRAME as u64 {
+            return Err(format!("frame length {body_len} exceeds cap"));
+        }
+        self.wbuf.set_u32(0, body_len as u32);
+        let sent = self
+            .stream
+            .write_all(self.wbuf.as_bytes())
+            .map_err(|e| format!("send: {e}"));
+        let frame_len = self.wbuf.len();
+        if buf_oversized(self.wbuf.capacity(), frame_len) {
+            self.wbuf.shrink_to(BUF_RETAIN_CAP.max(frame_len));
+        }
+        sent
     }
 }
 
@@ -118,6 +169,16 @@ impl Transport for InProcTransport {
             .map_err(|_| "peer disconnected".to_string())?;
         Message::decode(&frame)
     }
+
+    fn send_with(&mut self, encode: &mut dyn FnMut(&mut Writer)) -> Result<(), String> {
+        // Channel frames are owned, so the encoded body is built fresh
+        // and moved — still a single allocation, no tensor clones.
+        let mut w = Writer::with_capacity(256);
+        encode(&mut w);
+        self.tx
+            .send(w.finish())
+            .map_err(|_| "peer disconnected".to_string())
+    }
 }
 
 #[cfg(test)]
@@ -161,6 +222,45 @@ mod tests {
         c.send(&msg).unwrap();
         assert_eq!(c.recv().unwrap(), msg);
         server.join().unwrap();
+    }
+
+    #[test]
+    fn send_with_framing_matches_send() {
+        use crate::net::message::wire;
+
+        // In-proc: a streamed frame decodes identically to an owned send.
+        let (mut a, mut b) = InProcTransport::pair();
+        let t = Tensor::from_vec(&[4], vec![1.0, 2.0, 3.0, 4.0]);
+        a.send_with(&mut |w| {
+            wire::push_header(w, 3, 11, 1);
+            wire::entry(w, 0, &t);
+        })
+        .unwrap();
+        assert_eq!(
+            b.recv().unwrap(),
+            Message::Push { worker: 3, step: 11, entries: vec![(0, t.clone())] }
+        );
+
+        // TCP: same, over a real socket, twice (buffer reuse).
+        let listener = listen("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut s = TcpTransport::new(stream).unwrap();
+            let m1 = s.recv().unwrap();
+            let m2 = s.recv().unwrap();
+            (m1, m2)
+        });
+        let mut c = connect(addr).unwrap();
+        c.send_with(&mut |w| {
+            wire::pull_reply_header(w, 5, 1);
+            wire::entry(w, 2, &t);
+        })
+        .unwrap();
+        c.send_with(&mut |w| Message::Stats.encode_into(w)).unwrap();
+        let (m1, m2) = server.join().unwrap();
+        assert_eq!(m1, Message::PullReply { clock: 5, entries: vec![(2, t)] });
+        assert_eq!(m2, Message::Stats);
     }
 
     #[test]

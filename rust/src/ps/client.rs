@@ -3,7 +3,7 @@
 //! parameter vectors in manifest order.
 
 use super::router::Router;
-use crate::net::message::Message;
+use crate::net::message::{wire, Message};
 use crate::net::transport::Transport;
 use crate::tensor::Tensor;
 
@@ -31,61 +31,82 @@ impl PsClient {
     /// Pull every key; returns tensors in key order (the artifact's
     /// parameter order). Fig. 1 step 1, "parameter refresh".
     pub fn pull_all(&mut self) -> Result<Vec<Tensor>, String> {
+        let mut out = Vec::new();
+        self.pull_all_into(&mut out)?;
+        Ok(out)
+    }
+
+    /// [`pull_all`](Self::pull_all) into a reusable buffer: `out` is
+    /// cleared and refilled in key order, so a worker loop that keeps
+    /// one buffer across steps reuses its `Vec` spine instead of
+    /// reallocating every refresh.
+    pub fn pull_all_into(&mut self, out: &mut Vec<Tensor>) -> Result<(), String> {
         let n_keys = self.router.n_keys();
-        let mut out: Vec<Option<Tensor>> = (0..n_keys).map(|_| None).collect();
+        out.clear();
+        out.resize(n_keys, Tensor::zeros(&[0]));
+        let mut filled = vec![false; n_keys];
         // Send all requests first (the transfers overlap on the wire),
-        // then collect replies.
-        for s in 0..self.transports.len() {
-            let keys = self.router.keys_of(s).to_vec();
+        // then collect replies. Key lists stream from the router's
+        // borrowed slices — no per-pull Vec of keys.
+        let worker = self.worker_id;
+        let router = &self.router;
+        for (s, t) in self.transports.iter_mut().enumerate() {
+            let keys = router.keys_of(s);
             if keys.is_empty() {
                 continue;
             }
-            self.transports[s].send(&Message::Pull { worker: self.worker_id, keys })?;
+            t.send_with(&mut |w| wire::pull(w, worker, keys))?;
         }
-        for s in 0..self.transports.len() {
-            if self.router.keys_of(s).is_empty() {
+        for (s, t) in self.transports.iter_mut().enumerate() {
+            if router.keys_of(s).is_empty() {
                 continue;
             }
-            match self.transports[s].recv()? {
+            match t.recv()? {
                 Message::PullReply { entries, .. } => {
-                    for (k, t) in entries {
-                        out[k as usize] = Some(t);
+                    for (k, tensor) in entries {
+                        let k = k as usize;
+                        if k >= n_keys {
+                            return Err(format!("server {s} returned unknown key {k}"));
+                        }
+                        out[k] = tensor;
+                        filled[k] = true;
                     }
                 }
                 Message::Error { what } => return Err(format!("server {s}: {what}")),
                 m => return Err(format!("unexpected pull reply {m:?}")),
             }
         }
-        out.into_iter()
-            .enumerate()
-            .map(|(k, t)| t.ok_or_else(|| format!("server never returned key {k}")))
-            .collect()
+        if let Some(k) = filled.iter().position(|&f| !f) {
+            return Err(format!("server never returned key {k}"));
+        }
+        Ok(())
     }
 
     /// Push per-key gradients (indexed by key). Fig. 1 step 7.
+    ///
+    /// Gradients are encoded by reference straight into each transport's
+    /// frame buffer — no per-server `(key, tensor.clone())` staging.
     pub fn push(&mut self, step: u64, grads: &[Tensor]) -> Result<(), String> {
         assert_eq!(grads.len(), self.router.n_keys());
-        for s in 0..self.transports.len() {
-            let entries: Vec<(u32, Tensor)> = self
-                .router
-                .keys_of(s)
-                .iter()
-                .map(|&k| (k, grads[k as usize].clone()))
-                .collect();
-            if entries.is_empty() {
+        let worker = self.worker_id;
+        let router = &self.router;
+        for (s, t) in self.transports.iter_mut().enumerate() {
+            let keys = router.keys_of(s);
+            if keys.is_empty() {
                 continue;
             }
-            self.transports[s].send(&Message::Push {
-                worker: self.worker_id,
-                step,
-                entries,
+            t.send_with(&mut |w| {
+                wire::push_header(w, worker, step, keys.len() as u32);
+                for &k in keys {
+                    wire::entry(w, k, &grads[k as usize]);
+                }
             })?;
         }
-        for s in 0..self.transports.len() {
-            if self.router.keys_of(s).is_empty() {
+        for (s, t) in self.transports.iter_mut().enumerate() {
+            if router.keys_of(s).is_empty() {
                 continue;
             }
-            match self.transports[s].recv()? {
+            match t.recv()? {
                 Message::PushAck { .. } => {}
                 Message::Error { what } => return Err(format!("server {s}: {what}")),
                 m => return Err(format!("unexpected push reply {m:?}")),
@@ -167,6 +188,31 @@ mod tests {
         assert_eq!(params[0].data()[0], 1.0);
         assert_eq!(params[1].data()[0], 2.0);
         assert_eq!(params[2].data()[0], 3.0);
+        drop(client);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn pull_all_into_reuses_buffer() {
+        let (mut client, handles) = cluster(Optimizer::Sgd { lr: 1.0 }, UpdateMode::Async);
+        let mut buf = Vec::new();
+        client.pull_all_into(&mut buf).unwrap();
+        assert_eq!(buf.len(), 3);
+        assert_eq!(buf[0].data()[0], 1.0);
+        // Push, refill the same buffer, and observe the update.
+        let grads = vec![
+            Tensor::from_vec(&[100], vec![0.25; 100]),
+            Tensor::from_vec(&[10], vec![0.5; 10]),
+            Tensor::from_vec(&[50], vec![1.0; 50]),
+        ];
+        client.push(0, &grads).unwrap();
+        client.pull_all_into(&mut buf).unwrap();
+        assert_eq!(buf.len(), 3);
+        assert_eq!(buf[0].data()[0], 0.75); // 1 - 0.25
+        assert_eq!(buf[1].data()[0], 1.5); // 2 - 0.5
+        assert_eq!(buf[2].data()[0], 2.0); // 3 - 1
         drop(client);
         for h in handles {
             h.join().unwrap();

@@ -2,12 +2,64 @@
 //!
 //! * [`router`] — key -> server placement with size-balanced assignment
 //!   (the "distribute parameter-update workload evenly" subgoal).
-//! * [`shard`]  — one server's parameter store + optimizer application.
+//! * [`shard`]  — one server's parameter store: a seedable
+//!   [`ShardStore`] plus the serve loop's lock-striped concurrent
+//!   [`StripedStore`].
 //! * [`server`] — serve loop over any [`crate::net::Transport`]:
 //!   async (apply-on-push) and synchronous (barrier + aggregate) modes.
 //! * [`client`] — worker-side connection fan-out: pull/push across all
 //!   servers, with a prefetch thread to hide I/O behind compute (§3.3's
 //!   ideal-pipeline condition).
+//!
+//! # Wire format
+//!
+//! Transports exchange length-framed messages: `u32 len || body`, all
+//! integers little-endian. A body is `u8 tag` followed by the payload
+//! (see `net::message` for the tag constants):
+//!
+//! | message          | payload                                          |
+//! |------------------|--------------------------------------------------|
+//! | `Pull`           | `u32 worker, u32 n, n × u32 key`                 |
+//! | `PullReply`      | `u64 clock, u32 n, n × (u32 key, tensor)`        |
+//! | `Push`           | `u32 worker, u64 step, u32 n, n × (u32 key, tensor)` |
+//! | `PushAck`        | `u64 clock`                                      |
+//! | `Barrier`        | `u32 worker, u64 step`                           |
+//! | `BarrierRelease` | `u64 step`                                       |
+//! | `Stats`          | —                                                |
+//! | `StatsReply`     | `u64 pulls, u64 pushes, u64 updates`             |
+//! | `Shutdown`       | —                                                |
+//! | `Error`          | `str what` (u32 byte length || UTF-8)            |
+//!
+//! A tensor is `u32 rank, rank × u32 dim, u32 numel, numel × f32` — the
+//! f32 payload is the host's little-endian memory image, so on LE
+//! machines encode/decode of the parameter payload is a single bulk
+//! copy (`net::codec`).
+//!
+//! # Hot-path concurrency and zero-copy design
+//!
+//! The serve loop never takes a global lock and never clones a tensor:
+//!
+//! * **Lock striping** — [`StripedStore`] partitions keys over
+//!   `DEFAULT_STRIPES` RwLock-guarded stripes (`key % n_stripes`).
+//!   Handler threads touching disjoint stripes proceed in parallel;
+//!   pulls of the same stripe share a read lock. The staleness clock is
+//!   a lock-free atomic. Per-tensor reads/writes are atomic under the
+//!   stripe lock (no torn tensors); cross-key snapshot consistency is
+//!   deliberately NOT promised, matching Hogwild-style async semantics.
+//! * **Zero-copy encode** — `PullReply` bodies are streamed straight
+//!   from the store into the transport's reusable frame buffer
+//!   (`Transport::send_with` + `net::message::wire`); pushes encode
+//!   gradient tensors by reference on the client side the same way.
+//!   TCP transports keep persistent send/receive buffers, so the
+//!   steady-state hot path allocates nothing on the send side.
+//! * **Sync aggregation** — in sync mode each arriving push folds into
+//!   a per-key running `(sum, count)`; the barrier's last arriver
+//!   applies `sum / count` with one scale per key. Memory is O(params)
+//!   instead of O(workers · params): orphaned steps below the release
+//!   horizon are evicted, a step whose last barrier waiter times out is
+//!   dropped, and pushes/barriers further than
+//!   `server::MAX_PENDING_STEPS` ahead are discarded/rejected, bounding
+//!   barrier state against dead or runaway workers.
 
 pub mod client;
 pub mod compress;
@@ -18,5 +70,5 @@ pub mod shard;
 pub use client::PsClient;
 pub use compress::{quantize8, Compressed, TopK};
 pub use router::Router;
-pub use server::{serve, PsServerHandle, UpdateMode};
-pub use shard::{Optimizer, ShardStore};
+pub use server::{serve, PsServerHandle, PsShared, UpdateMode};
+pub use shard::{Optimizer, ShardStore, StripedStore, DEFAULT_STRIPES};

@@ -1,26 +1,36 @@
 //! Parameter-server serve loop.
 //!
-//! One handler thread per worker connection; the shard store is shared
-//! behind a mutex. Two update modes (§3.3):
+//! One handler thread per worker connection; the parameter store is a
+//! [`StripedStore`], so handlers touching disjoint key stripes proceed
+//! in parallel and pulls encode replies straight out of the store with
+//! zero tensor copies. Two update modes (§3.3):
 //! * [`UpdateMode::Async`] — gradients apply on arrival (Hogwild-style
 //!   [48]; the paper's assumed policy, hides I/O behind compute).
-//! * [`UpdateMode::Sync`]  — gradients buffer until every worker reaches
-//!   the barrier, then the mean gradient applies once (synchronous SGD).
+//! * [`UpdateMode::Sync`]  — gradients fold into a per-key running sum
+//!   until every worker reaches the barrier, then the mean applies once
+//!   (synchronous SGD with O(params) barrier memory, not O(workers·params)).
 
+use std::collections::btree_map::Entry as BtreeEntry;
 use std::collections::BTreeMap;
 use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::{self, JoinHandle};
 
-use super::shard::ShardStore;
-use crate::net::message::Message;
+use super::shard::{ShardStore, StripedStore, DEFAULT_STRIPES};
+use crate::net::message::{wire, Message};
 use crate::net::transport::{TcpTransport, Transport};
 use crate::tensor::Tensor;
 
 /// How long a worker may wait inside a sync barrier before the server
 /// reports an error instead of deadlocking (peer death detection).
 pub const BARRIER_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(300);
+
+/// Cap on simultaneously-buffered sync steps. Workers run the barrier in
+/// lockstep, so live clients are never more than a step or two ahead of
+/// `released_below`; pushes beyond the cap can only come from runaway or
+/// byzantine peers and are discarded instead of growing server memory.
+pub const MAX_PENDING_STEPS: u64 = 64;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum UpdateMode {
@@ -42,10 +52,22 @@ pub struct Counters {
     pub updates: AtomicU64,
 }
 
+/// Per-step sync aggregation state: a running gradient sum + count per
+/// key, folded in on push arrival. Replaces buffering every worker's
+/// full tensor set (O(workers·params)) with O(params), and turns the
+/// barrier's apply step into one scale per key.
+#[derive(Default)]
+struct StepAgg {
+    /// Workers that reached the barrier for this step.
+    arrived: usize,
+    /// key -> (running gradient sum, number of contributions).
+    grads: BTreeMap<u32, (Tensor, u32)>,
+}
+
 #[derive(Default)]
 struct SyncState {
-    /// step -> (arrived worker count, key -> pending grads)
-    pending: BTreeMap<u64, (usize, BTreeMap<u32, Vec<Tensor>>)>,
+    /// step -> aggregation state for steps not yet released.
+    pending: BTreeMap<u64, StepAgg>,
     /// Steps < `released_below` have been aggregated and released.
     /// (Half-open so step 0 is NOT considered released at init — a
     /// closed `released: u64 = 0` sentinel let step-0 barriers pass
@@ -55,7 +77,7 @@ struct SyncState {
 
 /// Shared server state handed to every connection handler.
 pub struct PsShared {
-    pub store: Mutex<ShardStore>,
+    pub store: StripedStore,
     pub counters: Counters,
     mode: UpdateMode,
     sync: Mutex<SyncState>,
@@ -65,8 +87,14 @@ pub struct PsShared {
 
 impl PsShared {
     pub fn new(store: ShardStore, mode: UpdateMode) -> Arc<Self> {
+        Self::with_stripes(store, mode, DEFAULT_STRIPES)
+    }
+
+    /// Explicit stripe count (1 reproduces a single global lock — used
+    /// by `bench_ps_hotpath` as the contention baseline).
+    pub fn with_stripes(store: ShardStore, mode: UpdateMode, n_stripes: usize) -> Arc<Self> {
         Arc::new(PsShared {
-            store: Mutex::new(store),
+            store: StripedStore::from_shard(store, n_stripes),
             counters: Counters::default(),
             mode,
             sync: Mutex::new(SyncState::default()),
@@ -77,6 +105,12 @@ impl PsShared {
 
     pub fn stopped(&self) -> bool {
         self.stop.load(Ordering::Relaxed)
+    }
+
+    /// Number of sync steps currently buffered (observability + tests:
+    /// bounded by [`MAX_PENDING_STEPS`], drained by barrier releases).
+    pub fn pending_steps(&self) -> usize {
+        self.sync.lock().unwrap().pending.len()
     }
 }
 
@@ -91,25 +125,29 @@ pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
         match msg {
             Message::Pull { keys, .. } => {
                 shared.counters.pulls.fetch_add(1, Ordering::Relaxed);
-                let store = shared.store.lock().unwrap();
-                let mut entries = Vec::with_capacity(keys.len());
-                let mut missing = None;
-                for k in keys {
-                    match store.get(k) {
-                        Some(v) => entries.push((k, v.clone())),
-                        None => {
-                            missing = Some(k);
-                            break;
+                // Stream the reply straight from the store into the
+                // transport's frame buffer — no tensor clones, one stripe
+                // read-lock per key. An unknown key aborts the partial
+                // body (roll back to the frame start, which sits after
+                // the transport's length placeholder) and replaces it
+                // with an Error frame in the same pass.
+                let sent = t.send_with(&mut |w| {
+                    let frame_start = w.len();
+                    wire::pull_reply_header(w, shared.store.clock(), keys.len() as u32);
+                    for &k in &keys {
+                        // (&mut *w: reborrow so the per-key closure
+                        // captures a fresh unique borrow, not `w`.)
+                        let encoded = shared
+                            .store
+                            .with_tensor(k, |tensor| wire::entry(&mut *w, k, tensor));
+                        if encoded.is_none() {
+                            w.truncate(frame_start);
+                            Message::Error { what: format!("unknown key {k}") }.encode_into(w);
+                            return;
                         }
                     }
-                }
-                let clock = store.clock();
-                drop(store);
-                let reply = match missing {
-                    Some(k) => Message::Error { what: format!("unknown key {k}") },
-                    None => Message::PullReply { clock, entries },
-                };
-                if t.send(&reply).is_err() {
+                });
+                if sent.is_err() {
                     return;
                 }
             }
@@ -117,33 +155,78 @@ pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
                 shared.counters.pushes.fetch_add(1, Ordering::Relaxed);
                 let reply = match shared.mode {
                     UpdateMode::Async => {
-                        let mut store = shared.store.lock().unwrap();
                         let mut err = None;
                         for (k, g) in &entries {
-                            if let Err(e) = store.apply_grad(*k, g) {
+                            if let Err(e) = shared.store.apply_grad(*k, g) {
                                 err = Some(e);
                                 break;
                             }
                             shared.counters.updates.fetch_add(1, Ordering::Relaxed);
                         }
-                        let clock = store.clock();
-                        drop(store);
                         match err {
                             Some(e) => Message::Error { what: e },
-                            None => Message::PushAck { clock },
+                            None => Message::PushAck { clock: shared.store.clock() },
                         }
                     }
                     UpdateMode::Sync { .. } => {
                         let mut sync = shared.sync.lock().unwrap();
-                        if step >= sync.released_below {
+                        if step < sync.released_below {
+                            // Straggler push for a released step — discarded.
+                        } else if step >= sync.released_below + MAX_PENDING_STEPS {
+                            crate::warn_log!(
+                                "ps",
+                                "push beyond pending-step cap discarded",
+                                step = step
+                            );
+                        } else {
                             let slot = sync.pending.entry(step).or_default();
                             for (k, g) in entries {
-                                slot.1.entry(k).or_default().push(g);
+                                match slot.grads.entry(k) {
+                                    BtreeEntry::Occupied(mut o) => {
+                                        let (sum, n) = o.get_mut();
+                                        if sum.shape() == g.shape() {
+                                            sum.axpy(1.0, &g);
+                                            *n += 1;
+                                        } else {
+                                            crate::warn_log!(
+                                                "ps",
+                                                "sync push shape mismatch discarded",
+                                                key = k
+                                            );
+                                        }
+                                    }
+                                    BtreeEntry::Vacant(v) => {
+                                        // First contribution: validate
+                                        // against the stored parameter so
+                                        // one malformed push can't become
+                                        // the sum and poison every later
+                                        // correct push for this key (sync
+                                        // lock -> stripe lock is the same
+                                        // order the release path uses).
+                                        match shared.store.with_tensor(k, |stored| stored.shape() == g.shape()) {
+                                            Some(true) => {
+                                                // The pushed tensor becomes
+                                                // the running sum (moved,
+                                                // not cloned).
+                                                v.insert((g, 1));
+                                            }
+                                            Some(false) => crate::warn_log!(
+                                                "ps",
+                                                "sync push shape mismatch discarded",
+                                                key = k
+                                            ),
+                                            None => crate::warn_log!(
+                                                "ps",
+                                                "sync push for unknown key discarded",
+                                                key = k
+                                            ),
+                                        }
+                                    }
+                                }
                             }
-                        } // else: straggler push for a released step — discarded
+                        }
                         drop(sync);
-                        let clock = shared.store.lock().unwrap().clock();
-                        Message::PushAck { clock }
+                        Message::PushAck { clock: shared.store.clock() }
                     }
                 };
                 if t.send(&reply).is_err() {
@@ -167,21 +250,39 @@ pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
                     }
                     continue;
                 }
+                if step >= sync.released_below + MAX_PENDING_STEPS {
+                    // Same cap as the push path: a runaway/byzantine peer
+                    // must not create far-future slots — and with a small
+                    // quorum a far-future release would advance
+                    // released_below past every live worker, silently
+                    // voiding all their subsequent pushes.
+                    drop(sync);
+                    let _ = t.send(&Message::Error {
+                        what: format!("barrier step {step} beyond pending-step cap"),
+                    });
+                    continue;
+                }
                 let quorum = expected_workers.saturating_sub(backup_workers).max(1);
                 let slot = sync.pending.entry(step).or_default();
-                slot.0 += 1;
-                if slot.0 >= quorum {
-                    // Last arriver applies the aggregated gradients.
-                    let (_, grads) = sync.pending.remove(&step).unwrap();
-                    let mut store = shared.store.lock().unwrap();
-                    for (k, gs) in grads {
-                        store
-                            .apply_aggregated(k, &gs)
+                slot.arrived += 1;
+                if slot.arrived >= quorum {
+                    // Last arriver applies the aggregated mean: one scale
+                    // + one optimizer step per key, consuming the sums.
+                    let agg = sync.pending.remove(&step).unwrap();
+                    for (k, (sum, n)) in agg.grads {
+                        shared
+                            .store
+                            .apply_mean(k, sum, n)
                             .unwrap_or_else(|e| crate::warn_log!("ps", "sync apply failed", err = e));
                         shared.counters.updates.fetch_add(1, Ordering::Relaxed);
                     }
-                    drop(store);
                     sync.released_below = sync.released_below.max(step + 1);
+                    // Evict aggregation state orphaned below the release
+                    // horizon (stragglers that died before their barrier):
+                    // those steps can never release, so their sums would
+                    // otherwise leak forever.
+                    let horizon = sync.released_below;
+                    sync.pending.retain(|&s, _| s >= horizon);
                     shared.barrier_cv.notify_all();
                 } else {
                     // Bounded wait: if a peer worker dies mid-step the
@@ -202,6 +303,16 @@ pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
                         sync = guard;
                     }
                     if timed_out {
+                        // Withdraw only this waiter's arrival (so a retry
+                        // is not double-counted toward quorum). The slot
+                        // and its gradient sums stay: peers that already
+                        // pushed may still barrier and release this step.
+                        // Memory stays bounded regardless — pending steps
+                        // live in the MAX_PENDING_STEPS window above
+                        // released_below, at one running sum per key.
+                        if let Some(slot) = sync.pending.get_mut(&step) {
+                            slot.arrived = slot.arrived.saturating_sub(1);
+                        }
                         drop(sync);
                         let _ = t.send(&Message::Error {
                             what: format!("barrier timeout at step {step}"),
@@ -209,7 +320,18 @@ pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
                         continue;
                     }
                 }
+                // Woken by shutdown before the step released? That is a
+                // failed barrier, not a release — a BarrierRelease here
+                // would tell the worker its step committed when its
+                // gradients were never applied.
+                let released = sync.released_below > step;
                 drop(sync);
+                if !released {
+                    let _ = t.send(&Message::Error {
+                        what: format!("server stopping before step {step} released"),
+                    });
+                    continue;
+                }
                 if t.send(&Message::BarrierRelease { step }).is_err() {
                     return;
                 }
@@ -479,5 +601,246 @@ mod tests {
             PsServerHandle::spawn_tcp("127.0.0.1:0", store, UpdateMode::Async).unwrap();
         srv.shutdown();
         srv.shutdown(); // second call is a no-op
+    }
+
+    #[test]
+    fn sync_pending_evicted_after_release() {
+        // Quorum 1 (2 expected, 1 backup): worker B releases step 1 while
+        // a dead straggler's step-0 sums sit pending; they must be
+        // evicted, not leak forever.
+        let store = store_with(&[(0, vec![0.0])], Optimizer::Sgd { lr: 1.0 });
+        let shared = PsShared::new(
+            store,
+            UpdateMode::Sync { expected_workers: 2, backup_workers: 1 },
+        );
+        let (client_a, server_a) = InProcTransport::pair();
+        let (client_b, server_b) = InProcTransport::pair();
+        let ha = thread::spawn({
+            let sh = shared.clone();
+            move || serve(Box::new(server_a), sh)
+        });
+        let hb = thread::spawn({
+            let sh = shared.clone();
+            move || serve(Box::new(server_b), sh)
+        });
+        let mut a: Box<dyn Transport> = Box::new(client_a);
+        let mut b: Box<dyn Transport> = Box::new(client_b);
+
+        // A pushes step 0 but never reaches its barrier (simulated death).
+        a.send(&Message::Push {
+            worker: 0,
+            step: 0,
+            entries: vec![(0, Tensor::from_vec(&[1], vec![7.0]))],
+        })
+        .unwrap();
+        assert!(matches!(a.recv().unwrap(), Message::PushAck { .. }));
+        assert_eq!(shared.pending_steps(), 1);
+
+        // B is a step ahead; its barrier at step 1 releases (quorum 1)
+        // and must garbage-collect A's orphaned step-0 entry.
+        b.send(&Message::Push {
+            worker: 1,
+            step: 1,
+            entries: vec![(0, Tensor::from_vec(&[1], vec![4.0]))],
+        })
+        .unwrap();
+        assert!(matches!(b.recv().unwrap(), Message::PushAck { .. }));
+        b.send(&Message::Barrier { worker: 1, step: 1 }).unwrap();
+        assert!(matches!(b.recv().unwrap(), Message::BarrierRelease { step: 1 }));
+        assert_eq!(shared.pending_steps(), 0);
+
+        // Only B's gradient applied: w = -4, not -11.
+        b.send(&Message::Pull { worker: 1, keys: vec![0] }).unwrap();
+        match b.recv().unwrap() {
+            Message::PullReply { entries, .. } => assert_eq!(entries[0].1.data(), &[-4.0]),
+            m => panic!("{m:?}"),
+        }
+
+        // A's late barrier for the dead step is waved through.
+        a.send(&Message::Barrier { worker: 0, step: 0 }).unwrap();
+        assert!(matches!(a.recv().unwrap(), Message::BarrierRelease { step: 0 }));
+
+        drop(a);
+        drop(b);
+        ha.join().unwrap();
+        hb.join().unwrap();
+    }
+
+    #[test]
+    fn sync_far_future_push_discarded() {
+        // A push MAX_PENDING_STEPS ahead of the release horizon cannot
+        // grow server memory; it is acked and dropped.
+        let store = store_with(&[(0, vec![0.0])], Optimizer::Sgd { lr: 1.0 });
+        let shared = PsShared::new(
+            store,
+            UpdateMode::Sync { expected_workers: 1, backup_workers: 0 },
+        );
+        let (client_end, server_end) = InProcTransport::pair();
+        let h = thread::spawn({
+            let sh = shared.clone();
+            move || serve(Box::new(server_end), sh)
+        });
+        let mut c: Box<dyn Transport> = Box::new(client_end);
+
+        c.send(&Message::Push {
+            worker: 0,
+            step: MAX_PENDING_STEPS,
+            entries: vec![(0, Tensor::from_vec(&[1], vec![100.0]))],
+        })
+        .unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+        assert_eq!(shared.pending_steps(), 0);
+
+        // Normal operation continues; only the in-window grad applies.
+        c.send(&Message::Push {
+            worker: 0,
+            step: 0,
+            entries: vec![(0, Tensor::from_vec(&[1], vec![2.0]))],
+        })
+        .unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+        c.send(&Message::Barrier { worker: 0, step: 0 }).unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::BarrierRelease { step: 0 }));
+        c.send(&Message::Pull { worker: 0, keys: vec![0] }).unwrap();
+        match c.recv().unwrap() {
+            Message::PullReply { entries, .. } => assert_eq!(entries[0].1.data(), &[-2.0]),
+            m => panic!("{m:?}"),
+        }
+        drop(c);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn barrier_beyond_cap_rejected() {
+        // A far-future barrier must not create a slot or (with a small
+        // quorum) advance the release horizon past every live worker.
+        let store = store_with(&[(0, vec![0.0])], Optimizer::Sgd { lr: 1.0 });
+        let shared = PsShared::new(
+            store,
+            UpdateMode::Sync { expected_workers: 2, backup_workers: 1 }, // quorum 1
+        );
+        let (client_end, server_end) = InProcTransport::pair();
+        let h = thread::spawn({
+            let sh = shared.clone();
+            move || serve(Box::new(server_end), sh)
+        });
+        let mut c: Box<dyn Transport> = Box::new(client_end);
+
+        c.send(&Message::Barrier { worker: 0, step: MAX_PENDING_STEPS }).unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::Error { .. }));
+        assert_eq!(shared.pending_steps(), 0);
+
+        // The horizon did not move: a normal step-0 round still applies.
+        c.send(&Message::Push {
+            worker: 0,
+            step: 0,
+            entries: vec![(0, Tensor::from_vec(&[1], vec![2.0]))],
+        })
+        .unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+        c.send(&Message::Barrier { worker: 0, step: 0 }).unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::BarrierRelease { step: 0 }));
+        assert_eq!(shared.store.get_clone(0).unwrap().data(), &[-2.0]);
+        drop(c);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn sync_first_push_shape_mismatch_does_not_poison_step() {
+        // A malformed first push must be rejected against the stored
+        // parameter shape instead of becoming the running sum and
+        // discarding every later correct push for the key.
+        let store = store_with(&[(0, vec![0.0])], Optimizer::Sgd { lr: 1.0 });
+        let shared = PsShared::new(
+            store,
+            UpdateMode::Sync { expected_workers: 3, backup_workers: 0 },
+        );
+        let mut conns: Vec<Box<dyn Transport>> = Vec::new();
+        let mut serve_handles = Vec::new();
+        for _ in 0..3 {
+            let (c, s) = InProcTransport::pair();
+            let sh = shared.clone();
+            serve_handles.push(thread::spawn(move || serve(Box::new(s), sh)));
+            conns.push(Box::new(c));
+        }
+        // Malformed first push: shape [2] against param shape [1].
+        conns[0]
+            .send(&Message::Push {
+                worker: 0,
+                step: 0,
+                entries: vec![(0, Tensor::from_vec(&[2], vec![9.0, 9.0]))],
+            })
+            .unwrap();
+        assert!(matches!(conns[0].recv().unwrap(), Message::PushAck { .. }));
+        // Correct pushes still accumulate.
+        for (i, grad) in [(1usize, 2.0f32), (2, 4.0)] {
+            conns[i]
+                .send(&Message::Push {
+                    worker: i as u32,
+                    step: 0,
+                    entries: vec![(0, Tensor::from_vec(&[1], vec![grad]))],
+                })
+                .unwrap();
+            assert!(matches!(conns[i].recv().unwrap(), Message::PushAck { .. }));
+        }
+        // All three barrier; the mean of the two valid grads applies.
+        let mut joins = Vec::new();
+        for mut c in conns {
+            joins.push(thread::spawn(move || {
+                c.send(&Message::Barrier { worker: 0, step: 0 }).unwrap();
+                assert!(matches!(c.recv().unwrap(), Message::BarrierRelease { step: 0 }));
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(shared.store.get_clone(0).unwrap().data(), &[-3.0]);
+        for h in serve_handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn sync_running_sum_matches_buffered_mean() {
+        // 4 workers' pushes fold into one running sum; the released mean
+        // (sum * 0.25, exact in binary) must equal buffer-then-reduce
+        // semantics bit for bit.
+        let store = store_with(&[(0, vec![0.0]), (1, vec![0.0])], Optimizer::Sgd { lr: 1.0 });
+        let shared = PsShared::new(
+            store,
+            UpdateMode::Sync { expected_workers: 4, backup_workers: 0 },
+        );
+        let mut serve_handles = Vec::new();
+        let mut handles = Vec::new();
+        for grad in [1.0f32, 2.0, 6.0, 11.0] {
+            let (client_end, server_end) = InProcTransport::pair();
+            let sh = shared.clone();
+            serve_handles.push(thread::spawn(move || serve(Box::new(server_end), sh)));
+            handles.push(thread::spawn(move || {
+                let mut c: Box<dyn Transport> = Box::new(client_end);
+                c.send(&Message::Push {
+                    worker: 0,
+                    step: 0,
+                    entries: vec![
+                        (0, Tensor::from_vec(&[1], vec![grad])),
+                        (1, Tensor::from_vec(&[1], vec![-grad])),
+                    ],
+                })
+                .unwrap();
+                assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+                c.send(&Message::Barrier { worker: 0, step: 0 }).unwrap();
+                assert!(matches!(c.recv().unwrap(), Message::BarrierRelease { step: 0 }));
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // mean = 20/4 = 5.0 exactly, lr 1 → w0 = -5, w1 = 5.
+        assert_eq!(shared.store.get_clone(0).unwrap().data(), &[-5.0]);
+        assert_eq!(shared.store.get_clone(1).unwrap().data(), &[5.0]);
+        assert_eq!(shared.pending_steps(), 0);
+        for h in serve_handles {
+            h.join().unwrap();
+        }
     }
 }

@@ -1,8 +1,17 @@
 //! One parameter server's store: the authoritative copy of its shard of
 //! the model plus the optimizer state (Fig. 1 step 6, applied server-side
 //! in distributed training).
+//!
+//! Two store types:
+//! * [`ShardStore`] — plain single-owner store, used to seed a server
+//!   and as the single-threaded reference in tests.
+//! * [`StripedStore`] — the serve-loop's concurrent store: parameters
+//!   partitioned into lock stripes by key so handler threads touching
+//!   disjoint keys proceed in parallel, with a lock-free atomic clock.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
 
 use crate::tensor::Tensor;
 
@@ -95,17 +104,141 @@ impl ShardStore {
         Ok(())
     }
 
-    /// Apply the average of `grads` (sync mode: after the barrier).
-    pub fn apply_aggregated(&mut self, key: u32, grads: &[Tensor]) -> Result<(), String> {
-        if grads.is_empty() {
+    /// Decompose into raw parts (for conversion into a concurrent store).
+    #[allow(clippy::type_complexity)]
+    pub(crate) fn into_parts(self) -> (BTreeMap<u32, Tensor>, BTreeMap<u32, Tensor>, Optimizer, u64) {
+        (self.params, self.velocity, self.opt, self.clock)
+    }
+}
+
+// ------------------------------------------------------------- striping
+
+/// Default stripe count for [`StripedStore`]. Keys hash (mod) onto
+/// stripes, so anything comfortably above the expected handler-thread
+/// count keeps collision probability low without bloating memory.
+pub const DEFAULT_STRIPES: usize = 16;
+
+/// One stripe's mutable state: the subset of parameters whose
+/// `key % n_stripes` lands here, plus their momentum velocity.
+#[derive(Debug, Default)]
+struct Stripe {
+    params: BTreeMap<u32, Tensor>,
+    velocity: BTreeMap<u32, Tensor>,
+}
+
+/// Lock-striped concurrent parameter store.
+///
+/// The serve loop's hot-path store: each stripe has its own `RwLock`, so
+/// pulls (readers) of a key run concurrently with each other and with
+/// updates to *other* stripes; only a pull and a push of keys in the
+/// same stripe serialize. The update clock is a plain atomic — readers
+/// never take a lock for staleness accounting.
+///
+/// Consistency contract: every read or write of one tensor happens under
+/// that key's stripe lock, so a pull never observes a torn (partially
+/// applied) update of any single tensor. Cross-key atomicity is NOT
+/// promised (matching async/Hogwild semantics [48]).
+#[derive(Debug)]
+pub struct StripedStore {
+    stripes: Vec<RwLock<Stripe>>,
+    opt: Optimizer,
+    clock: AtomicU64,
+}
+
+impl StripedStore {
+    /// Convert a seeded [`ShardStore`] into a striped store.
+    pub fn from_shard(store: ShardStore, n_stripes: usize) -> Self {
+        assert!(n_stripes >= 1, "need at least one stripe");
+        let (params, velocity, opt, clock) = store.into_parts();
+        let mut stripes: Vec<Stripe> = (0..n_stripes).map(|_| Stripe::default()).collect();
+        for (k, v) in params {
+            stripes[k as usize % n_stripes].params.insert(k, v);
+        }
+        for (k, v) in velocity {
+            stripes[k as usize % n_stripes].velocity.insert(k, v);
+        }
+        StripedStore {
+            stripes: stripes.into_iter().map(RwLock::new).collect(),
+            opt,
+            clock: AtomicU64::new(clock),
+        }
+    }
+
+    fn stripe(&self, key: u32) -> &RwLock<Stripe> {
+        &self.stripes[key as usize % self.stripes.len()]
+    }
+
+    pub fn n_stripes(&self) -> usize {
+        self.stripes.len()
+    }
+
+    pub fn optimizer(&self) -> Optimizer {
+        self.opt
+    }
+
+    /// Monotone update clock (async staleness accounting); lock-free.
+    pub fn clock(&self) -> u64 {
+        self.clock.load(Ordering::Relaxed)
+    }
+
+    pub fn contains(&self, key: u32) -> bool {
+        self.stripe(key).read().unwrap().params.contains_key(&key)
+    }
+
+    /// Run `f` on the tensor for `key` under the stripe's read lock —
+    /// the zero-copy pull path encodes straight out of the store here.
+    pub fn with_tensor<R>(&self, key: u32, f: impl FnOnce(&Tensor) -> R) -> Option<R> {
+        let guard = self.stripe(key).read().unwrap();
+        guard.params.get(&key).map(f)
+    }
+
+    /// Clone out one tensor (cold paths: checkpoints, tests).
+    pub fn get_clone(&self, key: u32) -> Option<Tensor> {
+        self.with_tensor(key, Tensor::clone)
+    }
+
+    /// Apply one gradient to one key (async mode: called per push).
+    /// Takes `&self`: only the key's stripe is write-locked.
+    pub fn apply_grad(&self, key: u32, grad: &Tensor) -> Result<(), String> {
+        let mut guard = self.stripe(key).write().unwrap();
+        let Stripe { params, velocity } = &mut *guard;
+        let w = params
+            .get_mut(&key)
+            .ok_or_else(|| format!("unknown key {key}"))?;
+        if w.shape() != grad.shape() {
+            return Err(format!(
+                "grad shape {:?} != param shape {:?} for key {key}",
+                grad.shape(),
+                w.shape()
+            ));
+        }
+        match self.opt {
+            Optimizer::Sgd { lr } => {
+                w.axpy(-lr, grad);
+            }
+            Optimizer::Momentum { lr, mu } => {
+                let v = velocity
+                    .entry(key)
+                    .or_insert_with(|| Tensor::zeros(grad.shape()));
+                v.scale(mu);
+                v.axpy(1.0, grad);
+                w.axpy(-lr, v);
+            }
+        }
+        drop(guard);
+        self.clock.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Sync-mode apply: consume a running gradient sum over `count`
+    /// contributions, scale once, apply once (the barrier's O(1)-tensor
+    /// replacement for reducing N buffered tensors).
+    pub fn apply_mean(&self, key: u32, mut sum: Tensor, count: u32) -> Result<(), String> {
+        if count == 0 {
             return Ok(());
         }
-        let mut avg = grads[0].clone();
-        for g in &grads[1..] {
-            avg.axpy(1.0, g);
-        }
-        avg.scale(1.0 / grads.len() as f32);
-        self.apply_grad(key, &avg)
+        sum.scale(1.0 / count as f32);
+        self.apply_grad(key, &sum)
     }
 }
 
@@ -138,14 +271,6 @@ mod tests {
     }
 
     #[test]
-    fn aggregated_is_mean() {
-        let mut s = ShardStore::new(Optimizer::Sgd { lr: 1.0 });
-        s.insert(0, t(&[0.0]));
-        s.apply_aggregated(0, &[t(&[1.0]), t(&[3.0])]).unwrap();
-        assert_eq!(s.get(0).unwrap().data(), &[-2.0]); // mean 2, lr 1
-    }
-
-    #[test]
     fn unknown_key_rejected() {
         let mut s = ShardStore::new(Optimizer::Sgd { lr: 0.1 });
         assert!(s.apply_grad(7, &t(&[1.0])).is_err());
@@ -156,5 +281,93 @@ mod tests {
         let mut s = ShardStore::new(Optimizer::Sgd { lr: 0.1 });
         s.insert(0, t(&[1.0, 2.0]));
         assert!(s.apply_grad(0, &t(&[1.0])).is_err());
+    }
+
+    // ---- striped store -------------------------------------------------
+
+    fn striped_with(keys: &[(u32, Vec<f32>)], opt: Optimizer, n_stripes: usize) -> StripedStore {
+        let mut s = ShardStore::new(opt);
+        for (k, v) in keys {
+            s.insert(*k, t(v));
+        }
+        StripedStore::from_shard(s, n_stripes)
+    }
+
+    #[test]
+    fn striped_matches_shard_store_sgd() {
+        let s = striped_with(&[(0, vec![1.0, 2.0]), (5, vec![3.0])], Optimizer::Sgd { lr: 0.1 }, 4);
+        s.apply_grad(0, &t(&[10.0, -10.0])).unwrap();
+        s.apply_grad(5, &t(&[5.0])).unwrap();
+        assert_eq!(s.get_clone(0).unwrap().data(), &[0.0, 3.0]);
+        assert_eq!(s.get_clone(5).unwrap().data(), &[2.5]);
+        assert_eq!(s.clock(), 2);
+        assert!(s.contains(5));
+        assert!(!s.contains(1));
+    }
+
+    #[test]
+    fn striped_momentum_matches_reference() {
+        let s = striped_with(&[(3, vec![1.0])], Optimizer::Momentum { lr: 0.1, mu: 0.9 }, 2);
+        s.apply_grad(3, &t(&[1.0])).unwrap(); // v=1, w=0.9
+        assert!((s.get_clone(3).unwrap().data()[0] - 0.9).abs() < 1e-6);
+        s.apply_grad(3, &t(&[1.0])).unwrap(); // v=1.9, w=0.71
+        assert!((s.get_clone(3).unwrap().data()[0] - 0.71).abs() < 1e-6);
+    }
+
+    #[test]
+    fn striped_apply_mean_is_mean() {
+        let s = striped_with(&[(0, vec![0.0])], Optimizer::Sgd { lr: 1.0 }, 1);
+        let mut sum = t(&[1.0]);
+        sum.axpy(1.0, &t(&[3.0]));
+        s.apply_mean(0, sum, 2).unwrap(); // mean 2, lr 1 → -2
+        assert_eq!(s.get_clone(0).unwrap().data(), &[-2.0]);
+        // Zero contributions: no-op, no clock bump.
+        let c = s.clock();
+        s.apply_mean(0, t(&[100.0]), 0).unwrap();
+        assert_eq!(s.clock(), c);
+        assert_eq!(s.get_clone(0).unwrap().data(), &[-2.0]);
+    }
+
+    #[test]
+    fn striped_rejects_unknown_and_mismatched() {
+        let s = striped_with(&[(0, vec![1.0, 2.0])], Optimizer::Sgd { lr: 0.1 }, 3);
+        assert!(s.apply_grad(7, &t(&[1.0])).is_err());
+        assert!(s.apply_grad(0, &t(&[1.0])).is_err());
+        assert!(s.with_tensor(9, |_| ()).is_none());
+    }
+
+    #[test]
+    fn striped_seed_state_carries_over() {
+        // Momentum velocity accumulated pre-conversion keeps acting.
+        let mut seed = ShardStore::new(Optimizer::Momentum { lr: 0.1, mu: 0.9 });
+        seed.insert(0, t(&[1.0]));
+        seed.apply_grad(0, &t(&[1.0])).unwrap(); // v=1, w=0.9
+        let s = StripedStore::from_shard(seed, 4);
+        assert_eq!(s.clock(), 1);
+        s.apply_grad(0, &t(&[1.0])).unwrap(); // v=1.9, w=0.71
+        assert!((s.get_clone(0).unwrap().data()[0] - 0.71).abs() < 1e-6);
+    }
+
+    #[test]
+    fn striped_parallel_disjoint_keys() {
+        use std::sync::Arc;
+        let keys: Vec<(u32, Vec<f32>)> = (0..8).map(|k| (k, vec![0.0; 32])).collect();
+        let s = Arc::new(striped_with(&keys, Optimizer::Sgd { lr: 1.0 }, 8));
+        let mut handles = Vec::new();
+        for k in 0..8u32 {
+            let s = Arc::clone(&s);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..100 {
+                    s.apply_grad(k, &Tensor::from_vec(&[32], vec![1.0; 32])).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.clock(), 800);
+        for k in 0..8u32 {
+            assert!(s.get_clone(k).unwrap().data().iter().all(|&x| x == -100.0));
+        }
     }
 }

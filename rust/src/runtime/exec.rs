@@ -5,10 +5,14 @@
 //! interchange format (see aot.py / DESIGN.md): `HloModuleProto::
 //! from_text_file` reassigns instruction ids, avoiding the 64-bit-id
 //! incompatibility between jax ≥ 0.5 protos and xla_extension 0.5.1.
+//!
+//! The `xla` bindings are gated behind the `pjrt` cargo feature so the
+//! crate builds (and every non-artifact test runs) on machines without
+//! the PJRT toolchain. Without the feature, `Runtime::new` still loads
+//! the artifact index (manifests and init blobs are plain files) but
+//! `load`/`run` report a clear error instead of executing.
 
 use std::path::Path;
-
-use anyhow::Result;
 
 use super::artifact::{ArtifactIndex, ArtifactMeta, ParamManifest};
 use crate::data::loader::Batch;
@@ -16,6 +20,7 @@ use crate::tensor::Tensor;
 
 /// Owns the PJRT client; compiles artifacts on demand.
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
     pub index: ArtifactIndex,
 }
@@ -33,17 +38,32 @@ pub struct StepOutput {
 }
 
 impl Runtime {
+    #[cfg(feature = "pjrt")]
     pub fn new(artifacts_dir: &Path) -> Result<Self, String> {
         let index = ArtifactIndex::load(artifacts_dir)?;
         let client = xla::PjRtClient::cpu().map_err(|e| format!("pjrt cpu client: {e}"))?;
         Ok(Runtime { client, index })
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    pub fn new(artifacts_dir: &Path) -> Result<Self, String> {
+        let index = ArtifactIndex::load(artifacts_dir)?;
+        Ok(Runtime { index })
+    }
+
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        #[cfg(feature = "pjrt")]
+        {
+            self.client.platform_name()
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            "pjrt-disabled".to_string()
+        }
     }
 
     /// Compile `name` into a ready-to-run executable.
+    #[cfg(feature = "pjrt")]
     pub fn load(&self, name: &str) -> Result<TrainExecutable, String> {
         let meta = self.index.find(name)?.clone();
         let proto = xla::HloModuleProto::from_text_file(&meta.hlo_path)
@@ -54,6 +74,14 @@ impl Runtime {
             .compile(&comp)
             .map_err(|e| format!("compile {name}: {e}"))?;
         Ok(TrainExecutable { meta, exe })
+    }
+
+    /// Without the `pjrt` feature there is no compiler to load into.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load(&self, name: &str) -> Result<TrainExecutable, String> {
+        Err(format!(
+            "cannot compile artifact {name}: built without the `pjrt` feature"
+        ))
     }
 
     /// Parameter manifest + init values for a family.
@@ -67,9 +95,11 @@ impl Runtime {
 /// One compiled artifact.
 pub struct TrainExecutable {
     pub meta: ArtifactMeta,
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "pjrt")]
 impl TrainExecutable {
     fn literal_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal, String> {
         let lit = xla::Literal::vec1(data);
@@ -204,6 +234,22 @@ impl TrainExecutable {
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+impl TrainExecutable {
+    /// Execution requires the `pjrt` feature; report that clearly.
+    pub fn run(
+        &self,
+        _params: &[Tensor],
+        _batch: &Batch,
+        _lr: Option<f32>,
+    ) -> Result<StepOutput, String> {
+        Err(format!(
+            "cannot execute {}: built without the `pjrt` feature",
+            self.meta.name
+        ))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -217,6 +263,10 @@ mod tests {
     fn runtime() -> Option<Runtime> {
         if !artifacts_dir().join("index.json").exists() {
             eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        if !cfg!(feature = "pjrt") {
+            eprintln!("skipping: built without the `pjrt` feature");
             return None;
         }
         Some(Runtime::new(&artifacts_dir()).unwrap())

@@ -124,12 +124,15 @@ where
     let t0 = std::time::Instant::now();
     let batch_size = grad_exe.meta.batch;
     let mut loader = spawn_loader(make_batch, batch_size, cfg.steps, cfg.prefetch_depth);
+    // One parameter buffer for the whole run: each refresh refills it in
+    // place instead of allocating a fresh Vec per step.
+    let mut params: Vec<Tensor> = Vec::new();
 
     for step in 0..cfg.steps {
-        let params = {
+        {
             let _t = profiler.time(Step::ParamRefresh);
-            client.pull_all()?
-        };
+            client.pull_all_into(&mut params)?;
+        }
         let b = {
             let _t = profiler.time(Step::DataLoad);
             loader.next().ok_or("loader exhausted early")?

@@ -5,13 +5,16 @@
 //! (PJRT-backed integration lives in the module tests of `runtime`,
 //! `worker::pipeline` and `coordinator`, gated on `make artifacts`.)
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
 use dtlsda::advisor;
 use dtlsda::advisor::netdefs;
 use dtlsda::net::message::Message;
-use dtlsda::net::transport::{connect, Transport};
+use dtlsda::net::transport::{connect, InProcTransport, Transport};
 use dtlsda::ps::client::PsClient;
 use dtlsda::ps::router::Router;
-use dtlsda::ps::server::{PsServerHandle, UpdateMode};
+use dtlsda::ps::server::{serve, PsServerHandle, PsShared, UpdateMode};
 use dtlsda::ps::shard::{Optimizer, ShardStore};
 use dtlsda::sim::device::DeviceModel;
 use dtlsda::tensor::Tensor;
@@ -138,6 +141,155 @@ fn sync_is_deterministic() {
     let (b, _) = quad_cluster(2, 2, true, 10, 0.1);
     for (x, y) in a.iter().zip(&b) {
         assert_eq!(x.data(), y.data());
+    }
+}
+
+/// Deterministic, exactly-representable gradient scalar for worker `w`,
+/// step `s`, key `k`: small integers, so with lr = 1 every arithmetic
+/// result is exact in f32 and the final weights are independent of the
+/// interleaving of async updates (f32 addition of small integers is
+/// exact, hence associative and commutative here).
+fn grad_scalar(w: usize, s: usize, k: usize) -> f32 {
+    ((w * 31 + s * 7 + k * 3) % 11) as f32 - 5.0
+}
+
+/// Shared harness for the striped-store stress tests: `n_workers` push
+/// uniform (all-elements-equal) tensors over in-proc transports while
+/// `n_pullers` concurrently pull every key and assert that no tensor is
+/// ever torn (mixed elements from two updates). Returns the final
+/// per-key scalar observed by a last pull.
+fn striped_stress(n_workers: usize, n_keys: usize, steps: usize, elems: usize, sync: bool) -> Vec<f32> {
+    let sizes: Vec<usize> = vec![elems * 4; n_keys];
+    let router = Router::new(&sizes, 1);
+    let mut store = ShardStore::new(Optimizer::Sgd { lr: 1.0 });
+    for k in 0..n_keys {
+        store.insert(k as u32, Tensor::zeros(&[elems]));
+    }
+    let mode = if sync {
+        UpdateMode::Sync { expected_workers: n_workers, backup_workers: 0 }
+    } else {
+        UpdateMode::Async
+    };
+    let shared = PsShared::new(store, mode);
+
+    let mut serve_handles = Vec::new();
+    let mut spawn_conn = |shared: &Arc<PsShared>| {
+        let (client_end, server_end) = InProcTransport::pair();
+        let sh = shared.clone();
+        serve_handles.push(std::thread::spawn(move || serve(Box::new(server_end), sh)));
+        client_end
+    };
+
+    // Pullers: hammer Pull for every key, asserting uniformity (a torn
+    // read of a tensor mid-update would show mixed element values).
+    let stop = Arc::new(AtomicBool::new(false));
+    let all_keys: Vec<u32> = (0..n_keys as u32).collect();
+    let mut puller_handles = Vec::new();
+    for _ in 0..2 {
+        let mut t: Box<dyn Transport> = Box::new(spawn_conn(&shared));
+        let stop = stop.clone();
+        let keys = all_keys.clone();
+        puller_handles.push(std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                t.send(&Message::Pull { worker: 99, keys: keys.clone() }).unwrap();
+                match t.recv().unwrap() {
+                    Message::PullReply { entries, .. } => {
+                        for (k, tensor) in entries {
+                            let d = tensor.data();
+                            assert!(
+                                d.iter().all(|&x| x == d[0]),
+                                "torn read of key {k}: {:?} != {}",
+                                d.iter().find(|&&x| x != d[0]),
+                                d[0]
+                            );
+                        }
+                    }
+                    m => panic!("unexpected pull reply {m:?}"),
+                }
+            }
+        }));
+    }
+
+    // Workers: push uniform integer-valued gradients.
+    let mut worker_handles = Vec::new();
+    for w in 0..n_workers {
+        let client_end = spawn_conn(&shared);
+        let router = router.clone();
+        worker_handles.push(std::thread::spawn(move || {
+            let mut client = PsClient::new(w as u32, vec![Box::new(client_end) as Box<dyn Transport>], router);
+            for s in 0..steps {
+                let grads: Vec<Tensor> = (0..n_keys)
+                    .map(|k| Tensor::from_vec(&[elems], vec![grad_scalar(w, s, k); elems]))
+                    .collect();
+                client.push(s as u64, &grads).unwrap();
+                if sync {
+                    client.barrier(s as u64).unwrap();
+                }
+            }
+        }));
+    }
+    for h in worker_handles {
+        h.join().unwrap();
+    }
+    stop.store(true, Ordering::Relaxed);
+    for h in puller_handles {
+        h.join().unwrap();
+    }
+
+    // Final state via one more connection.
+    let mut t: Box<dyn Transport> = Box::new(spawn_conn(&shared));
+    t.send(&Message::Pull { worker: 99, keys: all_keys }).unwrap();
+    let finals = match t.recv().unwrap() {
+        Message::PullReply { mut entries, .. } => {
+            entries.sort_by_key(|(k, _)| *k);
+            entries
+                .into_iter()
+                .map(|(k, tensor)| {
+                    let d = tensor.data();
+                    assert!(d.iter().all(|&x| x == d[0]), "torn final state of key {k}");
+                    d[0]
+                })
+                .collect()
+        }
+        m => panic!("unexpected pull reply {m:?}"),
+    };
+    drop(t);
+    for h in serve_handles {
+        h.join().unwrap();
+    }
+    finals
+}
+
+#[test]
+fn striped_stress_async_matches_sequential_reference() {
+    let (n_workers, n_keys, steps, elems) = (4, 12, 40, 16);
+    let finals = striped_stress(n_workers, n_keys, steps, elems, false);
+    // Async + lr 1 + integer grads: final = -(sum of every push), exact
+    // and order-independent.
+    for (k, &got) in finals.iter().enumerate() {
+        let mut expect = 0.0f32;
+        for w in 0..n_workers {
+            for s in 0..steps {
+                expect -= grad_scalar(w, s, k);
+            }
+        }
+        assert_eq!(got, expect, "key {k}: cluster {got} vs reference {expect}");
+    }
+}
+
+#[test]
+fn striped_stress_sync_matches_sequential_reference() {
+    let (n_workers, n_keys, steps, elems) = (4, 12, 30, 16);
+    let finals = striped_stress(n_workers, n_keys, steps, elems, true);
+    // Sync: one mean update per step; sum of 4 small integers scaled by
+    // 0.25 is exact in binary, so the reference is exact too.
+    for (k, &got) in finals.iter().enumerate() {
+        let mut expect = 0.0f32;
+        for s in 0..steps {
+            let sum: f32 = (0..n_workers).map(|w| grad_scalar(w, s, k)).sum();
+            expect -= sum * 0.25;
+        }
+        assert_eq!(got, expect, "key {k}: cluster {got} vs reference {expect}");
     }
 }
 
