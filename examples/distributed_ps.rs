@@ -26,6 +26,7 @@ fn main() -> Result<(), String> {
         momentum: 0.9,
         sync: false,
         seed: 3,
+        ..Default::default()
     };
     println!(
         "spawning {} parameter servers + {} workers ({} steps each, async momentum SGD) ...",

@@ -53,7 +53,7 @@ fn main() {
         curve.push(0.0, ev.error_rate);
         for epoch in 1..=epochs {
             let steps = epoch_samples / b;
-            let cfg = PipelineConfig { lr, steps, prefetch_depth: 2, log_every: 0 };
+            let cfg = PipelineConfig { lr, steps, prefetch_depth: 2, ..Default::default() };
             // Same task seed as evaluation (same class templates); each
             // epoch revisits the same 0..epoch_samples training range —
             // proper epochs over a fixed set, val disjoint at offset 2^20.

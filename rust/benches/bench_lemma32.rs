@@ -88,6 +88,7 @@ fn measured() {
             momentum: 0.0,
             sync: false,
             seed: 1,
+            ..Default::default()
         };
         match run_distributed(std::path::Path::new("artifacts"), &cfg) {
             Ok(r) => {

@@ -2,11 +2,19 @@
 //! parameter server, async and sync, over in-proc channels and real
 //! loopback TCP, at 1/2/4/8 workers.
 //!
-//! The in-proc async series also runs with a single stripe — which
-//! reproduces the old global-lock server (every handler serializes on
-//! one lock) — so the table and `BENCH_ps_hotpath.json` record the
-//! striped-store speedup over that baseline at each worker count. The
-//! JSON lands at the repo root so later PRs can track the trajectory.
+//! Two series land in the table and `BENCH_ps_hotpath.json`:
+//! * The in-proc async/sync matrix also runs with a single stripe —
+//!   which reproduces the old global-lock server — so the striped-store
+//!   speedup over that baseline is recorded at each worker count.
+//! * A gradient-codec series (none vs topk vs quant8) records push
+//!   throughput plus the measured bytes-on-wire per run (`pushMB`,
+//!   from `PsClient::push_wire_bytes`), the Lemma 3.2 traffic saver.
+//!
+//! The `MB/s` column stays *logical* (dense-equivalent gradient bytes
+//! moved per second) so rows are comparable across codecs; `pushMB` is
+//! the real encoded traffic. The JSON lands at the repo root so later
+//! PRs can track the trajectory. Set `DTLSDA_BENCH_SMOKE=1` (the CI
+//! smoke step) for a reduced-iteration run with the same schema.
 
 use std::collections::BTreeMap;
 use std::thread;
@@ -14,6 +22,7 @@ use std::time::Instant;
 
 use dtlsda::net::transport::{connect, InProcTransport, Transport};
 use dtlsda::ps::client::PsClient;
+use dtlsda::ps::compress::CodecKind;
 use dtlsda::ps::router::Router;
 use dtlsda::ps::server::{serve, PsServerHandle, PsShared, UpdateMode};
 use dtlsda::ps::shard::{Optimizer, ShardStore, DEFAULT_STRIPES};
@@ -23,19 +32,21 @@ use dtlsda::util::json::Json;
 
 const N_KEYS: usize = 16;
 const ELEMS: usize = 2048; // 8 KB per tensor, 128 KB per direction per round
-const ROUNDS_INPROC: usize = 60;
-const ROUNDS_TCP: usize = 30;
 
 #[derive(Debug, Clone)]
 struct RunResult {
     transport: &'static str,
     mode: &'static str,
+    codec: &'static str,
     workers: usize,
     stripes: usize,
     wall_s: f64,
     /// Aggregate pull+push operations per second across all workers.
     ops_per_s: f64,
+    /// Logical (dense-equivalent) gradient+parameter MB per second.
     mb_per_s: f64,
+    /// Measured encoded push-body MB over the whole run (bytes on wire).
+    push_mb: f64,
 }
 
 fn seeded_store() -> ShardStore {
@@ -52,7 +63,8 @@ fn router() -> Router {
 }
 
 /// One worker's measured loop: pull_all + push (+ barrier in sync mode).
-fn worker_loop(mut client: PsClient, rounds: usize, sync: bool) {
+/// Returns the encoded push-body bytes this worker put on the wire.
+fn worker_loop(mut client: PsClient, rounds: usize, sync: bool) -> u64 {
     let grads: Vec<Tensor> =
         (0..N_KEYS).map(|_| Tensor::from_vec(&[ELEMS], vec![1e-4; ELEMS])).collect();
     let mut params = Vec::new();
@@ -63,30 +75,43 @@ fn worker_loop(mut client: PsClient, rounds: usize, sync: bool) {
             client.barrier(step as u64).unwrap();
         }
     }
+    client.push_wire_bytes()
 }
 
+#[allow(clippy::too_many_arguments)]
 fn result(
     transport: &'static str,
     mode: &'static str,
+    codec: &'static str,
     workers: usize,
     stripes: usize,
     rounds: usize,
     wall_s: f64,
+    push_wire_bytes: u64,
 ) -> RunResult {
     let ops = (workers * rounds * 2) as f64;
     let bytes = (workers * rounds * 2 * N_KEYS * ELEMS * 4) as f64;
     RunResult {
         transport,
         mode,
+        codec,
         workers,
         stripes,
         wall_s,
         ops_per_s: ops / wall_s,
         mb_per_s: bytes / 1e6 / wall_s,
+        push_mb: push_wire_bytes as f64 / 1e6,
     }
 }
 
-fn run_inproc(workers: usize, sync: bool, stripes: usize) -> RunResult {
+fn run_inproc(
+    workers: usize,
+    sync: bool,
+    stripes: usize,
+    codec: CodecKind,
+    cname: &'static str,
+    rounds: usize,
+) -> RunResult {
     let mode = if sync {
         UpdateMode::Sync { expected_workers: workers, backup_workers: 0 }
     } else {
@@ -104,13 +129,18 @@ fn run_inproc(workers: usize, sync: bool, stripes: usize) -> RunResult {
         serve_handles.push(thread::spawn(move || serve(Box::new(server_end), sh)));
         let rt = rt.clone();
         worker_handles.push(thread::spawn(move || {
-            let client =
-                PsClient::new(w as u32, vec![Box::new(client_end) as Box<dyn Transport>], rt);
-            worker_loop(client, ROUNDS_INPROC, sync);
+            let client = PsClient::with_codec(
+                w as u32,
+                vec![Box::new(client_end) as Box<dyn Transport>],
+                rt,
+                codec,
+            );
+            worker_loop(client, rounds, sync)
         }));
     }
+    let mut wire_bytes = 0u64;
     for h in worker_handles {
-        h.join().unwrap();
+        wire_bytes += h.join().unwrap();
     }
     let wall_s = t0.elapsed().as_secs_f64();
     for h in serve_handles {
@@ -119,14 +149,16 @@ fn run_inproc(workers: usize, sync: bool, stripes: usize) -> RunResult {
     result(
         "inproc",
         if sync { "sync" } else { "async" },
+        cname,
         workers,
         stripes,
-        ROUNDS_INPROC,
+        rounds,
         wall_s,
+        wire_bytes,
     )
 }
 
-fn run_tcp(workers: usize, sync: bool) -> RunResult {
+fn run_tcp(workers: usize, sync: bool, codec: CodecKind, cname: &'static str, rounds: usize) -> RunResult {
     let mode = if sync {
         UpdateMode::Sync { expected_workers: workers, backup_workers: 0 }
     } else {
@@ -142,88 +174,158 @@ fn run_tcp(workers: usize, sync: bool) -> RunResult {
         let rt = rt.clone();
         worker_handles.push(thread::spawn(move || {
             let t = connect(addr).unwrap();
-            let client = PsClient::new(w as u32, vec![Box::new(t) as Box<dyn Transport>], rt);
-            worker_loop(client, ROUNDS_TCP, sync);
+            let client = PsClient::with_codec(
+                w as u32,
+                vec![Box::new(t) as Box<dyn Transport>],
+                rt,
+                codec,
+            );
+            worker_loop(client, rounds, sync)
         }));
     }
+    let mut wire_bytes = 0u64;
     for h in worker_handles {
-        h.join().unwrap();
+        wire_bytes += h.join().unwrap();
     }
     let wall_s = t0.elapsed().as_secs_f64();
     srv.shutdown();
     result(
         "tcp",
         if sync { "sync" } else { "async" },
+        cname,
         workers,
         DEFAULT_STRIPES,
-        ROUNDS_TCP,
+        rounds,
         wall_s,
+        wire_bytes,
     )
 }
 
 fn main() {
+    let smoke = std::env::var("DTLSDA_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
+    let rounds_inproc: usize = if smoke { 4 } else { 60 };
+    let rounds_tcp: usize = if smoke { 2 } else { 30 };
+    let worker_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
+    let top_w = *worker_counts.last().unwrap();
+
     println!(
-        "# PS hot path — {N_KEYS} keys x {ELEMS} f32 ({} KB/direction/round), 1 server\n",
-        N_KEYS * ELEMS * 4 / 1024
+        "# PS hot path — {N_KEYS} keys x {ELEMS} f32 ({} KB/direction/round), 1 server{}\n",
+        N_KEYS * ELEMS * 4 / 1024,
+        if smoke { " [smoke]" } else { "" }
     );
 
     let mut results: Vec<RunResult> = Vec::new();
 
     // In-proc: striped vs single-stripe (global-lock baseline), async+sync.
     for &sync in &[false, true] {
-        for &w in &[1usize, 2, 4, 8] {
-            results.push(run_inproc(w, sync, 1));
-            results.push(run_inproc(w, sync, DEFAULT_STRIPES));
+        for &w in worker_counts {
+            results.push(run_inproc(w, sync, 1, CodecKind::None, "none", rounds_inproc));
+            results.push(run_inproc(
+                w,
+                sync,
+                DEFAULT_STRIPES,
+                CodecKind::None,
+                "none",
+                rounds_inproc,
+            ));
         }
     }
     // TCP loopback: striped only, async+sync.
     for &sync in &[false, true] {
-        for &w in &[1usize, 2, 4, 8] {
-            results.push(run_tcp(w, sync));
+        for &w in worker_counts {
+            results.push(run_tcp(w, sync, CodecKind::None, "none", rounds_tcp));
         }
     }
+    // Gradient-codec series (none baseline above): push compression
+    // throughput and bytes-on-wire, in-proc async at each worker count
+    // plus one sync point and one TCP point at the top worker count.
+    let codecs: &[(CodecKind, &'static str)] = &[
+        (CodecKind::TopK { fraction: 0.01 }, "topk0.01"),
+        (CodecKind::Quant8, "quant8"),
+    ];
+    for &(codec, cname) in codecs {
+        for &w in worker_counts {
+            results.push(run_inproc(w, false, DEFAULT_STRIPES, codec, cname, rounds_inproc));
+        }
+        results.push(run_inproc(top_w, true, DEFAULT_STRIPES, codec, cname, rounds_inproc));
+        results.push(run_tcp(top_w, false, codec, cname, rounds_tcp));
+    }
 
-    let mut t = Table::new(&["transport", "mode", "workers", "stripes", "ops/s", "MB/s"]);
+    let mut t = Table::new(&[
+        "transport", "mode", "codec", "workers", "stripes", "ops/s", "MB/s", "pushMB",
+    ]);
     for r in &results {
         t.row(&[
             r.transport.into(),
             r.mode.into(),
+            r.codec.into(),
             r.workers.to_string(),
             r.stripes.to_string(),
             fmt2(r.ops_per_s),
             fmt2(r.mb_per_s),
+            fmt2(r.push_mb),
         ]);
     }
     t.print();
 
-    // Headline: striped vs global-lock at 8 in-proc workers, per mode.
+    // Headline 1: striped vs global-lock at the top in-proc worker count.
     let find = |mode: &str, workers: usize, stripes: usize| {
         results
             .iter()
             .find(|r| {
-                r.transport == "inproc" && r.mode == mode && r.workers == workers && r.stripes == stripes
+                r.transport == "inproc"
+                    && r.mode == mode
+                    && r.codec == "none"
+                    && r.workers == workers
+                    && r.stripes == stripes
             })
             .map(|r| r.ops_per_s)
             .unwrap_or(0.0)
     };
-    let speedup_async = find("async", 8, DEFAULT_STRIPES) / find("async", 8, 1).max(1e-9);
-    let speedup_sync = find("sync", 8, DEFAULT_STRIPES) / find("sync", 8, 1).max(1e-9);
-    println!("\nstriped vs single-lock @ 8 in-proc workers: async {speedup_async:.2}x, sync {speedup_sync:.2}x");
+    let speedup_async = find("async", top_w, DEFAULT_STRIPES) / find("async", top_w, 1).max(1e-9);
+    let speedup_sync = find("sync", top_w, DEFAULT_STRIPES) / find("sync", top_w, 1).max(1e-9);
+    println!(
+        "\nstriped vs single-lock @ {top_w} in-proc workers: async {speedup_async:.2}x, sync {speedup_sync:.2}x"
+    );
+
+    // Headline 2: wire-compression ratio at the top worker count, async.
+    let wire = |codec: &str| {
+        results
+            .iter()
+            .find(|r| {
+                r.transport == "inproc"
+                    && r.mode == "async"
+                    && r.codec == codec
+                    && r.workers == top_w
+                    && r.stripes == DEFAULT_STRIPES
+            })
+            .map(|r| r.push_mb)
+            .unwrap_or(0.0)
+    };
+    let ratio_topk = wire("none") / wire("topk0.01").max(1e-12);
+    let ratio_quant8 = wire("none") / wire("quant8").max(1e-12);
+    println!(
+        "push bytes-on-wire vs dense @ {top_w} workers: topk0.01 {ratio_topk:.1}x smaller, quant8 {ratio_quant8:.1}x smaller"
+    );
 
     // Persist for trajectory tracking across PRs.
     let mut root: BTreeMap<String, Json> = BTreeMap::new();
     root.insert("bench".into(), Json::Str("ps_hotpath".into()));
+    root.insert("smoke".into(), Json::Num(if smoke { 1.0 } else { 0.0 }));
     root.insert("n_keys".into(), Json::Num(N_KEYS as f64));
     root.insert("elems_per_key".into(), Json::Num(ELEMS as f64));
     root.insert("default_stripes".into(), Json::Num(DEFAULT_STRIPES as f64));
+    root.insert("top_workers".into(), Json::Num(top_w as f64));
     root.insert(
-        "speedup_8w_inproc_async_striped_vs_single_lock".into(),
+        "speedup_inproc_async_striped_vs_single_lock".into(),
         Json::Num(speedup_async),
     );
     root.insert(
-        "speedup_8w_inproc_sync_striped_vs_single_lock".into(),
+        "speedup_inproc_sync_striped_vs_single_lock".into(),
         Json::Num(speedup_sync),
     );
+    root.insert("push_wire_ratio_dense_over_topk001".into(), Json::Num(ratio_topk));
+    root.insert("push_wire_ratio_dense_over_quant8".into(), Json::Num(ratio_quant8));
     root.insert(
         "results".into(),
         Json::Arr(
@@ -233,11 +335,13 @@ fn main() {
                     let mut o: BTreeMap<String, Json> = BTreeMap::new();
                     o.insert("transport".into(), Json::Str(r.transport.into()));
                     o.insert("mode".into(), Json::Str(r.mode.into()));
+                    o.insert("codec".into(), Json::Str(r.codec.into()));
                     o.insert("workers".into(), Json::Num(r.workers as f64));
                     o.insert("stripes".into(), Json::Num(r.stripes as f64));
                     o.insert("wall_s".into(), Json::Num(r.wall_s));
                     o.insert("ops_per_s".into(), Json::Num(r.ops_per_s));
                     o.insert("mb_per_s".into(), Json::Num(r.mb_per_s));
+                    o.insert("push_mb".into(), Json::Num(r.push_mb));
                     Json::Obj(o)
                 })
                 .collect(),

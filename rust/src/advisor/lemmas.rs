@@ -3,6 +3,12 @@
 //! Lemma 3.1 (multi-GPU efficiency): `α = (1 + R_O) / (1 + G·R_O)` where
 //! `R_O = T_O / T_C` is the ratio of non-hideable overhead to compute.
 //! Lemma 3.2 (parameter servers): `N_ps ≈ ceil(2·S_p·N_w / (B_ps·T_C))`.
+//! The codec-aware form ([`num_param_servers_with_codec`]) replaces the
+//! push half of `2·S_p` with the gradient codec's effective wire bytes —
+//! §1.1.1's compression lever, modeled with the exact wire accounting of
+//! `ps::compress`.
+
+use crate::ps::compress::CodecKind;
 
 /// Lemma 3.1: efficiency `α` of `g` GPUs given overhead ratio `r_o`.
 pub fn efficiency(g: usize, r_o: f64) -> f64 {
@@ -57,6 +63,36 @@ pub fn num_param_servers(s_p_bytes: f64, n_w: usize, b_ps: f64, t_c: f64) -> usi
 /// (Eq. 7's left side) — used by the simulator and its tests.
 pub fn ps_round_io_time(s_p_bytes: f64, n_w: usize, b_ps: f64, n_ps: usize) -> f64 {
     2.0 * s_p_bytes * n_w as f64 / (n_ps as f64 * b_ps)
+}
+
+/// Lemma 3.2, compression-aware: pulls stay dense f32 (workers need the
+/// full parameters), but pushes shrink to the codec's effective wire
+/// bytes, so the round traffic is `S_p + codec(S_p)` instead of `2·S_p`.
+/// With [`CodecKind::None`] this reduces exactly to
+/// [`num_param_servers`].
+pub fn num_param_servers_with_codec(
+    s_p_bytes: f64,
+    n_w: usize,
+    b_ps: f64,
+    t_c: f64,
+    codec: CodecKind,
+) -> usize {
+    assert!(s_p_bytes > 0.0 && b_ps > 0.0 && t_c > 0.0 && n_w >= 1);
+    let traffic = s_p_bytes + codec.effective_push_bytes(s_p_bytes);
+    let nps = traffic * n_w as f64 / (b_ps * t_c);
+    (nps.ceil() as usize).max(1)
+}
+
+/// Codec-aware round I/O time: the [`ps_round_io_time`] twin for
+/// compressed pushes.
+pub fn ps_round_io_time_with_codec(
+    s_p_bytes: f64,
+    n_w: usize,
+    b_ps: f64,
+    n_ps: usize,
+    codec: CodecKind,
+) -> f64 {
+    (s_p_bytes + codec.effective_push_bytes(s_p_bytes)) * n_w as f64 / (n_ps as f64 * b_ps)
 }
 
 #[cfg(test)]
@@ -140,6 +176,54 @@ mod tests {
             let t_short = ps_round_io_time(s_p, n_w, b_ps, nps - 1);
             assert!(t_short > t_c - 1e-9);
         }
+    }
+
+    #[test]
+    fn lemma32_codec_none_matches_dense_rule() {
+        for (s_p, n_w, b_ps, t_c) in
+            [(244e6, 4usize, 125e6, 2.0), (100e6, 8, 1e9, 1.0), (61e6 * 4.0, 16, 1.25e9, 0.5)]
+        {
+            assert_eq!(
+                num_param_servers_with_codec(s_p, n_w, b_ps, t_c, CodecKind::None),
+                num_param_servers(s_p, n_w, b_ps, t_c)
+            );
+            assert!(
+                (ps_round_io_time_with_codec(s_p, n_w, b_ps, 3, CodecKind::None)
+                    - ps_round_io_time(s_p, n_w, b_ps, 3))
+                .abs()
+                    < 1e-9
+            );
+        }
+    }
+
+    #[test]
+    fn lemma32_compression_lowers_recommended_nps() {
+        // The paper's AlexNet-on-1GbE scenario: compression must cut the
+        // recommended server count (pull stays dense, push shrinks).
+        let (s_p, n_w, b_ps, t_c) = (61e6 * 4.0, 4usize, 125e6, 2.0);
+        let dense = num_param_servers(s_p, n_w, b_ps, t_c);
+        let topk = num_param_servers_with_codec(
+            s_p,
+            n_w,
+            b_ps,
+            t_c,
+            CodecKind::TopK { fraction: 0.01 },
+        );
+        let quant = num_param_servers_with_codec(s_p, n_w, b_ps, t_c, CodecKind::Quant8);
+        // topk 1%: traffic factor ≈ (1 + 0.02)/2 ≈ 0.51 of dense.
+        assert!(topk < dense, "topk {topk} !< dense {dense}");
+        assert!(topk <= dense / 2 + 1, "topk {topk} vs dense {dense}");
+        // quant8: factor ≈ (1 + 0.25)/2 = 0.625 of dense.
+        assert!(quant < dense, "quant {quant} !< dense {dense}");
+        // Sparser fractions never need more servers.
+        let sparser = num_param_servers_with_codec(
+            s_p,
+            n_w,
+            b_ps,
+            t_c,
+            CodecKind::TopK { fraction: 0.001 },
+        );
+        assert!(sparser <= topk);
     }
 
     #[test]

@@ -13,6 +13,7 @@ use std::path::PathBuf;
 
 use crate::advisor::{self, netdefs};
 use crate::coordinator::{distributed, local};
+use crate::ps::compress::CodecKind;
 use crate::runtime::exec::Runtime;
 use crate::sim::device::DeviceModel;
 use crate::util::args::ArgSpec;
@@ -182,17 +183,30 @@ fn cmd_advisor_ps(argv: &[String]) -> Result<(), String> {
         .opt("params-mb", Some("244"), "parameter size S_p in MB (AlexNet f32 ≈ 244)")
         .opt("workers", Some("8"), "number of workers N_w")
         .opt("bw-gbps", Some("10"), "per-server network bandwidth, Gbit/s")
-        .opt("tc", Some("2.0"), "compute seconds per round T_C");
+        .opt("tc", Some("2.0"), "compute seconds per round T_C")
+        .opt("codec", Some("none"), "gradient codec: none|topk[:fraction]|quant8");
     let p = spec.parse(argv)?;
     let s_p = p.f64("params-mb") * 1e6;
     let n_w = p.usize("workers");
     let b_ps = p.f64("bw-gbps") * 1e9 / 8.0;
     let t_c = p.f64("tc");
+    let codec = CodecKind::parse(&p.str("codec"))?;
     let n_ps = advisor::num_param_servers(s_p, n_w, b_ps, t_c);
     println!("Lemma 3.2: N_ps = ceil(2 S_p N_w / (B_ps T_C)) = {n_ps}");
+    let n_rec = if codec == CodecKind::None {
+        n_ps
+    } else {
+        let n_c = advisor::lemmas::num_param_servers_with_codec(s_p, n_w, b_ps, t_c, codec);
+        println!(
+            "with {} pushes ({:.1} MB effective): N_ps = {n_c}",
+            codec.name(),
+            codec.effective_push_bytes(s_p) / 1e6
+        );
+        n_c
+    };
     let mut t = Table::new(&["N_ps", "round I/O (s)", "hidden?"]);
-    for n in 1..=(n_ps + 2) {
-        let io = advisor::lemmas::ps_round_io_time(s_p, n_w, b_ps, n);
+    for n in 1..=(n_rec + 2) {
+        let io = advisor::lemmas::ps_round_io_time_with_codec(s_p, n_w, b_ps, n, codec);
         t.row(&[
             n.to_string(),
             format!("{io:.3}"),
@@ -255,6 +269,7 @@ fn cmd_train_dist(argv: &[String]) -> Result<(), String> {
         .opt("steps", Some("10"), "steps per worker")
         .opt("lr", Some("0.02"), "learning rate")
         .opt("momentum", Some("0"), "server-side momentum")
+        .opt("codec", Some("none"), "gradient codec: none|topk[:fraction]|quant8")
         .flag("sync", "synchronous SGD (default async)");
     let p = spec.parse(argv)?;
     let cfg = distributed::DistConfig {
@@ -266,6 +281,7 @@ fn cmd_train_dist(argv: &[String]) -> Result<(), String> {
         momentum: p.f64("momentum") as f32,
         sync: p.flag("sync"),
         seed: 1,
+        codec: CodecKind::parse(&p.str("codec"))?,
     };
     let report = distributed::run_distributed(&PathBuf::from(p.str("artifacts")), &cfg)?;
     println!(
@@ -288,6 +304,11 @@ fn cmd_train_dist(argv: &[String]) -> Result<(), String> {
     println!(
         "ps: pulls={pulls} pushes={pushes} updates={updates} imbalance={:.3}",
         report.router_imbalance
+    );
+    println!(
+        "push wire traffic: {:.2} MB total ({} codec)",
+        report.push_wire_bytes as f64 / 1e6,
+        cfg.codec.name()
     );
     Ok(())
 }
@@ -374,6 +395,18 @@ mod tests {
     #[test]
     fn advisor_ps_table() {
         run(&argv(&["advisor-ps", "--params-mb", "244", "--workers", "8"])).unwrap();
+        run(&argv(&[
+            "advisor-ps",
+            "--params-mb",
+            "244",
+            "--workers",
+            "8",
+            "--codec",
+            "topk:0.01",
+        ]))
+        .unwrap();
+        run(&argv(&["advisor-ps", "--codec", "quant8"])).unwrap();
+        assert!(run(&argv(&["advisor-ps", "--codec", "bogus"])).is_err());
     }
 
     #[test]

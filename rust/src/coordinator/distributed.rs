@@ -11,6 +11,7 @@ use std::thread;
 
 use crate::net::transport::{connect, Transport};
 use crate::ps::client::PsClient;
+use crate::ps::compress::CodecKind;
 use crate::ps::router::Router;
 use crate::ps::server::{PsServerHandle, UpdateMode};
 use crate::ps::shard::{Optimizer, ShardStore};
@@ -30,6 +31,8 @@ pub struct DistConfig {
     pub momentum: f32,
     pub sync: bool,
     pub seed: u64,
+    /// Gradient codec for worker pushes (§1.1.1 traffic compression).
+    pub codec: CodecKind,
 }
 
 impl Default for DistConfig {
@@ -43,6 +46,7 @@ impl Default for DistConfig {
             momentum: 0.0,
             sync: false,
             seed: 1,
+            codec: CodecKind::None,
         }
     }
 }
@@ -61,6 +65,9 @@ pub struct DistReport {
     /// (pulls, pushes, updates) across all servers.
     pub ps_stats: (u64, u64, u64),
     pub router_imbalance: f64,
+    /// Encoded push-body bytes summed over all workers — the measured
+    /// wire traffic the codec saved (or not) vs dense pushes.
+    pub push_wire_bytes: u64,
 }
 
 /// Spawn servers + workers, train, tear down.
@@ -104,7 +111,7 @@ pub fn run_distributed(artifacts_dir: &std::path::Path, cfg: &DistConfig) -> Res
         let router = router.clone();
         let cfg = cfg.clone();
         let dir = artifacts_dir.to_path_buf();
-        handles.push(thread::spawn(move || -> Result<(Vec<f32>, f64), String> {
+        handles.push(thread::spawn(move || -> Result<(Vec<f32>, f64, u64), String> {
             // Each worker owns a full runtime (mirrors a real machine).
             let rt = Runtime::new(&dir)?;
             let exe = rt.load(&cfg.grad_artifact)?;
@@ -118,6 +125,7 @@ pub fn run_distributed(artifacts_dir: &std::path::Path, cfg: &DistConfig) -> Res
                 steps: cfg.steps_per_worker,
                 prefetch_depth: 2,
                 log_every: 0,
+                codec: cfg.codec,
             };
             // Disjoint data streams per worker via the seed fork.
             let batcher = crate::coordinator::local::family_batcher(
@@ -125,16 +133,18 @@ pub fn run_distributed(artifacts_dir: &std::path::Path, cfg: &DistConfig) -> Res
                 cfg.seed ^ (w as u64 + 1).wrapping_mul(0x9E37_79B9),
             );
             let stats = run_ps_worker(&exe, &mut client, batcher, &pcfg, cfg.sync)?;
-            Ok((stats.losses, stats.profiler.r_o()))
+            Ok((stats.losses, stats.profiler.r_o(), stats.push_wire_bytes))
         }));
     }
 
     let mut worker_losses = Vec::new();
     let mut worker_r_o = Vec::new();
+    let mut push_wire_bytes = 0u64;
     for h in handles {
-        let (losses, r_o) = h.join().map_err(|_| "worker panicked".to_string())??;
+        let (losses, r_o, wire) = h.join().map_err(|_| "worker panicked".to_string())??;
         worker_losses.push(losses);
         worker_r_o.push(r_o);
+        push_wire_bytes += wire;
     }
     let wall_s = t0.elapsed().as_secs_f64();
 
@@ -159,6 +169,7 @@ pub fn run_distributed(artifacts_dir: &std::path::Path, cfg: &DistConfig) -> Res
         throughput: samples as f64 / wall_s,
         ps_stats,
         router_imbalance: router.imbalance(),
+        push_wire_bytes,
     })
 }
 
@@ -206,6 +217,36 @@ mod tests {
         // load-balancing subgoal is limited by tensor granularity).
         assert!(report.router_imbalance < 1.7, "{}", report.router_imbalance);
         assert!(!report.final_params.is_empty());
+    }
+
+    #[test]
+    fn compressed_pushes_shrink_wire_traffic() {
+        let Some(dir) = artifacts_dir() else { return };
+        let base = DistConfig {
+            n_workers: 2,
+            n_servers: 2,
+            steps_per_worker: 3,
+            lr: 0.01,
+            ..Default::default()
+        };
+        let dense = run_distributed(&dir, &base).unwrap();
+        let topk = run_distributed(
+            &dir,
+            &DistConfig { codec: CodecKind::TopK { fraction: 0.01 }, ..base.clone() },
+        )
+        .unwrap();
+        assert!(dense.push_wire_bytes > 0);
+        // 1% top-k ships ~2% of the dense payload; allow generous slack
+        // for per-entry headers and small tensors.
+        assert!(
+            topk.push_wire_bytes * 10 < dense.push_wire_bytes,
+            "topk {} vs dense {}",
+            topk.push_wire_bytes,
+            dense.push_wire_bytes
+        );
+        for losses in &topk.worker_losses {
+            assert!(losses.iter().all(|l| l.is_finite()), "{losses:?}");
+        }
     }
 
     #[test]

@@ -67,6 +67,7 @@ pub fn train_local(rt: &Runtime, cfg: &LocalConfig) -> Result<(Vec<Tensor>, Work
         steps: cfg.steps,
         prefetch_depth: cfg.prefetch_depth,
         log_every: cfg.log_every,
+        ..Default::default()
     };
     run_local(&exe, params, family_batcher(&exe.meta.family, cfg.seed), &pcfg)
 }

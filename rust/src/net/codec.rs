@@ -47,6 +47,52 @@ impl Writer {
         self.buf.extend_from_slice(v);
     }
 
+    /// Append raw bytes with no length prefix (payloads whose length the
+    /// enclosing message already carries, e.g. compressed-push bodies).
+    pub fn raw(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+
+    /// u32 payload with no length prefix — one bulk copy on LE hosts,
+    /// byte-identical to per-element [`u32`](Self::u32) calls.
+    pub fn u32_raw(&mut self, v: &[u32]) {
+        #[cfg(target_endian = "little")]
+        {
+            // SAFETY: any u32 bit pattern is valid to view as bytes, u8
+            // has alignment 1, and `size_of_val(v) == 4 * v.len()`.
+            let bytes = unsafe {
+                std::slice::from_raw_parts(v.as_ptr().cast::<u8>(), std::mem::size_of_val(v))
+            };
+            self.buf.extend_from_slice(bytes);
+        }
+        #[cfg(not(target_endian = "little"))]
+        {
+            for x in v {
+                self.buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+
+    /// f32 payload with no length prefix — one bulk copy on LE hosts,
+    /// byte-identical to per-element [`f32`](Self::f32) calls.
+    pub fn f32_raw(&mut self, v: &[f32]) {
+        #[cfg(target_endian = "little")]
+        {
+            // SAFETY: same as `f32_slice` — every f32 bit pattern is
+            // valid bytes, alignment 1.
+            let bytes = unsafe {
+                std::slice::from_raw_parts(v.as_ptr().cast::<u8>(), std::mem::size_of_val(v))
+            };
+            self.buf.extend_from_slice(bytes);
+        }
+        #[cfg(not(target_endian = "little"))]
+        {
+            for x in v {
+                self.buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+
     pub fn str(&mut self, v: &str) {
         self.bytes(v.as_bytes());
     }
@@ -180,6 +226,12 @@ impl<'a> Reader<'a> {
 
     pub fn bytes(&mut self) -> Result<&'a [u8], String> {
         let n = self.u32()? as usize;
+        self.take(n)
+    }
+
+    /// Borrow the next `n` raw bytes (payloads whose length the caller
+    /// already decoded — the streaming-decode twin of [`Writer::raw`]).
+    pub fn raw(&mut self, n: usize) -> Result<&'a [u8], String> {
         self.take(n)
     }
 
@@ -329,6 +381,37 @@ mod tests {
         assert!(w.is_empty());
         w.u8(9);
         assert_eq!(w.as_bytes(), &[9]);
+    }
+
+    #[test]
+    fn raw_bulk_helpers_match_per_element_encoding() {
+        let us = [0u32, 1, 0xDEAD_BEEF, u32::MAX];
+        let fs = [0.0f32, -0.0, 1.5, f32::INFINITY, f32::MIN];
+        let mut bulk = Writer::new();
+        bulk.u32_raw(&us);
+        bulk.f32_raw(&fs);
+        let mut scalar = Writer::new();
+        for &u in &us {
+            scalar.u32(u);
+        }
+        for &f in &fs {
+            scalar.f32(f);
+        }
+        assert_eq!(bulk.finish(), scalar.finish());
+    }
+
+    #[test]
+    fn raw_roundtrip_unprefixed() {
+        let mut w = Writer::new();
+        w.u32(3); // caller-owned length
+        w.raw(&[7, 8, 9]);
+        w.str("after");
+        let buf = w.finish();
+        let mut r = Reader::new(&buf);
+        let n = r.u32().unwrap() as usize;
+        assert_eq!(r.raw(n).unwrap(), &[7, 8, 9]);
+        assert_eq!(r.str().unwrap(), "after");
+        assert!(r.raw(1).is_err()); // underrun detected
     }
 
     #[test]

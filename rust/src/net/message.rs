@@ -6,6 +6,7 @@
 //! synchronous SGD; `Stats`/`Shutdown` are control-plane.
 
 use super::codec::{Reader, Writer};
+use crate::ps::compress::Compressed;
 use crate::tensor::Tensor;
 
 /// Protocol messages. `key` identifies a parameter tensor (its index in
@@ -18,6 +19,12 @@ pub enum Message {
     PullReply { clock: u64, entries: Vec<(u32, Tensor)> },
     /// Worker -> server: gradients for `entries` (step `step` at worker).
     Push { worker: u32, step: u64, entries: Vec<(u32, Tensor)> },
+    /// Worker -> server: codec-compressed gradients (§1.1.1's traffic
+    /// saver). Each entry is self-describing (sparse or quant8), so no
+    /// codec negotiation happens — servers accept any mix per push. The
+    /// serve loop decodes these frames with the streaming
+    /// [`wire::CompressedPushBody`], never through this owned variant.
+    CompressedPush { worker: u32, step: u64, entries: Vec<(u32, Compressed)> },
     /// Server -> worker: push accepted (async mode acks immediately).
     PushAck { clock: u64 },
     /// Worker -> server: enter sync barrier for `step`.
@@ -44,6 +51,11 @@ const T_STATS: u8 = 7;
 const T_STATS_REPLY: u8 = 8;
 const T_SHUTDOWN: u8 = 9;
 const T_ERROR: u8 = 10;
+const T_COMPRESSED_PUSH: u8 = 11;
+
+/// Per-entry codec tags inside a `CompressedPush` body.
+const C_SPARSE: u8 = 1;
+const C_QUANT8: u8 = 2;
 
 impl Message {
     pub fn encode(&self) -> Vec<u8> {
@@ -82,6 +94,12 @@ impl Message {
                 for (k, t) in entries {
                     w.u32(*k);
                     w.tensor(t);
+                }
+            }
+            Message::CompressedPush { worker, step, entries } => {
+                wire::compressed_push_header(w, *worker, *step, entries.len() as u32);
+                for (k, c) in entries {
+                    wire::compressed_entry(w, *k, c);
                 }
             }
             Message::PushAck { clock } => {
@@ -146,6 +164,17 @@ impl Message {
                 }
                 Message::Push { worker, step, entries }
             }
+            T_COMPRESSED_PUSH => {
+                let worker = r.u32()?;
+                let step = r.u64()?;
+                let n = r.u32()? as usize;
+                let mut entries = Vec::with_capacity(n.min(1 << 16));
+                for _ in 0..n {
+                    let key = r.u32()?;
+                    entries.push((key, wire::decode_compressed(&mut r)?.to_compressed()));
+                }
+                Message::CompressedPush { worker, step, entries }
+            }
             T_PUSH_ACK => Message::PushAck { clock: r.u64()? },
             T_BARRIER => Message::Barrier { worker: r.u32()?, step: r.u64()? },
             T_BARRIER_RELEASE => Message::BarrierRelease { step: r.u64()? },
@@ -176,6 +205,7 @@ impl Message {
 /// `Message::decode`.
 pub mod wire {
     use super::*;
+    use crate::ps::compress::CompressedRef;
 
     /// `Pull { worker, keys }` in one pass from a borrowed key slice.
     pub fn pull(w: &mut Writer, worker: u32, keys: &[u32]) {
@@ -209,6 +239,138 @@ pub mod wire {
     pub fn entry(w: &mut Writer, key: u32, t: &Tensor) {
         w.u32(key);
         w.tensor(t);
+    }
+
+    /// Header of `CompressedPush { worker, step, entries }`; follow with
+    /// exactly `n` [`compressed_entry`] calls.
+    pub fn compressed_push_header(w: &mut Writer, worker: u32, step: u64, n: u32) {
+        w.u8(T_COMPRESSED_PUSH);
+        w.u32(worker);
+        w.u64(step);
+        w.u32(n);
+    }
+
+    /// One `(key, compressed)` entry of a `CompressedPush` body, encoded
+    /// from a borrowed [`Compressed`]. Layout after the `u32 key` and
+    /// `u8 codec` tag:
+    /// * sparse (codec 1): `u32 numel, u32 k, k × u32 idx, k × f32 val`
+    /// * quant8 (codec 2): `u32 numel, u32 qlen, f32 scale, qlen × i8`
+    ///
+    /// The byte count after the codec tag is exactly
+    /// [`Compressed::wire_bytes`] — the advisor's traffic accounting is
+    /// the wire format, not an estimate.
+    pub fn compressed_entry(w: &mut Writer, key: u32, c: &Compressed) {
+        w.u32(key);
+        match c {
+            Compressed::Sparse { numel, idx, val } => {
+                w.u8(C_SPARSE);
+                w.u32(*numel as u32);
+                w.u32(idx.len() as u32);
+                // Bulk LE copies (same layout as per-element u32/f32).
+                w.u32_raw(idx);
+                w.f32_raw(val);
+            }
+            Compressed::Quant8 { numel, scale, q } => {
+                w.u8(C_QUANT8);
+                w.u32(*numel as u32);
+                w.u32(q.len() as u32);
+                w.f32(*scale);
+                // SAFETY: i8 and u8 have identical size/alignment and
+                // every bit pattern is valid — one bulk append.
+                let bytes = unsafe {
+                    std::slice::from_raw_parts(q.as_ptr().cast::<u8>(), q.len())
+                };
+                w.raw(bytes);
+            }
+        }
+    }
+
+    /// True when `frame` is a `CompressedPush` body — the serve loop
+    /// routes such frames into [`CompressedPushBody`] instead of
+    /// `Message::decode`.
+    pub fn is_compressed_push(frame: &[u8]) -> bool {
+        frame.first() == Some(&T_COMPRESSED_PUSH)
+    }
+
+    /// Streaming `CompressedPush` decoder: yields `(key, CompressedRef)`
+    /// entries borrowed straight from the received frame. No owned
+    /// `Tensor` (or even `Vec`) is materialized per entry — the server
+    /// scatters each view directly into its store.
+    pub struct CompressedPushBody<'a> {
+        pub worker: u32,
+        pub step: u64,
+        remaining: usize,
+        r: Reader<'a>,
+    }
+
+    impl<'a> CompressedPushBody<'a> {
+        pub fn decode(frame: &'a [u8]) -> Result<Self, String> {
+            let mut r = Reader::new(frame);
+            let tag = r.u8()?;
+            if tag != T_COMPRESSED_PUSH {
+                return Err(format!("not a CompressedPush frame (tag {tag})"));
+            }
+            let worker = r.u32()?;
+            let step = r.u64()?;
+            let remaining = r.u32()? as usize;
+            Ok(CompressedPushBody { worker, step, remaining, r })
+        }
+
+        /// Entries not yet yielded.
+        pub fn remaining(&self) -> usize {
+            self.remaining
+        }
+
+        /// Next `(key, view)` entry; `None` once every entry (and the
+        /// whole frame) is consumed. Trailing bytes after the last entry
+        /// are an error, matching `Message::decode` strictness.
+        pub fn next_entry(&mut self) -> Option<Result<(u32, CompressedRef<'a>), String>> {
+            if self.remaining == 0 {
+                if self.r.remaining() != 0 {
+                    return Some(Err(format!(
+                        "{} trailing bytes after CompressedPush",
+                        self.r.remaining()
+                    )));
+                }
+                return None;
+            }
+            self.remaining -= 1;
+            Some(self.entry())
+        }
+
+        fn entry(&mut self) -> Result<(u32, CompressedRef<'a>), String> {
+            let key = self.r.u32()?;
+            let c = decode_compressed(&mut self.r)?;
+            Ok((key, c))
+        }
+    }
+
+    /// Decode one codec-tagged compressed payload as a borrowed view.
+    pub(super) fn decode_compressed<'a>(r: &mut Reader<'a>) -> Result<CompressedRef<'a>, String> {
+        let codec = r.u8()?;
+        match codec {
+            C_SPARSE => {
+                let numel = r.u32()? as usize;
+                let k = r.u32()? as usize;
+                if k > numel {
+                    return Err(format!("sparse k {k} exceeds numel {numel}"));
+                }
+                let idx = r.raw(k * 4)?;
+                let val = r.raw(k * 4)?;
+                Ok(CompressedRef::Sparse { numel, idx, val })
+            }
+            C_QUANT8 => {
+                let numel = r.u32()? as usize;
+                let qlen = r.u32()? as usize;
+                if qlen != numel {
+                    return Err(format!("quant8 payload {qlen} != numel {numel}"));
+                }
+                let scale = r.f32()?;
+                let q = r.raw(qlen)?;
+                Ok(CompressedRef::Quant8 { numel, scale, q })
+            }
+            other => Err(format!("unknown compression codec {other}")),
+        }
     }
 }
 
@@ -284,6 +446,113 @@ mod tests {
         assert_eq!(buf, msg.encode());
         // And the streamed bytes decode to the owned message.
         assert_eq!(Message::decode(&buf).unwrap(), msg);
+    }
+
+    fn sample_compressed() -> (Compressed, Compressed) {
+        (
+            Compressed::Sparse { numel: 6, idx: vec![1, 4], val: vec![2.5, -1.0] },
+            Compressed::Quant8 { numel: 3, scale: 0.5, q: vec![-7, 0, 127] },
+        )
+    }
+
+    #[test]
+    fn compressed_push_roundtrip() {
+        let (c1, c2) = sample_compressed();
+        roundtrip(Message::CompressedPush {
+            worker: 4,
+            step: 9,
+            entries: vec![(0, c1), (3, c2)],
+        });
+        roundtrip(Message::CompressedPush { worker: 0, step: 0, entries: vec![] });
+    }
+
+    #[test]
+    fn compressed_wire_helpers_match_message_encoding() {
+        let (c1, c2) = sample_compressed();
+        let msg = Message::CompressedPush {
+            worker: 2,
+            step: 11,
+            entries: vec![(5, c1.clone()), (7, c2.clone())],
+        };
+        let mut w = Writer::new();
+        wire::compressed_push_header(&mut w, 2, 11, 2);
+        wire::compressed_entry(&mut w, 5, &c1);
+        wire::compressed_entry(&mut w, 7, &c2);
+        let buf = w.finish();
+        assert_eq!(buf, msg.encode());
+        assert_eq!(Message::decode(&buf).unwrap(), msg);
+    }
+
+    #[test]
+    fn compressed_entry_bytes_match_wire_accounting() {
+        // Frame body = 17-byte header + per entry (5 + wire_bytes): the
+        // advisor's S_p accounting IS the byte count on the wire.
+        let (c1, c2) = sample_compressed();
+        for c in [&c1, &c2] {
+            let mut w = Writer::new();
+            wire::compressed_entry(&mut w, 9, c);
+            assert_eq!(w.len(), 4 + 1 + c.wire_bytes());
+        }
+        let msg = Message::CompressedPush {
+            worker: 1,
+            step: 2,
+            entries: vec![(0, c1.clone()), (1, c2.clone())],
+        };
+        assert_eq!(
+            msg.encode().len(),
+            17 + (5 + c1.wire_bytes()) + (5 + c2.wire_bytes())
+        );
+    }
+
+    #[test]
+    fn compressed_push_stream_decode_matches_owned() {
+        let (c1, c2) = sample_compressed();
+        let msg = Message::CompressedPush {
+            worker: 4,
+            step: 9,
+            entries: vec![(0, c1.clone()), (3, c2.clone())],
+        };
+        let buf = msg.encode();
+        assert!(wire::is_compressed_push(&buf));
+        assert!(!wire::is_compressed_push(&Message::Stats.encode()));
+
+        let mut body = wire::CompressedPushBody::decode(&buf).unwrap();
+        assert_eq!((body.worker, body.step, body.remaining()), (4, 9, 2));
+        let mut got = Vec::new();
+        while let Some(e) = body.next_entry() {
+            let (k, view) = e.unwrap();
+            got.push((k, view.to_compressed()));
+        }
+        assert_eq!(got, vec![(0, c1), (3, c2)]);
+    }
+
+    #[test]
+    fn compressed_push_stream_decode_rejects_malformed() {
+        let (c1, _) = sample_compressed();
+        let msg = Message::CompressedPush { worker: 0, step: 0, entries: vec![(0, c1)] };
+        let mut buf = msg.encode();
+        // Trailing garbage after the last entry.
+        buf.push(0);
+        let mut body = wire::CompressedPushBody::decode(&buf).unwrap();
+        assert!(body.next_entry().unwrap().is_ok());
+        assert!(body.next_entry().unwrap().is_err());
+        // Not a compressed-push frame at all.
+        assert!(wire::CompressedPushBody::decode(&Message::Stats.encode()).is_err());
+        // Truncated header.
+        assert!(wire::CompressedPushBody::decode(&msg.encode()[..10]).is_err());
+        // Truncated entry: drop the last byte of a valid frame.
+        let whole = msg.encode();
+        let mut body = wire::CompressedPushBody::decode(&whole[..whole.len() - 1]).unwrap();
+        assert!(body.next_entry().unwrap().is_err());
+        // Sparse k > numel rejected by the owned decoder too.
+        let mut w = Writer::new();
+        wire::compressed_push_header(&mut w, 0, 0, 1);
+        w.u32(0); // key
+        w.u8(1); // C_SPARSE
+        w.u32(2); // numel
+        w.u32(3); // k > numel
+        let bad = w.finish();
+        assert!(Message::decode(&bad).is_err());
     }
 
     #[test]

@@ -26,6 +26,17 @@ pub trait Transport: Send {
     /// buffer already holding the length prefix), so hot-path senders
     /// can stream borrowed tensors without building an owned `Message`.
     fn send_with(&mut self, encode: &mut dyn FnMut(&mut Writer)) -> Result<(), String>;
+
+    /// Receive one frame and hand its raw body to `decode` — the
+    /// zero-copy receive path, symmetric with
+    /// [`send_with`](Self::send_with). The closure borrows the
+    /// transport's receive buffer, so streaming decoders (e.g.
+    /// `net::message::wire::CompressedPushBody`) can apply entries
+    /// without building an owned [`Message`].
+    fn recv_with(
+        &mut self,
+        decode: &mut dyn FnMut(&[u8]) -> Result<(), String>,
+    ) -> Result<(), String>;
 }
 
 /// Hard cap on frame size (guards against corrupt length prefixes).
@@ -81,24 +92,12 @@ impl Transport for TcpTransport {
     }
 
     fn recv(&mut self) -> Result<Message, String> {
-        let mut hdr = [0u8; 4];
-        self.stream
-            .read_exact(&mut hdr)
-            .map_err(|e| format!("recv header: {e}"))?;
-        let len = u32::from_le_bytes(hdr);
-        if len > MAX_FRAME {
-            return Err(format!("frame length {len} exceeds cap"));
-        }
-        self.rbuf.clear();
-        self.rbuf.resize(len as usize, 0);
-        self.stream
-            .read_exact(&mut self.rbuf)
-            .map_err(|e| format!("recv body: {e}"))?;
-        let msg = Message::decode(&self.rbuf);
-        if buf_oversized(self.rbuf.capacity(), len as usize) {
-            self.rbuf.shrink_to(BUF_RETAIN_CAP.max(len as usize));
-        }
-        msg
+        let mut msg = None;
+        self.recv_with(&mut |frame| {
+            msg = Some(Message::decode(frame)?);
+            Ok(())
+        })?;
+        msg.ok_or_else(|| "recv_with yielded no frame".to_string())
     }
 
     fn send_with(&mut self, encode: &mut dyn FnMut(&mut Writer)) -> Result<(), String> {
@@ -122,6 +121,30 @@ impl Transport for TcpTransport {
             self.wbuf.shrink_to(BUF_RETAIN_CAP.max(frame_len));
         }
         sent
+    }
+
+    fn recv_with(
+        &mut self,
+        decode: &mut dyn FnMut(&[u8]) -> Result<(), String>,
+    ) -> Result<(), String> {
+        let mut hdr = [0u8; 4];
+        self.stream
+            .read_exact(&mut hdr)
+            .map_err(|e| format!("recv header: {e}"))?;
+        let len = u32::from_le_bytes(hdr);
+        if len > MAX_FRAME {
+            return Err(format!("frame length {len} exceeds cap"));
+        }
+        self.rbuf.clear();
+        self.rbuf.resize(len as usize, 0);
+        self.stream
+            .read_exact(&mut self.rbuf)
+            .map_err(|e| format!("recv body: {e}"))?;
+        let out = decode(&self.rbuf);
+        if buf_oversized(self.rbuf.capacity(), len as usize) {
+            self.rbuf.shrink_to(BUF_RETAIN_CAP.max(len as usize));
+        }
+        out
     }
 }
 
@@ -178,6 +201,17 @@ impl Transport for InProcTransport {
         self.tx
             .send(w.finish())
             .map_err(|_| "peer disconnected".to_string())
+    }
+
+    fn recv_with(
+        &mut self,
+        decode: &mut dyn FnMut(&[u8]) -> Result<(), String>,
+    ) -> Result<(), String> {
+        let frame = self
+            .rx
+            .recv()
+            .map_err(|_| "peer disconnected".to_string())?;
+        decode(&frame)
     }
 }
 
@@ -261,6 +295,50 @@ mod tests {
         let (m1, m2) = server.join().unwrap();
         assert_eq!(m1, Message::PullReply { clock: 5, entries: vec![(2, t)] });
         assert_eq!(m2, Message::Stats);
+    }
+
+    #[test]
+    fn recv_with_borrows_raw_frame() {
+        // In-proc: the closure sees exactly the encoded body bytes.
+        let (mut a, mut b) = InProcTransport::pair();
+        let msg = Message::PushAck { clock: 12 };
+        a.send(&msg).unwrap();
+        let mut seen = Vec::new();
+        b.recv_with(&mut |frame| {
+            seen = frame.to_vec();
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(seen, msg.encode());
+
+        // TCP: recv_with and recv interleave on one persistent buffer.
+        let listener = listen("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut t = TcpTransport::new(stream).unwrap();
+            let mut first = Vec::new();
+            t.recv_with(&mut |frame| {
+                first = frame.to_vec();
+                Ok(())
+            })
+            .unwrap();
+            let second = t.recv().unwrap();
+            (first, second)
+        });
+        let mut c = connect(addr).unwrap();
+        c.send(&Message::Barrier { worker: 1, step: 2 }).unwrap();
+        c.send(&Message::Stats).unwrap();
+        let (first, second) = server.join().unwrap();
+        assert_eq!(first, Message::Barrier { worker: 1, step: 2 }.encode());
+        assert_eq!(second, Message::Stats);
+
+        // A decode error propagates out of recv_with.
+        let (mut a, mut b) = InProcTransport::pair();
+        a.send(&Message::Stats).unwrap();
+        assert!(b
+            .recv_with(&mut |_| Err("decode failed".to_string()))
+            .is_err());
     }
 
     #[test]

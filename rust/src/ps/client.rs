@@ -1,7 +1,13 @@
 //! Worker-side parameter-server client: fans pull/push/barrier out to
 //! every server per the [`Router`] placement and reassembles full
-//! parameter vectors in manifest order.
+//! parameter vectors in manifest order. Pushes go through a pluggable
+//! gradient codec ([`CodecKind`]): dense `Push` frames, or
+//! `CompressedPush` frames carrying top-k sparse (with per-key
+//! error-feedback residuals kept client-side) or int8-quantized bodies.
 
+use std::collections::BTreeMap;
+
+use super::compress::{quantize8, CodecKind, Compressed, TopK};
 use super::router::Router;
 use crate::net::message::{wire, Message};
 use crate::net::transport::Transport;
@@ -12,16 +18,61 @@ pub struct PsClient {
     worker_id: u32,
     transports: Vec<Box<dyn Transport>>,
     router: Router,
+    codec: CodecKind,
+    /// Per-key error-feedback state (TopK codec only).
+    topk: BTreeMap<u32, TopK>,
+    /// Reusable per-server staging of compressed entries.
+    scratch: Vec<(u32, Compressed)>,
+    /// Cumulative encoded push-body bytes actually sent.
+    push_wire_bytes: u64,
 }
 
 impl PsClient {
     pub fn new(worker_id: u32, transports: Vec<Box<dyn Transport>>, router: Router) -> Self {
+        Self::with_codec(worker_id, transports, router, CodecKind::None)
+    }
+
+    /// Build a client with an explicit gradient codec.
+    pub fn with_codec(
+        worker_id: u32,
+        transports: Vec<Box<dyn Transport>>,
+        router: Router,
+        codec: CodecKind,
+    ) -> Self {
         assert_eq!(
             transports.len(),
             router.n_servers(),
             "one transport per server"
         );
-        PsClient { worker_id, transports, router }
+        PsClient {
+            worker_id,
+            transports,
+            router,
+            codec,
+            topk: BTreeMap::new(),
+            scratch: Vec::new(),
+            push_wire_bytes: 0,
+        }
+    }
+
+    /// Switch codecs; any accumulated top-k residuals are dropped (they
+    /// belong to the previous codec's error-feedback loop).
+    pub fn set_codec(&mut self, codec: CodecKind) {
+        if codec != self.codec {
+            self.topk.clear();
+        }
+        self.codec = codec;
+    }
+
+    pub fn codec(&self) -> CodecKind {
+        self.codec
+    }
+
+    /// Total encoded push-body bytes sent so far — the wire-traffic
+    /// measurement Lemma 3.2's compression-aware form models, and the
+    /// bench's bytes-on-wire column.
+    pub fn push_wire_bytes(&self) -> u64 {
+        self.push_wire_bytes
     }
 
     pub fn router(&self) -> &Router {
@@ -84,25 +135,63 @@ impl PsClient {
 
     /// Push per-key gradients (indexed by key). Fig. 1 step 7.
     ///
-    /// Gradients are encoded by reference straight into each transport's
-    /// frame buffer — no per-server `(key, tensor.clone())` staging.
+    /// Dense (`CodecKind::None`) gradients are encoded by reference
+    /// straight into each transport's frame buffer — no per-server
+    /// `(key, tensor.clone())` staging. Compressed codecs stage the
+    /// (small) compressed entries in a reusable scratch, then stream a
+    /// `CompressedPush` body from borrowed entries the same way. Either
+    /// way the encoded body bytes are added to
+    /// [`push_wire_bytes`](Self::push_wire_bytes).
     pub fn push(&mut self, step: u64, grads: &[Tensor]) -> Result<(), String> {
         assert_eq!(grads.len(), self.router.n_keys());
-        let worker = self.worker_id;
-        let router = &self.router;
-        for (s, t) in self.transports.iter_mut().enumerate() {
+        let PsClient {
+            worker_id,
+            transports,
+            router,
+            codec,
+            topk,
+            scratch,
+            push_wire_bytes,
+        } = self;
+        let worker = *worker_id;
+        let mut sent = 0u64;
+        for (s, t) in transports.iter_mut().enumerate() {
             let keys = router.keys_of(s);
             if keys.is_empty() {
                 continue;
             }
-            t.send_with(&mut |w| {
-                wire::push_header(w, worker, step, keys.len() as u32);
-                for &k in keys {
-                    wire::entry(w, k, &grads[k as usize]);
+            match *codec {
+                CodecKind::None => {
+                    t.send_with(&mut |w| {
+                        let start = w.len();
+                        wire::push_header(w, worker, step, keys.len() as u32);
+                        for &k in keys {
+                            wire::entry(w, k, &grads[k as usize]);
+                        }
+                        sent += (w.len() - start) as u64;
+                    })?;
                 }
-            })?;
+                CodecKind::TopK { fraction } => {
+                    scratch.clear();
+                    for &k in keys {
+                        let g = &grads[k as usize];
+                        let state =
+                            topk.entry(k).or_insert_with(|| TopK::new(fraction, g.len()));
+                        scratch.push((k, state.compress(g)));
+                    }
+                    send_compressed(&mut **t, worker, step, scratch, &mut sent)?;
+                }
+                CodecKind::Quant8 => {
+                    scratch.clear();
+                    for &k in keys {
+                        scratch.push((k, quantize8(&grads[k as usize], None)));
+                    }
+                    send_compressed(&mut **t, worker, step, scratch, &mut sent)?;
+                }
+            }
         }
-        for (s, t) in self.transports.iter_mut().enumerate() {
+        *push_wire_bytes += sent;
+        for (s, t) in transports.iter_mut().enumerate() {
             if router.keys_of(s).is_empty() {
                 continue;
             }
@@ -145,6 +234,25 @@ impl PsClient {
         }
         Ok((pulls, pushes, updates))
     }
+}
+
+/// Stream one `CompressedPush` body from borrowed staged entries into a
+/// transport's frame buffer, accumulating the encoded body bytes.
+fn send_compressed(
+    t: &mut dyn Transport,
+    worker: u32,
+    step: u64,
+    entries: &[(u32, Compressed)],
+    sent: &mut u64,
+) -> Result<(), String> {
+    t.send_with(&mut |w| {
+        let start = w.len();
+        wire::compressed_push_header(w, worker, step, entries.len() as u32);
+        for (k, c) in entries {
+            wire::compressed_entry(w, *k, c);
+        }
+        *sent += (w.len() - start) as u64;
+    })
 }
 
 #[cfg(test)]
@@ -213,6 +321,135 @@ mod tests {
         assert_eq!(buf[0].data()[0], 0.75); // 1 - 0.25
         assert_eq!(buf[1].data()[0], 1.5); // 2 - 0.5
         assert_eq!(buf[2].data()[0], 2.0); // 3 - 1
+        drop(client);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    fn test_grads() -> Vec<Tensor> {
+        vec![
+            Tensor::from_vec(&[100], (0..100).map(|i| (i as f32 * 0.3).sin()).collect()),
+            Tensor::from_vec(&[10], (0..10).map(|i| i as f32 - 5.0).collect()),
+            Tensor::from_vec(&[50], (0..50).map(|i| (i as f32 * 0.7).cos()).collect()),
+        ]
+    }
+
+    #[test]
+    fn topk_full_fraction_matches_dense_push() {
+        // fraction = 1.0 keeps every entry (zero residual), so the
+        // compressed path must land bit-identical parameters.
+        let (mut dense, hd) = cluster(Optimizer::Sgd { lr: 1.0 }, UpdateMode::Async);
+        let (mut topk, ht) = cluster(Optimizer::Sgd { lr: 1.0 }, UpdateMode::Async);
+        topk.set_codec(CodecKind::TopK { fraction: 1.0 });
+        assert_eq!(topk.codec(), CodecKind::TopK { fraction: 1.0 });
+        let grads = test_grads();
+        dense.push(0, &grads).unwrap();
+        topk.push(0, &grads).unwrap();
+        let a = dense.pull_all().unwrap();
+        let b = topk.pull_all().unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.data(), y.data());
+        }
+        // Full-fraction top-k still ships (idx, val) pairs: 2x the dense
+        // payload — but the accounting must match the bytes sent.
+        assert!(topk.push_wire_bytes() > 0);
+        drop(dense);
+        drop(topk);
+        for h in hd.into_iter().chain(ht) {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn quant8_exact_for_representable_grads() {
+        // All-equal grads of 127.0 quantize losslessly (scale = 1.0),
+        // so quant8 must match the dense update exactly.
+        let (mut client, handles) = cluster(Optimizer::Sgd { lr: 1.0 }, UpdateMode::Async);
+        client.set_codec(CodecKind::Quant8);
+        let grads = vec![
+            Tensor::from_vec(&[100], vec![127.0; 100]),
+            Tensor::from_vec(&[10], vec![127.0; 10]),
+            Tensor::from_vec(&[50], vec![127.0; 50]),
+        ];
+        client.push(0, &grads).unwrap();
+        let params = client.pull_all().unwrap();
+        assert_eq!(params[0].data()[0], 1.0 - 127.0);
+        assert_eq!(params[1].data()[0], 2.0 - 127.0);
+        assert_eq!(params[2].data()[0], 3.0 - 127.0);
+        drop(client);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn push_wire_bytes_match_compressed_accounting() {
+        // The client's byte counter must equal the exact frame-body
+        // arithmetic: per server 17-byte header + per key (5 +
+        // CodecKind::wire_bytes_for(numel)).
+        let (mut client, handles) = cluster(Optimizer::Sgd { lr: 1.0 }, UpdateMode::Async);
+        let sizes = [100usize, 10, 50];
+        let key_sets: Vec<Vec<u32>> = (0..2)
+            .map(|s| client.router().keys_of(s).to_vec())
+            .collect();
+        let expected = |kind: CodecKind| -> u64 {
+            key_sets
+                .iter()
+                .filter(|keys| !keys.is_empty())
+                .map(|keys| {
+                    17 + keys
+                        .iter()
+                        .map(|&k| 5 + kind.wire_bytes_for(sizes[k as usize]) as u64)
+                        .sum::<u64>()
+                })
+                .sum()
+        };
+        let grads = test_grads();
+
+        let topk = CodecKind::TopK { fraction: 0.25 };
+        client.set_codec(topk);
+        client.push(0, &grads).unwrap();
+        assert_eq!(client.push_wire_bytes(), expected(topk));
+
+        client.set_codec(CodecKind::Quant8);
+        client.push(1, &grads).unwrap();
+        assert_eq!(
+            client.push_wire_bytes(),
+            expected(topk) + expected(CodecKind::Quant8)
+        );
+        drop(client);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn topk_error_feedback_recovers_dropped_mass_through_cluster() {
+        // Pushing the same gradient repeatedly with a small fraction
+        // must, thanks to error feedback, eventually apply (almost) the
+        // whole accumulated gradient — through the real protocol.
+        let (mut client, handles) = cluster(Optimizer::Sgd { lr: 1.0 }, UpdateMode::Async);
+        client.set_codec(CodecKind::TopK { fraction: 0.1 });
+        let grads = vec![
+            Tensor::from_vec(&[100], vec![0.01; 100]),
+            Tensor::from_vec(&[10], vec![0.02; 10]),
+            Tensor::from_vec(&[50], vec![0.04; 50]),
+        ];
+        let steps = 40;
+        for s in 0..steps {
+            client.push(s as u64, &grads).unwrap();
+        }
+        let params = client.pull_all().unwrap();
+        // Each coordinate of key 0 started at 1.0 and should have moved
+        // by ~ steps * 0.01 (all-equal grads: top-k rotates coordinates,
+        // residuals carry the rest; at most the last few sends are still
+        // in flight inside the residual).
+        let moved = 1.0 - params[0].data()[0];
+        assert!(
+            (moved - steps as f32 * 0.01).abs() < 0.15,
+            "error feedback lost mass: moved {moved}"
+        );
         drop(client);
         for h in handles {
             h.join().unwrap();

@@ -13,6 +13,78 @@
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
+/// Worker-side gradient-codec selection, plumbed from the CLI through
+/// `worker::pipeline::PipelineConfig` down to `ps::client::PsClient`.
+/// `TopK` keeps per-key error-feedback residuals inside the client;
+/// `Quant8` is stateless; `None` ships dense f32 `Push` frames.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CodecKind {
+    None,
+    /// Magnitude top-k sparsification, `fraction` of entries kept.
+    TopK { fraction: f64 },
+    /// Linear int8 quantization with per-tensor scale.
+    Quant8,
+}
+
+impl CodecKind {
+    /// Parse a CLI spec: `none`, `quant8`, `topk` (1% default) or
+    /// `topk:<fraction>`.
+    pub fn parse(s: &str) -> Result<CodecKind, String> {
+        match s {
+            "none" | "dense" => Ok(CodecKind::None),
+            "quant8" => Ok(CodecKind::Quant8),
+            "topk" => Ok(CodecKind::TopK { fraction: 0.01 }),
+            other => {
+                let Some(f) = other.strip_prefix("topk:") else {
+                    return Err(format!(
+                        "unknown codec {other:?} (none|topk[:fraction]|quant8)"
+                    ));
+                };
+                let fraction: f64 =
+                    f.parse().map_err(|e| format!("bad top-k fraction {f:?}: {e}"))?;
+                if !(fraction > 0.0 && fraction <= 1.0) {
+                    return Err(format!("top-k fraction {fraction} outside (0, 1]"));
+                }
+                Ok(CodecKind::TopK { fraction })
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CodecKind::None => "none",
+            CodecKind::TopK { .. } => "topk",
+            CodecKind::Quant8 => "quant8",
+        }
+    }
+
+    /// Exact wire payload bytes this codec produces for one dense tensor
+    /// of `numel` f32 elements — matches [`Compressed::wire_bytes`]
+    /// (`None` counts the raw f32 payload).
+    pub fn wire_bytes_for(&self, numel: usize) -> usize {
+        match *self {
+            CodecKind::None => 4 * numel,
+            CodecKind::TopK { fraction } => {
+                let k = ((numel as f64 * fraction).ceil() as usize).clamp(1, numel.max(1));
+                8 + 8 * k
+            }
+            CodecKind::Quant8 => 12 + numel,
+        }
+    }
+
+    /// Effective push bytes for `dense_bytes` of f32 parameters — the
+    /// push-direction S_p replacement `advisor::lemmas` uses to make
+    /// Lemma 3.2 compression-aware.
+    pub fn effective_push_bytes(&self, dense_bytes: f64) -> f64 {
+        let numel = dense_bytes / 4.0;
+        match *self {
+            CodecKind::None => dense_bytes,
+            CodecKind::TopK { fraction } => 8.0 + 8.0 * (numel * fraction).ceil().max(1.0),
+            CodecKind::Quant8 => 12.0 + numel,
+        }
+    }
+}
+
 /// A compressed gradient: (indices, values) sparse or quantized dense.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Compressed {
@@ -44,6 +116,179 @@ impl Compressed {
             Compressed::Quant8 { scale, q, .. } => {
                 Tensor::from_vec(shape, q.iter().map(|x| *x as f32 * scale).collect())
             }
+        }
+    }
+
+    /// Validate against a target of `expect` dense elements: numel and
+    /// payload lengths, and (for sparse) every index in range. All
+    /// checks run before any mutation, so the scatter below is
+    /// all-or-nothing — a malformed entry can never leave a
+    /// half-applied gradient behind the error.
+    pub fn validate(&self, expect: usize) -> Result<(), String> {
+        match self {
+            Compressed::Sparse { numel, idx, val } => {
+                if *numel != expect {
+                    return Err(format!("sparse numel {numel} != target len {expect}"));
+                }
+                if idx.len() != val.len() {
+                    return Err(format!(
+                        "sparse idx/val length mismatch: {} vs {}",
+                        idx.len(),
+                        val.len()
+                    ));
+                }
+                for &i in idx {
+                    if i as usize >= *numel {
+                        return Err(format!("sparse index {i} out of range {numel}"));
+                    }
+                }
+                Ok(())
+            }
+            Compressed::Quant8 { numel, q, .. } => {
+                if *numel != expect || q.len() != *numel {
+                    return Err(format!(
+                        "quant8 numel {numel} / payload {} != target len {expect}",
+                        q.len()
+                    ));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Scatter `alpha * decompress(self)` into `out` without building
+    /// the dense tensor (server-side apply primitive; the wire-side twin
+    /// is [`CompressedRef::scatter_axpy`]). Validates first: on `Err`,
+    /// `out` is untouched.
+    pub fn scatter_axpy(&self, alpha: f32, out: &mut [f32]) -> Result<(), String> {
+        self.validate(out.len())?;
+        match self {
+            Compressed::Sparse { idx, val, .. } => {
+                for (&i, &v) in idx.iter().zip(val) {
+                    out[i as usize] += alpha * v;
+                }
+            }
+            Compressed::Quant8 { scale, q, .. } => {
+                for (o, &b) in out.iter_mut().zip(q) {
+                    *o += alpha * *scale * b as f32;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Borrowed view of one compressed gradient as it sits in a received
+/// wire frame — the streaming-decode twin of [`Compressed`]. Sparse
+/// index/value payloads stay raw little-endian bytes (wire frames are
+/// unaligned), decoded per element inside the scatter; the quant8
+/// payload keeps the raw i8 wire bytes. Nothing is allocated: the view
+/// borrows the frame, so a server can apply a `CompressedPush` entry
+/// without ever materializing an owned `Tensor` (or even a `Vec`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CompressedRef<'a> {
+    /// `idx`/`val` are `k × u32` / `k × f32` little-endian wire bytes.
+    Sparse { numel: usize, idx: &'a [u8], val: &'a [u8] },
+    /// `q` holds `numel` i8 values as raw bytes.
+    Quant8 { numel: usize, scale: f32, q: &'a [u8] },
+}
+
+impl<'a> CompressedRef<'a> {
+    /// Dense element count of the tensor this gradient targets.
+    pub fn numel(&self) -> usize {
+        match *self {
+            CompressedRef::Sparse { numel, .. } | CompressedRef::Quant8 { numel, .. } => numel,
+        }
+    }
+
+    /// Wire size in bytes — same accounting as [`Compressed::wire_bytes`].
+    pub fn wire_bytes(&self) -> usize {
+        match *self {
+            CompressedRef::Sparse { idx, val, .. } => 8 + idx.len() + val.len(),
+            CompressedRef::Quant8 { q, .. } => 12 + q.len(),
+        }
+    }
+
+    /// Validate against a target of `expect` dense elements: numel and
+    /// payload lengths, and (for sparse) every index in range. Run
+    /// before mutating any target — the sync fold and store apply rely
+    /// on rejection being all-or-nothing so a malformed push can never
+    /// poison a running sum or half-update a parameter.
+    pub fn validate(&self, expect: usize) -> Result<(), String> {
+        match *self {
+            CompressedRef::Sparse { numel, idx, val } => {
+                if numel != expect {
+                    return Err(format!("sparse numel {numel} != target len {expect}"));
+                }
+                if idx.len() != val.len() {
+                    return Err(format!(
+                        "sparse idx/val byte-length mismatch: {} vs {}",
+                        idx.len(),
+                        val.len()
+                    ));
+                }
+                for ib in idx.chunks_exact(4) {
+                    let i = u32::from_le_bytes(ib.try_into().unwrap()) as usize;
+                    if i >= numel {
+                        return Err(format!("sparse index {i} out of range {numel}"));
+                    }
+                }
+                Ok(())
+            }
+            CompressedRef::Quant8 { numel, q, .. } => {
+                if numel != expect || q.len() != numel {
+                    return Err(format!(
+                        "quant8 numel {numel} / payload {} != target len {expect}",
+                        q.len()
+                    ));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Scatter `alpha * decompress(self)` into `out`, decoding entries
+    /// straight from the borrowed wire bytes. Validates first: on `Err`,
+    /// `out` is untouched.
+    pub fn scatter_axpy(&self, alpha: f32, out: &mut [f32]) -> Result<(), String> {
+        self.validate(out.len())?;
+        match *self {
+            CompressedRef::Sparse { idx, val, .. } => {
+                for (ib, vb) in idx.chunks_exact(4).zip(val.chunks_exact(4)) {
+                    let i = u32::from_le_bytes(ib.try_into().unwrap()) as usize;
+                    let v = f32::from_le_bytes(vb.try_into().unwrap());
+                    out[i] += alpha * v;
+                }
+            }
+            CompressedRef::Quant8 { scale, q, .. } => {
+                for (o, &b) in out.iter_mut().zip(q) {
+                    *o += alpha * scale * (b as i8) as f32;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Materialize an owned [`Compressed`] (cold paths and tests; the
+    /// hot path scatters straight from the view).
+    pub fn to_compressed(&self) -> Compressed {
+        match *self {
+            CompressedRef::Sparse { numel, idx, val } => Compressed::Sparse {
+                numel,
+                idx: idx
+                    .chunks_exact(4)
+                    .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+                val: val
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            },
+            CompressedRef::Quant8 { numel, scale, q } => Compressed::Quant8 {
+                numel,
+                scale,
+                q: q.iter().map(|&b| b as i8).collect(),
+            },
         }
     }
 }
@@ -206,6 +451,137 @@ mod tests {
         let mean = sum / trials as f32;
         assert!((mean - 0.005).abs() < 0.0008, "mean {mean}");
         let _ = g;
+    }
+
+    #[test]
+    fn codec_kind_parse() {
+        assert_eq!(CodecKind::parse("none").unwrap(), CodecKind::None);
+        assert_eq!(CodecKind::parse("dense").unwrap(), CodecKind::None);
+        assert_eq!(CodecKind::parse("quant8").unwrap(), CodecKind::Quant8);
+        assert_eq!(CodecKind::parse("topk").unwrap(), CodecKind::TopK { fraction: 0.01 });
+        assert_eq!(
+            CodecKind::parse("topk:0.25").unwrap(),
+            CodecKind::TopK { fraction: 0.25 }
+        );
+        assert!(CodecKind::parse("topk:0").is_err());
+        assert!(CodecKind::parse("topk:1.5").is_err());
+        assert!(CodecKind::parse("topk:abc").is_err());
+        assert!(CodecKind::parse("zstd").is_err());
+    }
+
+    #[test]
+    fn codec_kind_wire_bytes_match_compression() {
+        let n = 1000;
+        let g = Tensor::from_vec(&[n], (0..n).map(|i| (i as f32 * 0.7).sin()).collect());
+        for fraction in [0.01, 0.1, 0.5, 1.0] {
+            let kind = CodecKind::TopK { fraction };
+            let mut c = TopK::new(fraction, n);
+            assert_eq!(c.compress(&g).wire_bytes(), kind.wire_bytes_for(n));
+        }
+        assert_eq!(
+            quantize8(&g, None).wire_bytes(),
+            CodecKind::Quant8.wire_bytes_for(n)
+        );
+        assert_eq!(CodecKind::None.wire_bytes_for(n), 4 * n);
+        // f64 form agrees with the exact usize form.
+        for kind in [CodecKind::None, CodecKind::TopK { fraction: 0.1 }, CodecKind::Quant8] {
+            assert_eq!(
+                kind.effective_push_bytes((4 * n) as f64) as usize,
+                kind.wire_bytes_for(n)
+            );
+        }
+    }
+
+    #[test]
+    fn scatter_axpy_matches_decompress() {
+        let sparse = Compressed::Sparse { numel: 6, idx: vec![1, 4], val: vec![2.5, -1.0] };
+        let quant = Compressed::Quant8 { numel: 4, scale: 0.5, q: vec![-3, 0, 7, 127] };
+        for c in [sparse, quant] {
+            let n = match &c {
+                Compressed::Sparse { numel, .. } | Compressed::Quant8 { numel, .. } => *numel,
+            };
+            let mut reference: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            let mut scattered = reference.clone();
+            let mut r = Tensor::from_vec(&[n], reference.clone());
+            r.axpy(-0.3, &c.decompress(&[n]));
+            reference.copy_from_slice(r.data());
+            c.scatter_axpy(-0.3, &mut scattered).unwrap();
+            assert_eq!(scattered, reference);
+        }
+    }
+
+    #[test]
+    fn scatter_axpy_rejects_malformed_without_partial_mutation() {
+        // A valid leading entry before the bad index: rejection must be
+        // all-or-nothing, or a byzantine push could poison a sync sum
+        // behind the "discarded" warning.
+        let c = Compressed::Sparse { numel: 4, idx: vec![0, 9], val: vec![1.0, 1.0] };
+        let mut out = [5.0f32; 4];
+        assert!(c.scatter_axpy(1.0, &mut out).is_err()); // index out of range
+        assert_eq!(out, [5.0; 4], "partial mutation leaked past the error");
+        assert!(c.scatter_axpy(1.0, &mut [0.0; 3]).is_err()); // numel mismatch
+        let q = Compressed::Quant8 { numel: 4, scale: 1.0, q: vec![1, 2] };
+        assert!(q.scatter_axpy(1.0, &mut [0.0; 4]).is_err()); // short payload
+        // Mismatched idx/val lengths rejected too.
+        let c = Compressed::Sparse { numel: 4, idx: vec![0, 1], val: vec![1.0] };
+        assert!(c.validate(4).is_err());
+    }
+
+    #[test]
+    fn compressed_ref_validate_all_or_nothing() {
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for i in [0u32, 9] {
+            idx.extend_from_slice(&i.to_le_bytes());
+        }
+        for v in [1.0f32, 1.0] {
+            val.extend_from_slice(&v.to_le_bytes());
+        }
+        let view = CompressedRef::Sparse { numel: 4, idx: &idx, val: &val };
+        assert!(view.validate(4).is_err());
+        let mut out = [5.0f32; 4];
+        assert!(view.scatter_axpy(1.0, &mut out).is_err());
+        assert_eq!(out, [5.0; 4], "partial mutation leaked past the error");
+        // Good views pass validation.
+        let ok = CompressedRef::Sparse { numel: 16, idx: &idx, val: &val };
+        assert!(ok.validate(16).is_ok());
+    }
+
+    #[test]
+    fn compressed_ref_scatter_and_roundtrip() {
+        // Build raw wire bytes by hand: idx [1, 4], val [2.5, -1.0].
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for i in [1u32, 4] {
+            idx.extend_from_slice(&i.to_le_bytes());
+        }
+        for v in [2.5f32, -1.0] {
+            val.extend_from_slice(&v.to_le_bytes());
+        }
+        let view = CompressedRef::Sparse { numel: 6, idx: &idx, val: &val };
+        let owned = view.to_compressed();
+        assert_eq!(
+            owned,
+            Compressed::Sparse { numel: 6, idx: vec![1, 4], val: vec![2.5, -1.0] }
+        );
+        assert_eq!(view.wire_bytes(), owned.wire_bytes());
+        assert_eq!(view.numel(), 6);
+        let mut a = [0.0f32; 6];
+        let mut b = [0.0f32; 6];
+        view.scatter_axpy(2.0, &mut a).unwrap();
+        owned.scatter_axpy(2.0, &mut b).unwrap();
+        assert_eq!(a, b);
+
+        let qbytes: Vec<u8> = [3i8, -7, 0].iter().map(|&x| x as u8).collect();
+        let qview = CompressedRef::Quant8 { numel: 3, scale: 0.25, q: &qbytes };
+        let qowned = qview.to_compressed();
+        assert_eq!(qowned, Compressed::Quant8 { numel: 3, scale: 0.25, q: vec![3, -7, 0] });
+        assert_eq!(qview.wire_bytes(), qowned.wire_bytes());
+        let mut a = [0.0f32; 3];
+        let mut b = [0.0f32; 3];
+        qview.scatter_axpy(-1.0, &mut a).unwrap();
+        qowned.scatter_axpy(-1.0, &mut b).unwrap();
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -22,6 +22,7 @@
 //! | `Pull`           | `u32 worker, u32 n, n × u32 key`                 |
 //! | `PullReply`      | `u64 clock, u32 n, n × (u32 key, tensor)`        |
 //! | `Push`           | `u32 worker, u64 step, u32 n, n × (u32 key, tensor)` |
+//! | `CompressedPush` | `u32 worker, u64 step, u32 n, n × (u32 key, u8 codec, body)` |
 //! | `PushAck`        | `u64 clock`                                      |
 //! | `Barrier`        | `u32 worker, u64 step`                           |
 //! | `BarrierRelease` | `u64 step`                                       |
@@ -34,6 +35,31 @@
 //! f32 payload is the host's little-endian memory image, so on LE
 //! machines encode/decode of the parameter payload is a single bulk
 //! copy (`net::codec`).
+//!
+//! ## CompressedPush bodies (gradient compression, §1.1.1)
+//!
+//! Each `CompressedPush` entry is tagged with a per-entry codec byte and
+//! carries one of two bodies:
+//!
+//! | codec | tag | body |
+//! |-------|-----|------|
+//! | sparse top-k | 1 | `u32 numel, u32 k, k × u32 idx, k × f32 val` |
+//! | quant8       | 2 | `u32 numel, u32 qlen (= numel), f32 scale, qlen × i8` |
+//!
+//! The byte count after the codec tag is exactly
+//! [`Compressed::wire_bytes`], so the advisor's Lemma 3.2 traffic
+//! accounting (`advisor::lemmas::num_param_servers_with_codec`) models
+//! the literal wire format rather than an estimate.
+//!
+//! **Codec negotiation:** there is none, by design. The worker picks a
+//! [`CodecKind`] per push (plumbed from the CLI through
+//! `worker::pipeline::PipelineConfig` into [`PsClient`]); frames are
+//! self-describing per entry, and servers accept any mix — dense `Push`
+//! and `CompressedPush` may interleave freely on one connection (the
+//! top-k error-feedback residuals live entirely client-side). Pulls
+//! always return dense f32: workers need the full parameters, which is
+//! why Lemma 3.2's compressed form is `S_p + codec(S_p)`, not
+//! `2·codec(S_p)`.
 //!
 //! # Hot-path concurrency and zero-copy design
 //!
@@ -52,12 +78,23 @@
 //!   gradient tensors by reference on the client side the same way.
 //!   TCP transports keep persistent send/receive buffers, so the
 //!   steady-state hot path allocates nothing on the send side.
+//! * **Streaming decode** — `CompressedPush` frames never become owned
+//!   messages: the serve loop routes them by frame tag into
+//!   `net::message::wire::CompressedPushBody`, which yields borrowed
+//!   [`CompressedRef`] views straight off the receive buffer, and the
+//!   store scatter-applies each view in place
+//!   (`StripedStore::apply_compressed`). No dense tensor is allocated
+//!   per entry in either mode; sync mode allocates one dense running sum
+//!   per key per step on the first contribution (the same O(params) the
+//!   dense path pays).
 //! * **Sync aggregation** — in sync mode each arriving push folds into
-//!   a per-key running `(sum, count)`; the barrier's last arriver
-//!   applies `sum / count` with one scale per key. Memory is O(params)
-//!   instead of O(workers · params): orphaned steps below the release
-//!   horizon are evicted, a step whose last barrier waiter times out is
-//!   dropped, and pushes/barriers further than
+//!   a per-key running `(sum, count)`, striped like the store so pushes
+//!   to disjoint stripes don't serialize; one small barrier mutex
+//!   handles only arrival counting and the once-per-step release, where
+//!   the last arriver applies `sum / count` with one scale per key.
+//!   Memory is O(params) instead of O(workers · params): orphaned steps
+//!   below the release horizon are evicted, a step whose last barrier
+//!   waiter times out is dropped, and pushes/barriers further than
 //!   `server::MAX_PENDING_STEPS` ahead are discarded/rejected, bounding
 //!   barrier state against dead or runaway workers.
 
@@ -68,7 +105,7 @@ pub mod server;
 pub mod shard;
 
 pub use client::PsClient;
-pub use compress::{quantize8, Compressed, TopK};
+pub use compress::{quantize8, CodecKind, Compressed, CompressedRef, TopK};
 pub use router::Router;
 pub use server::{serve, PsServerHandle, PsShared, UpdateMode};
 pub use shard::{Optimizer, ShardStore, StripedStore, DEFAULT_STRIPES};

@@ -117,6 +117,73 @@ mod tests {
     }
 
     #[test]
+    fn lpt_bound_on_netdef_conv_sizes() {
+        use crate::advisor::netdefs::{self, Layer};
+        // VGG16's conv weight tensors: skewed ~1300:1 (3·3·3·64 f32 vs
+        // 3·3·512·512), but with no single dominant item, so the pure
+        // LPT makespan bound (max ≤ 4/3 · OPT, OPT ≥ max(mean, largest))
+        // collapses to max load ≤ 4/3 · mean for small server counts.
+        let net = netdefs::vgg16();
+        let geom = net.geometry();
+        let sizes: Vec<usize> = net
+            .layers
+            .iter()
+            .enumerate()
+            .filter_map(|(i, l)| match *l {
+                // f·f·d_in·k weights, f32; geom[i] is the geometry
+                // entering layer i, so .1 is the input depth.
+                Layer::Conv { f, k, .. } => Some(f * f * geom[i].1 * k * 4),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(sizes.len(), 13, "vgg16 has 13 conv layers");
+        let total: usize = sizes.iter().sum();
+        let max_item = *sizes.iter().max().unwrap() as f64;
+        for n_servers in [2usize, 3, 4] {
+            let r = Router::new(&sizes, n_servers);
+            let mean = total as f64 / n_servers as f64;
+            let max_load = *r.load().iter().max().unwrap() as f64;
+            // Graham's LPT guarantee.
+            assert!(
+                max_load <= 4.0 / 3.0 * mean.max(max_item) + 1.0,
+                "{n_servers} servers: max {max_load} vs LPT bound"
+            );
+            // No item dominates here (largest < mean), so the plain
+            // 4/3 · mean balance bound must hold too.
+            assert!(max_item < mean, "test premise broken at {n_servers} servers");
+            assert!(
+                max_load <= 4.0 / 3.0 * mean + 1.0,
+                "{n_servers} servers: max {max_load} > 4/3 mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn keys_of_sorted_and_consistent_with_server_of() {
+        prop::run(40, 0xA11C, |g| {
+            let n_keys = g.usize(1, 64);
+            let n_servers = g.usize(1, 9);
+            let sizes: Vec<usize> = (0..n_keys).map(|_| g.usize(1, 1 << 20)).collect();
+            let r = Router::new(&sizes, n_servers);
+            let mut total_keys = 0;
+            for s in 0..r.n_servers() {
+                let keys = r.keys_of(s);
+                // Ascending and unique, as the client's streaming-push
+                // encoder assumes.
+                assert!(keys.windows(2).all(|w| w[0] < w[1]), "keys_of({s}) not sorted");
+                // Byte accounting agrees with the assignment.
+                let bytes: usize = keys.iter().map(|&k| sizes[k as usize]).sum();
+                assert_eq!(bytes, r.load()[s]);
+                for &k in keys {
+                    assert_eq!(r.server_of(k), s, "keys_of/server_of disagree on {k}");
+                }
+                total_keys += keys.len();
+            }
+            assert_eq!(total_keys, n_keys);
+        });
+    }
+
+    #[test]
     fn prop_routing_invariants() {
         prop::run(60, 0x0707, |g| {
             let n_keys = g.usize(1, 40);

@@ -3,20 +3,25 @@
 //! One handler thread per worker connection; the parameter store is a
 //! [`StripedStore`], so handlers touching disjoint key stripes proceed
 //! in parallel and pulls encode replies straight out of the store with
-//! zero tensor copies. Two update modes (§3.3):
+//! zero tensor copies. `CompressedPush` frames are decoded streaming
+//! (`wire::CompressedPushBody`) and scatter-applied without ever
+//! materializing a dense tensor per entry. Two update modes (§3.3):
 //! * [`UpdateMode::Async`] — gradients apply on arrival (Hogwild-style
 //!   [48]; the paper's assumed policy, hides I/O behind compute).
-//! * [`UpdateMode::Sync`]  — gradients fold into a per-key running sum
-//!   until every worker reaches the barrier, then the mean applies once
-//!   (synchronous SGD with O(params) barrier memory, not O(workers·params)).
+//! * [`UpdateMode::Sync`]  — gradients fold into per-key running sums,
+//!   striped like the store so pushes to disjoint stripes don't
+//!   serialize; the barrier's last arriver applies the means once
+//!   (synchronous SGD with O(params) barrier memory, not
+//!   O(workers·params)).
 
 use std::collections::btree_map::Entry as BtreeEntry;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::{self, JoinHandle};
 
+use super::compress::CompressedRef;
 use super::shard::{ShardStore, StripedStore, DEFAULT_STRIPES};
 use crate::net::message::{wire, Message};
 use crate::net::transport::{TcpTransport, Transport};
@@ -52,22 +57,14 @@ pub struct Counters {
     pub updates: AtomicU64,
 }
 
-/// Per-step sync aggregation state: a running gradient sum + count per
-/// key, folded in on push arrival. Replaces buffering every worker's
-/// full tensor set (O(workers·params)) with O(params), and turns the
-/// barrier's apply step into one scale per key.
-#[derive(Default)]
-struct StepAgg {
-    /// Workers that reached the barrier for this step.
-    arrived: usize,
-    /// key -> (running gradient sum, number of contributions).
-    grads: BTreeMap<u32, (Tensor, u32)>,
-}
+/// One stripe's sync aggregation: `step -> key -> (running gradient
+/// sum, number of contributions)`.
+type StripeAgg = BTreeMap<u64, BTreeMap<u32, (Tensor, u32)>>;
 
-#[derive(Default)]
-struct SyncState {
-    /// step -> aggregation state for steps not yet released.
-    pending: BTreeMap<u64, StepAgg>,
+/// Per-step barrier bookkeeping, shared across stripes.
+struct BarrierState {
+    /// step -> workers arrived at the barrier (released steps removed).
+    arrived: BTreeMap<u64, usize>,
     /// Steps < `released_below` have been aggregated and released.
     /// (Half-open so step 0 is NOT considered released at init — a
     /// closed `released: u64 = 0` sentinel let step-0 barriers pass
@@ -75,12 +72,66 @@ struct SyncState {
     released_below: u64,
 }
 
+/// Where a sync push's step sits relative to the release window.
+enum PushWindow {
+    /// Below the release horizon: straggler for a released step.
+    Released,
+    /// Inside the MAX_PENDING_STEPS window: fold it in.
+    Open,
+    /// Beyond the window: runaway/byzantine peer, discard.
+    Beyond,
+}
+
+/// Sync-mode aggregation state, striped like the store (the PR-1
+/// follow-up): each stripe owns the running `(sum, count)` maps for its
+/// keys, so sync pushes to disjoint stripes fold in parallel instead of
+/// serializing on one global mutex. The single small [`BarrierState`]
+/// mutex serializes only arrival counting and the once-per-step release.
+struct SyncShared {
+    barrier: Mutex<BarrierState>,
+    /// Lock-free mirror of `barrier.released_below` for push-path window
+    /// checks. A push racing a concurrent release can at worst fold into
+    /// a just-released step; the orphaned sum is evicted at the next
+    /// release, so memory stays bounded and no stale step ever applies.
+    released_floor: AtomicU64,
+    /// stripe (key % n) -> aggregation maps for that stripe's keys.
+    agg: Vec<Mutex<StripeAgg>>,
+}
+
+impl SyncShared {
+    fn with_stripes(n_stripes: usize) -> Self {
+        SyncShared {
+            barrier: Mutex::new(BarrierState {
+                arrived: BTreeMap::new(),
+                released_below: 0,
+            }),
+            released_floor: AtomicU64::new(0),
+            agg: (0..n_stripes).map(|_| Mutex::new(StripeAgg::new())).collect(),
+        }
+    }
+
+    fn push_window(&self, step: u64) -> PushWindow {
+        let floor = self.released_floor.load(Ordering::Acquire);
+        if step < floor {
+            PushWindow::Released
+        } else if step >= floor + MAX_PENDING_STEPS {
+            PushWindow::Beyond
+        } else {
+            PushWindow::Open
+        }
+    }
+
+    fn agg_stripe(&self, key: u32) -> &Mutex<StripeAgg> {
+        &self.agg[key as usize % self.agg.len()]
+    }
+}
+
 /// Shared server state handed to every connection handler.
 pub struct PsShared {
     pub store: StripedStore,
     pub counters: Counters,
     mode: UpdateMode,
-    sync: Mutex<SyncState>,
+    sync: SyncShared,
     barrier_cv: Condvar,
     stop: AtomicBool,
 }
@@ -97,7 +148,7 @@ impl PsShared {
             store: StripedStore::from_shard(store, n_stripes),
             counters: Counters::default(),
             mode,
-            sync: Mutex::new(SyncState::default()),
+            sync: SyncShared::with_stripes(n_stripes),
             barrier_cv: Condvar::new(),
             stop: AtomicBool::new(false),
         })
@@ -107,10 +158,195 @@ impl PsShared {
         self.stop.load(Ordering::Relaxed)
     }
 
-    /// Number of sync steps currently buffered (observability + tests:
+    /// Number of distinct sync steps currently buffered across arrival
+    /// counts and every aggregation stripe (observability + tests:
     /// bounded by [`MAX_PENDING_STEPS`], drained by barrier releases).
     pub fn pending_steps(&self) -> usize {
-        self.sync.lock().unwrap().pending.len()
+        let mut steps: BTreeSet<u64> = self
+            .sync
+            .barrier
+            .lock()
+            .unwrap()
+            .arrived
+            .keys()
+            .copied()
+            .collect();
+        for stripe in &self.sync.agg {
+            steps.extend(stripe.lock().unwrap().keys().copied());
+        }
+        steps.len()
+    }
+}
+
+/// Streaming compressed-push handler: entries decode as borrowed views
+/// straight from the frame (`wire::CompressedPushBody`) and scatter
+/// into the store (async) or the striped sync aggregation — no dense
+/// `Tensor` is ever allocated per entry. (Sync mode allocates one dense
+/// running sum per key per step on the *first* contribution: the same
+/// O(params) barrier memory the dense path pays.)
+fn handle_compressed_push(frame: &[u8], shared: &PsShared) -> Message {
+    shared.counters.pushes.fetch_add(1, Ordering::Relaxed);
+    let mut body = match wire::CompressedPushBody::decode(frame) {
+        Ok(b) => b,
+        Err(e) => return Message::Error { what: e },
+    };
+    let step = body.step;
+    match shared.mode {
+        UpdateMode::Async => {
+            while let Some(entry) = body.next_entry() {
+                let (key, grad) = match entry {
+                    Ok(x) => x,
+                    Err(e) => return Message::Error { what: e },
+                };
+                if let Err(e) = shared.store.apply_compressed(key, &grad) {
+                    return Message::Error { what: e };
+                }
+                shared.counters.updates.fetch_add(1, Ordering::Relaxed);
+            }
+            Message::PushAck { clock: shared.store.clock() }
+        }
+        UpdateMode::Sync { .. } => {
+            match shared.sync.push_window(step) {
+                PushWindow::Released => {
+                    // Straggler push for a released step — discarded.
+                }
+                PushWindow::Beyond => {
+                    crate::warn_log!(
+                        "ps",
+                        "push beyond pending-step cap discarded",
+                        step = step
+                    );
+                }
+                PushWindow::Open => {
+                    while let Some(entry) = body.next_entry() {
+                        let (key, grad) = match entry {
+                            Ok(x) => x,
+                            Err(e) => return Message::Error { what: e },
+                        };
+                        fold_sync_compressed(shared, step, key, &grad);
+                    }
+                }
+            }
+            Message::PushAck { clock: shared.store.clock() }
+        }
+    }
+}
+
+/// Fold one dense pushed gradient into the striped sync aggregation:
+/// the first contribution moves the tensor in as the running sum, later
+/// ones axpy into it. (Agg-stripe lock then store-stripe lock — the
+/// same order everywhere, so no lock cycle.)
+fn fold_sync_dense(shared: &PsShared, step: u64, key: u32, g: Tensor) {
+    let mut agg = shared.sync.agg_stripe(key).lock().unwrap();
+    let slot = agg.entry(step).or_default();
+    match slot.entry(key) {
+        BtreeEntry::Occupied(mut o) => {
+            let (sum, n) = o.get_mut();
+            if sum.shape() == g.shape() {
+                sum.axpy(1.0, &g);
+                *n += 1;
+            } else {
+                crate::warn_log!("ps", "sync push shape mismatch discarded", key = key);
+            }
+        }
+        BtreeEntry::Vacant(v) => {
+            // First contribution: validate against the stored parameter
+            // so one malformed push can't become the sum and poison
+            // every later correct push for this key.
+            match shared.store.with_tensor(key, |stored| stored.shape() == g.shape()) {
+                Some(true) => {
+                    // The pushed tensor becomes the running sum (moved,
+                    // not cloned).
+                    v.insert((g, 1));
+                }
+                Some(false) => {
+                    crate::warn_log!("ps", "sync push shape mismatch discarded", key = key)
+                }
+                None => crate::warn_log!("ps", "sync push for unknown key discarded", key = key),
+            }
+        }
+    }
+}
+
+/// Compressed twin of [`fold_sync_dense`]: scatter the borrowed view
+/// into the running sum (first contribution scatters into fresh zeros
+/// of the stored shape — the step's one dense allocation per key).
+fn fold_sync_compressed(shared: &PsShared, step: u64, key: u32, g: &CompressedRef) {
+    let mut agg = shared.sync.agg_stripe(key).lock().unwrap();
+    let slot = agg.entry(step).or_default();
+    match slot.entry(key) {
+        BtreeEntry::Occupied(mut o) => {
+            let (sum, n) = o.get_mut();
+            if sum.len() == g.numel() {
+                match g.scatter_axpy(1.0, sum.data_mut()) {
+                    Ok(()) => *n += 1,
+                    Err(e) => {
+                        crate::warn_log!("ps", "sync compressed push discarded", key = key, err = e)
+                    }
+                }
+            } else {
+                crate::warn_log!("ps", "sync push shape mismatch discarded", key = key);
+            }
+        }
+        BtreeEntry::Vacant(v) => {
+            let shape = shared
+                .store
+                .with_tensor(key, |stored| {
+                    (stored.len() == g.numel()).then(|| stored.shape().to_vec())
+                });
+            match shape {
+                Some(Some(shape)) => {
+                    let mut sum = Tensor::zeros(&shape);
+                    match g.scatter_axpy(1.0, sum.data_mut()) {
+                        Ok(()) => {
+                            v.insert((sum, 1));
+                        }
+                        Err(e) => crate::warn_log!(
+                            "ps",
+                            "sync compressed push discarded",
+                            key = key,
+                            err = e
+                        ),
+                    }
+                }
+                Some(None) => {
+                    crate::warn_log!("ps", "sync push shape mismatch discarded", key = key)
+                }
+                None => crate::warn_log!("ps", "sync push for unknown key discarded", key = key),
+            }
+        }
+    }
+}
+
+/// Apply a released step's aggregated means and advance the horizon.
+/// Called with the barrier lock held; drains each agg stripe under its
+/// own lock, applying means with no agg lock held (barrier -> agg ->
+/// store is the global lock order).
+fn release_step(shared: &PsShared, bar: &mut BarrierState, step: u64) {
+    for stripe in &shared.sync.agg {
+        let drained = stripe.lock().unwrap().remove(&step);
+        if let Some(grads) = drained {
+            for (k, (sum, n)) in grads {
+                shared
+                    .store
+                    .apply_mean(k, sum, n)
+                    .unwrap_or_else(|e| crate::warn_log!("ps", "sync apply failed", err = e));
+                shared.counters.updates.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+    bar.released_below = bar.released_below.max(step + 1);
+    shared
+        .sync
+        .released_floor
+        .store(bar.released_below, Ordering::Release);
+    // Evict state orphaned below the release horizon (stragglers that
+    // died before their barrier): those steps can never release, so
+    // their sums would otherwise leak forever.
+    let horizon = bar.released_below;
+    bar.arrived.retain(|&s, _| s >= horizon);
+    for stripe in &shared.sync.agg {
+        stripe.lock().unwrap().retain(|&s, _| s >= horizon);
     }
 }
 
@@ -118,10 +354,29 @@ impl PsShared {
 /// in-process transports or spawned per TCP accept.
 pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
     loop {
-        let msg = match t.recv() {
-            Ok(m) => m,
-            Err(_) => return, // peer hung up
-        };
+        // Zero-copy receive: compressed pushes are dispatched by frame
+        // tag into the streaming handler (no owned Message, no owned
+        // tensors); everything else falls back to `Message::decode`.
+        let mut fallback: Option<Message> = None;
+        let mut reply: Option<Message> = None;
+        let received = t.recv_with(&mut |frame| {
+            if wire::is_compressed_push(frame) {
+                reply = Some(handle_compressed_push(frame, &shared));
+            } else {
+                fallback = Some(Message::decode(frame)?);
+            }
+            Ok(())
+        });
+        if received.is_err() {
+            return; // peer hung up (or sent an undecodable frame)
+        }
+        if let Some(reply) = reply {
+            if t.send(&reply).is_err() {
+                return;
+            }
+            continue;
+        }
+        let Some(msg) = fallback else { return };
         match msg {
             Message::Pull { keys, .. } => {
                 shared.counters.pulls.fetch_add(1, Ordering::Relaxed);
@@ -169,63 +424,23 @@ pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
                         }
                     }
                     UpdateMode::Sync { .. } => {
-                        let mut sync = shared.sync.lock().unwrap();
-                        if step < sync.released_below {
-                            // Straggler push for a released step — discarded.
-                        } else if step >= sync.released_below + MAX_PENDING_STEPS {
-                            crate::warn_log!(
-                                "ps",
-                                "push beyond pending-step cap discarded",
-                                step = step
-                            );
-                        } else {
-                            let slot = sync.pending.entry(step).or_default();
-                            for (k, g) in entries {
-                                match slot.grads.entry(k) {
-                                    BtreeEntry::Occupied(mut o) => {
-                                        let (sum, n) = o.get_mut();
-                                        if sum.shape() == g.shape() {
-                                            sum.axpy(1.0, &g);
-                                            *n += 1;
-                                        } else {
-                                            crate::warn_log!(
-                                                "ps",
-                                                "sync push shape mismatch discarded",
-                                                key = k
-                                            );
-                                        }
-                                    }
-                                    BtreeEntry::Vacant(v) => {
-                                        // First contribution: validate
-                                        // against the stored parameter so
-                                        // one malformed push can't become
-                                        // the sum and poison every later
-                                        // correct push for this key (sync
-                                        // lock -> stripe lock is the same
-                                        // order the release path uses).
-                                        match shared.store.with_tensor(k, |stored| stored.shape() == g.shape()) {
-                                            Some(true) => {
-                                                // The pushed tensor becomes
-                                                // the running sum (moved,
-                                                // not cloned).
-                                                v.insert((g, 1));
-                                            }
-                                            Some(false) => crate::warn_log!(
-                                                "ps",
-                                                "sync push shape mismatch discarded",
-                                                key = k
-                                            ),
-                                            None => crate::warn_log!(
-                                                "ps",
-                                                "sync push for unknown key discarded",
-                                                key = k
-                                            ),
-                                        }
-                                    }
+                        match shared.sync.push_window(step) {
+                            PushWindow::Released => {
+                                // Straggler push for a released step — discarded.
+                            }
+                            PushWindow::Beyond => {
+                                crate::warn_log!(
+                                    "ps",
+                                    "push beyond pending-step cap discarded",
+                                    step = step
+                                );
+                            }
+                            PushWindow::Open => {
+                                for (k, g) in entries {
+                                    fold_sync_dense(&shared, step, k, g);
                                 }
                             }
                         }
-                        drop(sync);
                         Message::PushAck { clock: shared.store.clock() }
                     }
                 };
@@ -240,49 +455,37 @@ pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
                     });
                     continue;
                 };
-                let mut sync = shared.sync.lock().unwrap();
-                if step < sync.released_below {
+                let mut bar = shared.sync.barrier.lock().unwrap();
+                if step < bar.released_below {
                     // Straggler past an already-released barrier (backup-
                     // worker mode): wave it through, its grads are void.
-                    drop(sync);
+                    drop(bar);
                     if t.send(&Message::BarrierRelease { step }).is_err() {
                         return;
                     }
                     continue;
                 }
-                if step >= sync.released_below + MAX_PENDING_STEPS {
+                if step >= bar.released_below + MAX_PENDING_STEPS {
                     // Same cap as the push path: a runaway/byzantine peer
                     // must not create far-future slots — and with a small
                     // quorum a far-future release would advance
                     // released_below past every live worker, silently
                     // voiding all their subsequent pushes.
-                    drop(sync);
+                    drop(bar);
                     let _ = t.send(&Message::Error {
                         what: format!("barrier step {step} beyond pending-step cap"),
                     });
                     continue;
                 }
                 let quorum = expected_workers.saturating_sub(backup_workers).max(1);
-                let slot = sync.pending.entry(step).or_default();
-                slot.arrived += 1;
-                if slot.arrived >= quorum {
-                    // Last arriver applies the aggregated mean: one scale
-                    // + one optimizer step per key, consuming the sums.
-                    let agg = sync.pending.remove(&step).unwrap();
-                    for (k, (sum, n)) in agg.grads {
-                        shared
-                            .store
-                            .apply_mean(k, sum, n)
-                            .unwrap_or_else(|e| crate::warn_log!("ps", "sync apply failed", err = e));
-                        shared.counters.updates.fetch_add(1, Ordering::Relaxed);
-                    }
-                    sync.released_below = sync.released_below.max(step + 1);
-                    // Evict aggregation state orphaned below the release
-                    // horizon (stragglers that died before their barrier):
-                    // those steps can never release, so their sums would
-                    // otherwise leak forever.
-                    let horizon = sync.released_below;
-                    sync.pending.retain(|&s, _| s >= horizon);
+                let arrived = bar.arrived.entry(step).or_insert(0);
+                *arrived += 1;
+                if *arrived >= quorum {
+                    // Last arriver applies the aggregated means: one
+                    // scale + one optimizer step per key, draining the
+                    // sums stripe by stripe.
+                    bar.arrived.remove(&step);
+                    release_step(&shared, &mut bar, step);
                     shared.barrier_cv.notify_all();
                 } else {
                     // Bounded wait: if a peer worker dies mid-step the
@@ -290,7 +493,7 @@ pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
                     // deadlocking the cluster.
                     let deadline = std::time::Instant::now() + BARRIER_TIMEOUT;
                     let mut timed_out = false;
-                    while sync.released_below <= step && !shared.stopped() {
+                    while bar.released_below <= step && !shared.stopped() {
                         let now = std::time::Instant::now();
                         if now >= deadline {
                             timed_out = true;
@@ -298,22 +501,23 @@ pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
                         }
                         let (guard, _) = shared
                             .barrier_cv
-                            .wait_timeout(sync, deadline - now)
+                            .wait_timeout(bar, deadline - now)
                             .unwrap();
-                        sync = guard;
+                        bar = guard;
                     }
                     if timed_out {
                         // Withdraw only this waiter's arrival (so a retry
-                        // is not double-counted toward quorum). The slot
-                        // and its gradient sums stay: peers that already
-                        // pushed may still barrier and release this step.
-                        // Memory stays bounded regardless — pending steps
-                        // live in the MAX_PENDING_STEPS window above
-                        // released_below, at one running sum per key.
-                        if let Some(slot) = sync.pending.get_mut(&step) {
-                            slot.arrived = slot.arrived.saturating_sub(1);
+                        // is not double-counted toward quorum). The
+                        // stripes keep their gradient sums: peers that
+                        // already pushed may still barrier and release
+                        // this step. Memory stays bounded regardless —
+                        // pending steps live in the MAX_PENDING_STEPS
+                        // window above released_below, at one running sum
+                        // per key.
+                        if let Some(a) = bar.arrived.get_mut(&step) {
+                            *a = a.saturating_sub(1);
                         }
-                        drop(sync);
+                        drop(bar);
                         let _ = t.send(&Message::Error {
                             what: format!("barrier timeout at step {step}"),
                         });
@@ -324,8 +528,8 @@ pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
                 // failed barrier, not a release — a BarrierRelease here
                 // would tell the worker its step committed when its
                 // gradients were never applied.
-                let released = sync.released_below > step;
-                drop(sync);
+                let released = bar.released_below > step;
+                drop(bar);
                 if !released {
                     let _ = t.send(&Message::Error {
                         what: format!("server stopping before step {step} released"),
@@ -472,6 +676,111 @@ mod tests {
         }
         drop(c);
         h.join().unwrap();
+    }
+
+    #[test]
+    fn compressed_push_async_applies_sparse_and_quant() {
+        use crate::ps::compress::Compressed;
+        let store = store_with(
+            &[(0, vec![0.0; 8]), (1, vec![0.0; 4])],
+            Optimizer::Sgd { lr: 1.0 },
+        );
+        let shared = PsShared::new(store, UpdateMode::Async);
+        let (client_end, server_end) = InProcTransport::pair();
+        let h = thread::spawn({
+            let sh = shared.clone();
+            move || serve(Box::new(server_end), sh)
+        });
+        let mut c: Box<dyn Transport> = Box::new(client_end);
+        c.send(&Message::CompressedPush {
+            worker: 0,
+            step: 0,
+            entries: vec![
+                (0, Compressed::Sparse { numel: 8, idx: vec![1, 5], val: vec![2.0, -1.0] }),
+                (1, Compressed::Quant8 { numel: 4, scale: 1.0, q: vec![127, -5, 0, 3] }),
+            ],
+        })
+        .unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+        // lr 1: w -= grad.
+        let w0 = shared.store.get_clone(0).unwrap();
+        assert_eq!(w0.data()[1], -2.0);
+        assert_eq!(w0.data()[5], 1.0);
+        assert_eq!(w0.data().iter().filter(|x| **x != 0.0).count(), 2);
+        assert_eq!(shared.store.get_clone(1).unwrap().data(), &[-127.0, 5.0, 0.0, -3.0]);
+        assert_eq!(shared.counters.updates.load(Ordering::Relaxed), 2);
+        assert_eq!(shared.counters.pushes.load(Ordering::Relaxed), 1);
+        drop(c);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn compressed_push_unknown_key_errors() {
+        use crate::ps::compress::Compressed;
+        let store = store_with(&[(0, vec![0.0; 2])], Optimizer::Sgd { lr: 1.0 });
+        let shared = PsShared::new(store, UpdateMode::Async);
+        let (client_end, server_end) = InProcTransport::pair();
+        let h = thread::spawn({
+            let sh = shared.clone();
+            move || serve(Box::new(server_end), sh)
+        });
+        let mut c: Box<dyn Transport> = Box::new(client_end);
+        c.send(&Message::CompressedPush {
+            worker: 0,
+            step: 0,
+            entries: vec![(9, Compressed::Sparse { numel: 2, idx: vec![0], val: vec![1.0] })],
+        })
+        .unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::Error { .. }));
+        // The server still serves afterwards.
+        c.send(&Message::Pull { worker: 0, keys: vec![0] }).unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::PullReply { .. }));
+        drop(c);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn compressed_push_sync_folds_and_releases_mean() {
+        use crate::ps::compress::Compressed;
+        // Two workers push disjoint sparse coordinates for one key; the
+        // released mean is (g_a + g_b) / 2, same as the dense semantics.
+        let store = store_with(&[(0, vec![0.0, 0.0])], Optimizer::Sgd { lr: 1.0 });
+        let shared = PsShared::new(
+            store,
+            UpdateMode::Sync { expected_workers: 2, backup_workers: 0 },
+        );
+        let mut handles = Vec::new();
+        let mut serve_handles = Vec::new();
+        for (idx, val) in [(0u32, 2.0f32), (1, 4.0)] {
+            let (client_end, server_end) = InProcTransport::pair();
+            let sh = shared.clone();
+            serve_handles.push(thread::spawn(move || serve(Box::new(server_end), sh)));
+            handles.push(thread::spawn(move || {
+                let mut c: Box<dyn Transport> = Box::new(client_end);
+                c.send(&Message::CompressedPush {
+                    worker: idx,
+                    step: 0,
+                    entries: vec![(
+                        0,
+                        Compressed::Sparse { numel: 2, idx: vec![idx], val: vec![val] },
+                    )],
+                })
+                .unwrap();
+                assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+                c.send(&Message::Barrier { worker: idx, step: 0 }).unwrap();
+                assert!(matches!(c.recv().unwrap(), Message::BarrierRelease { step: 0 }));
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // mean = ([2,0] + [0,4]) / 2 = [1,2]; lr 1 → w = [-1,-2].
+        assert_eq!(shared.store.get_clone(0).unwrap().data(), &[-1.0, -2.0]);
+        assert_eq!(shared.pending_steps(), 0);
+        assert_eq!(shared.counters.updates.load(Ordering::Relaxed), 1);
+        for h in serve_handles {
+            h.join().unwrap();
+        }
     }
 
     #[test]

@@ -13,6 +13,7 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::RwLock;
 
+use super::compress::CompressedRef;
 use crate::tensor::Tensor;
 
 /// Server-side optimizer for applying pushed gradients.
@@ -230,6 +231,41 @@ impl StripedStore {
         Ok(())
     }
 
+    /// Apply one compressed gradient to one key by scattering straight
+    /// from the borrowed wire view — the decompress-free twin of
+    /// [`apply_grad`](Self::apply_grad). No dense tensor is allocated:
+    /// SGD scatters into the stored parameter in place; momentum decays
+    /// the (lazily created, then reused) velocity and scatters into it.
+    /// A rejected gradient leaves parameter AND optimizer state
+    /// untouched (`CompressedRef::validate` runs before any mutation).
+    pub fn apply_compressed(&self, key: u32, grad: &CompressedRef) -> Result<(), String> {
+        let mut guard = self.stripe(key).write().unwrap();
+        let Stripe { params, velocity } = &mut *guard;
+        let w = params
+            .get_mut(&key)
+            .ok_or_else(|| format!("unknown key {key}"))?;
+        grad.validate(w.len())
+            .map_err(|e| format!("key {key}: {e}"))?;
+        match self.opt {
+            Optimizer::Sgd { lr } => {
+                grad.scatter_axpy(-lr, w.data_mut())?;
+            }
+            Optimizer::Momentum { lr, mu } => {
+                let v = velocity
+                    .entry(key)
+                    .or_insert_with(|| Tensor::zeros(w.shape()));
+                // Safe to mutate: the gradient was validated against the
+                // parameter above, and v always has the same numel.
+                v.scale(mu);
+                grad.scatter_axpy(1.0, v.data_mut())?;
+                w.axpy(-lr, v);
+            }
+        }
+        drop(guard);
+        self.clock.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
     /// Sync-mode apply: consume a running gradient sum over `count`
     /// contributions, scale once, apply once (the barrier's O(1)-tensor
     /// replacement for reducing N buffered tensors).
@@ -334,6 +370,93 @@ mod tests {
         assert!(s.apply_grad(7, &t(&[1.0])).is_err());
         assert!(s.apply_grad(0, &t(&[1.0])).is_err());
         assert!(s.with_tensor(9, |_| ()).is_none());
+    }
+
+    fn sparse_view(numel: usize, entries: &[(u32, f32)]) -> (Vec<u8>, Vec<u8>, usize) {
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for &(i, v) in entries {
+            idx.extend_from_slice(&i.to_le_bytes());
+            val.extend_from_slice(&v.to_le_bytes());
+        }
+        (idx, val, numel)
+    }
+
+    #[test]
+    fn striped_apply_compressed_sparse_matches_dense() {
+        let sgd = striped_with(&[(0, vec![0.0; 8])], Optimizer::Sgd { lr: 0.5 }, 4);
+        let (idx, val, numel) = sparse_view(8, &[(1, 2.0), (5, -4.0)]);
+        let view = CompressedRef::Sparse { numel, idx: &idx, val: &val };
+        sgd.apply_compressed(0, &view).unwrap();
+        // Dense reference: apply_grad of the densified gradient.
+        let dense = striped_with(&[(0, vec![0.0; 8])], Optimizer::Sgd { lr: 0.5 }, 4);
+        let mut g = vec![0.0f32; 8];
+        g[1] = 2.0;
+        g[5] = -4.0;
+        dense.apply_grad(0, &Tensor::from_vec(&[8], g)).unwrap();
+        assert_eq!(sgd.get_clone(0).unwrap(), dense.get_clone(0).unwrap());
+        assert_eq!(sgd.clock(), 1);
+    }
+
+    #[test]
+    fn striped_apply_compressed_quant8_momentum_matches_dense() {
+        let opt = Optimizer::Momentum { lr: 0.1, mu: 0.9 };
+        let comp = striped_with(&[(3, vec![0.0; 4])], opt, 2);
+        let dense = striped_with(&[(3, vec![0.0; 4])], opt, 2);
+        let qbytes: Vec<u8> = [10i8, -20, 0, 127].iter().map(|&x| x as u8).collect();
+        let view = CompressedRef::Quant8 { numel: 4, scale: 0.25, q: &qbytes };
+        let g = Tensor::from_vec(&[4], vec![2.5, -5.0, 0.0, 31.75]);
+        // Two steps so the velocity accumulation path is exercised.
+        for _ in 0..2 {
+            comp.apply_compressed(3, &view).unwrap();
+            dense.apply_grad(3, &g).unwrap();
+        }
+        let a = comp.get_clone(3).unwrap();
+        let b = dense.get_clone(3).unwrap();
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert!((x - y).abs() < 1e-6, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn striped_apply_compressed_rejects_malformed() {
+        let s = striped_with(&[(0, vec![0.0; 4])], Optimizer::Sgd { lr: 1.0 }, 2);
+        let (idx, val, _) = sparse_view(4, &[(0, 1.0)]);
+        // Unknown key.
+        let view = CompressedRef::Sparse { numel: 4, idx: &idx, val: &val };
+        assert!(s.apply_compressed(9, &view).is_err());
+        // numel mismatch against the stored parameter.
+        let view = CompressedRef::Sparse { numel: 5, idx: &idx, val: &val };
+        assert!(s.apply_compressed(0, &view).is_err());
+        // Out-of-range sparse index.
+        let (idx, val, numel) = sparse_view(4, &[(7, 1.0)]);
+        let view = CompressedRef::Sparse { numel, idx: &idx, val: &val };
+        assert!(s.apply_compressed(0, &view).is_err());
+        // And the parameter was not half-updated behind the error.
+        assert!(s.get_clone(0).unwrap().data().iter().all(|&x| x == 0.0));
+        assert_eq!(s.clock(), 0);
+    }
+
+    #[test]
+    fn rejected_compressed_grad_leaves_momentum_state_untouched() {
+        let opt = Optimizer::Momentum { lr: 0.1, mu: 0.9 };
+        let s = striped_with(&[(0, vec![0.0; 4])], opt, 2);
+        // Build up a velocity with one good step.
+        let (idx, val, numel) = sparse_view(4, &[(1, 10.0)]);
+        let good = CompressedRef::Sparse { numel, idx: &idx, val: &val };
+        s.apply_compressed(0, &good).unwrap();
+        let w_before = s.get_clone(0).unwrap();
+        // Malformed gradient: the velocity must NOT be decayed by mu for
+        // a push that was reported as failed.
+        let (bidx, bval, bnumel) = sparse_view(4, &[(9, 1.0)]);
+        let bad = CompressedRef::Sparse { numel: bnumel, idx: &bidx, val: &bval };
+        assert!(s.apply_compressed(0, &bad).is_err());
+        // A second good step must behave exactly as if the bad push
+        // never happened: v = 0.9*10 + 10 = 19, w = -1 - 1.9 = -2.9.
+        s.apply_compressed(0, &good).unwrap();
+        assert_eq!(w_before.data()[1], -1.0);
+        let w = s.get_clone(0).unwrap();
+        assert!((w.data()[1] - (-2.9)).abs() < 1e-6, "{}", w.data()[1]);
     }
 
     #[test]

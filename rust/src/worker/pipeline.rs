@@ -13,6 +13,7 @@
 
 use crate::data::loader::{Batch, PrefetchLoader};
 use crate::ps::client::PsClient;
+use crate::ps::compress::CodecKind;
 use crate::runtime::exec::TrainExecutable;
 use crate::tensor::Tensor;
 use crate::worker::profiler::{Step, StepProfiler};
@@ -26,11 +27,20 @@ pub struct PipelineConfig {
     /// paper's "low throughput of feeding training data" bottleneck).
     pub prefetch_depth: usize,
     pub log_every: usize,
+    /// Gradient codec for distributed pushes (§1.1.1 traffic saver;
+    /// ignored by local runs, which never touch a parameter server).
+    pub codec: CodecKind,
 }
 
 impl Default for PipelineConfig {
     fn default() -> Self {
-        PipelineConfig { lr: 0.01, steps: 100, prefetch_depth: 2, log_every: 0 }
+        PipelineConfig {
+            lr: 0.01,
+            steps: 100,
+            prefetch_depth: 2,
+            log_every: 0,
+            codec: CodecKind::None,
+        }
     }
 }
 
@@ -42,6 +52,9 @@ pub struct WorkerStats {
     pub wall_s: f64,
     /// Samples processed per wall-clock second.
     pub throughput: f64,
+    /// Encoded push-body bytes sent to parameter servers (0 for local
+    /// runs) — the measured side of Lemma 3.2's traffic term.
+    pub push_wire_bytes: u64,
 }
 
 fn spawn_loader<F>(make: F, batch: usize, steps: usize, depth: usize) -> PrefetchLoader
@@ -104,7 +117,10 @@ where
 
     let wall_s = t0.elapsed().as_secs_f64();
     let throughput = (cfg.steps * batch_size) as f64 / wall_s;
-    Ok((params, WorkerStats { losses, profiler, wall_s, throughput }))
+    Ok((
+        params,
+        WorkerStats { losses, profiler, wall_s, throughput, push_wire_bytes: 0 },
+    ))
 }
 
 /// Distributed worker: pull -> grad_step -> push (steps 1–7), async or
@@ -123,6 +139,8 @@ where
     let mut losses = Vec::with_capacity(cfg.steps);
     let t0 = std::time::Instant::now();
     let batch_size = grad_exe.meta.batch;
+    client.set_codec(cfg.codec);
+    let wire_bytes_before = client.push_wire_bytes();
     let mut loader = spawn_loader(make_batch, batch_size, cfg.steps, cfg.prefetch_depth);
     // One parameter buffer for the whole run: each refresh refills it in
     // place instead of allocating a fresh Vec per step.
@@ -154,7 +172,13 @@ where
 
     let wall_s = t0.elapsed().as_secs_f64();
     let throughput = (cfg.steps * batch_size) as f64 / wall_s;
-    Ok(WorkerStats { losses, profiler, wall_s, throughput })
+    Ok(WorkerStats {
+        losses,
+        profiler,
+        wall_s,
+        throughput,
+        push_wire_bytes: client.push_wire_bytes() - wire_bytes_before,
+    })
 }
 
 fn maybe_log(cfg: &PipelineConfig, step: usize, loss: f32) {
@@ -192,7 +216,8 @@ mod tests {
         let Some(rt) = runtime() else { return };
         let exe = rt.load("cnn_gemm_b16_train").unwrap();
         let (_, params) = rt.family_init("cnn").unwrap();
-        let cfg = PipelineConfig { lr: 0.02, steps: 8, prefetch_depth: 2, log_every: 0 };
+        let cfg =
+            PipelineConfig { lr: 0.02, steps: 8, prefetch_depth: 2, ..Default::default() };
         let (_, stats) = run_local(&exe, params, batcher(1), &cfg).unwrap();
         assert_eq!(stats.losses.len(), 8);
         assert_eq!(stats.profiler.iterations(), 8);
@@ -209,7 +234,8 @@ mod tests {
         let Some(rt) = runtime() else { return };
         let exe = rt.load("cnn_gemm_b16_train").unwrap();
         let (_, params) = rt.family_init("cnn").unwrap();
-        let piped = PipelineConfig { lr: 0.02, steps: 6, prefetch_depth: 2, log_every: 0 };
+        let piped =
+            PipelineConfig { lr: 0.02, steps: 6, prefetch_depth: 2, ..Default::default() };
         let unpiped = PipelineConfig { prefetch_depth: 0, ..piped.clone() };
         let (_, s1) = run_local(&exe, params.clone(), batcher(2), &piped).unwrap();
         let (_, s0) = run_local(&exe, params, batcher(2), &unpiped).unwrap();

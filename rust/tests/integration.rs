@@ -14,6 +14,7 @@ use dtlsda::net::message::Message;
 use dtlsda::net::transport::{connect, InProcTransport, Transport};
 use dtlsda::ps::client::PsClient;
 use dtlsda::ps::router::Router;
+use dtlsda::ps::CodecKind;
 use dtlsda::ps::server::{serve, PsServerHandle, PsShared, UpdateMode};
 use dtlsda::ps::shard::{Optimizer, ShardStore};
 use dtlsda::sim::device::DeviceModel;
@@ -31,6 +32,7 @@ fn quad_cluster(
     sync: bool,
     steps: usize,
     lr: f32,
+    codec: CodecKind,
 ) -> (Vec<Tensor>, Vec<Tensor>) {
     let shapes: Vec<Vec<usize>> = vec![vec![64], vec![8, 8], vec![128]];
     let sizes: Vec<usize> = shapes.iter().map(|s| s.iter().product::<usize>() * 4).collect();
@@ -70,7 +72,7 @@ fn quad_cluster(
                 .iter()
                 .map(|a| Box::new(connect(a).unwrap()) as Box<dyn Transport>)
                 .collect();
-            let mut client = PsClient::new(w as u32, transports, router);
+            let mut client = PsClient::with_codec(w as u32, transports, router, codec);
             for step in 0..steps {
                 let params = client.pull_all().unwrap();
                 let grads: Vec<Tensor> = params
@@ -121,14 +123,14 @@ fn l2_distance(a: &[Tensor], b: &[Tensor]) -> f32 {
 
 #[test]
 fn quadratic_converges_async() {
-    let (finals, targets) = quad_cluster(3, 2, false, 60, 0.05);
+    let (finals, targets) = quad_cluster(3, 2, false, 60, 0.05, CodecKind::None);
     let d = l2_distance(&finals, &targets);
     assert!(d < 0.1, "async SGD did not converge: distance {d}");
 }
 
 #[test]
 fn quadratic_converges_sync() {
-    let (finals, targets) = quad_cluster(2, 3, true, 60, 0.1);
+    let (finals, targets) = quad_cluster(2, 3, true, 60, 0.1, CodecKind::None);
     let d = l2_distance(&finals, &targets);
     assert!(d < 0.05, "sync SGD did not converge: distance {d}");
 }
@@ -137,10 +139,52 @@ fn quadratic_converges_sync() {
 fn sync_is_deterministic() {
     // Two identical sync runs must agree bit-for-bit (aggregation order
     // inside a barrier is mean over a fixed set).
-    let (a, _) = quad_cluster(2, 2, true, 10, 0.1);
-    let (b, _) = quad_cluster(2, 2, true, 10, 0.1);
+    let (a, _) = quad_cluster(2, 2, true, 10, 0.1, CodecKind::None);
+    let (b, _) = quad_cluster(2, 2, true, 10, 0.1, CodecKind::None);
     for (x, y) in a.iter().zip(&b) {
         assert_eq!(x.data(), y.data());
+    }
+}
+
+#[test]
+fn quadratic_topk_error_feedback_tracks_dense() {
+    // Top-k with error feedback must reach (nearly) the same endpoint as
+    // the dense baseline on the synthetic quadratic — the §1.1.1 claim
+    // that compression saves traffic without losing convergence.
+    let (dense, targets) = quad_cluster(2, 2, false, 120, 0.05, CodecKind::None);
+    let (topk, _) = quad_cluster(2, 2, false, 120, 0.05, CodecKind::TopK { fraction: 0.5 });
+    let d_dense = l2_distance(&dense, &targets);
+    let d_topk = l2_distance(&topk, &targets);
+    assert!(
+        d_topk < d_dense + 0.1,
+        "top-k diverged from dense baseline: {d_topk} vs {d_dense}"
+    );
+    assert!(d_topk < 0.2, "top-k SGD did not converge: distance {d_topk}");
+}
+
+#[test]
+fn quadratic_converges_quant8_sync() {
+    // Quantization error shrinks with the gradients (scale = max/127),
+    // so sync quant8 SGD contracts to the target like the dense run.
+    let (finals, targets) = quad_cluster(2, 2, true, 80, 0.1, CodecKind::Quant8);
+    let d = l2_distance(&finals, &targets);
+    assert!(d < 0.15, "quant8 sync SGD did not converge: distance {d}");
+}
+
+#[test]
+fn compressed_push_completes_async_and_sync() {
+    // Acceptance sweep: TopK(0.01) and Quant8, async and sync, all
+    // complete through real TCP CompressedPush frames with finite state.
+    for &sync in &[false, true] {
+        for codec in [CodecKind::TopK { fraction: 0.01 }, CodecKind::Quant8] {
+            let (finals, _) = quad_cluster(2, 2, sync, 6, 0.05, codec);
+            assert!(
+                finals
+                    .iter()
+                    .all(|t| t.data().iter().all(|x| x.is_finite())),
+                "{codec:?} sync={sync} produced non-finite parameters"
+            );
+        }
     }
 }
 
