@@ -47,7 +47,7 @@ fn main() {
     let entries: Vec<(u32, Tensor)> = (0..10)
         .map(|k| (k, Tensor::from_vec(&[65_536], vec![0.5f32; 65_536])))
         .collect();
-    let msg = Message::Push { worker: 0, step: 1, entries };
+    let msg = Message::Push { worker: 0, step: 1, seq: 0, entries };
     let r = bench_for_ms("message push 2.6MB", 300.0, 10, || {
         std::hint::black_box(msg.encode());
     });
@@ -93,10 +93,15 @@ fn main() {
         });
         let mut c: Box<dyn Transport> = Box::new(client_end);
         let g = Tensor::from_vec(&[65_536], vec![0.01f32; 65_536]);
+        // Rising seq per push: the server deduplicates replayed seqs, so
+        // a constant seq would measure the (cheap) dedup path instead of
+        // the apply path.
+        let mut seq = 0u64;
         let r = bench_for_ms("ps pull+push 256KB", 400.0, 10, || {
             c.send(&Message::Pull { worker: 0, keys: vec![0] }).unwrap();
             std::hint::black_box(c.recv().unwrap());
-            c.send(&Message::Push { worker: 0, step: 0, entries: vec![(0, g.clone())] })
+            seq += 1;
+            c.send(&Message::Push { worker: 0, step: 0, seq, entries: vec![(0, g.clone())] })
                 .unwrap();
             std::hint::black_box(c.recv().unwrap());
         });

@@ -242,6 +242,7 @@ fn main() {
     let codecs: &[(CodecKind, &'static str)] = &[
         (CodecKind::TopK { fraction: 0.01 }, "topk0.01"),
         (CodecKind::Quant8, "quant8"),
+        (CodecKind::Quant8Sr, "quant8sr"),
     ];
     for &(codec, cname) in codecs {
         for &w in worker_counts {
@@ -304,8 +305,10 @@ fn main() {
     };
     let ratio_topk = wire("none") / wire("topk0.01").max(1e-12);
     let ratio_quant8 = wire("none") / wire("quant8").max(1e-12);
+    let ratio_quant8sr = wire("none") / wire("quant8sr").max(1e-12);
     println!(
-        "push bytes-on-wire vs dense @ {top_w} workers: topk0.01 {ratio_topk:.1}x smaller, quant8 {ratio_quant8:.1}x smaller"
+        "push bytes-on-wire vs dense @ {top_w} workers: topk0.01 {ratio_topk:.1}x smaller, \
+         quant8 {ratio_quant8:.1}x smaller, quant8sr {ratio_quant8sr:.1}x smaller"
     );
 
     // Persist for trajectory tracking across PRs.
@@ -326,6 +329,10 @@ fn main() {
     );
     root.insert("push_wire_ratio_dense_over_topk001".into(), Json::Num(ratio_topk));
     root.insert("push_wire_ratio_dense_over_quant8".into(), Json::Num(ratio_quant8));
+    root.insert(
+        "push_wire_ratio_dense_over_quant8sr".into(),
+        Json::Num(ratio_quant8sr),
+    );
     root.insert(
         "results".into(),
         Json::Arr(

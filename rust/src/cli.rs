@@ -184,7 +184,7 @@ fn cmd_advisor_ps(argv: &[String]) -> Result<(), String> {
         .opt("workers", Some("8"), "number of workers N_w")
         .opt("bw-gbps", Some("10"), "per-server network bandwidth, Gbit/s")
         .opt("tc", Some("2.0"), "compute seconds per round T_C")
-        .opt("codec", Some("none"), "gradient codec: none|topk[:fraction]|quant8");
+        .opt("codec", Some("none"), "gradient codec: none|topk[:fraction]|quant8|quant8sr");
     let p = spec.parse(argv)?;
     let s_p = p.f64("params-mb") * 1e6;
     let n_w = p.usize("workers");
@@ -269,9 +269,27 @@ fn cmd_train_dist(argv: &[String]) -> Result<(), String> {
         .opt("steps", Some("10"), "steps per worker")
         .opt("lr", Some("0.02"), "learning rate")
         .opt("momentum", Some("0"), "server-side momentum")
-        .opt("codec", Some("none"), "gradient codec: none|topk[:fraction]|quant8")
+        .opt("codec", Some("none"), "gradient codec: none|topk[:fraction]|quant8|quant8sr")
+        .opt(
+            "fault-plan",
+            None,
+            "chaos spec, e.g. seed=7,drop=0.05,dup=0.02,trunc=0.01,recv_drop=0.02,\
+             latency_ms=3,latency_p=0.5,disconnect_after=40",
+        )
+        .opt("retry", Some("0"), "client retries per op (reconnect + replay)")
+        .opt("restarts", Some("0"), "worker restarts tolerated (checkpoint-based)")
+        .opt("checkpoint-dir", None, "directory for restart checkpoints")
+        .opt("barrier-timeout-ms", None, "sync-barrier wait before retryable error")
         .flag("sync", "synchronous SGD (default async)");
     let p = spec.parse(argv)?;
+    let fault_plan = match p.get("fault-plan") {
+        Some(spec) => Some(crate::net::fault::FaultPlan::parse(spec)?),
+        None => None,
+    };
+    let retry = p.usize("retry");
+    // A fault plan without retries would fail on the first injected
+    // drop; give it a sensible recovery budget unless overridden.
+    let retry = if fault_plan.is_some() && retry == 0 { 8 } else { retry };
     let cfg = distributed::DistConfig {
         grad_artifact: p.str("artifact"),
         n_workers: p.usize("workers"),
@@ -282,6 +300,18 @@ fn cmd_train_dist(argv: &[String]) -> Result<(), String> {
         sync: p.flag("sync"),
         seed: 1,
         codec: CodecKind::parse(&p.str("codec"))?,
+        fault_plan,
+        retry,
+        max_worker_restarts: p.usize("restarts"),
+        checkpoint_dir: p.get("checkpoint-dir").map(PathBuf::from),
+        barrier_timeout_ms: match p.get("barrier-timeout-ms") {
+            Some(v) => Some(
+                v.parse::<u64>()
+                    .map_err(|e| format!("bad barrier-timeout-ms {v:?}: {e}"))?,
+            ),
+            None => None,
+        },
+        straggler_factor: 2.0,
     };
     let report = distributed::run_distributed(&PathBuf::from(p.str("artifacts")), &cfg)?;
     println!(
@@ -310,6 +340,21 @@ fn cmd_train_dist(argv: &[String]) -> Result<(), String> {
         report.push_wire_bytes as f64 / 1e6,
         cfg.codec.name()
     );
+    if cfg.fault_plan.is_some() || report.worker_restarts.iter().any(|&r| r > 0) {
+        println!(
+            "fault recovery: restarts per worker {:?} (chaos plan {})",
+            report.worker_restarts,
+            if cfg.fault_plan.is_some() { "active" } else { "off" }
+        );
+    }
+    if report.stragglers.is_empty() {
+        println!("stragglers: none (mean step s per worker: {:?})", report.worker_step_s);
+    } else {
+        println!(
+            "stragglers: workers {:?} exceed {}x the median step time ({:?} s)",
+            report.stragglers, cfg.straggler_factor, report.worker_step_s
+        );
+    }
     Ok(())
 }
 

@@ -6,9 +6,32 @@
 //! routing, barriers), not a simulation; only the machines are folded
 //! into one process. `--role ps|worker` in the CLI runs the same code
 //! across real machines.
+//!
+//! # Fault tolerance
+//!
+//! Real clusters have stragglers, dropped frames and dying workers —
+//! Keuper & Pfreundt (1609.06870) show these tail effects dominate
+//! practical scalability. This module adds:
+//! * **Chaos wiring** — an optional [`FaultPlan`] wraps every worker
+//!   connection in a seeded [`net::fault::FaultyTransport`], and the
+//!   client retries through reconnects (`DistConfig::retry`).
+//! * **Supervised workers** — [`run_workers_with_restart`] respawns a
+//!   failed worker from its last committed step (tracked by a progress
+//!   counter), snapshotting server-side parameters to a
+//!   [`Checkpoint`] first; the replacement's push seqs are namespaced
+//!   by incarnation so the servers deduplicate anything its previous
+//!   life already delivered.
+//! * **Straggler detection** — [`detect_stragglers`] flags workers
+//!   whose mean step time exceeds a factor of the fleet median (the
+//!   injected-latency scenario in `tests/chaos.rs` drives it).
 
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
 use std::thread;
 
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::net::fault::{FaultLog, FaultPlan};
 use crate::net::transport::{connect, Transport};
 use crate::ps::client::PsClient;
 use crate::ps::compress::CodecKind;
@@ -33,6 +56,21 @@ pub struct DistConfig {
     pub seed: u64,
     /// Gradient codec for worker pushes (§1.1.1 traffic compression).
     pub codec: CodecKind,
+    /// Seeded chaos schedule applied to every worker connection
+    /// (`None` = clean network).
+    pub fault_plan: Option<FaultPlan>,
+    /// Client-side extra attempts per op (reconnect + replay).
+    pub retry: usize,
+    /// Worker restarts tolerated before the run fails.
+    pub max_worker_restarts: usize,
+    /// Where restart checkpoints land (`None` = restart without
+    /// writing a snapshot; parameters live on the servers either way).
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Override the servers' sync-barrier timeout (milliseconds).
+    pub barrier_timeout_ms: Option<u64>,
+    /// A worker is a straggler when its mean step time exceeds this
+    /// factor times the fleet median.
+    pub straggler_factor: f64,
 }
 
 impl Default for DistConfig {
@@ -47,6 +85,12 @@ impl Default for DistConfig {
             sync: false,
             seed: 1,
             codec: CodecKind::None,
+            fault_plan: None,
+            retry: 0,
+            max_worker_restarts: 0,
+            checkpoint_dir: None,
+            barrier_timeout_ms: None,
+            straggler_factor: 2.0,
         }
     }
 }
@@ -54,7 +98,8 @@ impl Default for DistConfig {
 /// Aggregate outcome.
 #[derive(Debug)]
 pub struct DistReport {
-    /// Per-worker loss traces.
+    /// Per-worker loss traces (a restarted worker reports its final
+    /// incarnation's trace).
     pub worker_losses: Vec<Vec<f32>>,
     /// Per-worker mean R_O (Lemma 3.1 input measured in vivo).
     pub worker_r_o: Vec<f64>,
@@ -68,6 +113,171 @@ pub struct DistReport {
     /// Encoded push-body bytes summed over all workers — the measured
     /// wire traffic the codec saved (or not) vs dense pushes.
     pub push_wire_bytes: u64,
+    /// Per-worker mean seconds per step (final incarnation).
+    pub worker_step_s: Vec<f64>,
+    /// Workers flagged by [`detect_stragglers`].
+    pub stragglers: Vec<usize>,
+    /// Restarts each worker needed.
+    pub worker_restarts: Vec<u64>,
+}
+
+/// Deterministic connection id for fault seeding: packs worker, server,
+/// incarnation and reconnect attempt so every connection of a chaos run
+/// draws an independent — and replayable — fault stream.
+pub fn conn_id(worker: usize, server: usize, incarnation: u64, attempt: u64) -> u64 {
+    ((worker as u64 & 0xFF_FFFF) << 40)
+        | ((server as u64 & 0xFFF) << 28)
+        | ((incarnation & 0xFFF) << 16)
+        | (attempt & 0xFFFF)
+}
+
+/// Flag workers whose mean step time exceeds `factor` × the fleet
+/// median — §1.1.2's tail problem: in sync mode one slow worker drags
+/// every barrier, in async mode it starves its shard of updates.
+/// Returns worker indices, ascending. Needs ≥ 2 workers (a fleet of one
+/// has no peers to lag).
+pub fn detect_stragglers(mean_step_s: &[f64], factor: f64) -> Vec<usize> {
+    if mean_step_s.len() < 2 {
+        return Vec::new();
+    }
+    let mut sorted: Vec<f64> = mean_step_s.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("step times are finite"));
+    // Lower median: with half the fleet slow, the healthy half still
+    // sets the baseline.
+    let median = sorted[(sorted.len() - 1) / 2];
+    if median <= 0.0 {
+        return Vec::new();
+    }
+    mean_step_s
+        .iter()
+        .enumerate()
+        .filter(|&(_, &m)| m > factor * median)
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// One supervised worker's outcome.
+#[derive(Debug)]
+pub struct SupervisedWorker<T> {
+    /// The final (successful) incarnation's output.
+    pub output: T,
+    /// Restarts this worker needed.
+    pub restarts: u64,
+    /// Steps committed (from the shared progress counter).
+    pub completed_steps: usize,
+    /// Wall seconds from first spawn to final success (restarts
+    /// included).
+    pub wall_s: f64,
+}
+
+fn spawn_supervised<T, B>(
+    body: &Arc<B>,
+    tx: &mpsc::Sender<(usize, Result<T, String>)>,
+    progress: &Arc<AtomicUsize>,
+    worker: usize,
+    start_step: usize,
+    incarnation: u64,
+) -> thread::JoinHandle<()>
+where
+    T: Send + 'static,
+    B: Fn(usize, usize, u64, &AtomicUsize) -> Result<T, String> + Send + Sync + 'static,
+{
+    let body = Arc::clone(body);
+    let tx = tx.clone();
+    let progress = Arc::clone(progress);
+    thread::spawn(move || {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            (*body)(worker, start_step, incarnation, &progress)
+        }))
+        .unwrap_or_else(|_| Err(format!("worker {worker} panicked")));
+        let _ = tx.send((worker, result));
+    })
+}
+
+/// Run `n_workers` worker bodies under restart supervision.
+///
+/// `body(worker, start_step, incarnation, progress)` runs the worker's
+/// steps from `start_step`, advancing `progress` after each committed
+/// step. When a body returns `Err` (or panics) and the worker has
+/// restarts left, `on_restart(worker, resume_step, next_incarnation)`
+/// runs on the supervisor thread — the checkpoint hook — and a
+/// replacement spawns with `start_step = resume_step`. A worker that
+/// exhausts `max_restarts` fails the whole run (remaining workers are
+/// left to drain on their own error paths — in sync mode the servers'
+/// bounded barrier wait guarantees they do).
+pub fn run_workers_with_restart<T, B, R>(
+    n_workers: usize,
+    max_restarts: usize,
+    body: Arc<B>,
+    mut on_restart: R,
+) -> Result<Vec<SupervisedWorker<T>>, String>
+where
+    T: Send + 'static,
+    B: Fn(usize, usize, u64, &AtomicUsize) -> Result<T, String> + Send + Sync + 'static,
+    R: FnMut(usize, usize, u64) -> Result<(), String>,
+{
+    let progress: Vec<Arc<AtomicUsize>> =
+        (0..n_workers).map(|_| Arc::new(AtomicUsize::new(0))).collect();
+    let (tx, rx) = mpsc::channel::<(usize, Result<T, String>)>();
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for w in 0..n_workers {
+        handles.push(spawn_supervised(&body, &tx, &progress[w], w, 0, 0));
+    }
+    let mut restarts = vec![0u64; n_workers];
+    let mut outputs: Vec<Option<T>> = (0..n_workers).map(|_| None).collect();
+    let mut walls = vec![0.0f64; n_workers];
+    let mut done = 0usize;
+    while done < n_workers {
+        let (w, result) = rx.recv().map_err(|_| "supervisor channel closed".to_string())?;
+        match result {
+            Ok(out) => {
+                outputs[w] = Some(out);
+                walls[w] = t0.elapsed().as_secs_f64();
+                done += 1;
+            }
+            Err(e) => {
+                if restarts[w] >= max_restarts as u64 {
+                    return Err(format!(
+                        "worker {w} failed permanently after {} restarts: {e}",
+                        restarts[w]
+                    ));
+                }
+                restarts[w] += 1;
+                let resume = progress[w].load(Ordering::SeqCst);
+                crate::warn_log!(
+                    "coordinator",
+                    "worker failed; restarting",
+                    worker = w,
+                    resume_step = resume,
+                    incarnation = restarts[w],
+                    err = e
+                );
+                on_restart(w, resume, restarts[w])
+                    .map_err(|ce| format!("restart hook for worker {w} failed: {ce}"))?;
+                handles.push(spawn_supervised(&body, &tx, &progress[w], w, resume, restarts[w]));
+            }
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok((0..n_workers)
+        .map(|w| SupervisedWorker {
+            output: outputs[w].take().expect("every worker finished"),
+            restarts: restarts[w],
+            completed_steps: progress[w].load(Ordering::SeqCst),
+            wall_s: walls[w],
+        })
+        .collect())
+}
+
+/// What one distributed worker's body hands back to the coordinator.
+struct WorkerRun {
+    losses: Vec<f32>,
+    r_o: f64,
+    wire_bytes: u64,
+    mean_step_s: f64,
 }
 
 /// Spawn servers + workers, train, tear down.
@@ -80,6 +290,7 @@ pub fn run_distributed(artifacts_dir: &std::path::Path, cfg: &DistConfig) -> Res
     }
     let manifest = index.manifest(&meta.family)?;
     let init = manifest.load_init()?;
+    let param_names: Vec<String> = manifest.params.iter().map(|p| p.name.clone()).collect();
     let router = Router::new(&manifest.byte_sizes(), cfg.n_servers);
 
     // --- parameter servers -------------------------------------------
@@ -101,28 +312,68 @@ pub fn run_distributed(artifacts_dir: &std::path::Path, cfg: &DistConfig) -> Res
         }
         servers.push(PsServerHandle::spawn_tcp("127.0.0.1:0", store, mode)?);
     }
+    if let Some(ms) = cfg.barrier_timeout_ms {
+        for s in &servers {
+            s.shared.set_barrier_timeout(std::time::Duration::from_millis(ms));
+        }
+    }
     let addrs: Vec<std::net::SocketAddr> = servers.iter().map(|s| s.addr).collect();
 
     // --- workers -------------------------------------------------------
     let t0 = std::time::Instant::now();
-    let mut handles = Vec::new();
-    for w in 0..cfg.n_workers {
+    let fault_log = FaultLog::new();
+    let body = {
         let addrs = addrs.clone();
         let router = router.clone();
         let cfg = cfg.clone();
         let dir = artifacts_dir.to_path_buf();
-        handles.push(thread::spawn(move || -> Result<(Vec<f32>, f64, u64), String> {
+        let fault_log = fault_log.clone();
+        Arc::new(move |w: usize,
+                       start_step: usize,
+                       incarnation: u64,
+                       progress: &AtomicUsize|
+              -> Result<WorkerRun, String> {
             // Each worker owns a full runtime (mirrors a real machine).
             let rt = Runtime::new(&dir)?;
             let exe = rt.load(&cfg.grad_artifact)?;
-            let transports: Vec<Box<dyn Transport>> = addrs
-                .iter()
-                .map(|a| connect(a).map(|t| Box::new(t) as Box<dyn Transport>))
+            // Every (re)connection gets a deterministic fault stream.
+            let connect_to = {
+                let addrs = addrs.clone();
+                let plan = cfg.fault_plan.clone();
+                let log = fault_log.clone();
+                move |s: usize, attempt: u64| -> Result<Box<dyn Transport>, String> {
+                    let t = connect(addrs[s])?;
+                    Ok(match &plan {
+                        Some(p) if !p.is_noop() => Box::new(p.wrap(
+                            conn_id(w, s, incarnation, attempt),
+                            log.clone(),
+                            Box::new(t),
+                        )) as Box<dyn Transport>,
+                        _ => Box::new(t) as Box<dyn Transport>,
+                    })
+                }
+            };
+            let transports: Vec<Box<dyn Transport>> = (0..addrs.len())
+                .map(|s| connect_to(s, 0))
                 .collect::<Result<_, _>>()?;
-            let mut client = PsClient::new(w as u32, transports, router);
+            let mut client = PsClient::with_codec(w as u32, transports, router.clone(), cfg.codec);
+            // Replacement incarnations namespace their seqs above every
+            // frame the dead one could have sent, so server dedup keeps
+            // working across restarts.
+            client.set_seq_base(incarnation << 32);
+            client.set_retry_limit(cfg.retry);
+            {
+                let connect_to = connect_to.clone();
+                let mut attempts = vec![0u64; addrs.len()];
+                client.set_reconnect(Box::new(move |s| {
+                    attempts[s] += 1;
+                    connect_to(s, attempts[s])
+                }));
+            }
             let pcfg = PipelineConfig {
                 lr: cfg.lr,
                 steps: cfg.steps_per_worker,
+                start_step,
                 prefetch_depth: 2,
                 log_every: 0,
                 codec: cfg.codec,
@@ -132,21 +383,56 @@ pub fn run_distributed(artifacts_dir: &std::path::Path, cfg: &DistConfig) -> Res
                 &exe.meta.family,
                 cfg.seed ^ (w as u64 + 1).wrapping_mul(0x9E37_79B9),
             );
-            let stats = run_ps_worker(&exe, &mut client, batcher, &pcfg, cfg.sync)?;
-            Ok((stats.losses, stats.profiler.r_o(), stats.push_wire_bytes))
-        }));
-    }
+            let stats = run_ps_worker(&exe, &mut client, batcher, &pcfg, cfg.sync, Some(progress))?;
+            let steps_run = cfg.steps_per_worker.saturating_sub(start_step).max(1);
+            Ok(WorkerRun {
+                losses: stats.losses,
+                r_o: stats.profiler.r_o(),
+                wire_bytes: stats.push_wire_bytes,
+                mean_step_s: stats.wall_s / steps_run as f64,
+            })
+        })
+    };
+
+    // Restart hook: snapshot server-side parameters (with the resume
+    // step) before the replacement spawns — checkpoint-based restart.
+    let on_restart = |w: usize, resume: usize, incarnation: u64| -> Result<(), String> {
+        let Some(ck_dir) = &cfg.checkpoint_dir else { return Ok(()) };
+        let transports: Vec<Box<dyn Transport>> = addrs
+            .iter()
+            .map(|a| connect(a).map(|t| Box::new(t) as Box<dyn Transport>))
+            .collect::<Result<_, _>>()?;
+        let mut control = PsClient::new(u32::MAX, transports, router.clone());
+        let params = control.pull_all()?;
+        let ck = Checkpoint::new(resume as u64, &param_names, &params);
+        ck.save(&ck_dir.join(format!("worker{w}_restart{incarnation}.ckpt")))
+    };
+
+    let outcomes =
+        run_workers_with_restart(cfg.n_workers, cfg.max_worker_restarts, body, on_restart)?;
+    let wall_s = t0.elapsed().as_secs_f64();
 
     let mut worker_losses = Vec::new();
     let mut worker_r_o = Vec::new();
+    let mut worker_step_s = Vec::new();
+    let mut worker_restarts = Vec::new();
     let mut push_wire_bytes = 0u64;
-    for h in handles {
-        let (losses, r_o, wire) = h.join().map_err(|_| "worker panicked".to_string())??;
-        worker_losses.push(losses);
-        worker_r_o.push(r_o);
-        push_wire_bytes += wire;
+    for o in &outcomes {
+        worker_losses.push(o.output.losses.clone());
+        worker_r_o.push(o.output.r_o);
+        worker_step_s.push(o.output.mean_step_s);
+        worker_restarts.push(o.restarts);
+        push_wire_bytes += o.output.wire_bytes;
     }
-    let wall_s = t0.elapsed().as_secs_f64();
+    let stragglers = detect_stragglers(&worker_step_s, cfg.straggler_factor);
+    for &w in &stragglers {
+        crate::warn_log!(
+            "coordinator",
+            "straggler detected",
+            worker = w,
+            mean_step_s = format!("{:.4}", worker_step_s[w])
+        );
+    }
 
     // --- final state ----------------------------------------------------
     let transports: Vec<Box<dyn Transport>> = addrs
@@ -170,6 +456,9 @@ pub fn run_distributed(artifacts_dir: &std::path::Path, cfg: &DistConfig) -> Res
         ps_stats,
         router_imbalance: router.imbalance(),
         push_wire_bytes,
+        worker_step_s,
+        stragglers,
+        worker_restarts,
     })
 }
 
@@ -177,10 +466,85 @@ pub fn run_distributed(artifacts_dir: &std::path::Path, cfg: &DistConfig) -> Res
 mod tests {
     use super::*;
     use std::path::PathBuf;
+    use std::sync::Mutex;
 
     fn artifacts_dir() -> Option<PathBuf> {
         let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         dir.join("index.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn detect_stragglers_flags_tail_workers() {
+        // One worker 4x slower than the median is flagged at factor 2.
+        assert_eq!(detect_stragglers(&[0.1, 0.1, 0.4, 0.1], 2.0), vec![2]);
+        // A homogeneous fleet has no stragglers.
+        assert!(detect_stragglers(&[0.1, 0.1, 0.1], 2.0).is_empty());
+        // Borderline (exactly factor x median) is NOT a straggler.
+        assert!(detect_stragglers(&[0.1, 0.2], 2.0).is_empty());
+        // Degenerate fleets.
+        assert!(detect_stragglers(&[], 2.0).is_empty());
+        assert!(detect_stragglers(&[9.0], 2.0).is_empty());
+        assert!(detect_stragglers(&[0.0, 0.0], 2.0).is_empty());
+        // Two of four slow.
+        assert_eq!(detect_stragglers(&[0.1, 0.5, 0.6, 0.1], 2.0), vec![1, 2]);
+    }
+
+    #[test]
+    fn supervisor_restarts_failed_worker_from_progress() {
+        // Worker 1's first incarnation dies after committing 3 steps;
+        // the replacement resumes at step 3 and finishes. Worker 0 is
+        // clean. (PJRT-free: the body is synthetic.)
+        let body = Arc::new(
+            |w: usize, start_step: usize, incarnation: u64, progress: &AtomicUsize| {
+                let total = 6usize;
+                for step in start_step..total {
+                    if w == 1 && incarnation == 0 && step == 3 {
+                        return Err("synthetic mid-step death".into());
+                    }
+                    progress.store(step + 1, Ordering::SeqCst);
+                }
+                Ok((w, start_step, incarnation))
+            },
+        );
+        let restarts_seen = Arc::new(Mutex::new(Vec::new()));
+        let seen = restarts_seen.clone();
+        let outcomes = run_workers_with_restart(2, 1, body, move |w, resume, inc| {
+            seen.lock().unwrap().push((w, resume, inc));
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(*restarts_seen.lock().unwrap(), vec![(1, 3, 1)]);
+        assert_eq!(outcomes[0].restarts, 0);
+        assert_eq!(outcomes[0].completed_steps, 6);
+        assert_eq!(outcomes[0].output, (0, 0, 0));
+        assert_eq!(outcomes[1].restarts, 1);
+        assert_eq!(outcomes[1].completed_steps, 6);
+        // The surviving output came from incarnation 1 resuming at 3.
+        assert_eq!(outcomes[1].output, (1, 3, 1));
+    }
+
+    #[test]
+    fn supervisor_gives_up_after_max_restarts() {
+        let body = Arc::new(|_w: usize, _s: usize, _i: u64, _p: &AtomicUsize| {
+            Err::<(), String>("always dies".into())
+        });
+        let err = run_workers_with_restart(1, 2, body, |_, _, _| Ok(())).unwrap_err();
+        assert!(err.contains("failed permanently after 2 restarts"), "{err}");
+    }
+
+    #[test]
+    fn supervisor_catches_panics_as_failures() {
+        // A panicking body is a failure, not a supervisor hang.
+        let body = Arc::new(|_w: usize, start: usize, inc: u64, p: &AtomicUsize| {
+            if inc == 0 {
+                panic!("synthetic panic");
+            }
+            p.store(start.max(1), Ordering::SeqCst);
+            Ok(inc)
+        });
+        let outcomes = run_workers_with_restart(1, 1, body, |_, _, _| Ok(())).unwrap();
+        assert_eq!(outcomes[0].output, 1);
+        assert_eq!(outcomes[0].restarts, 1);
     }
 
     #[test]
@@ -217,6 +581,8 @@ mod tests {
         // load-balancing subgoal is limited by tensor granularity).
         assert!(report.router_imbalance < 1.7, "{}", report.router_imbalance);
         assert!(!report.final_params.is_empty());
+        assert_eq!(report.worker_restarts, vec![0, 0]);
+        assert_eq!(report.worker_step_s.len(), 2);
     }
 
     #[test]
@@ -265,5 +631,30 @@ mod tests {
         // updates count = steps * n_keys (one aggregated apply per step).
         let (_, _, updates) = report.ps_stats;
         assert_eq!(updates, 3 * 10);
+    }
+
+    #[test]
+    fn chaos_run_with_drops_still_trains() {
+        // The PJRT-gated twin of tests/chaos.rs: 5% drops + retries on a
+        // real artifact run end-to-end through run_distributed.
+        let Some(dir) = artifacts_dir() else { return };
+        let cfg = DistConfig {
+            n_workers: 2,
+            n_servers: 2,
+            steps_per_worker: 3,
+            lr: 0.01,
+            fault_plan: Some(FaultPlan {
+                seed: 11,
+                drop_send: 0.05,
+                drop_recv: 0.05,
+                ..Default::default()
+            }),
+            retry: 8,
+            ..Default::default()
+        };
+        let report = run_distributed(&dir, &cfg).unwrap();
+        for losses in &report.worker_losses {
+            assert!(losses.iter().all(|l| l.is_finite()), "{losses:?}");
+        }
     }
 }

@@ -1,0 +1,531 @@
+//! Deterministic fault injection for transports.
+//!
+//! [`FaultyTransport`] wraps any [`Transport`] (in-proc or TCP) and
+//! injects failures — dropped, duplicated and truncated frames, added
+//! latency, forced disconnects — according to a seeded [`FaultPlan`].
+//! Every decision draws from a per-connection [`Rng`] stream forked
+//! from `(plan.seed, conn)`, so a failing run replays *exactly* from
+//! its seed: same ops fault, same frames truncate at the same byte,
+//! same connection dies at the same op. Injected faults are recorded in
+//! a shared [`FaultLog`] so chaos tests can assert bit-reproducibility
+//! of the failure schedule itself.
+//!
+//! Fault semantics (client-side wrapper; the PS protocol is strictly
+//! request/reply from the worker's perspective):
+//! * **drop (send)** — the request frame vanishes; the *next* `recv`
+//!   on this connection returns an injected error (modeling the reply
+//!   timeout a real client would hit), so callers retry instead of
+//!   blocking forever.
+//! * **drop (recv)** — a reply frame is received and discarded; `recv`
+//!   returns an injected error. The retry layer re-sends the request,
+//!   which the server must deduplicate (the `(worker, step, seq)` tag).
+//! * **dup (send)** — the request frame is sent twice. The wrapper
+//!   swallows the extra reply on a later `recv`, keeping request/reply
+//!   pairing in sync; the *server* must apply the duplicate
+//!   idempotently.
+//! * **trunc (send)** — a strict prefix of the frame is sent. The peer
+//!   fails to decode and drops the connection (both transports surface
+//!   this as errors, never hangs), exercising reconnect paths.
+//! * **latency** — the op sleeps a seeded duration first (straggler
+//!   injection; the schedule is deterministic even though wall time is
+//!   not).
+//! * **disconnect** — after `disconnect_after` ops every call on this
+//!   connection errors (a dead peer / severed link).
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::codec::Writer;
+use super::message::Message;
+use super::transport::Transport;
+use crate::util::rng::Rng;
+
+/// Prefix on every injected-fault error string, so retry layers and
+/// tests can tell injected faults from real protocol errors.
+pub const INJECTED: &str = "injected fault";
+
+/// What a [`FaultyTransport`] did to one op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FaultKind {
+    DropSend,
+    DropRecv,
+    DupSend,
+    TruncSend,
+    Disconnect,
+    LatencyMs(u64),
+}
+
+/// One injected fault: connection id, per-connection op index, kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct FaultEvent {
+    pub conn: u64,
+    pub op: u64,
+    pub kind: FaultKind,
+}
+
+/// Shared, thread-safe log of injected faults. Cloning shares the log.
+#[derive(Debug, Clone, Default)]
+pub struct FaultLog(Arc<Mutex<Vec<FaultEvent>>>);
+
+impl FaultLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn record(&self, conn: u64, op: u64, kind: FaultKind) {
+        self.0.lock().unwrap().push(FaultEvent { conn, op, kind });
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events sorted by `(conn, op, kind)` — the deterministic view:
+    /// global append order varies with thread scheduling, but the
+    /// per-connection schedules are seeded, so the sorted log of two
+    /// same-seed runs must be identical.
+    pub fn snapshot_sorted(&self) -> Vec<FaultEvent> {
+        let mut v = self.0.lock().unwrap().clone();
+        v.sort_unstable();
+        v
+    }
+}
+
+/// Seeded fault schedule. Probabilities are per-op in `[0, 1]`; the
+/// plan is `Copy`-cheap to clone and is shared by every connection of a
+/// chaos run (each connection forks its own decision stream from
+/// `(seed, conn)`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// P(outgoing frame dropped).
+    pub drop_send: f64,
+    /// P(incoming frame discarded after receipt).
+    pub drop_recv: f64,
+    /// P(outgoing frame duplicated).
+    pub dup_send: f64,
+    /// P(outgoing frame truncated to a strict prefix).
+    pub trunc_send: f64,
+    /// P(an op sleeps first); only meaningful with `latency_ms > 0`.
+    pub latency_prob: f64,
+    /// Upper bound on injected latency per faulted op, milliseconds.
+    pub latency_ms: u64,
+    /// Ops until the connection is severed for good (`None` = never).
+    pub disconnect_after: Option<u64>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 1,
+            drop_send: 0.0,
+            drop_recv: 0.0,
+            dup_send: 0.0,
+            trunc_send: 0.0,
+            latency_prob: 0.0,
+            latency_ms: 0,
+            disconnect_after: None,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// True when the plan injects nothing (wrapping is pointless).
+    pub fn is_noop(&self) -> bool {
+        self.drop_send == 0.0
+            && self.drop_recv == 0.0
+            && self.dup_send == 0.0
+            && self.trunc_send == 0.0
+            && (self.latency_prob == 0.0 || self.latency_ms == 0)
+            && self.disconnect_after.is_none()
+    }
+
+    /// Parse a CLI spec: comma-separated `key=value` pairs. Keys:
+    /// `seed`, `drop`, `recv_drop`, `dup`, `trunc`, `latency_p`,
+    /// `latency_ms`, `disconnect_after`. Example:
+    /// `seed=7,drop=0.05,dup=0.02,latency_ms=3,latency_p=0.5`.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+            let Some((k, v)) = part.split_once('=') else {
+                return Err(format!("fault-plan entry {part:?} is not key=value"));
+            };
+            let (k, v) = (k.trim(), v.trim());
+            let prob = |v: &str| -> Result<f64, String> {
+                let p: f64 = v
+                    .parse()
+                    .map_err(|e| format!("bad fault probability {v:?}: {e}"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(format!("fault probability {p} outside [0, 1]"));
+                }
+                Ok(p)
+            };
+            match k {
+                "seed" => plan.seed = v.parse().map_err(|e| format!("bad seed {v:?}: {e}"))?,
+                "drop" => plan.drop_send = prob(v)?,
+                "recv_drop" => plan.drop_recv = prob(v)?,
+                "dup" => plan.dup_send = prob(v)?,
+                "trunc" => plan.trunc_send = prob(v)?,
+                "latency_p" => plan.latency_prob = prob(v)?,
+                "latency_ms" => {
+                    plan.latency_ms = v.parse().map_err(|e| format!("bad latency_ms {v:?}: {e}"))?
+                }
+                "disconnect_after" => {
+                    plan.disconnect_after =
+                        Some(v.parse().map_err(|e| format!("bad disconnect_after {v:?}: {e}"))?)
+                }
+                other => {
+                    return Err(format!(
+                        "unknown fault-plan key {other:?} \
+                         (seed|drop|recv_drop|dup|trunc|latency_p|latency_ms|disconnect_after)"
+                    ))
+                }
+            }
+        }
+        if plan.latency_prob > 0.0 && plan.latency_ms == 0 {
+            plan.latency_ms = 1;
+        }
+        Ok(plan)
+    }
+
+    /// Wrap a transport. `conn` must be assigned deterministically by
+    /// the caller (e.g. packed from worker id, server index, incarnation
+    /// and reconnect attempt) — it seeds this connection's decision
+    /// stream, so the same `(plan.seed, conn)` always replays the same
+    /// faults.
+    pub fn wrap(&self, conn: u64, log: FaultLog, inner: Box<dyn Transport>) -> FaultyTransport {
+        FaultyTransport {
+            inner,
+            plan: self.clone(),
+            rng: Rng::new(self.seed).fork(conn),
+            conn,
+            op: 0,
+            scratch: Writer::with_capacity(256),
+            pending_recv_error: None,
+            extra_replies: 0,
+            disconnected: false,
+            log,
+        }
+    }
+}
+
+/// A [`Transport`] that injects seeded faults around an inner one.
+pub struct FaultyTransport {
+    inner: Box<dyn Transport>,
+    plan: FaultPlan,
+    rng: Rng,
+    conn: u64,
+    /// Ops (send or recv calls) performed on this connection.
+    op: u64,
+    /// Reusable encode buffer: frames are staged here so drops,
+    /// truncations and duplications act on the exact encoded bytes.
+    scratch: Writer,
+    /// Set when a send was dropped: the next recv fails (the "reply
+    /// timeout" a real client would hit).
+    pending_recv_error: Option<String>,
+    /// Replies owed by duplicated requests, swallowed before the next
+    /// real reply so request/reply pairing stays in sync.
+    extra_replies: u32,
+    disconnected: bool,
+    log: FaultLog,
+}
+
+impl FaultyTransport {
+    pub fn conn(&self) -> u64 {
+        self.conn
+    }
+
+    pub fn op_count(&self) -> u64 {
+        self.op
+    }
+
+    fn roll(&mut self, p: f64) -> bool {
+        p > 0.0 && self.rng.next_f64() < p
+    }
+
+    /// Common per-op bookkeeping: disconnect schedule, then latency.
+    fn begin_op(&mut self) -> Result<(), String> {
+        if self.disconnected {
+            return Err(format!("{INJECTED}: connection severed"));
+        }
+        self.op += 1;
+        if let Some(n) = self.plan.disconnect_after {
+            if self.op > n {
+                self.disconnected = true;
+                self.log.record(self.conn, self.op, FaultKind::Disconnect);
+                return Err(format!("{INJECTED}: connection severed at op {}", self.op));
+            }
+        }
+        let (p, cap) = (self.plan.latency_prob, self.plan.latency_ms);
+        if cap > 0 && self.roll(p) {
+            let ms = self.rng.below(cap) + 1;
+            self.log.record(self.conn, self.op, FaultKind::LatencyMs(ms));
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        Ok(())
+    }
+
+    fn faulty_send(&mut self, encode: &mut dyn FnMut(&mut Writer)) -> Result<(), String> {
+        self.begin_op()?;
+        let (drop_p, trunc_p, dup_p) =
+            (self.plan.drop_send, self.plan.trunc_send, self.plan.dup_send);
+        if self.roll(drop_p) {
+            self.log.record(self.conn, self.op, FaultKind::DropSend);
+            self.pending_recv_error = Some(format!("{INJECTED}: request frame dropped"));
+            return Ok(());
+        }
+        self.scratch.clear();
+        encode(&mut self.scratch);
+        let trunc = if self.scratch.len() > 1 && self.roll(trunc_p) {
+            Some(1 + self.rng.below(self.scratch.len() as u64 - 1) as usize)
+        } else {
+            None
+        };
+        let dup = trunc.is_none() && self.roll(dup_p);
+        if trunc.is_some() {
+            self.log.record(self.conn, self.op, FaultKind::TruncSend);
+        } else if dup {
+            self.log.record(self.conn, self.op, FaultKind::DupSend);
+        }
+        let FaultyTransport { inner, scratch, extra_replies, .. } = self;
+        let bytes = scratch.as_bytes();
+        if let Some(cut) = trunc {
+            // A strict prefix: the peer's decode fails and it drops the
+            // connection, which the next op here surfaces as an error.
+            return inner.send_with(&mut |w| w.raw(&bytes[..cut]));
+        }
+        if dup {
+            inner.send_with(&mut |w| w.raw(bytes))?;
+            *extra_replies += 1;
+        }
+        inner.send_with(&mut |w| w.raw(bytes))
+    }
+
+    fn faulty_recv(
+        &mut self,
+        decode: &mut dyn FnMut(&[u8]) -> Result<(), String>,
+    ) -> Result<(), String> {
+        self.begin_op()?;
+        if let Some(e) = self.pending_recv_error.take() {
+            return Err(e);
+        }
+        // Replies owed to duplicated requests come first on the wire —
+        // swallow them so the caller sees one reply per request.
+        while self.extra_replies > 0 {
+            self.extra_replies -= 1;
+            self.inner.recv_with(&mut |_| Ok(()))?;
+        }
+        let p = self.plan.drop_recv;
+        if self.roll(p) {
+            self.log.record(self.conn, self.op, FaultKind::DropRecv);
+            self.inner.recv_with(&mut |_| Ok(()))?;
+            return Err(format!("{INJECTED}: reply frame dropped"));
+        }
+        self.inner.recv_with(decode)
+    }
+}
+
+impl Transport for FaultyTransport {
+    fn send(&mut self, msg: &Message) -> Result<(), String> {
+        self.faulty_send(&mut |w| msg.encode_into(w))
+    }
+
+    fn recv(&mut self) -> Result<Message, String> {
+        let mut msg = None;
+        self.faulty_recv(&mut |frame| {
+            msg = Some(Message::decode(frame)?);
+            Ok(())
+        })?;
+        msg.ok_or_else(|| "recv_with yielded no frame".to_string())
+    }
+
+    fn send_with(&mut self, encode: &mut dyn FnMut(&mut Writer)) -> Result<(), String> {
+        self.faulty_send(encode)
+    }
+
+    fn recv_with(
+        &mut self,
+        decode: &mut dyn FnMut(&[u8]) -> Result<(), String>,
+    ) -> Result<(), String> {
+        self.faulty_recv(decode)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::transport::InProcTransport;
+    use std::thread;
+
+    fn wrapped(plan: &FaultPlan, conn: u64) -> (FaultyTransport, InProcTransport, FaultLog) {
+        let log = FaultLog::new();
+        let (a, b) = InProcTransport::pair();
+        (plan.wrap(conn, log.clone(), Box::new(a)), b, log)
+    }
+
+    #[test]
+    fn parse_spec_roundtrip() {
+        let p = FaultPlan::parse(
+            "seed=7,drop=0.05,recv_drop=0.01,dup=0.02,trunc=0.03,latency_p=0.5,latency_ms=3,disconnect_after=40",
+        )
+        .unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.drop_send, 0.05);
+        assert_eq!(p.drop_recv, 0.01);
+        assert_eq!(p.dup_send, 0.02);
+        assert_eq!(p.trunc_send, 0.03);
+        assert_eq!(p.latency_prob, 0.5);
+        assert_eq!(p.latency_ms, 3);
+        assert_eq!(p.disconnect_after, Some(40));
+        assert!(!p.is_noop());
+        assert!(FaultPlan::parse("").unwrap().is_noop());
+        assert!(FaultPlan::parse("seed=3").unwrap().is_noop());
+        assert!(FaultPlan::parse("drop=1.5").is_err());
+        assert!(FaultPlan::parse("bogus=1").is_err());
+        assert!(FaultPlan::parse("drop").is_err());
+        // latency_p without latency_ms implies a 1 ms cap.
+        assert_eq!(FaultPlan::parse("latency_p=1").unwrap().latency_ms, 1);
+    }
+
+    #[test]
+    fn noop_plan_passes_frames_through() {
+        let (mut a, mut b, log) = wrapped(&FaultPlan::default(), 0);
+        a.send(&Message::Stats).unwrap();
+        assert_eq!(b.recv().unwrap(), Message::Stats);
+        b.send(&Message::PushAck { clock: 3 }).unwrap();
+        assert_eq!(a.recv().unwrap(), Message::PushAck { clock: 3 });
+        assert!(log.is_empty());
+        assert_eq!(a.op_count(), 2);
+    }
+
+    #[test]
+    fn dropped_send_fails_next_recv() {
+        let plan = FaultPlan { drop_send: 1.0, ..Default::default() };
+        let (mut a, mut b, log) = wrapped(&plan, 1);
+        a.send(&Message::Stats).unwrap(); // silently dropped
+        let err = a.recv().unwrap_err();
+        assert!(err.contains(INJECTED), "{err}");
+        assert_eq!(log.len(), 1);
+        assert_eq!(log.snapshot_sorted()[0].kind, FaultKind::DropSend);
+        // Nothing ever reached the peer.
+        drop(a);
+        assert!(b.recv().is_err());
+    }
+
+    #[test]
+    fn dropped_recv_consumes_and_errors() {
+        let plan = FaultPlan { drop_recv: 1.0, ..Default::default() };
+        let (mut a, mut b, log) = wrapped(&plan, 2);
+        b.send(&Message::PushAck { clock: 1 }).unwrap();
+        let err = a.recv().unwrap_err();
+        assert!(err.contains("reply frame dropped"), "{err}");
+        assert_eq!(log.snapshot_sorted()[0].kind, FaultKind::DropRecv);
+    }
+
+    #[test]
+    fn duplicated_request_reply_stays_in_sync() {
+        // Echo peer: replies PushAck{clock = frames seen} per frame.
+        let plan = FaultPlan { dup_send: 1.0, ..Default::default() };
+        let (mut a, mut b, log) = wrapped(&plan, 3);
+        let peer = thread::spawn(move || {
+            let mut clock = 0;
+            while b.recv().is_ok() {
+                clock += 1;
+                if b.send(&Message::PushAck { clock }).is_err() {
+                    break;
+                }
+            }
+            clock
+        });
+        // Two request/reply rounds; each request is duplicated, yet the
+        // client sees exactly one (the latest pending) reply per round.
+        a.send(&Message::Stats).unwrap();
+        assert!(matches!(a.recv().unwrap(), Message::PushAck { .. }));
+        a.send(&Message::Stats).unwrap();
+        assert!(matches!(a.recv().unwrap(), Message::PushAck { .. }));
+        drop(a);
+        let frames_seen = peer.join().unwrap();
+        assert_eq!(frames_seen, 4, "peer must have seen each request twice");
+        assert_eq!(
+            log.snapshot_sorted().iter().filter(|e| e.kind == FaultKind::DupSend).count(),
+            2
+        );
+    }
+
+    #[test]
+    fn truncated_frame_poisons_peer_decode() {
+        let plan = FaultPlan { trunc_send: 1.0, ..Default::default() };
+        let (mut a, mut b, log) = wrapped(&plan, 4);
+        a.send(&Message::Error { what: "long enough body".into() }).unwrap();
+        assert!(b.recv().is_err(), "peer must fail to decode the prefix");
+        assert_eq!(log.snapshot_sorted()[0].kind, FaultKind::TruncSend);
+    }
+
+    #[test]
+    fn disconnect_after_severs_connection() {
+        let plan = FaultPlan { disconnect_after: Some(2), ..Default::default() };
+        let (mut a, mut b, log) = wrapped(&plan, 5);
+        a.send(&Message::Stats).unwrap();
+        b.send(&Message::PushAck { clock: 0 }).unwrap();
+        a.recv().unwrap();
+        let err = a.send(&Message::Stats).unwrap_err();
+        assert!(err.contains("severed"), "{err}");
+        // And it stays severed.
+        assert!(a.recv().is_err());
+        assert_eq!(
+            log.snapshot_sorted().iter().filter(|e| e.kind == FaultKind::Disconnect).count(),
+            1
+        );
+    }
+
+    #[test]
+    fn latency_logged_and_frame_still_delivered() {
+        let plan = FaultPlan { latency_prob: 1.0, latency_ms: 1, ..Default::default() };
+        let (mut a, mut b, log) = wrapped(&plan, 6);
+        a.send(&Message::Stats).unwrap();
+        assert_eq!(b.recv().unwrap(), Message::Stats);
+        assert!(matches!(log.snapshot_sorted()[0].kind, FaultKind::LatencyMs(_)));
+    }
+
+    #[test]
+    fn same_seed_same_conn_replays_identical_faults() {
+        let plan = FaultPlan {
+            seed: 99,
+            drop_send: 0.3,
+            dup_send: 0.3,
+            drop_recv: 0.2,
+            ..Default::default()
+        };
+        let run = || {
+            let (mut a, mut b, log) = wrapped(&plan, 7);
+            // Fixed op script; replies only matter when a recv happens.
+            for _ in 0..30 {
+                let _ = a.send(&Message::Stats);
+                // Feed enough replies that a non-dropped recv never blocks.
+                for _ in 0..3 {
+                    let _ = b.send(&Message::PushAck { clock: 0 });
+                }
+                let _ = a.recv();
+            }
+            log.snapshot_sorted()
+        };
+        let first = run();
+        let second = run();
+        assert!(!first.is_empty(), "plan injected nothing in 60 ops");
+        assert_eq!(first, second, "fault schedule must replay bit-identically");
+        // A different connection id draws a different schedule.
+        let (mut a, mut b, other_log) = wrapped(&plan, 8);
+        for _ in 0..30 {
+            let _ = a.send(&Message::Stats);
+            for _ in 0..3 {
+                let _ = b.send(&Message::PushAck { clock: 0 });
+            }
+            let _ = a.recv();
+        }
+        assert_ne!(first, other_log.snapshot_sorted());
+    }
+}

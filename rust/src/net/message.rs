@@ -18,13 +18,19 @@ pub enum Message {
     /// Server -> worker: requested values with the server's clock.
     PullReply { clock: u64, entries: Vec<(u32, Tensor)> },
     /// Worker -> server: gradients for `entries` (step `step` at worker).
-    Push { worker: u32, step: u64, entries: Vec<(u32, Tensor)> },
+    /// `seq` is the worker's monotone push counter — replayed frames
+    /// (client retries after a fault) carry the same `seq`, so servers
+    /// deduplicate them idempotently. The serve loop decodes these
+    /// frames with the streaming [`wire::PushBody`], never through this
+    /// owned variant.
+    Push { worker: u32, step: u64, seq: u64, entries: Vec<(u32, Tensor)> },
     /// Worker -> server: codec-compressed gradients (§1.1.1's traffic
     /// saver). Each entry is self-describing (sparse or quant8), so no
     /// codec negotiation happens — servers accept any mix per push. The
     /// serve loop decodes these frames with the streaming
     /// [`wire::CompressedPushBody`], never through this owned variant.
-    CompressedPush { worker: u32, step: u64, entries: Vec<(u32, Compressed)> },
+    /// `seq` as in [`Push`](Self::Push).
+    CompressedPush { worker: u32, step: u64, seq: u64, entries: Vec<(u32, Compressed)> },
     /// Server -> worker: push accepted (async mode acks immediately).
     PushAck { clock: u64 },
     /// Worker -> server: enter sync barrier for `step`.
@@ -86,18 +92,15 @@ impl Message {
                     w.tensor(t);
                 }
             }
-            Message::Push { worker, step, entries } => {
-                w.u8(T_PUSH);
-                w.u32(*worker);
-                w.u64(*step);
-                w.u32(entries.len() as u32);
+            Message::Push { worker, step, seq, entries } => {
+                wire::push_header(w, *worker, *step, *seq, entries.len() as u32);
                 for (k, t) in entries {
                     w.u32(*k);
                     w.tensor(t);
                 }
             }
-            Message::CompressedPush { worker, step, entries } => {
-                wire::compressed_push_header(w, *worker, *step, entries.len() as u32);
+            Message::CompressedPush { worker, step, seq, entries } => {
+                wire::compressed_push_header(w, *worker, *step, *seq, entries.len() as u32);
                 for (k, c) in entries {
                     wire::compressed_entry(w, *k, c);
                 }
@@ -156,24 +159,26 @@ impl Message {
             T_PUSH => {
                 let worker = r.u32()?;
                 let step = r.u64()?;
+                let seq = r.u64()?;
                 let n = r.u32()? as usize;
                 let mut entries = Vec::with_capacity(n);
                 for _ in 0..n {
                     let k = r.u32()?;
                     entries.push((k, r.tensor()?));
                 }
-                Message::Push { worker, step, entries }
+                Message::Push { worker, step, seq, entries }
             }
             T_COMPRESSED_PUSH => {
                 let worker = r.u32()?;
                 let step = r.u64()?;
+                let seq = r.u64()?;
                 let n = r.u32()? as usize;
                 let mut entries = Vec::with_capacity(n.min(1 << 16));
                 for _ in 0..n {
                     let key = r.u32()?;
                     entries.push((key, wire::decode_compressed(&mut r)?.to_compressed()));
                 }
-                Message::CompressedPush { worker, step, entries }
+                Message::CompressedPush { worker, step, seq, entries }
             }
             T_PUSH_ACK => Message::PushAck { clock: r.u64()? },
             T_BARRIER => Message::Barrier { worker: r.u32()?, step: r.u64()? },
@@ -205,7 +210,7 @@ impl Message {
 /// `Message::decode`.
 pub mod wire {
     use super::*;
-    use crate::ps::compress::CompressedRef;
+    use crate::ps::compress::{CompressedRef, DenseRef};
 
     /// `Pull { worker, keys }` in one pass from a borrowed key slice.
     pub fn pull(w: &mut Writer, worker: u32, keys: &[u32]) {
@@ -225,12 +230,13 @@ pub mod wire {
         w.u32(n);
     }
 
-    /// Header of `Push { worker, step, entries }`; follow with exactly
-    /// `n` [`entry`] calls.
-    pub fn push_header(w: &mut Writer, worker: u32, step: u64, n: u32) {
+    /// Header of `Push { worker, step, seq, entries }`; follow with
+    /// exactly `n` [`entry`] calls.
+    pub fn push_header(w: &mut Writer, worker: u32, step: u64, seq: u64, n: u32) {
         w.u8(T_PUSH);
         w.u32(worker);
         w.u64(step);
+        w.u64(seq);
         w.u32(n);
     }
 
@@ -241,12 +247,13 @@ pub mod wire {
         w.tensor(t);
     }
 
-    /// Header of `CompressedPush { worker, step, entries }`; follow with
-    /// exactly `n` [`compressed_entry`] calls.
-    pub fn compressed_push_header(w: &mut Writer, worker: u32, step: u64, n: u32) {
+    /// Header of `CompressedPush { worker, step, seq, entries }`; follow
+    /// with exactly `n` [`compressed_entry`] calls.
+    pub fn compressed_push_header(w: &mut Writer, worker: u32, step: u64, seq: u64, n: u32) {
         w.u8(T_COMPRESSED_PUSH);
         w.u32(worker);
         w.u64(step);
+        w.u64(seq);
         w.u32(n);
     }
 
@@ -292,6 +299,84 @@ pub mod wire {
         frame.first() == Some(&T_COMPRESSED_PUSH)
     }
 
+    /// True when `frame` is a dense `Push` body — the serve loop routes
+    /// such frames into [`PushBody`] instead of `Message::decode`.
+    pub fn is_push(frame: &[u8]) -> bool {
+        frame.first() == Some(&T_PUSH)
+    }
+
+    /// Streaming dense-`Push` decoder: yields `(key, DenseRef)` entries
+    /// whose f32 payloads stay borrowed wire bytes — the dense twin of
+    /// [`CompressedPushBody`], so the server applies pushed gradients
+    /// without materializing an owned `Tensor` per entry.
+    pub struct PushBody<'a> {
+        pub worker: u32,
+        pub step: u64,
+        pub seq: u64,
+        remaining: usize,
+        r: Reader<'a>,
+    }
+
+    impl<'a> PushBody<'a> {
+        pub fn decode(frame: &'a [u8]) -> Result<Self, String> {
+            let mut r = Reader::new(frame);
+            let tag = r.u8()?;
+            if tag != T_PUSH {
+                return Err(format!("not a Push frame (tag {tag})"));
+            }
+            let worker = r.u32()?;
+            let step = r.u64()?;
+            let seq = r.u64()?;
+            let remaining = r.u32()? as usize;
+            Ok(PushBody { worker, step, seq, remaining, r })
+        }
+
+        /// Entries not yet yielded.
+        pub fn remaining(&self) -> usize {
+            self.remaining
+        }
+
+        /// Next `(key, view)` entry; `None` once every entry (and the
+        /// whole frame) is consumed. Trailing bytes after the last entry
+        /// are an error, matching `Message::decode` strictness.
+        pub fn next_entry(&mut self) -> Option<Result<(u32, DenseRef<'a>), String>> {
+            if self.remaining == 0 {
+                if self.r.remaining() != 0 {
+                    return Some(Err(format!(
+                        "{} trailing bytes after Push",
+                        self.r.remaining()
+                    )));
+                }
+                return None;
+            }
+            self.remaining -= 1;
+            Some(self.entry())
+        }
+
+        fn entry(&mut self) -> Result<(u32, DenseRef<'a>), String> {
+            let key = self.r.u32()?;
+            // Tensor wire layout: u32 rank, rank x u32 dim, u32 numel,
+            // numel x f32 — the payload is borrowed, not copied.
+            let rank = self.r.u32()? as usize;
+            if rank > 16 {
+                return Err(format!("implausible tensor rank {rank}"));
+            }
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(self.r.u32()? as usize);
+            }
+            let numel = self.r.u32()? as usize;
+            if shape.iter().product::<usize>() != numel {
+                return Err(format!(
+                    "tensor shape {shape:?} disagrees with payload {numel}"
+                ));
+            }
+            let data = self.r.raw(numel * 4)?;
+            let view = DenseRef::new(shape, data)?;
+            Ok((key, view))
+        }
+    }
+
     /// Streaming `CompressedPush` decoder: yields `(key, CompressedRef)`
     /// entries borrowed straight from the received frame. No owned
     /// `Tensor` (or even `Vec`) is materialized per entry — the server
@@ -299,6 +384,7 @@ pub mod wire {
     pub struct CompressedPushBody<'a> {
         pub worker: u32,
         pub step: u64,
+        pub seq: u64,
         remaining: usize,
         r: Reader<'a>,
     }
@@ -312,8 +398,9 @@ pub mod wire {
             }
             let worker = r.u32()?;
             let step = r.u64()?;
+            let seq = r.u64()?;
             let remaining = r.u32()? as usize;
-            Ok(CompressedPushBody { worker, step, remaining, r })
+            Ok(CompressedPushBody { worker, step, seq, remaining, r })
         }
 
         /// Entries not yet yielded.
@@ -394,6 +481,7 @@ mod tests {
         roundtrip(Message::Push {
             worker: 1,
             step: 7,
+            seq: 42,
             entries: vec![(0, Tensor::scalar(1.5)), (2, Tensor::zeros(&[3, 3]))],
         });
         roundtrip(Message::PushAck { clock: 9 });
@@ -430,10 +518,11 @@ mod tests {
         let msg = Message::Push {
             worker: 2,
             step: 9,
+            seq: 5,
             entries: vec![(4, t0.clone()), (6, t1.clone())],
         };
         let mut w = Writer::new();
-        wire::push_header(&mut w, 2, 9, 2);
+        wire::push_header(&mut w, 2, 9, 5, 2);
         wire::entry(&mut w, 4, &t0);
         wire::entry(&mut w, 6, &t1);
         assert_eq!(w.finish(), msg.encode());
@@ -461,9 +550,10 @@ mod tests {
         roundtrip(Message::CompressedPush {
             worker: 4,
             step: 9,
+            seq: 3,
             entries: vec![(0, c1), (3, c2)],
         });
-        roundtrip(Message::CompressedPush { worker: 0, step: 0, entries: vec![] });
+        roundtrip(Message::CompressedPush { worker: 0, step: 0, seq: 0, entries: vec![] });
     }
 
     #[test]
@@ -472,10 +562,11 @@ mod tests {
         let msg = Message::CompressedPush {
             worker: 2,
             step: 11,
+            seq: 6,
             entries: vec![(5, c1.clone()), (7, c2.clone())],
         };
         let mut w = Writer::new();
-        wire::compressed_push_header(&mut w, 2, 11, 2);
+        wire::compressed_push_header(&mut w, 2, 11, 6, 2);
         wire::compressed_entry(&mut w, 5, &c1);
         wire::compressed_entry(&mut w, 7, &c2);
         let buf = w.finish();
@@ -485,8 +576,9 @@ mod tests {
 
     #[test]
     fn compressed_entry_bytes_match_wire_accounting() {
-        // Frame body = 17-byte header + per entry (5 + wire_bytes): the
-        // advisor's S_p accounting IS the byte count on the wire.
+        // Frame body = 25-byte header (tag, worker, step, seq, n) + per
+        // entry (5 + wire_bytes): the advisor's S_p accounting IS the
+        // byte count on the wire.
         let (c1, c2) = sample_compressed();
         for c in [&c1, &c2] {
             let mut w = Writer::new();
@@ -496,12 +588,76 @@ mod tests {
         let msg = Message::CompressedPush {
             worker: 1,
             step: 2,
+            seq: 0,
             entries: vec![(0, c1.clone()), (1, c2.clone())],
         };
         assert_eq!(
             msg.encode().len(),
-            17 + (5 + c1.wire_bytes()) + (5 + c2.wire_bytes())
+            25 + (5 + c1.wire_bytes()) + (5 + c2.wire_bytes())
         );
+    }
+
+    #[test]
+    fn push_stream_decode_matches_owned() {
+        // The streaming dense decoder yields exactly the owned message's
+        // entries, with payloads borrowed from the frame.
+        let t0 = Tensor::from_vec(&[3], vec![1.0, -2.0, 3.5]);
+        let t1 = Tensor::from_vec(&[2, 2], vec![0.5, 0.0, -0.5, 8.0]);
+        let msg = Message::Push {
+            worker: 7,
+            step: 13,
+            seq: 21,
+            entries: vec![(1, t0.clone()), (4, t1.clone())],
+        };
+        let buf = msg.encode();
+        assert!(wire::is_push(&buf));
+        assert!(!wire::is_push(&Message::Stats.encode()));
+
+        let mut body = wire::PushBody::decode(&buf).unwrap();
+        assert_eq!(
+            (body.worker, body.step, body.seq, body.remaining()),
+            (7, 13, 21, 2)
+        );
+        let mut got = Vec::new();
+        while let Some(e) = body.next_entry() {
+            let (k, view) = e.unwrap();
+            got.push((k, view.to_tensor()));
+        }
+        assert_eq!(got, vec![(1, t0), (4, t1)]);
+    }
+
+    #[test]
+    fn push_stream_decode_rejects_malformed() {
+        let msg = Message::Push {
+            worker: 0,
+            step: 0,
+            seq: 0,
+            entries: vec![(0, Tensor::from_vec(&[2], vec![1.0, 2.0]))],
+        };
+        // Trailing garbage after the last entry.
+        let mut buf = msg.encode();
+        buf.push(0);
+        let mut body = wire::PushBody::decode(&buf).unwrap();
+        assert!(body.next_entry().unwrap().is_ok());
+        assert!(body.next_entry().unwrap().is_err());
+        // Not a push frame at all; truncated header; truncated entry.
+        assert!(wire::PushBody::decode(&Message::Stats.encode()).is_err());
+        assert!(wire::PushBody::decode(&msg.encode()[..10]).is_err());
+        let whole = msg.encode();
+        let mut body = wire::PushBody::decode(&whole[..whole.len() - 1]).unwrap();
+        assert!(body.next_entry().unwrap().is_err());
+        // Shape/numel disagreement rejected.
+        let mut w = Writer::new();
+        wire::push_header(&mut w, 0, 0, 0, 1);
+        w.u32(0); // key
+        w.u32(1); // rank
+        w.u32(3); // shape [3]
+        w.u32(2); // numel 2 != 3
+        w.f32(1.0);
+        w.f32(2.0);
+        let bad = w.finish();
+        let mut body = wire::PushBody::decode(&bad).unwrap();
+        assert!(body.next_entry().unwrap().is_err());
     }
 
     #[test]
@@ -510,6 +666,7 @@ mod tests {
         let msg = Message::CompressedPush {
             worker: 4,
             step: 9,
+            seq: 17,
             entries: vec![(0, c1.clone()), (3, c2.clone())],
         };
         let buf = msg.encode();
@@ -517,7 +674,10 @@ mod tests {
         assert!(!wire::is_compressed_push(&Message::Stats.encode()));
 
         let mut body = wire::CompressedPushBody::decode(&buf).unwrap();
-        assert_eq!((body.worker, body.step, body.remaining()), (4, 9, 2));
+        assert_eq!(
+            (body.worker, body.step, body.seq, body.remaining()),
+            (4, 9, 17, 2)
+        );
         let mut got = Vec::new();
         while let Some(e) = body.next_entry() {
             let (k, view) = e.unwrap();
@@ -529,7 +689,7 @@ mod tests {
     #[test]
     fn compressed_push_stream_decode_rejects_malformed() {
         let (c1, _) = sample_compressed();
-        let msg = Message::CompressedPush { worker: 0, step: 0, entries: vec![(0, c1)] };
+        let msg = Message::CompressedPush { worker: 0, step: 0, seq: 0, entries: vec![(0, c1)] };
         let mut buf = msg.encode();
         // Trailing garbage after the last entry.
         buf.push(0);
@@ -546,7 +706,7 @@ mod tests {
         assert!(body.next_entry().unwrap().is_err());
         // Sparse k > numel rejected by the owned decoder too.
         let mut w = Writer::new();
-        wire::compressed_push_header(&mut w, 0, 0, 1);
+        wire::compressed_push_header(&mut w, 0, 0, 0, 1);
         w.u32(0); // key
         w.u8(1); // C_SPARSE
         w.u32(2); // numel
@@ -565,7 +725,12 @@ mod tests {
                     (i as u32, Tensor::from_vec(&[len], g.vec_f32(len, -10.0, 10.0)))
                 })
                 .collect();
-            roundtrip(Message::Push { worker: g.u64(0, 100) as u32, step: g.u64(0, 1 << 40), entries });
+            roundtrip(Message::Push {
+                worker: g.u64(0, 100) as u32,
+                step: g.u64(0, 1 << 40),
+                seq: g.u64(0, 1 << 40),
+                entries,
+            });
         });
     }
 }

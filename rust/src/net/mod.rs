@@ -1,10 +1,13 @@
-//! Networking substrate: binary codec, protocol messages, and framed
-//! transports (TCP and in-process) for the parameter-server protocol.
+//! Networking substrate: binary codec, protocol messages, framed
+//! transports (TCP and in-process) and deterministic fault injection
+//! for the parameter-server protocol.
 
 pub mod codec;
+pub mod fault;
 pub mod message;
 pub mod transport;
 
 pub use codec::{Reader, Writer};
+pub use fault::{FaultEvent, FaultKind, FaultLog, FaultPlan, FaultyTransport};
 pub use message::Message;
 pub use transport::{connect, listen, InProcTransport, TcpTransport, Transport};

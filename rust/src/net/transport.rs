@@ -251,6 +251,7 @@ mod tests {
         let msg = Message::Push {
             worker: 9,
             step: 3,
+            seq: 1,
             entries: vec![(0, Tensor::from_vec(&[128], vec![0.25; 128]))],
         };
         c.send(&msg).unwrap();
@@ -266,13 +267,13 @@ mod tests {
         let (mut a, mut b) = InProcTransport::pair();
         let t = Tensor::from_vec(&[4], vec![1.0, 2.0, 3.0, 4.0]);
         a.send_with(&mut |w| {
-            wire::push_header(w, 3, 11, 1);
+            wire::push_header(w, 3, 11, 4, 1);
             wire::entry(w, 0, &t);
         })
         .unwrap();
         assert_eq!(
             b.recv().unwrap(),
-            Message::Push { worker: 3, step: 11, entries: vec![(0, t.clone())] }
+            Message::Push { worker: 3, step: 11, seq: 4, entries: vec![(0, t.clone())] }
         );
 
         // TCP: same, over a real socket, twice (buffer reuse).

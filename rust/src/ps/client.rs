@@ -4,14 +4,33 @@
 //! gradient codec ([`CodecKind`]): dense `Push` frames, or
 //! `CompressedPush` frames carrying top-k sparse (with per-key
 //! error-feedback residuals kept client-side) or int8-quantized bodies.
+//!
+//! # Fault tolerance
+//!
+//! Every push frame carries the worker's monotone `(worker, step, seq)`
+//! tag. With a reconnect handler installed
+//! ([`set_reconnect`](PsClient::set_reconnect)) and a nonzero retry
+//! budget ([`set_retry_limit`](PsClient::set_retry_limit)), a transport
+//! error triggers reconnect-and-replay: the request is re-sent with the
+//! **same seq and the same staged bytes** (top-k residuals are not
+//! recompressed, stochastic rounding is not re-drawn), so the server can
+//! deduplicate the replay idempotently whether or not the original
+//! frame (or only its ack) was lost. Barriers additionally retry on the
+//! server's `barrier timeout` error, which a fault-tolerant server
+//! returns instead of blocking forever on a dead peer.
 
 use std::collections::BTreeMap;
 
 use super::compress::{quantize8, CodecKind, Compressed, TopK};
 use super::router::Router;
+use crate::net::codec::Writer;
 use crate::net::message::{wire, Message};
 use crate::net::transport::Transport;
 use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Factory producing a fresh connection to server `s` after a fault.
+pub type Reconnect = Box<dyn FnMut(usize) -> Result<Box<dyn Transport>, String> + Send>;
 
 /// Connections to all parameter servers, in router server order.
 pub struct PsClient {
@@ -21,10 +40,20 @@ pub struct PsClient {
     codec: CodecKind,
     /// Per-key error-feedback state (TopK codec only).
     topk: BTreeMap<u32, TopK>,
-    /// Reusable per-server staging of compressed entries.
-    scratch: Vec<(u32, Compressed)>,
-    /// Cumulative encoded push-body bytes actually sent.
+    /// Per-server staging of compressed entries for the current push —
+    /// kept until the ack arrives so a replay re-sends identical bytes.
+    staged: Vec<Vec<(u32, Compressed)>>,
+    /// Cumulative encoded push-body bytes actually sent (replays count:
+    /// they hit the wire too).
     push_wire_bytes: u64,
+    /// Next push sequence number (monotone per worker).
+    seq: u64,
+    /// Extra attempts per op after the first (0 = fail fast).
+    retry_limit: usize,
+    reconnect: Option<Reconnect>,
+    /// Deterministic per-worker stream for stochastic rounding
+    /// (`CodecKind::Quant8Sr`).
+    sr_rng: Rng,
 }
 
 impl PsClient {
@@ -50,9 +79,38 @@ impl PsClient {
             router,
             codec,
             topk: BTreeMap::new(),
-            scratch: Vec::new(),
+            staged: Vec::new(),
             push_wire_bytes: 0,
+            seq: 0,
+            retry_limit: 0,
+            reconnect: None,
+            sr_rng: Rng::new(0xC0DE_C5EE_D000_0000 ^ (worker_id as u64 + 1)),
         }
+    }
+
+    /// Extra attempts per op after the first (default 0 = fail fast).
+    /// Retries only help once a reconnect handler is installed — without
+    /// one, a dead connection cannot be replaced.
+    pub fn set_retry_limit(&mut self, retries: usize) {
+        self.retry_limit = retries;
+    }
+
+    /// Install the reconnect handler used to replace a faulted
+    /// connection to server `s`.
+    pub fn set_reconnect(&mut self, f: Reconnect) {
+        self.reconnect = Some(f);
+    }
+
+    /// Next push sequence number (for supervisors recording progress).
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// Raise the next push seq to at least `base`. A restarted worker
+    /// passes `incarnation << 32` so its pushes can never be mistaken
+    /// for (and deduplicated against) its previous life's replays.
+    pub fn set_seq_base(&mut self, base: u64) {
+        self.seq = self.seq.max(base);
     }
 
     /// Switch codecs; any accumulated top-k residuals are dropped (they
@@ -98,21 +156,28 @@ impl PsClient {
         let mut filled = vec![false; n_keys];
         // Send all requests first (the transfers overlap on the wire),
         // then collect replies. Key lists stream from the router's
-        // borrowed slices — no per-pull Vec of keys.
+        // borrowed slices — no per-pull Vec of keys. Pulls are
+        // idempotent reads, so fault recovery simply re-sends them.
         let worker = self.worker_id;
-        let router = &self.router;
-        for (s, t) in self.transports.iter_mut().enumerate() {
+        let PsClient { transports, router, reconnect, retry_limit, .. } = self;
+        for (s, t) in transports.iter_mut().enumerate() {
             let keys = router.keys_of(s);
             if keys.is_empty() {
                 continue;
             }
-            t.send_with(&mut |w| wire::pull(w, worker, keys))?;
+            send_retry(t, reconnect, *retry_limit, s, &mut |w| {
+                wire::pull(w, worker, keys)
+            })?;
         }
-        for (s, t) in self.transports.iter_mut().enumerate() {
-            if router.keys_of(s).is_empty() {
+        for (s, t) in transports.iter_mut().enumerate() {
+            let keys = router.keys_of(s);
+            if keys.is_empty() {
                 continue;
             }
-            match t.recv()? {
+            let reply = recv_retry(t, reconnect, *retry_limit, s, &mut |w| {
+                wire::pull(w, worker, keys)
+            })?;
+            match reply {
                 Message::PullReply { entries, .. } => {
                     for (k, tensor) in entries {
                         let k = k as usize;
@@ -138,81 +203,122 @@ impl PsClient {
     /// Dense (`CodecKind::None`) gradients are encoded by reference
     /// straight into each transport's frame buffer — no per-server
     /// `(key, tensor.clone())` staging. Compressed codecs stage the
-    /// (small) compressed entries in a reusable scratch, then stream a
-    /// `CompressedPush` body from borrowed entries the same way. Either
-    /// way the encoded body bytes are added to
+    /// (small) compressed entries once per server and keep them until
+    /// the ack arrives, so a fault-recovery replay re-sends byte-
+    /// identical frames under the same seq (the server deduplicates).
+    /// Either way the encoded body bytes are added to
     /// [`push_wire_bytes`](Self::push_wire_bytes).
     pub fn push(&mut self, step: u64, grads: &[Tensor]) -> Result<(), String> {
         assert_eq!(grads.len(), self.router.n_keys());
-        let PsClient {
-            worker_id,
-            transports,
-            router,
-            codec,
-            topk,
-            scratch,
-            push_wire_bytes,
-        } = self;
-        let worker = *worker_id;
-        let mut sent = 0u64;
-        for (s, t) in transports.iter_mut().enumerate() {
-            let keys = router.keys_of(s);
-            if keys.is_empty() {
-                continue;
+        let seq = self.seq;
+        self.seq += 1;
+        let n_servers = self.transports.len();
+        // Stage compressed entries exactly once per push: top-k error
+        // feedback already advanced and stochastic rounding already
+        // drew, so replays must reuse these bytes, never recompress.
+        if self.codec != CodecKind::None {
+            if self.staged.len() < n_servers {
+                self.staged.resize_with(n_servers, Vec::new);
             }
-            match *codec {
-                CodecKind::None => {
-                    t.send_with(&mut |w| {
-                        let start = w.len();
-                        wire::push_header(w, worker, step, keys.len() as u32);
+            let PsClient { router, codec, topk, staged, sr_rng, .. } = &mut *self;
+            for (s, stage) in staged.iter_mut().enumerate().take(n_servers) {
+                stage.clear();
+                for &k in router.keys_of(s) {
+                    let g = &grads[k as usize];
+                    let c = match *codec {
+                        CodecKind::TopK { fraction } => topk
+                            .entry(k)
+                            .or_insert_with(|| TopK::new(fraction, g.len()))
+                            .compress(g),
+                        CodecKind::Quant8 => quantize8(g, None),
+                        // (&mut *sr_rng: reborrow — Some(..) would move
+                        // the &mut out of the loop's reach.)
+                        CodecKind::Quant8Sr => quantize8(g, Some(&mut *sr_rng)),
+                        CodecKind::None => unreachable!(),
+                    };
+                    stage.push((k, c));
+                }
+            }
+        }
+        let worker = self.worker_id;
+        let dense = self.codec == CodecKind::None;
+        let mut sent = 0u64;
+        let PsClient { transports, router, staged, reconnect, retry_limit, .. } = &mut *self;
+        // Phase 1: send every server's frame (transfers overlap on the
+        // wire); phase 2: collect acks, replaying through reconnects on
+        // transport errors.
+        for phase in 0..2 {
+            for (s, t) in transports.iter_mut().enumerate() {
+                let keys = router.keys_of(s);
+                if keys.is_empty() {
+                    continue;
+                }
+                let staged_s: &[(u32, Compressed)] =
+                    if dense { &[] } else { &staged[s] };
+                let mut encode = |w: &mut Writer| {
+                    let start = w.len();
+                    if dense {
+                        wire::push_header(w, worker, step, seq, keys.len() as u32);
                         for &k in keys {
                             wire::entry(w, k, &grads[k as usize]);
                         }
-                        sent += (w.len() - start) as u64;
-                    })?;
-                }
-                CodecKind::TopK { fraction } => {
-                    scratch.clear();
-                    for &k in keys {
-                        let g = &grads[k as usize];
-                        let state =
-                            topk.entry(k).or_insert_with(|| TopK::new(fraction, g.len()));
-                        scratch.push((k, state.compress(g)));
+                    } else {
+                        wire::compressed_push_header(
+                            w,
+                            worker,
+                            step,
+                            seq,
+                            staged_s.len() as u32,
+                        );
+                        for (k, c) in staged_s {
+                            wire::compressed_entry(w, *k, c);
+                        }
                     }
-                    send_compressed(&mut **t, worker, step, scratch, &mut sent)?;
-                }
-                CodecKind::Quant8 => {
-                    scratch.clear();
-                    for &k in keys {
-                        scratch.push((k, quantize8(&grads[k as usize], None)));
+                    sent += (w.len() - start) as u64;
+                };
+                if phase == 0 {
+                    send_retry(t, reconnect, *retry_limit, s, &mut encode)?;
+                } else {
+                    match recv_retry(t, reconnect, *retry_limit, s, &mut encode)? {
+                        Message::PushAck { .. } => {}
+                        Message::Error { what } => return Err(format!("server {s}: {what}")),
+                        m => return Err(format!("unexpected push reply {m:?}")),
                     }
-                    send_compressed(&mut **t, worker, step, scratch, &mut sent)?;
                 }
             }
         }
-        *push_wire_bytes += sent;
-        for (s, t) in transports.iter_mut().enumerate() {
-            if router.keys_of(s).is_empty() {
-                continue;
-            }
-            match t.recv()? {
-                Message::PushAck { .. } => {}
-                Message::Error { what } => return Err(format!("server {s}: {what}")),
-                m => return Err(format!("unexpected push reply {m:?}")),
-            }
-        }
+        self.push_wire_bytes += sent;
         Ok(())
     }
 
     /// Enter the synchronous barrier for `step` on every server.
+    ///
+    /// Recovery: transport errors reconnect and re-send the barrier
+    /// (arrival is a worker-id set server-side, so re-arrival is
+    /// idempotent), and a server-side `barrier timeout` error — the
+    /// bounded wait a fault-tolerant server returns while a peer is
+    /// down — re-arms the barrier until the retry budget runs out.
     pub fn barrier(&mut self, step: u64) -> Result<(), String> {
-        for t in &mut self.transports {
-            t.send(&Message::Barrier { worker: self.worker_id, step })?;
-        }
-        for t in &mut self.transports {
-            match t.recv()? {
-                Message::BarrierRelease { .. } => {}
-                m => return Err(format!("unexpected barrier reply {m:?}")),
+        let worker = self.worker_id;
+        let PsClient { transports, reconnect, retry_limit, .. } = &mut *self;
+        for (s, t) in transports.iter_mut().enumerate() {
+            let msg = Message::Barrier { worker, step };
+            let mut encode = |w: &mut Writer| msg.encode_into(w);
+            send_retry(t, reconnect, *retry_limit, s, &mut encode)?;
+            let mut timeouts = 0usize;
+            loop {
+                match recv_retry(t, reconnect, *retry_limit, s, &mut encode)? {
+                    Message::BarrierRelease { .. } => break,
+                    Message::Error { what }
+                        if what.contains("barrier timeout") && timeouts < *retry_limit =>
+                    {
+                        // The server withdrew our arrival; re-arm.
+                        timeouts += 1;
+                        send_retry(t, reconnect, *retry_limit, s, &mut encode)?;
+                    }
+                    Message::Error { what } => return Err(format!("server {s}: {what}")),
+                    m => return Err(format!("unexpected barrier reply {m:?}")),
+                }
             }
         }
         Ok(())
@@ -221,9 +327,11 @@ impl PsClient {
     /// Fetch aggregate counters across servers.
     pub fn stats(&mut self) -> Result<(u64, u64, u64), String> {
         let (mut pulls, mut pushes, mut updates) = (0, 0, 0);
-        for t in &mut self.transports {
-            t.send(&Message::Stats)?;
-            match t.recv()? {
+        let PsClient { transports, reconnect, retry_limit, .. } = &mut *self;
+        for (s, t) in transports.iter_mut().enumerate() {
+            let mut encode = |w: &mut Writer| Message::Stats.encode_into(w);
+            send_retry(t, reconnect, *retry_limit, s, &mut encode)?;
+            match recv_retry(t, reconnect, *retry_limit, s, &mut encode)? {
                 Message::StatsReply { pulls: a, pushes: b, updates: c } => {
                     pulls += a;
                     pushes += b;
@@ -236,23 +344,64 @@ impl PsClient {
     }
 }
 
-/// Stream one `CompressedPush` body from borrowed staged entries into a
-/// transport's frame buffer, accumulating the encoded body bytes.
-fn send_compressed(
-    t: &mut dyn Transport,
-    worker: u32,
-    step: u64,
-    entries: &[(u32, Compressed)],
-    sent: &mut u64,
+/// Send one encoded request to server `s`, replacing the connection via
+/// the reconnect handler on transport errors (`retry` extra attempts).
+fn send_retry(
+    t: &mut Box<dyn Transport>,
+    reconnect: &mut Option<Reconnect>,
+    retry: usize,
+    s: usize,
+    encode: &mut dyn FnMut(&mut Writer),
 ) -> Result<(), String> {
-    t.send_with(&mut |w| {
-        let start = w.len();
-        wire::compressed_push_header(w, worker, step, entries.len() as u32);
-        for (k, c) in entries {
-            wire::compressed_entry(w, *k, c);
+    let mut attempts = 0usize;
+    loop {
+        // (&mut *encode: reborrow, so the next attempt can use it again.)
+        match t.send_with(&mut *encode) {
+            Ok(()) => return Ok(()),
+            Err(e) => {
+                if attempts >= retry || reconnect.is_none() {
+                    return Err(format!("server {s}: {e} (after {attempts} retries)"));
+                }
+                attempts += 1;
+                *t = reconnect.as_mut().unwrap()(s)?;
+            }
         }
-        *sent += (w.len() - start) as u64;
-    })
+    }
+}
+
+/// Receive one reply from server `s`. On a transport error the request
+/// is replayed — reconnect, re-send the same bytes (`encode` must
+/// produce an identical frame, same seq), receive again — until the
+/// `retry` budget runs out. The server's idempotent admission makes the
+/// replay safe whether the request or only its ack was lost.
+fn recv_retry(
+    t: &mut Box<dyn Transport>,
+    reconnect: &mut Option<Reconnect>,
+    retry: usize,
+    s: usize,
+    encode: &mut dyn FnMut(&mut Writer),
+) -> Result<Message, String> {
+    let mut attempts = 0usize;
+    loop {
+        let err = match t.recv() {
+            Ok(m) => return Ok(m),
+            Err(e) => e,
+        };
+        // Reconnect and replay until a send lands or the budget is out.
+        loop {
+            if attempts >= retry || reconnect.is_none() {
+                return Err(format!("server {s}: {err} (after {attempts} retries)"));
+            }
+            attempts += 1;
+            let replayed = reconnect.as_mut().unwrap()(s).and_then(|fresh| {
+                *t = fresh;
+                t.send_with(&mut *encode)
+            });
+            if replayed.is_ok() {
+                break;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -261,6 +410,7 @@ mod tests {
     use crate::net::transport::InProcTransport;
     use crate::ps::server::{serve, PsShared, UpdateMode};
     use crate::ps::shard::{Optimizer, ShardStore};
+    use std::sync::atomic::Ordering;
     use std::thread;
 
     /// Build a 2-server in-proc cluster over 3 keys of distinct sizes.
@@ -386,8 +536,8 @@ mod tests {
     #[test]
     fn push_wire_bytes_match_compressed_accounting() {
         // The client's byte counter must equal the exact frame-body
-        // arithmetic: per server 17-byte header + per key (5 +
-        // CodecKind::wire_bytes_for(numel)).
+        // arithmetic: per server 25-byte header (tag, worker, step, seq,
+        // n) + per key (5 + CodecKind::wire_bytes_for(numel)).
         let (mut client, handles) = cluster(Optimizer::Sgd { lr: 1.0 }, UpdateMode::Async);
         let sizes = [100usize, 10, 50];
         let key_sets: Vec<Vec<u32>> = (0..2)
@@ -398,7 +548,7 @@ mod tests {
                 .iter()
                 .filter(|keys| !keys.is_empty())
                 .map(|keys| {
-                    17 + keys
+                    25 + keys
                         .iter()
                         .map(|&k| 5 + kind.wire_bytes_for(sizes[k as usize]) as u64)
                         .sum::<u64>()
@@ -453,6 +603,126 @@ mod tests {
         drop(client);
         for h in handles {
             h.join().unwrap();
+        }
+    }
+
+    /// Transport wrapper that swallows the next `lose` replies: the send
+    /// goes through (the server applies it), but recv errors — the
+    /// "lost ack" fault that forces a replay of an already-applied push.
+    struct LoseAcks {
+        inner: Box<dyn Transport>,
+        lose: usize,
+    }
+
+    impl Transport for LoseAcks {
+        fn send(&mut self, msg: &Message) -> Result<(), String> {
+            self.inner.send(msg)
+        }
+        fn recv(&mut self) -> Result<Message, String> {
+            if self.lose > 0 {
+                self.lose -= 1;
+                let _ = self.inner.recv(); // consume the real ack
+                return Err("synthetic: ack lost".into());
+            }
+            self.inner.recv()
+        }
+        fn send_with(&mut self, encode: &mut dyn FnMut(&mut Writer)) -> Result<(), String> {
+            self.inner.send_with(encode)
+        }
+        fn recv_with(
+            &mut self,
+            decode: &mut dyn FnMut(&[u8]) -> Result<(), String>,
+        ) -> Result<(), String> {
+            if self.lose > 0 {
+                self.lose -= 1;
+                let _ = self.inner.recv_with(&mut |_| Ok(()));
+                return Err("synthetic: ack lost".into());
+            }
+            self.inner.recv_with(decode)
+        }
+    }
+
+    #[test]
+    fn lost_ack_replay_applies_once() {
+        // The ack of an applied push is lost; the client reconnects and
+        // replays the same seq; the server deduplicates. The gradient
+        // must land exactly once — for the dense codec and for every
+        // compressed codec (whose replays reuse the staged bytes).
+        use std::sync::{Arc, Mutex};
+        for codec in [
+            CodecKind::None,
+            CodecKind::TopK { fraction: 1.0 },
+            CodecKind::Quant8,
+            CodecKind::Quant8Sr,
+        ] {
+            let mut store = ShardStore::new(Optimizer::Sgd { lr: 1.0 });
+            store.insert(0, Tensor::from_vec(&[4], vec![0.0; 4]));
+            let shared = PsShared::new(store, UpdateMode::Async);
+            let serve_handles = Arc::new(Mutex::new(Vec::new()));
+            let spawn_conn = {
+                let shared = shared.clone();
+                let serve_handles = serve_handles.clone();
+                move || -> Box<dyn Transport> {
+                    let (client_end, server_end) = InProcTransport::pair();
+                    let sh = shared.clone();
+                    serve_handles
+                        .lock()
+                        .unwrap()
+                        .push(thread::spawn(move || serve(Box::new(server_end), sh)));
+                    Box::new(client_end)
+                }
+            };
+            let first: Box<dyn Transport> =
+                Box::new(LoseAcks { inner: spawn_conn(), lose: 1 });
+            let router = Router::new(&[16], 1);
+            let mut client = PsClient::with_codec(0, vec![first], router, codec);
+            client.set_retry_limit(3);
+            let reconnect_conns = spawn_conn.clone();
+            client.set_reconnect(Box::new(move |_s| Ok(reconnect_conns())));
+
+            let grads = vec![Tensor::from_vec(&[4], vec![2.0, -1.0, 0.5, 4.0])];
+            client.push(0, &grads).unwrap();
+            let params = client.pull_all().unwrap();
+            // The parameter moved (a gradient landed) ...
+            assert!(
+                params[0].data().iter().any(|&x| x != 0.0),
+                "{codec:?}: no gradient applied"
+            );
+            // ... and the server saw both frames (original + replay) but
+            // admitted exactly one: updates counts applied keys, so a
+            // double application would read 2.
+            assert_eq!(shared.counters.pushes.load(Ordering::Relaxed), 2, "{codec:?}");
+            assert_eq!(shared.counters.updates.load(Ordering::Relaxed), 1, "{codec:?}");
+            drop(client);
+            for h in serve_handles.lock().unwrap().drain(..) {
+                h.join().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn quant8sr_pushes_are_deterministic_per_worker() {
+        // Two identical clusters, same worker id: stochastic rounding
+        // draws from the worker's seeded stream, so final parameters
+        // must agree bit for bit.
+        let run = || {
+            let (mut client, handles) = cluster(Optimizer::Sgd { lr: 1.0 }, UpdateMode::Async);
+            client.set_codec(CodecKind::Quant8Sr);
+            let grads = test_grads();
+            for s in 0..3 {
+                client.push(s, &grads).unwrap();
+            }
+            let params = client.pull_all().unwrap();
+            drop(client);
+            for h in handles {
+                h.join().unwrap();
+            }
+            params
+        };
+        let a = run();
+        let b = run();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.data(), y.data());
         }
     }
 

@@ -24,20 +24,26 @@ pub enum CodecKind {
     TopK { fraction: f64 },
     /// Linear int8 quantization with per-tensor scale.
     Quant8,
+    /// Int8 quantization with stochastic rounding (unbiased): same wire
+    /// format and size as [`Quant8`](Self::Quant8), but rounding draws
+    /// from the worker's deterministic RNG stream, so the quantization
+    /// error has zero mean across steps instead of a systematic bias.
+    Quant8Sr,
 }
 
 impl CodecKind {
-    /// Parse a CLI spec: `none`, `quant8`, `topk` (1% default) or
-    /// `topk:<fraction>`.
+    /// Parse a CLI spec: `none`, `quant8`, `quant8sr`, `topk` (1%
+    /// default) or `topk:<fraction>`.
     pub fn parse(s: &str) -> Result<CodecKind, String> {
         match s {
             "none" | "dense" => Ok(CodecKind::None),
             "quant8" => Ok(CodecKind::Quant8),
+            "quant8sr" => Ok(CodecKind::Quant8Sr),
             "topk" => Ok(CodecKind::TopK { fraction: 0.01 }),
             other => {
                 let Some(f) = other.strip_prefix("topk:") else {
                     return Err(format!(
-                        "unknown codec {other:?} (none|topk[:fraction]|quant8)"
+                        "unknown codec {other:?} (none|topk[:fraction]|quant8|quant8sr)"
                     ));
                 };
                 let fraction: f64 =
@@ -55,6 +61,7 @@ impl CodecKind {
             CodecKind::None => "none",
             CodecKind::TopK { .. } => "topk",
             CodecKind::Quant8 => "quant8",
+            CodecKind::Quant8Sr => "quant8sr",
         }
     }
 
@@ -68,7 +75,7 @@ impl CodecKind {
                 let k = ((numel as f64 * fraction).ceil() as usize).clamp(1, numel.max(1));
                 8 + 8 * k
             }
-            CodecKind::Quant8 => 12 + numel,
+            CodecKind::Quant8 | CodecKind::Quant8Sr => 12 + numel,
         }
     }
 
@@ -80,7 +87,7 @@ impl CodecKind {
         match *self {
             CodecKind::None => dense_bytes,
             CodecKind::TopK { fraction } => 8.0 + 8.0 * (numel * fraction).ceil().max(1.0),
-            CodecKind::Quant8 => 12.0 + numel,
+            CodecKind::Quant8 | CodecKind::Quant8Sr => 12.0 + numel,
         }
     }
 }
@@ -293,6 +300,63 @@ impl<'a> CompressedRef<'a> {
     }
 }
 
+/// Borrowed view of one *dense* f32 gradient as it sits in a received
+/// wire frame — the dense twin of [`CompressedRef`], produced by the
+/// streaming `Push` decoder (`net::message::wire::PushBody`). The
+/// payload stays raw little-endian wire bytes (frames are unaligned);
+/// the server applies it by decoding per element inside the axpy, so no
+/// owned `Tensor` is materialized per pushed entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseRef<'a> {
+    shape: Vec<usize>,
+    /// `numel × f32` little-endian wire bytes.
+    data: &'a [u8],
+}
+
+impl<'a> DenseRef<'a> {
+    /// Build a view; `data` must hold exactly `4 × Π shape` bytes.
+    pub fn new(shape: Vec<usize>, data: &'a [u8]) -> Result<Self, String> {
+        let numel: usize = shape.iter().product();
+        if data.len() != 4 * numel {
+            return Err(format!(
+                "dense payload {} bytes != 4 x numel {numel} for shape {shape:?}",
+                data.len()
+            ));
+        }
+        Ok(DenseRef { shape, data })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len() / 4
+    }
+
+    /// `out += alpha * self`, decoding entries straight from the wire
+    /// bytes. Length-checked first: on `Err`, `out` is untouched.
+    pub fn axpy_into(&self, alpha: f32, out: &mut [f32]) -> Result<(), String> {
+        if out.len() != self.numel() {
+            return Err(format!(
+                "dense numel {} != target len {}",
+                self.numel(),
+                out.len()
+            ));
+        }
+        for (o, c) in out.iter_mut().zip(self.data.chunks_exact(4)) {
+            *o += alpha * f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        Ok(())
+    }
+
+    /// Materialize an owned tensor (sync first-contribution, cold paths
+    /// and tests; the hot path applies straight from the view).
+    pub fn to_tensor(&self) -> Tensor {
+        Tensor::from_le_bytes(&self.shape, self.data).expect("length validated at construction")
+    }
+}
+
 /// Top-k sparsifier with error feedback.
 ///
 /// `compress` keeps the k largest-|x| entries of (grad + residual) and
@@ -454,10 +518,53 @@ mod tests {
     }
 
     #[test]
+    fn dense_ref_view_matches_tensor() {
+        let t = t(&[1.5, -2.0, 0.25, 8.0]);
+        let bytes = t.to_le_bytes();
+        let view = DenseRef::new(vec![4], &bytes).unwrap();
+        assert_eq!(view.numel(), 4);
+        assert_eq!(view.shape(), &[4]);
+        assert_eq!(view.to_tensor(), t);
+        // axpy_into matches Tensor::axpy bit for bit.
+        let mut a = vec![1.0f32; 4];
+        let mut b = Tensor::from_vec(&[4], vec![1.0; 4]);
+        view.axpy_into(-0.5, &mut a).unwrap();
+        b.axpy(-0.5, &t);
+        assert_eq!(a, b.data());
+        // Length mismatches rejected, target untouched.
+        let mut short = [7.0f32; 3];
+        assert!(view.axpy_into(1.0, &mut short).is_err());
+        assert_eq!(short, [7.0; 3]);
+        assert!(DenseRef::new(vec![5], &bytes).is_err());
+    }
+
+    #[test]
+    fn quant8sr_kind_matches_quant8_accounting() {
+        let n = 777;
+        assert_eq!(
+            CodecKind::Quant8Sr.wire_bytes_for(n),
+            CodecKind::Quant8.wire_bytes_for(n)
+        );
+        assert_eq!(
+            CodecKind::Quant8Sr.effective_push_bytes(4.0 * n as f64),
+            CodecKind::Quant8.effective_push_bytes(4.0 * n as f64)
+        );
+        assert_eq!(CodecKind::Quant8Sr.name(), "quant8sr");
+        // And the stochastic payload really has the quant8 wire size.
+        let mut rng = Rng::new(5);
+        let g = Tensor::from_vec(&[n], (0..n).map(|i| (i as f32 * 0.11).sin()).collect());
+        assert_eq!(
+            quantize8(&g, Some(&mut rng)).wire_bytes(),
+            CodecKind::Quant8Sr.wire_bytes_for(n)
+        );
+    }
+
+    #[test]
     fn codec_kind_parse() {
         assert_eq!(CodecKind::parse("none").unwrap(), CodecKind::None);
         assert_eq!(CodecKind::parse("dense").unwrap(), CodecKind::None);
         assert_eq!(CodecKind::parse("quant8").unwrap(), CodecKind::Quant8);
+        assert_eq!(CodecKind::parse("quant8sr").unwrap(), CodecKind::Quant8Sr);
         assert_eq!(CodecKind::parse("topk").unwrap(), CodecKind::TopK { fraction: 0.01 });
         assert_eq!(
             CodecKind::parse("topk:0.25").unwrap(),

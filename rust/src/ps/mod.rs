@@ -21,8 +21,8 @@
 //! |------------------|--------------------------------------------------|
 //! | `Pull`           | `u32 worker, u32 n, n × u32 key`                 |
 //! | `PullReply`      | `u64 clock, u32 n, n × (u32 key, tensor)`        |
-//! | `Push`           | `u32 worker, u64 step, u32 n, n × (u32 key, tensor)` |
-//! | `CompressedPush` | `u32 worker, u64 step, u32 n, n × (u32 key, u8 codec, body)` |
+//! | `Push`           | `u32 worker, u64 step, u64 seq, u32 n, n × (u32 key, tensor)` |
+//! | `CompressedPush` | `u32 worker, u64 step, u64 seq, u32 n, n × (u32 key, u8 codec, body)` |
 //! | `PushAck`        | `u64 clock`                                      |
 //! | `Barrier`        | `u32 worker, u64 step`                           |
 //! | `BarrierRelease` | `u64 step`                                       |
@@ -97,6 +97,20 @@
 //!   waiter times out is dropped, and pushes/barriers further than
 //!   `server::MAX_PENDING_STEPS` ahead are discarded/rejected, bounding
 //!   barrier state against dead or runaway workers.
+//!
+//! # Fault recovery (chaos-tested)
+//!
+//! Push frames carry a per-worker monotone `seq`; the server admits
+//! each frame at most once (per `(worker, seq)` watermark in async
+//! mode, per `(step, worker)` in sync mode), so client
+//! reconnect-and-replay after dropped frames, lost acks or severed
+//! connections is idempotent — `tests/chaos.rs` asserts byte-identical
+//! final parameters with and without duplicated/replayed frames.
+//! Barrier arrival is a worker-id set (retries can't inflate the
+//! quorum) and the barrier wait is bounded and tunable
+//! ([`PsShared::set_barrier_timeout`]), so dead peers surface as
+//! retryable errors. `net::fault::FaultyTransport` injects the
+//! failures deterministically from a seed.
 
 pub mod client;
 pub mod compress;
@@ -105,7 +119,7 @@ pub mod server;
 pub mod shard;
 
 pub use client::PsClient;
-pub use compress::{quantize8, CodecKind, Compressed, CompressedRef, TopK};
+pub use compress::{quantize8, CodecKind, Compressed, CompressedRef, DenseRef, TopK};
 pub use router::Router;
 pub use server::{serve, PsServerHandle, PsShared, UpdateMode};
 pub use shard::{Optimizer, ShardStore, StripedStore, DEFAULT_STRIPES};

@@ -13,6 +13,16 @@
 //!   serialize; the barrier's last arriver applies the means once
 //!   (synchronous SGD with O(params) barrier memory, not
 //!   O(workers·params)).
+//!
+//! Recovery semantics (the chaos-tested contract): pushes carry a
+//! per-worker monotone `(worker, step, seq)` tag, and the server admits
+//! each frame **at most once** — by seq watermark in async mode, by
+//! `(step, worker)` in sync mode — so client retries after dropped
+//! frames, lost acks or reconnects are idempotent. Barrier arrival is a
+//! worker-id *set*, so retried barriers can't inflate the quorum, and
+//! the barrier wait is bounded (tunable via
+//! [`PsShared::set_barrier_timeout`]) so a dead peer surfaces as a
+//! retryable error, never a hang.
 
 use std::collections::btree_map::Entry as BtreeEntry;
 use std::collections::{BTreeMap, BTreeSet};
@@ -21,7 +31,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::{self, JoinHandle};
 
-use super::compress::CompressedRef;
+use super::compress::{CompressedRef, DenseRef};
 use super::shard::{ShardStore, StripedStore, DEFAULT_STRIPES};
 use crate::net::message::{wire, Message};
 use crate::net::transport::{TcpTransport, Transport};
@@ -63,8 +73,11 @@ type StripeAgg = BTreeMap<u64, BTreeMap<u32, (Tensor, u32)>>;
 
 /// Per-step barrier bookkeeping, shared across stripes.
 struct BarrierState {
-    /// step -> workers arrived at the barrier (released steps removed).
-    arrived: BTreeMap<u64, usize>,
+    /// step -> ids of workers arrived at the barrier (released steps
+    /// removed). A *set*, not a count: a worker that retries its barrier
+    /// after a fault (reconnect, timeout error) must not be counted
+    /// twice toward the quorum — re-arrival is idempotent.
+    arrived: BTreeMap<u64, BTreeSet<u32>>,
     /// Steps < `released_below` have been aggregated and released.
     /// (Half-open so step 0 is NOT considered released at init — a
     /// closed `released: u64 = 0` sentinel let step-0 barriers pass
@@ -96,6 +109,13 @@ struct SyncShared {
     released_floor: AtomicU64,
     /// stripe (key % n) -> aggregation maps for that stripe's keys.
     agg: Vec<Mutex<StripeAgg>>,
+    /// step -> workers whose push frame already folded into that step's
+    /// sums. The sync-mode idempotency gate: a replayed frame (client
+    /// retry after a lost ack), a wire-duplicated frame, or a restarted
+    /// worker re-pushing its interrupted step is acked but folded at
+    /// most once per `(step, worker)`. One small mutex taken once per
+    /// *frame* (not per key), evicted with the release horizon.
+    contributed: Mutex<BTreeMap<u64, BTreeSet<u32>>>,
 }
 
 impl SyncShared {
@@ -107,7 +127,19 @@ impl SyncShared {
             }),
             released_floor: AtomicU64::new(0),
             agg: (0..n_stripes).map(|_| Mutex::new(StripeAgg::new())).collect(),
+            contributed: Mutex::new(BTreeMap::new()),
         }
+    }
+
+    /// Admit one push frame for folding: true exactly once per
+    /// `(step, worker)`.
+    fn admit(&self, step: u64, worker: u32) -> bool {
+        self.contributed
+            .lock()
+            .unwrap()
+            .entry(step)
+            .or_default()
+            .insert(worker)
     }
 
     fn push_window(&self, step: u64) -> PushWindow {
@@ -132,6 +164,15 @@ pub struct PsShared {
     pub counters: Counters,
     mode: UpdateMode,
     sync: SyncShared,
+    /// Async-mode idempotency gate: worker -> highest admitted push seq.
+    /// Client seqs are monotone per worker, so a replayed or
+    /// wire-duplicated frame (seq <= watermark) is acked without
+    /// re-applying its gradients.
+    applied_seq: Mutex<BTreeMap<u32, u64>>,
+    /// Sync-barrier wait in milliseconds before a waiter gets a
+    /// retryable error (default [`BARRIER_TIMEOUT`]); tunable so
+    /// fault-tolerant deployments surface dead peers quickly.
+    barrier_timeout_ms: AtomicU64,
     barrier_cv: Condvar,
     stop: AtomicBool,
 }
@@ -149,6 +190,8 @@ impl PsShared {
             counters: Counters::default(),
             mode,
             sync: SyncShared::with_stripes(n_stripes),
+            applied_seq: Mutex::new(BTreeMap::new()),
+            barrier_timeout_ms: AtomicU64::new(BARRIER_TIMEOUT.as_millis() as u64),
             barrier_cv: Condvar::new(),
             stop: AtomicBool::new(false),
         })
@@ -156,6 +199,39 @@ impl PsShared {
 
     pub fn stopped(&self) -> bool {
         self.stop.load(Ordering::Relaxed)
+    }
+
+    /// Override how long a sync-barrier waiter blocks before erroring
+    /// (peer-death detection). Chaos tests and fault-tolerant
+    /// deployments set this low so workers retry instead of stalling.
+    pub fn set_barrier_timeout(&self, d: std::time::Duration) {
+        self.barrier_timeout_ms
+            .store((d.as_millis() as u64).max(1), Ordering::Relaxed);
+    }
+
+    fn barrier_timeout(&self) -> std::time::Duration {
+        std::time::Duration::from_millis(self.barrier_timeout_ms.load(Ordering::Relaxed))
+    }
+
+    /// Async-mode push admission: true exactly once per `(worker, seq)`
+    /// high-water mark (seqs are monotone per worker). Duplicates and
+    /// replays are acked but not re-applied.
+    fn admit_async_push(&self, worker: u32, seq: u64) -> bool {
+        let mut m = self.applied_seq.lock().unwrap();
+        match m.entry(worker) {
+            BtreeEntry::Occupied(mut o) => {
+                if seq > *o.get() {
+                    *o.get_mut() = seq;
+                    true
+                } else {
+                    false
+                }
+            }
+            BtreeEntry::Vacant(v) => {
+                v.insert(seq);
+                true
+            }
+        }
     }
 
     /// Number of distinct sync steps currently buffered across arrival
@@ -174,6 +250,7 @@ impl PsShared {
         for stripe in &self.sync.agg {
             steps.extend(stripe.lock().unwrap().keys().copied());
         }
+        steps.extend(self.sync.contributed.lock().unwrap().keys().copied());
         steps.len()
     }
 }
@@ -186,22 +263,34 @@ impl PsShared {
 /// O(params) barrier memory the dense path pays.)
 fn handle_compressed_push(frame: &[u8], shared: &PsShared) -> Message {
     shared.counters.pushes.fetch_add(1, Ordering::Relaxed);
-    let mut body = match wire::CompressedPushBody::decode(frame) {
+    // Structural pre-validation of the WHOLE frame before admission: a
+    // truncated/corrupt frame must not consume the idempotency ticket —
+    // the (worker, seq) / (step, worker) slot stays free so the
+    // client's intact replay still applies.
+    let mut check = match wire::CompressedPushBody::decode(frame) {
         Ok(b) => b,
         Err(e) => return Message::Error { what: e },
     };
-    let step = body.step;
+    while let Some(entry) = check.next_entry() {
+        if let Err(e) = entry {
+            return Message::Error { what: e };
+        }
+    }
+    let mut body = wire::CompressedPushBody::decode(frame).expect("validated above");
+    let (worker, step, seq) = (body.worker, body.step, body.seq);
     match shared.mode {
         UpdateMode::Async => {
-            while let Some(entry) = body.next_entry() {
-                let (key, grad) = match entry {
-                    Ok(x) => x,
-                    Err(e) => return Message::Error { what: e },
-                };
-                if let Err(e) = shared.store.apply_compressed(key, &grad) {
-                    return Message::Error { what: e };
+            if shared.admit_async_push(worker, seq) {
+                while let Some(entry) = body.next_entry() {
+                    let (key, grad) = match entry {
+                        Ok(x) => x,
+                        Err(e) => return Message::Error { what: e },
+                    };
+                    if let Err(e) = shared.store.apply_compressed(key, &grad) {
+                        return Message::Error { what: e };
+                    }
+                    shared.counters.updates.fetch_add(1, Ordering::Relaxed);
                 }
-                shared.counters.updates.fetch_add(1, Ordering::Relaxed);
             }
             Message::PushAck { clock: shared.store.clock() }
         }
@@ -218,12 +307,14 @@ fn handle_compressed_push(frame: &[u8], shared: &PsShared) -> Message {
                     );
                 }
                 PushWindow::Open => {
-                    while let Some(entry) = body.next_entry() {
-                        let (key, grad) = match entry {
-                            Ok(x) => x,
-                            Err(e) => return Message::Error { what: e },
-                        };
-                        fold_sync_compressed(shared, step, key, &grad);
+                    if shared.sync.admit(step, worker) {
+                        while let Some(entry) = body.next_entry() {
+                            let (key, grad) = match entry {
+                                Ok(x) => x,
+                                Err(e) => return Message::Error { what: e },
+                            };
+                            fold_sync_compressed(shared, step, key, &grad);
+                        }
                     }
                 }
             }
@@ -232,19 +323,94 @@ fn handle_compressed_push(frame: &[u8], shared: &PsShared) -> Message {
     }
 }
 
-/// Fold one dense pushed gradient into the striped sync aggregation:
-/// the first contribution moves the tensor in as the running sum, later
-/// ones axpy into it. (Agg-stripe lock then store-stripe lock — the
-/// same order everywhere, so no lock cycle.)
-fn fold_sync_dense(shared: &PsShared, step: u64, key: u32, g: Tensor) {
+/// Streaming dense-push handler, the dense twin of
+/// [`handle_compressed_push`]: entries decode as borrowed [`DenseRef`]
+/// views straight from the frame (`wire::PushBody`) and apply into the
+/// store (async) or fold into the striped sync aggregation without
+/// materializing an owned tensor per entry. (Sync mode materializes one
+/// running sum per key per step on the *first* contribution — the same
+/// O(params) barrier memory as before.) Replayed frames are admitted at
+/// most once: per `(worker, seq)` watermark in async mode, per
+/// `(step, worker)` in sync mode.
+fn handle_dense_push(frame: &[u8], shared: &PsShared) -> Message {
+    shared.counters.pushes.fetch_add(1, Ordering::Relaxed);
+    // Structural pre-validation before admission, as in
+    // [`handle_compressed_push`]: only a fully well-formed frame may
+    // consume its idempotency ticket.
+    let mut check = match wire::PushBody::decode(frame) {
+        Ok(b) => b,
+        Err(e) => return Message::Error { what: e },
+    };
+    while let Some(entry) = check.next_entry() {
+        if let Err(e) = entry {
+            return Message::Error { what: e };
+        }
+    }
+    let mut body = wire::PushBody::decode(frame).expect("validated above");
+    let (worker, step, seq) = (body.worker, body.step, body.seq);
+    match shared.mode {
+        UpdateMode::Async => {
+            if shared.admit_async_push(worker, seq) {
+                while let Some(entry) = body.next_entry() {
+                    let (key, grad) = match entry {
+                        Ok(x) => x,
+                        Err(e) => return Message::Error { what: e },
+                    };
+                    if let Err(e) = shared.store.apply_dense(key, &grad) {
+                        return Message::Error { what: e };
+                    }
+                    shared.counters.updates.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Message::PushAck { clock: shared.store.clock() }
+        }
+        UpdateMode::Sync { .. } => {
+            match shared.sync.push_window(step) {
+                PushWindow::Released => {
+                    // Straggler push for a released step — discarded.
+                }
+                PushWindow::Beyond => {
+                    crate::warn_log!(
+                        "ps",
+                        "push beyond pending-step cap discarded",
+                        step = step
+                    );
+                }
+                PushWindow::Open => {
+                    if shared.sync.admit(step, worker) {
+                        while let Some(entry) = body.next_entry() {
+                            let (key, grad) = match entry {
+                                Ok(x) => x,
+                                Err(e) => return Message::Error { what: e },
+                            };
+                            fold_sync_dense_ref(shared, step, key, &grad);
+                        }
+                    }
+                }
+            }
+            Message::PushAck { clock: shared.store.clock() }
+        }
+    }
+}
+
+/// Fold one dense pushed gradient (as a borrowed wire view) into the
+/// striped sync aggregation: the first contribution materializes the
+/// running sum once — the step's one dense allocation per key — and
+/// later ones axpy straight from the frame bytes. (Agg-stripe lock then
+/// store-stripe lock — the same order everywhere, so no lock cycle.)
+fn fold_sync_dense_ref(shared: &PsShared, step: u64, key: u32, g: &DenseRef) {
     let mut agg = shared.sync.agg_stripe(key).lock().unwrap();
     let slot = agg.entry(step).or_default();
     match slot.entry(key) {
         BtreeEntry::Occupied(mut o) => {
             let (sum, n) = o.get_mut();
             if sum.shape() == g.shape() {
-                sum.axpy(1.0, &g);
-                *n += 1;
+                match g.axpy_into(1.0, sum.data_mut()) {
+                    Ok(()) => *n += 1,
+                    Err(e) => {
+                        crate::warn_log!("ps", "sync push discarded", key = key, err = e)
+                    }
+                }
             } else {
                 crate::warn_log!("ps", "sync push shape mismatch discarded", key = key);
             }
@@ -255,9 +421,7 @@ fn fold_sync_dense(shared: &PsShared, step: u64, key: u32, g: Tensor) {
             // every later correct push for this key.
             match shared.store.with_tensor(key, |stored| stored.shape() == g.shape()) {
                 Some(true) => {
-                    // The pushed tensor becomes the running sum (moved,
-                    // not cloned).
-                    v.insert((g, 1));
+                    v.insert((g.to_tensor(), 1));
                 }
                 Some(false) => {
                     crate::warn_log!("ps", "sync push shape mismatch discarded", key = key)
@@ -268,7 +432,7 @@ fn fold_sync_dense(shared: &PsShared, step: u64, key: u32, g: Tensor) {
     }
 }
 
-/// Compressed twin of [`fold_sync_dense`]: scatter the borrowed view
+/// Compressed twin of [`fold_sync_dense_ref`]: scatter the borrowed view
 /// into the running sum (first contribution scatters into fresh zeros
 /// of the stored shape — the step's one dense allocation per key).
 fn fold_sync_compressed(shared: &PsShared, step: u64, key: u32, g: &CompressedRef) {
@@ -348,6 +512,12 @@ fn release_step(shared: &PsShared, bar: &mut BarrierState, step: u64) {
     for stripe in &shared.sync.agg {
         stripe.lock().unwrap().retain(|&s, _| s >= horizon);
     }
+    shared
+        .sync
+        .contributed
+        .lock()
+        .unwrap()
+        .retain(|&s, _| s >= horizon);
 }
 
 /// Handle one connection until Shutdown/disconnect. Usable directly with
@@ -362,6 +532,8 @@ pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
         let received = t.recv_with(&mut |frame| {
             if wire::is_compressed_push(frame) {
                 reply = Some(handle_compressed_push(frame, &shared));
+            } else if wire::is_push(frame) {
+                reply = Some(handle_dense_push(frame, &shared));
             } else {
                 fallback = Some(Message::decode(frame)?);
             }
@@ -406,49 +578,12 @@ pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
                     return;
                 }
             }
-            Message::Push { step, entries, .. } => {
-                shared.counters.pushes.fetch_add(1, Ordering::Relaxed);
-                let reply = match shared.mode {
-                    UpdateMode::Async => {
-                        let mut err = None;
-                        for (k, g) in &entries {
-                            if let Err(e) = shared.store.apply_grad(*k, g) {
-                                err = Some(e);
-                                break;
-                            }
-                            shared.counters.updates.fetch_add(1, Ordering::Relaxed);
-                        }
-                        match err {
-                            Some(e) => Message::Error { what: e },
-                            None => Message::PushAck { clock: shared.store.clock() },
-                        }
-                    }
-                    UpdateMode::Sync { .. } => {
-                        match shared.sync.push_window(step) {
-                            PushWindow::Released => {
-                                // Straggler push for a released step — discarded.
-                            }
-                            PushWindow::Beyond => {
-                                crate::warn_log!(
-                                    "ps",
-                                    "push beyond pending-step cap discarded",
-                                    step = step
-                                );
-                            }
-                            PushWindow::Open => {
-                                for (k, g) in entries {
-                                    fold_sync_dense(&shared, step, k, g);
-                                }
-                            }
-                        }
-                        Message::PushAck { clock: shared.store.clock() }
-                    }
-                };
-                if t.send(&reply).is_err() {
-                    return;
-                }
-            }
-            Message::Barrier { step, .. } => {
+            // NOTE: Push and CompressedPush never reach this owned
+            // match — serve() routes their frames by tag into the
+            // streaming handlers above, which own the admission logic;
+            // an owned variant arriving here would mean the routing
+            // broke, and falls through to the `other` arm.
+            Message::Barrier { worker, step } => {
                 let UpdateMode::Sync { expected_workers, backup_workers } = shared.mode else {
                     let _ = t.send(&Message::Error {
                         what: "barrier in async mode".into(),
@@ -478,9 +613,12 @@ pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
                     continue;
                 }
                 let quorum = expected_workers.saturating_sub(backup_workers).max(1);
-                let arrived = bar.arrived.entry(step).or_insert(0);
-                *arrived += 1;
-                if *arrived >= quorum {
+                // Arrival is a worker-id set: a retried barrier (fault
+                // recovery) re-inserts the same id and cannot inflate
+                // the quorum.
+                let arrived = bar.arrived.entry(step).or_default();
+                arrived.insert(worker);
+                if arrived.len() >= quorum {
                     // Last arriver applies the aggregated means: one
                     // scale + one optimizer step per key, draining the
                     // sums stripe by stripe.
@@ -491,7 +629,7 @@ pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
                     // Bounded wait: if a peer worker dies mid-step the
                     // barrier can never fill — error out instead of
                     // deadlocking the cluster.
-                    let deadline = std::time::Instant::now() + BARRIER_TIMEOUT;
+                    let deadline = std::time::Instant::now() + shared.barrier_timeout();
                     let mut timed_out = false;
                     while bar.released_below <= step && !shared.stopped() {
                         let now = std::time::Instant::now();
@@ -507,15 +645,14 @@ pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
                     }
                     if timed_out {
                         // Withdraw only this waiter's arrival (so a retry
-                        // is not double-counted toward quorum). The
-                        // stripes keep their gradient sums: peers that
-                        // already pushed may still barrier and release
-                        // this step. Memory stays bounded regardless —
-                        // pending steps live in the MAX_PENDING_STEPS
-                        // window above released_below, at one running sum
-                        // per key.
+                        // re-arms cleanly). The stripes keep their
+                        // gradient sums: peers that already pushed may
+                        // still barrier and release this step. Memory
+                        // stays bounded regardless — pending steps live
+                        // in the MAX_PENDING_STEPS window above
+                        // released_below, at one running sum per key.
                         if let Some(a) = bar.arrived.get_mut(&step) {
-                            *a = a.saturating_sub(1);
+                            a.remove(&worker);
                         }
                         drop(bar);
                         let _ = t.send(&Message::Error {
@@ -662,6 +799,7 @@ mod tests {
         c.send(&Message::Push {
             worker: 0,
             step: 0,
+            seq: 0,
             entries: vec![(0, Tensor::from_vec(&[2], vec![2.0, 2.0]))],
         })
         .unwrap();
@@ -676,6 +814,154 @@ mod tests {
         }
         drop(c);
         h.join().unwrap();
+    }
+
+    #[test]
+    fn async_replayed_push_applies_once() {
+        // A replayed frame — same (worker, seq), the client's retry after
+        // a lost ack — must be acked but not re-applied; a fresh seq from
+        // the same worker applies again.
+        let store = store_with(&[(0, vec![0.0])], Optimizer::Sgd { lr: 1.0 });
+        let shared = PsShared::new(store, UpdateMode::Async);
+        let (client_end, server_end) = InProcTransport::pair();
+        let h = thread::spawn({
+            let sh = shared.clone();
+            move || serve(Box::new(server_end), sh)
+        });
+        let mut c: Box<dyn Transport> = Box::new(client_end);
+        let push = Message::Push {
+            worker: 3,
+            step: 0,
+            seq: 0,
+            entries: vec![(0, Tensor::from_vec(&[1], vec![2.0]))],
+        };
+        for _ in 0..3 {
+            c.send(&push).unwrap();
+            assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+        }
+        assert_eq!(shared.store.get_clone(0).unwrap().data(), &[-2.0]);
+        assert_eq!(shared.counters.updates.load(Ordering::Relaxed), 1);
+        assert_eq!(shared.counters.pushes.load(Ordering::Relaxed), 3);
+        // Fresh seq applies; stale (lower) seq after it does not.
+        c.send(&Message::Push {
+            worker: 3,
+            step: 1,
+            seq: 5,
+            entries: vec![(0, Tensor::from_vec(&[1], vec![1.0]))],
+        })
+        .unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+        c.send(&Message::Push {
+            worker: 3,
+            step: 2,
+            seq: 4,
+            entries: vec![(0, Tensor::from_vec(&[1], vec![100.0]))],
+        })
+        .unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+        assert_eq!(shared.store.get_clone(0).unwrap().data(), &[-3.0]);
+        // A different worker's seq 0 is independent.
+        c.send(&Message::Push {
+            worker: 4,
+            step: 0,
+            seq: 0,
+            entries: vec![(0, Tensor::from_vec(&[1], vec![1.0]))],
+        })
+        .unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+        assert_eq!(shared.store.get_clone(0).unwrap().data(), &[-4.0]);
+        drop(c);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn corrupt_push_does_not_consume_idempotency_ticket() {
+        // A truncated push frame is rejected BEFORE admission, so the
+        // client's intact replay of the same (worker, seq) still
+        // applies — a corrupt first attempt must not eat the ticket.
+        let store = store_with(&[(0, vec![0.0, 0.0])], Optimizer::Sgd { lr: 1.0 });
+        let shared = PsShared::new(store, UpdateMode::Async);
+        let (client_end, server_end) = InProcTransport::pair();
+        let h = thread::spawn({
+            let sh = shared.clone();
+            move || serve(Box::new(server_end), sh)
+        });
+        let mut c: Box<dyn Transport> = Box::new(client_end);
+        let push = Message::Push {
+            worker: 0,
+            step: 0,
+            seq: 0,
+            entries: vec![(0, Tensor::from_vec(&[2], vec![2.0, 4.0]))],
+        };
+        let frame = push.encode();
+        // Truncated body (header intact): structural validation fails.
+        c.send_with(&mut |w| w.raw(&frame[..frame.len() - 3])).unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::Error { .. }));
+        assert_eq!(shared.counters.updates.load(Ordering::Relaxed), 0);
+        // The intact replay under the SAME seq must apply.
+        c.send(&push).unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+        assert_eq!(shared.store.get_clone(0).unwrap().data(), &[-2.0, -4.0]);
+        assert_eq!(shared.counters.updates.load(Ordering::Relaxed), 1);
+        drop(c);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn sync_replayed_push_folds_once() {
+        // Sync-mode idempotency is per (step, worker): a replayed or
+        // duplicated frame must not double its gradient in the mean.
+        let store = store_with(&[(0, vec![0.0])], Optimizer::Sgd { lr: 1.0 });
+        let shared = PsShared::new(
+            store,
+            UpdateMode::Sync { expected_workers: 2, backup_workers: 0 },
+        );
+        let mut conns: Vec<Box<dyn Transport>> = Vec::new();
+        let mut serve_handles = Vec::new();
+        for _ in 0..2 {
+            let (c, s) = InProcTransport::pair();
+            let sh = shared.clone();
+            serve_handles.push(thread::spawn(move || serve(Box::new(s), sh)));
+            conns.push(Box::new(c));
+        }
+        // Worker 0 pushes step 0 three times (retry storm, rising seq —
+        // a restarted worker re-pushing its step); only one fold counts.
+        for seq in 0..3 {
+            conns[0]
+                .send(&Message::Push {
+                    worker: 0,
+                    step: 0,
+                    seq,
+                    entries: vec![(0, Tensor::from_vec(&[1], vec![2.0]))],
+                })
+                .unwrap();
+            assert!(matches!(conns[0].recv().unwrap(), Message::PushAck { .. }));
+        }
+        conns[1]
+            .send(&Message::Push {
+                worker: 1,
+                step: 0,
+                seq: 0,
+                entries: vec![(0, Tensor::from_vec(&[1], vec![4.0]))],
+            })
+            .unwrap();
+        assert!(matches!(conns[1].recv().unwrap(), Message::PushAck { .. }));
+        let mut joins = Vec::new();
+        for (w, mut c) in conns.into_iter().enumerate() {
+            joins.push(thread::spawn(move || {
+                c.send(&Message::Barrier { worker: w as u32, step: 0 }).unwrap();
+                assert!(matches!(c.recv().unwrap(), Message::BarrierRelease { step: 0 }));
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        // mean = (2 + 4) / 2 = 3, NOT (2 + 2 + 2 + 4) / 4.
+        assert_eq!(shared.store.get_clone(0).unwrap().data(), &[-3.0]);
+        assert_eq!(shared.pending_steps(), 0);
+        for h in serve_handles {
+            h.join().unwrap();
+        }
     }
 
     #[test]
@@ -695,6 +981,7 @@ mod tests {
         c.send(&Message::CompressedPush {
             worker: 0,
             step: 0,
+            seq: 0,
             entries: vec![
                 (0, Compressed::Sparse { numel: 8, idx: vec![1, 5], val: vec![2.0, -1.0] }),
                 (1, Compressed::Quant8 { numel: 4, scale: 1.0, q: vec![127, -5, 0, 3] }),
@@ -728,6 +1015,7 @@ mod tests {
         c.send(&Message::CompressedPush {
             worker: 0,
             step: 0,
+            seq: 0,
             entries: vec![(9, Compressed::Sparse { numel: 2, idx: vec![0], val: vec![1.0] })],
         })
         .unwrap();
@@ -760,6 +1048,7 @@ mod tests {
                 c.send(&Message::CompressedPush {
                     worker: idx,
                     step: 0,
+                    seq: 0,
                     entries: vec![(
                         0,
                         Compressed::Sparse { numel: 2, idx: vec![idx], val: vec![val] },
@@ -810,25 +1099,26 @@ mod tests {
         .unwrap();
         let addr = srv.addr;
 
-        let worker = |grad: f32| {
+        let worker = |id: u32, grad: f32| {
             let addr = addr;
             thread::spawn(move || {
                 let mut c = connect(addr).unwrap();
                 c.send(&Message::Push {
-                    worker: 0,
+                    worker: id,
                     step: 1,
+                    seq: 0,
                     entries: vec![(0, Tensor::from_vec(&[1], vec![grad]))],
                 })
                 .unwrap();
                 assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
-                c.send(&Message::Barrier { worker: 0, step: 1 }).unwrap();
+                c.send(&Message::Barrier { worker: id, step: 1 }).unwrap();
                 assert!(matches!(
                     c.recv().unwrap(),
                     Message::BarrierRelease { step: 1 }
                 ));
             })
         };
-        let (w1, w2) = (worker(2.0), worker(4.0));
+        let (w1, w2) = (worker(0, 2.0), worker(1, 4.0));
         w1.join().unwrap();
         w2.join().unwrap();
 
@@ -864,21 +1154,22 @@ mod tests {
         .unwrap();
         let addr = srv.addr;
 
-        let fast = |grad: f32| {
+        let fast = |id: u32, grad: f32| {
             thread::spawn(move || {
                 let mut c = connect(addr).unwrap();
                 c.send(&Message::Push {
-                    worker: 0,
+                    worker: id,
                     step: 0,
+                    seq: 0,
                     entries: vec![(0, Tensor::from_vec(&[1], vec![grad]))],
                 })
                 .unwrap();
                 assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
-                c.send(&Message::Barrier { worker: 0, step: 0 }).unwrap();
+                c.send(&Message::Barrier { worker: id, step: 0 }).unwrap();
                 assert!(matches!(c.recv().unwrap(), Message::BarrierRelease { step: 0 }));
             })
         };
-        let (a, b) = (fast(2.0), fast(4.0));
+        let (a, b) = (fast(0, 2.0), fast(1, 4.0));
         a.join().unwrap();
         b.join().unwrap();
 
@@ -887,6 +1178,7 @@ mod tests {
         c.send(&Message::Push {
             worker: 2,
             step: 0,
+            seq: 0,
             entries: vec![(0, Tensor::from_vec(&[1], vec![100.0]))],
         })
         .unwrap();
@@ -939,6 +1231,7 @@ mod tests {
         a.send(&Message::Push {
             worker: 0,
             step: 0,
+            seq: 0,
             entries: vec![(0, Tensor::from_vec(&[1], vec![7.0]))],
         })
         .unwrap();
@@ -950,6 +1243,7 @@ mod tests {
         b.send(&Message::Push {
             worker: 1,
             step: 1,
+            seq: 0,
             entries: vec![(0, Tensor::from_vec(&[1], vec![4.0]))],
         })
         .unwrap();
@@ -994,6 +1288,7 @@ mod tests {
         c.send(&Message::Push {
             worker: 0,
             step: MAX_PENDING_STEPS,
+            seq: 0,
             entries: vec![(0, Tensor::from_vec(&[1], vec![100.0]))],
         })
         .unwrap();
@@ -1004,6 +1299,7 @@ mod tests {
         c.send(&Message::Push {
             worker: 0,
             step: 0,
+            seq: 1,
             entries: vec![(0, Tensor::from_vec(&[1], vec![2.0]))],
         })
         .unwrap();
@@ -1043,6 +1339,7 @@ mod tests {
         c.send(&Message::Push {
             worker: 0,
             step: 0,
+            seq: 0,
             entries: vec![(0, Tensor::from_vec(&[1], vec![2.0]))],
         })
         .unwrap();
@@ -1052,6 +1349,223 @@ mod tests {
         assert_eq!(shared.store.get_clone(0).unwrap().data(), &[-2.0]);
         drop(c);
         h.join().unwrap();
+    }
+
+    #[test]
+    fn runaway_pushes_bounded_by_pending_cap() {
+        // A runaway worker pushing every step in (and beyond) the window
+        // without ever reaching a barrier cannot grow server state past
+        // MAX_PENDING_STEPS buffered steps.
+        let store = store_with(&[(0, vec![0.0])], Optimizer::Sgd { lr: 1.0 });
+        let shared = PsShared::new(
+            store,
+            UpdateMode::Sync { expected_workers: 2, backup_workers: 0 },
+        );
+        let (client_end, server_end) = InProcTransport::pair();
+        let h = thread::spawn({
+            let sh = shared.clone();
+            move || serve(Box::new(server_end), sh)
+        });
+        let mut c: Box<dyn Transport> = Box::new(client_end);
+        for step in 0..MAX_PENDING_STEPS + 10 {
+            c.send(&Message::Push {
+                worker: 0,
+                step,
+                seq: step,
+                entries: vec![(0, Tensor::from_vec(&[1], vec![1.0]))],
+            })
+            .unwrap();
+            assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+        }
+        assert_eq!(shared.pending_steps(), MAX_PENDING_STEPS as usize);
+        drop(c);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn orphan_eviction_spans_multiple_steps() {
+        // Several orphaned steps (dead stragglers that never barriered)
+        // below the release horizon are all garbage-collected by one
+        // release — pending state returns to zero, and late barriers for
+        // the dead steps are waved through.
+        let store = store_with(&[(0, vec![0.0])], Optimizer::Sgd { lr: 1.0 });
+        let shared = PsShared::new(
+            store,
+            UpdateMode::Sync { expected_workers: 2, backup_workers: 1 }, // quorum 1
+        );
+        let (client_a, server_a) = InProcTransport::pair();
+        let (client_b, server_b) = InProcTransport::pair();
+        let ha = thread::spawn({
+            let sh = shared.clone();
+            move || serve(Box::new(server_a), sh)
+        });
+        let hb = thread::spawn({
+            let sh = shared.clone();
+            move || serve(Box::new(server_b), sh)
+        });
+        let mut a: Box<dyn Transport> = Box::new(client_a);
+        let mut b: Box<dyn Transport> = Box::new(client_b);
+        // A litters steps 0..4 with sums, then "dies".
+        for step in 0..4u64 {
+            a.send(&Message::Push {
+                worker: 0,
+                step,
+                seq: step,
+                entries: vec![(0, Tensor::from_vec(&[1], vec![1.0]))],
+            })
+            .unwrap();
+            assert!(matches!(a.recv().unwrap(), Message::PushAck { .. }));
+        }
+        assert_eq!(shared.pending_steps(), 4);
+        // B releases step 5 (quorum 1): every orphan below evicts.
+        b.send(&Message::Push {
+            worker: 1,
+            step: 5,
+            seq: 0,
+            entries: vec![(0, Tensor::from_vec(&[1], vec![2.0]))],
+        })
+        .unwrap();
+        assert!(matches!(b.recv().unwrap(), Message::PushAck { .. }));
+        b.send(&Message::Barrier { worker: 1, step: 5 }).unwrap();
+        assert!(matches!(b.recv().unwrap(), Message::BarrierRelease { step: 5 }));
+        assert_eq!(shared.pending_steps(), 0);
+        assert_eq!(shared.store.get_clone(0).unwrap().data(), &[-2.0]);
+        // A's late barriers for its dead steps are waved through.
+        for step in 0..4u64 {
+            a.send(&Message::Barrier { worker: 0, step }).unwrap();
+            assert!(matches!(a.recv().unwrap(), Message::BarrierRelease { .. }));
+        }
+        drop(a);
+        drop(b);
+        ha.join().unwrap();
+        hb.join().unwrap();
+    }
+
+    #[test]
+    fn compressed_push_beyond_cap_discarded() {
+        // The MAX_PENDING_STEPS window applies to compressed pushes too.
+        use crate::ps::compress::Compressed;
+        let store = store_with(&[(0, vec![0.0])], Optimizer::Sgd { lr: 1.0 });
+        let shared = PsShared::new(
+            store,
+            UpdateMode::Sync { expected_workers: 1, backup_workers: 0 },
+        );
+        let (client_end, server_end) = InProcTransport::pair();
+        let h = thread::spawn({
+            let sh = shared.clone();
+            move || serve(Box::new(server_end), sh)
+        });
+        let mut c: Box<dyn Transport> = Box::new(client_end);
+        c.send(&Message::CompressedPush {
+            worker: 0,
+            step: MAX_PENDING_STEPS,
+            seq: 0,
+            entries: vec![(0, Compressed::Sparse { numel: 1, idx: vec![0], val: vec![9.0] })],
+        })
+        .unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+        assert_eq!(shared.pending_steps(), 0);
+        drop(c);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn barrier_timeout_withdraws_arrival_and_retry_succeeds() {
+        // With a short configured timeout, a lone waiter gets a
+        // retryable error, its arrival is withdrawn (no phantom quorum
+        // member), and a later retry together with the missing peer
+        // releases normally.
+        let store = store_with(&[(0, vec![0.0])], Optimizer::Sgd { lr: 1.0 });
+        let shared = PsShared::new(
+            store,
+            UpdateMode::Sync { expected_workers: 2, backup_workers: 0 },
+        );
+        shared.set_barrier_timeout(std::time::Duration::from_millis(100));
+        let (client_a, server_a) = InProcTransport::pair();
+        let (client_b, server_b) = InProcTransport::pair();
+        let ha = thread::spawn({
+            let sh = shared.clone();
+            move || serve(Box::new(server_a), sh)
+        });
+        let hb = thread::spawn({
+            let sh = shared.clone();
+            move || serve(Box::new(server_b), sh)
+        });
+        let mut a: Box<dyn Transport> = Box::new(client_a);
+        let mut b: Box<dyn Transport> = Box::new(client_b);
+        for (w, c) in [(0u32, &mut a), (1, &mut b)] {
+            c.send(&Message::Push {
+                worker: w,
+                step: 0,
+                seq: 0,
+                entries: vec![(0, Tensor::from_vec(&[1], vec![2.0]))],
+            })
+            .unwrap();
+            assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+        }
+        // A waits alone and times out with a retryable error.
+        a.send(&Message::Barrier { worker: 0, step: 0 }).unwrap();
+        match a.recv().unwrap() {
+            Message::Error { what } => assert!(what.contains("barrier timeout"), "{what}"),
+            m => panic!("expected timeout error, got {m:?}"),
+        }
+        // Retry from A plus B's arrival releases the step exactly once.
+        let hb2 = thread::spawn(move || {
+            b.send(&Message::Barrier { worker: 1, step: 0 }).unwrap();
+            assert!(matches!(b.recv().unwrap(), Message::BarrierRelease { step: 0 }));
+            b
+        });
+        a.send(&Message::Barrier { worker: 0, step: 0 }).unwrap();
+        assert!(matches!(a.recv().unwrap(), Message::BarrierRelease { step: 0 }));
+        let b = hb2.join().unwrap();
+        // mean of [2, 2] applied once: w = -2.
+        assert_eq!(shared.store.get_clone(0).unwrap().data(), &[-2.0]);
+        assert_eq!(shared.counters.updates.load(Ordering::Relaxed), 1);
+        drop(a);
+        drop(b);
+        ha.join().unwrap();
+        hb.join().unwrap();
+    }
+
+    #[test]
+    fn duplicate_barrier_does_not_inflate_quorum() {
+        // Two barrier frames from the SAME worker (a retry racing its
+        // withdrawn arrival, or a wire duplicate) must not satisfy a
+        // quorum of 2 on their own.
+        let store = store_with(&[(0, vec![0.0])], Optimizer::Sgd { lr: 1.0 });
+        let shared = PsShared::new(
+            store,
+            UpdateMode::Sync { expected_workers: 2, backup_workers: 0 },
+        );
+        shared.set_barrier_timeout(std::time::Duration::from_millis(100));
+        let mut conns: Vec<Box<dyn Transport>> = Vec::new();
+        let mut serve_handles = Vec::new();
+        for _ in 0..2 {
+            let (c, s) = InProcTransport::pair();
+            let sh = shared.clone();
+            serve_handles.push(thread::spawn(move || serve(Box::new(s), sh)));
+            conns.push(Box::new(c));
+        }
+        // Same worker id on both connections (a reconnected retry).
+        let mut joins = Vec::new();
+        for mut c in conns {
+            joins.push(thread::spawn(move || {
+                c.send(&Message::Barrier { worker: 7, step: 0 }).unwrap();
+                c.recv().unwrap()
+            }));
+        }
+        for j in joins {
+            // Without set-based arrival the duplicate would release the
+            // barrier; with it, both waiters time out.
+            match j.join().unwrap() {
+                Message::Error { what } => assert!(what.contains("barrier timeout"), "{what}"),
+                m => panic!("duplicate arrival released the barrier: {m:?}"),
+            }
+        }
+        assert_eq!(shared.counters.updates.load(Ordering::Relaxed), 0);
+        for h in serve_handles {
+            h.join().unwrap();
+        }
     }
 
     #[test]
@@ -1077,6 +1591,7 @@ mod tests {
             .send(&Message::Push {
                 worker: 0,
                 step: 0,
+                seq: 0,
                 entries: vec![(0, Tensor::from_vec(&[2], vec![9.0, 9.0]))],
             })
             .unwrap();
@@ -1087,6 +1602,7 @@ mod tests {
                 .send(&Message::Push {
                     worker: i as u32,
                     step: 0,
+                    seq: 0,
                     entries: vec![(0, Tensor::from_vec(&[1], vec![grad]))],
                 })
                 .unwrap();
@@ -1094,9 +1610,9 @@ mod tests {
         }
         // All three barrier; the mean of the two valid grads applies.
         let mut joins = Vec::new();
-        for mut c in conns {
+        for (w, mut c) in conns.into_iter().enumerate() {
             joins.push(thread::spawn(move || {
-                c.send(&Message::Barrier { worker: 0, step: 0 }).unwrap();
+                c.send(&Message::Barrier { worker: w as u32, step: 0 }).unwrap();
                 assert!(matches!(c.recv().unwrap(), Message::BarrierRelease { step: 0 }));
             }));
         }
@@ -1121,15 +1637,16 @@ mod tests {
         );
         let mut serve_handles = Vec::new();
         let mut handles = Vec::new();
-        for grad in [1.0f32, 2.0, 6.0, 11.0] {
+        for (w, grad) in [1.0f32, 2.0, 6.0, 11.0].into_iter().enumerate() {
             let (client_end, server_end) = InProcTransport::pair();
             let sh = shared.clone();
             serve_handles.push(thread::spawn(move || serve(Box::new(server_end), sh)));
             handles.push(thread::spawn(move || {
                 let mut c: Box<dyn Transport> = Box::new(client_end);
                 c.send(&Message::Push {
-                    worker: 0,
+                    worker: w as u32,
                     step: 0,
+                    seq: 0,
                     entries: vec![
                         (0, Tensor::from_vec(&[1], vec![grad])),
                         (1, Tensor::from_vec(&[1], vec![-grad])),
@@ -1137,7 +1654,7 @@ mod tests {
                 })
                 .unwrap();
                 assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
-                c.send(&Message::Barrier { worker: 0, step: 0 }).unwrap();
+                c.send(&Message::Barrier { worker: w as u32, step: 0 }).unwrap();
                 assert!(matches!(c.recv().unwrap(), Message::BarrierRelease { step: 0 }));
             }));
         }

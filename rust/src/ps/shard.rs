@@ -13,7 +13,7 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::RwLock;
 
-use super::compress::CompressedRef;
+use super::compress::{CompressedRef, DenseRef};
 use crate::tensor::Tensor;
 
 /// Server-side optimizer for applying pushed gradients.
@@ -266,6 +266,45 @@ impl StripedStore {
         Ok(())
     }
 
+    /// Apply one dense gradient streamed off the wire as a borrowed
+    /// [`DenseRef`] view — the streaming twin of
+    /// [`apply_grad`](Self::apply_grad), used by the dense-`Push`
+    /// streaming path (`wire::PushBody`) so no owned tensor is built
+    /// per pushed entry. A rejected gradient leaves parameter AND
+    /// optimizer state untouched.
+    pub fn apply_dense(&self, key: u32, grad: &DenseRef) -> Result<(), String> {
+        let mut guard = self.stripe(key).write().unwrap();
+        let Stripe { params, velocity } = &mut *guard;
+        let w = params
+            .get_mut(&key)
+            .ok_or_else(|| format!("unknown key {key}"))?;
+        if w.shape() != grad.shape() {
+            return Err(format!(
+                "grad shape {:?} != param shape {:?} for key {key}",
+                grad.shape(),
+                w.shape()
+            ));
+        }
+        match self.opt {
+            Optimizer::Sgd { lr } => {
+                grad.axpy_into(-lr, w.data_mut())?;
+            }
+            Optimizer::Momentum { lr, mu } => {
+                let v = velocity
+                    .entry(key)
+                    .or_insert_with(|| Tensor::zeros(w.shape()));
+                // Safe to mutate: the view's shape matched the parameter
+                // above, and v always has the same numel.
+                v.scale(mu);
+                grad.axpy_into(1.0, v.data_mut())?;
+                w.axpy(-lr, v);
+            }
+        }
+        drop(guard);
+        self.clock.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
     /// Sync-mode apply: consume a running gradient sum over `count`
     /// contributions, scale once, apply once (the barrier's O(1)-tensor
     /// replacement for reducing N buffered tensors).
@@ -416,6 +455,34 @@ mod tests {
         for (x, y) in a.data().iter().zip(b.data()) {
             assert!((x - y).abs() < 1e-6, "{x} vs {y}");
         }
+    }
+
+    #[test]
+    fn striped_apply_dense_view_matches_apply_grad() {
+        // Streaming dense apply must land bit-identical parameters (and
+        // momentum state) to the owned apply_grad path.
+        for opt in [Optimizer::Sgd { lr: 0.3 }, Optimizer::Momentum { lr: 0.1, mu: 0.9 }] {
+            let streamed = striped_with(&[(2, vec![1.0, -1.0, 0.5])], opt, 2);
+            let owned = striped_with(&[(2, vec![1.0, -1.0, 0.5])], opt, 2);
+            let g = Tensor::from_vec(&[3], vec![0.25, 4.0, -2.5]);
+            let bytes = g.to_le_bytes();
+            let view = DenseRef::new(vec![3], &bytes).unwrap();
+            for _ in 0..2 {
+                streamed.apply_dense(2, &view).unwrap();
+                owned.apply_grad(2, &g).unwrap();
+            }
+            assert_eq!(streamed.get_clone(2).unwrap(), owned.get_clone(2).unwrap());
+            assert_eq!(streamed.clock(), owned.clock());
+        }
+        // Unknown key / shape mismatch rejected without mutation.
+        let s = striped_with(&[(0, vec![0.0; 2])], Optimizer::Sgd { lr: 1.0 }, 2);
+        let g = Tensor::from_vec(&[3], vec![1.0; 3]);
+        let bytes = g.to_le_bytes();
+        let view = DenseRef::new(vec![3], &bytes).unwrap();
+        assert!(s.apply_dense(9, &view).is_err());
+        assert!(s.apply_dense(0, &view).is_err());
+        assert_eq!(s.get_clone(0).unwrap().data(), &[0.0, 0.0]);
+        assert_eq!(s.clock(), 0);
     }
 
     #[test]

@@ -23,6 +23,9 @@ use crate::worker::profiler::{Step, StepProfiler};
 pub struct PipelineConfig {
     pub lr: f32,
     pub steps: usize,
+    /// First step to run (restart-from-checkpoint resumes here; the
+    /// worker executes steps `start_step..steps`). Local runs ignore it.
+    pub start_step: usize,
     /// Loader queue depth; 0 disables pipelining (ablation mode — the
     /// paper's "low throughput of feeding training data" bottleneck).
     pub prefetch_depth: usize,
@@ -37,6 +40,7 @@ impl Default for PipelineConfig {
         PipelineConfig {
             lr: 0.01,
             steps: 100,
+            start_step: 0,
             prefetch_depth: 2,
             log_every: 0,
             codec: CodecKind::None,
@@ -125,28 +129,45 @@ where
 
 /// Distributed worker: pull -> grad_step -> push (steps 1–7), async or
 /// synchronous (barrier per step).
+///
+/// Runs steps `cfg.start_step..cfg.steps` (a restarted worker resumes
+/// where its previous incarnation died). After each fully committed
+/// step (push acked, barrier passed in sync mode) the optional
+/// `progress` counter is advanced to `step + 1` — the supervisor reads
+/// it to pick the resume point for a replacement worker.
 pub fn run_ps_worker<F>(
     grad_exe: &TrainExecutable,
     client: &mut PsClient,
     make_batch: F,
     cfg: &PipelineConfig,
     sync: bool,
+    progress: Option<&std::sync::atomic::AtomicUsize>,
 ) -> Result<WorkerStats, String>
 where
     F: FnMut(u64, usize) -> Batch + Send + 'static,
 {
     let mut profiler = StepProfiler::new();
-    let mut losses = Vec::with_capacity(cfg.steps);
+    let n_steps = cfg.steps.saturating_sub(cfg.start_step);
+    let mut losses = Vec::with_capacity(n_steps);
     let t0 = std::time::Instant::now();
     let batch_size = grad_exe.meta.batch;
     client.set_codec(cfg.codec);
     let wire_bytes_before = client.push_wire_bytes();
-    let mut loader = spawn_loader(make_batch, batch_size, cfg.steps, cfg.prefetch_depth);
+    // The loader resumes at the restart step's sample offset, so a
+    // restarted worker re-reads exactly the batches it has not yet
+    // committed.
+    let mut loader = PrefetchLoader::spawn(
+        make_batch,
+        (cfg.start_step * batch_size) as u64,
+        batch_size,
+        n_steps,
+        cfg.prefetch_depth.max(1),
+    );
     // One parameter buffer for the whole run: each refresh refills it in
     // place instead of allocating a fresh Vec per step.
     let mut params: Vec<Tensor> = Vec::new();
 
-    for step in 0..cfg.steps {
+    for step in cfg.start_step..cfg.steps {
         {
             let _t = profiler.time(Step::ParamRefresh);
             client.pull_all_into(&mut params)?;
@@ -166,12 +187,15 @@ where
                 client.barrier(step as u64)?;
             }
         }
+        if let Some(p) = progress {
+            p.store(step + 1, std::sync::atomic::Ordering::SeqCst);
+        }
         losses.push(out.loss);
         maybe_log(cfg, step, out.loss);
     }
 
     let wall_s = t0.elapsed().as_secs_f64();
-    let throughput = (cfg.steps * batch_size) as f64 / wall_s;
+    let throughput = (n_steps * batch_size) as f64 / wall_s;
     Ok(WorkerStats {
         losses,
         profiler,

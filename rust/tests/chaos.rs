@@ -1,0 +1,652 @@
+//! Chaos suite: the PS stack under deterministic fault injection.
+//!
+//! Every scenario drives the real protocol (PsClient retries and
+//! reconnects, server-side idempotent admission, bounded barriers,
+//! supervised restart) over in-proc transports wrapped in
+//! `net::fault::FaultyTransport`, on the synthetic quadratic task
+//! (loss = Σ|w − target|², grad = 2(w − target)) so outcomes are exact.
+//!
+//! Seeding: `DTLSDA_CHAOS_SEED` (default 1) parameterizes every plan —
+//! CI runs a small seed matrix. With a fixed seed each scenario is
+//! bit-reproducible: same final parameters, same injected-fault log.
+//!
+//! Liveness is part of the contract: every run executes under a
+//! watchdog thread; a hang fails the test before the CI job timeout.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use dtlsda::coordinator::checkpoint::Checkpoint;
+use dtlsda::coordinator::distributed::{conn_id, detect_stragglers, run_workers_with_restart};
+use dtlsda::net::fault::{FaultEvent, FaultLog, FaultPlan};
+use dtlsda::net::transport::{InProcTransport, Transport};
+use dtlsda::ps::client::PsClient;
+use dtlsda::ps::router::Router;
+use dtlsda::ps::server::{serve, PsShared, UpdateMode};
+use dtlsda::ps::shard::{Optimizer, ShardStore};
+use dtlsda::ps::CodecKind;
+use dtlsda::tensor::Tensor;
+use dtlsda::util::prop;
+use dtlsda::util::rng::Rng;
+
+/// CI seed-matrix knob.
+fn chaos_seed() -> u64 {
+    std::env::var("DTLSDA_CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1)
+}
+
+/// Run `f` on its own thread with a hang watchdog. A scenario that
+/// neither finishes nor errors within `secs` fails loudly here instead
+/// of stalling the whole suite.
+fn with_watchdog<T: Send + 'static>(
+    secs: u64,
+    name: &str,
+    f: impl FnOnce() -> T + Send + 'static,
+) -> T {
+    let (tx, rx) = mpsc::channel();
+    let h = thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(v) => {
+            let _ = h.join();
+            v
+        }
+        Err(_) => panic!("{name}: hang — watchdog fired after {secs}s"),
+    }
+}
+
+/// In-proc PS cluster over the quadratic task, with faultable
+/// (re)connections.
+struct ChaosCluster {
+    shareds: Vec<Arc<PsShared>>,
+    router: Router,
+    targets: Vec<Tensor>,
+    serve_handles: Mutex<Vec<thread::JoinHandle<()>>>,
+}
+
+impl ChaosCluster {
+    fn new(
+        seed: u64,
+        n_servers: usize,
+        n_workers: usize,
+        sync: bool,
+        lr: f32,
+        barrier_timeout_ms: u64,
+    ) -> Arc<Self> {
+        let shapes: Vec<Vec<usize>> = vec![vec![48], vec![6, 6], vec![96]];
+        let sizes: Vec<usize> =
+            shapes.iter().map(|s| s.iter().product::<usize>() * 4).collect();
+        let router = Router::new(&sizes, n_servers);
+        let mut rng = Rng::new(seed ^ 0x7A66_0001);
+        let targets: Vec<Tensor> = shapes
+            .iter()
+            .map(|s| {
+                let n: usize = s.iter().product();
+                Tensor::from_vec(s, (0..n).map(|_| rng.normal() as f32).collect())
+            })
+            .collect();
+        let mode = if sync {
+            UpdateMode::Sync { expected_workers: n_workers, backup_workers: 0 }
+        } else {
+            UpdateMode::Async
+        };
+        let shareds: Vec<Arc<PsShared>> = (0..n_servers)
+            .map(|s| {
+                let mut store = ShardStore::new(Optimizer::Sgd { lr });
+                for &k in router.keys_of(s) {
+                    store.insert(k, Tensor::zeros(&shapes[k as usize]));
+                }
+                let sh = PsShared::new(store, mode);
+                sh.set_barrier_timeout(Duration::from_millis(barrier_timeout_ms));
+                sh
+            })
+            .collect();
+        Arc::new(ChaosCluster {
+            shareds,
+            router,
+            targets,
+            serve_handles: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// One fresh connection to server `s`, wrapped in `plan`'s faults
+    /// (seeded by `conn`) unless the plan is a no-op. Each connection
+    /// gets its own serve thread; serve threads exit when the client
+    /// end drops.
+    fn connect(&self, s: usize, plan: &FaultPlan, log: &FaultLog, conn: u64) -> Box<dyn Transport> {
+        let (client_end, server_end) = InProcTransport::pair();
+        let sh = self.shareds[s].clone();
+        self.serve_handles
+            .lock()
+            .unwrap()
+            .push(thread::spawn(move || serve(Box::new(server_end), sh)));
+        if plan.is_noop() {
+            Box::new(client_end)
+        } else {
+            Box::new(plan.wrap(conn, log.clone(), Box::new(client_end)))
+        }
+    }
+
+    /// Join every serve thread spawned so far (call after all clients
+    /// are dropped; barrier waiters exit within the configured timeout).
+    fn join_serve_threads(&self) {
+        for h in self.serve_handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Faultable client with reconnect wired back into the cluster.
+fn make_client(
+    cluster: &Arc<ChaosCluster>,
+    worker: u32,
+    codec: CodecKind,
+    plan: FaultPlan,
+    log: FaultLog,
+    incarnation: u64,
+    retry: usize,
+) -> PsClient {
+    let n_servers = cluster.shareds.len();
+    let transports: Vec<Box<dyn Transport>> = (0..n_servers)
+        .map(|s| cluster.connect(s, &plan, &log, conn_id(worker as usize, s, incarnation, 0)))
+        .collect();
+    let mut client = PsClient::with_codec(worker, transports, cluster.router.clone(), codec);
+    client.set_retry_limit(retry);
+    client.set_seq_base(incarnation << 32);
+    let cl = Arc::clone(cluster);
+    let mut attempts = vec![0u64; n_servers];
+    client.set_reconnect(Box::new(move |s| {
+        attempts[s] += 1;
+        Ok(cl.connect(s, &plan, &log, conn_id(worker as usize, s, incarnation, attempts[s])))
+    }));
+    client
+}
+
+fn quad_grads(params: &[Tensor], targets: &[Tensor]) -> Vec<Tensor> {
+    params
+        .iter()
+        .zip(targets)
+        .map(|(p, t)| {
+            let mut g = p.clone();
+            g.axpy(-1.0, t);
+            g.scale(2.0);
+            g
+        })
+        .collect()
+}
+
+/// One worker's SGD loop over the quadratic, steps `start..steps`.
+fn run_quad_worker(
+    client: &mut PsClient,
+    targets: &[Tensor],
+    start_step: usize,
+    steps: usize,
+    sync: bool,
+    progress: Option<&AtomicUsize>,
+) -> Result<(), String> {
+    for step in start_step..steps {
+        let params = client.pull_all()?;
+        let grads = quad_grads(&params, targets);
+        client.push(step as u64, &grads)?;
+        if sync {
+            client.barrier(step as u64)?;
+        }
+        if let Some(p) = progress {
+            p.store(step + 1, Ordering::SeqCst);
+        }
+    }
+    Ok(())
+}
+
+struct ChaosOutcome {
+    finals: Vec<Tensor>,
+    targets: Vec<Tensor>,
+    fault_log: Vec<FaultEvent>,
+}
+
+/// Run a whole chaos cluster to completion under the given plan.
+/// Returns final parameters (pulled over a clean connection), the
+/// targets, and the sorted injected-fault log; `Err` when any worker
+/// failed permanently (retry budget exhausted).
+#[allow(clippy::too_many_arguments)]
+fn run_chaos(
+    seed: u64,
+    n_servers: usize,
+    n_workers: usize,
+    sync: bool,
+    steps: usize,
+    lr: f32,
+    codec: CodecKind,
+    plan: FaultPlan,
+    retry: usize,
+    barrier_timeout_ms: u64,
+) -> Result<ChaosOutcome, String> {
+    let cluster = ChaosCluster::new(seed, n_servers, n_workers, sync, lr, barrier_timeout_ms);
+    let log = FaultLog::new();
+    let mut handles = Vec::new();
+    for w in 0..n_workers {
+        let cluster = Arc::clone(&cluster);
+        let plan = plan.clone();
+        let log = log.clone();
+        handles.push(thread::spawn(move || {
+            let targets = cluster.targets.clone();
+            let mut client = make_client(&cluster, w as u32, codec, plan, log, 0, retry);
+            run_quad_worker(&mut client, &targets, 0, steps, sync, None)
+        }));
+    }
+    let mut failures = Vec::new();
+    for (w, h) in handles.into_iter().enumerate() {
+        match h.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => failures.push(format!("worker {w}: {e}")),
+            Err(_) => failures.push(format!("worker {w} panicked")),
+        }
+    }
+    if !failures.is_empty() {
+        cluster.join_serve_threads();
+        return Err(failures.join("; "));
+    }
+    let finals = {
+        let mut control = make_client(
+            &cluster,
+            u32::MAX,
+            CodecKind::None,
+            FaultPlan::default(),
+            FaultLog::new(),
+            0,
+            0,
+        );
+        control.pull_all()?
+    };
+    cluster.join_serve_threads();
+    Ok(ChaosOutcome {
+        finals,
+        targets: cluster.targets.clone(),
+        fault_log: log.snapshot_sorted(),
+    })
+}
+
+fn l2_distance(a: &[Tensor], b: &[Tensor]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let mut d = x.clone();
+            d.axpy(-1.0, y);
+            d.l2_norm().powi(2)
+        })
+        .sum::<f32>()
+        .sqrt()
+}
+
+fn assert_bitwise_eq(a: &[Tensor], b: &[Tensor], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: tensor count differs");
+    for (k, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.data(), y.data(), "{what}: key {k} differs");
+    }
+}
+
+// ------------------------------------------------------------ scenarios
+
+/// (a) Byte-identical final parameters with and without duplicated /
+/// replayed frames, for every codec — server-side idempotent admission
+/// makes retries and wire duplicates invisible to the training result.
+#[test]
+fn duplicated_and_replayed_frames_leave_parameters_byte_identical() {
+    let seed = chaos_seed();
+    with_watchdog(180, "dup/replay byte-identity", move || {
+        for codec in [
+            CodecKind::None,
+            CodecKind::TopK { fraction: 0.5 },
+            CodecKind::Quant8,
+            CodecKind::Quant8Sr,
+        ] {
+            let clean = run_chaos(
+                seed, 2, 2, true, 12, 0.1, codec, FaultPlan::default(), 0, 2000,
+            )
+            .unwrap();
+            assert!(clean.fault_log.is_empty());
+
+            // Wire-level duplicates: every dup'd push must fold once.
+            let dup_plan = FaultPlan { seed, dup_send: 0.3, ..Default::default() };
+            let dup = run_chaos(seed, 2, 2, true, 12, 0.1, codec, dup_plan, 6, 2000).unwrap();
+            assert!(!dup.fault_log.is_empty(), "{codec:?}: dup plan injected nothing");
+            assert_bitwise_eq(&clean.finals, &dup.finals, "dup vs clean");
+
+            // Lost replies: the client replays full frames (same seq,
+            // same staged bytes); the server deduplicates them.
+            let replay_plan = FaultPlan {
+                seed,
+                drop_recv: 0.2,
+                drop_send: 0.1,
+                ..Default::default()
+            };
+            let replay =
+                run_chaos(seed, 2, 2, true, 12, 0.1, codec, replay_plan, 10, 2000).unwrap();
+            assert!(
+                !replay.fault_log.is_empty(),
+                "{codec:?}: replay plan injected nothing"
+            );
+            assert_bitwise_eq(&clean.finals, &replay.finals, "replay vs clean");
+        }
+    });
+}
+
+/// (b) Convergence on the quadratic cluster under ~5% frame drops plus
+/// forced periodic reconnects, for each codec.
+#[test]
+fn drop_and_reconnect_still_converges_for_every_codec() {
+    let seed = chaos_seed();
+    with_watchdog(240, "drop+reconnect convergence", move || {
+        let plan = FaultPlan {
+            seed,
+            drop_send: 0.05,
+            drop_recv: 0.03,
+            disconnect_after: Some(120),
+            ..Default::default()
+        };
+        for (codec, steps, tol) in [
+            (CodecKind::None, 70, 0.1f32),
+            (CodecKind::TopK { fraction: 0.5 }, 140, 0.3),
+            (CodecKind::Quant8, 100, 0.3),
+        ] {
+            let out = run_chaos(seed, 2, 2, false, steps, 0.05, codec, plan.clone(), 10, 300)
+                .unwrap_or_else(|e| panic!("{codec:?} failed under drops: {e}"));
+            assert!(
+                !out.fault_log.is_empty(),
+                "{codec:?}: drop plan injected nothing"
+            );
+            let d = l2_distance(&out.finals, &out.targets);
+            assert!(
+                d < tol,
+                "{codec:?} did not converge under 5% drops: distance {d} (tol {tol})"
+            );
+        }
+    });
+}
+
+/// (c) Sync-barrier liveness when one worker dies mid-step: the
+/// survivor rides bounded barrier timeouts while the supervisor
+/// restarts the dead worker from a checkpoint; the run finishes with
+/// parameters byte-identical to a fault-free run (re-pushed steps are
+/// deduplicated server-side).
+#[test]
+fn sync_worker_death_restarts_from_checkpoint_and_stays_live() {
+    let seed = chaos_seed();
+    let steps = 30usize;
+    let ck_dir = std::env::temp_dir().join(format!(
+        "dtlsda_chaos_ckpt_{}_{seed}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&ck_dir).unwrap();
+    let ck_path = {
+        let ck_dir = ck_dir.clone();
+        move |w: usize, inc: u64| ck_dir.join(format!("worker{w}_restart{inc}.ckpt"))
+    };
+
+    let cluster = ChaosCluster::new(seed, 2, 2, true, 0.1, 200);
+    let log = FaultLog::new();
+    let body = {
+        let cluster = Arc::clone(&cluster);
+        let log = log.clone();
+        let ck_path = ck_path.clone();
+        Arc::new(
+            move |w: usize,
+                  start_step: usize,
+                  incarnation: u64,
+                  progress: &AtomicUsize|
+                  -> Result<(), String> {
+                // Worker 0's first incarnation crashes: its connections
+                // sever at op 40 and it has no retry budget.
+                let (plan, retry) = if w == 0 && incarnation == 0 {
+                    (
+                        FaultPlan { seed, disconnect_after: Some(40), ..Default::default() },
+                        0,
+                    )
+                } else {
+                    (FaultPlan::default(), 40)
+                };
+                let mut client = make_client(
+                    &cluster,
+                    w as u32,
+                    CodecKind::None,
+                    plan,
+                    log.clone(),
+                    incarnation,
+                    retry,
+                );
+                if incarnation > 0 {
+                    // Restart-from-checkpoint: the snapshot pins the
+                    // resume step (and carries the parameters a cold
+                    // replacement machine would warm-start from; the
+                    // authoritative copy stays on the servers).
+                    let ck = Checkpoint::load(&ck_path(w, incarnation))?;
+                    if ck.step != start_step as u64 {
+                        return Err(format!(
+                            "checkpoint step {} != resume step {start_step}",
+                            ck.step
+                        ));
+                    }
+                }
+                run_quad_worker(
+                    &mut client,
+                    &cluster.targets,
+                    start_step,
+                    steps,
+                    true,
+                    Some(progress),
+                )
+            },
+        )
+    };
+
+    let outcomes = {
+        let cluster = Arc::clone(&cluster);
+        let ck_path = ck_path.clone();
+        with_watchdog(120, "worker death + restart", move || {
+            let cluster2 = Arc::clone(&cluster);
+            let result = run_workers_with_restart(2, 1, body, move |w, resume, inc| {
+                // Checkpoint hook: snapshot the authoritative server-side
+                // parameters with the resume step, over a clean client.
+                let mut control = make_client(
+                    &cluster2,
+                    u32::MAX,
+                    CodecKind::None,
+                    FaultPlan::default(),
+                    FaultLog::new(),
+                    0,
+                    0,
+                );
+                let params = control.pull_all()?;
+                let names: Vec<String> =
+                    (0..params.len()).map(|k| format!("key{k}")).collect();
+                Checkpoint::new(resume as u64, &names, &params).save(&ck_path(w, inc))
+            });
+            (result, cluster)
+        })
+    };
+    let (result, cluster) = outcomes;
+    let outcomes = result.unwrap();
+
+    assert_eq!(outcomes[0].restarts, 1, "worker 0 must have died exactly once");
+    assert_eq!(outcomes[1].restarts, 0);
+    for o in &outcomes {
+        assert_eq!(o.completed_steps, steps);
+    }
+    // The checkpoint was written, carries a plausible resume step, and
+    // snapshots every parameter tensor.
+    let ck = Checkpoint::load(&ck_path(0, 1)).unwrap();
+    assert!(ck.step > 0 && ck.step < steps as u64, "resume step {}", ck.step);
+    assert_eq!(ck.entries.len(), 3);
+
+    // Final params: pulled clean, byte-identical to a fault-free run —
+    // the dead worker's re-pushed step was deduplicated, not doubled.
+    let finals = {
+        let mut control = make_client(
+            &cluster,
+            u32::MAX,
+            CodecKind::None,
+            FaultPlan::default(),
+            FaultLog::new(),
+            0,
+            0,
+        );
+        control.pull_all().unwrap()
+    };
+    cluster.join_serve_threads();
+    let clean = run_chaos(
+        seed,
+        2,
+        2,
+        true,
+        steps,
+        0.1,
+        CodecKind::None,
+        FaultPlan::default(),
+        0,
+        2000,
+    )
+    .unwrap();
+    assert_bitwise_eq(&clean.finals, &finals, "restart vs clean");
+    let d = l2_distance(&finals, &cluster.targets);
+    assert!(d < 0.05, "restarted sync run did not converge: {d}");
+    // The injected death is on the fault log.
+    assert!(log
+        .snapshot_sorted()
+        .iter()
+        .any(|e| matches!(e.kind, dtlsda::net::fault::FaultKind::Disconnect)));
+
+    std::fs::remove_dir_all(&ck_dir).ok();
+}
+
+/// (d) Property: ANY seeded fault plan either converges or surfaces a
+/// clean error — never a hang (watchdog-enforced), never a panic.
+#[test]
+fn any_fault_plan_converges_or_errors_never_hangs() {
+    let seed = chaos_seed();
+    prop::run(6, seed ^ 0xD00D_CAFE, |g| {
+        let plan = FaultPlan {
+            seed: g.u64(1, u32::MAX as u64),
+            drop_send: g.f64(0.0, 0.25),
+            drop_recv: g.f64(0.0, 0.2),
+            dup_send: g.f64(0.0, 0.2),
+            trunc_send: g.f64(0.0, 0.15),
+            latency_prob: g.f64(0.0, 0.3),
+            latency_ms: g.u64(0, 2),
+            disconnect_after: if g.bool() { Some(g.u64(5, 60)) } else { None },
+        };
+        let sync = g.bool();
+        let codec = *g.choice(&[
+            CodecKind::None,
+            CodecKind::TopK { fraction: 0.25 },
+            CodecKind::Quant8,
+            CodecKind::Quant8Sr,
+        ]);
+        let retry = g.usize(0, 6);
+        let label = format!("{plan:?} sync={sync} codec={codec:?} retry={retry}");
+        let result = with_watchdog(60, &label, move || {
+            run_chaos(plan.seed, 2, 2, sync, 8, 0.05, codec, plan.clone(), retry, 300)
+        });
+        match result {
+            Ok(out) => {
+                for t in &out.finals {
+                    assert!(
+                        t.data().iter().all(|x| x.is_finite()),
+                        "non-finite parameters under {label}"
+                    );
+                }
+            }
+            Err(e) => assert!(!e.is_empty(), "empty error under {label}"),
+        }
+    });
+}
+
+/// Acceptance: with a fixed seed, a chaos run is bit-reproducible —
+/// same final parameters AND the same injected-fault schedule.
+#[test]
+fn chaos_runs_are_bit_reproducible() {
+    let seed = chaos_seed();
+    with_watchdog(120, "bit reproducibility", move || {
+        let plan = FaultPlan {
+            seed,
+            drop_send: 0.1,
+            drop_recv: 0.15,
+            dup_send: 0.15,
+            ..Default::default()
+        };
+        let run = || {
+            run_chaos(
+                seed,
+                2,
+                2,
+                true,
+                10,
+                0.1,
+                CodecKind::Quant8,
+                plan.clone(),
+                10,
+                2000,
+            )
+            .unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert!(!a.fault_log.is_empty(), "plan injected nothing");
+        assert_eq!(a.fault_log, b.fault_log, "fault schedule must replay identically");
+        assert_bitwise_eq(&a.finals, &b.finals, "run A vs run B");
+    });
+}
+
+/// Straggler detection: injected latency on one worker is flagged by
+/// the coordinator's slowest-worker detector.
+#[test]
+fn injected_latency_is_detected_as_straggler() {
+    let seed = chaos_seed();
+    with_watchdog(120, "straggler detection", move || {
+        let n_workers = 3usize;
+        let steps = 8usize;
+        let cluster = ChaosCluster::new(seed, 2, n_workers, false, 0.05, 2000);
+        let log = FaultLog::new();
+        let mut handles = Vec::new();
+        for w in 0..n_workers {
+            let cluster = Arc::clone(&cluster);
+            let log = log.clone();
+            handles.push(thread::spawn(move || {
+                // Worker 0 is the straggler: 5–20 ms injected latency on
+                // (almost) every op; peers run clean.
+                let plan = if w == 0 {
+                    FaultPlan {
+                        seed,
+                        latency_prob: 0.9,
+                        latency_ms: 20,
+                        ..Default::default()
+                    }
+                } else {
+                    FaultPlan::default()
+                };
+                let targets = cluster.targets.clone();
+                let mut client =
+                    make_client(&cluster, w as u32, CodecKind::None, plan, log, 0, 0);
+                let t0 = Instant::now();
+                run_quad_worker(&mut client, &targets, 0, steps, false, None).unwrap();
+                t0.elapsed().as_secs_f64() / steps as f64
+            }));
+        }
+        let mean_step_s: Vec<f64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        cluster.join_serve_threads();
+        let stragglers = detect_stragglers(&mean_step_s, 2.0);
+        assert_eq!(
+            stragglers,
+            vec![0],
+            "latency-injected worker not flagged: step times {mean_step_s:?}"
+        );
+        assert!(log
+            .snapshot_sorted()
+            .iter()
+            .any(|e| matches!(e.kind, dtlsda::net::fault::FaultKind::LatencyMs(_))));
+    });
+}
