@@ -1,0 +1,75 @@
+#!/usr/bin/env python3
+"""Compare two BENCH_ps_hotpath.json files and fail on regressions.
+
+Usage: bench_trend.py <baseline.json> <current.json>
+
+Every result row is keyed by (transport, mode, codec, workers, stripes);
+a row whose ops_per_s falls below 75% of the baseline's matching row is
+a regression. Rows present in only one file (new or retired bench
+columns) are reported but never fail the build, so the bench can evolve
+without chicken-and-egg gating.
+"""
+
+import json
+import sys
+
+THRESHOLD = 0.75  # fail below 75% of baseline throughput (>25% drop)
+
+
+def row_key(row):
+    return (
+        row["transport"],
+        row["mode"],
+        row["codec"],
+        int(row["workers"]),
+        int(row["stripes"]),
+    )
+
+
+def main(baseline_path, current_path):
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    with open(current_path) as f:
+        current = json.load(f)
+
+    old_rows = {row_key(r): r for r in baseline.get("results", [])}
+    regressions = []
+    compared = 0
+    for row in current.get("results", []):
+        key = row_key(row)
+        tag = "/".join(str(p) for p in key)
+        old = old_rows.pop(key, None)
+        if old is None:
+            print(f"NEW      {tag}: {row['ops_per_s']:.1f} ops/s (no baseline)")
+            continue
+        if old["ops_per_s"] <= 0:
+            print(f"SKIP     {tag}: baseline reported zero throughput")
+            continue
+        ratio = row["ops_per_s"] / old["ops_per_s"]
+        verdict = "REGRESS " if ratio < THRESHOLD else "ok      "
+        print(
+            f"{verdict} {tag}: {old['ops_per_s']:.1f} -> "
+            f"{row['ops_per_s']:.1f} ops/s ({ratio:.2f}x)"
+        )
+        compared += 1
+        if ratio < THRESHOLD:
+            regressions.append((tag, ratio))
+    for key in old_rows:
+        print(f"RETIRED  {'/'.join(str(p) for p in key)}: gone from current bench")
+
+    print(f"\ncompared {compared} columns against baseline")
+    if regressions:
+        print(f"{len(regressions)} column(s) regressed more than "
+              f"{(1 - THRESHOLD) * 100:.0f}%:")
+        for tag, ratio in regressions:
+            print(f"  {tag}: {ratio:.2f}x of baseline")
+        return 1
+    print("bench trend OK")
+    return 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 3:
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    sys.exit(main(sys.argv[1], sys.argv[2]))

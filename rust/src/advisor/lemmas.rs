@@ -6,7 +6,10 @@
 //! The codec-aware form ([`num_param_servers_with_codec`]) replaces the
 //! push half of `2·S_p` with the gradient codec's effective wire bytes —
 //! §1.1.1's compression lever, modeled with the exact wire accounting of
-//! `ps::compress`.
+//! `ps::compress`. The replication-aware form
+//! ([`num_param_servers_replicated`]) adds the chain-forward stream a
+//! primary carries with `--replicas R ≥ 2` (`ps::replica`), plus the
+//! `R` physical machines per shard the fleet provisions.
 
 use crate::ps::compress::CodecKind;
 
@@ -81,6 +84,66 @@ pub fn num_param_servers_with_codec(
     let traffic = s_p_bytes + codec.effective_push_bytes(s_p_bytes);
     let nps = traffic * n_w as f64 / (b_ps * t_c);
     (nps.ceil() as usize).max(1)
+}
+
+/// Chain-replication multiplier on the push stream: a primary with
+/// `replicas >= 2` copies relays every admitted push exactly once
+/// down-chain (`ps::replica`), so its NIC carries the push bytes twice
+/// — in from the workers, out to its successor. Chain (not star)
+/// replication keeps the factor at 2 for any R ≥ 2: mid-chain nodes
+/// relay once too, and the tail only receives. R = 1 forwards nothing.
+fn push_chain_factor(replicas: usize) -> f64 {
+    if replicas >= 2 {
+        2.0
+    } else {
+        1.0
+    }
+}
+
+/// Lemma 3.2, replication-aware: with `--replicas R` each shard's
+/// primary serves dense pulls (`S_p`), ingests codec'd pushes, and — for
+/// R ≥ 2 — relays the push stream once down its chain, so the round
+/// traffic is `S_p + 2·codec(S_p)` instead of `S_p + codec(S_p)`.
+/// Returns the number of *shards* (primaries) needed to hide that I/O
+/// behind compute; the fleet additionally provisions `R − 1` replicas
+/// per shard ([`num_physical_servers`]). With `replicas = 1` this
+/// reduces exactly to [`num_param_servers_with_codec`].
+pub fn num_param_servers_replicated(
+    s_p_bytes: f64,
+    n_w: usize,
+    b_ps: f64,
+    t_c: f64,
+    codec: CodecKind,
+    replicas: usize,
+) -> usize {
+    assert!(s_p_bytes > 0.0 && b_ps > 0.0 && t_c > 0.0 && n_w >= 1 && replicas >= 1);
+    let traffic =
+        s_p_bytes + push_chain_factor(replicas) * codec.effective_push_bytes(s_p_bytes);
+    let nps = traffic * n_w as f64 / (b_ps * t_c);
+    (nps.ceil() as usize).max(1)
+}
+
+/// Physical machines the replicated PS tier provisions: `R` chain
+/// members per shard (head = primary).
+pub fn num_physical_servers(n_shards: usize, replicas: usize) -> usize {
+    assert!(n_shards >= 1 && replicas >= 1);
+    n_shards * replicas
+}
+
+/// Replication-aware round I/O time at the busiest chain member (the
+/// primary): the [`ps_round_io_time_with_codec`] twin for replicated
+/// shards.
+pub fn ps_round_io_time_replicated(
+    s_p_bytes: f64,
+    n_w: usize,
+    b_ps: f64,
+    n_ps: usize,
+    codec: CodecKind,
+    replicas: usize,
+) -> f64 {
+    (s_p_bytes + push_chain_factor(replicas) * codec.effective_push_bytes(s_p_bytes))
+        * n_w as f64
+        / (n_ps as f64 * b_ps)
 }
 
 /// Codec-aware round I/O time: the [`ps_round_io_time`] twin for
@@ -224,6 +287,55 @@ mod tests {
             CodecKind::TopK { fraction: 0.001 },
         );
         assert!(sparser <= topk);
+    }
+
+    #[test]
+    fn lemma32_replicated_reduces_to_codec_rule_at_r1() {
+        for codec in [CodecKind::None, CodecKind::TopK { fraction: 0.01 }, CodecKind::Quant8] {
+            for (s_p, n_w, b_ps, t_c) in
+                [(244e6, 4usize, 125e6, 2.0), (100e6, 8, 1e9, 1.0)]
+            {
+                assert_eq!(
+                    num_param_servers_replicated(s_p, n_w, b_ps, t_c, codec, 1),
+                    num_param_servers_with_codec(s_p, n_w, b_ps, t_c, codec)
+                );
+                assert!(
+                    (ps_round_io_time_replicated(s_p, n_w, b_ps, 3, codec, 1)
+                        - ps_round_io_time_with_codec(s_p, n_w, b_ps, 3, codec))
+                    .abs()
+                        < 1e-9
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lemma32_replication_factor_bounds() {
+        let (s_p, n_w, b_ps, t_c) = (61e6 * 4.0, 4usize, 125e6, 2.0);
+        for codec in [CodecKind::None, CodecKind::TopK { fraction: 0.01 }, CodecKind::Quant8] {
+            let solo = num_param_servers_replicated(s_p, n_w, b_ps, t_c, codec, 1);
+            let r2 = num_param_servers_replicated(s_p, n_w, b_ps, t_c, codec, 2);
+            // The chain forward adds traffic, never removes it...
+            assert!(r2 >= solo, "{codec:?}: {r2} < {solo}");
+            // ...but at most doubles the push half: the shard count is
+            // bounded by the dense 2·S_p rule's worst case plus one
+            // ceil, and for the dense codec it is exactly the 1.5x
+            // traffic ratio of (S_p + 2S_p) vs 2S_p.
+            assert!(
+                r2 as f64 <= 2.0 * solo as f64 + 1.0,
+                "{codec:?}: {r2} vs {solo}"
+            );
+            // Chain replication: R = 3 relays exactly as much per node
+            // as R = 2, so the shard count must not grow with R.
+            let r3 = num_param_servers_replicated(s_p, n_w, b_ps, t_c, codec, 3);
+            assert_eq!(r2, r3, "{codec:?}");
+            // The fleet does pay in machines: R copies per shard.
+            assert_eq!(num_physical_servers(r3, 3), r3 * 3);
+        }
+        // Dense, R>=2: traffic is exactly 3·S_p vs 2·S_p — a 1.5x ratio.
+        let dense_solo = ps_round_io_time_replicated(s_p, n_w, b_ps, 4, CodecKind::None, 1);
+        let dense_r2 = ps_round_io_time_replicated(s_p, n_w, b_ps, 4, CodecKind::None, 2);
+        assert!((dense_r2 / dense_solo - 1.5).abs() < 1e-9);
     }
 
     #[test]

@@ -24,19 +24,31 @@
 //! * **Straggler detection** — [`detect_stragglers`] flags workers
 //!   whose mean step time exceeds a factor of the fleet median (the
 //!   injected-latency scenario in `tests/chaos.rs` drives it).
+//! * **Supervised servers** — with `--replicas R` every shard is
+//!   chain-replicated (`ps::replica`) and a [`ServerSupervisor`]
+//!   heartbeats the whole PS tier the way workers are supervised: a
+//!   primary that misses its lease is failed over (the shared
+//!   [`ReplicatedTopology`] is re-pointed, the next chain member gets a
+//!   wire `Promote`), a lost mid-chain replica is dropped and its
+//!   predecessor re-pointed at its successor. Workers re-resolve a
+//!   shard's primary through their reconnect handler, so failover rides
+//!   the existing reconnect-and-replay path.
 
+use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, RwLock};
 use std::thread;
+use std::time::Duration;
 
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::net::fault::{FaultLog, FaultPlan};
-use crate::net::transport::{connect, Transport};
+use crate::net::message::Message;
+use crate::net::transport::{connect, connect_timeout, Transport};
 use crate::ps::client::PsClient;
 use crate::ps::compress::CodecKind;
-use crate::ps::router::Router;
-use crate::ps::server::{PsServerHandle, UpdateMode};
+use crate::ps::router::{ReplicatedTopology, Router};
+use crate::ps::server::{PsServerHandle, UpdateMode, PROMOTE_DRAIN_TIMEOUT};
 use crate::ps::shard::{Optimizer, ShardStore};
 use crate::runtime::exec::Runtime;
 use crate::tensor::Tensor;
@@ -71,6 +83,12 @@ pub struct DistConfig {
     /// A worker is a straggler when its mean step time exceeds this
     /// factor times the fleet median.
     pub straggler_factor: f64,
+    /// Copies of every PS shard (1 = no replication). With R ≥ 2 each
+    /// shard is chain-replicated: primary + R−1 replicas, supervised by
+    /// heartbeat/lease with promote-on-loss.
+    pub replicas: usize,
+    /// PS heartbeat cadence for the server supervisor (milliseconds).
+    pub ps_heartbeat_ms: u64,
 }
 
 impl Default for DistConfig {
@@ -91,6 +109,8 @@ impl Default for DistConfig {
             checkpoint_dir: None,
             barrier_timeout_ms: None,
             straggler_factor: 2.0,
+            replicas: 1,
+            ps_heartbeat_ms: 100,
         }
     }
 }
@@ -119,6 +139,9 @@ pub struct DistReport {
     pub stragglers: Vec<usize>,
     /// Restarts each worker needed.
     pub worker_restarts: Vec<u64>,
+    /// Final PS routing epoch: number of topology changes (promotions +
+    /// replica removals) over the run; 0 = no failover.
+    pub ps_epoch: u64,
 }
 
 /// Deterministic connection id for fault seeding: packs worker, server,
@@ -154,6 +177,181 @@ pub fn detect_stragglers(mean_step_s: &[f64], factor: f64) -> Vec<usize> {
         .filter(|&(_, &m)| m > factor * median)
         .map(|(i, _)| i)
         .collect()
+}
+
+/// Lease-based supervision of the PS tier — servers get the treatment
+/// workers already had. Every heartbeat tick, every member of every
+/// replication chain is probed (wire form: `Ping`/`Pong`; the probe
+/// returns `Some(is_primary)` when the member answered, `None` when
+/// unreachable); after `lease_misses` consecutive misses its lease is
+/// expired:
+/// * a **primary** is failed over — the shared [`ReplicatedTopology`]
+///   drops the dead head (bumping the routing epoch) and `on_promote`
+///   notifies the next chain member (wire form: `Promote`); workers
+///   re-resolve the shard through their reconnect handlers;
+/// * a **mid-chain replica** is removed from the topology and
+///   `on_replica_lost(shard, predecessor, successor)` re-points its
+///   predecessor's replication link.
+///
+/// Self-healing: a chain head that answers its probe but reports
+/// `is_primary = false` — a topology failover whose `Promote` RPC was
+/// lost — gets `on_promote` re-fired at the current epoch every tick
+/// until its role flips, so a transient promote failure cannot strand
+/// the shard behind a healthy, never-promoted head.
+///
+/// Probing and the hooks are injected so the same supervisor drives
+/// real TCP clusters (`run_distributed`) and the in-proc chaos harness.
+pub struct ServerSupervisor {
+    stop: Arc<AtomicBool>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+/// One promote decision handed to the supervisor's promote hook.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Failover {
+    pub shard: usize,
+    /// The lease-expired head just dropped from the topology — the
+    /// hook's fence target (a false-positive expiry leaves it alive,
+    /// serving connected workers at a stale epoch, so `run_distributed`
+    /// best-effort halts it). `None` when this is a re-send of a lost
+    /// `Promote` to a head that is already the topology's choice.
+    pub old_primary: Option<usize>,
+    /// Chain member to promote.
+    pub new_primary: usize,
+    /// Routing epoch to promote at.
+    pub epoch: u64,
+}
+
+impl ServerSupervisor {
+    pub fn spawn<P, F, R>(
+        topology: Arc<RwLock<ReplicatedTopology>>,
+        heartbeat: Duration,
+        lease_misses: u32,
+        probe: P,
+        mut on_promote: F,
+        mut on_replica_lost: R,
+    ) -> ServerSupervisor
+    where
+        P: Fn(usize) -> Option<bool> + Send + 'static,
+        F: FnMut(Failover) -> Result<(), String> + Send + 'static,
+        R: FnMut(usize, usize, Option<usize>) -> Result<(), String> + Send + 'static,
+    {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let lease_misses = lease_misses.max(1);
+        let handle = thread::spawn(move || {
+            let mut misses: BTreeMap<usize, u32> = BTreeMap::new();
+            while !stop2.load(Ordering::Relaxed) {
+                thread::sleep(heartbeat);
+                let chains: Vec<Vec<usize>> = {
+                    let topo = topology.read().unwrap();
+                    (0..topo.n_shards()).map(|s| topo.chain_of(s).to_vec()).collect()
+                };
+                for (shard, chain) in chains.iter().enumerate() {
+                    for (i, &phys) in chain.iter().enumerate() {
+                        if let Some(is_primary) = probe(phys) {
+                            misses.remove(&phys);
+                            if i == 0 && !is_primary {
+                                // Alive head with a stale role: its
+                                // Promote was lost. Re-send at the
+                                // current epoch until it sticks.
+                                let epoch = topology.read().unwrap().epoch();
+                                let f = Failover {
+                                    shard,
+                                    old_primary: None,
+                                    new_primary: phys,
+                                    epoch,
+                                };
+                                if let Err(e) = on_promote(f) {
+                                    crate::warn_log!(
+                                        "coordinator",
+                                        "re-promote of stale head failed",
+                                        shard = shard,
+                                        err = e
+                                    );
+                                }
+                            }
+                            continue;
+                        }
+                        let m = misses.entry(phys).or_insert(0);
+                        *m += 1;
+                        if *m < lease_misses {
+                            continue;
+                        }
+                        misses.remove(&phys);
+                        if i == 0 {
+                            let promoted = {
+                                let mut topo = topology.write().unwrap();
+                                topo.promote(shard).map(|p| (p, topo.epoch()))
+                            };
+                            match promoted {
+                                Ok((new_primary, epoch)) => {
+                                    let f = Failover {
+                                        shard,
+                                        old_primary: Some(phys),
+                                        new_primary,
+                                        epoch,
+                                    };
+                                    if let Err(e) = on_promote(f) {
+                                        crate::warn_log!(
+                                            "coordinator",
+                                            "promote hook failed",
+                                            shard = shard,
+                                            err = e
+                                        );
+                                    }
+                                }
+                                Err(e) => crate::warn_log!(
+                                    "coordinator",
+                                    "shard lost its last copy",
+                                    shard = shard,
+                                    err = e
+                                ),
+                            }
+                        } else {
+                            let pred = chain[i - 1];
+                            let succ = chain.get(i + 1).copied();
+                            let removed = topology.write().unwrap().remove(shard, phys);
+                            if removed.is_ok() {
+                                crate::warn_log!(
+                                    "coordinator",
+                                    "replica lost; re-pointing chain",
+                                    shard = shard,
+                                    dead = phys
+                                );
+                                if let Err(e) = on_replica_lost(shard, pred, succ) {
+                                    crate::warn_log!(
+                                        "coordinator",
+                                        "chain repair failed",
+                                        shard = shard,
+                                        err = e
+                                    );
+                                }
+                            }
+                        }
+                        // The chain changed under us — re-snapshot on
+                        // the next tick rather than walking stale ids.
+                        break;
+                    }
+                }
+            }
+        });
+        ServerSupervisor { stop, handle: Some(handle) }
+    }
+
+    /// Stop heartbeating and join the loop.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServerSupervisor {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
 }
 
 /// One supervised worker's outcome.
@@ -304,13 +502,25 @@ pub fn run_distributed(artifacts_dir: &std::path::Path, cfg: &DistConfig) -> Res
     } else {
         UpdateMode::Async
     };
+    // With replication, shard `s` is served by the chain of physical
+    // servers `s*R .. (s+1)*R` (head = primary), every member seeded
+    // with the same keys; the shared topology maps shard -> current
+    // primary and is re-pointed on failover.
+    let replicas = cfg.replicas.max(1);
+    let topology = Arc::new(RwLock::new(ReplicatedTopology::new(cfg.n_servers, replicas)));
+    let n_physical = cfg.n_servers * replicas;
     let mut servers = Vec::new();
-    for s in 0..cfg.n_servers {
+    for p in 0..n_physical {
+        let shard = p / replicas;
         let mut store = ShardStore::new(opt);
-        for &k in router.keys_of(s) {
+        for &k in router.keys_of(shard) {
             store.insert(k, init[k as usize].clone());
         }
-        servers.push(PsServerHandle::spawn_tcp("127.0.0.1:0", store, mode)?);
+        let srv = PsServerHandle::spawn_tcp("127.0.0.1:0", store, mode)?;
+        if p % replicas != 0 {
+            srv.shared.set_role_replica();
+        }
+        servers.push(srv);
     }
     if let Some(ms) = cfg.barrier_timeout_ms {
         for s in &servers {
@@ -318,12 +528,119 @@ pub fn run_distributed(artifacts_dir: &std::path::Path, cfg: &DistConfig) -> Res
         }
     }
     let addrs: Vec<std::net::SocketAddr> = servers.iter().map(|s| s.addr).collect();
+    // Wire each chain member to forward to its successor.
+    for shard in 0..cfg.n_servers {
+        for i in 0..replicas - 1 {
+            let from = shard * replicas + i;
+            let conn = connect(addrs[from + 1])?;
+            servers[from]
+                .shared
+                .set_replicas(vec![Box::new(conn) as Box<dyn Transport>]);
+        }
+    }
+    // Server supervision: heartbeat every chain member, promote/repair
+    // on a missed lease — the server-side twin of worker restarts.
+    let mut supervisor = (replicas > 1).then(|| {
+        // Probes are bounded: a wedged-but-alive server (the gray
+        // failure a lease detector exists for) must read as a miss,
+        // not hang the whole supervisor loop.
+        let probe_timeout = Duration::from_millis(cfg.ps_heartbeat_ms.max(10).saturating_mul(5));
+        let probe = {
+            let addrs = addrs.clone();
+            move |phys: usize| -> Option<bool> {
+                let mut t = connect_timeout(&addrs[phys], probe_timeout).ok()?;
+                t.send(&Message::Ping).ok()?;
+                match t.recv() {
+                    Ok(Message::Pong { is_primary, .. }) => Some(is_primary),
+                    _ => None,
+                }
+            }
+        };
+        let on_promote = {
+            let addrs = addrs.clone();
+            move |f: Failover| -> Result<(), String> {
+                // Best-effort fence first (shoot-the-old-head): a
+                // false-positive lease expiry leaves the deposed head
+                // alive and serving its connected workers at a stale
+                // epoch indefinitely — halting it severs those
+                // connections so the workers re-resolve through the
+                // topology. A truly dead head costs one bounded
+                // connect attempt. (Epoch-checked worker ops are the
+                // complete fencing fix — see ROADMAP.)
+                if let Some(old) = f.old_primary {
+                    if let Ok(mut t) = connect_timeout(&addrs[old], probe_timeout) {
+                        let _ = t.send(&Message::Shutdown);
+                    }
+                }
+                // The topology is already re-pointed when this hook
+                // runs, so an unpromoted head leaves the shard
+                // unserveable — retry transient failures instead of
+                // giving up on the first error. The read timeout must
+                // outlive the replica's bounded drain-before-takeover
+                // (it defers its ack until its up-chain feed EOFs).
+                let mut last = String::new();
+                for attempt in 0..3u32 {
+                    if attempt > 0 {
+                        thread::sleep(Duration::from_millis(50));
+                    }
+                    let outcome = connect_timeout(
+                        &addrs[f.new_primary],
+                        PROMOTE_DRAIN_TIMEOUT.saturating_mul(2),
+                    )
+                    .and_then(|mut t| {
+                        t.send(&Message::Promote { epoch: f.epoch })?;
+                        match t.recv()? {
+                            Message::PromoteAck { .. } => Ok(()),
+                            m => Err(format!("unexpected promote reply {m:?}")),
+                        }
+                    });
+                    match outcome {
+                        Ok(()) => {
+                            crate::warn_log!(
+                                "coordinator",
+                                "ps failover complete",
+                                shard = f.shard,
+                                new_primary = f.new_primary,
+                                epoch = f.epoch
+                            );
+                            return Ok(());
+                        }
+                        Err(e) => last = e,
+                    }
+                }
+                Err(format!("promote of physical {} failed 3 times: {last}", f.new_primary))
+            }
+        };
+        let on_replica_lost = {
+            let addrs = addrs.clone();
+            let shareds: Vec<_> = servers.iter().map(|s| s.shared.clone()).collect();
+            move |_shard: usize, pred: usize, succ: Option<usize>| -> Result<(), String> {
+                let conns = match succ {
+                    Some(to) => {
+                        vec![Box::new(connect(addrs[to])?) as Box<dyn Transport>]
+                    }
+                    None => Vec::new(),
+                };
+                shareds[pred].set_replicas(conns);
+                Ok(())
+            }
+        };
+        ServerSupervisor::spawn(
+            topology.clone(),
+            Duration::from_millis(cfg.ps_heartbeat_ms.max(1)),
+            2,
+            probe,
+            on_promote,
+            on_replica_lost,
+        )
+    });
 
     // --- workers -------------------------------------------------------
     let t0 = std::time::Instant::now();
     let fault_log = FaultLog::new();
     let body = {
         let addrs = addrs.clone();
+        let topology = topology.clone();
         let router = router.clone();
         let cfg = cfg.clone();
         let dir = artifacts_dir.to_path_buf();
@@ -336,13 +653,17 @@ pub fn run_distributed(artifacts_dir: &std::path::Path, cfg: &DistConfig) -> Res
             // Each worker owns a full runtime (mirrors a real machine).
             let rt = Runtime::new(&dir)?;
             let exe = rt.load(&cfg.grad_artifact)?;
-            // Every (re)connection gets a deterministic fault stream.
+            // Every (re)connection gets a deterministic fault stream,
+            // and re-resolves the shard's current primary from the
+            // topology — this is how failover reaches the client.
             let connect_to = {
                 let addrs = addrs.clone();
+                let topology = topology.clone();
                 let plan = cfg.fault_plan.clone();
                 let log = fault_log.clone();
                 move |s: usize, attempt: u64| -> Result<Box<dyn Transport>, String> {
-                    let t = connect(addrs[s])?;
+                    let phys = topology.read().unwrap().primary_of(s);
+                    let t = connect(addrs[phys])?;
                     Ok(match &plan {
                         Some(p) if !p.is_noop() => Box::new(p.wrap(
                             conn_id(w, s, incarnation, attempt),
@@ -353,7 +674,10 @@ pub fn run_distributed(artifacts_dir: &std::path::Path, cfg: &DistConfig) -> Res
                     })
                 }
             };
-            let transports: Vec<Box<dyn Transport>> = (0..addrs.len())
+            // One transport per SHARD (not per physical server): with
+            // replication the router still speaks shards, and each
+            // connection targets the shard's current primary.
+            let transports: Vec<Box<dyn Transport>> = (0..router.n_servers())
                 .map(|s| connect_to(s, 0))
                 .collect::<Result<_, _>>()?;
             let mut client = PsClient::with_codec(w as u32, transports, router.clone(), cfg.codec);
@@ -364,9 +688,17 @@ pub fn run_distributed(artifacts_dir: &std::path::Path, cfg: &DistConfig) -> Res
             client.set_retry_limit(cfg.retry);
             {
                 let connect_to = connect_to.clone();
-                let mut attempts = vec![0u64; addrs.len()];
+                let mut attempts = vec![0u64; router.n_servers()];
                 client.set_reconnect(Box::new(move |s| {
                     attempts[s] += 1;
+                    // Back off so the retry budget outlives a failover
+                    // instead of burning out in microseconds of
+                    // connection-refused against a freshly-dead
+                    // primary. Worst case (wedged head) is ~2 probe
+                    // timeouts of lease detection plus the replica's
+                    // bounded pre-takeover drain — seconds, not
+                    // milliseconds; the ramp keeps fast failovers fast.
+                    thread::sleep(Duration::from_millis((attempts[s] * 10).min(200)));
                     connect_to(s, attempts[s])
                 }));
             }
@@ -394,15 +726,24 @@ pub fn run_distributed(artifacts_dir: &std::path::Path, cfg: &DistConfig) -> Res
         })
     };
 
+    // Control-plane client over the current primaries (the shard
+    // topology can move under failover, so resolve at call time).
+    let primary_transports =
+        |topology: &RwLock<ReplicatedTopology>| -> Result<Vec<Box<dyn Transport>>, String> {
+            let topo = topology.read().unwrap();
+            (0..cfg.n_servers)
+                .map(|s| {
+                    connect(addrs[topo.primary_of(s)]).map(|t| Box::new(t) as Box<dyn Transport>)
+                })
+                .collect()
+        };
+
     // Restart hook: snapshot server-side parameters (with the resume
     // step) before the replacement spawns — checkpoint-based restart.
     let on_restart = |w: usize, resume: usize, incarnation: u64| -> Result<(), String> {
         let Some(ck_dir) = &cfg.checkpoint_dir else { return Ok(()) };
-        let transports: Vec<Box<dyn Transport>> = addrs
-            .iter()
-            .map(|a| connect(a).map(|t| Box::new(t) as Box<dyn Transport>))
-            .collect::<Result<_, _>>()?;
-        let mut control = PsClient::new(u32::MAX, transports, router.clone());
+        let mut control =
+            PsClient::new(u32::MAX, primary_transports(&topology)?, router.clone());
         let params = control.pull_all()?;
         let ck = Checkpoint::new(resume as u64, &param_names, &params);
         ck.save(&ck_dir.join(format!("worker{w}_restart{incarnation}.ckpt")))
@@ -435,17 +776,19 @@ pub fn run_distributed(artifacts_dir: &std::path::Path, cfg: &DistConfig) -> Res
     }
 
     // --- final state ----------------------------------------------------
-    let transports: Vec<Box<dyn Transport>> = addrs
-        .iter()
-        .map(|a| connect(a).map(|t| Box::new(t) as Box<dyn Transport>))
-        .collect::<Result<_, _>>()?;
-    let mut client = PsClient::new(u32::MAX, transports, router.clone());
+    let mut client = PsClient::new(u32::MAX, primary_transports(&topology)?, router.clone());
     let final_params = client.pull_all()?;
     let ps_stats = client.stats()?;
     drop(client);
+    // Stop supervising BEFORE tearing servers down, or the teardown
+    // reads as a mass lease expiry and triggers spurious promotions.
+    if let Some(sup) = supervisor.as_mut() {
+        sup.shutdown();
+    }
     for s in &mut servers {
         s.shutdown();
     }
+    let ps_epoch = topology.read().unwrap().epoch();
 
     let samples = cfg.n_workers * cfg.steps_per_worker * meta.batch;
     Ok(DistReport {
@@ -459,6 +802,7 @@ pub fn run_distributed(artifacts_dir: &std::path::Path, cfg: &DistConfig) -> Res
         worker_step_s,
         stragglers,
         worker_restarts,
+        ps_epoch,
     })
 }
 
@@ -545,6 +889,161 @@ mod tests {
         let outcomes = run_workers_with_restart(1, 1, body, |_, _, _| Ok(())).unwrap();
         assert_eq!(outcomes[0].output, 1);
         assert_eq!(outcomes[0].restarts, 1);
+    }
+
+    /// Drive a supervisor over synthetic probes until `cond` holds (or
+    /// a deadline trips) — heartbeat loops are time-based, so tests
+    /// poll observable state instead of counting ticks.
+    fn wait_for(what: &str, mut cond: impl FnMut() -> bool) {
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while !cond() {
+            assert!(std::time::Instant::now() < deadline, "timeout waiting for {what}");
+            thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    #[test]
+    fn supervisor_promotes_on_expired_lease_and_repairs_chains() {
+        use std::collections::BTreeSet;
+        // 2 shards x 3 replicas; physical 0 (shard 0's primary) and
+        // physical 4 (shard 1's mid-chain replica) die. The supervisor
+        // must promote 1 for shard 0 and re-point 3 -> 5 for shard 1 —
+        // and must not touch healthy members.
+        let topology = Arc::new(RwLock::new(ReplicatedTopology::new(2, 3)));
+        let dead = Arc::new(Mutex::new(BTreeSet::new()));
+        let promoted = Arc::new(Mutex::new(Vec::new()));
+        let repaired = Arc::new(Mutex::new(Vec::new()));
+        let probe = {
+            let dead = dead.clone();
+            // Live members report the role the topology expects, so
+            // only lease expiry (not self-healing) drives this test.
+            move |phys: usize| (!dead.lock().unwrap().contains(&phys)).then_some(true)
+        };
+        let on_promote = {
+            let promoted = promoted.clone();
+            move |f: Failover| {
+                promoted.lock().unwrap().push(f);
+                Ok(())
+            }
+        };
+        let on_replica_lost = {
+            let repaired = repaired.clone();
+            move |shard: usize, pred: usize, succ: Option<usize>| {
+                repaired.lock().unwrap().push((shard, pred, succ));
+                Ok(())
+            }
+        };
+        let mut sup = ServerSupervisor::spawn(
+            topology.clone(),
+            Duration::from_millis(5),
+            2,
+            probe,
+            on_promote,
+            on_replica_lost,
+        );
+        // Healthy fleet: several heartbeats must change nothing.
+        thread::sleep(Duration::from_millis(40));
+        assert_eq!(topology.read().unwrap().epoch(), 0);
+        assert!(promoted.lock().unwrap().is_empty());
+
+        dead.lock().unwrap().extend([0usize, 4]);
+        wait_for("failover + chain repair", || {
+            !promoted.lock().unwrap().is_empty() && !repaired.lock().unwrap().is_empty()
+        });
+        sup.shutdown();
+
+        // The two failures may be detected in either order, so the
+        // epoch each hook observed is 1 or 2 — but each fires exactly
+        // once, with the right topology outcome and the dead head
+        // named as the fence target.
+        let promoted = promoted.lock().unwrap();
+        assert_eq!(promoted.len(), 1);
+        assert_eq!(promoted[0].shard, 0);
+        assert_eq!(promoted[0].old_primary, Some(0));
+        assert_eq!(promoted[0].new_primary, 1);
+        assert!(promoted[0].epoch >= 1);
+        assert_eq!(*repaired.lock().unwrap(), vec![(1, 3, Some(5))]);
+        let topo = topology.read().unwrap();
+        assert_eq!(topo.primary_of(0), 1);
+        assert_eq!(topo.chain_of(0), &[1, 2]);
+        assert_eq!(topo.primary_of(1), 3);
+        assert_eq!(topo.chain_of(1), &[3, 5]);
+        assert_eq!(topo.epoch(), 2);
+    }
+
+    #[test]
+    fn supervisor_tolerates_transient_probe_misses() {
+        // lease_misses = 3: a single missed probe (a slow heartbeat, a
+        // dropped ping) must NOT fail anyone over.
+        let topology = Arc::new(RwLock::new(ReplicatedTopology::new(1, 2)));
+        let flaky_once = Arc::new(AtomicBool::new(true));
+        let probe = {
+            let flaky_once = flaky_once.clone();
+            // Physical 0 misses exactly one probe, then recovers.
+            move |phys: usize| {
+                (phys != 0 || !flaky_once.swap(false, Ordering::SeqCst)).then_some(true)
+            }
+        };
+        let promoted = Arc::new(Mutex::new(Vec::new()));
+        let on_promote = {
+            let promoted = promoted.clone();
+            move |f: Failover| {
+                promoted.lock().unwrap().push(f);
+                Ok(())
+            }
+        };
+        let mut sup = ServerSupervisor::spawn(
+            topology.clone(),
+            Duration::from_millis(5),
+            3,
+            probe,
+            on_promote,
+            |_, _, _| Ok(()),
+        );
+        thread::sleep(Duration::from_millis(80));
+        sup.shutdown();
+        assert!(promoted.lock().unwrap().is_empty(), "transient miss caused failover");
+        assert_eq!(topology.read().unwrap().epoch(), 0);
+    }
+
+    #[test]
+    fn supervisor_repromotes_alive_head_whose_promote_was_lost() {
+        // The topology already failed over (epoch 1, head = 1) but the
+        // Promote RPC never reached the new head, which still answers
+        // probes as a replica. The supervisor must re-fire on_promote
+        // at the current epoch instead of leaving the shard behind a
+        // healthy, never-promoted head.
+        let topology = Arc::new(RwLock::new(ReplicatedTopology::new(1, 2)));
+        assert_eq!(topology.write().unwrap().promote(0).unwrap(), 1);
+        let promoted = Arc::new(Mutex::new(Vec::new()));
+        let probe = |phys: usize| Some(phys != 1); // head 1: alive, role stale
+        let on_promote = {
+            let promoted = promoted.clone();
+            move |f: Failover| {
+                promoted.lock().unwrap().push(f);
+                Ok(())
+            }
+        };
+        let mut sup = ServerSupervisor::spawn(
+            topology.clone(),
+            Duration::from_millis(5),
+            2,
+            probe,
+            on_promote,
+            |_, _, _| Ok(()),
+        );
+        wait_for("re-promotion of stale head", || !promoted.lock().unwrap().is_empty());
+        sup.shutdown();
+        let promoted = promoted.lock().unwrap();
+        // Fired (possibly more than once — it retries until the role
+        // flips) with the shard, the stale head, the CURRENT epoch, and
+        // no fence target (nothing was deposed by the re-send).
+        assert_eq!(
+            promoted[0],
+            Failover { shard: 0, old_primary: None, new_primary: 1, epoch: 1 }
+        );
+        // The topology itself was not re-bumped by the re-sends.
+        assert_eq!(topology.read().unwrap().epoch(), 1);
     }
 
     #[test]

@@ -45,6 +45,28 @@ pub enum Message {
     Shutdown,
     /// Either direction: protocol error.
     Error { what: String },
+    /// Primary -> replica (chain replication): one admitted push frame,
+    /// forwarded verbatim. `inner` is a complete `Push` or
+    /// `CompressedPush` frame body — the replica dispatches it through
+    /// the same streaming handlers (building the same per-worker seq
+    /// watermarks, so post-failover client replays dedupe identically)
+    /// and sends **no reply**; acking is the primary's job.
+    ReplForward { inner: Vec<u8> },
+    /// Primary -> replica: sync barrier released `step` — apply the
+    /// aggregated means for it (the replica holds the same running sums,
+    /// fed by forwarded pushes). No reply.
+    ReplRelease { step: u64 },
+    /// Coordinator -> replica: become the primary for your shard at
+    /// routing `epoch` (the old primary's lease expired).
+    Promote { epoch: u64 },
+    /// Replica -> coordinator: promotion applied; `clock` is the store
+    /// clock at takeover (observability).
+    PromoteAck { epoch: u64, clock: u64 },
+    /// Coordinator -> server: heartbeat probe (lease keep-alive).
+    Ping,
+    /// Server -> coordinator: heartbeat reply with the server's current
+    /// routing epoch and role.
+    Pong { epoch: u64, is_primary: bool },
 }
 
 const T_PULL: u8 = 1;
@@ -58,6 +80,12 @@ const T_STATS_REPLY: u8 = 8;
 const T_SHUTDOWN: u8 = 9;
 const T_ERROR: u8 = 10;
 const T_COMPRESSED_PUSH: u8 = 11;
+const T_REPL_FORWARD: u8 = 12;
+const T_REPL_RELEASE: u8 = 13;
+const T_PROMOTE: u8 = 14;
+const T_PROMOTE_ACK: u8 = 15;
+const T_PING: u8 = 16;
+const T_PONG: u8 = 17;
 
 /// Per-entry codec tags inside a `CompressedPush` body.
 const C_SPARSE: u8 = 1;
@@ -130,6 +158,28 @@ impl Message {
                 w.u8(T_ERROR);
                 w.str(what);
             }
+            Message::ReplForward { inner } => {
+                wire::repl_forward(w, inner);
+            }
+            Message::ReplRelease { step } => {
+                w.u8(T_REPL_RELEASE);
+                w.u64(*step);
+            }
+            Message::Promote { epoch } => {
+                w.u8(T_PROMOTE);
+                w.u64(*epoch);
+            }
+            Message::PromoteAck { epoch, clock } => {
+                w.u8(T_PROMOTE_ACK);
+                w.u64(*epoch);
+                w.u64(*clock);
+            }
+            Message::Ping => w.u8(T_PING),
+            Message::Pong { epoch, is_primary } => {
+                w.u8(T_PONG);
+                w.u64(*epoch);
+                w.u8(*is_primary as u8);
+            }
         }
     }
 
@@ -191,6 +241,12 @@ impl Message {
             },
             T_SHUTDOWN => Message::Shutdown,
             T_ERROR => Message::Error { what: r.str()? },
+            T_REPL_FORWARD => Message::ReplForward { inner: r.raw(r.remaining())?.to_vec() },
+            T_REPL_RELEASE => Message::ReplRelease { step: r.u64()? },
+            T_PROMOTE => Message::Promote { epoch: r.u64()? },
+            T_PROMOTE_ACK => Message::PromoteAck { epoch: r.u64()?, clock: r.u64()? },
+            T_PING => Message::Ping,
+            T_PONG => Message::Pong { epoch: r.u64()?, is_primary: r.u8()? != 0 },
             other => return Err(format!("unknown message tag {other}")),
         };
         if r.remaining() != 0 {
@@ -303,6 +359,26 @@ pub mod wire {
     /// such frames into [`PushBody`] instead of `Message::decode`.
     pub fn is_push(frame: &[u8]) -> bool {
         frame.first() == Some(&T_PUSH)
+    }
+
+    /// `ReplForward { inner }` in one pass from the borrowed frame the
+    /// primary just admitted — chain replication's zero-copy forward
+    /// (one tag byte of framing overhead, no re-encode of the body).
+    pub fn repl_forward(w: &mut Writer, inner: &[u8]) {
+        w.u8(T_REPL_FORWARD);
+        w.raw(inner);
+    }
+
+    /// True when `frame` is a replication forward — the serve loop
+    /// routes such frames into the push handlers with no reply.
+    pub fn is_repl_forward(frame: &[u8]) -> bool {
+        frame.first() == Some(&T_REPL_FORWARD)
+    }
+
+    /// The forwarded inner frame of a `ReplForward`, borrowed.
+    pub fn repl_forward_inner(frame: &[u8]) -> &[u8] {
+        debug_assert!(is_repl_forward(frame));
+        &frame[1..]
     }
 
     /// Streaming dense-`Push` decoder: yields `(key, DenseRef)` entries
@@ -491,6 +567,37 @@ mod tests {
         roundtrip(Message::StatsReply { pulls: 1, pushes: 2, updates: 3 });
         roundtrip(Message::Shutdown);
         roundtrip(Message::Error { what: "boom".into() });
+        roundtrip(Message::ReplRelease { step: 17 });
+        roundtrip(Message::Promote { epoch: 3 });
+        roundtrip(Message::PromoteAck { epoch: 3, clock: 99 });
+        roundtrip(Message::Ping);
+        roundtrip(Message::Pong { epoch: 2, is_primary: true });
+        roundtrip(Message::Pong { epoch: 0, is_primary: false });
+    }
+
+    #[test]
+    fn repl_forward_wraps_frame_verbatim() {
+        // The forward's inner bytes are the admitted frame, byte for
+        // byte — the replica's streaming handlers decode them directly.
+        let push = Message::Push {
+            worker: 2,
+            step: 4,
+            seq: 7,
+            entries: vec![(0, Tensor::from_vec(&[2], vec![1.0, -2.0]))],
+        };
+        let inner = push.encode();
+        let fwd = Message::ReplForward { inner: inner.clone() };
+        let buf = fwd.encode();
+        assert!(wire::is_repl_forward(&buf));
+        assert!(!wire::is_repl_forward(&inner));
+        assert_eq!(wire::repl_forward_inner(&buf), &inner[..]);
+        assert_eq!(Message::decode(&buf).unwrap(), fwd);
+        // The streamed helper produces identical bytes.
+        let mut w = Writer::new();
+        wire::repl_forward(&mut w, &inner);
+        assert_eq!(w.finish(), buf);
+        // And the inner frame round-trips through the push decoder.
+        assert_eq!(Message::decode(wire::repl_forward_inner(&buf)).unwrap(), push);
     }
 
     #[test]

@@ -154,6 +154,22 @@ pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<TcpTransport, String> {
     TcpTransport::new(stream)
 }
 
+/// Connect with a bound on both the TCP handshake and every subsequent
+/// read. The control plane's defense against wedged peers: a lease
+/// prober must never block forever on the very failure it exists to
+/// detect, so its probes time out and count as misses instead.
+pub fn connect_timeout(
+    addr: &std::net::SocketAddr,
+    timeout: std::time::Duration,
+) -> Result<TcpTransport, String> {
+    let stream =
+        TcpStream::connect_timeout(addr, timeout).map_err(|e| format!("connect: {e}"))?;
+    stream
+        .set_read_timeout(Some(timeout))
+        .map_err(|e| format!("set_read_timeout: {e}"))?;
+    TcpTransport::new(stream)
+}
+
 /// Bind a listener; the caller accepts in its own loop.
 pub fn listen<A: ToSocketAddrs>(addr: A) -> Result<TcpListener, String> {
     TcpListener::bind(addr).map_err(|e| format!("bind: {e}"))

@@ -18,6 +18,21 @@
 //! frame (or only its ack) was lost. Barriers additionally retry on the
 //! server's `barrier timeout` error, which a fault-tolerant server
 //! returns instead of blocking forever on a dead peer.
+//!
+//! # Failover (replicated shards)
+//!
+//! When PS shards are chain-replicated (`ps::replica`), a shard's
+//! primary can move mid-run. Two signals route the client to the new
+//! primary, both through the *same* reconnect-and-replay path: a
+//! transport error (the old primary died under us), or a
+//! `not primary`-tagged `Error` reply (we reached a not-yet-promoted
+//! replica through a stale route). Either way the reconnect handler is
+//! asked for a fresh connection — handlers installed by the
+//! coordinator re-resolve the shard's current primary from the shared
+//! [`ReplicatedTopology`](crate::ps::router::ReplicatedTopology) — and
+//! the staged frame is replayed under its original seq, which the
+//! promoted replica deduplicates against the watermarks it built from
+//! the replication stream.
 
 use std::collections::BTreeMap;
 
@@ -369,11 +384,20 @@ fn send_retry(
     }
 }
 
-/// Receive one reply from server `s`. On a transport error the request
-/// is replayed — reconnect, re-send the same bytes (`encode` must
-/// produce an identical frame, same seq), receive again — until the
-/// `retry` budget runs out. The server's idempotent admission makes the
-/// replay safe whether the request or only its ack was lost.
+/// True for the server error a non-promoted replica returns to direct
+/// worker traffic — a stale route, recoverable by re-resolving the
+/// shard's primary, not a protocol failure.
+fn is_stale_route(what: &str) -> bool {
+    what.contains(crate::ps::replica::NOT_PRIMARY)
+}
+
+/// Receive one reply from server `s`. On a transport error — or a
+/// stale-route `Error` reply from a not-yet-promoted replica — the
+/// request is replayed: reconnect (which re-resolves the shard's
+/// current primary), re-send the same bytes (`encode` must produce an
+/// identical frame, same seq), receive again — until the `retry`
+/// budget runs out. The server's idempotent admission makes the replay
+/// safe whether the request or only its ack was lost.
 fn recv_retry(
     t: &mut Box<dyn Transport>,
     reconnect: &mut Option<Reconnect>,
@@ -384,6 +408,11 @@ fn recv_retry(
     let mut attempts = 0usize;
     loop {
         let err = match t.recv() {
+            Ok(Message::Error { what })
+                if is_stale_route(&what) && attempts < retry && reconnect.is_some() =>
+            {
+                format!("stale route: {what}")
+            }
             Ok(m) => return Ok(m),
             Err(e) => e,
         };
@@ -697,6 +726,66 @@ mod tests {
             for h in serve_handles.lock().unwrap().drain(..) {
                 h.join().unwrap();
             }
+        }
+    }
+
+    #[test]
+    fn stale_route_error_reconnects_and_replays_to_new_primary() {
+        // The failover path without a dead transport: the client's
+        // first route lands on a non-promoted replica, whose
+        // `not primary` error must trigger reconnect (re-resolution)
+        // and a replay of the same staged frame against the primary.
+        use std::sync::{Arc, Mutex};
+        let mk_shared = |primary: bool| {
+            let mut store = ShardStore::new(Optimizer::Sgd { lr: 1.0 });
+            store.insert(0, Tensor::from_vec(&[2], vec![0.0, 0.0]));
+            let sh = PsShared::new(store, UpdateMode::Async);
+            if !primary {
+                sh.set_role_replica();
+            }
+            sh
+        };
+        let replica = mk_shared(false);
+        let primary = mk_shared(true);
+        let serve_handles = Arc::new(Mutex::new(Vec::new()));
+        let spawn_conn = |sh: &Arc<PsShared>| -> Box<dyn Transport> {
+            let (client_end, server_end) = InProcTransport::pair();
+            let sh = sh.clone();
+            serve_handles
+                .lock()
+                .unwrap()
+                .push(thread::spawn(move || serve(Box::new(server_end), sh)));
+            Box::new(client_end)
+        };
+        let first = spawn_conn(&replica);
+        let router = Router::new(&[8], 1);
+        let mut client = PsClient::new(0, vec![first], router);
+        client.set_retry_limit(2);
+        let reconnect_target = primary.clone();
+        let reconnect_handles = serve_handles.clone();
+        client.set_reconnect(Box::new(move |_s| {
+            let (client_end, server_end) = InProcTransport::pair();
+            let sh = reconnect_target.clone();
+            reconnect_handles
+                .lock()
+                .unwrap()
+                .push(thread::spawn(move || serve(Box::new(server_end), sh)));
+            Ok(Box::new(client_end) as Box<dyn Transport>)
+        }));
+
+        let grads = vec![Tensor::from_vec(&[2], vec![2.0, -1.0])];
+        client.push(0, &grads).unwrap();
+        // The gradient landed exactly once, on the primary only.
+        assert_eq!(primary.store.get_clone(0).unwrap().data(), &[-2.0, 1.0]);
+        assert_eq!(replica.store.get_clone(0).unwrap().data(), &[0.0, 0.0]);
+        assert_eq!(primary.counters.updates.load(Ordering::Relaxed), 1);
+        assert_eq!(replica.counters.updates.load(Ordering::Relaxed), 0);
+        // Pulls ride the already-re-routed connection.
+        let params = client.pull_all().unwrap();
+        assert_eq!(params[0].data(), &[-2.0, 1.0]);
+        drop(client);
+        for h in serve_handles.lock().unwrap().drain(..) {
+            h.join().unwrap();
         }
     }
 

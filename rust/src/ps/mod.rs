@@ -10,6 +10,11 @@
 //! * [`client`] — worker-side connection fan-out: pull/push across all
 //!   servers, with a prefetch thread to hide I/O behind compute (§3.3's
 //!   ideal-pipeline condition).
+//! * [`replica`] — chain replication: each shard's primary forwards
+//!   admitted push frames (with their `(worker, step, seq)` tags, so
+//!   replicas build identical dedup watermarks) down a chain of R−1
+//!   replicas; [`router::ReplicatedTopology`] tracks which physical
+//!   server is each shard's primary and re-points it on failover.
 //!
 //! # Wire format
 //!
@@ -30,6 +35,12 @@
 //! | `StatsReply`     | `u64 pulls, u64 pushes, u64 updates`             |
 //! | `Shutdown`       | —                                                |
 //! | `Error`          | `str what` (u32 byte length || UTF-8)            |
+//! | `ReplForward`    | forwarded `Push`/`CompressedPush` frame, verbatim |
+//! | `ReplRelease`    | `u64 step`                                       |
+//! | `Promote`        | `u64 epoch`                                      |
+//! | `PromoteAck`     | `u64 epoch, u64 clock`                           |
+//! | `Ping`           | —                                                |
+//! | `Pong`           | `u64 epoch, u8 is_primary`                       |
 //!
 //! A tensor is `u32 rank, rank × u32 dim, u32 numel, numel × f32` — the
 //! f32 payload is the host's little-endian memory image, so on LE
@@ -111,15 +122,25 @@
 //! ([`PsShared::set_barrier_timeout`]), so dead peers surface as
 //! retryable errors. `net::fault::FaultyTransport` injects the
 //! failures deterministically from a seed.
+//!
+//! With `--replicas R` the servers themselves are crash-tolerant:
+//! every shard is chain-replicated ([`replica`]), the coordinator
+//! heartbeats the chains and promotes on a missed lease
+//! (`coordinator::distributed::ServerSupervisor`), and clients
+//! re-resolve the shard's primary through their reconnect handler —
+//! killing a primary mid-run leaves final parameters byte-identical to
+//! a fault-free run (chaos-tested per codec, async + sync).
 
 pub mod client;
 pub mod compress;
+pub mod replica;
 pub mod router;
 pub mod server;
 pub mod shard;
 
 pub use client::PsClient;
 pub use compress::{quantize8, CodecKind, Compressed, CompressedRef, DenseRef, TopK};
-pub use router::Router;
+pub use replica::NOT_PRIMARY;
+pub use router::{ReplicatedTopology, Router};
 pub use server::{serve, PsServerHandle, PsShared, UpdateMode};
 pub use shard::{Optimizer, ShardStore, StripedStore, DEFAULT_STRIPES};

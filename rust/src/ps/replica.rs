@@ -1,0 +1,200 @@
+//! Chain replication for parameter-server shards.
+//!
+//! Each key range from [`crate::ps::Router`] is owned by a **primary**
+//! and mirrored down a chain of R−1 replicas: the primary forwards every
+//! admitted push frame verbatim (`wire::repl_forward` — one tag byte of
+//! overhead, zero re-encode) plus sync-mode `ReplRelease` markers, and
+//! each replica relays down to its own successor. Because the forwarded
+//! frames carry the original `(worker, step, seq)` tags and replicas run
+//! them through the *same* admission logic as the primary, every node in
+//! the chain builds identical per-worker seq watermarks — so after a
+//! failover, a client replaying staged frames against the promoted
+//! replica is deduplicated exactly as the dead primary would have.
+//!
+//! # Consistency contract
+//!
+//! * **Forward before ack.** A push is forwarded down-chain *before* its
+//!   `PushAck` goes back to the worker, under the replication order lock
+//!   ([`ReplicationState::guard`]). An acked update therefore exists on
+//!   every live chain member's inbound stream; an un-acked update is
+//!   replayed by the client against whichever node is primary next.
+//!   Either way no update is lost or doubled across a failover — the
+//!   chaos suite asserts final parameters byte-identical to a fault-free
+//!   run. Caveat (see ROADMAP): over in-proc channels the forwarded
+//!   frame's delivery is independent of the primary's life, but over TCP
+//!   a successful forward means bytes in the primary's kernel send
+//!   buffer — a host crash inside that window can lose an acked update.
+//!   Closing it for real networks means acking from the chain *tail*
+//!   instead of the head.
+//! * **Total replication order.** When a chain is attached, admission,
+//!   local apply/fold and the forward happen under one mutex, so the
+//!   down-chain stream is an exact serialization of the primary's state
+//!   changes (sync `ReplRelease` markers are ordered after every push
+//!   folded into the released step). Without replicas the guard is a
+//!   single atomic load — the PR-1 striped hot path is untouched.
+//! * **Roles and epochs.** Replicas reject direct worker traffic with a
+//!   [`NOT_PRIMARY`]-tagged error carrying their routing epoch; the
+//!   client treats that as a stale route and re-resolves through its
+//!   reconnect handler. `Promote { epoch }` flips a replica to primary —
+//!   its chain successors (wired at startup) keep receiving forwards, so
+//!   an R≥3 chain keeps replicating after a head loss.
+//!
+//! Known limitation (see ROADMAP): a mid-chain replica loss is repaired
+//! by re-pointing its predecessor at its successor, but frames the dead
+//! node had not yet relayed are not re-synced — full anti-entropy resync
+//! is future work. Primary failover (the case that loses data today) is
+//! fully covered.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+use crate::net::message::{wire, Message};
+use crate::net::transport::Transport;
+
+/// Marker embedded in the error a replica returns for direct worker
+/// traffic. `PsClient` matches on it to trigger re-resolution + replay
+/// instead of failing the op.
+pub const NOT_PRIMARY: &str = "not primary";
+
+/// A server's downstream chain link(s) plus the replication order lock.
+///
+/// `guard()` is the single entry point: handlers that may mutate
+/// replicated state take the guard *first*, keep it across
+/// admission/apply, and forward through it — giving the down-chain
+/// stream a total order consistent with local application. When no
+/// replicas are attached the fast path is one relaxed-ish atomic load
+/// and no lock.
+pub struct ReplicationState {
+    active: AtomicBool,
+    downstream: Mutex<Vec<Box<dyn Transport>>>,
+}
+
+impl Default for ReplicationState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ReplicationState {
+    pub fn new() -> Self {
+        ReplicationState {
+            active: AtomicBool::new(false),
+            downstream: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Install (or replace) the downstream chain connections. An empty
+    /// vector detaches replication (the solo fast path).
+    pub fn set_downstream(&self, conns: Vec<Box<dyn Transport>>) {
+        let mut d = self.downstream.lock().unwrap();
+        self.active.store(!conns.is_empty(), Ordering::Release);
+        *d = conns;
+    }
+
+    /// Number of live downstream connections.
+    pub fn downstream_len(&self) -> usize {
+        self.downstream.lock().unwrap().len()
+    }
+
+    /// Acquire the replication order lock, or `None` when no chain is
+    /// attached. Self-heals: once every downstream link has died the
+    /// fast-path flag flips back off.
+    pub fn guard(&self) -> Option<MutexGuard<'_, Vec<Box<dyn Transport>>>> {
+        if !self.active.load(Ordering::Acquire) {
+            return None;
+        }
+        let g = self.downstream.lock().unwrap();
+        if g.is_empty() {
+            self.active.store(false, Ordering::Release);
+            return None;
+        }
+        Some(g)
+    }
+}
+
+/// Forward one admitted push frame verbatim down-chain. Dead links are
+/// dropped (the supervisor notices them independently via heartbeats);
+/// forwarding itself is fire-and-forget — the consistency contract
+/// needs ordering and forward-before-ack, not a replica round-trip.
+pub fn forward_frame(conns: &mut Vec<Box<dyn Transport>>, frame: &[u8]) {
+    conns.retain_mut(|t| match t.send_with(&mut |w| wire::repl_forward(w, frame)) {
+        Ok(()) => true,
+        Err(e) => {
+            crate::warn_log!("ps", "replica forward failed; dropping link", err = e);
+            false
+        }
+    });
+}
+
+/// Forward a sync-mode release marker down-chain (ordered after every
+/// push folded into `step` by the replication order lock).
+pub fn forward_release(conns: &mut Vec<Box<dyn Transport>>, step: u64) {
+    let msg = Message::ReplRelease { step };
+    conns.retain_mut(|t| match t.send(&msg) {
+        Ok(()) => true,
+        Err(e) => {
+            crate::warn_log!("ps", "replica release forward failed; dropping link", err = e);
+            false
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::transport::InProcTransport;
+
+    #[test]
+    fn guard_inactive_until_downstream_set() {
+        let r = ReplicationState::new();
+        assert!(r.guard().is_none());
+        let (a, _b) = InProcTransport::pair();
+        r.set_downstream(vec![Box::new(a) as Box<dyn Transport>]);
+        assert_eq!(r.downstream_len(), 1);
+        assert!(r.guard().is_some());
+        r.set_downstream(Vec::new());
+        assert!(r.guard().is_none());
+    }
+
+    #[test]
+    fn forward_drops_dead_links_and_self_heals() {
+        let r = ReplicationState::new();
+        let (alive_tx, mut alive_rx) = InProcTransport::pair();
+        let (dead_tx, dead_rx) = InProcTransport::pair();
+        drop(dead_rx); // sever
+        r.set_downstream(vec![
+            Box::new(alive_tx) as Box<dyn Transport>,
+            Box::new(dead_tx) as Box<dyn Transport>,
+        ]);
+        let inner = Message::Ping.encode();
+        {
+            let mut g = r.guard().expect("active");
+            forward_frame(&mut g, &inner);
+            assert_eq!(g.len(), 1, "dead link dropped");
+        }
+        match alive_rx.recv().unwrap() {
+            Message::ReplForward { inner: got } => assert_eq!(got, inner),
+            m => panic!("{m:?}"),
+        }
+        // Kill the survivor: the next guarded forward empties the set,
+        // and the guard self-heals back to the solo fast path.
+        drop(alive_rx);
+        {
+            let mut g = r.guard().expect("still active");
+            forward_frame(&mut g, &inner);
+            assert!(g.is_empty());
+        }
+        assert!(r.guard().is_none());
+    }
+
+    #[test]
+    fn forward_release_reaches_replica() {
+        let r = ReplicationState::new();
+        let (tx, mut rx) = InProcTransport::pair();
+        r.set_downstream(vec![Box::new(tx) as Box<dyn Transport>]);
+        let mut g = r.guard().unwrap();
+        forward_release(&mut g, 9);
+        drop(g);
+        assert_eq!(rx.recv().unwrap(), Message::ReplRelease { step: 9 });
+    }
+}

@@ -74,6 +74,111 @@ impl Router {
     }
 }
 
+// ---------------------------------------------------------- replication
+
+/// Mutable shard -> physical-server mapping layered over the immutable
+/// [`Router`]: the router still owns key -> *logical shard* placement;
+/// this topology tracks, per shard, the chain of physical servers that
+/// replicate it — head of the chain is the current **primary**, the one
+/// workers talk to. Failover re-points a shard by dropping the dead
+/// head and bumping `epoch`; clients re-resolve through it on
+/// reconnect, so `server_of`/`keys_of` stay valid unchanged (they speak
+/// shards) while the physical address of a shard can move.
+#[derive(Debug, Clone)]
+pub struct ReplicatedTopology {
+    /// shard -> ordered chain of physical server ids; `chain[0]` is the
+    /// primary, each node forwards to its successor.
+    chains: Vec<Vec<usize>>,
+    /// Bumped on every promotion/removal; stale routes are detected by
+    /// comparing epochs.
+    epoch: u64,
+    /// Physical servers provisioned at startup (`n_shards * replicas`).
+    n_physical: usize,
+}
+
+impl ReplicatedTopology {
+    /// Chain layout: shard `s` is served by physical ids
+    /// `s*replicas .. (s+1)*replicas`, head first.
+    pub fn new(n_shards: usize, replicas: usize) -> Self {
+        assert!(n_shards >= 1, "need at least one shard");
+        assert!(replicas >= 1, "need at least one copy per shard");
+        let chains = (0..n_shards)
+            .map(|s| (s * replicas..(s + 1) * replicas).collect())
+            .collect();
+        ReplicatedTopology { chains, epoch: 0, n_physical: n_shards * replicas }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.chains.len()
+    }
+
+    /// Physical servers provisioned at startup (dead ones included).
+    pub fn n_physical(&self) -> usize {
+        self.n_physical
+    }
+
+    /// Monotone routing epoch; bumped on every topology change.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// The physical server currently primary for `shard`.
+    pub fn primary_of(&self, shard: usize) -> usize {
+        self.chains[shard][0]
+    }
+
+    /// The live replication chain for `shard` (head = primary).
+    pub fn chain_of(&self, shard: usize) -> &[usize] {
+        &self.chains[shard]
+    }
+
+    /// The shard a physical server belongs to, if it is still in a
+    /// chain.
+    pub fn shard_of(&self, physical: usize) -> Option<usize> {
+        self.chains.iter().position(|c| c.contains(&physical))
+    }
+
+    /// Fail the current primary of `shard` over to the next chain
+    /// member. Returns the new primary's physical id. Errors when the
+    /// chain has no successor (last copy — unrecoverable without
+    /// re-provisioning).
+    pub fn promote(&mut self, shard: usize) -> Result<usize, String> {
+        let chain = &mut self.chains[shard];
+        if chain.len() < 2 {
+            return Err(format!(
+                "shard {shard}: no replica left to promote (chain {chain:?})"
+            ));
+        }
+        let dead = chain.remove(0);
+        self.epoch += 1;
+        let new_primary = self.chains[shard][0];
+        crate::warn_log!(
+            "ps",
+            "promoted replica to primary",
+            shard = shard,
+            dead = dead,
+            new_primary = new_primary,
+            epoch = self.epoch
+        );
+        Ok(new_primary)
+    }
+
+    /// Remove a dead non-head chain member (replica loss). Errors for
+    /// the head (use [`promote`](Self::promote)) or an unknown member.
+    pub fn remove(&mut self, shard: usize, physical: usize) -> Result<(), String> {
+        let chain = &mut self.chains[shard];
+        match chain.iter().position(|&p| p == physical) {
+            Some(0) => Err(format!("physical {physical} is shard {shard}'s primary")),
+            Some(i) => {
+                chain.remove(i);
+                self.epoch += 1;
+                Ok(())
+            }
+            None => Err(format!("physical {physical} not in shard {shard}'s chain")),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -180,6 +285,115 @@ mod tests {
                 total_keys += keys.len();
             }
             assert_eq!(total_keys, n_keys);
+        });
+    }
+
+    /// Every key routes to exactly one live physical primary: the
+    /// router's shard partition plus the topology's one-head-per-chain.
+    fn assert_no_orphans_or_double_owners(r: &Router, topo: &ReplicatedTopology) {
+        assert_eq!(r.n_servers(), topo.n_shards());
+        let mut owner = vec![None::<usize>; r.n_keys()];
+        for shard in 0..topo.n_shards() {
+            let primary = topo.primary_of(shard);
+            assert_eq!(topo.chain_of(shard)[0], primary);
+            for &k in r.keys_of(shard) {
+                assert!(
+                    owner[k as usize].is_none(),
+                    "key {k} owned by physicals {:?} and {primary}",
+                    owner[k as usize]
+                );
+                owner[k as usize] = Some(primary);
+                assert_eq!(topo.shard_of(primary), Some(r.server_of(k)));
+            }
+        }
+        assert!(owner.iter().all(Option::is_some), "orphaned key: {owner:?}");
+        // Distinct shards must resolve to distinct physical primaries.
+        let mut primaries: Vec<usize> =
+            (0..topo.n_shards()).map(|s| topo.primary_of(s)).collect();
+        primaries.sort_unstable();
+        primaries.dedup();
+        assert_eq!(primaries.len(), topo.n_shards());
+    }
+
+    #[test]
+    fn topology_repoints_on_primary_loss() {
+        // 3 shards x 3 replicas over VGG16-ish sizes: after any sequence
+        // of primary losses that leaves every chain alive, server_of /
+        // keys_of agree with the promoted topology and no key is
+        // orphaned or double-owned.
+        let sizes = vec![150_000, 1000, 2000, 64_000, 800, 400_000, 9];
+        let r = Router::new(&sizes, 3);
+        let mut topo = ReplicatedTopology::new(3, 3);
+        assert_eq!(topo.n_physical(), 9);
+        assert_eq!(topo.epoch(), 0);
+        assert_no_orphans_or_double_owners(&r, &topo);
+
+        // Kill shard 1's primary: 3 -> 4.
+        assert_eq!(topo.primary_of(1), 3);
+        assert_eq!(topo.promote(1).unwrap(), 4);
+        assert_eq!(topo.epoch(), 1);
+        assert_eq!(topo.primary_of(1), 4);
+        assert_eq!(topo.chain_of(1), &[4, 5]);
+        assert_no_orphans_or_double_owners(&r, &topo);
+
+        // Kill it again: 4 -> 5, now a chain of one.
+        assert_eq!(topo.promote(1).unwrap(), 5);
+        assert_eq!(topo.chain_of(1), &[5]);
+        assert_no_orphans_or_double_owners(&r, &topo);
+
+        // Last copy: promotion must refuse, topology unchanged.
+        assert!(topo.promote(1).is_err());
+        assert_eq!(topo.epoch(), 2);
+        assert_eq!(topo.primary_of(1), 5);
+
+        // Other shards were never re-pointed.
+        assert_eq!(topo.primary_of(0), 0);
+        assert_eq!(topo.primary_of(2), 6);
+        assert_eq!(topo.shard_of(3), None, "dead primary left the topology");
+    }
+
+    #[test]
+    fn topology_removes_mid_chain_replicas() {
+        let mut topo = ReplicatedTopology::new(2, 3);
+        // Removing the head is a promotion, not a removal.
+        assert!(topo.remove(0, 0).is_err());
+        // Removing an unknown member fails.
+        assert!(topo.remove(0, 5).is_err());
+        assert_eq!(topo.epoch(), 0);
+        // A mid-chain loss drops the member and bumps the epoch.
+        topo.remove(0, 1).unwrap();
+        assert_eq!(topo.chain_of(0), &[0, 2]);
+        assert_eq!(topo.epoch(), 1);
+        // The primary survives replica losses.
+        assert_eq!(topo.primary_of(0), 0);
+    }
+
+    #[test]
+    fn prop_topology_promotions_keep_keys_owned() {
+        prop::run(40, 0xF41F, |g| {
+            let n_shards = g.usize(1, 5);
+            let replicas = g.usize(1, 4);
+            let n_keys = g.usize(n_shards, 40);
+            let sizes: Vec<usize> = (0..n_keys).map(|_| g.usize(1, 1 << 20)).collect();
+            let r = Router::new(&sizes, n_shards);
+            let mut topo = ReplicatedTopology::new(n_shards, replicas);
+            assert_no_orphans_or_double_owners(&r, &topo);
+            // Random promotions; refused ones must leave state intact.
+            for _ in 0..g.usize(0, 2 * replicas) {
+                let shard = g.usize(0, n_shards - 1);
+                let before = topo.epoch();
+                match topo.promote(shard) {
+                    Ok(p) => {
+                        assert_eq!(topo.primary_of(shard), p);
+                        assert_eq!(topo.epoch(), before + 1);
+                    }
+                    Err(_) => {
+                        assert_eq!(topo.chain_of(shard).len(), 1);
+                        assert_eq!(topo.epoch(), before);
+                    }
+                }
+                assert_no_orphans_or_double_owners(&r, &topo);
+            }
         });
     }
 

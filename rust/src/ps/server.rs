@@ -23,15 +23,25 @@
 //! the barrier wait is bounded (tunable via
 //! [`PsShared::set_barrier_timeout`]) so a dead peer surfaces as a
 //! retryable error, never a hang.
+//!
+//! Replication (chain, see [`crate::ps::replica`]): when down-chain
+//! links are attached ([`PsShared::set_replicas`]), every admitted push
+//! frame is forwarded verbatim — before its ack, under the replication
+//! order lock — and sync releases emit `ReplRelease` markers, so every
+//! chain member converges to the same store state and the same
+//! idempotency watermarks. Replicas reject direct worker traffic with a
+//! `not primary` error until a `Promote` frame flips their role; the
+//! client treats that error as a stale route and re-resolves.
 
 use std::collections::btree_map::Entry as BtreeEntry;
 use std::collections::{BTreeMap, BTreeSet};
 use std::net::TcpListener;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::{self, JoinHandle};
 
 use super::compress::{CompressedRef, DenseRef};
+use super::replica::{self, ReplicationState, NOT_PRIMARY};
 use super::shard::{ShardStore, StripedStore, DEFAULT_STRIPES};
 use crate::net::message::{wire, Message};
 use crate::net::transport::{TcpTransport, Transport};
@@ -40,6 +50,14 @@ use crate::tensor::Tensor;
 /// How long a worker may wait inside a sync barrier before the server
 /// reports an error instead of deadlocking (peer death detection).
 pub const BARRIER_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(300);
+
+/// Bound on how long a `Promote` defers its role flip while up-chain
+/// replication feeds drain to EOF. A dead primary's sockets close
+/// promptly, so the common takeover waits only for already-buffered
+/// frames to apply; a wedged-but-alive primary cannot be told apart
+/// from a slow one, so takeover proceeds after this bound (fencing a
+/// still-live old primary is a ROADMAP item).
+pub const PROMOTE_DRAIN_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(2);
 
 /// Cap on simultaneously-buffered sync steps. Workers run the barrier in
 /// lockstep, so live clients are never more than a step or two ahead of
@@ -175,6 +193,21 @@ pub struct PsShared {
     barrier_timeout_ms: AtomicU64,
     barrier_cv: Condvar,
     stop: AtomicBool,
+    /// Down-chain replication links + the replication order lock
+    /// (`ps::replica`); inert (one atomic load) when no chain attached.
+    repl: ReplicationState,
+    /// Role: workers may only talk to a primary; a replica answers
+    /// worker ops with a [`NOT_PRIMARY`] error until promoted.
+    primary: AtomicBool,
+    /// Routing epoch, bumped by `Promote` on failover.
+    epoch: AtomicU64,
+    /// Connections currently feeding this server replicated frames
+    /// (counted from their first `ReplForward`/`ReplRelease` until
+    /// EOF). `Promote` waits — bounded by [`PROMOTE_DRAIN_TIMEOUT`] —
+    /// for this to reach zero before flipping the role, so every frame
+    /// the dead primary already forwarded is applied before client
+    /// replays can raise the seq watermarks past it.
+    chain_feeds: AtomicUsize,
 }
 
 impl PsShared {
@@ -194,11 +227,56 @@ impl PsShared {
             barrier_timeout_ms: AtomicU64::new(BARRIER_TIMEOUT.as_millis() as u64),
             barrier_cv: Condvar::new(),
             stop: AtomicBool::new(false),
+            repl: ReplicationState::new(),
+            primary: AtomicBool::new(true),
+            epoch: AtomicU64::new(0),
+            chain_feeds: AtomicUsize::new(0),
         })
     }
 
     pub fn stopped(&self) -> bool {
         self.stop.load(Ordering::Relaxed)
+    }
+
+    /// Halt the server: serve loops stop admitting frames (connections
+    /// drop without replies) and barrier waiters drain. The chaos
+    /// suite's kill switch; also the first step of a clean shutdown.
+    pub fn halt(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.barrier_cv.notify_all();
+    }
+
+    /// Attach (or replace) this server's down-chain replication links;
+    /// an empty vector detaches. See `ps::replica` for the contract.
+    pub fn set_replicas(&self, conns: Vec<Box<dyn Transport>>) {
+        self.repl.set_downstream(conns);
+    }
+
+    /// Live down-chain links.
+    pub fn n_replicas(&self) -> usize {
+        self.repl.downstream_len()
+    }
+
+    /// Demote to replica: worker ops are rejected with a
+    /// [`NOT_PRIMARY`] error until [`promote`](Self::promote).
+    pub fn set_role_replica(&self) {
+        self.primary.store(false, Ordering::Release);
+    }
+
+    pub fn is_primary(&self) -> bool {
+        self.primary.load(Ordering::Acquire)
+    }
+
+    /// Routing epoch (bumped on failover).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Take over as primary at routing `epoch` (the coordinator's
+    /// failover decision — wire form is `Message::Promote`).
+    pub fn promote(&self, epoch: u64) {
+        self.epoch.fetch_max(epoch, Ordering::AcqRel);
+        self.primary.store(true, Ordering::Release);
     }
 
     /// Override how long a sync-barrier waiter blocks before erroring
@@ -255,13 +333,29 @@ impl PsShared {
     }
 }
 
+/// Where a push frame came from: a worker connection (primary-only,
+/// acked) or the up-chain replication stream (applied silently, still
+/// relayed down-chain).
+#[derive(Debug, Clone, Copy)]
+enum PushOrigin {
+    Worker,
+    Chain,
+}
+
+/// The stale-route error a replica returns for direct worker traffic.
+fn not_primary_error(shared: &PsShared) -> Message {
+    Message::Error {
+        what: format!("{NOT_PRIMARY} for this shard (epoch {})", shared.epoch()),
+    }
+}
+
 /// Streaming compressed-push handler: entries decode as borrowed views
 /// straight from the frame (`wire::CompressedPushBody`) and scatter
 /// into the store (async) or the striped sync aggregation — no dense
 /// `Tensor` is ever allocated per entry. (Sync mode allocates one dense
 /// running sum per key per step on the *first* contribution: the same
 /// O(params) barrier memory the dense path pays.)
-fn handle_compressed_push(frame: &[u8], shared: &PsShared) -> Message {
+fn handle_compressed_push(frame: &[u8], shared: &PsShared, origin: PushOrigin) -> Message {
     shared.counters.pushes.fetch_add(1, Ordering::Relaxed);
     // Structural pre-validation of the WHOLE frame before admission: a
     // truncated/corrupt frame must not consume the idempotency ticket —
@@ -278,9 +372,28 @@ fn handle_compressed_push(frame: &[u8], shared: &PsShared) -> Message {
     }
     let mut body = wire::CompressedPushBody::decode(frame).expect("validated above");
     let (worker, step, seq) = (body.worker, body.step, body.seq);
+    if matches!(origin, PushOrigin::Worker) && !shared.is_primary() {
+        return not_primary_error(shared);
+    }
     match shared.mode {
         UpdateMode::Async => {
+            // Replication order lock (None when solo): admission, the
+            // down-chain forward and the local apply serialize as one
+            // unit, and the forward precedes the ack — an acked update
+            // exists on every live chain member. The halt re-check
+            // INSIDE the guard closes the failover race: a frame that
+            // slipped past the serve loop's check while the chain was
+            // being detached must not apply here and ack without ever
+            // reaching the replica — the stale-route error makes the
+            // client replay it against the promoted head instead.
+            let mut repl = shared.repl.guard();
+            if shared.stopped() {
+                return not_primary_error(shared);
+            }
             if shared.admit_async_push(worker, seq) {
+                if let Some(conns) = repl.as_deref_mut() {
+                    replica::forward_frame(conns, frame);
+                }
                 while let Some(entry) = body.next_entry() {
                     let (key, grad) = match entry {
                         Ok(x) => x,
@@ -295,6 +408,15 @@ fn handle_compressed_push(frame: &[u8], shared: &PsShared) -> Message {
             Message::PushAck { clock: shared.store.clock() }
         }
         UpdateMode::Sync { .. } => {
+            // Window check inside the replication order lock: a push
+            // racing a concurrent release either folds+forwards wholly
+            // before it (included on every chain member) or observes
+            // the advanced horizon (discarded everywhere). Halt
+            // re-check as in the async arm.
+            let mut repl = shared.repl.guard();
+            if shared.stopped() {
+                return not_primary_error(shared);
+            }
             match shared.sync.push_window(step) {
                 PushWindow::Released => {
                     // Straggler push for a released step — discarded.
@@ -308,6 +430,9 @@ fn handle_compressed_push(frame: &[u8], shared: &PsShared) -> Message {
                 }
                 PushWindow::Open => {
                     if shared.sync.admit(step, worker) {
+                        if let Some(conns) = repl.as_deref_mut() {
+                            replica::forward_frame(conns, frame);
+                        }
                         while let Some(entry) = body.next_entry() {
                             let (key, grad) = match entry {
                                 Ok(x) => x,
@@ -332,7 +457,7 @@ fn handle_compressed_push(frame: &[u8], shared: &PsShared) -> Message {
 /// O(params) barrier memory as before.) Replayed frames are admitted at
 /// most once: per `(worker, seq)` watermark in async mode, per
 /// `(step, worker)` in sync mode.
-fn handle_dense_push(frame: &[u8], shared: &PsShared) -> Message {
+fn handle_dense_push(frame: &[u8], shared: &PsShared, origin: PushOrigin) -> Message {
     shared.counters.pushes.fetch_add(1, Ordering::Relaxed);
     // Structural pre-validation before admission, as in
     // [`handle_compressed_push`]: only a fully well-formed frame may
@@ -348,9 +473,22 @@ fn handle_dense_push(frame: &[u8], shared: &PsShared) -> Message {
     }
     let mut body = wire::PushBody::decode(frame).expect("validated above");
     let (worker, step, seq) = (body.worker, body.step, body.seq);
+    if matches!(origin, PushOrigin::Worker) && !shared.is_primary() {
+        return not_primary_error(shared);
+    }
     match shared.mode {
         UpdateMode::Async => {
+            // See [`handle_compressed_push`]: forward-before-ack under
+            // the replication order lock, with the halt re-check that
+            // keeps a dying primary from acking an unforwarded frame.
+            let mut repl = shared.repl.guard();
+            if shared.stopped() {
+                return not_primary_error(shared);
+            }
             if shared.admit_async_push(worker, seq) {
+                if let Some(conns) = repl.as_deref_mut() {
+                    replica::forward_frame(conns, frame);
+                }
                 while let Some(entry) = body.next_entry() {
                     let (key, grad) = match entry {
                         Ok(x) => x,
@@ -365,6 +503,10 @@ fn handle_dense_push(frame: &[u8], shared: &PsShared) -> Message {
             Message::PushAck { clock: shared.store.clock() }
         }
         UpdateMode::Sync { .. } => {
+            let mut repl = shared.repl.guard();
+            if shared.stopped() {
+                return not_primary_error(shared);
+            }
             match shared.sync.push_window(step) {
                 PushWindow::Released => {
                     // Straggler push for a released step — discarded.
@@ -378,6 +520,9 @@ fn handle_dense_push(frame: &[u8], shared: &PsShared) -> Message {
                 }
                 PushWindow::Open => {
                     if shared.sync.admit(step, worker) {
+                        if let Some(conns) = repl.as_deref_mut() {
+                            replica::forward_frame(conns, frame);
+                        }
                         while let Some(entry) = body.next_entry() {
                             let (key, grad) = match entry {
                                 Ok(x) => x,
@@ -484,9 +629,25 @@ fn fold_sync_compressed(shared: &PsShared, step: u64, key: u32, g: &CompressedRe
 
 /// Apply a released step's aggregated means and advance the horizon.
 /// Called with the barrier lock held; drains each agg stripe under its
-/// own lock, applying means with no agg lock held (barrier -> agg ->
-/// store is the global lock order).
-fn release_step(shared: &PsShared, bar: &mut BarrierState, step: u64) {
+/// own lock, applying means with no agg lock held (barrier -> repl ->
+/// agg -> store is the global lock order).
+///
+/// With a replication chain attached, the replication order lock is
+/// held across the whole release and a `ReplRelease` marker is
+/// forwarded at the end: a racing push either folded **and** forwarded
+/// before the drain (included on every chain member) or observes the
+/// advanced horizon after it (discarded everywhere) — no divergence.
+///
+/// Returns `false` without releasing anything when halt won the race
+/// for the replication guard (failover in progress): a dying primary
+/// applying means its replica will never see — and then telling
+/// workers the step committed — would diverge the chain. The caller
+/// must drop the connection unreplied so clients re-resolve.
+fn release_step(shared: &PsShared, bar: &mut BarrierState, step: u64) -> bool {
+    let mut repl = shared.repl.guard();
+    if shared.stopped() {
+        return false;
+    }
     for stripe in &shared.sync.agg {
         let drained = stripe.lock().unwrap().remove(&step);
         if let Some(grads) = drained {
@@ -518,22 +679,75 @@ fn release_step(shared: &PsShared, bar: &mut BarrierState, step: u64) {
         .lock()
         .unwrap()
         .retain(|&s, _| s >= horizon);
+    if let Some(conns) = repl.as_deref_mut() {
+        replica::forward_release(conns, step);
+    }
+    true
+}
+
+/// Registers a connection as a replication feed on its first forwarded
+/// frame and deregisters on disconnect (drop) — the counter `Promote`
+/// drains against. A Drop guard so every exit path of [`serve`]
+/// (errors, halt, shutdown) deregisters exactly once.
+struct FeedGuard<'a> {
+    shared: &'a PsShared,
+    active: bool,
+}
+
+impl FeedGuard<'_> {
+    fn mark(&mut self) {
+        if !self.active {
+            self.active = true;
+            self.shared.chain_feeds.fetch_add(1, Ordering::AcqRel);
+        }
+    }
+}
+
+impl Drop for FeedGuard<'_> {
+    fn drop(&mut self) {
+        if self.active {
+            self.shared.chain_feeds.fetch_sub(1, Ordering::AcqRel);
+        }
+    }
 }
 
 /// Handle one connection until Shutdown/disconnect. Usable directly with
 /// in-process transports or spawned per TCP accept.
 pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
+    let mut feed = FeedGuard { shared: &shared, active: false };
     loop {
         // Zero-copy receive: compressed pushes are dispatched by frame
         // tag into the streaming handler (no owned Message, no owned
         // tensors); everything else falls back to `Message::decode`.
+        // Replication forwards are dispatched silently (no reply — the
+        // primary already acked the worker).
         let mut fallback: Option<Message> = None;
         let mut reply: Option<Message> = None;
+        let mut silent = false;
         let received = t.recv_with(&mut |frame| {
-            if wire::is_compressed_push(frame) {
-                reply = Some(handle_compressed_push(frame, &shared));
+            if shared.stopped() {
+                // Halted (chaos-killed or shutting down): admit nothing
+                // more — the connection drops without a reply, so the
+                // client's retry lands on whoever is primary next.
+                silent = true;
+            } else if wire::is_repl_forward(frame) {
+                feed.mark();
+                let inner = wire::repl_forward_inner(frame);
+                let outcome = if wire::is_compressed_push(inner) {
+                    handle_compressed_push(inner, &shared, PushOrigin::Chain)
+                } else if wire::is_push(inner) {
+                    handle_dense_push(inner, &shared, PushOrigin::Chain)
+                } else {
+                    Message::Error { what: "forwarded frame is not a push".into() }
+                };
+                if let Message::Error { what } = outcome {
+                    crate::warn_log!("ps", "replicated frame rejected", err = what);
+                }
+                silent = true;
+            } else if wire::is_compressed_push(frame) {
+                reply = Some(handle_compressed_push(frame, &shared, PushOrigin::Worker));
             } else if wire::is_push(frame) {
-                reply = Some(handle_dense_push(frame, &shared));
+                reply = Some(handle_dense_push(frame, &shared, PushOrigin::Worker));
             } else {
                 fallback = Some(Message::decode(frame)?);
             }
@@ -541,6 +755,12 @@ pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
         });
         if received.is_err() {
             return; // peer hung up (or sent an undecodable frame)
+        }
+        if silent {
+            if shared.stopped() {
+                return;
+            }
+            continue;
         }
         if let Some(reply) = reply {
             if t.send(&reply).is_err() {
@@ -552,6 +772,15 @@ pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
         match msg {
             Message::Pull { keys, .. } => {
                 shared.counters.pulls.fetch_add(1, Ordering::Relaxed);
+                if !shared.is_primary() {
+                    // Stale route: the worker should re-resolve and pull
+                    // from the promoted primary, never from a replica
+                    // that may lag the chain.
+                    if t.send(&not_primary_error(&shared)).is_err() {
+                        return;
+                    }
+                    continue;
+                }
                 // Stream the reply straight from the store into the
                 // transport's frame buffer — no tensor clones, one stripe
                 // read-lock per key. An unknown key aborts the partial
@@ -584,6 +813,12 @@ pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
             // an owned variant arriving here would mean the routing
             // broke, and falls through to the `other` arm.
             Message::Barrier { worker, step } => {
+                if !shared.is_primary() {
+                    if t.send(&not_primary_error(&shared)).is_err() {
+                        return;
+                    }
+                    continue;
+                }
                 let UpdateMode::Sync { expected_workers, backup_workers } = shared.mode else {
                     let _ = t.send(&Message::Error {
                         what: "barrier in async mode".into(),
@@ -621,9 +856,15 @@ pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
                 if arrived.len() >= quorum {
                     // Last arriver applies the aggregated means: one
                     // scale + one optimizer step per key, draining the
-                    // sums stripe by stripe.
+                    // sums stripe by stripe. A release refused by halt
+                    // (failover won the race) drops the connection
+                    // unreplied: the workers' retries re-arrive at
+                    // whoever is primary next, which holds the same
+                    // folded sums and releases there.
                     bar.arrived.remove(&step);
-                    release_step(&shared, &mut bar, step);
+                    if !release_step(&shared, &mut bar, step) {
+                        return;
+                    }
                     shared.barrier_cv.notify_all();
                 } else {
                     // Bounded wait: if a peer worker dies mid-step the
@@ -661,17 +902,16 @@ pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
                         continue;
                     }
                 }
-                // Woken by shutdown before the step released? That is a
-                // failed barrier, not a release — a BarrierRelease here
-                // would tell the worker its step committed when its
-                // gradients were never applied.
+                // Woken by halt/shutdown before the step released? That
+                // is a failed barrier, not a release — a BarrierRelease
+                // here would tell the worker its step committed when its
+                // gradients were never applied. Drop the connection with
+                // no reply: the waiter's retry must land on whoever is
+                // primary next (failover), not trust a dying server.
                 let released = bar.released_below > step;
                 drop(bar);
                 if !released {
-                    let _ = t.send(&Message::Error {
-                        what: format!("server stopping before step {step} released"),
-                    });
-                    continue;
+                    return;
                 }
                 if t.send(&Message::BarrierRelease { step }).is_err() {
                     return;
@@ -687,9 +927,60 @@ pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
                     return;
                 }
             }
+            Message::ReplRelease { step } => {
+                // Up-chain sync release marker: apply the step's means
+                // from the forwarded sums (and relay down-chain inside
+                // release_step). No reply — replication is one-way.
+                feed.mark();
+                if let UpdateMode::Sync { .. } = shared.mode {
+                    let mut bar = shared.sync.barrier.lock().unwrap();
+                    if step >= bar.released_below
+                        && step < bar.released_below + MAX_PENDING_STEPS
+                        && release_step(&shared, &mut bar, step)
+                    {
+                        // Post-promotion waiters (workers that already
+                        // re-barriered here) may be blocked on this step.
+                        shared.barrier_cv.notify_all();
+                    }
+                } else {
+                    crate::warn_log!("ps", "ReplRelease in async mode ignored", step = step);
+                }
+            }
+            Message::Promote { epoch } => {
+                // Drain-before-takeover: an up-chain feed still
+                // streaming means frames the old primary already
+                // forwarded (and acked to workers) are not all applied
+                // yet; flipping to primary now would let a client
+                // replay raise the seq watermark past them and silently
+                // drop acked updates. Wait — bounded — for the feeds to
+                // hit EOF (a dead primary's sockets close promptly).
+                let deadline = std::time::Instant::now() + PROMOTE_DRAIN_TIMEOUT;
+                while shared.chain_feeds.load(Ordering::Acquire) > 0
+                    && std::time::Instant::now() < deadline
+                    && !shared.stopped()
+                {
+                    thread::sleep(std::time::Duration::from_millis(1));
+                }
+                shared.promote(epoch);
+                let ack = Message::PromoteAck {
+                    epoch: shared.epoch(),
+                    clock: shared.store.clock(),
+                };
+                if t.send(&ack).is_err() {
+                    return;
+                }
+            }
+            Message::Ping => {
+                let pong = Message::Pong {
+                    epoch: shared.epoch(),
+                    is_primary: shared.is_primary(),
+                };
+                if t.send(&pong).is_err() {
+                    return;
+                }
+            }
             Message::Shutdown => {
-                shared.stop.store(true, Ordering::Relaxed);
-                shared.barrier_cv.notify_all();
+                shared.halt();
                 return;
             }
             other => {
@@ -746,8 +1037,7 @@ impl PsServerHandle {
     /// Request shutdown: connect once to deliver Shutdown and unblock the
     /// accept loop.
     pub fn shutdown(&mut self) {
-        self.shared.stop.store(true, Ordering::Relaxed);
-        self.shared.barrier_cv.notify_all();
+        self.shared.halt();
         if let Ok(mut t) = crate::net::transport::connect(self.addr) {
             let _ = t.send(&Message::Shutdown);
         }
@@ -1666,6 +1956,317 @@ mod tests {
         assert_eq!(shared.store.get_clone(1).unwrap().data(), &[5.0]);
         assert_eq!(shared.pending_steps(), 0);
         for h in serve_handles {
+            h.join().unwrap();
+        }
+    }
+
+    // ---- replication -------------------------------------------------
+
+    /// Poll until `cond` holds (replication is fire-and-forget, so
+    /// tests wait for the replica's serve thread to drain its stream).
+    fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while !cond() {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "timeout waiting for {what}"
+            );
+            thread::sleep(std::time::Duration::from_millis(2));
+        }
+    }
+
+    /// Spawn a serve thread for `shared` and return the client end.
+    fn conn_to(
+        shared: &Arc<PsShared>,
+        handles: &mut Vec<thread::JoinHandle<()>>,
+    ) -> Box<dyn Transport> {
+        let (client_end, server_end) = InProcTransport::pair();
+        let sh = shared.clone();
+        handles.push(thread::spawn(move || serve(Box::new(server_end), sh)));
+        Box::new(client_end)
+    }
+
+    #[test]
+    fn replica_mirrors_async_pushes_and_dedupes_after_promotion() {
+        let mut handles = Vec::new();
+        let primary = PsShared::new(
+            store_with(&[(0, vec![0.0, 0.0])], Optimizer::Sgd { lr: 1.0 }),
+            UpdateMode::Async,
+        );
+        let replica = PsShared::new(
+            store_with(&[(0, vec![0.0, 0.0])], Optimizer::Sgd { lr: 1.0 }),
+            UpdateMode::Async,
+        );
+        replica.set_role_replica();
+        assert!(!replica.is_primary());
+        primary.set_replicas(vec![conn_to(&replica, &mut handles)]);
+        assert_eq!(primary.n_replicas(), 1);
+
+        let mut c = conn_to(&primary, &mut handles);
+        let push = Message::Push {
+            worker: 3,
+            step: 0,
+            seq: 0,
+            entries: vec![(0, Tensor::from_vec(&[2], vec![2.0, 4.0]))],
+        };
+        // Original + replay: applied once on the primary, forwarded
+        // once down the chain (replays are not re-forwarded).
+        for _ in 0..2 {
+            c.send(&push).unwrap();
+            assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+        }
+        assert_eq!(primary.store.get_clone(0).unwrap().data(), &[-2.0, -4.0]);
+        wait_until("replica apply", || replica.store.clock() == 1);
+        assert_eq!(replica.store.get_clone(0).unwrap().data(), &[-2.0, -4.0]);
+        assert_eq!(replica.counters.pushes.load(Ordering::Relaxed), 1);
+        assert_eq!(replica.counters.updates.load(Ordering::Relaxed), 1);
+
+        // Failover: the promoted replica inherited the seq watermark
+        // from the replication stream, so the client's replay of the
+        // acked frame is deduplicated, while a fresh seq applies.
+        replica.promote(1);
+        assert!(replica.is_primary());
+        assert_eq!(replica.epoch(), 1);
+        let mut c2 = conn_to(&replica, &mut handles);
+        c2.send(&push).unwrap();
+        assert!(matches!(c2.recv().unwrap(), Message::PushAck { .. }));
+        assert_eq!(replica.counters.updates.load(Ordering::Relaxed), 1);
+        assert_eq!(replica.store.get_clone(0).unwrap().data(), &[-2.0, -4.0]);
+        c2.send(&Message::Push {
+            worker: 3,
+            step: 1,
+            seq: 1,
+            entries: vec![(0, Tensor::from_vec(&[2], vec![1.0, 1.0]))],
+        })
+        .unwrap();
+        assert!(matches!(c2.recv().unwrap(), Message::PushAck { .. }));
+        assert_eq!(replica.store.get_clone(0).unwrap().data(), &[-3.0, -5.0]);
+        drop(c);
+        drop(c2);
+        // The primary still holds the replication link; detach it so
+        // its serve thread's peer (the replica serve thread) can exit.
+        primary.set_replicas(Vec::new());
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn chain_of_three_relays_forwards_to_the_tail() {
+        let mut handles = Vec::new();
+        let mk = || {
+            PsShared::new(
+                store_with(&[(0, vec![0.0])], Optimizer::Sgd { lr: 1.0 }),
+                UpdateMode::Async,
+            )
+        };
+        let (head, mid, tail) = (mk(), mk(), mk());
+        mid.set_role_replica();
+        tail.set_role_replica();
+        mid.set_replicas(vec![conn_to(&tail, &mut handles)]);
+        head.set_replicas(vec![conn_to(&mid, &mut handles)]);
+
+        let mut c = conn_to(&head, &mut handles);
+        c.send(&Message::Push {
+            worker: 0,
+            step: 0,
+            seq: 0,
+            entries: vec![(0, Tensor::from_vec(&[1], vec![5.0]))],
+        })
+        .unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+        wait_until("tail apply", || tail.store.clock() == 1);
+        for sh in [&head, &mid, &tail] {
+            assert_eq!(sh.store.get_clone(0).unwrap().data(), &[-5.0]);
+        }
+        drop(c);
+        head.set_replicas(Vec::new());
+        mid.set_replicas(Vec::new());
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn replica_rejects_worker_ops_until_promoted_over_wire() {
+        let mut handles = Vec::new();
+        let shared = PsShared::new(
+            store_with(&[(0, vec![0.0])], Optimizer::Sgd { lr: 1.0 }),
+            UpdateMode::Async,
+        );
+        shared.set_role_replica();
+        let mut c = conn_to(&shared, &mut handles);
+        c.send(&Message::Pull { worker: 0, keys: vec![0] }).unwrap();
+        match c.recv().unwrap() {
+            Message::Error { what } => assert!(what.contains(NOT_PRIMARY), "{what}"),
+            m => panic!("{m:?}"),
+        }
+        c.send(&Message::Push {
+            worker: 0,
+            step: 0,
+            seq: 0,
+            entries: vec![(0, Tensor::from_vec(&[1], vec![1.0]))],
+        })
+        .unwrap();
+        match c.recv().unwrap() {
+            Message::Error { what } => assert!(what.contains(NOT_PRIMARY), "{what}"),
+            m => panic!("{m:?}"),
+        }
+        // The rejected push consumed no idempotency ticket.
+        assert_eq!(shared.counters.updates.load(Ordering::Relaxed), 0);
+
+        // Heartbeat shows the role; wire promotion flips it.
+        c.send(&Message::Ping).unwrap();
+        assert_eq!(
+            c.recv().unwrap(),
+            Message::Pong { epoch: 0, is_primary: false }
+        );
+        c.send(&Message::Promote { epoch: 2 }).unwrap();
+        assert_eq!(c.recv().unwrap(), Message::PromoteAck { epoch: 2, clock: 0 });
+        c.send(&Message::Ping).unwrap();
+        assert_eq!(
+            c.recv().unwrap(),
+            Message::Pong { epoch: 2, is_primary: true }
+        );
+        // And the SAME seq the replica rejected earlier now applies —
+        // the rejection really did leave the ticket free.
+        c.send(&Message::Push {
+            worker: 0,
+            step: 0,
+            seq: 0,
+            entries: vec![(0, Tensor::from_vec(&[1], vec![1.0]))],
+        })
+        .unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+        assert_eq!(shared.store.get_clone(0).unwrap().data(), &[-1.0]);
+        drop(c);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn sync_release_mirrors_aggregated_means_on_replica() {
+        let mut handles = Vec::new();
+        let mode = UpdateMode::Sync { expected_workers: 2, backup_workers: 0 };
+        let primary =
+            PsShared::new(store_with(&[(0, vec![0.0])], Optimizer::Sgd { lr: 1.0 }), mode);
+        let replica =
+            PsShared::new(store_with(&[(0, vec![0.0])], Optimizer::Sgd { lr: 1.0 }), mode);
+        replica.set_role_replica();
+        primary.set_replicas(vec![conn_to(&replica, &mut handles)]);
+
+        let mut worker_joins = Vec::new();
+        for (w, grad) in [(0u32, 2.0f32), (1, 4.0)] {
+            let mut c = conn_to(&primary, &mut handles);
+            worker_joins.push(thread::spawn(move || {
+                c.send(&Message::Push {
+                    worker: w,
+                    step: 0,
+                    seq: 0,
+                    entries: vec![(0, Tensor::from_vec(&[1], vec![grad]))],
+                })
+                .unwrap();
+                assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+                c.send(&Message::Barrier { worker: w, step: 0 }).unwrap();
+                assert!(matches!(c.recv().unwrap(), Message::BarrierRelease { step: 0 }));
+            }));
+        }
+        for j in worker_joins {
+            j.join().unwrap();
+        }
+        // mean(2, 4) = 3, lr 1 → -3 on the primary…
+        assert_eq!(primary.store.get_clone(0).unwrap().data(), &[-3.0]);
+        // …and, via forwarded pushes + the ReplRelease marker, on the
+        // replica: same value, no pending sync state left behind.
+        wait_until("replica release", || replica.store.clock() == 1);
+        assert_eq!(replica.store.get_clone(0).unwrap().data(), &[-3.0]);
+        wait_until("replica eviction", || replica.pending_steps() == 0);
+        primary.set_replicas(Vec::new());
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn promote_waits_for_open_chain_feed_to_drain() {
+        // A replica whose up-chain feed is still connected must defer
+        // its PromoteAck until the feed hits EOF — otherwise a client
+        // replay could raise the seq watermark past forwarded frames
+        // still in the feed's buffer and drop acked updates.
+        let mut handles = Vec::new();
+        let shared = PsShared::new(
+            store_with(&[(0, vec![0.0])], Optimizer::Sgd { lr: 1.0 }),
+            UpdateMode::Async,
+        );
+        shared.set_role_replica();
+        let mut feed = conn_to(&shared, &mut handles);
+        let push = Message::Push {
+            worker: 0,
+            step: 0,
+            seq: 0,
+            entries: vec![(0, Tensor::from_vec(&[1], vec![3.0]))],
+        };
+        feed.send(&Message::ReplForward { inner: push.encode() }).unwrap();
+        // The feed registers once its first forward is processed.
+        wait_until("feed registration", || shared.store.clock() == 1);
+
+        let mut c = conn_to(&shared, &mut handles);
+        let hold = std::time::Duration::from_millis(60);
+        let t0 = std::time::Instant::now();
+        let promoter = thread::spawn(move || {
+            c.send(&Message::Promote { epoch: 1 }).unwrap();
+            let ack = c.recv().unwrap();
+            (ack, c)
+        });
+        // Keep the feed open for a while, then EOF it: only then may
+        // the promotion complete.
+        thread::sleep(hold);
+        drop(feed);
+        let (ack, mut c) = promoter.join().unwrap();
+        assert_eq!(ack, Message::PromoteAck { epoch: 1, clock: 1 });
+        assert!(
+            t0.elapsed() >= hold,
+            "promotion did not wait for the open feed: {:?}",
+            t0.elapsed()
+        );
+        assert!(shared.is_primary());
+        // The forwarded frame was applied pre-takeover, and its seq is
+        // on the watermark: the client's replay of it is deduplicated.
+        c.send(&push).unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+        assert_eq!(shared.store.get_clone(0).unwrap().data(), &[-3.0]);
+        assert_eq!(shared.counters.updates.load(Ordering::Relaxed), 1);
+        drop(c);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn halt_severs_connections_without_replies() {
+        // The chaos kill switch: a halted server must not admit or ack
+        // anything more — the next frame drops the connection.
+        let shared = PsShared::new(
+            store_with(&[(0, vec![0.0])], Optimizer::Sgd { lr: 1.0 }),
+            UpdateMode::Async,
+        );
+        let mut handles = Vec::new();
+        let mut c = conn_to(&shared, &mut handles);
+        c.send(&Message::Pull { worker: 0, keys: vec![0] }).unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::PullReply { .. }));
+        shared.halt();
+        c.send(&Message::Push {
+            worker: 0,
+            step: 0,
+            seq: 0,
+            entries: vec![(0, Tensor::from_vec(&[1], vec![1.0]))],
+        })
+        .unwrap();
+        assert!(c.recv().is_err(), "halted server must not reply");
+        assert_eq!(shared.counters.updates.load(Ordering::Relaxed), 0);
+        drop(c);
+        for h in handles {
             h.join().unwrap();
         }
     }

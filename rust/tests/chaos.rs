@@ -14,16 +14,17 @@
 //! watchdog thread; a hang fails the test before the CI job timeout.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use dtlsda::coordinator::checkpoint::Checkpoint;
 use dtlsda::coordinator::distributed::{conn_id, detect_stragglers, run_workers_with_restart};
 use dtlsda::net::fault::{FaultEvent, FaultLog, FaultPlan};
+use dtlsda::net::message::Message;
 use dtlsda::net::transport::{InProcTransport, Transport};
 use dtlsda::ps::client::PsClient;
-use dtlsda::ps::router::Router;
+use dtlsda::ps::router::{ReplicatedTopology, Router};
 use dtlsda::ps::server::{serve, PsShared, UpdateMode};
 use dtlsda::ps::shard::{Optimizer, ShardStore};
 use dtlsda::ps::CodecKind;
@@ -598,6 +599,295 @@ fn chaos_runs_are_bit_reproducible() {
         assert!(!a.fault_log.is_empty(), "plan injected nothing");
         assert_eq!(a.fault_log, b.fault_log, "fault schedule must replay identically");
         assert_bitwise_eq(&a.finals, &b.finals, "run A vs run B");
+    });
+}
+
+// ------------------------------------------- replicated shards (R = 2)
+
+/// In-proc chain-replicated PS cluster: shard `s` is physical `2s`
+/// (primary) + `2s+1` (replica), mirroring `run_distributed`'s layout.
+/// The shared [`ReplicatedTopology`] re-points a shard on failover and
+/// worker reconnect handlers re-resolve the current head through it —
+/// the same routing contract the coordinator's `ServerSupervisor`
+/// drives over TCP.
+struct ReplicatedCluster {
+    /// Physical id -> server state (even = chain head at startup).
+    shareds: Vec<Arc<PsShared>>,
+    topology: Arc<RwLock<ReplicatedTopology>>,
+    router: Router,
+    targets: Vec<Tensor>,
+    serve_handles: Mutex<Vec<thread::JoinHandle<()>>>,
+    /// Per shard: the replica-side serve thread draining the primary's
+    /// chain link. Joined during failover — that is the drain-then-
+    /// promote order which guarantees the replica consumed every
+    /// already-forwarded frame before it starts serving workers.
+    chain_handles: Mutex<Vec<Option<thread::JoinHandle<()>>>>,
+}
+
+impl ReplicatedCluster {
+    fn new(
+        seed: u64,
+        n_shards: usize,
+        n_workers: usize,
+        sync: bool,
+        lr: f32,
+        barrier_timeout_ms: u64,
+    ) -> Arc<Self> {
+        let shapes: Vec<Vec<usize>> = vec![vec![48], vec![6, 6], vec![96]];
+        let sizes: Vec<usize> =
+            shapes.iter().map(|s| s.iter().product::<usize>() * 4).collect();
+        let router = Router::new(&sizes, n_shards);
+        let mut rng = Rng::new(seed ^ 0x7A66_0002);
+        let targets: Vec<Tensor> = shapes
+            .iter()
+            .map(|s| {
+                let n: usize = s.iter().product();
+                Tensor::from_vec(s, (0..n).map(|_| rng.normal() as f32).collect())
+            })
+            .collect();
+        let mode = if sync {
+            UpdateMode::Sync { expected_workers: n_workers, backup_workers: 0 }
+        } else {
+            UpdateMode::Async
+        };
+        let mut shareds = Vec::new();
+        for s in 0..n_shards {
+            for copy in 0..2 {
+                let mut store = ShardStore::new(Optimizer::Sgd { lr });
+                for &k in router.keys_of(s) {
+                    store.insert(k, Tensor::zeros(&shapes[k as usize]));
+                }
+                let sh = PsShared::new(store, mode);
+                sh.set_barrier_timeout(Duration::from_millis(barrier_timeout_ms));
+                if copy == 1 {
+                    sh.set_role_replica();
+                }
+                shareds.push(sh);
+            }
+        }
+        let cluster = Arc::new(ReplicatedCluster {
+            shareds,
+            topology: Arc::new(RwLock::new(ReplicatedTopology::new(n_shards, 2))),
+            router,
+            targets,
+            serve_handles: Mutex::new(Vec::new()),
+            chain_handles: Mutex::new((0..n_shards).map(|_| None).collect()),
+        });
+        // Wire each primary's chain link to its replica.
+        for s in 0..n_shards {
+            let (link, server_end) = InProcTransport::pair();
+            let sh = cluster.shareds[2 * s + 1].clone();
+            let h = thread::spawn(move || serve(Box::new(server_end), sh));
+            cluster.chain_handles.lock().unwrap()[s] = Some(h);
+            cluster.shareds[2 * s].set_replicas(vec![Box::new(link) as Box<dyn Transport>]);
+        }
+        cluster
+    }
+
+    /// Fresh connection to whatever physical node currently heads
+    /// `shard`'s chain.
+    fn connect_primary(&self, shard: usize) -> Box<dyn Transport> {
+        let phys = self.topology.read().unwrap().primary_of(shard);
+        let (client_end, server_end) = InProcTransport::pair();
+        let sh = self.shareds[phys].clone();
+        self.serve_handles
+            .lock()
+            .unwrap()
+            .push(thread::spawn(move || serve(Box::new(server_end), sh)));
+        Box::new(client_end)
+    }
+
+    /// Crash-and-fail-over `shard`'s primary, the way the coordinator's
+    /// lease supervisor does over TCP: halt the head (its connections
+    /// sever without replies), sever its chain link and wait for the
+    /// replica to drain every already-forwarded frame (a dead TCP
+    /// peer's socket EOF gives the same drain point), promote the
+    /// replica over the wire at the bumped epoch, and only then
+    /// re-point the topology so reconnecting clients resolve the
+    /// promoted head.
+    fn fail_over(&self, shard: usize) {
+        let old = self.topology.read().unwrap().primary_of(shard);
+        self.shareds[old].halt();
+        self.shareds[old].set_replicas(Vec::new());
+        if let Some(h) = self.chain_handles.lock().unwrap()[shard].take() {
+            h.join().unwrap();
+        }
+        let epoch = self.topology.read().unwrap().epoch() + 1;
+        let new_phys = 2 * shard + 1;
+        let (mut c, server_end) = InProcTransport::pair();
+        let sh = self.shareds[new_phys].clone();
+        let h = thread::spawn(move || serve(Box::new(server_end), sh));
+        c.send(&Message::Promote { epoch }).unwrap();
+        match c.recv().unwrap() {
+            Message::PromoteAck { epoch: e, .. } => assert_eq!(e, epoch),
+            m => panic!("unexpected promote reply {m:?}"),
+        }
+        drop(c);
+        h.join().unwrap();
+        let promoted = self.topology.write().unwrap().promote(shard).unwrap();
+        assert_eq!(promoted, new_phys);
+    }
+
+    fn join_serve_threads(&self) {
+        // Detach surviving chain links so replica-side serve threads
+        // see EOF, then join everything.
+        for sh in &self.shareds {
+            sh.set_replicas(Vec::new());
+        }
+        for slot in self.chain_handles.lock().unwrap().iter_mut() {
+            if let Some(h) = slot.take() {
+                let _ = h.join();
+            }
+        }
+        for h in self.serve_handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Client whose reconnect handler re-resolves the shard's current head
+/// through the cluster topology, waiting out the kill -> promote window
+/// (the scenario watchdog bounds a failover that never completes).
+fn make_replicated_client(
+    cluster: &Arc<ReplicatedCluster>,
+    worker: u32,
+    codec: CodecKind,
+    retry: usize,
+) -> PsClient {
+    let transports: Vec<Box<dyn Transport>> =
+        (0..cluster.router.n_servers()).map(|s| cluster.connect_primary(s)).collect();
+    let mut client = PsClient::with_codec(worker, transports, cluster.router.clone(), codec);
+    client.set_retry_limit(retry);
+    let cl = Arc::clone(cluster);
+    client.set_reconnect(Box::new(move |s| loop {
+        let phys = cl.topology.read().unwrap().primary_of(s);
+        if cl.shareds[phys].stopped() {
+            thread::sleep(Duration::from_millis(1));
+            continue;
+        }
+        return Ok(cl.connect_primary(s));
+    }));
+    client
+}
+
+/// Run a replicated cluster to completion; `kill_at = Some(k)` crashes
+/// shard 0's primary once worker 0 has committed `k` steps. Returns
+/// (final params pulled through the live topology, targets, routing
+/// epoch).
+fn run_replicated_scenario(
+    seed: u64,
+    sync: bool,
+    codec: CodecKind,
+    steps: usize,
+    kill_at: Option<usize>,
+) -> (Vec<Tensor>, Vec<Tensor>, u64) {
+    let n_workers = if sync { 2 } else { 1 };
+    let cluster = ReplicatedCluster::new(seed, 2, n_workers, sync, 0.1, 500);
+    let progress = Arc::new(AtomicUsize::new(0));
+    let mut worker_joins = Vec::new();
+    for w in 0..n_workers {
+        let cluster = Arc::clone(&cluster);
+        let progress = progress.clone();
+        worker_joins.push(thread::spawn(move || {
+            let targets = cluster.targets.clone();
+            let mut client = make_replicated_client(&cluster, w as u32, codec, 2000);
+            run_quad_worker(
+                &mut client,
+                &targets,
+                0,
+                steps,
+                sync,
+                (w == 0).then_some(&*progress),
+            )
+        }));
+    }
+    if let Some(k) = kill_at {
+        while progress.load(Ordering::SeqCst) < k {
+            thread::sleep(Duration::from_millis(1));
+        }
+        cluster.fail_over(0);
+    }
+    for (w, j) in worker_joins.into_iter().enumerate() {
+        j.join()
+            .unwrap()
+            .unwrap_or_else(|e| panic!("worker {w} failed: {e}"));
+    }
+    let finals = {
+        let mut control = make_replicated_client(&cluster, u32::MAX, CodecKind::None, 0);
+        control.pull_all().unwrap()
+    };
+    let epoch = cluster.topology.read().unwrap().epoch();
+    cluster.join_serve_threads();
+    (finals, cluster.targets.clone(), epoch)
+}
+
+/// Acceptance: killing a primary PS mid-run with `--replicas 2`
+/// converges to parameters byte-identical to a fault-free run, for
+/// every codec, in async AND sync mode. Forward-before-ack means every
+/// acked frame reached the replica; the client replays the un-acked
+/// one against the promoted head, which deduplicates it with the
+/// watermarks it built from the replication stream.
+#[test]
+fn killing_a_primary_mid_run_is_byte_identical_to_fault_free() {
+    let seed = chaos_seed();
+    with_watchdog(300, "primary-kill byte-identity", move || {
+        for codec in [
+            CodecKind::None,
+            CodecKind::TopK { fraction: 0.5 },
+            CodecKind::Quant8,
+        ] {
+            for sync in [false, true] {
+                let steps = if sync { 20 } else { 40 };
+                let (clean, _, epoch0) =
+                    run_replicated_scenario(seed, sync, codec, steps, None);
+                assert_eq!(epoch0, 0, "{codec:?} sync={sync}: clean run failed over");
+                let (killed, targets, epoch1) =
+                    run_replicated_scenario(seed, sync, codec, steps, Some(steps / 3));
+                assert_eq!(epoch1, 1, "{codec:?} sync={sync}: expected exactly one failover");
+                for (k, (a, b)) in clean.iter().zip(&killed).enumerate() {
+                    assert_eq!(
+                        a.data(),
+                        b.data(),
+                        "{codec:?} sync={sync}: key {k} diverged after failover"
+                    );
+                }
+                if codec == CodecKind::None {
+                    let d = l2_distance(&killed, &targets);
+                    assert!(d < 0.5, "{codec:?} sync={sync}: did not converge: {d}");
+                }
+            }
+        }
+    });
+}
+
+/// A second failover property: after the kill, the promoted replica is
+/// the shard's only copy — pulls and pushes keep working against it,
+/// and the untouched shard's chain keeps replicating (its replica would
+/// still be promotable). Exercises the post-failover steady state the
+/// byte-identity test finishes in.
+#[test]
+fn promoted_replica_serves_reads_and_writes_after_kill() {
+    let seed = chaos_seed();
+    with_watchdog(120, "post-failover steady state", move || {
+        let cluster = ReplicatedCluster::new(seed, 2, 1, false, 0.1, 500);
+        let mut client = make_replicated_client(&cluster, 0, CodecKind::None, 2000);
+        let targets = cluster.targets.clone();
+        run_quad_worker(&mut client, &targets, 0, 5, false, None).unwrap();
+        cluster.fail_over(0);
+        // The same client rides its reconnect handler onto the new head
+        // and keeps training.
+        run_quad_worker(&mut client, &targets, 5, 15, false, None).unwrap();
+        let finals = client.pull_all().unwrap();
+        assert!(finals.iter().all(|t| t.data().iter().all(|x| x.is_finite())));
+        // Shard 0 is now headed by its former replica at epoch 1; the
+        // untouched shard 1 still has both chain members.
+        let topo = cluster.topology.read().unwrap();
+        assert_eq!(topo.epoch(), 1);
+        assert_eq!(topo.primary_of(0), 1);
+        assert_eq!(topo.chain_of(1), &[2, 3]);
+        drop(topo);
+        drop(client);
+        cluster.join_serve_threads();
     });
 }
 
