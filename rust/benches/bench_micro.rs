@@ -47,7 +47,7 @@ fn main() {
     let entries: Vec<(u32, Tensor)> = (0..10)
         .map(|k| (k, Tensor::from_vec(&[65_536], vec![0.5f32; 65_536])))
         .collect();
-    let msg = Message::Push { worker: 0, step: 1, seq: 0, entries };
+    let msg = Message::Push { worker: 0, step: 1, seq: 0, epoch: u64::MAX, entries };
     let r = bench_for_ms("message push 2.6MB", 300.0, 10, || {
         std::hint::black_box(msg.encode());
     });
@@ -98,10 +98,10 @@ fn main() {
         // the apply path.
         let mut seq = 0u64;
         let r = bench_for_ms("ps pull+push 256KB", 400.0, 10, || {
-            c.send(&Message::Pull { worker: 0, keys: vec![0] }).unwrap();
+            c.send(&Message::Pull { worker: 0, epoch: u64::MAX, keys: vec![0] }).unwrap();
             std::hint::black_box(c.recv().unwrap());
             seq += 1;
-            c.send(&Message::Push { worker: 0, step: 0, seq, entries: vec![(0, g.clone())] })
+            c.send(&Message::Push { worker: 0, step: 0, seq, epoch: u64::MAX, entries: vec![(0, g.clone())] })
                 .unwrap();
             std::hint::black_box(c.recv().unwrap());
         });

@@ -16,7 +16,7 @@ use crate::coordinator::{distributed, local};
 use crate::ps::compress::CodecKind;
 use crate::runtime::exec::Runtime;
 use crate::sim::device::DeviceModel;
-use crate::util::args::ArgSpec;
+use crate::util::args::{ArgSpec, Parsed};
 use crate::util::bench::Table;
 
 fn net_by_name(name: &str) -> Result<netdefs::Network, String> {
@@ -185,7 +185,13 @@ fn cmd_advisor_ps(argv: &[String]) -> Result<(), String> {
         .opt("bw-gbps", Some("10"), "per-server network bandwidth, Gbit/s")
         .opt("tc", Some("2.0"), "compute seconds per round T_C")
         .opt("codec", Some("none"), "gradient codec: none|topk[:fraction]|quant8|quant8sr")
-        .opt("replicas", Some("1"), "chain copies per shard R (failover; R-1 replicas)");
+        .opt(
+            "replicas",
+            Some("1"),
+            "chain copies per shard R (failover; R-1 replicas). The fleet \
+             is elastic at runtime (train-dist --add-server/--remove-server \
+             grows/retires chain tails), so size for the steady-state R",
+        );
     let p = spec.parse(argv)?;
     let s_p = p.f64("params-mb") * 1e6;
     let n_w = p.usize("workers");
@@ -275,6 +281,13 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+fn parse_opt_u64(p: &Parsed, key: &str) -> Result<Option<u64>, String> {
+    match p.get(key) {
+        Some(v) => v.parse::<u64>().map(Some).map_err(|e| format!("bad {key} {v:?}: {e}")),
+        None => Ok(None),
+    }
+}
+
 fn cmd_train_dist(argv: &[String]) -> Result<(), String> {
     let spec = ArgSpec::new("dtlsda train-dist", "distributed training (loopback cluster)")
         .opt("artifacts", Some("artifacts"), "artifacts directory")
@@ -302,6 +315,24 @@ fn cmd_train_dist(argv: &[String]) -> Result<(), String> {
         .opt("barrier-timeout-ms", None, "sync-barrier wait before retryable error")
         .opt("replicas", Some("1"), "chain copies per PS shard (R>=2 enables failover)")
         .opt("ps-heartbeat-ms", Some("100"), "server-supervisor heartbeat cadence")
+        .opt(
+            "add-server",
+            None,
+            "grow the thinnest shard chain by one catch-up replica once \
+             any worker reaches this step (elastic scale-out)",
+        )
+        .opt(
+            "remove-server",
+            None,
+            "retire the tail of the longest shard chain once any worker \
+             reaches this step (elastic scale-in)",
+        )
+        .opt(
+            "ps-deadline-ms",
+            None,
+            "worker-side reply deadline; default: bounded when replicated \
+             (sync: barrier timeout + 5s, async: 10s), else unbounded",
+        )
         .flag("sync", "synchronous SGD (default async)");
     let p = spec.parse(argv)?;
     let fault_plan = match p.get("fault-plan") {
@@ -337,16 +368,13 @@ fn cmd_train_dist(argv: &[String]) -> Result<(), String> {
         retry,
         max_worker_restarts: p.usize("restarts"),
         checkpoint_dir: p.get("checkpoint-dir").map(PathBuf::from),
-        barrier_timeout_ms: match p.get("barrier-timeout-ms") {
-            Some(v) => Some(
-                v.parse::<u64>()
-                    .map_err(|e| format!("bad barrier-timeout-ms {v:?}: {e}"))?,
-            ),
-            None => None,
-        },
+        barrier_timeout_ms: parse_opt_u64(&p, "barrier-timeout-ms")?,
         straggler_factor: 2.0,
         replicas,
         ps_heartbeat_ms: p.u64("ps-heartbeat-ms"),
+        add_server_at: parse_opt_u64(&p, "add-server")?,
+        remove_server_at: parse_opt_u64(&p, "remove-server")?,
+        read_deadline_ms: parse_opt_u64(&p, "ps-deadline-ms")?,
     };
     let report = distributed::run_distributed(&PathBuf::from(p.str("artifacts")), &cfg)?;
     println!(

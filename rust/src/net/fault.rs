@@ -353,6 +353,12 @@ impl Transport for FaultyTransport {
     ) -> Result<(), String> {
         self.faulty_recv(decode)
     }
+
+    fn set_read_deadline(&mut self, deadline: Option<Duration>) -> Result<(), String> {
+        // Deadlines pass through untouched: injected faults model the
+        // network, not the local socket configuration.
+        self.inner.set_read_deadline(deadline)
+    }
 }
 
 #[cfg(test)]

@@ -9,12 +9,25 @@ use super::codec::{Reader, Writer};
 use crate::ps::compress::Compressed;
 use crate::tensor::Tensor;
 
+/// Epoch stamp meaning "this client does not participate in epoch
+/// fencing" (control-plane inspection clients). Servers accept it at any
+/// epoch; fenced training clients stamp their routing epoch instead and
+/// are rejected on any mismatch.
+pub const EPOCH_UNFENCED: u64 = u64::MAX;
+
 /// Protocol messages. `key` identifies a parameter tensor (its index in
 /// the artifact manifest); routing to servers is the `ps::router`'s job.
+///
+/// Worker-originated ops (`Pull`/`Push`/`CompressedPush`/`Barrier`)
+/// carry the client's routing `epoch`: a server applies the op only when
+/// the stamp matches its own epoch (or is [`EPOCH_UNFENCED`]). A stamp
+/// *below* the server's epoch is a stale client; a stamp *above* it is a
+/// deposed server that missed its promotion fence — both are rejected
+/// with a `stale epoch` error the client treats as a stale route.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Message {
     /// Worker -> server: request current values of `keys`.
-    Pull { worker: u32, keys: Vec<u32> },
+    Pull { worker: u32, epoch: u64, keys: Vec<u32> },
     /// Server -> worker: requested values with the server's clock.
     PullReply { clock: u64, entries: Vec<(u32, Tensor)> },
     /// Worker -> server: gradients for `entries` (step `step` at worker).
@@ -23,18 +36,24 @@ pub enum Message {
     /// deduplicate them idempotently. The serve loop decodes these
     /// frames with the streaming [`wire::PushBody`], never through this
     /// owned variant.
-    Push { worker: u32, step: u64, seq: u64, entries: Vec<(u32, Tensor)> },
+    Push { worker: u32, step: u64, seq: u64, epoch: u64, entries: Vec<(u32, Tensor)> },
     /// Worker -> server: codec-compressed gradients (§1.1.1's traffic
     /// saver). Each entry is self-describing (sparse or quant8), so no
     /// codec negotiation happens — servers accept any mix per push. The
     /// serve loop decodes these frames with the streaming
     /// [`wire::CompressedPushBody`], never through this owned variant.
     /// `seq` as in [`Push`](Self::Push).
-    CompressedPush { worker: u32, step: u64, seq: u64, entries: Vec<(u32, Compressed)> },
+    CompressedPush {
+        worker: u32,
+        step: u64,
+        seq: u64,
+        epoch: u64,
+        entries: Vec<(u32, Compressed)>,
+    },
     /// Server -> worker: push accepted (async mode acks immediately).
     PushAck { clock: u64 },
     /// Worker -> server: enter sync barrier for `step`.
-    Barrier { worker: u32, step: u64 },
+    Barrier { worker: u32, step: u64, epoch: u64 },
     /// Server -> worker: barrier released, proceed to `step`.
     BarrierRelease { step: u64 },
     /// Control: ask the server for counters.
@@ -67,6 +86,36 @@ pub enum Message {
     /// Server -> coordinator: heartbeat reply with the server's current
     /// routing epoch and role.
     Pong { epoch: u64, is_primary: bool },
+    /// Newcomer -> chain tail: begin the join catch-up. The tail answers
+    /// with a [`SnapshotChunk`](Self::SnapshotChunk) stream followed by
+    /// [`CatchUpDone`](Self::CatchUpDone), all taken under its
+    /// replication cut lock so no concurrent apply can fall between the
+    /// snapshot and the chain stream.
+    SnapshotRequest,
+    /// Tail -> newcomer: one stripe's worth of store state. `velocity`
+    /// is present for keys with accumulated momentum — copying it is
+    /// what makes the joined store *byte*-identical, not just
+    /// parameter-equal.
+    SnapshotChunk { entries: Vec<(u32, Tensor, Option<Tensor>)> },
+    /// Tail -> newcomer: snapshot complete. Carries everything beyond
+    /// the stripes a chain member needs to dedupe and fold exactly like
+    /// its peers: store `clock`, routing `epoch`, per-worker async seq
+    /// watermarks, the sync released floor, per-step contributed worker
+    /// sets, and in-flight sync aggregation sums (`step, key, sum,
+    /// count`).
+    CatchUpDone {
+        clock: u64,
+        epoch: u64,
+        applied_seq: Vec<(u32, u64)>,
+        released_floor: u64,
+        contributed: Vec<(u64, Vec<u32>)>,
+        agg: Vec<(u64, u32, Tensor, u32)>,
+    },
+    /// Newcomer -> tail: snapshot installed at `epoch`; attach me as
+    /// your downstream chain link (the tail converts this very
+    /// connection into the link — frames forwarded after the cut arrive
+    /// in order behind the snapshot).
+    Join { epoch: u64 },
 }
 
 const T_PULL: u8 = 1;
@@ -86,6 +135,10 @@ const T_PROMOTE: u8 = 14;
 const T_PROMOTE_ACK: u8 = 15;
 const T_PING: u8 = 16;
 const T_PONG: u8 = 17;
+const T_SNAPSHOT_REQUEST: u8 = 18;
+const T_SNAPSHOT_CHUNK: u8 = 19;
+const T_CATCH_UP_DONE: u8 = 20;
+const T_JOIN: u8 = 21;
 
 /// Per-entry codec tags inside a `CompressedPush` body.
 const C_SPARSE: u8 = 1;
@@ -103,13 +156,8 @@ impl Message {
     /// `Writer` instead of allocating a fresh `Vec` per message.
     pub fn encode_into(&self, w: &mut Writer) {
         match self {
-            Message::Pull { worker, keys } => {
-                w.u8(T_PULL);
-                w.u32(*worker);
-                w.u32(keys.len() as u32);
-                for k in keys {
-                    w.u32(*k);
-                }
+            Message::Pull { worker, epoch, keys } => {
+                wire::pull(w, *worker, *epoch, keys);
             }
             Message::PullReply { clock, entries } => {
                 w.u8(T_PULL_REPLY);
@@ -120,15 +168,22 @@ impl Message {
                     w.tensor(t);
                 }
             }
-            Message::Push { worker, step, seq, entries } => {
-                wire::push_header(w, *worker, *step, *seq, entries.len() as u32);
+            Message::Push { worker, step, seq, epoch, entries } => {
+                wire::push_header(w, *worker, *step, *seq, *epoch, entries.len() as u32);
                 for (k, t) in entries {
                     w.u32(*k);
                     w.tensor(t);
                 }
             }
-            Message::CompressedPush { worker, step, seq, entries } => {
-                wire::compressed_push_header(w, *worker, *step, *seq, entries.len() as u32);
+            Message::CompressedPush { worker, step, seq, epoch, entries } => {
+                wire::compressed_push_header(
+                    w,
+                    *worker,
+                    *step,
+                    *seq,
+                    *epoch,
+                    entries.len() as u32,
+                );
                 for (k, c) in entries {
                     wire::compressed_entry(w, *k, c);
                 }
@@ -137,10 +192,11 @@ impl Message {
                 w.u8(T_PUSH_ACK);
                 w.u64(*clock);
             }
-            Message::Barrier { worker, step } => {
+            Message::Barrier { worker, step, epoch } => {
                 w.u8(T_BARRIER);
                 w.u32(*worker);
                 w.u64(*step);
+                w.u64(*epoch);
             }
             Message::BarrierRelease { step } => {
                 w.u8(T_BARRIER_RELEASE);
@@ -180,6 +236,57 @@ impl Message {
                 w.u64(*epoch);
                 w.u8(*is_primary as u8);
             }
+            Message::SnapshotRequest => w.u8(T_SNAPSHOT_REQUEST),
+            Message::SnapshotChunk { entries } => {
+                w.u8(T_SNAPSHOT_CHUNK);
+                w.u32(entries.len() as u32);
+                for (k, param, vel) in entries {
+                    w.u32(*k);
+                    w.tensor(param);
+                    match vel {
+                        Some(v) => {
+                            w.u8(1);
+                            w.tensor(v);
+                        }
+                        None => w.u8(0),
+                    }
+                }
+            }
+            Message::CatchUpDone {
+                clock,
+                epoch,
+                applied_seq,
+                released_floor,
+                contributed,
+                agg,
+            } => {
+                w.u8(T_CATCH_UP_DONE);
+                w.u64(*clock);
+                w.u64(*epoch);
+                w.u32(applied_seq.len() as u32);
+                for (worker, seq) in applied_seq {
+                    w.u32(*worker);
+                    w.u64(*seq);
+                }
+                w.u64(*released_floor);
+                w.u32(contributed.len() as u32);
+                for (step, workers) in contributed {
+                    w.u64(*step);
+                    w.u32(workers.len() as u32);
+                    w.u32_raw(workers);
+                }
+                w.u32(agg.len() as u32);
+                for (step, key, sum, count) in agg {
+                    w.u64(*step);
+                    w.u32(*key);
+                    w.tensor(sum);
+                    w.u32(*count);
+                }
+            }
+            Message::Join { epoch } => {
+                w.u8(T_JOIN);
+                w.u64(*epoch);
+            }
         }
     }
 
@@ -189,12 +296,13 @@ impl Message {
         let msg = match tag {
             T_PULL => {
                 let worker = r.u32()?;
+                let epoch = r.u64()?;
                 let n = r.u32()? as usize;
-                let mut keys = Vec::with_capacity(n);
+                let mut keys = Vec::with_capacity(n.min(1 << 16));
                 for _ in 0..n {
                     keys.push(r.u32()?);
                 }
-                Message::Pull { worker, keys }
+                Message::Pull { worker, epoch, keys }
             }
             T_PULL_REPLY => {
                 let clock = r.u64()?;
@@ -210,28 +318,34 @@ impl Message {
                 let worker = r.u32()?;
                 let step = r.u64()?;
                 let seq = r.u64()?;
+                let epoch = r.u64()?;
                 let n = r.u32()? as usize;
-                let mut entries = Vec::with_capacity(n);
+                let mut entries = Vec::with_capacity(n.min(1 << 16));
                 for _ in 0..n {
                     let k = r.u32()?;
                     entries.push((k, r.tensor()?));
                 }
-                Message::Push { worker, step, seq, entries }
+                Message::Push { worker, step, seq, epoch, entries }
             }
             T_COMPRESSED_PUSH => {
                 let worker = r.u32()?;
                 let step = r.u64()?;
                 let seq = r.u64()?;
+                let epoch = r.u64()?;
                 let n = r.u32()? as usize;
                 let mut entries = Vec::with_capacity(n.min(1 << 16));
                 for _ in 0..n {
                     let key = r.u32()?;
                     entries.push((key, wire::decode_compressed(&mut r)?.to_compressed()));
                 }
-                Message::CompressedPush { worker, step, seq, entries }
+                Message::CompressedPush { worker, step, seq, epoch, entries }
             }
             T_PUSH_ACK => Message::PushAck { clock: r.u64()? },
-            T_BARRIER => Message::Barrier { worker: r.u32()?, step: r.u64()? },
+            T_BARRIER => Message::Barrier {
+                worker: r.u32()?,
+                step: r.u64()?,
+                epoch: r.u64()?,
+            },
             T_BARRIER_RELEASE => Message::BarrierRelease { step: r.u64()? },
             T_STATS => Message::Stats,
             T_STATS_REPLY => Message::StatsReply {
@@ -247,6 +361,57 @@ impl Message {
             T_PROMOTE_ACK => Message::PromoteAck { epoch: r.u64()?, clock: r.u64()? },
             T_PING => Message::Ping,
             T_PONG => Message::Pong { epoch: r.u64()?, is_primary: r.u8()? != 0 },
+            T_SNAPSHOT_REQUEST => Message::SnapshotRequest,
+            T_SNAPSHOT_CHUNK => {
+                let n = r.u32()? as usize;
+                let mut entries = Vec::with_capacity(n.min(1 << 16));
+                for _ in 0..n {
+                    let k = r.u32()?;
+                    let param = r.tensor()?;
+                    let vel = if r.u8()? != 0 { Some(r.tensor()?) } else { None };
+                    entries.push((k, param, vel));
+                }
+                Message::SnapshotChunk { entries }
+            }
+            T_CATCH_UP_DONE => {
+                let clock = r.u64()?;
+                let epoch = r.u64()?;
+                let n = r.u32()? as usize;
+                let mut applied_seq = Vec::with_capacity(n.min(1 << 16));
+                for _ in 0..n {
+                    let worker = r.u32()?;
+                    applied_seq.push((worker, r.u64()?));
+                }
+                let released_floor = r.u64()?;
+                let n = r.u32()? as usize;
+                let mut contributed = Vec::with_capacity(n.min(1 << 16));
+                for _ in 0..n {
+                    let step = r.u64()?;
+                    let m = r.u32()? as usize;
+                    let mut workers = Vec::with_capacity(m.min(1 << 16));
+                    for _ in 0..m {
+                        workers.push(r.u32()?);
+                    }
+                    contributed.push((step, workers));
+                }
+                let n = r.u32()? as usize;
+                let mut agg = Vec::with_capacity(n.min(1 << 16));
+                for _ in 0..n {
+                    let step = r.u64()?;
+                    let key = r.u32()?;
+                    let sum = r.tensor()?;
+                    agg.push((step, key, sum, r.u32()?));
+                }
+                Message::CatchUpDone {
+                    clock,
+                    epoch,
+                    applied_seq,
+                    released_floor,
+                    contributed,
+                    agg,
+                }
+            }
+            T_JOIN => Message::Join { epoch: r.u64()? },
             other => return Err(format!("unknown message tag {other}")),
         };
         if r.remaining() != 0 {
@@ -268,10 +433,12 @@ pub mod wire {
     use super::*;
     use crate::ps::compress::{CompressedRef, DenseRef};
 
-    /// `Pull { worker, keys }` in one pass from a borrowed key slice.
-    pub fn pull(w: &mut Writer, worker: u32, keys: &[u32]) {
+    /// `Pull { worker, epoch, keys }` in one pass from a borrowed key
+    /// slice.
+    pub fn pull(w: &mut Writer, worker: u32, epoch: u64, keys: &[u32]) {
         w.u8(T_PULL);
         w.u32(worker);
+        w.u64(epoch);
         w.u32(keys.len() as u32);
         for &k in keys {
             w.u32(k);
@@ -286,13 +453,14 @@ pub mod wire {
         w.u32(n);
     }
 
-    /// Header of `Push { worker, step, seq, entries }`; follow with
-    /// exactly `n` [`entry`] calls.
-    pub fn push_header(w: &mut Writer, worker: u32, step: u64, seq: u64, n: u32) {
+    /// Header of `Push { worker, step, seq, epoch, entries }`; follow
+    /// with exactly `n` [`entry`] calls.
+    pub fn push_header(w: &mut Writer, worker: u32, step: u64, seq: u64, epoch: u64, n: u32) {
         w.u8(T_PUSH);
         w.u32(worker);
         w.u64(step);
         w.u64(seq);
+        w.u64(epoch);
         w.u32(n);
     }
 
@@ -303,13 +471,21 @@ pub mod wire {
         w.tensor(t);
     }
 
-    /// Header of `CompressedPush { worker, step, seq, entries }`; follow
-    /// with exactly `n` [`compressed_entry`] calls.
-    pub fn compressed_push_header(w: &mut Writer, worker: u32, step: u64, seq: u64, n: u32) {
+    /// Header of `CompressedPush { worker, step, seq, epoch, entries }`;
+    /// follow with exactly `n` [`compressed_entry`] calls.
+    pub fn compressed_push_header(
+        w: &mut Writer,
+        worker: u32,
+        step: u64,
+        seq: u64,
+        epoch: u64,
+        n: u32,
+    ) {
         w.u8(T_COMPRESSED_PUSH);
         w.u32(worker);
         w.u64(step);
         w.u64(seq);
+        w.u64(epoch);
         w.u32(n);
     }
 
@@ -381,6 +557,26 @@ pub mod wire {
         &frame[1..]
     }
 
+    /// One `SnapshotChunk` frame encoded straight from borrowed store
+    /// entries (the join catch-up's per-stripe stream — no tensor is
+    /// cloned to send it). Wire layout matches the owned
+    /// [`Message::SnapshotChunk`] decode exactly.
+    pub fn snapshot_chunk(w: &mut Writer, entries: &[(u32, &Tensor, Option<&Tensor>)]) {
+        w.u8(T_SNAPSHOT_CHUNK);
+        w.u32(entries.len() as u32);
+        for &(k, param, vel) in entries {
+            w.u32(k);
+            w.tensor(param);
+            match vel {
+                Some(v) => {
+                    w.u8(1);
+                    w.tensor(v);
+                }
+                None => w.u8(0),
+            }
+        }
+    }
+
     /// Streaming dense-`Push` decoder: yields `(key, DenseRef)` entries
     /// whose f32 payloads stay borrowed wire bytes — the dense twin of
     /// [`CompressedPushBody`], so the server applies pushed gradients
@@ -389,6 +585,7 @@ pub mod wire {
         pub worker: u32,
         pub step: u64,
         pub seq: u64,
+        pub epoch: u64,
         remaining: usize,
         r: Reader<'a>,
     }
@@ -403,8 +600,9 @@ pub mod wire {
             let worker = r.u32()?;
             let step = r.u64()?;
             let seq = r.u64()?;
+            let epoch = r.u64()?;
             let remaining = r.u32()? as usize;
-            Ok(PushBody { worker, step, seq, remaining, r })
+            Ok(PushBody { worker, step, seq, epoch, remaining, r })
         }
 
         /// Entries not yet yielded.
@@ -461,6 +659,7 @@ pub mod wire {
         pub worker: u32,
         pub step: u64,
         pub seq: u64,
+        pub epoch: u64,
         remaining: usize,
         r: Reader<'a>,
     }
@@ -475,8 +674,9 @@ pub mod wire {
             let worker = r.u32()?;
             let step = r.u64()?;
             let seq = r.u64()?;
+            let epoch = r.u64()?;
             let remaining = r.u32()? as usize;
-            Ok(CompressedPushBody { worker, step, seq, remaining, r })
+            Ok(CompressedPushBody { worker, step, seq, epoch, remaining, r })
         }
 
         /// Entries not yet yielded.
@@ -549,7 +749,8 @@ mod tests {
 
     #[test]
     fn all_variants_roundtrip() {
-        roundtrip(Message::Pull { worker: 3, keys: vec![0, 5, 9] });
+        roundtrip(Message::Pull { worker: 3, epoch: 2, keys: vec![0, 5, 9] });
+        roundtrip(Message::Pull { worker: 3, epoch: EPOCH_UNFENCED, keys: vec![] });
         roundtrip(Message::PullReply {
             clock: 42,
             entries: vec![(1, Tensor::from_vec(&[2], vec![1.0, 2.0]))],
@@ -558,10 +759,11 @@ mod tests {
             worker: 1,
             step: 7,
             seq: 42,
+            epoch: 1,
             entries: vec![(0, Tensor::scalar(1.5)), (2, Tensor::zeros(&[3, 3]))],
         });
         roundtrip(Message::PushAck { clock: 9 });
-        roundtrip(Message::Barrier { worker: 2, step: 11 });
+        roundtrip(Message::Barrier { worker: 2, step: 11, epoch: 4 });
         roundtrip(Message::BarrierRelease { step: 11 });
         roundtrip(Message::Stats);
         roundtrip(Message::StatsReply { pulls: 1, pushes: 2, updates: 3 });
@@ -576,6 +778,54 @@ mod tests {
     }
 
     #[test]
+    fn streamed_snapshot_chunk_matches_owned_encoding() {
+        let p0 = Tensor::from_vec(&[2], vec![1.0, -2.0]);
+        let p1 = Tensor::zeros(&[2, 2]);
+        let v1 = Tensor::from_vec(&[2, 2], vec![0.5, 0.0, -0.5, 1.0]);
+        let owned = Message::SnapshotChunk {
+            entries: vec![(0, p0.clone(), None), (7, p1.clone(), Some(v1.clone()))],
+        };
+        let mut w = Writer::new();
+        wire::snapshot_chunk(&mut w, &[(0, &p0, None), (7, &p1, Some(&v1))]);
+        let buf = w.finish();
+        assert_eq!(buf, owned.encode());
+        assert_eq!(Message::decode(&buf).unwrap(), owned);
+    }
+
+    #[test]
+    fn catch_up_variants_roundtrip() {
+        roundtrip(Message::SnapshotRequest);
+        roundtrip(Message::SnapshotChunk { entries: vec![] });
+        roundtrip(Message::SnapshotChunk {
+            entries: vec![
+                (0, Tensor::from_vec(&[2], vec![1.0, -2.0]), None),
+                (
+                    7,
+                    Tensor::zeros(&[2, 2]),
+                    Some(Tensor::from_vec(&[2, 2], vec![0.5, 0.0, -0.5, 1.0])),
+                ),
+            ],
+        });
+        roundtrip(Message::CatchUpDone {
+            clock: 99,
+            epoch: 3,
+            applied_seq: vec![(0, 41), (2, 7)],
+            released_floor: 11,
+            contributed: vec![(11, vec![0, 2]), (12, vec![1])],
+            agg: vec![(12, 4, Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]), 2)],
+        });
+        roundtrip(Message::CatchUpDone {
+            clock: 0,
+            epoch: 0,
+            applied_seq: vec![],
+            released_floor: 0,
+            contributed: vec![],
+            agg: vec![],
+        });
+        roundtrip(Message::Join { epoch: 5 });
+    }
+
+    #[test]
     fn repl_forward_wraps_frame_verbatim() {
         // The forward's inner bytes are the admitted frame, byte for
         // byte — the replica's streaming handlers decode them directly.
@@ -583,6 +833,7 @@ mod tests {
             worker: 2,
             step: 4,
             seq: 7,
+            epoch: 0,
             entries: vec![(0, Tensor::from_vec(&[2], vec![1.0, -2.0]))],
         };
         let inner = push.encode();
@@ -617,19 +868,20 @@ mod tests {
         let t0 = Tensor::from_vec(&[3], vec![1.0, -2.0, 3.5]);
         let t1 = Tensor::zeros(&[2, 2]);
 
-        let msg = Message::Pull { worker: 7, keys: vec![3, 5, 8] };
+        let msg = Message::Pull { worker: 7, epoch: 3, keys: vec![3, 5, 8] };
         let mut w = Writer::new();
-        wire::pull(&mut w, 7, &[3, 5, 8]);
+        wire::pull(&mut w, 7, 3, &[3, 5, 8]);
         assert_eq!(w.finish(), msg.encode());
 
         let msg = Message::Push {
             worker: 2,
             step: 9,
             seq: 5,
+            epoch: 1,
             entries: vec![(4, t0.clone()), (6, t1.clone())],
         };
         let mut w = Writer::new();
-        wire::push_header(&mut w, 2, 9, 5, 2);
+        wire::push_header(&mut w, 2, 9, 5, 1, 2);
         wire::entry(&mut w, 4, &t0);
         wire::entry(&mut w, 6, &t1);
         assert_eq!(w.finish(), msg.encode());
@@ -658,9 +910,16 @@ mod tests {
             worker: 4,
             step: 9,
             seq: 3,
+            epoch: 2,
             entries: vec![(0, c1), (3, c2)],
         });
-        roundtrip(Message::CompressedPush { worker: 0, step: 0, seq: 0, entries: vec![] });
+        roundtrip(Message::CompressedPush {
+            worker: 0,
+            step: 0,
+            seq: 0,
+            epoch: 0,
+            entries: vec![],
+        });
     }
 
     #[test]
@@ -670,10 +929,11 @@ mod tests {
             worker: 2,
             step: 11,
             seq: 6,
+            epoch: 4,
             entries: vec![(5, c1.clone()), (7, c2.clone())],
         };
         let mut w = Writer::new();
-        wire::compressed_push_header(&mut w, 2, 11, 6, 2);
+        wire::compressed_push_header(&mut w, 2, 11, 6, 4, 2);
         wire::compressed_entry(&mut w, 5, &c1);
         wire::compressed_entry(&mut w, 7, &c2);
         let buf = w.finish();
@@ -683,9 +943,9 @@ mod tests {
 
     #[test]
     fn compressed_entry_bytes_match_wire_accounting() {
-        // Frame body = 25-byte header (tag, worker, step, seq, n) + per
-        // entry (5 + wire_bytes): the advisor's S_p accounting IS the
-        // byte count on the wire.
+        // Frame body = 33-byte header (tag, worker, step, seq, epoch, n)
+        // + per entry (5 + wire_bytes): the advisor's S_p accounting IS
+        // the byte count on the wire.
         let (c1, c2) = sample_compressed();
         for c in [&c1, &c2] {
             let mut w = Writer::new();
@@ -696,11 +956,12 @@ mod tests {
             worker: 1,
             step: 2,
             seq: 0,
+            epoch: 0,
             entries: vec![(0, c1.clone()), (1, c2.clone())],
         };
         assert_eq!(
             msg.encode().len(),
-            25 + (5 + c1.wire_bytes()) + (5 + c2.wire_bytes())
+            33 + (5 + c1.wire_bytes()) + (5 + c2.wire_bytes())
         );
     }
 
@@ -714,6 +975,7 @@ mod tests {
             worker: 7,
             step: 13,
             seq: 21,
+            epoch: 6,
             entries: vec![(1, t0.clone()), (4, t1.clone())],
         };
         let buf = msg.encode();
@@ -722,8 +984,8 @@ mod tests {
 
         let mut body = wire::PushBody::decode(&buf).unwrap();
         assert_eq!(
-            (body.worker, body.step, body.seq, body.remaining()),
-            (7, 13, 21, 2)
+            (body.worker, body.step, body.seq, body.epoch, body.remaining()),
+            (7, 13, 21, 6, 2)
         );
         let mut got = Vec::new();
         while let Some(e) = body.next_entry() {
@@ -739,6 +1001,7 @@ mod tests {
             worker: 0,
             step: 0,
             seq: 0,
+            epoch: 0,
             entries: vec![(0, Tensor::from_vec(&[2], vec![1.0, 2.0]))],
         };
         // Trailing garbage after the last entry.
@@ -755,7 +1018,7 @@ mod tests {
         assert!(body.next_entry().unwrap().is_err());
         // Shape/numel disagreement rejected.
         let mut w = Writer::new();
-        wire::push_header(&mut w, 0, 0, 0, 1);
+        wire::push_header(&mut w, 0, 0, 0, 0, 1);
         w.u32(0); // key
         w.u32(1); // rank
         w.u32(3); // shape [3]
@@ -774,6 +1037,7 @@ mod tests {
             worker: 4,
             step: 9,
             seq: 17,
+            epoch: 2,
             entries: vec![(0, c1.clone()), (3, c2.clone())],
         };
         let buf = msg.encode();
@@ -782,8 +1046,8 @@ mod tests {
 
         let mut body = wire::CompressedPushBody::decode(&buf).unwrap();
         assert_eq!(
-            (body.worker, body.step, body.seq, body.remaining()),
-            (4, 9, 17, 2)
+            (body.worker, body.step, body.seq, body.epoch, body.remaining()),
+            (4, 9, 17, 2, 2)
         );
         let mut got = Vec::new();
         while let Some(e) = body.next_entry() {
@@ -796,7 +1060,13 @@ mod tests {
     #[test]
     fn compressed_push_stream_decode_rejects_malformed() {
         let (c1, _) = sample_compressed();
-        let msg = Message::CompressedPush { worker: 0, step: 0, seq: 0, entries: vec![(0, c1)] };
+        let msg = Message::CompressedPush {
+            worker: 0,
+            step: 0,
+            seq: 0,
+            epoch: 0,
+            entries: vec![(0, c1)],
+        };
         let mut buf = msg.encode();
         // Trailing garbage after the last entry.
         buf.push(0);
@@ -813,7 +1083,7 @@ mod tests {
         assert!(body.next_entry().unwrap().is_err());
         // Sparse k > numel rejected by the owned decoder too.
         let mut w = Writer::new();
-        wire::compressed_push_header(&mut w, 0, 0, 0, 1);
+        wire::compressed_push_header(&mut w, 0, 0, 0, 0, 1);
         w.u32(0); // key
         w.u8(1); // C_SPARSE
         w.u32(2); // numel
@@ -836,6 +1106,7 @@ mod tests {
                 worker: g.u64(0, 100) as u32,
                 step: g.u64(0, 1 << 40),
                 seq: g.u64(0, 1 << 40),
+                epoch: g.u64(0, 1 << 20),
                 entries,
             });
         });

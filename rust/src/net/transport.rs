@@ -37,6 +37,19 @@ pub trait Transport: Send {
         &mut self,
         decode: &mut dyn FnMut(&[u8]) -> Result<(), String>,
     ) -> Result<(), String>;
+
+    /// Bound every subsequent receive: a peer silent for longer than
+    /// `deadline` surfaces as a retryable recv error instead of
+    /// blocking forever — how a worker notices a wedged (gray-failed,
+    /// promoted-away) server. `None` restores unbounded blocking.
+    /// Default is a no-op for transports without timeout support.
+    fn set_read_deadline(
+        &mut self,
+        deadline: Option<std::time::Duration>,
+    ) -> Result<(), String> {
+        let _ = deadline;
+        Ok(())
+    }
 }
 
 /// Hard cap on frame size (guards against corrupt length prefixes).
@@ -146,6 +159,18 @@ impl Transport for TcpTransport {
         }
         out
     }
+
+    fn set_read_deadline(
+        &mut self,
+        deadline: Option<std::time::Duration>,
+    ) -> Result<(), String> {
+        // `set_read_timeout(Some(ZERO))` is an error by contract; treat
+        // a zero deadline as the smallest representable one.
+        let deadline = deadline.map(|d| d.max(std::time::Duration::from_millis(1)));
+        self.stream
+            .set_read_timeout(deadline)
+            .map_err(|e| format!("set_read_timeout: {e}"))
+    }
 }
 
 /// Connect to a server address.
@@ -181,6 +206,8 @@ pub fn listen<A: ToSocketAddrs>(addr: A) -> Result<TcpListener, String> {
 pub struct InProcTransport {
     tx: Sender<Vec<u8>>,
     rx: Receiver<Vec<u8>>,
+    /// Mirrors [`Transport::set_read_deadline`] for channel receives.
+    deadline: Option<std::time::Duration>,
 }
 
 impl InProcTransport {
@@ -188,9 +215,23 @@ impl InProcTransport {
         let (atx, arx) = channel();
         let (btx, brx) = channel();
         (
-            InProcTransport { tx: atx, rx: brx },
-            InProcTransport { tx: btx, rx: arx },
+            InProcTransport { tx: atx, rx: brx, deadline: None },
+            InProcTransport { tx: btx, rx: arx, deadline: None },
         )
+    }
+
+    fn recv_frame(&self) -> Result<Vec<u8>, String> {
+        match self.deadline {
+            None => self.rx.recv().map_err(|_| "peer disconnected".to_string()),
+            Some(d) => self.rx.recv_timeout(d).map_err(|e| match e {
+                std::sync::mpsc::RecvTimeoutError::Timeout => {
+                    format!("recv timed out after {d:?}")
+                }
+                std::sync::mpsc::RecvTimeoutError::Disconnected => {
+                    "peer disconnected".to_string()
+                }
+            }),
+        }
     }
 }
 
@@ -202,10 +243,7 @@ impl Transport for InProcTransport {
     }
 
     fn recv(&mut self) -> Result<Message, String> {
-        let frame = self
-            .rx
-            .recv()
-            .map_err(|_| "peer disconnected".to_string())?;
+        let frame = self.recv_frame()?;
         Message::decode(&frame)
     }
 
@@ -223,11 +261,16 @@ impl Transport for InProcTransport {
         &mut self,
         decode: &mut dyn FnMut(&[u8]) -> Result<(), String>,
     ) -> Result<(), String> {
-        let frame = self
-            .rx
-            .recv()
-            .map_err(|_| "peer disconnected".to_string())?;
+        let frame = self.recv_frame()?;
         decode(&frame)
+    }
+
+    fn set_read_deadline(
+        &mut self,
+        deadline: Option<std::time::Duration>,
+    ) -> Result<(), String> {
+        self.deadline = deadline;
+        Ok(())
     }
 }
 
@@ -268,6 +311,7 @@ mod tests {
             worker: 9,
             step: 3,
             seq: 1,
+            epoch: u64::MAX,
             entries: vec![(0, Tensor::from_vec(&[128], vec![0.25; 128]))],
         };
         c.send(&msg).unwrap();
@@ -283,13 +327,13 @@ mod tests {
         let (mut a, mut b) = InProcTransport::pair();
         let t = Tensor::from_vec(&[4], vec![1.0, 2.0, 3.0, 4.0]);
         a.send_with(&mut |w| {
-            wire::push_header(w, 3, 11, 4, 1);
+            wire::push_header(w, 3, 11, 4, u64::MAX, 1);
             wire::entry(w, 0, &t);
         })
         .unwrap();
         assert_eq!(
             b.recv().unwrap(),
-            Message::Push { worker: 3, step: 11, seq: 4, entries: vec![(0, t.clone())] }
+            Message::Push { worker: 3, step: 11, seq: 4, epoch: u64::MAX, entries: vec![(0, t.clone())] }
         );
 
         // TCP: same, over a real socket, twice (buffer reuse).
@@ -344,10 +388,10 @@ mod tests {
             (first, second)
         });
         let mut c = connect(addr).unwrap();
-        c.send(&Message::Barrier { worker: 1, step: 2 }).unwrap();
+        c.send(&Message::Barrier { worker: 1, step: 2, epoch: u64::MAX }).unwrap();
         c.send(&Message::Stats).unwrap();
         let (first, second) = server.join().unwrap();
-        assert_eq!(first, Message::Barrier { worker: 1, step: 2 }.encode());
+        assert_eq!(first, Message::Barrier { worker: 1, step: 2, epoch: u64::MAX }.encode());
         assert_eq!(second, Message::Stats);
 
         // A decode error propagates out of recv_with.
@@ -356,6 +400,39 @@ mod tests {
         assert!(b
             .recv_with(&mut |_| Err("decode failed".to_string()))
             .is_err());
+    }
+
+    #[test]
+    fn read_deadline_turns_silence_into_retryable_error() {
+        use std::time::Duration;
+
+        // In-proc: a silent peer surfaces as an error within the
+        // deadline; clearing the deadline restores blocking reads.
+        let (mut a, mut b) = InProcTransport::pair();
+        a.set_read_deadline(Some(Duration::from_millis(20))).unwrap();
+        assert!(a.recv().unwrap_err().contains("timed out"));
+        b.send(&Message::Stats).unwrap();
+        assert_eq!(a.recv().unwrap(), Message::Stats);
+        a.set_read_deadline(None).unwrap();
+
+        // TCP: same contract over a real socket — the server stays
+        // silent, the deadlined client errors instead of hanging, and
+        // the connection still works once traffic resumes.
+        let listener = listen("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut t = TcpTransport::new(stream).unwrap();
+            assert_eq!(t.recv().unwrap(), Message::Ping);
+            t.send(&Message::Pong { epoch: 0, is_primary: true }).unwrap();
+        });
+        let mut c = connect(addr).unwrap();
+        c.set_read_deadline(Some(Duration::from_millis(20))).unwrap();
+        assert!(c.recv().is_err(), "silent server must not block past the deadline");
+        c.send(&Message::Ping).unwrap();
+        c.set_read_deadline(Some(Duration::from_secs(10))).unwrap();
+        assert_eq!(c.recv().unwrap(), Message::Pong { epoch: 0, is_primary: true });
+        server.join().unwrap();
     }
 
     #[test]
@@ -375,7 +452,7 @@ mod tests {
         });
         let mut c = connect(addr).unwrap();
         for i in 0..100u64 {
-            c.send(&Message::Barrier { worker: 0, step: i }).unwrap();
+            c.send(&Message::Barrier { worker: 0, step: i, epoch: u64::MAX }).unwrap();
         }
         assert_eq!(c.recv().unwrap(), Message::BarrierRelease { step: 99 });
         server.join().unwrap();

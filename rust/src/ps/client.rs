@@ -33,13 +33,28 @@
 //! the staged frame is replayed under its original seq, which the
 //! promoted replica deduplicates against the watermarks it built from
 //! the replication stream.
+//!
+//! A third signal closes the gray-failure gap: every worker op is
+//! stamped with the client's routing epoch
+//! ([`set_epoch_source`](PsClient::set_epoch_source)), and a server
+//! whose epoch disagrees rejects the op with a `stale epoch` error —
+//! routed through the same reconnect-and-replay path, which re-stamps
+//! the replay with the refreshed epoch. Combined with a read deadline
+//! ([`set_read_deadline`](PsClient::set_read_deadline)), a deposed
+//! primary that is merely wedged (not dead) surfaces as a retryable
+//! timeout instead of a hang, and can never accept post-promotion
+//! writes.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
 use super::compress::{quantize8, CodecKind, Compressed, TopK};
+use super::replica::{NOT_PRIMARY, STALE_EPOCH};
 use super::router::Router;
 use crate::net::codec::Writer;
-use crate::net::message::{wire, Message};
+use crate::net::message::{wire, Message, EPOCH_UNFENCED};
 use crate::net::transport::Transport;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -66,6 +81,11 @@ pub struct PsClient {
     /// Extra attempts per op after the first (0 = fail fast).
     retry_limit: usize,
     reconnect: Option<Reconnect>,
+    /// Shared routing-epoch cell stamped onto every worker op; `None`
+    /// stamps [`EPOCH_UNFENCED`] (servers skip the fence).
+    epoch_source: Option<Arc<AtomicU64>>,
+    /// Reply-wait bound, re-applied to every reconnected transport.
+    read_deadline: Option<Duration>,
     /// Deterministic per-worker stream for stochastic rounding
     /// (`CodecKind::Quant8Sr`).
     sr_rng: Rng,
@@ -99,6 +119,8 @@ impl PsClient {
             seq: 0,
             retry_limit: 0,
             reconnect: None,
+            epoch_source: None,
+            read_deadline: None,
             sr_rng: Rng::new(0xC0DE_C5EE_D000_0000 ^ (worker_id as u64 + 1)),
         }
     }
@@ -114,6 +136,30 @@ impl PsClient {
     /// connection to server `s`.
     pub fn set_reconnect(&mut self, f: Reconnect) {
         self.reconnect = Some(f);
+    }
+
+    /// Stamp worker ops with the routing epoch read from `src` — the
+    /// shared cell the coordinator bumps on every topology change. The
+    /// stamp is read at *encode* time, so a replay after
+    /// reconnect-and-re-resolve carries the refreshed epoch rather
+    /// than the one that was just fenced. Without a source, ops carry
+    /// [`EPOCH_UNFENCED`] and servers skip the fence (single-server
+    /// and un-replicated runs).
+    pub fn set_epoch_source(&mut self, src: Arc<AtomicU64>) {
+        self.epoch_source = Some(src);
+    }
+
+    /// Bound every reply wait: applied to all current connections now
+    /// and to each future reconnect. A wedged server — e.g. a
+    /// gray-failed primary the coordinator promoted away from —
+    /// surfaces as a retryable timeout instead of a hung `recv`.
+    /// `None` restores unbounded waits.
+    pub fn set_read_deadline(&mut self, deadline: Option<Duration>) -> Result<(), String> {
+        for t in &mut self.transports {
+            t.set_read_deadline(deadline)?;
+        }
+        self.read_deadline = deadline;
+        Ok(())
     }
 
     /// Next push sequence number (for supervisors recording progress).
@@ -174,14 +220,17 @@ impl PsClient {
         // borrowed slices — no per-pull Vec of keys. Pulls are
         // idempotent reads, so fault recovery simply re-sends them.
         let worker = self.worker_id;
-        let PsClient { transports, router, reconnect, retry_limit, .. } = self;
+        let PsClient {
+            transports, router, reconnect, retry_limit, epoch_source, read_deadline, ..
+        } = self;
+        let deadline = *read_deadline;
         for (s, t) in transports.iter_mut().enumerate() {
             let keys = router.keys_of(s);
             if keys.is_empty() {
                 continue;
             }
-            send_retry(t, reconnect, *retry_limit, s, &mut |w| {
-                wire::pull(w, worker, keys)
+            send_retry(t, reconnect, *retry_limit, deadline, s, &mut |w| {
+                wire::pull(w, worker, stamp(epoch_source), keys)
             })?;
         }
         for (s, t) in transports.iter_mut().enumerate() {
@@ -189,8 +238,8 @@ impl PsClient {
             if keys.is_empty() {
                 continue;
             }
-            let reply = recv_retry(t, reconnect, *retry_limit, s, &mut |w| {
-                wire::pull(w, worker, keys)
+            let reply = recv_retry(t, reconnect, *retry_limit, deadline, s, &mut |w| {
+                wire::pull(w, worker, stamp(epoch_source), keys)
             })?;
             match reply {
                 Message::PullReply { entries, .. } => {
@@ -258,7 +307,10 @@ impl PsClient {
         let worker = self.worker_id;
         let dense = self.codec == CodecKind::None;
         let mut sent = 0u64;
-        let PsClient { transports, router, staged, reconnect, retry_limit, .. } = &mut *self;
+        let PsClient {
+            transports, router, staged, reconnect, retry_limit, epoch_source, read_deadline, ..
+        } = &mut *self;
+        let deadline = *read_deadline;
         // Phase 1: send every server's frame (transfers overlap on the
         // wire); phase 2: collect acks, replaying through reconnects on
         // transport errors.
@@ -272,8 +324,12 @@ impl PsClient {
                     if dense { &[] } else { &staged[s] };
                 let mut encode = |w: &mut Writer| {
                     let start = w.len();
+                    // Epoch is stamped per encode, not per push: a
+                    // replay after re-resolution must carry the fresh
+                    // epoch even though the body bytes are identical.
+                    let epoch = stamp(epoch_source);
                     if dense {
-                        wire::push_header(w, worker, step, seq, keys.len() as u32);
+                        wire::push_header(w, worker, step, seq, epoch, keys.len() as u32);
                         for &k in keys {
                             wire::entry(w, k, &grads[k as usize]);
                         }
@@ -283,6 +339,7 @@ impl PsClient {
                             worker,
                             step,
                             seq,
+                            epoch,
                             staged_s.len() as u32,
                         );
                         for (k, c) in staged_s {
@@ -292,9 +349,9 @@ impl PsClient {
                     sent += (w.len() - start) as u64;
                 };
                 if phase == 0 {
-                    send_retry(t, reconnect, *retry_limit, s, &mut encode)?;
+                    send_retry(t, reconnect, *retry_limit, deadline, s, &mut encode)?;
                 } else {
-                    match recv_retry(t, reconnect, *retry_limit, s, &mut encode)? {
+                    match recv_retry(t, reconnect, *retry_limit, deadline, s, &mut encode)? {
                         Message::PushAck { .. } => {}
                         Message::Error { what } => return Err(format!("server {s}: {what}")),
                         m => return Err(format!("unexpected push reply {m:?}")),
@@ -315,21 +372,25 @@ impl PsClient {
     /// down — re-arms the barrier until the retry budget runs out.
     pub fn barrier(&mut self, step: u64) -> Result<(), String> {
         let worker = self.worker_id;
-        let PsClient { transports, reconnect, retry_limit, .. } = &mut *self;
+        let PsClient {
+            transports, reconnect, retry_limit, epoch_source, read_deadline, ..
+        } = &mut *self;
+        let deadline = *read_deadline;
         for (s, t) in transports.iter_mut().enumerate() {
-            let msg = Message::Barrier { worker, step };
-            let mut encode = |w: &mut Writer| msg.encode_into(w);
-            send_retry(t, reconnect, *retry_limit, s, &mut encode)?;
+            let mut encode = |w: &mut Writer| {
+                Message::Barrier { worker, step, epoch: stamp(epoch_source) }.encode_into(w)
+            };
+            send_retry(t, reconnect, *retry_limit, deadline, s, &mut encode)?;
             let mut timeouts = 0usize;
             loop {
-                match recv_retry(t, reconnect, *retry_limit, s, &mut encode)? {
+                match recv_retry(t, reconnect, *retry_limit, deadline, s, &mut encode)? {
                     Message::BarrierRelease { .. } => break,
                     Message::Error { what }
                         if what.contains("barrier timeout") && timeouts < *retry_limit =>
                     {
                         // The server withdrew our arrival; re-arm.
                         timeouts += 1;
-                        send_retry(t, reconnect, *retry_limit, s, &mut encode)?;
+                        send_retry(t, reconnect, *retry_limit, deadline, s, &mut encode)?;
                     }
                     Message::Error { what } => return Err(format!("server {s}: {what}")),
                     m => return Err(format!("unexpected barrier reply {m:?}")),
@@ -342,11 +403,12 @@ impl PsClient {
     /// Fetch aggregate counters across servers.
     pub fn stats(&mut self) -> Result<(u64, u64, u64), String> {
         let (mut pulls, mut pushes, mut updates) = (0, 0, 0);
-        let PsClient { transports, reconnect, retry_limit, .. } = &mut *self;
+        let PsClient { transports, reconnect, retry_limit, read_deadline, .. } = &mut *self;
+        let deadline = *read_deadline;
         for (s, t) in transports.iter_mut().enumerate() {
             let mut encode = |w: &mut Writer| Message::Stats.encode_into(w);
-            send_retry(t, reconnect, *retry_limit, s, &mut encode)?;
-            match recv_retry(t, reconnect, *retry_limit, s, &mut encode)? {
+            send_retry(t, reconnect, *retry_limit, deadline, s, &mut encode)?;
+            match recv_retry(t, reconnect, *retry_limit, deadline, s, &mut encode)? {
                 Message::StatsReply { pulls: a, pushes: b, updates: c } => {
                     pulls += a;
                     pushes += b;
@@ -359,12 +421,21 @@ impl PsClient {
     }
 }
 
+/// Routing epoch to stamp on the next encoded op: the source cell's
+/// current value, or [`EPOCH_UNFENCED`] when no source is installed.
+/// Called from *inside* encode closures so replays re-stamp fresh.
+fn stamp(src: &Option<Arc<AtomicU64>>) -> u64 {
+    src.as_ref().map_or(EPOCH_UNFENCED, |e| e.load(Ordering::Acquire))
+}
+
 /// Send one encoded request to server `s`, replacing the connection via
 /// the reconnect handler on transport errors (`retry` extra attempts).
+/// Replacement connections inherit the client's read `deadline`.
 fn send_retry(
     t: &mut Box<dyn Transport>,
     reconnect: &mut Option<Reconnect>,
     retry: usize,
+    deadline: Option<Duration>,
     s: usize,
     encode: &mut dyn FnMut(&mut Writer),
 ) -> Result<(), String> {
@@ -379,16 +450,19 @@ fn send_retry(
                 }
                 attempts += 1;
                 *t = reconnect.as_mut().unwrap()(s)?;
+                t.set_read_deadline(deadline)?;
             }
         }
     }
 }
 
-/// True for the server error a non-promoted replica returns to direct
-/// worker traffic — a stale route, recoverable by re-resolving the
-/// shard's primary, not a protocol failure.
+/// True for the server errors that mean "stale route" — recoverable by
+/// re-resolving the topology and replaying, not protocol failures: a
+/// non-promoted replica's `not primary` to direct worker traffic, or
+/// the epoch fence's `stale epoch` from a server whose topology view
+/// is ahead of the stamp on our op.
 fn is_stale_route(what: &str) -> bool {
-    what.contains(crate::ps::replica::NOT_PRIMARY)
+    what.contains(NOT_PRIMARY) || what.contains(STALE_EPOCH)
 }
 
 /// Receive one reply from server `s`. On a transport error — or a
@@ -402,6 +476,7 @@ fn recv_retry(
     t: &mut Box<dyn Transport>,
     reconnect: &mut Option<Reconnect>,
     retry: usize,
+    deadline: Option<Duration>,
     s: usize,
     encode: &mut dyn FnMut(&mut Writer),
 ) -> Result<Message, String> {
@@ -424,6 +499,7 @@ fn recv_retry(
             attempts += 1;
             let replayed = reconnect.as_mut().unwrap()(s).and_then(|fresh| {
                 *t = fresh;
+                t.set_read_deadline(deadline)?;
                 t.send_with(&mut *encode)
             });
             if replayed.is_ok() {
@@ -565,8 +641,8 @@ mod tests {
     #[test]
     fn push_wire_bytes_match_compressed_accounting() {
         // The client's byte counter must equal the exact frame-body
-        // arithmetic: per server 25-byte header (tag, worker, step, seq,
-        // n) + per key (5 + CodecKind::wire_bytes_for(numel)).
+        // arithmetic: per server 33-byte header (tag, worker, step, seq,
+        // epoch, n) + per key (5 + CodecKind::wire_bytes_for(numel)).
         let (mut client, handles) = cluster(Optimizer::Sgd { lr: 1.0 }, UpdateMode::Async);
         let sizes = [100usize, 10, 50];
         let key_sets: Vec<Vec<u32>> = (0..2)
@@ -577,7 +653,7 @@ mod tests {
                 .iter()
                 .filter(|keys| !keys.is_empty())
                 .map(|keys| {
-                    25 + keys
+                    33 + keys
                         .iter()
                         .map(|&k| 5 + kind.wire_bytes_for(sizes[k as usize]) as u64)
                         .sum::<u64>()
@@ -787,6 +863,99 @@ mod tests {
         for h in serve_handles.lock().unwrap().drain(..) {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn stale_epoch_error_restamps_and_replays() {
+        // A client whose routing view trails the server's epoch: the
+        // fence rejects the push with `stale epoch`, the reconnect
+        // handler refreshes the epoch cell (as the coordinator's
+        // re-resolution does), and the replay — same seq, same staged
+        // bytes, fresh stamp — lands exactly once.
+        use std::sync::atomic::AtomicU64;
+        use std::sync::{Arc, Mutex};
+        let mut store = ShardStore::new(Optimizer::Sgd { lr: 1.0 });
+        store.insert(0, Tensor::from_vec(&[2], vec![0.0, 0.0]));
+        let shared = PsShared::new(store, UpdateMode::Async);
+        shared.promote(3);
+        let serve_handles = Arc::new(Mutex::new(Vec::new()));
+        let spawn_conn = {
+            let shared = shared.clone();
+            let serve_handles = serve_handles.clone();
+            move || -> Box<dyn Transport> {
+                let (client_end, server_end) = InProcTransport::pair();
+                let sh = shared.clone();
+                serve_handles
+                    .lock()
+                    .unwrap()
+                    .push(thread::spawn(move || serve(Box::new(server_end), sh)));
+                Box::new(client_end)
+            }
+        };
+        let first = spawn_conn();
+        let router = Router::new(&[8], 1);
+        let mut client = PsClient::new(0, vec![first], router);
+        client.set_retry_limit(2);
+        let epoch = Arc::new(AtomicU64::new(1));
+        client.set_epoch_source(epoch.clone());
+        let refresh = epoch.clone();
+        let reconnect_conns = spawn_conn.clone();
+        client.set_reconnect(Box::new(move |_s| {
+            refresh.store(3, Ordering::Release);
+            Ok(reconnect_conns())
+        }));
+
+        let grads = vec![Tensor::from_vec(&[2], vec![2.0, -1.0])];
+        client.push(0, &grads).unwrap();
+        assert_eq!(shared.store.get_clone(0).unwrap().data(), &[-2.0, 1.0]);
+        assert_eq!(shared.counters.updates.load(Ordering::Relaxed), 1);
+        // Reads ride the re-stamped route too.
+        let params = client.pull_all().unwrap();
+        assert_eq!(params[0].data(), &[-2.0, 1.0]);
+        drop(client);
+        for h in serve_handles.lock().unwrap().drain(..) {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn read_deadline_bounds_waits_and_survives_reconnect() {
+        use std::sync::{Arc, Mutex};
+        // A silent but alive peer: the pull's recv must time out
+        // instead of blocking forever.
+        let (client_end, _silent_peer) = InProcTransport::pair();
+        let router = Router::new(&[8], 1);
+        let mut client = PsClient::new(0, vec![Box::new(client_end)], router);
+        client
+            .set_read_deadline(Some(Duration::from_millis(30)))
+            .unwrap();
+        let err = client.pull_all().unwrap_err();
+        assert!(err.contains("timed out"), "want timeout, got: {err}");
+
+        // A dead first connection forces a reconnect; the replacement
+        // peer is silent, so the replay erroring out (rather than
+        // hanging) proves the deadline was re-applied to the fresh
+        // transport.
+        let (client_end, server_end) = InProcTransport::pair();
+        drop(server_end);
+        let router = Router::new(&[8], 1);
+        let mut client = PsClient::new(1, vec![Box::new(client_end)], router);
+        client.set_retry_limit(1);
+        client
+            .set_read_deadline(Some(Duration::from_millis(30)))
+            .unwrap();
+        let parked = Arc::new(Mutex::new(Vec::new()));
+        let peers = parked.clone();
+        client.set_reconnect(Box::new(move |_s| {
+            let (c, s) = InProcTransport::pair();
+            peers.lock().unwrap().push(s); // keep the peer alive, silent
+            Ok(Box::new(c) as Box<dyn Transport>)
+        }));
+        let err = client.pull_all().unwrap_err();
+        assert!(
+            err.contains("timed out"),
+            "want timeout after reconnect, got: {err}"
+        );
     }
 
     #[test]

@@ -22,25 +22,34 @@
 //! integers little-endian. A body is `u8 tag` followed by the payload
 //! (see `net::message` for the tag constants):
 //!
-//! | message          | payload                                          |
-//! |------------------|--------------------------------------------------|
-//! | `Pull`           | `u32 worker, u32 n, n × u32 key`                 |
-//! | `PullReply`      | `u64 clock, u32 n, n × (u32 key, tensor)`        |
-//! | `Push`           | `u32 worker, u64 step, u64 seq, u32 n, n × (u32 key, tensor)` |
-//! | `CompressedPush` | `u32 worker, u64 step, u64 seq, u32 n, n × (u32 key, u8 codec, body)` |
-//! | `PushAck`        | `u64 clock`                                      |
-//! | `Barrier`        | `u32 worker, u64 step`                           |
-//! | `BarrierRelease` | `u64 step`                                       |
-//! | `Stats`          | —                                                |
-//! | `StatsReply`     | `u64 pulls, u64 pushes, u64 updates`             |
-//! | `Shutdown`       | —                                                |
-//! | `Error`          | `str what` (u32 byte length || UTF-8)            |
-//! | `ReplForward`    | forwarded `Push`/`CompressedPush` frame, verbatim |
-//! | `ReplRelease`    | `u64 step`                                       |
-//! | `Promote`        | `u64 epoch`                                      |
-//! | `PromoteAck`     | `u64 epoch, u64 clock`                           |
-//! | `Ping`           | —                                                |
-//! | `Pong`           | `u64 epoch, u8 is_primary`                       |
+//! | message           | payload                                          |
+//! |-------------------|--------------------------------------------------|
+//! | `Pull`            | `u32 worker, u64 epoch, u32 n, n × u32 key`      |
+//! | `PullReply`       | `u64 clock, u32 n, n × (u32 key, tensor)`        |
+//! | `Push`            | `u32 worker, u64 step, u64 seq, u64 epoch, u32 n, n × (u32 key, tensor)` |
+//! | `CompressedPush`  | `u32 worker, u64 step, u64 seq, u64 epoch, u32 n, n × (u32 key, u8 codec, body)` |
+//! | `PushAck`         | `u64 clock`                                      |
+//! | `Barrier`         | `u32 worker, u64 step, u64 epoch`                |
+//! | `BarrierRelease`  | `u64 step`                                       |
+//! | `Stats`           | —                                                |
+//! | `StatsReply`      | `u64 pulls, u64 pushes, u64 updates`             |
+//! | `Shutdown`        | —                                                |
+//! | `Error`           | `str what` (u32 byte length || UTF-8)            |
+//! | `ReplForward`     | forwarded `Push`/`CompressedPush` frame, verbatim |
+//! | `ReplRelease`     | `u64 step`                                       |
+//! | `Promote`         | `u64 epoch`                                      |
+//! | `PromoteAck`      | `u64 epoch, u64 clock`                           |
+//! | `Ping`            | —                                                |
+//! | `Pong`            | `u64 epoch, u8 is_primary`                       |
+//! | `SnapshotRequest` | —                                                |
+//! | `SnapshotChunk`   | `u32 n, n × (u32 key, tensor, u8 has_vel, [tensor])` |
+//! | `CatchUpDone`     | `u64 clock, u64 epoch, seq watermarks + sync state (see `net::message`)` |
+//! | `Join`            | `u64 epoch`                                      |
+//!
+//! The worker-op `epoch` stamp is the client's routing epoch — servers
+//! fence ops whose stamp does not exactly match their own (see
+//! [`server`]); `u64::MAX` is the unfenced sentinel for clients that
+//! never resolved a topology (single-server runs, control planes).
 //!
 //! A tensor is `u32 rank, rank × u32 dim, u32 numel, numel × f32` — the
 //! f32 payload is the host's little-endian memory image, so on LE

@@ -39,14 +39,25 @@
 //!   its chain successors (wired at startup) keep receiving forwards, so
 //!   an R≥3 chain keeps replicating after a head loss.
 //!
-//! Known limitation (see ROADMAP): a mid-chain replica loss is repaired
-//! by re-pointing its predecessor at its successor, but frames the dead
-//! node had not yet relayed are not re-synced — full anti-entropy resync
-//! is future work. Primary failover (the case that loses data today) is
-//! fully covered.
+//! # Elastic membership
+//!
+//! Chains grow back (and grow, period) through the join catch-up
+//! protocol in `ps::server`: a newcomer connects to the current tail,
+//! receives a striped snapshot plus dedup/sync watermarks taken under
+//! the tail's **cut lock** ([`ReplicationState::cut_exclusive`]), and
+//! the very same connection is then
+//! [`attach`](ReplicationState::attach)ed as the tail's downstream link
+//! — so every frame applied after the cut arrives behind the snapshot
+//! on one FIFO stream, and the newcomer lands byte-identical (store,
+//! momentum velocity, clock, and dedup watermarks). A mid-chain replica
+//! loss is therefore no longer permanent: the supervisor re-points the
+//! predecessor, then re-provisions a replacement through the same
+//! catch-up path. Every apply path holds the shared side of the cut
+//! lock ([`ReplicationState::apply_shared`]); on the solo fast path
+//! that is one uncontended rwlock read acquisition.
 
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Mutex, MutexGuard};
+use std::sync::{Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
 
 use crate::net::message::{wire, Message};
 use crate::net::transport::Transport;
@@ -55,6 +66,12 @@ use crate::net::transport::Transport;
 /// traffic. `PsClient` matches on it to trigger re-resolution + replay
 /// instead of failing the op.
 pub const NOT_PRIMARY: &str = "not primary";
+
+/// Marker embedded in the error a server returns for a worker op whose
+/// routing-epoch stamp does not exactly match the server's own epoch
+/// (see `ps::server`'s fencing check). Like [`NOT_PRIMARY`], the client
+/// treats it as a stale route: re-resolve, reconnect, re-stamp, replay.
+pub const STALE_EPOCH: &str = "stale epoch";
 
 /// A server's downstream chain link(s) plus the replication order lock.
 ///
@@ -67,6 +84,11 @@ pub const NOT_PRIMARY: &str = "not primary";
 pub struct ReplicationState {
     active: AtomicBool,
     downstream: Mutex<Vec<Box<dyn Transport>>>,
+    /// The membership **cut lock**. Apply paths hold it shared; a join
+    /// snapshot holds it exclusive across export-and-attach, so the
+    /// snapshot plus the subsequent forward stream is a gap-free,
+    /// overlap-free serialization of the store.
+    cut: RwLock<()>,
 }
 
 impl Default for ReplicationState {
@@ -80,7 +102,32 @@ impl ReplicationState {
         ReplicationState {
             active: AtomicBool::new(false),
             downstream: Mutex::new(Vec::new()),
+            cut: RwLock::new(()),
         }
+    }
+
+    /// Shared side of the cut lock — held by every path that applies
+    /// replicated state (push apply/fold, sync release). Uncontended
+    /// except while a snapshot cut is in progress.
+    pub fn apply_shared(&self) -> RwLockReadGuard<'_, ()> {
+        self.cut.read().unwrap()
+    }
+
+    /// Exclusive side of the cut lock — held across snapshot export plus
+    /// downstream attach. Blocks until in-flight applies drain; new
+    /// applies wait until the cut completes.
+    pub fn cut_exclusive(&self) -> RwLockWriteGuard<'_, ()> {
+        self.cut.write().unwrap()
+    }
+
+    /// Append one downstream chain link (the join protocol's final
+    /// step: the catch-up connection becomes the chain link). Call with
+    /// the cut lock held exclusively to guarantee no frame falls between
+    /// the exported snapshot and the first forward.
+    pub fn attach(&self, conn: Box<dyn Transport>) {
+        let mut d = self.downstream.lock().unwrap();
+        d.push(conn);
+        self.active.store(true, Ordering::Release);
     }
 
     /// Install (or replace) the downstream chain connections. An empty
@@ -185,6 +232,31 @@ mod tests {
             assert!(g.is_empty());
         }
         assert!(r.guard().is_none());
+    }
+
+    #[test]
+    fn attach_appends_and_activates() {
+        let r = ReplicationState::new();
+        let (a, mut a_rx) = InProcTransport::pair();
+        {
+            let _cut = r.cut_exclusive();
+            r.attach(Box::new(a));
+        }
+        assert_eq!(r.downstream_len(), 1);
+        // A second attach grows the fan-out instead of replacing it.
+        let (b, mut b_rx) = InProcTransport::pair();
+        r.attach(Box::new(b));
+        assert_eq!(r.downstream_len(), 2);
+        let inner = Message::Ping.encode();
+        let mut g = r.guard().expect("active after attach");
+        forward_frame(&mut g, &inner);
+        drop(g);
+        for rx in [&mut a_rx, &mut b_rx] {
+            match rx.recv().unwrap() {
+                Message::ReplForward { inner: got } => assert_eq!(got, inner),
+                m => panic!("{m:?}"),
+            }
+        }
     }
 
     #[test]

@@ -177,6 +177,54 @@ impl ReplicatedTopology {
             None => Err(format!("physical {physical} not in shard {shard}'s chain")),
         }
     }
+
+    /// Append a freshly caught-up physical server to the tail of
+    /// `shard`'s chain (anti-entropy resync / `--add-server`). The id
+    /// must not already belong to any chain; brand-new ids grow
+    /// `n_physical`. Bumps the epoch so clients re-resolve.
+    pub fn extend_chain(&mut self, shard: usize, physical: usize) -> Result<(), String> {
+        if let Some(s) = self.shard_of(physical) {
+            return Err(format!("physical {physical} already serves shard {s}"));
+        }
+        self.chains[shard].push(physical);
+        self.n_physical = self.n_physical.max(physical + 1);
+        self.epoch += 1;
+        Ok(())
+    }
+
+    /// Install a brand-new chain for `shard` — the whole-chain-loss
+    /// recovery path, where every previous member is dead and a fresh
+    /// chain has been re-provisioned from a checkpoint. The new members
+    /// must not serve any *other* shard; ids from the lost chain may be
+    /// reused. Bumps the epoch so clients re-resolve.
+    pub fn replace_chain(&mut self, shard: usize, chain: Vec<usize>) -> Result<(), String> {
+        if chain.is_empty() {
+            return Err(format!("shard {shard}: replacement chain is empty"));
+        }
+        for (i, &p) in chain.iter().enumerate() {
+            if chain[..i].contains(&p) {
+                return Err(format!("physical {p} listed twice in replacement chain"));
+            }
+            match self.shard_of(p) {
+                Some(s) if s != shard => {
+                    return Err(format!("physical {p} already serves shard {s}"));
+                }
+                _ => {}
+            }
+        }
+        self.n_physical = self
+            .n_physical
+            .max(chain.iter().map(|&p| p + 1).max().unwrap_or(0));
+        self.chains[shard] = chain;
+        self.epoch += 1;
+        crate::warn_log!(
+            "ps",
+            "shard chain re-provisioned",
+            shard = shard,
+            epoch = self.epoch
+        );
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -366,6 +414,48 @@ mod tests {
         assert_eq!(topo.epoch(), 1);
         // The primary survives replica losses.
         assert_eq!(topo.primary_of(0), 0);
+    }
+
+    #[test]
+    fn extend_chain_restores_replication_factor() {
+        let mut topo = ReplicatedTopology::new(2, 2);
+        // Shard 0 loses its replica, then resyncs a brand-new physical.
+        topo.remove(0, 1).unwrap();
+        assert_eq!(topo.chain_of(0), &[0]);
+        topo.extend_chain(0, 4).unwrap();
+        assert_eq!(topo.chain_of(0), &[0, 4]);
+        assert_eq!(topo.epoch(), 2);
+        assert_eq!(topo.n_physical(), 5, "new id grew the fleet");
+        assert_eq!(topo.shard_of(4), Some(0));
+        // A member of another chain can't be stolen.
+        assert!(topo.extend_chain(0, 2).is_err());
+        // Nor can a member join its own chain twice.
+        assert!(topo.extend_chain(0, 4).is_err());
+        assert_eq!(topo.epoch(), 2, "refused extends leave the epoch alone");
+        // Reusing a dead id does not grow the fleet.
+        topo.extend_chain(1, 1).unwrap();
+        assert_eq!(topo.chain_of(1), &[2, 3, 1]);
+        assert_eq!(topo.n_physical(), 5);
+    }
+
+    #[test]
+    fn replace_chain_recovers_a_lost_shard() {
+        let sizes = vec![10, 20, 30, 40];
+        let r = Router::new(&sizes, 2);
+        let mut topo = ReplicatedTopology::new(2, 2);
+        // Whole chain of shard 1 is gone; re-provision on fresh ids,
+        // reusing one dead id.
+        topo.replace_chain(1, vec![4, 3]).unwrap();
+        assert_eq!(topo.chain_of(1), &[4, 3]);
+        assert_eq!(topo.epoch(), 1);
+        assert_eq!(topo.n_physical(), 5);
+        assert_no_orphans_or_double_owners(&r, &topo);
+        // Guard rails: empty, duplicated, or stolen members refuse.
+        assert!(topo.replace_chain(1, Vec::new()).is_err());
+        assert!(topo.replace_chain(1, vec![5, 5]).is_err());
+        assert!(topo.replace_chain(1, vec![0]).is_err(), "0 serves shard 0");
+        assert_eq!(topo.epoch(), 1);
+        assert_eq!(topo.chain_of(1), &[4, 3]);
     }
 
     #[test]

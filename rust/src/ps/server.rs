@@ -32,6 +32,20 @@
 //! idempotency watermarks. Replicas reject direct worker traffic with a
 //! `not primary` error until a `Promote` frame flips their role; the
 //! client treats that error as a stale route and re-resolves.
+//!
+//! Elastic membership: a `SnapshotRequest` on any chain member turns
+//! that connection into a join catch-up ([`serve_snapshot`] on the
+//! tail, [`catch_up_from_tail`] on the newcomer) — a striped snapshot
+//! plus dedup/sync watermarks taken under the replication cut lock,
+//! after which the same connection is attached as the tail's new
+//! down-chain link. Worker ops additionally carry a routing-epoch
+//! stamp that must match the server's epoch exactly (fencing): a
+//! gray-failed old primary that missed its deposition cannot apply
+//! writes from clients it still holds, and a client routed by a stale
+//! topology re-resolves through the `stale epoch` error. A topology
+//! epoch bump without a role change (chain extend/replace) is pushed
+//! to the still-primary head as a `Promote { epoch }` — promotion is
+//! idempotent on a primary and just raises its epoch.
 
 use std::collections::btree_map::Entry as BtreeEntry;
 use std::collections::{BTreeMap, BTreeSet};
@@ -41,9 +55,9 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::{self, JoinHandle};
 
 use super::compress::{CompressedRef, DenseRef};
-use super::replica::{self, ReplicationState, NOT_PRIMARY};
+use super::replica::{self, ReplicationState, NOT_PRIMARY, STALE_EPOCH};
 use super::shard::{ShardStore, StripedStore, DEFAULT_STRIPES};
-use crate::net::message::{wire, Message};
+use crate::net::message::{wire, Message, EPOCH_UNFENCED};
 use crate::net::transport::{TcpTransport, Transport};
 use crate::tensor::Tensor;
 
@@ -349,6 +363,25 @@ fn not_primary_error(shared: &PsShared) -> Message {
     }
 }
 
+/// Fence check for worker-origin ops: the op's routing-epoch stamp must
+/// equal this server's epoch exactly (or be [`EPOCH_UNFENCED`], the
+/// unrouted-client sentinel). A stamp *below* means the client was
+/// routed by a stale topology; a stamp *above* means THIS server missed
+/// a topology change — the falsely-deposed-primary gray failure. Either
+/// way the op must not apply: the [`STALE_EPOCH`] marker makes the
+/// client re-resolve, reconnect, re-stamp and replay. Runs before
+/// admission, so a fenced frame never consumes its idempotency ticket.
+fn stale_epoch_error(shared: &PsShared, op_epoch: u64) -> Option<Message> {
+    let here = shared.epoch();
+    if op_epoch == EPOCH_UNFENCED || op_epoch == here {
+        None
+    } else {
+        Some(Message::Error {
+            what: format!("{STALE_EPOCH}: op stamped epoch {op_epoch}, server at {here}"),
+        })
+    }
+}
+
 /// Streaming compressed-push handler: entries decode as borrowed views
 /// straight from the frame (`wire::CompressedPushBody`) and scatter
 /// into the store (async) or the striped sync aggregation — no dense
@@ -372,11 +405,22 @@ fn handle_compressed_push(frame: &[u8], shared: &PsShared, origin: PushOrigin) -
     }
     let mut body = wire::CompressedPushBody::decode(frame).expect("validated above");
     let (worker, step, seq) = (body.worker, body.step, body.seq);
-    if matches!(origin, PushOrigin::Worker) && !shared.is_primary() {
-        return not_primary_error(shared);
+    if matches!(origin, PushOrigin::Worker) {
+        if !shared.is_primary() {
+            return not_primary_error(shared);
+        }
+        if let Some(err) = stale_epoch_error(shared, body.epoch) {
+            return err;
+        }
     }
     match shared.mode {
         UpdateMode::Async => {
+            // Membership cut (shared side) outside the replication
+            // order lock: a join snapshot holding the cut exclusively
+            // sees either all of this apply or none of it, and the
+            // cut -> downstream-mutex order matches the snapshot's
+            // export-then-attach.
+            let _cut = shared.repl.apply_shared();
             // Replication order lock (None when solo): admission, the
             // down-chain forward and the local apply serialize as one
             // unit, and the forward precedes the ack — an acked update
@@ -413,6 +457,7 @@ fn handle_compressed_push(frame: &[u8], shared: &PsShared, origin: PushOrigin) -
             // before it (included on every chain member) or observes
             // the advanced horizon (discarded everywhere). Halt
             // re-check as in the async arm.
+            let _cut = shared.repl.apply_shared();
             let mut repl = shared.repl.guard();
             if shared.stopped() {
                 return not_primary_error(shared);
@@ -473,14 +518,21 @@ fn handle_dense_push(frame: &[u8], shared: &PsShared, origin: PushOrigin) -> Mes
     }
     let mut body = wire::PushBody::decode(frame).expect("validated above");
     let (worker, step, seq) = (body.worker, body.step, body.seq);
-    if matches!(origin, PushOrigin::Worker) && !shared.is_primary() {
-        return not_primary_error(shared);
+    if matches!(origin, PushOrigin::Worker) {
+        if !shared.is_primary() {
+            return not_primary_error(shared);
+        }
+        if let Some(err) = stale_epoch_error(shared, body.epoch) {
+            return err;
+        }
     }
     match shared.mode {
         UpdateMode::Async => {
             // See [`handle_compressed_push`]: forward-before-ack under
-            // the replication order lock, with the halt re-check that
-            // keeps a dying primary from acking an unforwarded frame.
+            // the membership cut and replication order lock, with the
+            // halt re-check that keeps a dying primary from acking an
+            // unforwarded frame.
+            let _cut = shared.repl.apply_shared();
             let mut repl = shared.repl.guard();
             if shared.stopped() {
                 return not_primary_error(shared);
@@ -503,6 +555,7 @@ fn handle_dense_push(frame: &[u8], shared: &PsShared, origin: PushOrigin) -> Mes
             Message::PushAck { clock: shared.store.clock() }
         }
         UpdateMode::Sync { .. } => {
+            let _cut = shared.repl.apply_shared();
             let mut repl = shared.repl.guard();
             if shared.stopped() {
                 return not_primary_error(shared);
@@ -629,8 +682,9 @@ fn fold_sync_compressed(shared: &PsShared, step: u64, key: u32, g: &CompressedRe
 
 /// Apply a released step's aggregated means and advance the horizon.
 /// Called with the barrier lock held; drains each agg stripe under its
-/// own lock, applying means with no agg lock held (barrier -> repl ->
-/// agg -> store is the global lock order).
+/// own lock, applying means with no agg lock held (barrier -> cut ->
+/// repl -> agg -> store is the global lock order; the membership cut
+/// lock keeps a join snapshot from splitting a release).
 ///
 /// With a replication chain attached, the replication order lock is
 /// held across the whole release and a `ReplRelease` marker is
@@ -644,6 +698,7 @@ fn fold_sync_compressed(shared: &PsShared, step: u64, key: u32, g: &CompressedRe
 /// workers the step committed — would diverge the chain. The caller
 /// must drop the connection unreplied so clients re-resolve.
 fn release_step(shared: &PsShared, bar: &mut BarrierState, step: u64) -> bool {
+    let _cut = shared.repl.apply_shared();
     let mut repl = shared.repl.guard();
     if shared.stopped() {
         return false;
@@ -770,13 +825,21 @@ pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
         }
         let Some(msg) = fallback else { return };
         match msg {
-            Message::Pull { keys, .. } => {
+            Message::Pull { epoch, keys, .. } => {
                 shared.counters.pulls.fetch_add(1, Ordering::Relaxed);
                 if !shared.is_primary() {
                     // Stale route: the worker should re-resolve and pull
                     // from the promoted primary, never from a replica
                     // that may lag the chain.
                     if t.send(&not_primary_error(&shared)).is_err() {
+                        return;
+                    }
+                    continue;
+                }
+                if let Some(err) = stale_epoch_error(&shared, epoch) {
+                    // Fenced reads too: a client holding a stale route
+                    // must not train against a deposed head's params.
+                    if t.send(&err).is_err() {
                         return;
                     }
                     continue;
@@ -812,9 +875,15 @@ pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
             // streaming handlers above, which own the admission logic;
             // an owned variant arriving here would mean the routing
             // broke, and falls through to the `other` arm.
-            Message::Barrier { worker, step } => {
+            Message::Barrier { worker, step, epoch } => {
                 if !shared.is_primary() {
                     if t.send(&not_primary_error(&shared)).is_err() {
+                        return;
+                    }
+                    continue;
+                }
+                if let Some(err) = stale_epoch_error(&shared, epoch) {
+                    if t.send(&err).is_err() {
                         return;
                     }
                     continue;
@@ -970,6 +1039,15 @@ pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
                     return;
                 }
             }
+            Message::SnapshotRequest => {
+                // Join catch-up: stream a cut-consistent snapshot over
+                // this connection, then the connection itself becomes
+                // this node's new down-chain link (attached under the
+                // same cut). Either way this serve loop is finished
+                // with the transport.
+                serve_snapshot(t, &shared);
+                return;
+            }
             Message::Ping => {
                 let pong = Message::Pong {
                     epoch: shared.epoch(),
@@ -988,6 +1066,155 @@ pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
                     what: format!("unexpected message {other:?}"),
                 });
             }
+        }
+    }
+}
+
+/// Tail side of the join catch-up: stream a cut-consistent snapshot of
+/// this node's replicated state to the newcomer on `t`, then attach `t`
+/// as a down-chain replication link.
+///
+/// The whole exchange runs under the **exclusive** side of the
+/// membership cut lock, so no apply interleaves between the exported
+/// state and the first frame later forwarded down this connection: the
+/// snapshot plus the forward stream is a gap-free, overlap-free
+/// serialization of this node's state — frames applied here after the
+/// cut simply queue on the transport behind the snapshot, which *is*
+/// the "replay of frames buffered during transfer". What rides along
+/// with the stripes: the store clock, the per-worker async seq
+/// watermarks, and the sync release floor / per-step contribution sets
+/// / partial gradient sums — so a newcomer joining mid-step folds
+/// later pushes into the right running means and dedups replays
+/// exactly as every other chain member does.
+///
+/// Never takes the barrier mutex (the sync floor is read from its
+/// lock-free mirror): barrier handlers call [`release_step`], which
+/// takes the shared cut — barrier-then-cut is the global order and the
+/// snapshot must not invert it.
+fn serve_snapshot(mut t: Box<dyn Transport>, shared: &PsShared) {
+    let _cut = shared.repl.cut_exclusive();
+    if shared.stopped() {
+        return;
+    }
+    let mut send_err: Option<String> = None;
+    shared.store.export_stripes(|entries| {
+        if send_err.is_some() || entries.is_empty() {
+            return;
+        }
+        if let Err(e) = t.send_with(&mut |w| wire::snapshot_chunk(w, entries)) {
+            send_err = Some(e);
+        }
+    });
+    if let Some(e) = send_err {
+        crate::warn_log!("ps", "snapshot stream failed", err = e);
+        return;
+    }
+    let mut agg = Vec::new();
+    for stripe in &shared.sync.agg {
+        for (&step, keys) in stripe.lock().unwrap().iter() {
+            for (&key, (sum, n)) in keys {
+                agg.push((step, key, sum.clone(), *n));
+            }
+        }
+    }
+    let done = Message::CatchUpDone {
+        clock: shared.store.clock(),
+        epoch: shared.epoch(),
+        applied_seq: shared
+            .applied_seq
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(&w, &s)| (w, s))
+            .collect(),
+        released_floor: shared.sync.released_floor.load(Ordering::Acquire),
+        contributed: shared
+            .sync
+            .contributed
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(&step, workers)| (step, workers.iter().copied().collect()))
+            .collect(),
+        agg,
+    };
+    if let Err(e) = t.send(&done) {
+        crate::warn_log!("ps", "snapshot handoff failed", err = e);
+        return;
+    }
+    // The newcomer must confirm installation before the connection
+    // turns into a chain link; anything else — including a peer that
+    // died mid-install — aborts the join with no membership change.
+    match t.recv() {
+        Ok(Message::Join { .. }) => shared.repl.attach(t),
+        Ok(m) => {
+            crate::warn_log!("ps", "join aborted: unexpected confirmation", msg = format!("{m:?}"))
+        }
+        Err(e) => crate::warn_log!("ps", "join aborted", err = e),
+    }
+}
+
+/// Newcomer side of the join catch-up: request a snapshot from the
+/// current chain tail over `t`, install it into `shared` (store,
+/// momentum velocity, clock, dedup watermarks, sync aggregation,
+/// epoch), confirm with `Join`, and hand the connection back — the tail
+/// has attached its end as a chain link, so the caller must now run
+/// [`serve`] on the returned transport to consume the forward stream.
+/// The caller is responsible for `shared` being a fresh, demoted
+/// replica ([`PsShared::set_role_replica`]).
+pub fn catch_up_from_tail(
+    mut t: Box<dyn Transport>,
+    shared: &PsShared,
+) -> Result<Box<dyn Transport>, String> {
+    t.send(&Message::SnapshotRequest)?;
+    loop {
+        match t.recv()? {
+            Message::SnapshotChunk { entries } => {
+                for (key, param, vel) in entries {
+                    shared.store.install_entry(key, param, vel);
+                }
+            }
+            Message::CatchUpDone {
+                clock,
+                epoch,
+                applied_seq,
+                released_floor,
+                contributed,
+                agg,
+            } => {
+                shared.store.set_clock(clock);
+                *shared.applied_seq.lock().unwrap() = applied_seq.into_iter().collect();
+                {
+                    let mut bar = shared.sync.barrier.lock().unwrap();
+                    bar.released_below = released_floor;
+                }
+                shared
+                    .sync
+                    .released_floor
+                    .store(released_floor, Ordering::Release);
+                *shared.sync.contributed.lock().unwrap() = contributed
+                    .into_iter()
+                    .map(|(step, workers)| (step, workers.into_iter().collect()))
+                    .collect();
+                for stripe in &shared.sync.agg {
+                    stripe.lock().unwrap().clear();
+                }
+                for (step, key, sum, n) in agg {
+                    shared
+                        .sync
+                        .agg_stripe(key)
+                        .lock()
+                        .unwrap()
+                        .entry(step)
+                        .or_default()
+                        .insert(key, (sum, n));
+                }
+                shared.epoch.fetch_max(epoch, Ordering::AcqRel);
+                t.send(&Message::Join { epoch: shared.epoch() })?;
+                return Ok(t);
+            }
+            Message::Error { what } => return Err(what),
+            other => return Err(format!("unexpected catch-up frame {other:?}")),
         }
     }
 }
@@ -1078,7 +1305,7 @@ mod tests {
         let h = thread::spawn(move || serve(Box::new(server_end), sh));
         let mut c: Box<dyn Transport> = Box::new(client_end);
 
-        c.send(&Message::Pull { worker: 0, keys: vec![0] }).unwrap();
+        c.send(&Message::Pull { worker: 0, epoch: u64::MAX, keys: vec![0] }).unwrap();
         match c.recv().unwrap() {
             Message::PullReply { entries, .. } => {
                 assert_eq!(entries[0].1.data(), &[1.0, 2.0]);
@@ -1090,12 +1317,13 @@ mod tests {
             worker: 0,
             step: 0,
             seq: 0,
+            epoch: u64::MAX,
             entries: vec![(0, Tensor::from_vec(&[2], vec![2.0, 2.0]))],
         })
         .unwrap();
         assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
 
-        c.send(&Message::Pull { worker: 0, keys: vec![0] }).unwrap();
+        c.send(&Message::Pull { worker: 0, epoch: u64::MAX, keys: vec![0] }).unwrap();
         match c.recv().unwrap() {
             Message::PullReply { entries, .. } => {
                 assert_eq!(entries[0].1.data(), &[0.0, 1.0]); // 1-0.5*2, 2-0.5*2
@@ -1123,6 +1351,7 @@ mod tests {
             worker: 3,
             step: 0,
             seq: 0,
+            epoch: u64::MAX,
             entries: vec![(0, Tensor::from_vec(&[1], vec![2.0]))],
         };
         for _ in 0..3 {
@@ -1137,6 +1366,7 @@ mod tests {
             worker: 3,
             step: 1,
             seq: 5,
+            epoch: u64::MAX,
             entries: vec![(0, Tensor::from_vec(&[1], vec![1.0]))],
         })
         .unwrap();
@@ -1145,6 +1375,7 @@ mod tests {
             worker: 3,
             step: 2,
             seq: 4,
+            epoch: u64::MAX,
             entries: vec![(0, Tensor::from_vec(&[1], vec![100.0]))],
         })
         .unwrap();
@@ -1155,6 +1386,7 @@ mod tests {
             worker: 4,
             step: 0,
             seq: 0,
+            epoch: u64::MAX,
             entries: vec![(0, Tensor::from_vec(&[1], vec![1.0]))],
         })
         .unwrap();
@@ -1181,6 +1413,7 @@ mod tests {
             worker: 0,
             step: 0,
             seq: 0,
+            epoch: u64::MAX,
             entries: vec![(0, Tensor::from_vec(&[2], vec![2.0, 4.0]))],
         };
         let frame = push.encode();
@@ -1222,6 +1455,7 @@ mod tests {
                     worker: 0,
                     step: 0,
                     seq,
+                    epoch: u64::MAX,
                     entries: vec![(0, Tensor::from_vec(&[1], vec![2.0]))],
                 })
                 .unwrap();
@@ -1232,6 +1466,7 @@ mod tests {
                 worker: 1,
                 step: 0,
                 seq: 0,
+                epoch: u64::MAX,
                 entries: vec![(0, Tensor::from_vec(&[1], vec![4.0]))],
             })
             .unwrap();
@@ -1239,7 +1474,7 @@ mod tests {
         let mut joins = Vec::new();
         for (w, mut c) in conns.into_iter().enumerate() {
             joins.push(thread::spawn(move || {
-                c.send(&Message::Barrier { worker: w as u32, step: 0 }).unwrap();
+                c.send(&Message::Barrier { worker: w as u32, step: 0, epoch: u64::MAX }).unwrap();
                 assert!(matches!(c.recv().unwrap(), Message::BarrierRelease { step: 0 }));
             }));
         }
@@ -1272,6 +1507,7 @@ mod tests {
             worker: 0,
             step: 0,
             seq: 0,
+            epoch: u64::MAX,
             entries: vec![
                 (0, Compressed::Sparse { numel: 8, idx: vec![1, 5], val: vec![2.0, -1.0] }),
                 (1, Compressed::Quant8 { numel: 4, scale: 1.0, q: vec![127, -5, 0, 3] }),
@@ -1306,12 +1542,13 @@ mod tests {
             worker: 0,
             step: 0,
             seq: 0,
+            epoch: u64::MAX,
             entries: vec![(9, Compressed::Sparse { numel: 2, idx: vec![0], val: vec![1.0] })],
         })
         .unwrap();
         assert!(matches!(c.recv().unwrap(), Message::Error { .. }));
         // The server still serves afterwards.
-        c.send(&Message::Pull { worker: 0, keys: vec![0] }).unwrap();
+        c.send(&Message::Pull { worker: 0, epoch: u64::MAX, keys: vec![0] }).unwrap();
         assert!(matches!(c.recv().unwrap(), Message::PullReply { .. }));
         drop(c);
         h.join().unwrap();
@@ -1339,6 +1576,7 @@ mod tests {
                     worker: idx,
                     step: 0,
                     seq: 0,
+                    epoch: u64::MAX,
                     entries: vec![(
                         0,
                         Compressed::Sparse { numel: 2, idx: vec![idx], val: vec![val] },
@@ -1346,7 +1584,7 @@ mod tests {
                 })
                 .unwrap();
                 assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
-                c.send(&Message::Barrier { worker: idx, step: 0 }).unwrap();
+                c.send(&Message::Barrier { worker: idx, step: 0, epoch: u64::MAX }).unwrap();
                 assert!(matches!(c.recv().unwrap(), Message::BarrierRelease { step: 0 }));
             }));
         }
@@ -1372,7 +1610,7 @@ mod tests {
             move || serve(Box::new(server_end), sh)
         });
         let mut c: Box<dyn Transport> = Box::new(client_end);
-        c.send(&Message::Pull { worker: 0, keys: vec![9] }).unwrap();
+        c.send(&Message::Pull { worker: 0, epoch: u64::MAX, keys: vec![9] }).unwrap();
         assert!(matches!(c.recv().unwrap(), Message::Error { .. }));
         drop(c);
         h.join().unwrap();
@@ -1397,11 +1635,12 @@ mod tests {
                     worker: id,
                     step: 1,
                     seq: 0,
+                    epoch: u64::MAX,
                     entries: vec![(0, Tensor::from_vec(&[1], vec![grad]))],
                 })
                 .unwrap();
                 assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
-                c.send(&Message::Barrier { worker: id, step: 1 }).unwrap();
+                c.send(&Message::Barrier { worker: id, step: 1, epoch: u64::MAX }).unwrap();
                 assert!(matches!(
                     c.recv().unwrap(),
                     Message::BarrierRelease { step: 1 }
@@ -1414,7 +1653,7 @@ mod tests {
 
         // Mean grad = 3.0, lr = 1 → w = -3.
         let mut c = connect(addr).unwrap();
-        c.send(&Message::Pull { worker: 0, keys: vec![0] }).unwrap();
+        c.send(&Message::Pull { worker: 0, epoch: u64::MAX, keys: vec![0] }).unwrap();
         match c.recv().unwrap() {
             Message::PullReply { entries, .. } => assert_eq!(entries[0].1.data(), &[-3.0]),
             m => panic!("{m:?}"),
@@ -1451,11 +1690,12 @@ mod tests {
                     worker: id,
                     step: 0,
                     seq: 0,
+                    epoch: u64::MAX,
                     entries: vec![(0, Tensor::from_vec(&[1], vec![grad]))],
                 })
                 .unwrap();
                 assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
-                c.send(&Message::Barrier { worker: id, step: 0 }).unwrap();
+                c.send(&Message::Barrier { worker: id, step: 0, epoch: u64::MAX }).unwrap();
                 assert!(matches!(c.recv().unwrap(), Message::BarrierRelease { step: 0 }));
             })
         };
@@ -1469,15 +1709,16 @@ mod tests {
             worker: 2,
             step: 0,
             seq: 0,
+            epoch: u64::MAX,
             entries: vec![(0, Tensor::from_vec(&[1], vec![100.0]))],
         })
         .unwrap();
         assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
-        c.send(&Message::Barrier { worker: 2, step: 0 }).unwrap();
+        c.send(&Message::Barrier { worker: 2, step: 0, epoch: u64::MAX }).unwrap();
         assert!(matches!(c.recv().unwrap(), Message::BarrierRelease { step: 0 }));
 
         // w = -(mean of 2.0 and 4.0) = -3; straggler's 100.0 discarded.
-        c.send(&Message::Pull { worker: 2, keys: vec![0] }).unwrap();
+        c.send(&Message::Pull { worker: 2, epoch: u64::MAX, keys: vec![0] }).unwrap();
         match c.recv().unwrap() {
             Message::PullReply { entries, .. } => assert_eq!(entries[0].1.data(), &[-3.0]),
             m => panic!("{m:?}"),
@@ -1522,6 +1763,7 @@ mod tests {
             worker: 0,
             step: 0,
             seq: 0,
+            epoch: u64::MAX,
             entries: vec![(0, Tensor::from_vec(&[1], vec![7.0]))],
         })
         .unwrap();
@@ -1534,23 +1776,24 @@ mod tests {
             worker: 1,
             step: 1,
             seq: 0,
+            epoch: u64::MAX,
             entries: vec![(0, Tensor::from_vec(&[1], vec![4.0]))],
         })
         .unwrap();
         assert!(matches!(b.recv().unwrap(), Message::PushAck { .. }));
-        b.send(&Message::Barrier { worker: 1, step: 1 }).unwrap();
+        b.send(&Message::Barrier { worker: 1, step: 1, epoch: u64::MAX }).unwrap();
         assert!(matches!(b.recv().unwrap(), Message::BarrierRelease { step: 1 }));
         assert_eq!(shared.pending_steps(), 0);
 
         // Only B's gradient applied: w = -4, not -11.
-        b.send(&Message::Pull { worker: 1, keys: vec![0] }).unwrap();
+        b.send(&Message::Pull { worker: 1, epoch: u64::MAX, keys: vec![0] }).unwrap();
         match b.recv().unwrap() {
             Message::PullReply { entries, .. } => assert_eq!(entries[0].1.data(), &[-4.0]),
             m => panic!("{m:?}"),
         }
 
         // A's late barrier for the dead step is waved through.
-        a.send(&Message::Barrier { worker: 0, step: 0 }).unwrap();
+        a.send(&Message::Barrier { worker: 0, step: 0, epoch: u64::MAX }).unwrap();
         assert!(matches!(a.recv().unwrap(), Message::BarrierRelease { step: 0 }));
 
         drop(a);
@@ -1579,6 +1822,7 @@ mod tests {
             worker: 0,
             step: MAX_PENDING_STEPS,
             seq: 0,
+            epoch: u64::MAX,
             entries: vec![(0, Tensor::from_vec(&[1], vec![100.0]))],
         })
         .unwrap();
@@ -1590,13 +1834,14 @@ mod tests {
             worker: 0,
             step: 0,
             seq: 1,
+            epoch: u64::MAX,
             entries: vec![(0, Tensor::from_vec(&[1], vec![2.0]))],
         })
         .unwrap();
         assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
-        c.send(&Message::Barrier { worker: 0, step: 0 }).unwrap();
+        c.send(&Message::Barrier { worker: 0, step: 0, epoch: u64::MAX }).unwrap();
         assert!(matches!(c.recv().unwrap(), Message::BarrierRelease { step: 0 }));
-        c.send(&Message::Pull { worker: 0, keys: vec![0] }).unwrap();
+        c.send(&Message::Pull { worker: 0, epoch: u64::MAX, keys: vec![0] }).unwrap();
         match c.recv().unwrap() {
             Message::PullReply { entries, .. } => assert_eq!(entries[0].1.data(), &[-2.0]),
             m => panic!("{m:?}"),
@@ -1621,7 +1866,7 @@ mod tests {
         });
         let mut c: Box<dyn Transport> = Box::new(client_end);
 
-        c.send(&Message::Barrier { worker: 0, step: MAX_PENDING_STEPS }).unwrap();
+        c.send(&Message::Barrier { worker: 0, step: MAX_PENDING_STEPS, epoch: u64::MAX }).unwrap();
         assert!(matches!(c.recv().unwrap(), Message::Error { .. }));
         assert_eq!(shared.pending_steps(), 0);
 
@@ -1630,11 +1875,12 @@ mod tests {
             worker: 0,
             step: 0,
             seq: 0,
+            epoch: u64::MAX,
             entries: vec![(0, Tensor::from_vec(&[1], vec![2.0]))],
         })
         .unwrap();
         assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
-        c.send(&Message::Barrier { worker: 0, step: 0 }).unwrap();
+        c.send(&Message::Barrier { worker: 0, step: 0, epoch: u64::MAX }).unwrap();
         assert!(matches!(c.recv().unwrap(), Message::BarrierRelease { step: 0 }));
         assert_eq!(shared.store.get_clone(0).unwrap().data(), &[-2.0]);
         drop(c);
@@ -1662,6 +1908,7 @@ mod tests {
                 worker: 0,
                 step,
                 seq: step,
+                epoch: u64::MAX,
                 entries: vec![(0, Tensor::from_vec(&[1], vec![1.0]))],
             })
             .unwrap();
@@ -1701,6 +1948,7 @@ mod tests {
                 worker: 0,
                 step,
                 seq: step,
+                epoch: u64::MAX,
                 entries: vec![(0, Tensor::from_vec(&[1], vec![1.0]))],
             })
             .unwrap();
@@ -1712,17 +1960,18 @@ mod tests {
             worker: 1,
             step: 5,
             seq: 0,
+            epoch: u64::MAX,
             entries: vec![(0, Tensor::from_vec(&[1], vec![2.0]))],
         })
         .unwrap();
         assert!(matches!(b.recv().unwrap(), Message::PushAck { .. }));
-        b.send(&Message::Barrier { worker: 1, step: 5 }).unwrap();
+        b.send(&Message::Barrier { worker: 1, step: 5, epoch: u64::MAX }).unwrap();
         assert!(matches!(b.recv().unwrap(), Message::BarrierRelease { step: 5 }));
         assert_eq!(shared.pending_steps(), 0);
         assert_eq!(shared.store.get_clone(0).unwrap().data(), &[-2.0]);
         // A's late barriers for its dead steps are waved through.
         for step in 0..4u64 {
-            a.send(&Message::Barrier { worker: 0, step }).unwrap();
+            a.send(&Message::Barrier { worker: 0, step, epoch: u64::MAX }).unwrap();
             assert!(matches!(a.recv().unwrap(), Message::BarrierRelease { .. }));
         }
         drop(a);
@@ -1750,6 +1999,7 @@ mod tests {
             worker: 0,
             step: MAX_PENDING_STEPS,
             seq: 0,
+            epoch: u64::MAX,
             entries: vec![(0, Compressed::Sparse { numel: 1, idx: vec![0], val: vec![9.0] })],
         })
         .unwrap();
@@ -1788,24 +2038,25 @@ mod tests {
                 worker: w,
                 step: 0,
                 seq: 0,
+                epoch: u64::MAX,
                 entries: vec![(0, Tensor::from_vec(&[1], vec![2.0]))],
             })
             .unwrap();
             assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
         }
         // A waits alone and times out with a retryable error.
-        a.send(&Message::Barrier { worker: 0, step: 0 }).unwrap();
+        a.send(&Message::Barrier { worker: 0, step: 0, epoch: u64::MAX }).unwrap();
         match a.recv().unwrap() {
             Message::Error { what } => assert!(what.contains("barrier timeout"), "{what}"),
             m => panic!("expected timeout error, got {m:?}"),
         }
         // Retry from A plus B's arrival releases the step exactly once.
         let hb2 = thread::spawn(move || {
-            b.send(&Message::Barrier { worker: 1, step: 0 }).unwrap();
+            b.send(&Message::Barrier { worker: 1, step: 0, epoch: u64::MAX }).unwrap();
             assert!(matches!(b.recv().unwrap(), Message::BarrierRelease { step: 0 }));
             b
         });
-        a.send(&Message::Barrier { worker: 0, step: 0 }).unwrap();
+        a.send(&Message::Barrier { worker: 0, step: 0, epoch: u64::MAX }).unwrap();
         assert!(matches!(a.recv().unwrap(), Message::BarrierRelease { step: 0 }));
         let b = hb2.join().unwrap();
         // mean of [2, 2] applied once: w = -2.
@@ -1840,7 +2091,7 @@ mod tests {
         let mut joins = Vec::new();
         for mut c in conns {
             joins.push(thread::spawn(move || {
-                c.send(&Message::Barrier { worker: 7, step: 0 }).unwrap();
+                c.send(&Message::Barrier { worker: 7, step: 0, epoch: u64::MAX }).unwrap();
                 c.recv().unwrap()
             }));
         }
@@ -1882,6 +2133,7 @@ mod tests {
                 worker: 0,
                 step: 0,
                 seq: 0,
+                epoch: u64::MAX,
                 entries: vec![(0, Tensor::from_vec(&[2], vec![9.0, 9.0]))],
             })
             .unwrap();
@@ -1893,6 +2145,7 @@ mod tests {
                     worker: i as u32,
                     step: 0,
                     seq: 0,
+                    epoch: u64::MAX,
                     entries: vec![(0, Tensor::from_vec(&[1], vec![grad]))],
                 })
                 .unwrap();
@@ -1902,7 +2155,7 @@ mod tests {
         let mut joins = Vec::new();
         for (w, mut c) in conns.into_iter().enumerate() {
             joins.push(thread::spawn(move || {
-                c.send(&Message::Barrier { worker: w as u32, step: 0 }).unwrap();
+                c.send(&Message::Barrier { worker: w as u32, step: 0, epoch: u64::MAX }).unwrap();
                 assert!(matches!(c.recv().unwrap(), Message::BarrierRelease { step: 0 }));
             }));
         }
@@ -1937,6 +2190,7 @@ mod tests {
                     worker: w as u32,
                     step: 0,
                     seq: 0,
+                    epoch: u64::MAX,
                     entries: vec![
                         (0, Tensor::from_vec(&[1], vec![grad])),
                         (1, Tensor::from_vec(&[1], vec![-grad])),
@@ -1944,7 +2198,7 @@ mod tests {
                 })
                 .unwrap();
                 assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
-                c.send(&Message::Barrier { worker: w as u32, step: 0 }).unwrap();
+                c.send(&Message::Barrier { worker: w as u32, step: 0, epoch: u64::MAX }).unwrap();
                 assert!(matches!(c.recv().unwrap(), Message::BarrierRelease { step: 0 }));
             }));
         }
@@ -2007,6 +2261,7 @@ mod tests {
             worker: 3,
             step: 0,
             seq: 0,
+            epoch: u64::MAX,
             entries: vec![(0, Tensor::from_vec(&[2], vec![2.0, 4.0]))],
         };
         // Original + replay: applied once on the primary, forwarded
@@ -2036,6 +2291,7 @@ mod tests {
             worker: 3,
             step: 1,
             seq: 1,
+            epoch: u64::MAX,
             entries: vec![(0, Tensor::from_vec(&[2], vec![1.0, 1.0]))],
         })
         .unwrap();
@@ -2071,6 +2327,7 @@ mod tests {
             worker: 0,
             step: 0,
             seq: 0,
+            epoch: u64::MAX,
             entries: vec![(0, Tensor::from_vec(&[1], vec![5.0]))],
         })
         .unwrap();
@@ -2096,7 +2353,7 @@ mod tests {
         );
         shared.set_role_replica();
         let mut c = conn_to(&shared, &mut handles);
-        c.send(&Message::Pull { worker: 0, keys: vec![0] }).unwrap();
+        c.send(&Message::Pull { worker: 0, epoch: u64::MAX, keys: vec![0] }).unwrap();
         match c.recv().unwrap() {
             Message::Error { what } => assert!(what.contains(NOT_PRIMARY), "{what}"),
             m => panic!("{m:?}"),
@@ -2105,6 +2362,7 @@ mod tests {
             worker: 0,
             step: 0,
             seq: 0,
+            epoch: u64::MAX,
             entries: vec![(0, Tensor::from_vec(&[1], vec![1.0]))],
         })
         .unwrap();
@@ -2134,6 +2392,7 @@ mod tests {
             worker: 0,
             step: 0,
             seq: 0,
+            epoch: u64::MAX,
             entries: vec![(0, Tensor::from_vec(&[1], vec![1.0]))],
         })
         .unwrap();
@@ -2164,11 +2423,12 @@ mod tests {
                     worker: w,
                     step: 0,
                     seq: 0,
+                    epoch: u64::MAX,
                     entries: vec![(0, Tensor::from_vec(&[1], vec![grad]))],
                 })
                 .unwrap();
                 assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
-                c.send(&Message::Barrier { worker: w, step: 0 }).unwrap();
+                c.send(&Message::Barrier { worker: w, step: 0, epoch: u64::MAX }).unwrap();
                 assert!(matches!(c.recv().unwrap(), Message::BarrierRelease { step: 0 }));
             }));
         }
@@ -2182,6 +2442,212 @@ mod tests {
         wait_until("replica release", || replica.store.clock() == 1);
         assert_eq!(replica.store.get_clone(0).unwrap().data(), &[-3.0]);
         wait_until("replica eviction", || replica.pending_steps() == 0);
+        primary.set_replicas(Vec::new());
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn epoch_fence_rejects_mismatched_worker_ops() {
+        use crate::ps::compress::Compressed;
+        let mut handles = Vec::new();
+        let shared = PsShared::new(
+            store_with(&[(0, vec![0.0])], Optimizer::Sgd { lr: 1.0 }),
+            UpdateMode::Async,
+        );
+        shared.promote(3);
+        let mut c = conn_to(&shared, &mut handles);
+        let push_at = |epoch: u64| Message::Push {
+            worker: 0,
+            step: 0,
+            seq: 0,
+            epoch,
+            entries: vec![(0, Tensor::from_vec(&[1], vec![1.0]))],
+        };
+        let expect_stale = |c: &mut Box<dyn Transport>| match c.recv().unwrap() {
+            Message::Error { what } => assert!(what.contains(STALE_EPOCH), "{what}"),
+            m => panic!("expected stale-epoch error, got {m:?}"),
+        };
+        // A stamp below the server's epoch (stale client) AND a stamp
+        // above it (this server is the deposed one) are both fenced.
+        for mismatched in [2u64, 4] {
+            c.send(&push_at(mismatched)).unwrap();
+            expect_stale(&mut c);
+        }
+        c.send(&Message::CompressedPush {
+            worker: 0,
+            step: 0,
+            seq: 0,
+            epoch: 1,
+            entries: vec![(0, Compressed::Sparse { numel: 1, idx: vec![0], val: vec![9.0] })],
+        })
+        .unwrap();
+        expect_stale(&mut c);
+        assert_eq!(shared.counters.updates.load(Ordering::Relaxed), 0);
+        // Reads and barriers are fenced too: a client holding a stale
+        // route must not train against a deposed head's parameters.
+        c.send(&Message::Pull { worker: 0, epoch: 2, keys: vec![0] }).unwrap();
+        expect_stale(&mut c);
+        c.send(&Message::Barrier { worker: 0, step: 0, epoch: 2 }).unwrap();
+        expect_stale(&mut c);
+        // The exactly-matching stamp passes — and the very seq the
+        // fence rejected is still free, so the re-stamped replay
+        // applies.
+        c.send(&push_at(3)).unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+        assert_eq!(shared.store.get_clone(0).unwrap().data(), &[-1.0]);
+        // The unfenced sentinel always passes (single-server and
+        // control-plane clients that never resolve a topology).
+        c.send(&Message::Pull { worker: 0, epoch: u64::MAX, keys: vec![0] }).unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::PullReply { .. }));
+        drop(c);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn catch_up_joiner_lands_byte_identical_and_deduped() {
+        let opt = Optimizer::Momentum { lr: 0.1, mu: 0.9 };
+        let mut handles = Vec::new();
+        let primary = PsShared::new(
+            store_with(&[(0, vec![0.0, 0.0]), (1, vec![1.0])], opt),
+            UpdateMode::Async,
+        );
+        let mut c = conn_to(&primary, &mut handles);
+        let push = |seq: u64, g0: f32| Message::Push {
+            worker: 0,
+            step: seq,
+            seq,
+            epoch: u64::MAX,
+            entries: vec![
+                (0, Tensor::from_vec(&[2], vec![g0, -g0])),
+                (1, Tensor::from_vec(&[1], vec![0.5])),
+            ],
+        };
+        for seq in 0..3u64 {
+            c.send(&push(seq, 1.0)).unwrap();
+            assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+        }
+        assert_eq!(primary.store.clock(), 3);
+
+        // A newcomer with an EMPTY store joins through the catch-up
+        // protocol; the primary (a chain of one — it is its own tail)
+        // serves the snapshot.
+        let joiner = PsShared::new(ShardStore::new(opt), UpdateMode::Async);
+        joiner.set_role_replica();
+        let (newcomer_end, tail_end) = InProcTransport::pair();
+        {
+            let sh = primary.clone();
+            handles.push(thread::spawn(move || serve(Box::new(tail_end), sh)));
+        }
+        let chain = catch_up_from_tail(Box::new(newcomer_end), &joiner).unwrap();
+        assert_eq!(joiner.store.clock(), 3, "clock rode the snapshot");
+        for k in [0u32, 1] {
+            assert_eq!(
+                joiner.store.get_clone(k).unwrap().data(),
+                primary.store.get_clone(k).unwrap().data(),
+                "key {k} differs after catch-up"
+            );
+        }
+        assert_eq!(primary.n_replicas(), 1, "the snapshot conn became the chain link");
+        {
+            let sh = joiner.clone();
+            handles.push(thread::spawn(move || serve(chain, sh)));
+        }
+
+        // A post-join push replicates down the new link — and lands
+        // byte-identically, which needs the snapshot to have carried
+        // the momentum velocity, not just the parameters.
+        c.send(&push(3, 2.0)).unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+        wait_until("joiner apply", || joiner.store.clock() == 4);
+        for k in [0u32, 1] {
+            assert_eq!(
+                joiner.store.get_clone(k).unwrap().data(),
+                primary.store.get_clone(k).unwrap().data(),
+                "key {k} diverged after post-join push"
+            );
+        }
+
+        // The dedup watermark rode along too: promote the joiner and
+        // replay an already-acked seq — acked, not re-applied.
+        joiner.promote(1);
+        let before = joiner.store.get_clone(0).unwrap();
+        let mut c2 = conn_to(&joiner, &mut handles);
+        c2.send(&push(3, 2.0)).unwrap();
+        assert!(matches!(c2.recv().unwrap(), Message::PushAck { .. }));
+        assert_eq!(joiner.store.clock(), 4, "replayed seq must not re-apply");
+        assert_eq!(joiner.store.get_clone(0).unwrap().data(), before.data());
+        drop(c);
+        drop(c2);
+        primary.set_replicas(Vec::new());
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn sync_catch_up_carries_partial_aggregation_mid_step() {
+        let mut handles = Vec::new();
+        let mode = UpdateMode::Sync { expected_workers: 2, backup_workers: 0 };
+        let primary =
+            PsShared::new(store_with(&[(0, vec![0.0])], Optimizer::Sgd { lr: 1.0 }), mode);
+        // Worker 0's gradient folds BEFORE the join…
+        let mut c0 = conn_to(&primary, &mut handles);
+        c0.send(&Message::Push {
+            worker: 0,
+            step: 0,
+            seq: 0,
+            epoch: u64::MAX,
+            entries: vec![(0, Tensor::from_vec(&[1], vec![2.0]))],
+        })
+        .unwrap();
+        assert!(matches!(c0.recv().unwrap(), Message::PushAck { .. }));
+
+        // …then a newcomer joins mid-step: worker 0's contribution can
+        // only reach it through the snapshot's partial sums.
+        let joiner = PsShared::new(ShardStore::new(Optimizer::Sgd { lr: 1.0 }), mode);
+        joiner.set_role_replica();
+        let (newcomer_end, tail_end) = InProcTransport::pair();
+        {
+            let sh = primary.clone();
+            handles.push(thread::spawn(move || serve(Box::new(tail_end), sh)));
+        }
+        let chain = catch_up_from_tail(Box::new(newcomer_end), &joiner).unwrap();
+        {
+            let sh = joiner.clone();
+            handles.push(thread::spawn(move || serve(chain, sh)));
+        }
+
+        // Worker 1's gradient and both barriers land after the join,
+        // reaching the joiner through the forward stream.
+        let mut c1 = conn_to(&primary, &mut handles);
+        c1.send(&Message::Push {
+            worker: 1,
+            step: 0,
+            seq: 0,
+            epoch: u64::MAX,
+            entries: vec![(0, Tensor::from_vec(&[1], vec![4.0]))],
+        })
+        .unwrap();
+        assert!(matches!(c1.recv().unwrap(), Message::PushAck { .. }));
+        let h0 = thread::spawn(move || {
+            c0.send(&Message::Barrier { worker: 0, step: 0, epoch: u64::MAX }).unwrap();
+            assert!(matches!(c0.recv().unwrap(), Message::BarrierRelease { step: 0 }));
+        });
+        c1.send(&Message::Barrier { worker: 1, step: 0, epoch: u64::MAX }).unwrap();
+        assert!(matches!(c1.recv().unwrap(), Message::BarrierRelease { step: 0 }));
+        h0.join().unwrap();
+
+        // mean(2, 4) = 3, lr 1 → −3 on the primary — and on the joiner,
+        // whose sum stitched the snapshot half to the forwarded half.
+        assert_eq!(primary.store.get_clone(0).unwrap().data(), &[-3.0]);
+        wait_until("joiner release", || joiner.store.clock() == 1);
+        assert_eq!(joiner.store.get_clone(0).unwrap().data(), &[-3.0]);
+        wait_until("joiner eviction", || joiner.pending_steps() == 0);
+        drop(c1);
         primary.set_replicas(Vec::new());
         for h in handles {
             h.join().unwrap();
@@ -2205,6 +2671,7 @@ mod tests {
             worker: 0,
             step: 0,
             seq: 0,
+            epoch: u64::MAX,
             entries: vec![(0, Tensor::from_vec(&[1], vec![3.0]))],
         };
         feed.send(&Message::ReplForward { inner: push.encode() }).unwrap();
@@ -2253,13 +2720,14 @@ mod tests {
         );
         let mut handles = Vec::new();
         let mut c = conn_to(&shared, &mut handles);
-        c.send(&Message::Pull { worker: 0, keys: vec![0] }).unwrap();
+        c.send(&Message::Pull { worker: 0, epoch: u64::MAX, keys: vec![0] }).unwrap();
         assert!(matches!(c.recv().unwrap(), Message::PullReply { .. }));
         shared.halt();
         c.send(&Message::Push {
             worker: 0,
             step: 0,
             seq: 0,
+            epoch: u64::MAX,
             entries: vec![(0, Tensor::from_vec(&[1], vec![1.0]))],
         })
         .unwrap();

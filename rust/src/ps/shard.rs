@@ -315,6 +315,43 @@ impl StripedStore {
         sum.scale(1.0 / count as f32);
         self.apply_grad(key, &sum)
     }
+
+    /// Visit every `(key, parameter, velocity)` entry, one stripe at a
+    /// time under that stripe's read lock — the join snapshot's export
+    /// path. `visit` is called per stripe so the caller can frame one
+    /// `SnapshotChunk` per stripe. Callers needing a *consistent* cut
+    /// across stripes must hold the replication cut lock exclusively;
+    /// this method only promises per-stripe consistency.
+    pub fn export_stripes(&self, mut visit: impl FnMut(&[(u32, &Tensor, Option<&Tensor>)])) {
+        for stripe in &self.stripes {
+            let guard = stripe.read().unwrap();
+            let entries: Vec<(u32, &Tensor, Option<&Tensor>)> = guard
+                .params
+                .iter()
+                .map(|(&k, p)| (k, p, guard.velocity.get(&k)))
+                .collect();
+            visit(&entries);
+        }
+    }
+
+    /// Install one snapshot entry wholesale: parameter AND (when
+    /// present) momentum velocity, replacing whatever was stored. The
+    /// join protocol's import path — a caught-up newcomer's store is a
+    /// byte copy of the tail's, including optimizer state.
+    pub fn install_entry(&self, key: u32, param: Tensor, velocity: Option<Tensor>) {
+        let mut guard = self.stripe(key).write().unwrap();
+        guard.params.insert(key, param);
+        match velocity {
+            Some(v) => guard.velocity.insert(key, v),
+            None => guard.velocity.remove(&key),
+        };
+    }
+
+    /// Overwrite the update clock (join install only — the newcomer
+    /// adopts the tail's clock so staleness accounting lines up).
+    pub fn set_clock(&self, clock: u64) {
+        self.clock.store(clock, Ordering::SeqCst);
+    }
 }
 
 #[cfg(test)]
@@ -536,6 +573,45 @@ mod tests {
         assert_eq!(s.clock(), 1);
         s.apply_grad(0, &t(&[1.0])).unwrap(); // v=1.9, w=0.71
         assert!((s.get_clone(0).unwrap().data()[0] - 0.71).abs() < 1e-6);
+    }
+
+    #[test]
+    fn export_then_install_clones_store_byte_identically() {
+        // The join snapshot path: export every entry (including momentum
+        // velocity) from a warmed-up store, install into an empty one,
+        // and the two must evolve identically afterwards.
+        let opt = Optimizer::Momentum { lr: 0.1, mu: 0.9 };
+        let src = striped_with(&[(0, vec![1.0, 2.0]), (3, vec![0.5]), (5, vec![4.0])], opt, 4);
+        src.apply_grad(0, &t(&[1.0, -1.0])).unwrap();
+        src.apply_grad(3, &t(&[2.0])).unwrap();
+
+        let dst = StripedStore::from_shard(ShardStore::new(opt), 2);
+        let mut n = 0;
+        src.export_stripes(|entries| {
+            for &(k, p, v) in entries {
+                dst.install_entry(k, p.clone(), v.cloned());
+                n += 1;
+            }
+        });
+        dst.set_clock(src.clock());
+        assert_eq!(n, 3);
+        assert_eq!(dst.clock(), src.clock());
+        for k in [0u32, 3, 5] {
+            assert_eq!(dst.get_clone(k).unwrap().data(), src.get_clone(k).unwrap().data());
+        }
+        // Key 5 never saw a gradient: no phantom velocity on install.
+        // Subsequent identical applies stay byte-identical (velocity
+        // carried over for 0 and 3, created fresh for 5 on both sides).
+        for k in [0u32, 3, 5] {
+            let len = src.get_clone(k).unwrap().len();
+            let g = Tensor::from_vec(&[len], vec![1.5; len]);
+            src.apply_grad(k, &g).unwrap();
+            dst.apply_grad(k, &g).unwrap();
+            assert_eq!(dst.get_clone(k).unwrap().data(), src.get_clone(k).unwrap().data());
+        }
+        // Install replaces pre-existing state wholesale.
+        dst.install_entry(0, t(&[9.0, 9.0]), None);
+        assert_eq!(dst.get_clone(0).unwrap().data(), &[9.0, 9.0]);
     }
 
     #[test]

@@ -13,7 +13,8 @@
 //! Liveness is part of the contract: every run executes under a
 //! watchdog thread; a hang fails the test before the CI job timeout.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -24,8 +25,9 @@ use dtlsda::net::fault::{FaultEvent, FaultLog, FaultPlan};
 use dtlsda::net::message::Message;
 use dtlsda::net::transport::{InProcTransport, Transport};
 use dtlsda::ps::client::PsClient;
+use dtlsda::ps::replica::STALE_EPOCH;
 use dtlsda::ps::router::{ReplicatedTopology, Router};
-use dtlsda::ps::server::{serve, PsShared, UpdateMode};
+use dtlsda::ps::server::{catch_up_from_tail, serve, PsShared, UpdateMode};
 use dtlsda::ps::shard::{Optimizer, ShardStore};
 use dtlsda::ps::CodecKind;
 use dtlsda::tensor::Tensor;
@@ -602,26 +604,33 @@ fn chaos_runs_are_bit_reproducible() {
     });
 }
 
-// ------------------------------------------- replicated shards (R = 2)
+// --------------------------------------- replicated shards (elastic R)
 
-/// In-proc chain-replicated PS cluster: shard `s` is physical `2s`
-/// (primary) + `2s+1` (replica), mirroring `run_distributed`'s layout.
-/// The shared [`ReplicatedTopology`] re-points a shard on failover and
-/// worker reconnect handlers re-resolve the current head through it —
-/// the same routing contract the coordinator's `ServerSupervisor`
-/// drives over TCP.
+/// In-proc chain-replicated PS cluster with elastic membership: shard
+/// `s` starts as physical `2s` (primary) + `2s+1` (replica), mirroring
+/// `run_distributed`'s layout, and can then grow catch-up joiners, lose
+/// whole chains, and re-provision from checkpoints — physical ids are
+/// append-only and never reused. The shared [`ReplicatedTopology`]
+/// re-points a shard on failover and worker reconnect handlers
+/// re-resolve the current head through it — the same routing contract
+/// the coordinator's `ServerSupervisor` drives over TCP.
 struct ReplicatedCluster {
-    /// Physical id -> server state (even = chain head at startup).
-    shareds: Vec<Arc<PsShared>>,
+    /// Physical id -> server state (grows on joins / re-provisions).
+    shareds: Mutex<Vec<Arc<PsShared>>>,
     topology: Arc<RwLock<ReplicatedTopology>>,
     router: Router,
     targets: Vec<Tensor>,
+    /// Zero-initialised parameters, the seed for initial chain members.
+    init: Vec<Tensor>,
+    lr: f32,
+    mode: UpdateMode,
+    barrier_timeout: Duration,
     serve_handles: Mutex<Vec<thread::JoinHandle<()>>>,
-    /// Per shard: the replica-side serve thread draining the primary's
-    /// chain link. Joined during failover — that is the drain-then-
-    /// promote order which guarantees the replica consumed every
-    /// already-forwarded frame before it starts serving workers.
-    chain_handles: Mutex<Vec<Option<thread::JoinHandle<()>>>>,
+    /// Non-head member -> the serve thread draining its up-chain feed.
+    /// Joined during failover — that is the drain-then-promote order
+    /// which guarantees the replica consumed every already-forwarded
+    /// frame before it starts serving workers.
+    feeds: Mutex<BTreeMap<usize, thread::JoinHandle<()>>>,
 }
 
 impl ReplicatedCluster {
@@ -645,51 +654,72 @@ impl ReplicatedCluster {
                 Tensor::from_vec(s, (0..n).map(|_| rng.normal() as f32).collect())
             })
             .collect();
+        let init: Vec<Tensor> = shapes.iter().map(|s| Tensor::zeros(s)).collect();
         let mode = if sync {
             UpdateMode::Sync { expected_workers: n_workers, backup_workers: 0 }
         } else {
             UpdateMode::Async
         };
-        let mut shareds = Vec::new();
-        for s in 0..n_shards {
-            for copy in 0..2 {
-                let mut store = ShardStore::new(Optimizer::Sgd { lr });
-                for &k in router.keys_of(s) {
-                    store.insert(k, Tensor::zeros(&shapes[k as usize]));
-                }
-                let sh = PsShared::new(store, mode);
-                sh.set_barrier_timeout(Duration::from_millis(barrier_timeout_ms));
-                if copy == 1 {
-                    sh.set_role_replica();
-                }
-                shareds.push(sh);
-            }
-        }
         let cluster = Arc::new(ReplicatedCluster {
-            shareds,
+            shareds: Mutex::new(Vec::new()),
             topology: Arc::new(RwLock::new(ReplicatedTopology::new(n_shards, 2))),
             router,
             targets,
+            init,
+            lr,
+            mode,
+            barrier_timeout: Duration::from_millis(barrier_timeout_ms),
             serve_handles: Mutex::new(Vec::new()),
-            chain_handles: Mutex::new((0..n_shards).map(|_| None).collect()),
+            feeds: Mutex::new(BTreeMap::new()),
         });
-        // Wire each primary's chain link to its replica.
+        let seed_params = cluster.init.clone();
         for s in 0..n_shards {
-            let (link, server_end) = InProcTransport::pair();
-            let sh = cluster.shareds[2 * s + 1].clone();
-            let h = thread::spawn(move || serve(Box::new(server_end), sh));
-            cluster.chain_handles.lock().unwrap()[s] = Some(h);
-            cluster.shareds[2 * s].set_replicas(vec![Box::new(link) as Box<dyn Transport>]);
+            let head = cluster.add_member(s, Some(&seed_params), true);
+            let tail = cluster.add_member(s, Some(&seed_params), false);
+            assert_eq!((head, tail), (2 * s, 2 * s + 1));
+            cluster.link(head, tail);
         }
         cluster
     }
 
-    /// Fresh connection to whatever physical node currently heads
-    /// `shard`'s chain.
-    fn connect_primary(&self, shard: usize) -> Box<dyn Transport> {
-        let phys = self.topology.read().unwrap().primary_of(shard);
+    /// Spawn a new physical member of `shard` and return its id.
+    /// `seed = None` leaves the store EMPTY — the catch-up snapshot is
+    /// the only thing allowed to fill a joiner.
+    fn add_member(&self, shard: usize, seed: Option<&[Tensor]>, primary: bool) -> usize {
+        let mut store = ShardStore::new(Optimizer::Sgd { lr: self.lr });
+        if let Some(params) = seed {
+            for &k in self.router.keys_of(shard) {
+                store.insert(k, params[k as usize].clone());
+            }
+        }
+        let sh = PsShared::new(store, self.mode);
+        sh.set_barrier_timeout(self.barrier_timeout);
+        if !primary {
+            sh.set_role_replica();
+        }
+        let mut shareds = self.shareds.lock().unwrap();
+        shareds.push(sh);
+        shareds.len() - 1
+    }
+
+    fn shared_of(&self, phys: usize) -> Arc<PsShared> {
+        self.shareds.lock().unwrap()[phys].clone()
+    }
+
+    /// Wire a chain link `from -> to`: `to` gets a feed-drain serve
+    /// thread and `from` forwards every admitted frame down it.
+    fn link(&self, from: usize, to: usize) {
+        let (link, server_end) = InProcTransport::pair();
+        let sh = self.shared_of(to);
+        let h = thread::spawn(move || serve(Box::new(server_end), sh));
+        self.feeds.lock().unwrap().insert(to, h);
+        self.shared_of(from).set_replicas(vec![Box::new(link) as Box<dyn Transport>]);
+    }
+
+    /// Fresh connection to physical member `phys`.
+    fn connect_phys(&self, phys: usize) -> Box<dyn Transport> {
         let (client_end, server_end) = InProcTransport::pair();
-        let sh = self.shareds[phys].clone();
+        let sh = self.shared_of(phys);
         self.serve_handles
             .lock()
             .unwrap()
@@ -697,47 +727,153 @@ impl ReplicatedCluster {
         Box::new(client_end)
     }
 
-    /// Crash-and-fail-over `shard`'s primary, the way the coordinator's
-    /// lease supervisor does over TCP: halt the head (its connections
-    /// sever without replies), sever its chain link and wait for the
-    /// replica to drain every already-forwarded frame (a dead TCP
-    /// peer's socket EOF gives the same drain point), promote the
-    /// replica over the wire at the bumped epoch, and only then
-    /// re-point the topology so reconnecting clients resolve the
-    /// promoted head.
-    fn fail_over(&self, shard: usize) {
-        let old = self.topology.read().unwrap().primary_of(shard);
-        self.shareds[old].halt();
-        self.shareds[old].set_replicas(Vec::new());
-        if let Some(h) = self.chain_handles.lock().unwrap()[shard].take() {
-            h.join().unwrap();
-        }
-        let epoch = self.topology.read().unwrap().epoch() + 1;
-        let new_phys = 2 * shard + 1;
-        let (mut c, server_end) = InProcTransport::pair();
-        let sh = self.shareds[new_phys].clone();
-        let h = thread::spawn(move || serve(Box::new(server_end), sh));
+    /// Fresh connection to whatever physical node currently heads
+    /// `shard`'s chain.
+    fn connect_primary(&self, shard: usize) -> Box<dyn Transport> {
+        self.connect_phys(self.topology.read().unwrap().primary_of(shard))
+    }
+
+    /// Promote member `phys` over the wire at `epoch` and wait for its
+    /// ack (which the member defers until its up-chain feed drains).
+    fn promote_wire(&self, phys: usize, epoch: u64) {
+        let mut c = self.connect_phys(phys);
         c.send(&Message::Promote { epoch }).unwrap();
         match c.recv().unwrap() {
             Message::PromoteAck { epoch: e, .. } => assert_eq!(e, epoch),
             m => panic!("unexpected promote reply {m:?}"),
         }
-        drop(c);
-        h.join().unwrap();
+    }
+
+    /// (pulls, pushes, updates) straight off one member's counters.
+    fn stats_of(&self, phys: usize) -> (u64, u64, u64) {
+        let mut c = self.connect_phys(phys);
+        c.send(&Message::Stats).unwrap();
+        match c.recv().unwrap() {
+            Message::StatsReply { pulls, pushes, updates } => (pulls, pushes, updates),
+            m => panic!("unexpected stats reply {m:?}"),
+        }
+    }
+
+    /// Live catch-up join (anti-entropy resync / `--add-server`): a
+    /// fresh EMPTY member streams the current tail's striped snapshot
+    /// over a connection that then stays attached as the chain's new
+    /// replication link, so frames forwarded mid-transfer queue behind
+    /// the snapshot and replay in order. Returns the joiner's id.
+    fn grow(&self, shard: usize) -> usize {
+        let tail = *self.topology.read().unwrap().chain_of(shard).last().unwrap();
+        let phys = self.add_member(shard, None, false);
+        let (joiner_conn, tail_end) = InProcTransport::pair();
+        let tail_sh = self.shared_of(tail);
+        self.serve_handles
+            .lock()
+            .unwrap()
+            .push(thread::spawn(move || serve(Box::new(tail_end), tail_sh)));
+        let joiner_sh = self.shared_of(phys);
+        let feed = catch_up_from_tail(Box::new(joiner_conn), &joiner_sh).unwrap();
+        let h = thread::spawn(move || serve(feed, joiner_sh));
+        self.feeds.lock().unwrap().insert(phys, h);
+        self.topology.write().unwrap().extend_chain(shard, phys).unwrap();
+        phys
+    }
+
+    /// Crash `shard`'s tail replica (mid-chain decay): halt it, sever
+    /// its predecessor's link, drain its feed thread, and drop it from
+    /// the topology — the supervisor's replica-lost path minus the
+    /// auto-resync, which tests drive explicitly via [`Self::grow`].
+    fn kill_replica(&self, shard: usize) {
+        let (pred, tail) = {
+            let topo = self.topology.read().unwrap();
+            let chain = topo.chain_of(shard);
+            (chain[chain.len() - 2], chain[chain.len() - 1])
+        };
+        self.shared_of(tail).halt();
+        self.shared_of(pred).set_replicas(Vec::new());
+        if let Some(h) = self.feeds.lock().unwrap().remove(&tail) {
+            h.join().unwrap();
+        }
+        self.topology.write().unwrap().remove(shard, tail).unwrap();
+    }
+
+    /// Lose every copy of `shard` at once (machine-room failure). The
+    /// topology is left pointing at the dead chain, exactly as a real
+    /// crash would — [`Self::reprovision`] repairs it.
+    fn kill_chain(&self, shard: usize) {
+        let chain: Vec<usize> = self.topology.read().unwrap().chain_of(shard).to_vec();
+        for &p in &chain {
+            self.shared_of(p).halt();
+            self.shared_of(p).set_replicas(Vec::new());
+        }
+        let mut feeds = self.feeds.lock().unwrap();
+        for &p in &chain {
+            if let Some(h) = feeds.remove(&p) {
+                let _ = h.join();
+            }
+        }
+    }
+
+    /// Re-provision a dead shard from checkpointed parameters: a fresh
+    /// single-member chain seeded with the snapshot, fenced at the
+    /// bumped routing epoch — the coordinator's chain-lost path
+    /// in-proc. Returns the new member's id.
+    fn reprovision(&self, shard: usize, params: &[Tensor]) -> usize {
+        let phys = self.add_member(shard, Some(params), true);
+        let epoch = {
+            let mut topo = self.topology.write().unwrap();
+            topo.replace_chain(shard, vec![phys]).unwrap();
+            topo.epoch()
+        };
+        self.promote_wire(phys, epoch);
+        phys
+    }
+
+    /// Crash-and-fail-over `shard`'s primary, the way the coordinator's
+    /// lease supervisor does over TCP: halt the head (its connections
+    /// sever without replies), sever its chain link and wait for the
+    /// next member to drain every already-forwarded frame (a dead TCP
+    /// peer's socket EOF gives the same drain point), promote it over
+    /// the wire at the bumped epoch, and only then re-point the
+    /// topology so reconnecting clients resolve the promoted head.
+    fn fail_over(&self, shard: usize) {
+        let (old, next) = {
+            let topo = self.topology.read().unwrap();
+            let chain = topo.chain_of(shard);
+            (chain[0], chain[1])
+        };
+        self.shared_of(old).halt();
+        self.shared_of(old).set_replicas(Vec::new());
+        if let Some(h) = self.feeds.lock().unwrap().remove(&next) {
+            h.join().unwrap();
+        }
+        let epoch = self.topology.read().unwrap().epoch() + 1;
+        self.promote_wire(next, epoch);
         let promoted = self.topology.write().unwrap().promote(shard).unwrap();
-        assert_eq!(promoted, new_phys);
+        assert_eq!(promoted, next);
+    }
+
+    /// Depose `shard`'s primary WITHOUT halting it — the gray failure:
+    /// a falsely-suspected head that stays up and keeps serving anyone
+    /// still connected to it. The next member is promoted at the
+    /// bumped epoch (its ack waits out the bounded pre-takeover drain,
+    /// since the live head's feed never EOFs) and the topology
+    /// re-pointed; the old head is left running at the stale epoch.
+    fn gray_promote(&self, shard: usize) {
+        let next = self.topology.read().unwrap().chain_of(shard)[1];
+        let epoch = self.topology.read().unwrap().epoch() + 1;
+        self.promote_wire(next, epoch);
+        let promoted = self.topology.write().unwrap().promote(shard).unwrap();
+        assert_eq!(promoted, next);
     }
 
     fn join_serve_threads(&self) {
-        // Detach surviving chain links so replica-side serve threads
-        // see EOF, then join everything.
-        for sh in &self.shareds {
+        // Detach surviving chain links so feed-drain serve threads see
+        // EOF, then join everything.
+        for sh in self.shareds.lock().unwrap().iter() {
             sh.set_replicas(Vec::new());
         }
-        for slot in self.chain_handles.lock().unwrap().iter_mut() {
-            if let Some(h) = slot.take() {
-                let _ = h.join();
-            }
+        let feeds: Vec<_> =
+            std::mem::take(&mut *self.feeds.lock().unwrap()).into_values().collect();
+        for h in feeds {
+            let _ = h.join();
         }
         for h in self.serve_handles.lock().unwrap().drain(..) {
             let _ = h.join();
@@ -761,7 +897,7 @@ fn make_replicated_client(
     let cl = Arc::clone(cluster);
     client.set_reconnect(Box::new(move |s| loop {
         let phys = cl.topology.read().unwrap().primary_of(s);
-        if cl.shareds[phys].stopped() {
+        if cl.shared_of(phys).stopped() {
             thread::sleep(Duration::from_millis(1));
             continue;
         }
@@ -886,6 +1022,194 @@ fn promoted_replica_serves_reads_and_writes_after_kill() {
         assert_eq!(topo.primary_of(0), 1);
         assert_eq!(topo.chain_of(1), &[2, 3]);
         drop(topo);
+        drop(client);
+        cluster.join_serve_threads();
+    });
+}
+
+/// Tentpole acceptance: a chain replica dies mid-run, anti-entropy
+/// resync restores R via a live catch-up join from the surviving tail,
+/// and then the PRIMARY is killed — the catch-up joiner takes over and
+/// the final parameters are byte-identical to a fault-free run, for
+/// every codec. A joiner whose striped snapshot, dedup-watermark
+/// transfer, or buffered-forward replay dropped or double-applied one
+/// frame would diverge here.
+#[test]
+fn replica_death_resync_then_primary_kill_is_byte_identical() {
+    let seed = chaos_seed();
+    with_watchdog(300, "resync byte-identity", move || {
+        for codec in [
+            CodecKind::None,
+            CodecKind::TopK { fraction: 0.5 },
+            CodecKind::Quant8,
+        ] {
+            let steps = 30usize;
+            let (clean, _, epoch0) = run_replicated_scenario(seed, false, codec, steps, None);
+            assert_eq!(epoch0, 0, "{codec:?}: clean run changed topology");
+            let cluster = ReplicatedCluster::new(seed, 2, 1, false, 0.1, 500);
+            let targets = cluster.targets.clone();
+            let mut client = make_replicated_client(&cluster, 0, codec, 2000);
+            run_quad_worker(&mut client, &targets, 0, 10, false, None).unwrap();
+            // Mid-chain decay: shard 0 drops to a single copy...
+            cluster.kill_replica(0);
+            // ...and resyncs back to R = 2 via a live catch-up join.
+            let joiner = cluster.grow(0);
+            run_quad_worker(&mut client, &targets, 10, 20, false, None).unwrap();
+            // Now the primary dies; the joiner is the only copy left.
+            cluster.fail_over(0);
+            run_quad_worker(&mut client, &targets, 20, steps, false, None).unwrap();
+            {
+                let topo = cluster.topology.read().unwrap();
+                assert_eq!(topo.primary_of(0), joiner, "{codec:?}: joiner not promoted");
+                assert_eq!(topo.chain_of(0), &[joiner]);
+                assert_eq!(topo.epoch(), 3, "{codec:?}: remove + extend + promote");
+            }
+            let finals = {
+                let mut control = make_replicated_client(&cluster, u32::MAX, CodecKind::None, 0);
+                control.pull_all().unwrap()
+            };
+            drop(client);
+            cluster.join_serve_threads();
+            assert_bitwise_eq(&clean, &finals, "resync + failover vs clean");
+        }
+    });
+}
+
+/// `--add-server` semantics: a joiner attaches via live catch-up while
+/// training continues, and after two failovers walk the chain down to
+/// it, the parameters it serves are byte-identical to a run that never
+/// scaled — the joiner is a real chain member, not a best-effort copy.
+#[test]
+fn add_server_joiner_is_byte_identical_after_double_failover() {
+    let seed = chaos_seed();
+    with_watchdog(300, "add-server byte-identity", move || {
+        for codec in [
+            CodecKind::None,
+            CodecKind::TopK { fraction: 0.5 },
+            CodecKind::Quant8,
+        ] {
+            let steps = 30usize;
+            let (clean, _, _) = run_replicated_scenario(seed, false, codec, steps, None);
+            let cluster = ReplicatedCluster::new(seed, 2, 1, false, 0.1, 500);
+            let targets = cluster.targets.clone();
+            let mut client = make_replicated_client(&cluster, 0, codec, 2000);
+            run_quad_worker(&mut client, &targets, 0, 5, false, None).unwrap();
+            // Scale out: shard 0 grows a third copy mid-run.
+            let joiner = cluster.grow(0);
+            assert_eq!(cluster.topology.read().unwrap().chain_of(0), &[0, 1, joiner]);
+            run_quad_worker(&mut client, &targets, 5, 15, false, None).unwrap();
+            // Two failovers leave the joiner as the shard's head.
+            cluster.fail_over(0);
+            run_quad_worker(&mut client, &targets, 15, 25, false, None).unwrap();
+            cluster.fail_over(0);
+            run_quad_worker(&mut client, &targets, 25, steps, false, None).unwrap();
+            assert_eq!(cluster.topology.read().unwrap().primary_of(0), joiner);
+            let finals = {
+                let mut control = make_replicated_client(&cluster, u32::MAX, CodecKind::None, 0);
+                control.pull_all().unwrap()
+            };
+            drop(client);
+            cluster.join_serve_threads();
+            assert_bitwise_eq(&clean, &finals, "scale-out vs static");
+        }
+    });
+}
+
+/// Whole-chain loss: every copy of shard 0 dies at once. The shard is
+/// re-provisioned from the last checkpoint (here: params pulled just
+/// before the crash), serves the checkpointed bytes verbatim at a
+/// bumped routing epoch, and training rides through to convergence.
+#[test]
+fn whole_chain_loss_reprovisions_from_checkpoint() {
+    let seed = chaos_seed();
+    with_watchdog(120, "chain-loss re-provision", move || {
+        let cluster = ReplicatedCluster::new(seed, 2, 1, false, 0.1, 500);
+        let targets = cluster.targets.clone();
+        let mut client = make_replicated_client(&cluster, 0, CodecKind::None, 2000);
+        run_quad_worker(&mut client, &targets, 0, 10, false, None).unwrap();
+        // Checkpoint the authoritative parameters, then lose the chain.
+        let ck = {
+            let mut control = make_replicated_client(&cluster, u32::MAX, CodecKind::None, 0);
+            control.pull_all().unwrap()
+        };
+        cluster.kill_chain(0);
+        let phys = cluster.reprovision(0, &ck);
+        // The restored shard serves the checkpointed bytes verbatim.
+        let restored = {
+            let mut control = make_replicated_client(&cluster, u32::MAX, CodecKind::None, 0);
+            control.pull_all().unwrap()
+        };
+        assert_bitwise_eq(&ck, &restored, "restored vs checkpoint");
+        // The same client rides its reconnect handler onto the
+        // re-provisioned chain and keeps training.
+        run_quad_worker(&mut client, &targets, 10, 40, false, None).unwrap();
+        let finals = client.pull_all().unwrap();
+        {
+            let topo = cluster.topology.read().unwrap();
+            assert_eq!(topo.chain_of(0), &[phys]);
+            assert_eq!(topo.epoch(), 1);
+        }
+        drop(client);
+        cluster.join_serve_threads();
+        let d = l2_distance(&finals, &targets);
+        assert!(d < 0.5, "re-provisioned run did not converge: {d}");
+    });
+}
+
+/// Satellite acceptance: epoch fencing end-to-end. A gray failure
+/// deposes shard 0's primary WITHOUT killing it — the old head keeps
+/// running and never observes the failover. A raw op stamped with the
+/// dead routing epoch is provably rejected by the promoted head; the
+/// epoch-stamped client gets fenced off the deposed head, re-resolves,
+/// and keeps training; and the deposed head accepts ZERO
+/// post-promotion writes.
+#[test]
+fn epoch_fence_blocks_gray_failed_deposed_primary() {
+    let seed = chaos_seed();
+    with_watchdog(120, "epoch fencing", move || {
+        let cluster = ReplicatedCluster::new(seed, 2, 1, false, 0.1, 500);
+        let targets = cluster.targets.clone();
+        let routing_epoch = Arc::new(AtomicU64::new(0));
+        let mut client = make_replicated_client(&cluster, 0, CodecKind::None, 2000);
+        client.set_epoch_source(routing_epoch.clone());
+        run_quad_worker(&mut client, &targets, 0, 5, false, None).unwrap();
+
+        let old_head = cluster.topology.read().unwrap().primary_of(0);
+        let updates_before = cluster.stats_of(old_head).2;
+        assert!(updates_before > 0, "no updates admitted before the failover");
+        // Gray failure: the replica is promoted but the old head stays
+        // up at the stale epoch.
+        cluster.gray_promote(0);
+        let new_head = cluster.topology.read().unwrap().primary_of(0);
+        assert_ne!(new_head, old_head);
+        routing_epoch.store(1, Ordering::SeqCst);
+
+        // An op still stamped with the dead routing epoch is rejected
+        // by the promoted head before any state is touched.
+        let mut raw = cluster.connect_phys(new_head);
+        raw.send(&Message::Pull { worker: 7, epoch: 0, keys: vec![0] }).unwrap();
+        match raw.recv().unwrap() {
+            Message::Error { what } => assert!(
+                what.contains(STALE_EPOCH),
+                "expected stale-epoch rejection, got {what:?}"
+            ),
+            m => panic!("stale-stamped pull was served: {m:?}"),
+        }
+        drop(raw);
+
+        // The stamped client's next op hits the still-alive deposed
+        // head, gets fenced, re-resolves through the topology, and
+        // rides the promoted head onward.
+        run_quad_worker(&mut client, &targets, 5, 20, false, None).unwrap();
+        let finals = client.pull_all().unwrap();
+        assert!(finals.iter().all(|t| t.data().iter().all(|x| x.is_finite())));
+        // The gray head admitted no write after its deposal: its update
+        // counter froze at the moment of promotion.
+        assert_eq!(
+            cluster.stats_of(old_head).2,
+            updates_before,
+            "deposed primary admitted a post-promotion write"
+        );
         drop(client);
         cluster.join_serve_threads();
     });

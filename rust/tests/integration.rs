@@ -235,7 +235,7 @@ fn striped_stress(n_workers: usize, n_keys: usize, steps: usize, elems: usize, s
         let keys = all_keys.clone();
         puller_handles.push(std::thread::spawn(move || {
             while !stop.load(Ordering::Relaxed) {
-                t.send(&Message::Pull { worker: 99, keys: keys.clone() }).unwrap();
+                t.send(&Message::Pull { worker: 99, epoch: u64::MAX, keys: keys.clone() }).unwrap();
                 match t.recv().unwrap() {
                     Message::PullReply { entries, .. } => {
                         for (k, tensor) in entries {
@@ -282,7 +282,7 @@ fn striped_stress(n_workers: usize, n_keys: usize, steps: usize, elems: usize, s
 
     // Final state via one more connection.
     let mut t: Box<dyn Transport> = Box::new(spawn_conn(&shared));
-    t.send(&Message::Pull { worker: 99, keys: all_keys }).unwrap();
+    t.send(&Message::Pull { worker: 99, epoch: u64::MAX, keys: all_keys }).unwrap();
     let finals = match t.recv().unwrap() {
         Message::PullReply { mut entries, .. } => {
             entries.sort_by_key(|(k, _)| *k);
@@ -366,10 +366,10 @@ fn server_rejects_malformed_use() {
     store.insert(0, Tensor::from_vec(&[2], vec![1.0, 2.0]));
     let mut srv = PsServerHandle::spawn_tcp("127.0.0.1:0", store, UpdateMode::Async).unwrap();
     let mut c = connect(srv.addr).unwrap();
-    c.send(&Message::Barrier { worker: 0, step: 0 }).unwrap();
+    c.send(&Message::Barrier { worker: 0, step: 0, epoch: u64::MAX }).unwrap();
     assert!(matches!(c.recv().unwrap(), Message::Error { .. }));
     // Server still serves afterwards:
-    c.send(&Message::Pull { worker: 0, keys: vec![0] }).unwrap();
+    c.send(&Message::Pull { worker: 0, epoch: u64::MAX, keys: vec![0] }).unwrap();
     assert!(matches!(c.recv().unwrap(), Message::PullReply { .. }));
     srv.shutdown();
 }
