@@ -3,17 +3,28 @@
 
 Usage: bench_trend.py <baseline.json> <current.json>
 
-Every result row is keyed by (transport, mode, codec, workers, stripes);
-a row whose ops_per_s falls below 75% of the baseline's matching row is
-a regression. Rows present in only one file (new or retired bench
-columns) are reported but never fail the build, so the bench can evolve
-without chicken-and-egg gating.
+Every result row is keyed by (transport, mode, codec, pull_codec,
+workers, stripes); a row whose ops_per_s falls below 75% of the
+baseline's matching row is a regression. Rows present in only one file
+(new or retired bench columns) are reported but never fail the build,
+so the bench can evolve without chicken-and-egg gating. Older baselines
+without the pull_codec axis default it to "none", so their dense rows
+keep matching.
+
+Beyond row-vs-row trends, the current file's summary ratios are gated
+when present (absent keys are skipped, so old JSONs never fail):
+* pull_wire_ratio_dense_over_quant8 and ..._quant8delta must be >= 3
+  (compressed pulls must cut pull-direction bytes at least 3x vs the
+  dense broadcast).
+* applyserve_pull_ops_per_s must be > 0 (pulls keep flowing while the
+  batched optimizer apply runs in its freeze/thaw window).
 """
 
 import json
 import sys
 
 THRESHOLD = 0.75  # fail below 75% of baseline throughput (>25% drop)
+PULL_RATIO_FLOOR = 3.0  # compressed pulls must beat dense by >= 3x
 
 
 def row_key(row):
@@ -21,9 +32,34 @@ def row_key(row):
         row["transport"],
         row["mode"],
         row["codec"],
+        row.get("pull_codec", "none"),
         int(row["workers"]),
         int(row["stripes"]),
     )
+
+
+def check_summary_gates(current):
+    """Presence-guarded gates on the current run's summary metrics."""
+    failures = []
+    for key in (
+        "pull_wire_ratio_dense_over_quant8",
+        "pull_wire_ratio_dense_over_quant8delta",
+    ):
+        if key not in current:
+            continue
+        ratio = float(current[key])
+        verdict = "ok      " if ratio >= PULL_RATIO_FLOOR else "FAIL    "
+        print(f"{verdict} {key}: {ratio:.2f}x (floor {PULL_RATIO_FLOOR:.0f}x)")
+        if ratio < PULL_RATIO_FLOOR:
+            failures.append(f"{key} = {ratio:.2f}x < {PULL_RATIO_FLOOR:.0f}x")
+    key = "applyserve_pull_ops_per_s"
+    if key in current:
+        ops = float(current[key])
+        verdict = "ok      " if ops > 0 else "FAIL    "
+        print(f"{verdict} {key}: {ops:.1f}")
+        if ops <= 0:
+            failures.append(f"{key} = {ops:.1f} (pulls stalled during apply)")
+    return failures
 
 
 def main(baseline_path, current_path):
@@ -57,12 +93,22 @@ def main(baseline_path, current_path):
     for key in old_rows:
         print(f"RETIRED  {'/'.join(str(p) for p in key)}: gone from current bench")
 
+    gate_failures = check_summary_gates(current)
+
     print(f"\ncompared {compared} columns against baseline")
+    failed = False
     if regressions:
         print(f"{len(regressions)} column(s) regressed more than "
               f"{(1 - THRESHOLD) * 100:.0f}%:")
         for tag, ratio in regressions:
             print(f"  {tag}: {ratio:.2f}x of baseline")
+        failed = True
+    if gate_failures:
+        print(f"{len(gate_failures)} summary gate(s) failed:")
+        for msg in gate_failures:
+            print(f"  {msg}")
+        failed = True
+    if failed:
         return 1
     print("bench trend OK")
     return 0

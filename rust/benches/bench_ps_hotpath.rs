@@ -2,27 +2,38 @@
 //! parameter server, async and sync, over in-proc channels and real
 //! loopback TCP, at 1/2/4/8 workers.
 //!
-//! Two series land in the table and `BENCH_ps_hotpath.json`:
+//! Series landing in the table and `BENCH_ps_hotpath.json`:
 //! * The in-proc async/sync matrix also runs with a single stripe —
 //!   which reproduces the old global-lock server — so the striped-store
 //!   speedup over that baseline is recorded at each worker count.
 //! * A gradient-codec series (none vs topk vs quant8) records push
 //!   throughput plus the measured bytes-on-wire per run (`pushMB`,
 //!   from `PsClient::push_wire_bytes`), the Lemma 3.2 traffic saver.
+//! * A pull-codec series (none vs quant8 vs quant8-delta, plus one
+//!   both-directions row) records the same for the pull direction
+//!   (`pullMB`, from `PsClient::pull_wire_bytes`) — the dense-broadcast
+//!   `S_p` half of Lemma 3.2.
+//! * An apply-while-serving series (`mode=applyserve`): pull-only
+//!   workers race a background thread doing batched optimizer applies
+//!   through the double-buffered freeze/thaw window, demonstrating
+//!   nonzero pull throughput during (parallel) apply.
 //!
-//! The `MB/s` column stays *logical* (dense-equivalent gradient bytes
-//! moved per second) so rows are comparable across codecs; `pushMB` is
-//! the real encoded traffic. The JSON lands at the repo root so later
-//! PRs can track the trajectory. Set `DTLSDA_BENCH_SMOKE=1` (the CI
-//! smoke step) for a reduced-iteration run with the same schema.
+//! The `MB/s` column stays *logical* (dense-equivalent bytes moved per
+//! second) so rows are comparable across codecs; `pushMB`/`pullMB` are
+//! the real encoded traffic per direction. The JSON lands at the repo
+//! root so later PRs can track the trajectory. Set
+//! `DTLSDA_BENCH_SMOKE=1` (the CI smoke step) for a reduced-iteration
+//! run with the same schema.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::thread;
 use std::time::Instant;
 
 use dtlsda::net::transport::{connect, InProcTransport, Transport};
 use dtlsda::ps::client::PsClient;
-use dtlsda::ps::compress::CodecKind;
+use dtlsda::ps::compress::{CodecKind, PullCodec};
 use dtlsda::ps::router::Router;
 use dtlsda::ps::server::{serve, PsServerHandle, PsShared, UpdateMode};
 use dtlsda::ps::shard::{Optimizer, ShardStore, DEFAULT_STRIPES};
@@ -33,38 +44,65 @@ use dtlsda::util::json::Json;
 const N_KEYS: usize = 16;
 const ELEMS: usize = 2048; // 8 KB per tensor, 128 KB per direction per round
 
+/// Tensor size for the apply-while-serving series: 16 x 8192 = 131072
+/// elements per batched apply, above `PARALLEL_APPLY_MIN_NUMEL`
+/// (1 << 16), so the scoped-thread parallel apply path engages when the
+/// `parallel-apply` feature is compiled in.
+const APPLY_ELEMS: usize = 8192;
+
+/// Codec pair for one run: push direction + pull direction, with the
+/// short names that land in the table/JSON.
+#[derive(Debug, Clone, Copy)]
+struct Codecs {
+    push: CodecKind,
+    push_name: &'static str,
+    pull: PullCodec,
+    pull_name: &'static str,
+}
+
+const DENSE: Codecs = Codecs {
+    push: CodecKind::None,
+    push_name: "none",
+    pull: PullCodec::None,
+    pull_name: "none",
+};
+
 #[derive(Debug, Clone)]
 struct RunResult {
     transport: &'static str,
     mode: &'static str,
     codec: &'static str,
+    pull_codec: &'static str,
     workers: usize,
     stripes: usize,
     wall_s: f64,
-    /// Aggregate pull+push operations per second across all workers.
+    /// Aggregate operations per second across all workers (pull+push
+    /// per round; pulls only in `applyserve` mode).
     ops_per_s: f64,
     /// Logical (dense-equivalent) gradient+parameter MB per second.
     mb_per_s: f64,
     /// Measured encoded push-body MB over the whole run (bytes on wire).
     push_mb: f64,
+    /// Measured pull-reply body MB over the whole run (bytes on wire).
+    pull_mb: f64,
 }
 
-fn seeded_store() -> ShardStore {
+fn seeded_store(elems: usize) -> ShardStore {
     let mut store = ShardStore::new(Optimizer::Sgd { lr: 1e-3 });
     for k in 0..N_KEYS {
-        store.insert(k as u32, Tensor::zeros(&[ELEMS]));
+        store.insert(k as u32, Tensor::zeros(&[elems]));
     }
     store
 }
 
-fn router() -> Router {
-    let sizes = [ELEMS * 4; N_KEYS];
+fn router(elems: usize) -> Router {
+    let sizes = [elems * 4; N_KEYS];
     Router::new(&sizes, 1)
 }
 
 /// One worker's measured loop: pull_all + push (+ barrier in sync mode).
-/// Returns the encoded push-body bytes this worker put on the wire.
-fn worker_loop(mut client: PsClient, rounds: usize, sync: bool) -> u64 {
+/// Returns the per-direction encoded body bytes this worker moved.
+fn worker_loop(mut client: PsClient, rounds: usize, sync: bool) -> (u64, u64) {
     let grads: Vec<Tensor> =
         (0..N_KEYS).map(|_| Tensor::from_vec(&[ELEMS], vec![1e-4; ELEMS])).collect();
     let mut params = Vec::new();
@@ -75,32 +113,40 @@ fn worker_loop(mut client: PsClient, rounds: usize, sync: bool) -> u64 {
             client.barrier(step as u64).unwrap();
         }
     }
-    client.push_wire_bytes()
+    (client.push_wire_bytes(), client.pull_wire_bytes())
+}
+
+fn make_client(w: usize, t: Box<dyn Transport>, rt: Router, codecs: Codecs) -> PsClient {
+    let mut client = PsClient::with_codec(w as u32, vec![t], rt, codecs.push);
+    client.set_pull_codec(codecs.pull);
+    client
 }
 
 #[allow(clippy::too_many_arguments)]
 fn result(
     transport: &'static str,
     mode: &'static str,
-    codec: &'static str,
+    codecs: Codecs,
     workers: usize,
     stripes: usize,
     rounds: usize,
     wall_s: f64,
-    push_wire_bytes: u64,
+    wire: (u64, u64),
 ) -> RunResult {
     let ops = (workers * rounds * 2) as f64;
     let bytes = (workers * rounds * 2 * N_KEYS * ELEMS * 4) as f64;
     RunResult {
         transport,
         mode,
-        codec,
+        codec: codecs.push_name,
+        pull_codec: codecs.pull_name,
         workers,
         stripes,
         wall_s,
         ops_per_s: ops / wall_s,
         mb_per_s: bytes / 1e6 / wall_s,
-        push_mb: push_wire_bytes as f64 / 1e6,
+        push_mb: wire.0 as f64 / 1e6,
+        pull_mb: wire.1 as f64 / 1e6,
     }
 }
 
@@ -108,8 +154,7 @@ fn run_inproc(
     workers: usize,
     sync: bool,
     stripes: usize,
-    codec: CodecKind,
-    cname: &'static str,
+    codecs: Codecs,
     rounds: usize,
 ) -> RunResult {
     let mode = if sync {
@@ -117,8 +162,8 @@ fn run_inproc(
     } else {
         UpdateMode::Async
     };
-    let shared = PsShared::with_stripes(seeded_store(), mode, stripes);
-    let rt = router();
+    let shared = PsShared::with_stripes(seeded_store(ELEMS), mode, stripes);
+    let rt = router(ELEMS);
 
     let mut serve_handles = Vec::new();
     let mut worker_handles = Vec::new();
@@ -129,18 +174,15 @@ fn run_inproc(
         serve_handles.push(thread::spawn(move || serve(Box::new(server_end), sh)));
         let rt = rt.clone();
         worker_handles.push(thread::spawn(move || {
-            let client = PsClient::with_codec(
-                w as u32,
-                vec![Box::new(client_end) as Box<dyn Transport>],
-                rt,
-                codec,
-            );
+            let client = make_client(w, Box::new(client_end), rt, codecs);
             worker_loop(client, rounds, sync)
         }));
     }
-    let mut wire_bytes = 0u64;
+    let mut wire = (0u64, 0u64);
     for h in worker_handles {
-        wire_bytes += h.join().unwrap();
+        let (p, q) = h.join().unwrap();
+        wire.0 += p;
+        wire.1 += q;
     }
     let wall_s = t0.elapsed().as_secs_f64();
     for h in serve_handles {
@@ -149,24 +191,24 @@ fn run_inproc(
     result(
         "inproc",
         if sync { "sync" } else { "async" },
-        cname,
+        codecs,
         workers,
         stripes,
         rounds,
         wall_s,
-        wire_bytes,
+        wire,
     )
 }
 
-fn run_tcp(workers: usize, sync: bool, codec: CodecKind, cname: &'static str, rounds: usize) -> RunResult {
+fn run_tcp(workers: usize, sync: bool, codecs: Codecs, rounds: usize) -> RunResult {
     let mode = if sync {
         UpdateMode::Sync { expected_workers: workers, backup_workers: 0 }
     } else {
         UpdateMode::Async
     };
-    let mut srv = PsServerHandle::spawn_tcp("127.0.0.1:0", seeded_store(), mode).unwrap();
+    let mut srv = PsServerHandle::spawn_tcp("127.0.0.1:0", seeded_store(ELEMS), mode).unwrap();
     let addr = srv.addr;
-    let rt = router();
+    let rt = router(ELEMS);
 
     let mut worker_handles = Vec::new();
     let t0 = Instant::now();
@@ -174,31 +216,110 @@ fn run_tcp(workers: usize, sync: bool, codec: CodecKind, cname: &'static str, ro
         let rt = rt.clone();
         worker_handles.push(thread::spawn(move || {
             let t = connect(addr).unwrap();
-            let client = PsClient::with_codec(
-                w as u32,
-                vec![Box::new(t) as Box<dyn Transport>],
-                rt,
-                codec,
-            );
+            let client = make_client(w, Box::new(t), rt, codecs);
             worker_loop(client, rounds, sync)
         }));
     }
-    let mut wire_bytes = 0u64;
+    let mut wire = (0u64, 0u64);
     for h in worker_handles {
-        wire_bytes += h.join().unwrap();
+        let (p, q) = h.join().unwrap();
+        wire.0 += p;
+        wire.1 += q;
     }
     let wall_s = t0.elapsed().as_secs_f64();
     srv.shutdown();
     result(
         "tcp",
         if sync { "sync" } else { "async" },
-        cname,
+        codecs,
         workers,
         DEFAULT_STRIPES,
         rounds,
         wall_s,
-        wire_bytes,
+        wire,
     )
+}
+
+/// Apply-while-serving: pull-only workers stream parameters while a
+/// background thread hammers `apply_mean_batch` — every batch brackets
+/// its (parallel) apply in a freeze/thaw window, so pulls read the
+/// published snapshot instead of contending with the write locks. The
+/// row's ops/s are pure pull throughput measured *during* the applies.
+fn run_apply_serve(workers: usize, codecs: Codecs, rounds: usize) -> RunResult {
+    let shared =
+        PsShared::with_stripes(seeded_store(APPLY_ELEMS), UpdateMode::Async, DEFAULT_STRIPES);
+    let rt = router(APPLY_ELEMS);
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let applier = {
+        let sh = shared.clone();
+        let stop = stop.clone();
+        thread::spawn(move || {
+            let mut applies = 0u64;
+            // do-while: at least one batched apply overlaps the pulls
+            // even if this thread is scheduled late.
+            loop {
+                let batch: Vec<(u32, Tensor, u32)> = (0..N_KEYS)
+                    .map(|k| {
+                        let g = Tensor::from_vec(&[APPLY_ELEMS], vec![1e-4; APPLY_ELEMS]);
+                        (k as u32, g, 1)
+                    })
+                    .collect();
+                let (applied, errors) = sh.store.apply_mean_batch(batch);
+                assert!(errors.is_empty(), "{errors:?}");
+                applies += applied;
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+            }
+            applies
+        })
+    };
+
+    let mut serve_handles = Vec::new();
+    let mut worker_handles = Vec::new();
+    let t0 = Instant::now();
+    for w in 0..workers {
+        let (client_end, server_end) = InProcTransport::pair();
+        let sh = shared.clone();
+        serve_handles.push(thread::spawn(move || serve(Box::new(server_end), sh)));
+        let rt = rt.clone();
+        worker_handles.push(thread::spawn(move || {
+            let mut client = make_client(w, Box::new(client_end), rt, codecs);
+            let mut params = Vec::new();
+            for _ in 0..rounds {
+                client.pull_all_into(&mut params).unwrap();
+            }
+            client.pull_wire_bytes()
+        }));
+    }
+    let mut pull_bytes = 0u64;
+    for h in worker_handles {
+        pull_bytes += h.join().unwrap();
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    stop.store(true, Ordering::Relaxed);
+    let applies = applier.join().unwrap();
+    assert!(applies > 0, "applier made no progress while pulls ran");
+    for h in serve_handles {
+        h.join().unwrap();
+    }
+
+    let ops = (workers * rounds) as f64;
+    let bytes = (workers * rounds * N_KEYS * APPLY_ELEMS * 4) as f64;
+    RunResult {
+        transport: "inproc",
+        mode: "applyserve",
+        codec: codecs.push_name,
+        pull_codec: codecs.pull_name,
+        workers,
+        stripes: DEFAULT_STRIPES,
+        wall_s,
+        ops_per_s: ops / wall_s,
+        mb_per_s: bytes / 1e6 / wall_s,
+        push_mb: 0.0,
+        pull_mb: pull_bytes as f64 / 1e6,
+    }
 }
 
 fn main() {
@@ -219,52 +340,76 @@ fn main() {
     // In-proc: striped vs single-stripe (global-lock baseline), async+sync.
     for &sync in &[false, true] {
         for &w in worker_counts {
-            results.push(run_inproc(w, sync, 1, CodecKind::None, "none", rounds_inproc));
-            results.push(run_inproc(
-                w,
-                sync,
-                DEFAULT_STRIPES,
-                CodecKind::None,
-                "none",
-                rounds_inproc,
-            ));
+            results.push(run_inproc(w, sync, 1, DENSE, rounds_inproc));
+            results.push(run_inproc(w, sync, DEFAULT_STRIPES, DENSE, rounds_inproc));
         }
     }
     // TCP loopback: striped only, async+sync.
     for &sync in &[false, true] {
         for &w in worker_counts {
-            results.push(run_tcp(w, sync, CodecKind::None, "none", rounds_tcp));
+            results.push(run_tcp(w, sync, DENSE, rounds_tcp));
         }
     }
     // Gradient-codec series (none baseline above): push compression
     // throughput and bytes-on-wire, in-proc async at each worker count
     // plus one sync point and one TCP point at the top worker count.
-    let codecs: &[(CodecKind, &'static str)] = &[
-        (CodecKind::TopK { fraction: 0.01 }, "topk0.01"),
-        (CodecKind::Quant8, "quant8"),
-        (CodecKind::Quant8Sr, "quant8sr"),
+    let push_codecs: &[Codecs] = &[
+        Codecs { push: CodecKind::TopK { fraction: 0.01 }, push_name: "topk0.01", ..DENSE },
+        Codecs { push: CodecKind::Quant8, push_name: "quant8", ..DENSE },
+        Codecs { push: CodecKind::Quant8Sr, push_name: "quant8sr", ..DENSE },
     ];
-    for &(codec, cname) in codecs {
+    for &codecs in push_codecs {
         for &w in worker_counts {
-            results.push(run_inproc(w, false, DEFAULT_STRIPES, codec, cname, rounds_inproc));
+            results.push(run_inproc(w, false, DEFAULT_STRIPES, codecs, rounds_inproc));
         }
-        results.push(run_inproc(top_w, true, DEFAULT_STRIPES, codec, cname, rounds_inproc));
-        results.push(run_tcp(top_w, false, codec, cname, rounds_tcp));
+        results.push(run_inproc(top_w, true, DEFAULT_STRIPES, codecs, rounds_inproc));
+        results.push(run_tcp(top_w, false, codecs, rounds_tcp));
+    }
+    // Pull-codec series: compressed parameter broadcasts (the other
+    // direction of Lemma 3.2), same matrix shape as the push series,
+    // plus one both-directions row at the top worker count.
+    let pull_codecs: &[Codecs] = &[
+        Codecs { pull: PullCodec::Quant8, pull_name: "quant8", ..DENSE },
+        Codecs { pull: PullCodec::Quant8Delta, pull_name: "quant8-delta", ..DENSE },
+    ];
+    for &codecs in pull_codecs {
+        for &w in worker_counts {
+            results.push(run_inproc(w, false, DEFAULT_STRIPES, codecs, rounds_inproc));
+        }
+        results.push(run_inproc(top_w, true, DEFAULT_STRIPES, codecs, rounds_inproc));
+        results.push(run_tcp(top_w, false, codecs, rounds_tcp));
+    }
+    let both = Codecs {
+        push: CodecKind::Quant8,
+        push_name: "quant8",
+        pull: PullCodec::Quant8,
+        pull_name: "quant8",
+    };
+    results.push(run_inproc(top_w, false, DEFAULT_STRIPES, both, rounds_inproc));
+    // Apply-while-serving: dense and quant8 pulls racing the batched
+    // (parallel) optimizer apply through the freeze/thaw window.
+    for &codecs in
+        &[DENSE, Codecs { pull: PullCodec::Quant8, pull_name: "quant8", ..DENSE }]
+    {
+        results.push(run_apply_serve(top_w, codecs, rounds_inproc));
     }
 
     let mut t = Table::new(&[
-        "transport", "mode", "codec", "workers", "stripes", "ops/s", "MB/s", "pushMB",
+        "transport", "mode", "codec", "pull", "workers", "stripes", "ops/s", "MB/s", "pushMB",
+        "pullMB",
     ]);
     for r in &results {
         t.row(&[
             r.transport.into(),
             r.mode.into(),
             r.codec.into(),
+            r.pull_codec.into(),
             r.workers.to_string(),
             r.stripes.to_string(),
             fmt2(r.ops_per_s),
             fmt2(r.mb_per_s),
             fmt2(r.push_mb),
+            fmt2(r.pull_mb),
         ]);
     }
     t.print();
@@ -277,6 +422,7 @@ fn main() {
                 r.transport == "inproc"
                     && r.mode == mode
                     && r.codec == "none"
+                    && r.pull_codec == "none"
                     && r.workers == workers
                     && r.stripes == stripes
             })
@@ -289,26 +435,45 @@ fn main() {
         "\nstriped vs single-lock @ {top_w} in-proc workers: async {speedup_async:.2}x, sync {speedup_sync:.2}x"
     );
 
-    // Headline 2: wire-compression ratio at the top worker count, async.
-    let wire = |codec: &str| {
+    // Headline 2: wire-compression ratio per direction at the top
+    // worker count, async.
+    let row = |codec: &str, pull_codec: &str| {
         results
             .iter()
             .find(|r| {
                 r.transport == "inproc"
                     && r.mode == "async"
                     && r.codec == codec
+                    && r.pull_codec == pull_codec
                     && r.workers == top_w
                     && r.stripes == DEFAULT_STRIPES
             })
-            .map(|r| r.push_mb)
-            .unwrap_or(0.0)
+            .cloned()
     };
+    let wire = |codec: &str| row(codec, "none").map(|r| r.push_mb).unwrap_or(0.0);
     let ratio_topk = wire("none") / wire("topk0.01").max(1e-12);
     let ratio_quant8 = wire("none") / wire("quant8").max(1e-12);
     let ratio_quant8sr = wire("none") / wire("quant8sr").max(1e-12);
     println!(
         "push bytes-on-wire vs dense @ {top_w} workers: topk0.01 {ratio_topk:.1}x smaller, \
          quant8 {ratio_quant8:.1}x smaller, quant8sr {ratio_quant8sr:.1}x smaller"
+    );
+    let pull_wire = |pull_codec: &str| row("none", pull_codec).map(|r| r.pull_mb).unwrap_or(0.0);
+    let pull_ratio_quant8 = pull_wire("none") / pull_wire("quant8").max(1e-12);
+    let pull_ratio_delta = pull_wire("none") / pull_wire("quant8-delta").max(1e-12);
+    println!(
+        "pull bytes-on-wire vs dense @ {top_w} workers: quant8 {pull_ratio_quant8:.1}x smaller, \
+         quant8-delta {pull_ratio_delta:.1}x smaller"
+    );
+
+    // Headline 3: pull throughput while the optimizer applies.
+    let applyserve_ops = results
+        .iter()
+        .find(|r| r.mode == "applyserve" && r.pull_codec == "none")
+        .map(|r| r.ops_per_s)
+        .unwrap_or(0.0);
+    println!(
+        "apply-while-serving @ {top_w} workers: {applyserve_ops:.0} pulls/s during batched applies"
     );
 
     // Persist for trajectory tracking across PRs.
@@ -317,6 +482,7 @@ fn main() {
     root.insert("smoke".into(), Json::Num(if smoke { 1.0 } else { 0.0 }));
     root.insert("n_keys".into(), Json::Num(N_KEYS as f64));
     root.insert("elems_per_key".into(), Json::Num(ELEMS as f64));
+    root.insert("apply_elems_per_key".into(), Json::Num(APPLY_ELEMS as f64));
     root.insert("default_stripes".into(), Json::Num(DEFAULT_STRIPES as f64));
     root.insert("top_workers".into(), Json::Num(top_w as f64));
     root.insert(
@@ -334,6 +500,15 @@ fn main() {
         Json::Num(ratio_quant8sr),
     );
     root.insert(
+        "pull_wire_ratio_dense_over_quant8".into(),
+        Json::Num(pull_ratio_quant8),
+    );
+    root.insert(
+        "pull_wire_ratio_dense_over_quant8delta".into(),
+        Json::Num(pull_ratio_delta),
+    );
+    root.insert("applyserve_pull_ops_per_s".into(), Json::Num(applyserve_ops));
+    root.insert(
         "results".into(),
         Json::Arr(
             results
@@ -343,12 +518,14 @@ fn main() {
                     o.insert("transport".into(), Json::Str(r.transport.into()));
                     o.insert("mode".into(), Json::Str(r.mode.into()));
                     o.insert("codec".into(), Json::Str(r.codec.into()));
+                    o.insert("pull_codec".into(), Json::Str(r.pull_codec.into()));
                     o.insert("workers".into(), Json::Num(r.workers as f64));
                     o.insert("stripes".into(), Json::Num(r.stripes as f64));
                     o.insert("wall_s".into(), Json::Num(r.wall_s));
                     o.insert("ops_per_s".into(), Json::Num(r.ops_per_s));
                     o.insert("mb_per_s".into(), Json::Num(r.mb_per_s));
                     o.insert("push_mb".into(), Json::Num(r.push_mb));
+                    o.insert("pull_mb".into(), Json::Num(r.pull_mb));
                     Json::Obj(o)
                 })
                 .collect(),

@@ -3,15 +3,22 @@
 //! Lemma 3.1 (multi-GPU efficiency): `α = (1 + R_O) / (1 + G·R_O)` where
 //! `R_O = T_O / T_C` is the ratio of non-hideable overhead to compute.
 //! Lemma 3.2 (parameter servers): `N_ps ≈ ceil(2·S_p·N_w / (B_ps·T_C))`.
-//! The codec-aware form ([`num_param_servers_with_codec`]) replaces the
-//! push half of `2·S_p` with the gradient codec's effective wire bytes —
-//! §1.1.1's compression lever, modeled with the exact wire accounting of
-//! `ps::compress`. The replication-aware form
-//! ([`num_param_servers_replicated`]) adds the chain-forward stream a
-//! primary carries with `--replicas R ≥ 2` (`ps::replica`), plus the
-//! `R` physical machines per shard the fleet provisions.
+//! The codec-aware forms replace *both* halves of `2·S_p` with each
+//! direction's effective wire bytes:
+//! `codec_pull(S_p) + codec_push(S_p)` — §1.1.1's compression lever,
+//! modeled with the exact wire accounting of `ps::compress`.
+//! [`num_param_servers_with_codec`] compresses the push half only
+//! (pulls dense, the seed behavior); [`num_param_servers_with_codecs`]
+//! adds the pull-direction codec (`--pull-codec`), which kills the
+//! dense-broadcast `S_p` term. The replication-aware forms
+//! ([`num_param_servers_replicated`],
+//! [`num_param_servers_replicated_with_codecs`]) add the chain-forward
+//! stream a primary carries with `--replicas R ≥ 2` (`ps::replica`) —
+//! pushes are relayed down-chain, pulls are served once by the head, so
+//! only the push half doubles — plus the `R` physical machines per
+//! shard the fleet provisions.
 
-use crate::ps::compress::CodecKind;
+use crate::ps::compress::{CodecKind, PullCodec};
 
 /// Lemma 3.1: efficiency `α` of `g` GPUs given overhead ratio `r_o`.
 pub fn efficiency(g: usize, r_o: f64) -> f64 {
@@ -68,11 +75,11 @@ pub fn ps_round_io_time(s_p_bytes: f64, n_w: usize, b_ps: f64, n_ps: usize) -> f
     2.0 * s_p_bytes * n_w as f64 / (n_ps as f64 * b_ps)
 }
 
-/// Lemma 3.2, compression-aware: pulls stay dense f32 (workers need the
-/// full parameters), but pushes shrink to the codec's effective wire
-/// bytes, so the round traffic is `S_p + codec(S_p)` instead of `2·S_p`.
-/// With [`CodecKind::None`] this reduces exactly to
-/// [`num_param_servers`].
+/// Lemma 3.2, push-compression-aware: pulls stay dense f32, but pushes
+/// shrink to the codec's effective wire bytes, so the round traffic is
+/// `S_p + codec(S_p)` instead of `2·S_p`. With [`CodecKind::None`] this
+/// reduces exactly to [`num_param_servers`]. Shorthand for
+/// [`num_param_servers_with_codecs`] at [`PullCodec::None`].
 pub fn num_param_servers_with_codec(
     s_p_bytes: f64,
     n_w: usize,
@@ -80,8 +87,24 @@ pub fn num_param_servers_with_codec(
     t_c: f64,
     codec: CodecKind,
 ) -> usize {
+    num_param_servers_with_codecs(s_p_bytes, n_w, b_ps, t_c, codec, PullCodec::None)
+}
+
+/// Lemma 3.2 with both directions compressed: the round traffic is
+/// `codec_pull(S_p) + codec_push(S_p)` instead of `2·S_p`. A quant8
+/// pull codec shrinks its half toward `S_p / 4` (1 byte/param plus
+/// per-tensor headers), so pairing it with a quantized push codec cuts
+/// the recommended server count roughly 4x vs dense in both directions.
+pub fn num_param_servers_with_codecs(
+    s_p_bytes: f64,
+    n_w: usize,
+    b_ps: f64,
+    t_c: f64,
+    push: CodecKind,
+    pull: PullCodec,
+) -> usize {
     assert!(s_p_bytes > 0.0 && b_ps > 0.0 && t_c > 0.0 && n_w >= 1);
-    let traffic = s_p_bytes + codec.effective_push_bytes(s_p_bytes);
+    let traffic = pull.effective_pull_bytes(s_p_bytes) + push.effective_push_bytes(s_p_bytes);
     let nps = traffic * n_w as f64 / (b_ps * t_c);
     (nps.ceil() as usize).max(1)
 }
@@ -107,7 +130,8 @@ fn push_chain_factor(replicas: usize) -> f64 {
 /// Returns the number of *shards* (primaries) needed to hide that I/O
 /// behind compute; the fleet additionally provisions `R − 1` replicas
 /// per shard ([`num_physical_servers`]). With `replicas = 1` this
-/// reduces exactly to [`num_param_servers_with_codec`].
+/// reduces exactly to [`num_param_servers_with_codec`]. Shorthand for
+/// [`num_param_servers_replicated_with_codecs`] at [`PullCodec::None`].
 pub fn num_param_servers_replicated(
     s_p_bytes: f64,
     n_w: usize,
@@ -116,9 +140,36 @@ pub fn num_param_servers_replicated(
     codec: CodecKind,
     replicas: usize,
 ) -> usize {
+    num_param_servers_replicated_with_codecs(
+        s_p_bytes,
+        n_w,
+        b_ps,
+        t_c,
+        codec,
+        PullCodec::None,
+        replicas,
+    )
+}
+
+/// Replication-aware Lemma 3.2 with both directions compressed: round
+/// traffic at the busiest chain member is
+/// `codec_pull(S_p) + chain_factor·codec_push(S_p)`. Only the push half
+/// pays the chain-forward factor — pulls are served once by the head
+/// and never relayed (stateless quant8 replies are byte-identical on
+/// any replica, a pure function of the replicated store bytes, so a
+/// promoted replica serves the same compressed pulls the old head did).
+pub fn num_param_servers_replicated_with_codecs(
+    s_p_bytes: f64,
+    n_w: usize,
+    b_ps: f64,
+    t_c: f64,
+    push: CodecKind,
+    pull: PullCodec,
+    replicas: usize,
+) -> usize {
     assert!(s_p_bytes > 0.0 && b_ps > 0.0 && t_c > 0.0 && n_w >= 1 && replicas >= 1);
-    let traffic =
-        s_p_bytes + push_chain_factor(replicas) * codec.effective_push_bytes(s_p_bytes);
+    let traffic = pull.effective_pull_bytes(s_p_bytes)
+        + push_chain_factor(replicas) * push.effective_push_bytes(s_p_bytes);
     let nps = traffic * n_w as f64 / (b_ps * t_c);
     (nps.ceil() as usize).max(1)
 }
@@ -141,7 +192,31 @@ pub fn ps_round_io_time_replicated(
     codec: CodecKind,
     replicas: usize,
 ) -> f64 {
-    (s_p_bytes + push_chain_factor(replicas) * codec.effective_push_bytes(s_p_bytes))
+    ps_round_io_time_replicated_with_codecs(
+        s_p_bytes,
+        n_w,
+        b_ps,
+        n_ps,
+        codec,
+        PullCodec::None,
+        replicas,
+    )
+}
+
+/// Round I/O time with both directions compressed and chain
+/// replication: `(codec_pull(S_p) + chain·codec_push(S_p))·N_w /
+/// (N_ps·B_ps)`.
+pub fn ps_round_io_time_replicated_with_codecs(
+    s_p_bytes: f64,
+    n_w: usize,
+    b_ps: f64,
+    n_ps: usize,
+    push: CodecKind,
+    pull: PullCodec,
+    replicas: usize,
+) -> f64 {
+    (pull.effective_pull_bytes(s_p_bytes)
+        + push_chain_factor(replicas) * push.effective_push_bytes(s_p_bytes))
         * n_w as f64
         / (n_ps as f64 * b_ps)
 }
@@ -287,6 +362,86 @@ mod tests {
             CodecKind::TopK { fraction: 0.001 },
         );
         assert!(sparser <= topk);
+    }
+
+    #[test]
+    fn lemma32_both_direction_compression_pinned() {
+        // AlexNet on 1 GbE: S_p = 244 MB, 4 workers, T_C = 2 s. Pinned
+        // recommendations: dense 2·S_p needs 8 servers; compressing the
+        // push half (quant8 ≈ S_p/4) drops to 5; compressing BOTH
+        // directions drops to 2 — the dense-broadcast pull term was the
+        // remaining floor.
+        let (s_p, n_w, b_ps, t_c) = (61e6 * 4.0, 4usize, 125e6, 2.0);
+        assert_eq!(num_param_servers(s_p, n_w, b_ps, t_c), 8);
+        let push = CodecKind::Quant8;
+        assert_eq!(
+            num_param_servers_with_codecs(s_p, n_w, b_ps, t_c, push, PullCodec::None),
+            5
+        );
+        assert_eq!(
+            num_param_servers_with_codecs(s_p, n_w, b_ps, t_c, push, PullCodec::Quant8),
+            2
+        );
+        // quant8-delta prices identically: a delta body is the same
+        // wire size as an absolute one.
+        assert_eq!(
+            num_param_servers_with_codecs(s_p, n_w, b_ps, t_c, push, PullCodec::Quant8Delta),
+            2
+        );
+        // PullCodec::None reduces exactly to the push-only rule for
+        // every push codec.
+        for push in
+            [CodecKind::None, CodecKind::TopK { fraction: 0.01 }, CodecKind::Quant8]
+        {
+            assert_eq!(
+                num_param_servers_with_codecs(s_p, n_w, b_ps, t_c, push, PullCodec::None),
+                num_param_servers_with_codec(s_p, n_w, b_ps, t_c, push)
+            );
+        }
+        // Replicated: only the push half pays the chain-forward factor
+        // (pulls are served once by the head, never relayed), so R = 2
+        // prices traffic at pull + 2·push = 3·quant8(S_p) -> 3 shards.
+        assert_eq!(
+            num_param_servers_replicated_with_codecs(
+                s_p,
+                n_w,
+                b_ps,
+                t_c,
+                push,
+                PullCodec::Quant8,
+                2
+            ),
+            3
+        );
+        // R = 1 reduces exactly to the unreplicated both-direction rule.
+        assert_eq!(
+            num_param_servers_replicated_with_codecs(
+                s_p,
+                n_w,
+                b_ps,
+                t_c,
+                push,
+                PullCodec::Quant8,
+                1
+            ),
+            num_param_servers_with_codecs(s_p, n_w, b_ps, t_c, push, PullCodec::Quant8)
+        );
+        // I/O-time identity: the replicated form at R = 1 is the plain
+        // both-direction traffic over the fleet bandwidth.
+        let io = ps_round_io_time_replicated_with_codecs(
+            s_p,
+            n_w,
+            b_ps,
+            3,
+            push,
+            PullCodec::Quant8,
+            1,
+        );
+        let expect = (PullCodec::Quant8.effective_pull_bytes(s_p)
+            + push.effective_push_bytes(s_p))
+            * n_w as f64
+            / (3.0 * b_ps);
+        assert!((io - expect).abs() < 1e-9);
     }
 
     #[test]

@@ -13,7 +13,7 @@ use std::path::PathBuf;
 
 use crate::advisor::{self, netdefs};
 use crate::coordinator::{distributed, local};
-use crate::ps::compress::CodecKind;
+use crate::ps::compress::{CodecKind, PullCodec};
 use crate::runtime::exec::Runtime;
 use crate::sim::device::DeviceModel;
 use crate::util::args::{ArgSpec, Parsed};
@@ -185,6 +185,7 @@ fn cmd_advisor_ps(argv: &[String]) -> Result<(), String> {
         .opt("bw-gbps", Some("10"), "per-server network bandwidth, Gbit/s")
         .opt("tc", Some("2.0"), "compute seconds per round T_C")
         .opt("codec", Some("none"), "gradient codec: none|topk[:fraction]|quant8|quant8sr")
+        .opt("pull-codec", Some("none"), "parameter pull codec: none|quant8|quant8-delta")
         .opt(
             "replicas",
             Some("1"),
@@ -198,26 +199,33 @@ fn cmd_advisor_ps(argv: &[String]) -> Result<(), String> {
     let b_ps = p.f64("bw-gbps") * 1e9 / 8.0;
     let t_c = p.f64("tc");
     let codec = CodecKind::parse(&p.str("codec"))?;
+    let pull = PullCodec::parse(&p.str("pull-codec"))?;
     let replicas = p.usize("replicas").max(1);
     let n_ps = advisor::num_param_servers(s_p, n_w, b_ps, t_c);
     println!("Lemma 3.2: N_ps = ceil(2 S_p N_w / (B_ps T_C)) = {n_ps}");
-    let n_rec = if codec == CodecKind::None {
+    let n_rec = if codec == CodecKind::None && pull == PullCodec::None {
         n_ps
     } else {
-        let n_c = advisor::lemmas::num_param_servers_with_codec(s_p, n_w, b_ps, t_c, codec);
+        let n_c =
+            advisor::lemmas::num_param_servers_with_codecs(s_p, n_w, b_ps, t_c, codec, pull);
         println!(
-            "with {} pushes ({:.1} MB effective): N_ps = {n_c}",
+            "per-direction traffic: {} pulls ({:.1} MB) + {} pushes ({:.1} MB) \
+             replace 2 S_p = {:.1} MB: N_ps = {n_c}",
+            pull.name(),
+            pull.effective_pull_bytes(s_p) / 1e6,
             codec.name(),
-            codec.effective_push_bytes(s_p) / 1e6
+            codec.effective_push_bytes(s_p) / 1e6,
+            2.0 * s_p / 1e6
         );
         n_c
     };
     let n_rec = if replicas > 1 {
-        let n_r =
-            advisor::lemmas::num_param_servers_replicated(s_p, n_w, b_ps, t_c, codec, replicas);
+        let n_r = advisor::lemmas::num_param_servers_replicated_with_codecs(
+            s_p, n_w, b_ps, t_c, codec, pull, replicas,
+        );
         println!(
-            "with {replicas}-way chain replication (push stream relayed once): \
-             N_ps = {n_r} shards, {} physical servers",
+            "with {replicas}-way chain replication (push stream relayed once, pulls \
+             served once by the head): N_ps = {n_r} shards, {} physical servers",
             advisor::lemmas::num_physical_servers(n_r, replicas)
         );
         n_r
@@ -226,8 +234,9 @@ fn cmd_advisor_ps(argv: &[String]) -> Result<(), String> {
     };
     let mut t = Table::new(&["N_ps", "round I/O (s)", "hidden?"]);
     for n in 1..=(n_rec + 2) {
-        let io =
-            advisor::lemmas::ps_round_io_time_replicated(s_p, n_w, b_ps, n, codec, replicas);
+        let io = advisor::lemmas::ps_round_io_time_replicated_with_codecs(
+            s_p, n_w, b_ps, n, codec, pull, replicas,
+        );
         t.row(&[
             n.to_string(),
             format!("{io:.3}"),
@@ -298,6 +307,7 @@ fn cmd_train_dist(argv: &[String]) -> Result<(), String> {
         .opt("lr", Some("0.02"), "learning rate")
         .opt("momentum", Some("0"), "server-side momentum")
         .opt("codec", Some("none"), "gradient codec: none|topk[:fraction]|quant8|quant8sr")
+        .opt("pull-codec", Some("none"), "parameter pull codec: none|quant8|quant8-delta")
         .opt(
             "fault-plan",
             None,
@@ -364,6 +374,7 @@ fn cmd_train_dist(argv: &[String]) -> Result<(), String> {
         sync: p.flag("sync"),
         seed: 1,
         codec: CodecKind::parse(&p.str("codec"))?,
+        pull_codec: PullCodec::parse(&p.str("pull-codec"))?,
         fault_plan,
         retry,
         max_worker_restarts: p.usize("restarts"),
@@ -410,6 +421,11 @@ fn cmd_train_dist(argv: &[String]) -> Result<(), String> {
         "push wire traffic: {:.2} MB total ({} codec)",
         report.push_wire_bytes as f64 / 1e6,
         cfg.codec.name()
+    );
+    println!(
+        "pull wire traffic: {:.2} MB total ({} pull codec)",
+        report.pull_wire_bytes as f64 / 1e6,
+        cfg.pull_codec.name()
     );
     if cfg.fault_plan.is_some() || report.worker_restarts.iter().any(|&r| r > 0) {
         println!(
@@ -524,7 +540,21 @@ mod tests {
         run(&argv(&["advisor-ps", "--codec", "quant8"])).unwrap();
         run(&argv(&["advisor-ps", "--codec", "quant8", "--replicas", "2"])).unwrap();
         run(&argv(&["advisor-ps", "--replicas", "3"])).unwrap();
+        run(&argv(&["advisor-ps", "--pull-codec", "quant8"])).unwrap();
+        run(&argv(&["advisor-ps", "--codec", "quant8", "--pull-codec", "quant8-delta"]))
+            .unwrap();
+        run(&argv(&[
+            "advisor-ps",
+            "--codec",
+            "quant8",
+            "--pull-codec",
+            "quant8",
+            "--replicas",
+            "2",
+        ]))
+        .unwrap();
         assert!(run(&argv(&["advisor-ps", "--codec", "bogus"])).is_err());
+        assert!(run(&argv(&["advisor-ps", "--pull-codec", "bogus"])).is_err());
     }
 
     #[test]
@@ -541,6 +571,20 @@ mod tests {
         ]))
         .unwrap_err();
         assert!(err.contains("bad retry"), "{err}");
+    }
+
+    #[test]
+    fn train_dist_rejects_bad_pull_codec() {
+        // Arg validation fires before the cluster (or artifacts) load.
+        let err = run(&argv(&[
+            "train-dist",
+            "--artifacts",
+            "/nonexistent",
+            "--pull-codec",
+            "bogus",
+        ]))
+        .unwrap_err();
+        assert!(err.contains("unknown pull codec"), "{err}");
     }
 
     #[test]

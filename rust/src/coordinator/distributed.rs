@@ -59,7 +59,7 @@ use crate::net::fault::{FaultLog, FaultPlan};
 use crate::net::message::Message;
 use crate::net::transport::{connect, connect_timeout, Transport};
 use crate::ps::client::PsClient;
-use crate::ps::compress::CodecKind;
+use crate::ps::compress::{CodecKind, PullCodec};
 use crate::ps::router::{ReplicatedTopology, Router};
 use crate::ps::server::{
     catch_up_from_tail, serve, PsServerHandle, PsShared, UpdateMode, PROMOTE_DRAIN_TIMEOUT,
@@ -83,6 +83,9 @@ pub struct DistConfig {
     pub seed: u64,
     /// Gradient codec for worker pushes (§1.1.1 traffic compression).
     pub codec: CodecKind,
+    /// Parameter codec for worker pulls — kills the dense-broadcast
+    /// `S_p` term of Lemma 3.2 when set.
+    pub pull_codec: PullCodec,
     /// Seeded chaos schedule applied to every worker connection
     /// (`None` = clean network).
     pub fault_plan: Option<FaultPlan>,
@@ -128,6 +131,7 @@ impl Default for DistConfig {
             sync: false,
             seed: 1,
             codec: CodecKind::None,
+            pull_codec: PullCodec::None,
             fault_plan: None,
             retry: 0,
             max_worker_restarts: 0,
@@ -161,6 +165,9 @@ pub struct DistReport {
     /// Encoded push-body bytes summed over all workers — the measured
     /// wire traffic the codec saved (or not) vs dense pushes.
     pub push_wire_bytes: u64,
+    /// Pull-reply body bytes summed over all workers — the measured
+    /// pull-direction traffic the pull codec saved vs dense broadcasts.
+    pub pull_wire_bytes: u64,
     /// Per-worker mean seconds per step (final incarnation).
     pub worker_step_s: Vec<f64>,
     /// Workers flagged by [`detect_stragglers`].
@@ -732,6 +739,7 @@ struct WorkerRun {
     losses: Vec<f32>,
     r_o: f64,
     wire_bytes: u64,
+    pull_wire_bytes: u64,
     mean_step_s: f64,
 }
 
@@ -1157,6 +1165,7 @@ pub fn run_distributed(artifacts_dir: &std::path::Path, cfg: &DistConfig) -> Res
                 prefetch_depth: 2,
                 log_every: 0,
                 codec: cfg.codec,
+                pull_codec: cfg.pull_codec,
             };
             // Disjoint data streams per worker via the seed fork.
             let batcher = crate::coordinator::local::family_batcher(
@@ -1169,6 +1178,7 @@ pub fn run_distributed(artifacts_dir: &std::path::Path, cfg: &DistConfig) -> Res
                 losses: stats.losses,
                 r_o: stats.profiler.r_o(),
                 wire_bytes: stats.push_wire_bytes,
+                pull_wire_bytes: stats.pull_wire_bytes,
                 mean_step_s: stats.wall_s / steps_run as f64,
             })
         })
@@ -1250,12 +1260,14 @@ pub fn run_distributed(artifacts_dir: &std::path::Path, cfg: &DistConfig) -> Res
     let mut worker_step_s = Vec::new();
     let mut worker_restarts = Vec::new();
     let mut push_wire_bytes = 0u64;
+    let mut pull_wire_bytes = 0u64;
     for o in &outcomes {
         worker_losses.push(o.output.losses.clone());
         worker_r_o.push(o.output.r_o);
         worker_step_s.push(o.output.mean_step_s);
         worker_restarts.push(o.restarts);
         push_wire_bytes += o.output.wire_bytes;
+        pull_wire_bytes += o.output.pull_wire_bytes;
     }
     let stragglers = detect_stragglers(&worker_step_s, cfg.straggler_factor);
     for &w in &stragglers {
@@ -1291,6 +1303,7 @@ pub fn run_distributed(artifacts_dir: &std::path::Path, cfg: &DistConfig) -> Res
         ps_stats,
         router_imbalance: router.imbalance(),
         push_wire_bytes,
+        pull_wire_bytes,
         worker_step_s,
         stragglers,
         worker_restarts,
@@ -1775,6 +1788,24 @@ mod tests {
             dense.push_wire_bytes
         );
         for losses in &topk.worker_losses {
+            assert!(losses.iter().all(|l| l.is_finite()), "{losses:?}");
+        }
+        // Pull direction: quant8 replies ship ~1 byte/param vs 4 for the
+        // dense broadcast, so the measured pull traffic drops >= 3x even
+        // with per-entry shape headers.
+        let qpull = run_distributed(
+            &dir,
+            &DistConfig { pull_codec: PullCodec::Quant8, ..base.clone() },
+        )
+        .unwrap();
+        assert!(dense.pull_wire_bytes > 0);
+        assert!(
+            qpull.pull_wire_bytes * 3 <= dense.pull_wire_bytes,
+            "quant8 pull {} vs dense {}",
+            qpull.pull_wire_bytes,
+            dense.pull_wire_bytes
+        );
+        for losses in &qpull.worker_losses {
             assert!(losses.iter().all(|l| l.is_finite()), "{losses:?}");
         }
     }

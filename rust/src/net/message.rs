@@ -30,6 +30,31 @@ pub enum Message {
     Pull { worker: u32, epoch: u64, keys: Vec<u32> },
     /// Server -> worker: requested values with the server's clock.
     PullReply { clock: u64, entries: Vec<(u32, Tensor)> },
+    /// Worker -> server: request quant8-compressed values of `keys` —
+    /// the pull-direction twin of [`CompressedPush`](Self::CompressedPush)
+    /// that kills Lemma 3.2's dense-broadcast `S_p` term. With `delta`
+    /// set the worker asks for bodies encoded as quantized deltas
+    /// against the reconstruction it built from the reply stamped
+    /// `base` (0 = no base: first pull, or the client discarded its
+    /// cache); the server answers with absolute bodies (a forced
+    /// resync) whenever it does not hold that exact base for this
+    /// worker — first contact, a lost reply, or a promoted replica
+    /// whose pull cache started empty.
+    CompressedPull { worker: u32, epoch: u64, delta: bool, base: u64, keys: Vec<u32> },
+    /// Server -> worker: quant8-compressed parameter values. Each
+    /// [`PullEntry`] carries the stored tensor's shape alongside its
+    /// quant8 body — workers rebuild full-fidelity tensors from pulls,
+    /// and dense pushes derived from them must round-trip the exact
+    /// stored shape or the server's shape validation discards them.
+    /// Absolute entries overwrite the client's reconstruction, delta
+    /// entries accumulate onto it (both sides replay the identical
+    /// dequantized f32 adds, so the two reconstructions stay bitwise
+    /// equal). `stamp` names this reply in the server's per-worker
+    /// delta cache; the client echoes it as `base` on its next delta
+    /// pull. Stateless (non-delta) replies carry stamp 0 and touch no
+    /// cache, which is what makes them byte-identical across chain
+    /// failover.
+    CompressedPullReply { clock: u64, stamp: u64, entries: Vec<PullEntry> },
     /// Worker -> server: gradients for `entries` (step `step` at worker).
     /// `seq` is the worker's monotone push counter — replayed frames
     /// (client retries after a fault) carry the same `seq`, so servers
@@ -118,6 +143,21 @@ pub enum Message {
     Join { epoch: u64 },
 }
 
+/// One entry of a [`CompressedPullReply`](Message::CompressedPullReply):
+/// a parameter tensor's shape plus its quant8-encoded values. `delta`
+/// marks the body as a quantized delta against the client's cached
+/// reconstruction (absolute otherwise). The shape travels on the wire
+/// because pulled parameters seed worker-side gradients — a pull that
+/// flattened `[6, 6]` to `[36]` would make every dense push from that
+/// worker fail the server's shape check.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PullEntry {
+    pub key: u32,
+    pub delta: bool,
+    pub shape: Vec<usize>,
+    pub body: Compressed,
+}
+
 const T_PULL: u8 = 1;
 const T_PULL_REPLY: u8 = 2;
 const T_PUSH: u8 = 3;
@@ -139,10 +179,17 @@ const T_SNAPSHOT_REQUEST: u8 = 18;
 const T_SNAPSHOT_CHUNK: u8 = 19;
 const T_CATCH_UP_DONE: u8 = 20;
 const T_JOIN: u8 = 21;
+const T_COMPRESSED_PULL: u8 = 22;
+const T_COMPRESSED_PULL_REPLY: u8 = 23;
 
-/// Per-entry codec tags inside a `CompressedPush` body.
+/// Per-entry codec tags inside a `CompressedPush` body. A
+/// `CompressedPull`/`CompressedPullReply` reuses the same byte space for
+/// its codec/kind field: `C_QUANT8` marks an absolute quant8 body,
+/// `C_QUANT8_DELTA` a quant8 body encoding a delta against the client's
+/// reconstruction (pull direction only — pushes never carry deltas).
 const C_SPARSE: u8 = 1;
 const C_QUANT8: u8 = 2;
+const C_QUANT8_DELTA: u8 = 3;
 
 impl Message {
     pub fn encode(&self) -> Vec<u8> {
@@ -166,6 +213,15 @@ impl Message {
                 for (k, t) in entries {
                     w.u32(*k);
                     w.tensor(t);
+                }
+            }
+            Message::CompressedPull { worker, epoch, delta, base, keys } => {
+                wire::compressed_pull(w, *worker, *epoch, *delta, *base, keys);
+            }
+            Message::CompressedPullReply { clock, stamp, entries } => {
+                wire::compressed_pull_reply_header(w, *clock, *stamp, entries.len() as u32);
+                for e in entries {
+                    wire::compressed_pull_entry(w, e.key, e.delta, &e.shape, &e.body);
                 }
             }
             Message::Push { worker, step, seq, epoch, entries } => {
@@ -313,6 +369,34 @@ impl Message {
                     entries.push((k, r.tensor()?));
                 }
                 Message::PullReply { clock, entries }
+            }
+            T_COMPRESSED_PULL => {
+                let worker = r.u32()?;
+                let epoch = r.u64()?;
+                let delta = match r.u8()? {
+                    C_QUANT8 => false,
+                    C_QUANT8_DELTA => true,
+                    other => return Err(format!("unknown pull codec {other}")),
+                };
+                let base = r.u64()?;
+                let n = r.u32()? as usize;
+                let mut keys = Vec::with_capacity(n.min(1 << 16));
+                for _ in 0..n {
+                    keys.push(r.u32()?);
+                }
+                Message::CompressedPull { worker, epoch, delta, base, keys }
+            }
+            T_COMPRESSED_PULL_REPLY => {
+                let clock = r.u64()?;
+                let stamp = r.u64()?;
+                let n = r.u32()? as usize;
+                let mut entries = Vec::with_capacity(n.min(1 << 16));
+                for _ in 0..n {
+                    let key = r.u32()?;
+                    let (delta, shape, c) = wire::decode_pull_entry(&mut r)?;
+                    entries.push(PullEntry { key, delta, shape, body: c.to_compressed() });
+                }
+                Message::CompressedPullReply { clock, stamp, entries }
             }
             T_PUSH => {
                 let worker = r.u32()?;
@@ -524,6 +608,93 @@ pub mod wire {
         }
     }
 
+    /// `CompressedPull { worker, epoch, delta, base, keys }` in one pass
+    /// from a borrowed key slice (the client's compressed-pull request).
+    pub fn compressed_pull(
+        w: &mut Writer,
+        worker: u32,
+        epoch: u64,
+        delta: bool,
+        base: u64,
+        keys: &[u32],
+    ) {
+        w.u8(T_COMPRESSED_PULL);
+        w.u32(worker);
+        w.u64(epoch);
+        w.u8(if delta { C_QUANT8_DELTA } else { C_QUANT8 });
+        w.u64(base);
+        w.u32(keys.len() as u32);
+        for &k in keys {
+            w.u32(k);
+        }
+    }
+
+    /// Header of `CompressedPullReply { clock, stamp, entries }`; follow
+    /// with exactly `n` [`compressed_pull_entry`] calls.
+    pub fn compressed_pull_reply_header(w: &mut Writer, clock: u64, stamp: u64, n: u32) {
+        w.u8(T_COMPRESSED_PULL_REPLY);
+        w.u64(clock);
+        w.u64(stamp);
+        w.u32(n);
+    }
+
+    /// One [`PullEntry`]-shaped record of a `CompressedPullReply` body,
+    /// encoded from a borrowed shape and [`Compressed`]. Layout:
+    /// `u32 key, u32 rank, rank × u32 dim`, then the kind byte
+    /// (`C_QUANT8` absolute / `C_QUANT8_DELTA` delta) followed by the
+    /// same quant8 body as a push entry: `u32 numel, u32 qlen,
+    /// f32 scale, qlen × i8`. The byte count after the kind byte is
+    /// exactly [`Compressed::wire_bytes`], so one entry is
+    /// `9 + 4·rank + wire_bytes` — per-direction traffic accounting
+    /// stays the wire format on the pull side too.
+    pub fn compressed_pull_entry(
+        w: &mut Writer,
+        key: u32,
+        delta: bool,
+        shape: &[usize],
+        c: &Compressed,
+    ) {
+        w.u32(key);
+        w.u32(shape.len() as u32);
+        for &d in shape {
+            w.u32(d as u32);
+        }
+        match c {
+            Compressed::Quant8 { numel, scale, q } => {
+                debug_assert_eq!(shape.iter().product::<usize>(), *numel);
+                w.u8(if delta { C_QUANT8_DELTA } else { C_QUANT8 });
+                w.u32(*numel as u32);
+                w.u32(q.len() as u32);
+                w.f32(*scale);
+                // SAFETY: i8 and u8 have identical size/alignment and
+                // every bit pattern is valid — one bulk append.
+                let bytes = unsafe {
+                    std::slice::from_raw_parts(q.as_ptr().cast::<u8>(), q.len())
+                };
+                w.raw(bytes);
+            }
+            // Pull bodies are always quant8. A sparse entry here is a
+            // programming error; encode its push layout (codec byte
+            // C_SPARSE) so the receiver rejects the frame instead of
+            // misreading it.
+            Compressed::Sparse { numel, idx, val } => {
+                debug_assert!(false, "pull entries are quant8-bodied");
+                w.u8(C_SPARSE);
+                w.u32(*numel as u32);
+                w.u32(idx.len() as u32);
+                w.u32_raw(idx);
+                w.f32_raw(val);
+            }
+        }
+    }
+
+    /// True when `frame` is a `CompressedPullReply` body — the client
+    /// routes such frames into [`CompressedPullReplyBody`] instead of
+    /// `Message::decode`.
+    pub fn is_compressed_pull_reply(frame: &[u8]) -> bool {
+        frame.first() == Some(&T_COMPRESSED_PULL_REPLY)
+    }
+
     /// True when `frame` is a `CompressedPush` body — the serve loop
     /// routes such frames into [`CompressedPushBody`] instead of
     /// `Message::decode`.
@@ -706,6 +877,105 @@ pub mod wire {
             let c = decode_compressed(&mut self.r)?;
             Ok((key, c))
         }
+    }
+
+    /// One streamed `CompressedPullReply` entry: the [`PullEntry`] twin
+    /// whose quant8 payload stays borrowed wire bytes.
+    pub struct PullEntryRef<'a> {
+        pub key: u32,
+        pub delta: bool,
+        pub shape: Vec<usize>,
+        pub body: CompressedRef<'a>,
+    }
+
+    /// Streaming `CompressedPullReply` decoder: yields [`PullEntryRef`]
+    /// entries whose quant8 payloads are borrowed straight from the
+    /// received frame — the pull-direction twin of
+    /// [`CompressedPushBody`]. The client dequantizes each view directly
+    /// into its output buffer; no owned `Compressed` is built per entry.
+    pub struct CompressedPullReplyBody<'a> {
+        pub clock: u64,
+        pub stamp: u64,
+        remaining: usize,
+        r: Reader<'a>,
+    }
+
+    impl<'a> CompressedPullReplyBody<'a> {
+        pub fn decode(frame: &'a [u8]) -> Result<Self, String> {
+            let mut r = Reader::new(frame);
+            let tag = r.u8()?;
+            if tag != T_COMPRESSED_PULL_REPLY {
+                return Err(format!("not a CompressedPullReply frame (tag {tag})"));
+            }
+            let clock = r.u64()?;
+            let stamp = r.u64()?;
+            let remaining = r.u32()? as usize;
+            Ok(CompressedPullReplyBody { clock, stamp, remaining, r })
+        }
+
+        /// Entries not yet yielded.
+        pub fn remaining(&self) -> usize {
+            self.remaining
+        }
+
+        /// Next [`PullEntryRef`]; `None` once every entry (and the
+        /// whole frame) is consumed. Trailing bytes after the last
+        /// entry are an error, matching `Message::decode` strictness.
+        pub fn next_entry(&mut self) -> Option<Result<PullEntryRef<'a>, String>> {
+            if self.remaining == 0 {
+                if self.r.remaining() != 0 {
+                    return Some(Err(format!(
+                        "{} trailing bytes after CompressedPullReply",
+                        self.r.remaining()
+                    )));
+                }
+                return None;
+            }
+            self.remaining -= 1;
+            Some(self.entry())
+        }
+
+        fn entry(&mut self) -> Result<PullEntryRef<'a>, String> {
+            let key = self.r.u32()?;
+            let (delta, shape, body) = decode_pull_entry(&mut self.r)?;
+            Ok(PullEntryRef { key, delta, shape, body })
+        }
+    }
+
+    /// Decode one pull-entry body (shape then kind-tagged quant8
+    /// payload) as a borrowed view, validating that the declared shape
+    /// and payload agree. Accepts only quant8 bodies (absolute or
+    /// delta) — the pull direction never carries sparse payloads.
+    pub(super) fn decode_pull_entry<'a>(
+        r: &mut Reader<'a>,
+    ) -> Result<(bool, Vec<usize>, CompressedRef<'a>), String> {
+        let rank = r.u32()? as usize;
+        if rank > 16 {
+            return Err(format!("implausible tensor rank {rank}"));
+        }
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(r.u32()? as usize);
+        }
+        let kind = r.u8()?;
+        let delta = match kind {
+            C_QUANT8 => false,
+            C_QUANT8_DELTA => true,
+            other => return Err(format!("unknown pull entry kind {other}")),
+        };
+        let numel = r.u32()? as usize;
+        if shape.iter().product::<usize>() != numel {
+            return Err(format!(
+                "pull entry shape {shape:?} disagrees with payload {numel}"
+            ));
+        }
+        let qlen = r.u32()? as usize;
+        if qlen != numel {
+            return Err(format!("quant8 payload {qlen} != numel {numel}"));
+        }
+        let scale = r.f32()?;
+        let q = r.raw(qlen)?;
+        Ok((delta, shape, CompressedRef::Quant8 { numel, scale, q }))
     }
 
     /// Decode one codec-tagged compressed payload as a borrowed view.
@@ -1090,6 +1360,231 @@ mod tests {
         w.u32(3); // k > numel
         let bad = w.finish();
         assert!(Message::decode(&bad).is_err());
+    }
+
+    fn sample_pull_entries() -> (PullEntry, PullEntry) {
+        (
+            PullEntry {
+                key: 0,
+                delta: false,
+                shape: vec![3],
+                body: Compressed::Quant8 { numel: 3, scale: 0.5, q: vec![-7, 0, 127] },
+            },
+            PullEntry {
+                key: 3,
+                delta: true,
+                shape: vec![2, 2],
+                body: Compressed::Quant8 { numel: 4, scale: 0.25, q: vec![1, -1, 64, -127] },
+            },
+        )
+    }
+
+    #[test]
+    fn compressed_pull_roundtrip() {
+        roundtrip(Message::CompressedPull {
+            worker: 3,
+            epoch: 2,
+            delta: false,
+            base: 0,
+            keys: vec![0, 5, 9],
+        });
+        roundtrip(Message::CompressedPull {
+            worker: 0,
+            epoch: EPOCH_UNFENCED,
+            delta: true,
+            base: 17,
+            keys: vec![],
+        });
+        let (e1, e2) = sample_pull_entries();
+        roundtrip(Message::CompressedPullReply {
+            clock: 42,
+            stamp: 7,
+            entries: vec![e1, e2],
+        });
+        roundtrip(Message::CompressedPullReply { clock: 0, stamp: 0, entries: vec![] });
+    }
+
+    #[test]
+    fn compressed_pull_wire_helpers_match_message_encoding() {
+        let msg = Message::CompressedPull {
+            worker: 7,
+            epoch: 3,
+            delta: true,
+            base: 11,
+            keys: vec![3, 5, 8],
+        };
+        let mut w = Writer::new();
+        wire::compressed_pull(&mut w, 7, 3, true, 11, &[3, 5, 8]);
+        assert_eq!(w.finish(), msg.encode());
+
+        let (mut e1, mut e2) = sample_pull_entries();
+        e1.key = 1;
+        e2.key = 4;
+        let msg = Message::CompressedPullReply {
+            clock: 42,
+            stamp: 9,
+            entries: vec![e1.clone(), e2.clone()],
+        };
+        let mut w = Writer::new();
+        wire::compressed_pull_reply_header(&mut w, 42, 9, 2);
+        wire::compressed_pull_entry(&mut w, e1.key, e1.delta, &e1.shape, &e1.body);
+        wire::compressed_pull_entry(&mut w, e2.key, e2.delta, &e2.shape, &e2.body);
+        let buf = w.finish();
+        assert_eq!(buf, msg.encode());
+        assert_eq!(Message::decode(&buf).unwrap(), msg);
+    }
+
+    #[test]
+    fn pull_bytes_match_wire_accounting() {
+        // Compressed reply = 21-byte header (tag, clock, stamp, n) +
+        // per entry (9 + 4·rank + wire_bytes: key, rank, dims, kind,
+        // quant8 body); the request adds one codec byte and a u64 base
+        // over a dense Pull. These formulas ARE the client's
+        // pull_wire_bytes accounting.
+        let (e1, e2) = sample_pull_entries();
+        for e in [&e1, &e2] {
+            let mut w = Writer::new();
+            wire::compressed_pull_entry(&mut w, 9, e.delta, &e.shape, &e.body);
+            assert_eq!(w.len(), 9 + 4 * e.shape.len() + e.body.wire_bytes());
+        }
+        let msg = Message::CompressedPullReply {
+            clock: 1,
+            stamp: 2,
+            entries: vec![e1.clone(), e2.clone()],
+        };
+        assert_eq!(
+            msg.encode().len(),
+            21 + (9 + 4 + e1.body.wire_bytes()) + (9 + 8 + e2.body.wire_bytes())
+        );
+        let req = Message::CompressedPull {
+            worker: 0,
+            epoch: 0,
+            delta: false,
+            base: 0,
+            keys: vec![1, 2, 3],
+        };
+        assert_eq!(req.encode().len(), 26 + 4 * 3);
+
+        // Dense reply = 13-byte header + per entry
+        // (4 key + 8 + 4·rank + 4·numel) — pinned here because the
+        // client reports dense pull traffic from this formula.
+        let t0 = Tensor::from_vec(&[3], vec![1.0, -2.0, 3.5]);
+        let t1 = Tensor::zeros(&[2, 2]);
+        let msg = Message::PullReply { clock: 5, entries: vec![(0, t0), (1, t1)] };
+        assert_eq!(msg.encode().len(), 13 + (12 + 4 + 4 * 3) + (12 + 8 + 4 * 4));
+    }
+
+    #[test]
+    fn compressed_pull_reply_stream_decode_matches_owned() {
+        let (e1, e2) = sample_pull_entries();
+        let msg = Message::CompressedPullReply {
+            clock: 42,
+            stamp: 17,
+            entries: vec![e1.clone(), e2.clone()],
+        };
+        let buf = msg.encode();
+        assert!(wire::is_compressed_pull_reply(&buf));
+        assert!(!wire::is_compressed_pull_reply(&Message::Stats.encode()));
+
+        let mut body = wire::CompressedPullReplyBody::decode(&buf).unwrap();
+        assert_eq!((body.clock, body.stamp, body.remaining()), (42, 17, 2));
+        let mut got = Vec::new();
+        while let Some(e) = body.next_entry() {
+            let e = e.unwrap();
+            got.push(PullEntry {
+                key: e.key,
+                delta: e.delta,
+                shape: e.shape,
+                body: e.body.to_compressed(),
+            });
+        }
+        assert_eq!(got, vec![e1, e2]);
+    }
+
+    #[test]
+    fn compressed_pull_reply_stream_decode_rejects_malformed() {
+        let (e1, _) = sample_pull_entries();
+        let msg = Message::CompressedPullReply {
+            clock: 0,
+            stamp: 0,
+            entries: vec![e1],
+        };
+        // Trailing garbage after the last entry.
+        let mut buf = msg.encode();
+        buf.push(0);
+        let mut body = wire::CompressedPullReplyBody::decode(&buf).unwrap();
+        assert!(body.next_entry().unwrap().is_ok());
+        assert!(body.next_entry().unwrap().is_err());
+        // Not a compressed-pull-reply frame at all; truncated header;
+        // truncated entry.
+        assert!(wire::CompressedPullReplyBody::decode(&Message::Stats.encode()).is_err());
+        assert!(wire::CompressedPullReplyBody::decode(&msg.encode()[..10]).is_err());
+        let whole = msg.encode();
+        let mut body = wire::CompressedPullReplyBody::decode(&whole[..whole.len() - 1]).unwrap();
+        assert!(body.next_entry().unwrap().is_err());
+        // A sparse-tagged entry body is rejected: pulls are quant8-only.
+        let mut w = Writer::new();
+        wire::compressed_pull_reply_header(&mut w, 0, 0, 1);
+        w.u32(0); // key
+        w.u32(1); // rank
+        w.u32(2); // dim
+        w.u8(1); // C_SPARSE
+        w.u32(2);
+        w.u32(1);
+        let bad = w.finish();
+        let mut body = wire::CompressedPullReplyBody::decode(&bad).unwrap();
+        assert!(body.next_entry().unwrap().is_err());
+        assert!(Message::decode(&bad).is_err());
+        // qlen != numel rejected.
+        let mut w = Writer::new();
+        wire::compressed_pull_reply_header(&mut w, 0, 0, 1);
+        w.u32(0); // key
+        w.u32(1); // rank
+        w.u32(3); // dim
+        w.u8(2); // C_QUANT8
+        w.u32(3); // numel
+        w.u32(2); // qlen != numel
+        w.f32(1.0);
+        w.raw(&[0, 0]);
+        let bad = w.finish();
+        let mut body = wire::CompressedPullReplyBody::decode(&bad).unwrap();
+        assert!(body.next_entry().unwrap().is_err());
+        // Shape that disagrees with the payload rejected — a flattened
+        // or corrupted shape must never reach the client's tensor
+        // rebuild.
+        let mut w = Writer::new();
+        wire::compressed_pull_reply_header(&mut w, 0, 0, 1);
+        w.u32(0); // key
+        w.u32(2); // rank
+        w.u32(2); // dims [2, 3]: product 6
+        w.u32(3);
+        w.u8(2); // C_QUANT8
+        w.u32(4); // numel != 6
+        w.u32(4);
+        w.f32(1.0);
+        w.raw(&[0, 0, 0, 0]);
+        let bad = w.finish();
+        let mut body = wire::CompressedPullReplyBody::decode(&bad).unwrap();
+        assert!(body.next_entry().unwrap().is_err());
+        assert!(Message::decode(&bad).is_err());
+        // Implausible rank rejected before any dim is read.
+        let mut w = Writer::new();
+        wire::compressed_pull_reply_header(&mut w, 0, 0, 1);
+        w.u32(0); // key
+        w.u32(17); // rank > 16
+        let bad = w.finish();
+        let mut body = wire::CompressedPullReplyBody::decode(&bad).unwrap();
+        assert!(body.next_entry().unwrap().is_err());
+        // Unknown codec byte in the request rejected by the owned
+        // decoder.
+        let mut w = Writer::new();
+        w.u8(22); // T_COMPRESSED_PULL
+        w.u32(0);
+        w.u64(0);
+        w.u8(9); // bogus codec
+        w.u64(0);
+        w.u32(0);
+        assert!(Message::decode(&w.finish()).is_err());
     }
 
     #[test]

@@ -4,6 +4,11 @@
 //! gradient codec ([`CodecKind`]): dense `Push` frames, or
 //! `CompressedPush` frames carrying top-k sparse (with per-key
 //! error-feedback residuals kept client-side) or int8-quantized bodies.
+//! The pull direction has its own codec ([`PullCodec`]): dense f32
+//! `PullReply` frames, stateless quant8 broadcasts, or quant8 deltas
+//! against the reconstruction the client keeps mirrored with the
+//! server per worker — compressed pulls still return full-fidelity
+//! shapes, so gradients derived from them push back unchanged.
 //!
 //! # Fault tolerance
 //!
@@ -50,7 +55,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use super::compress::{quantize8, CodecKind, Compressed, TopK};
+use super::compress::{quantize8, CodecKind, Compressed, PullCodec, TopK};
 use super::replica::{NOT_PRIMARY, STALE_EPOCH};
 use super::router::Router;
 use crate::net::codec::Writer;
@@ -76,6 +81,23 @@ pub struct PsClient {
     /// Cumulative encoded push-body bytes actually sent (replays count:
     /// they hit the wire too).
     push_wire_bytes: u64,
+    /// Pull-direction codec: dense f32 `Pull`/`PullReply` when `None`,
+    /// `CompressedPull`/`CompressedPullReply` otherwise.
+    pull_codec: PullCodec,
+    /// Cumulative pull-reply body bytes received — the pull-direction
+    /// twin of [`push_wire_bytes`](Self::push_wire_bytes) (replayed
+    /// replies count: they hit the wire too).
+    pull_wire_bytes: u64,
+    /// Per-server stamp of the last fully-processed compressed pull
+    /// reply (0 = no base held); echoed as `base` on the next delta
+    /// pull so the server deltas against exactly what we hold.
+    pull_base: Vec<u64>,
+    /// Per-key dequantized parameter reconstruction. Advanced by the
+    /// same arithmetic the server's per-worker mirror replays
+    /// (`write_into` for absolute entries, `scatter_axpy(1.0, ..)` for
+    /// deltas), so the two stay bitwise equal and delta quantization
+    /// error cannot compound across pulls.
+    pull_recon: BTreeMap<u32, Vec<f32>>,
     /// Next push sequence number (monotone per worker).
     seq: u64,
     /// Extra attempts per op after the first (0 = fail fast).
@@ -108,6 +130,7 @@ impl PsClient {
             router.n_servers(),
             "one transport per server"
         );
+        let n_servers = transports.len();
         PsClient {
             worker_id,
             transports,
@@ -116,6 +139,10 @@ impl PsClient {
             topk: BTreeMap::new(),
             staged: Vec::new(),
             push_wire_bytes: 0,
+            pull_codec: PullCodec::None,
+            pull_wire_bytes: 0,
+            pull_base: vec![0; n_servers],
+            pull_recon: BTreeMap::new(),
             seq: 0,
             retry_limit: 0,
             reconnect: None,
@@ -187,11 +214,39 @@ impl PsClient {
         self.codec
     }
 
+    /// Switch the pull-direction codec. The delta reconstruction cache
+    /// and per-server base stamps are dropped on a change — they belong
+    /// to the previous codec's delta chain, so the next delta pull
+    /// announces base 0 and the server answers with a full resync.
+    pub fn set_pull_codec(&mut self, codec: PullCodec) {
+        if codec != self.pull_codec {
+            self.pull_recon.clear();
+            for b in &mut self.pull_base {
+                *b = 0;
+            }
+        }
+        self.pull_codec = codec;
+    }
+
+    pub fn pull_codec(&self) -> PullCodec {
+        self.pull_codec
+    }
+
     /// Total encoded push-body bytes sent so far — the wire-traffic
     /// measurement Lemma 3.2's compression-aware form models, and the
     /// bench's bytes-on-wire column.
     pub fn push_wire_bytes(&self) -> u64 {
         self.push_wire_bytes
+    }
+
+    /// Total pull-reply body bytes received so far — the other
+    /// direction of Lemma 3.2's traffic model (the dense-broadcast
+    /// `S_p` term the pull codec compresses), and the bench's
+    /// pull-direction bytes-on-wire column. Dense replies are counted
+    /// by the pinned wire formula; compressed replies by measured frame
+    /// length (the two agree — `net::message` pins it).
+    pub fn pull_wire_bytes(&self) -> u64 {
+        self.pull_wire_bytes
     }
 
     pub fn router(&self) -> &Router {
@@ -211,6 +266,14 @@ impl PsClient {
     /// one buffer across steps reuses its `Vec` spine instead of
     /// reallocating every refresh.
     pub fn pull_all_into(&mut self, out: &mut Vec<Tensor>) -> Result<(), String> {
+        if self.pull_codec == PullCodec::None {
+            self.pull_all_dense_into(out)
+        } else {
+            self.pull_all_compressed_into(out)
+        }
+    }
+
+    fn pull_all_dense_into(&mut self, out: &mut Vec<Tensor>) -> Result<(), String> {
         let n_keys = self.router.n_keys();
         out.clear();
         out.resize(n_keys, Tensor::zeros(&[0]));
@@ -221,7 +284,14 @@ impl PsClient {
         // idempotent reads, so fault recovery simply re-sends them.
         let worker = self.worker_id;
         let PsClient {
-            transports, router, reconnect, retry_limit, epoch_source, read_deadline, ..
+            transports,
+            router,
+            reconnect,
+            retry_limit,
+            epoch_source,
+            read_deadline,
+            pull_wire_bytes,
+            ..
         } = self;
         let deadline = *read_deadline;
         for (s, t) in transports.iter_mut().enumerate() {
@@ -243,18 +313,117 @@ impl PsClient {
             })?;
             match reply {
                 Message::PullReply { entries, .. } => {
+                    // Dense reply accounting, by the wire formula pinned
+                    // in `net::message`: 13-byte header + per entry
+                    // 12 + 4·rank + 4·numel.
+                    let mut bytes = 13u64;
                     for (k, tensor) in entries {
                         let k = k as usize;
                         if k >= n_keys {
                             return Err(format!("server {s} returned unknown key {k}"));
                         }
+                        bytes += 12 + 4 * tensor.shape().len() as u64 + 4 * tensor.len() as u64;
                         out[k] = tensor;
                         filled[k] = true;
                     }
+                    *pull_wire_bytes += bytes;
                 }
                 Message::Error { what } => return Err(format!("server {s}: {what}")),
                 m => return Err(format!("unexpected pull reply {m:?}")),
             }
+        }
+        if let Some(k) = filled.iter().position(|&f| !f) {
+            return Err(format!("server never returned key {k}"));
+        }
+        Ok(())
+    }
+
+    /// The compressed pull path: request `CompressedPull`, stream-decode
+    /// the `CompressedPullReply` straight from the receive buffer, and
+    /// advance the per-key reconstruction — `write_into` for absolute
+    /// entries, `scatter_axpy(1.0, ..)` for deltas, the exact
+    /// arithmetic the server replays on its mirror. On success the
+    /// reply's stamp becomes the server's `base` for the next delta
+    /// pull; faulted pulls leave the old base in place, so the replay
+    /// (or the next pull) announces a base the server no longer holds
+    /// and gets a full resync instead of a delta against lost state.
+    fn pull_all_compressed_into(&mut self, out: &mut Vec<Tensor>) -> Result<(), String> {
+        let n_keys = self.router.n_keys();
+        out.clear();
+        out.resize(n_keys, Tensor::zeros(&[0]));
+        let mut filled = vec![false; n_keys];
+        let worker = self.worker_id;
+        let delta = self.pull_codec == PullCodec::Quant8Delta;
+        let PsClient {
+            transports,
+            router,
+            reconnect,
+            retry_limit,
+            epoch_source,
+            read_deadline,
+            pull_wire_bytes,
+            pull_base,
+            pull_recon,
+            ..
+        } = self;
+        let deadline = *read_deadline;
+        for (s, t) in transports.iter_mut().enumerate() {
+            let keys = router.keys_of(s);
+            if keys.is_empty() {
+                continue;
+            }
+            let base = if delta { pull_base[s] } else { 0 };
+            send_retry(t, reconnect, *retry_limit, deadline, s, &mut |w| {
+                wire::compressed_pull(w, worker, stamp(epoch_source), delta, base, keys)
+            })?;
+        }
+        for (s, t) in transports.iter_mut().enumerate() {
+            let keys = router.keys_of(s);
+            if keys.is_empty() {
+                continue;
+            }
+            let base = if delta { pull_base[s] } else { 0 };
+            let mut new_base = 0u64;
+            let bytes = recv_pull_reply_retry(
+                t,
+                reconnect,
+                *retry_limit,
+                deadline,
+                s,
+                &mut |w| {
+                    wire::compressed_pull(w, worker, stamp(epoch_source), delta, base, keys)
+                },
+                &mut |mut body| {
+                    new_base = body.stamp;
+                    while let Some(e) = body.next_entry() {
+                        let e = e?;
+                        let k = e.key as usize;
+                        if k >= n_keys {
+                            return Err(format!("server {s} returned unknown key {k}"));
+                        }
+                        let numel: usize = e.shape.iter().product();
+                        let recon = pull_recon.entry(e.key).or_default();
+                        if e.delta {
+                            if recon.len() != numel {
+                                return Err(format!(
+                                    "server {s} sent a delta for key {k} without a \
+                                     matching base reconstruction"
+                                ));
+                            }
+                            e.body.scatter_axpy(1.0, recon)?;
+                        } else {
+                            recon.clear();
+                            recon.resize(numel, 0.0);
+                            e.body.write_into(recon)?;
+                        }
+                        out[k] = Tensor::from_vec(&e.shape, recon.clone());
+                        filled[k] = true;
+                    }
+                    Ok(())
+                },
+            )?;
+            *pull_wire_bytes += bytes;
+            pull_base[s] = new_base;
         }
         if let Some(k) = filled.iter().position(|&f| !f) {
             return Err(format!("server never returned key {k}"));
@@ -490,6 +659,74 @@ fn recv_retry(
             }
             Ok(m) => return Ok(m),
             Err(e) => e,
+        };
+        // Reconnect and replay until a send lands or the budget is out.
+        loop {
+            if attempts >= retry || reconnect.is_none() {
+                return Err(format!("server {s}: {err} (after {attempts} retries)"));
+            }
+            attempts += 1;
+            let replayed = reconnect.as_mut().unwrap()(s).and_then(|fresh| {
+                *t = fresh;
+                t.set_read_deadline(deadline)?;
+                t.send_with(&mut *encode)
+            });
+            if replayed.is_ok() {
+                break;
+            }
+        }
+    }
+}
+
+/// Receive one `CompressedPullReply` from server `s`, decoding it in
+/// place via the streaming [`wire::CompressedPullReplyBody`] — no owned
+/// body per entry — and returning the reply frame's byte length (the
+/// pull-direction wire measurement). Transport faults and stale-route
+/// `Error` replies reconnect and replay `encode` exactly like
+/// [`recv_retry`]; any other reply, and any error out of `on_reply`,
+/// is fatal.
+fn recv_pull_reply_retry(
+    t: &mut Box<dyn Transport>,
+    reconnect: &mut Option<Reconnect>,
+    retry: usize,
+    deadline: Option<Duration>,
+    s: usize,
+    encode: &mut dyn FnMut(&mut Writer),
+    on_reply: &mut dyn FnMut(wire::CompressedPullReplyBody) -> Result<(), String>,
+) -> Result<u64, String> {
+    enum Verdict {
+        /// A pull reply was decoded (or fatally rejected).
+        Reply(Result<u64, String>),
+        /// A stale-route error: reconnect and replay.
+        Stale(String),
+    }
+    let mut attempts = 0usize;
+    loop {
+        let mut verdict: Option<Verdict> = None;
+        let res = t.recv_with(&mut |frame| {
+            verdict = Some(if wire::is_compressed_pull_reply(frame) {
+                Verdict::Reply(
+                    wire::CompressedPullReplyBody::decode(frame)
+                        .and_then(&mut *on_reply)
+                        .map(|()| frame.len() as u64),
+                )
+            } else {
+                match Message::decode(frame) {
+                    Ok(Message::Error { what }) if is_stale_route(&what) => Verdict::Stale(what),
+                    Ok(Message::Error { what }) => {
+                        Verdict::Reply(Err(format!("server {s}: {what}")))
+                    }
+                    Ok(m) => Verdict::Reply(Err(format!("unexpected pull reply {m:?}"))),
+                    Err(e) => Verdict::Reply(Err(e)),
+                }
+            });
+            Ok(())
+        });
+        let err = match (res, verdict) {
+            (Ok(()), Some(Verdict::Reply(r))) => return r,
+            (Ok(()), Some(Verdict::Stale(what))) => format!("stale route: {what}"),
+            (Ok(()), None) => return Err(format!("server {s}: empty reply")),
+            (Err(e), _) => e,
         };
         // Reconnect and replay until a send lands or the budget is out.
         loop {
@@ -981,6 +1218,117 @@ mod tests {
         let b = run();
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.data(), y.data());
+        }
+    }
+
+    #[test]
+    fn quant8_pull_roundtrips_shapes_and_exact_values() {
+        let (mut client, handles) = cluster(Optimizer::Sgd { lr: 1.0 }, UpdateMode::Async);
+        client.set_pull_codec(PullCodec::Quant8);
+        assert_eq!(client.pull_codec(), PullCodec::Quant8);
+        // All-equal stores quantize losslessly (q = 127, scale = max/127),
+        // so the dequantized pull must be exact.
+        let params = client.pull_all().unwrap();
+        assert_eq!(params[0].data(), &vec![1.0; 100][..]);
+        assert_eq!(params[1].data(), &vec![2.0; 10][..]);
+        assert_eq!(params[2].data(), &vec![3.0; 50][..]);
+        // Shapes survive the compressed pull ...
+        assert_eq!(params[0].shape(), &[100]);
+        assert_eq!(params[1].shape(), &[10]);
+        // ... so dense gradients derived from pulled params still match
+        // the stored shapes and the push lands.
+        let grads = vec![
+            Tensor::from_vec(&[100], vec![0.25; 100]),
+            Tensor::from_vec(&[10], vec![0.5; 10]),
+            Tensor::from_vec(&[50], vec![1.0; 50]),
+        ];
+        client.push(0, &grads).unwrap();
+        let params = client.pull_all().unwrap();
+        assert_eq!(params[0].data()[0], 0.75); // 1 - 0.25, still exact
+        assert_eq!(params[1].data()[0], 1.5);
+        assert_eq!(params[2].data()[0], 2.0);
+        drop(client);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn delta_pull_tracks_updates_and_resyncs_to_full_pull() {
+        use crate::ps::compress::quantize8_dense;
+        let (mut client, handles) = cluster(Optimizer::Sgd { lr: 1.0 }, UpdateMode::Async);
+        client.set_pull_codec(PullCodec::Quant8Delta);
+        // First pull establishes the base (forced resync: no stamp yet).
+        let p0 = client.pull_all().unwrap();
+        assert_eq!(p0[0].data()[0], 1.0);
+        // Move the params, then delta-pull against the base.
+        let grads = test_grads();
+        client.push(0, &grads).unwrap();
+        let delta_view = client.pull_all().unwrap();
+        // Ground truth via a dense pull of the same store.
+        client.set_pull_codec(PullCodec::None);
+        let dense = client.pull_all().unwrap();
+        for (dv, truth) in delta_view.iter().zip(&dense) {
+            assert_eq!(dv.shape(), truth.shape());
+            for (a, b) in dv.data().iter().zip(truth.data()) {
+                assert!((a - b).abs() < 0.05, "delta recon {a} vs {b}");
+            }
+        }
+        // An out-of-date client (cache dropped -> base 0) is forced to
+        // resync, and the resync must equal a full stateless quant8
+        // pull of the live params exactly.
+        client.set_pull_codec(PullCodec::Quant8Delta);
+        let resynced = client.pull_all().unwrap();
+        for (r, truth) in resynced.iter().zip(&dense) {
+            let mut expect = vec![0.0f32; truth.len()];
+            quantize8_dense(truth.data()).write_into(&mut expect).unwrap();
+            assert_eq!(r.data(), &expect[..], "forced resync != full quant8 pull");
+        }
+        drop(client);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn pull_wire_bytes_match_per_direction_accounting() {
+        // Both pull paths report bytes by the exact wire formulas pinned
+        // in net::message: dense reply 13 + per key (12 + 4·rank +
+        // 4·numel); compressed reply 21 + per key (9 + 4·rank +
+        // (12 + numel)).
+        let (mut client, handles) = cluster(Optimizer::Sgd { lr: 1.0 }, UpdateMode::Async);
+        let sizes = [100u64, 10, 50];
+        let key_sets: Vec<Vec<u32>> = (0..2)
+            .map(|s| client.router().keys_of(s).to_vec())
+            .collect();
+        let per_server = |keys: &[u32], f: &dyn Fn(u64) -> u64| -> u64 {
+            keys.iter().map(|&k| f(sizes[k as usize])).sum()
+        };
+        let dense_total: u64 = key_sets
+            .iter()
+            .filter(|keys| !keys.is_empty())
+            .map(|keys| 13 + per_server(keys, &|n| 12 + 4 + 4 * n))
+            .sum();
+        let quant_total: u64 = key_sets
+            .iter()
+            .filter(|keys| !keys.is_empty())
+            .map(|keys| 21 + per_server(keys, &|n| 9 + 4 + 12 + n))
+            .sum();
+        client.pull_all().unwrap();
+        assert_eq!(client.pull_wire_bytes(), dense_total);
+        client.set_pull_codec(PullCodec::Quant8);
+        client.pull_all().unwrap();
+        assert_eq!(client.pull_wire_bytes(), dense_total + quant_total);
+        // A delta reply costs the same bytes as an absolute one.
+        client.set_pull_codec(PullCodec::Quant8Delta);
+        client.pull_all().unwrap();
+        assert_eq!(client.pull_wire_bytes(), dense_total + 2 * quant_total);
+        // Even at these tiny test sizes the pull direction shrinks
+        // substantially; the bench pins the >=3x cut at real sizes.
+        assert!(2 * quant_total < dense_total);
+        drop(client);
+        for h in handles {
+            h.join().unwrap();
         }
     }
 

@@ -92,6 +92,72 @@ impl CodecKind {
     }
 }
 
+/// Pull-direction codec: how the server encodes *parameters* back to a
+/// worker (the other half of Lemma 3.2's `2·S_p`). Plumbed from the CLI
+/// (`--pull-codec`) through `worker::pipeline::PipelineConfig` down to
+/// `ps::client::PsClient`. Unlike gradient push codecs, pulls must
+/// reconstruct the full parameter vector, so only dense-preserving
+/// quantization is offered:
+/// * [`None`](Self::None) — dense f32 `PullReply` frames (the seed
+///   behavior).
+/// * [`Quant8`](Self::Quant8) — stateless int8 broadcast: the server
+///   quantizes current parameters per key (deterministic round), the
+///   client dequantizes. Byte-identical across chain replicas, since
+///   the encoding is a pure function of the (replicated) store bytes.
+/// * [`Quant8Delta`](Self::Quant8Delta) — int8 *delta* against the
+///   client's last-pulled reconstruction, tracked server-side per
+///   worker and stamped; a stale/unknown stamp (first pull, lost
+///   reply, failover onto a promoted replica) forces a full resync.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PullCodec {
+    None,
+    Quant8,
+    Quant8Delta,
+}
+
+impl PullCodec {
+    /// Parse a CLI spec: `none`, `quant8` or `quant8-delta`.
+    pub fn parse(s: &str) -> Result<PullCodec, String> {
+        match s {
+            "none" | "dense" => Ok(PullCodec::None),
+            "quant8" => Ok(PullCodec::Quant8),
+            "quant8-delta" | "quant8delta" => Ok(PullCodec::Quant8Delta),
+            other => Err(format!(
+                "unknown pull codec {other:?} (none|quant8|quant8-delta)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PullCodec::None => "none",
+            PullCodec::Quant8 => "quant8",
+            PullCodec::Quant8Delta => "quant8-delta",
+        }
+    }
+
+    /// Exact wire payload bytes one pulled tensor of `numel` f32
+    /// elements costs under this codec (a delta body is the same size
+    /// as an absolute one — both are one quant8 payload).
+    pub fn wire_bytes_for(&self, numel: usize) -> usize {
+        match self {
+            PullCodec::None => 4 * numel,
+            PullCodec::Quant8 | PullCodec::Quant8Delta => 12 + numel,
+        }
+    }
+
+    /// Effective pull bytes for `dense_bytes` of f32 parameters — the
+    /// pull-direction S_p replacement `advisor::lemmas` uses, the twin
+    /// of [`CodecKind::effective_push_bytes`].
+    pub fn effective_pull_bytes(&self, dense_bytes: f64) -> f64 {
+        let numel = dense_bytes / 4.0;
+        match self {
+            PullCodec::None => dense_bytes,
+            PullCodec::Quant8 | PullCodec::Quant8Delta => 12.0 + numel,
+        }
+    }
+}
+
 /// A compressed gradient: (indices, values) sparse or quantized dense.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Compressed {
@@ -178,6 +244,28 @@ impl Compressed {
             Compressed::Quant8 { scale, q, .. } => {
                 for (o, &b) in out.iter_mut().zip(q) {
                     *o += alpha * *scale * b as f32;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Overwrite `out` with `decompress(self)` without building the
+    /// dense tensor — the pull path's *absolute* decode (a sparse body
+    /// zero-fills then scatters; quant8 assigns per element). Validates
+    /// first: on `Err`, `out` is untouched.
+    pub fn write_into(&self, out: &mut [f32]) -> Result<(), String> {
+        self.validate(out.len())?;
+        match self {
+            Compressed::Sparse { idx, val, .. } => {
+                out.fill(0.0);
+                for (&i, &v) in idx.iter().zip(val) {
+                    out[i as usize] = v;
+                }
+            }
+            Compressed::Quant8 { scale, q, .. } => {
+                for (o, &b) in out.iter_mut().zip(q) {
+                    *o = *scale * b as f32;
                 }
             }
         }
@@ -270,6 +358,31 @@ impl<'a> CompressedRef<'a> {
             CompressedRef::Quant8 { scale, q, .. } => {
                 for (o, &b) in out.iter_mut().zip(q) {
                     *o += alpha * scale * (b as i8) as f32;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Overwrite `out` with `decompress(self)` straight from the wire
+    /// bytes — the borrowed twin of [`Compressed::write_into`], with
+    /// element-for-element identical arithmetic (the delta-pull
+    /// protocol's bitwise reconstruction contract depends on the owned
+    /// and streaming decode paths agreeing exactly). Validates first:
+    /// on `Err`, `out` is untouched.
+    pub fn write_into(&self, out: &mut [f32]) -> Result<(), String> {
+        self.validate(out.len())?;
+        match *self {
+            CompressedRef::Sparse { idx, val, .. } => {
+                out.fill(0.0);
+                for (ib, vb) in idx.chunks_exact(4).zip(val.chunks_exact(4)) {
+                    let i = u32::from_le_bytes(ib.try_into().unwrap()) as usize;
+                    out[i] = f32::from_le_bytes(vb.try_into().unwrap());
+                }
+            }
+            CompressedRef::Quant8 { scale, q, .. } => {
+                for (o, &b) in out.iter_mut().zip(q) {
+                    *o = scale * (b as i8) as f32;
                 }
             }
         }
@@ -408,11 +521,22 @@ impl TopK {
 
 /// Linear int8 quantizer with optional stochastic rounding.
 pub fn quantize8(grad: &Tensor, stochastic: Option<&mut Rng>) -> Compressed {
-    let max = grad.data().iter().fold(0.0f32, |m, x| m.max(x.abs()));
-    let scale = if max == 0.0 { 1.0 } else { max / 127.0 };
     let mut rng = stochastic;
-    let q: Vec<i8> = grad
-        .data()
+    quantize8_impl(grad.data(), rng.as_deref_mut())
+}
+
+/// Deterministic (round-to-nearest) int8 quantization of a raw f32
+/// slice — the pull path's encoder. Byte-identical output for
+/// byte-identical input, which is what lets chain replicas serve
+/// byte-identical quant8 pull replies after a failover.
+pub fn quantize8_dense(data: &[f32]) -> Compressed {
+    quantize8_impl(data, None)
+}
+
+fn quantize8_impl(data: &[f32], mut rng: Option<&mut Rng>) -> Compressed {
+    let max = data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+    let scale = if max == 0.0 { 1.0 } else { max / 127.0 };
+    let q: Vec<i8> = data
         .iter()
         .map(|x| {
             let v = x / scale;
@@ -427,7 +551,7 @@ pub fn quantize8(grad: &Tensor, stochastic: Option<&mut Rng>) -> Compressed {
             r.clamp(-127.0, 127.0) as i8
         })
         .collect();
-    Compressed::Quant8 { numel: grad.len(), scale, q }
+    Compressed::Quant8 { numel: data.len(), scale, q }
 }
 
 #[cfg(test)]
@@ -574,6 +698,87 @@ mod tests {
         assert!(CodecKind::parse("topk:1.5").is_err());
         assert!(CodecKind::parse("topk:abc").is_err());
         assert!(CodecKind::parse("zstd").is_err());
+    }
+
+    #[test]
+    fn pull_codec_parse_and_name() {
+        assert_eq!(PullCodec::parse("none").unwrap(), PullCodec::None);
+        assert_eq!(PullCodec::parse("dense").unwrap(), PullCodec::None);
+        assert_eq!(PullCodec::parse("quant8").unwrap(), PullCodec::Quant8);
+        assert_eq!(PullCodec::parse("quant8-delta").unwrap(), PullCodec::Quant8Delta);
+        assert_eq!(PullCodec::parse("quant8delta").unwrap(), PullCodec::Quant8Delta);
+        assert!(PullCodec::parse("topk").is_err());
+        assert!(PullCodec::parse("zstd").is_err());
+        assert_eq!(PullCodec::None.name(), "none");
+        assert_eq!(PullCodec::Quant8.name(), "quant8");
+        assert_eq!(PullCodec::Quant8Delta.name(), "quant8-delta");
+    }
+
+    #[test]
+    fn pull_codec_wire_accounting() {
+        let n = 2048;
+        // quant8 pull bodies share the quant8 push body layout exactly.
+        assert_eq!(
+            PullCodec::Quant8.wire_bytes_for(n),
+            CodecKind::Quant8.wire_bytes_for(n)
+        );
+        assert_eq!(
+            PullCodec::Quant8Delta.wire_bytes_for(n),
+            PullCodec::Quant8.wire_bytes_for(n)
+        );
+        assert_eq!(PullCodec::None.wire_bytes_for(n), 4 * n);
+        // f64 form agrees with the exact usize form, and the quantized
+        // broadcast cuts the pull direction by >3.8x at this size.
+        for pc in [PullCodec::None, PullCodec::Quant8, PullCodec::Quant8Delta] {
+            assert_eq!(
+                pc.effective_pull_bytes((4 * n) as f64) as usize,
+                pc.wire_bytes_for(n)
+            );
+        }
+        let ratio = PullCodec::None.effective_pull_bytes((4 * n) as f64)
+            / PullCodec::Quant8.effective_pull_bytes((4 * n) as f64);
+        assert!(ratio > 3.8, "quant8 pull ratio {ratio}");
+    }
+
+    #[test]
+    fn quantize8_dense_matches_deterministic_quantize8() {
+        let g = Tensor::from_vec(&[64], (0..64).map(|i| (i as f32 * 0.31).cos()).collect());
+        assert_eq!(quantize8_dense(g.data()), quantize8(&g, None));
+    }
+
+    #[test]
+    fn write_into_matches_decompress() {
+        let sparse = Compressed::Sparse { numel: 6, idx: vec![1, 4], val: vec![2.5, -1.0] };
+        let quant = Compressed::Quant8 { numel: 4, scale: 0.5, q: vec![-3, 0, 7, 127] };
+        for c in [sparse, quant] {
+            let n = match &c {
+                Compressed::Sparse { numel, .. } | Compressed::Quant8 { numel, .. } => *numel,
+            };
+            // Nonzero garbage in the target: write_into must overwrite,
+            // not accumulate.
+            let mut out = vec![9.0f32; n];
+            c.write_into(&mut out).unwrap();
+            assert_eq!(out, c.decompress(&[n]).data());
+            // Length mismatch rejected with the target untouched.
+            let mut short = [7.0f32; 2];
+            assert!(c.write_into(&mut short).is_err());
+            assert_eq!(short, [7.0; 2]);
+        }
+    }
+
+    #[test]
+    fn quant8_pull_roundtrip_error_bounded() {
+        // The pull-direction contract: dequantized parameters are within
+        // scale/2 = max/254 of the stored values, per key.
+        let params: Vec<f32> = (0..500).map(|i| (i as f32 * 0.173).sin() * 3.0).collect();
+        let q = quantize8_dense(&params);
+        let mut recon = vec![0.0f32; 500];
+        q.write_into(&mut recon).unwrap();
+        let max = params.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        let bound = max / 254.0 + 1e-6;
+        for (a, b) in params.iter().zip(&recon) {
+            assert!((a - b).abs() <= bound, "{a} vs {b} (bound {bound})");
+        }
     }
 
     #[test]

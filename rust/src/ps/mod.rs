@@ -28,6 +28,8 @@
 //! | `PullReply`       | `u64 clock, u32 n, n × (u32 key, tensor)`        |
 //! | `Push`            | `u32 worker, u64 step, u64 seq, u64 epoch, u32 n, n × (u32 key, tensor)` |
 //! | `CompressedPush`  | `u32 worker, u64 step, u64 seq, u64 epoch, u32 n, n × (u32 key, u8 codec, body)` |
+//! | `CompressedPull`  | `u32 worker, u64 epoch, u8 delta, u64 base, u32 n, n × u32 key` |
+//! | `CompressedPullReply` | `u64 clock, u64 stamp, u32 n, n × (u32 key, u8 absolute, u32 rank, rank × u32 dim, quant8 body)` |
 //! | `PushAck`         | `u64 clock`                                      |
 //! | `Barrier`         | `u32 worker, u64 step, u64 epoch`                |
 //! | `BarrierRelease`  | `u64 step`                                       |
@@ -76,10 +78,26 @@
 //! `worker::pipeline::PipelineConfig` into [`PsClient`]); frames are
 //! self-describing per entry, and servers accept any mix — dense `Push`
 //! and `CompressedPush` may interleave freely on one connection (the
-//! top-k error-feedback residuals live entirely client-side). Pulls
-//! always return dense f32: workers need the full parameters, which is
-//! why Lemma 3.2's compressed form is `S_p + codec(S_p)`, not
-//! `2·codec(S_p)`.
+//! top-k error-feedback residuals live entirely client-side).
+//!
+//! ## CompressedPull bodies (parameter-pull compression)
+//!
+//! Pulls compress independently of pushes: a worker configured with a
+//! [`PullCodec`] sends `CompressedPull` instead of `Pull` and receives
+//! `CompressedPullReply`, whose entries carry quant8 parameter bodies
+//! (`u32 numel, u32 qlen (= numel), f32 scale, qlen × i8` — the same
+//! body layout as quant8 pushes). In `quant8-delta` mode the request
+//! carries the version stamp (`base`) of the client's last reply; the
+//! server quantizes the change against the per-worker reconstruction it
+//! kept from that stamp, and each entry's `absolute` byte says whether
+//! the body is a fresh absolute snapshot (stamp mismatch — reconnect,
+//! failover, first pull — forces an all-absolute resync) or a delta to
+//! add into the client's reconstruction. Stateless `quant8` replies are
+//! a pure function of the store bytes, so any chain replica serves
+//! byte-identical compressed pulls after a failover. With both
+//! directions compressed, Lemma 3.2's traffic term is
+//! `codec_pull(S_p) + codec_push(S_p)` instead of `2·S_p`
+//! (`advisor::lemmas::num_param_servers_with_codecs`).
 //!
 //! # Hot-path concurrency and zero-copy design
 //!
@@ -138,7 +156,8 @@
 //! (`coordinator::distributed::ServerSupervisor`), and clients
 //! re-resolve the shard's primary through their reconnect handler —
 //! killing a primary mid-run leaves final parameters byte-identical to
-//! a fault-free run (chaos-tested per codec, async + sync).
+//! a fault-free run (chaos-tested per codec — pull codecs included —
+//! async + sync).
 
 pub mod client;
 pub mod compress;
@@ -148,7 +167,9 @@ pub mod server;
 pub mod shard;
 
 pub use client::PsClient;
-pub use compress::{quantize8, CodecKind, Compressed, CompressedRef, DenseRef, TopK};
+pub use compress::{
+    quantize8, quantize8_dense, CodecKind, Compressed, CompressedRef, DenseRef, PullCodec, TopK,
+};
 pub use replica::NOT_PRIMARY;
 pub use router::{ReplicatedTopology, Router};
 pub use server::{serve, PsServerHandle, PsShared, UpdateMode};

@@ -32,6 +32,17 @@
 //!   changes (sync `ReplRelease` markers are ordered after every push
 //!   folded into the released step). Without replicas the guard is a
 //!   single atomic load — the PR-1 striped hot path is untouched.
+//! * **Compressed pulls across failover.** Replication never touches
+//!   the pull path: pulls are served once by the head and never
+//!   relayed (the advisor's replicated Lemma 3.2 form multiplies only
+//!   the push half by the chain factor). Stateless `quant8` pull
+//!   replies are a pure function of the replicated store bytes, so a
+//!   promoted replica serves compressed pulls byte-identical to the
+//!   dead primary's — chaos-tested in the failover matrix. Per-worker
+//!   `quant8-delta` reconstructions are deliberately NOT replicated:
+//!   a promoted head has no delta cache, so the client's stale `base`
+//!   stamp misses and the reply degrades to an all-absolute resync
+//!   (correct, just briefly dense-sized on the wire).
 //! * **Roles and epochs.** Replicas reject direct worker traffic with a
 //!   [`NOT_PRIMARY`]-tagged error carrying their routing epoch; the
 //!   client treats that as a stale route and re-resolves through its

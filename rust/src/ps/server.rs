@@ -5,7 +5,15 @@
 //! in parallel and pulls encode replies straight out of the store with
 //! zero tensor copies. `CompressedPush` frames are decoded streaming
 //! (`wire::CompressedPushBody`) and scatter-applied without ever
-//! materializing a dense tensor per entry. Two update modes (§3.3):
+//! materializing a dense tensor per entry. Pulls come in two flavors:
+//! the dense `Pull`/`PullReply` pair, and `CompressedPull` —
+//! quant8-bodied replies encoded straight from the store stripes,
+//! stateless (reply stamp 0, deterministic, byte-identical across
+//! chain members) or delta-encoded against a per-worker
+//! reconstruction cache ([`WorkerPullCache`]; stale base stamps force
+//! a full resync). Sync releases apply through the store's
+//! double-buffered [`StripedStore::apply_mean_batch`], so pulls keep
+//! streaming the published snapshot while the optimizer pass runs. Two update modes (§3.3):
 //! * [`UpdateMode::Async`] — gradients apply on arrival (Hogwild-style
 //!   [48]; the paper's assumed policy, hides I/O behind compute).
 //! * [`UpdateMode::Sync`]  — gradients fold into per-key running sums,
@@ -54,7 +62,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::{self, JoinHandle};
 
-use super::compress::{CompressedRef, DenseRef};
+use super::compress::{quantize8_dense, CompressedRef, DenseRef};
 use super::replica::{self, ReplicationState, NOT_PRIMARY, STALE_EPOCH};
 use super::shard::{ShardStore, StripedStore, DEFAULT_STRIPES};
 use crate::net::message::{wire, Message, EPOCH_UNFENCED};
@@ -91,12 +99,17 @@ pub enum UpdateMode {
     Sync { expected_workers: usize, backup_workers: usize },
 }
 
-/// Counters exported via `Message::Stats`.
+/// Counters exported via `Message::Stats`. `pull_wire_bytes` is
+/// in-process observability only (benches, tests): the `StatsReply`
+/// wire layout predates it and stays unchanged.
 #[derive(Debug, Default)]
 pub struct Counters {
     pub pulls: AtomicU64,
     pub pushes: AtomicU64,
     pub updates: AtomicU64,
+    /// Reply bytes sent in the pull direction (dense and compressed),
+    /// counted per successfully encoded reply frame.
+    pub pull_wire_bytes: AtomicU64,
 }
 
 /// One stripe's sync aggregation: `step -> key -> (running gradient
@@ -190,6 +203,20 @@ impl SyncShared {
     }
 }
 
+/// Per-worker delta-pull state: the server's mirror of the parameter
+/// values the client reconstructed from its last acknowledged
+/// compressed pull. `stamp` names the reply that produced `recon`; a
+/// request whose `base` doesn't match it (first pull, lost reply,
+/// promoted replica with an empty cache) gets a forced full resync —
+/// every entry absolute — under a fresh stamp. Both sides advance
+/// `recon` by the SAME dequantized wire bytes, so the server always
+/// deltas against exactly what the client holds and quantization error
+/// never compounds across pulls.
+struct WorkerPullCache {
+    stamp: u64,
+    recon: BTreeMap<u32, Vec<f32>>,
+}
+
 /// Shared server state handed to every connection handler.
 pub struct PsShared {
     pub store: StripedStore,
@@ -222,6 +249,18 @@ pub struct PsShared {
     /// the dead primary already forwarded is applied before client
     /// replays can raise the seq watermarks past it.
     chain_feeds: AtomicUsize,
+    /// Delta-pull reconstruction caches, one per worker (quant8-delta
+    /// pull codec only; stateless quant8 pulls never touch this).
+    /// Deliberately NOT replicated: a promoted replica starts with an
+    /// empty cache, so a worker's first delta pull after failover
+    /// misses its base stamp and gets a forced full resync.
+    /// Lock order: pull_cache, then store stripe read locks — nothing
+    /// else takes both, so no cycle.
+    pull_cache: Mutex<BTreeMap<u32, WorkerPullCache>>,
+    /// Issuer for delta-pull reply stamps (`fetch_add(1) + 1`, so
+    /// stamps are >= 1; stamp 0 is the stateless-reply sentinel a
+    /// client can never present as a valid base).
+    pull_stamp: AtomicU64,
 }
 
 impl PsShared {
@@ -245,6 +284,8 @@ impl PsShared {
             primary: AtomicBool::new(true),
             epoch: AtomicU64::new(0),
             chain_feeds: AtomicUsize::new(0),
+            pull_cache: Mutex::new(BTreeMap::new()),
+            pull_stamp: AtomicU64::new(0),
         })
     }
 
@@ -686,6 +727,13 @@ fn fold_sync_compressed(shared: &PsShared, step: u64, key: u32, g: &CompressedRe
 /// repl -> agg -> store is the global lock order; the membership cut
 /// lock keeps a join snapshot from splitting a release).
 ///
+/// The drained batch goes through
+/// [`StripedStore::apply_mean_batch`]: the store publishes per-stripe
+/// read snapshots (freeze), applies stripes in parallel (the
+/// `parallel-apply` feature; serial fallback otherwise), then thaws —
+/// so concurrent pulls keep streaming the pre-release snapshot instead
+/// of blocking on stripe write locks for the whole optimizer pass.
+///
 /// With a replication chain attached, the replication order lock is
 /// held across the whole release and a `ReplRelease` marker is
 /// forwarded at the end: a racing push either folded **and** forwarded
@@ -703,17 +751,22 @@ fn release_step(shared: &PsShared, bar: &mut BarrierState, step: u64) -> bool {
     if shared.stopped() {
         return false;
     }
+    let mut batch: Vec<(u32, Tensor, u32)> = Vec::new();
     for stripe in &shared.sync.agg {
         let drained = stripe.lock().unwrap().remove(&step);
         if let Some(grads) = drained {
-            for (k, (sum, n)) in grads {
-                shared
-                    .store
-                    .apply_mean(k, sum, n)
-                    .unwrap_or_else(|e| crate::warn_log!("ps", "sync apply failed", err = e));
-                shared.counters.updates.fetch_add(1, Ordering::Relaxed);
-            }
+            batch.extend(grads.into_iter().map(|(k, (sum, n))| (k, sum, n)));
         }
+    }
+    let (applied, errors) = shared.store.apply_mean_batch(batch);
+    // `updates` counts every drained key, applied or rejected — the
+    // same accounting as the old per-key loop.
+    shared
+        .counters
+        .updates
+        .fetch_add(applied + errors.len() as u64, Ordering::Relaxed);
+    for e in errors {
+        crate::warn_log!("ps", "sync apply failed", err = e);
     }
     bar.released_below = bar.released_below.max(step + 1);
     shared
@@ -738,6 +791,117 @@ fn release_step(shared: &PsShared, bar: &mut BarrierState, step: u64) -> bool {
         replica::forward_release(conns, step);
     }
     true
+}
+
+/// Encode a stateless quant8 pull reply straight from the store: every
+/// entry absolute, stamp 0 (the client keeps no delta base against
+/// it), no per-worker state touched. Quantization is deterministic, so
+/// the reply is a pure function of the store bytes — byte-identical
+/// stores (replicated chains after failover) produce byte-identical
+/// replies, which the chaos suite pins. An unknown key rolls the
+/// partial body back and replaces it with an `Error` frame, exactly
+/// like the dense pull path.
+fn send_stateless_pull(
+    t: &mut Box<dyn Transport>,
+    shared: &PsShared,
+    keys: &[u32],
+) -> Result<(), String> {
+    t.send_with(&mut |w| {
+        let frame_start = w.len();
+        wire::compressed_pull_reply_header(w, shared.store.clock(), 0, keys.len() as u32);
+        for &k in keys {
+            let encoded = shared
+                .store
+                .with_tensor(k, |tensor| (tensor.shape().to_vec(), quantize8_dense(tensor.data())));
+            match encoded {
+                Some((shape, c)) => wire::compressed_pull_entry(&mut *w, k, false, &shape, &c),
+                None => {
+                    w.truncate(frame_start);
+                    Message::Error { what: format!("unknown key {k}") }.encode_into(w);
+                    return;
+                }
+            }
+        }
+        shared
+            .counters
+            .pull_wire_bytes
+            .fetch_add((w.len() - frame_start) as u64, Ordering::Relaxed);
+    })
+}
+
+/// Encode a delta pull reply for `worker`: entries are quantized
+/// deltas against the per-worker reconstruction cache when the
+/// request's `base` stamp matches (and the cached vector has the right
+/// length), absolute quant8 bodies otherwise. A stale or zero `base`
+/// forces a full resync: the cache is cleared and rebuilt from this
+/// reply's absolute entries.
+///
+/// Bitwise-symmetry contract with the client: absolute entries advance
+/// the reconstruction by `write_into` (assignment) and delta entries
+/// by `scatter_axpy(1.0, ..)` on BOTH sides, so server recon == client
+/// recon bit for bit and each delta is quantized against what the
+/// client actually holds — quantization error cannot compound across
+/// pulls. On an unknown-key abort the reply is replaced by an `Error`
+/// frame and the cache stamp is zeroed, so the worker's next delta
+/// pull resyncs instead of deltaing against a half-updated mirror.
+///
+/// The cache lock is held across the encode, serializing concurrent
+/// delta pulls from the same worker map-wide; workers pull one batch
+/// at a time, so in practice different workers only contend on the map
+/// lookup.
+fn send_delta_pull(
+    t: &mut Box<dyn Transport>,
+    shared: &PsShared,
+    worker: u32,
+    base: u64,
+    keys: &[u32],
+) -> Result<(), String> {
+    let stamp = shared.pull_stamp.fetch_add(1, Ordering::Relaxed) + 1;
+    let mut cache = shared.pull_cache.lock().unwrap();
+    let entry = cache
+        .entry(worker)
+        .or_insert_with(|| WorkerPullCache { stamp: 0, recon: BTreeMap::new() });
+    let hit = base != 0 && entry.stamp == base;
+    if !hit {
+        entry.recon.clear();
+    }
+    let mut ok = true;
+    let sent = t.send_with(&mut |w| {
+        let frame_start = w.len();
+        wire::compressed_pull_reply_header(w, shared.store.clock(), stamp, keys.len() as u32);
+        for &k in keys {
+            let Some((shape, current)) = shared
+                .store
+                .with_tensor(k, |tensor| (tensor.shape().to_vec(), tensor.data().to_vec()))
+            else {
+                w.truncate(frame_start);
+                Message::Error { what: format!("unknown key {k}") }.encode_into(w);
+                ok = false;
+                return;
+            };
+            let cached_len = entry.recon.get(&k).map(|r| r.len());
+            if hit && cached_len == Some(current.len()) {
+                let recon = entry.recon.get_mut(&k).expect("cached_len checked presence");
+                let delta: Vec<f32> =
+                    current.iter().zip(recon.iter()).map(|(c, r)| c - r).collect();
+                let c = quantize8_dense(&delta);
+                c.scatter_axpy(1.0, recon).expect("recon length checked");
+                wire::compressed_pull_entry(&mut *w, k, true, &shape, &c);
+            } else {
+                let c = quantize8_dense(&current);
+                let mut recon = vec![0.0; current.len()];
+                c.write_into(&mut recon).expect("recon allocated to match");
+                entry.recon.insert(k, recon);
+                wire::compressed_pull_entry(&mut *w, k, false, &shape, &c);
+            }
+        }
+        shared
+            .counters
+            .pull_wire_bytes
+            .fetch_add((w.len() - frame_start) as u64, Ordering::Relaxed);
+    });
+    entry.stamp = if ok { stamp } else { 0 };
+    sent
 }
 
 /// Registers a connection as a replication feed on its first forwarded
@@ -865,7 +1029,39 @@ pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
                             return;
                         }
                     }
+                    shared
+                        .counters
+                        .pull_wire_bytes
+                        .fetch_add((w.len() - frame_start) as u64, Ordering::Relaxed);
                 });
+                if sent.is_err() {
+                    return;
+                }
+            }
+            Message::CompressedPull { worker, epoch, delta, base, keys } => {
+                // Compressed pull: same role/fence gates as the dense
+                // pull, then the reply encodes quant8 bodies straight
+                // from the store stripes — stateless (stamp 0) or
+                // delta-encoded against this worker's reconstruction
+                // cache.
+                shared.counters.pulls.fetch_add(1, Ordering::Relaxed);
+                if !shared.is_primary() {
+                    if t.send(&not_primary_error(&shared)).is_err() {
+                        return;
+                    }
+                    continue;
+                }
+                if let Some(err) = stale_epoch_error(&shared, epoch) {
+                    if t.send(&err).is_err() {
+                        return;
+                    }
+                    continue;
+                }
+                let sent = if delta {
+                    send_delta_pull(&mut t, &shared, worker, base, &keys)
+                } else {
+                    send_stateless_pull(&mut t, &shared, &keys)
+                };
                 if sent.is_err() {
                     return;
                 }
@@ -2734,6 +2930,247 @@ mod tests {
         assert!(c.recv().is_err(), "halted server must not reply");
         assert_eq!(shared.counters.updates.load(Ordering::Relaxed), 0);
         drop(c);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    // ---- compressed pulls --------------------------------------------
+
+    #[test]
+    fn stateless_compressed_pull_dequantizes_within_bounds() {
+        let orig0 = vec![2.0, -4.0, 6.0, -8.0];
+        let orig1 = vec![0.0, 0.0];
+        let shared = PsShared::new(
+            store_with(&[(0, orig0.clone()), (1, orig1.clone())], Optimizer::Sgd { lr: 1.0 }),
+            UpdateMode::Async,
+        );
+        let mut handles = Vec::new();
+        let mut c = conn_to(&shared, &mut handles);
+        c.send(&Message::CompressedPull {
+            worker: 0,
+            epoch: EPOCH_UNFENCED,
+            delta: false,
+            base: 0,
+            keys: vec![0, 1],
+        })
+        .unwrap();
+        let Message::CompressedPullReply { clock, stamp, entries } = c.recv().unwrap() else {
+            panic!("expected CompressedPullReply");
+        };
+        assert_eq!(clock, 0);
+        assert_eq!(stamp, 0, "stateless replies carry no delta stamp");
+        assert_eq!(entries.len(), 2);
+        for ((key, orig), e) in [(0u32, &orig0), (1u32, &orig1)].iter().zip(&entries) {
+            assert_eq!(*key, e.key);
+            assert!(!e.delta, "stateless replies are all-absolute");
+            assert_eq!(e.shape, vec![orig.len()], "pull must carry the stored shape");
+            let mut out = vec![f32::NAN; orig.len()];
+            e.body.write_into(&mut out).unwrap();
+            let max = orig.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+            let bound = max / 254.0 + 1e-6;
+            for (o, x) in out.iter().zip(orig.iter()) {
+                assert!((o - x).abs() <= bound, "|{o} - {x}| > {bound}");
+            }
+        }
+        // Wire accounting, pinned: reply header 21, quant8 entry
+        // 9 + 4·rank + (12 + numel) -> 21 + 29 + 27 = 77 bytes.
+        assert_eq!(shared.counters.pull_wire_bytes.load(Ordering::Relaxed), 77);
+        assert_eq!(shared.counters.pulls.load(Ordering::Relaxed), 1);
+        // Dense pull of key 0 adds 13 + (12 + 4*rank + 4*numel) = 45.
+        c.send(&Message::Pull { worker: 0, epoch: EPOCH_UNFENCED, keys: vec![0] }).unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::PullReply { .. }));
+        assert_eq!(shared.counters.pull_wire_bytes.load(Ordering::Relaxed), 77 + 45);
+        drop(c);
+        shared.halt();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn delta_pulls_track_resync_and_invalidate() {
+        let shared = PsShared::new(
+            store_with(&[(0, vec![100.0, -50.0, 25.0])], Optimizer::Sgd { lr: 1.0 }),
+            UpdateMode::Async,
+        );
+        let mut handles = Vec::new();
+        let mut c = conn_to(&shared, &mut handles);
+        let pull = |c: &mut Box<dyn Transport>, base: u64, keys: Vec<u32>| {
+            c.send(&Message::CompressedPull {
+                worker: 7,
+                epoch: EPOCH_UNFENCED,
+                delta: true,
+                base,
+                keys,
+            })
+            .unwrap();
+            c.recv().unwrap()
+        };
+
+        // First pull: no base -> forced full resync, absolute entries,
+        // fresh stamp >= 1.
+        let Message::CompressedPullReply { stamp: s1, entries, .. } = pull(&mut c, 0, vec![0])
+        else {
+            panic!("expected CompressedPullReply");
+        };
+        assert!(s1 >= 1);
+        assert_eq!(entries.len(), 1);
+        assert!(!entries[0].delta, "resync entries are absolute");
+        assert_eq!(entries[0].shape, vec![3]);
+        let mut recon = vec![0.0f32; 3];
+        entries[0].body.write_into(&mut recon).unwrap();
+
+        // Move the params: SGD lr 1.0, grad [10,20,30] -> [90,-70,-5].
+        c.send(&Message::Push {
+            worker: 7,
+            step: 0,
+            seq: 0,
+            epoch: EPOCH_UNFENCED,
+            entries: vec![(0, Tensor::from_vec(&[3], vec![10.0, 20.0, 30.0]))],
+        })
+        .unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+
+        // Second pull against s1: delta-encoded; advancing the client
+        // reconstruction by the dequantized delta lands within the
+        // delta's own quantization bound of the live params.
+        let Message::CompressedPullReply { stamp: s2, entries, .. } = pull(&mut c, s1, vec![0])
+        else {
+            panic!("expected CompressedPullReply");
+        };
+        assert!(s2 != 0 && s2 != s1);
+        assert!(entries[0].delta, "matched base stamp must delta-encode");
+        entries[0].body.scatter_axpy(1.0, &mut recon).unwrap();
+        for (r, want) in recon.iter().zip(&[90.0, -70.0, -5.0]) {
+            assert!((r - want).abs() < 0.2, "delta recon {r} vs {want}");
+        }
+
+        // Third pull with a stale base: forced resync, absolute again.
+        let Message::CompressedPullReply { stamp: s3, entries, .. } =
+            pull(&mut c, 0xdead, vec![0])
+        else {
+            panic!("expected CompressedPullReply");
+        };
+        assert!(!entries[0].delta, "stale base must force a full resync");
+        entries[0].body.write_into(&mut recon).unwrap();
+        for (r, want) in recon.iter().zip(&[90.0, -70.0, -5.0]) {
+            assert!((r - want).abs() < 0.5, "resync recon {r} vs {want}");
+        }
+
+        // Unknown key aborts the reply AND invalidates the stamp: the
+        // next pull against the last good stamp resyncs instead of
+        // deltaing against a half-updated mirror.
+        let Message::Error { what } = pull(&mut c, s3, vec![0, 42]) else {
+            panic!("expected Error for unknown key");
+        };
+        assert!(what.contains("unknown key 42"), "{what}");
+        let Message::CompressedPullReply { entries, .. } = pull(&mut c, s3, vec![0]) else {
+            panic!("expected CompressedPullReply");
+        };
+        assert!(!entries[0].delta, "aborted reply must invalidate the cache stamp");
+        drop(c);
+        shared.halt();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn stateless_compressed_pulls_byte_identical_across_chain() {
+        // The failover contract: stateless quant8 replies are a pure
+        // function of store bytes, so a promoted replica that mirrored
+        // the primary's pushes serves byte-identical reply frames.
+        let mut handles = Vec::new();
+        let mk = || {
+            PsShared::new(
+                store_with(&[(0, vec![1.0, 2.0, 3.0]), (1, vec![-4.0])], Optimizer::Sgd {
+                    lr: 0.5,
+                }),
+                UpdateMode::Async,
+            )
+        };
+        let primary = mk();
+        let replica = mk();
+        replica.set_role_replica();
+        primary.set_replicas(vec![conn_to(&replica, &mut handles)]);
+
+        let mut c = conn_to(&primary, &mut handles);
+        c.send(&Message::Push {
+            worker: 0,
+            step: 0,
+            seq: 0,
+            epoch: EPOCH_UNFENCED,
+            entries: vec![(0, Tensor::from_vec(&[3], vec![0.3, -0.7, 1.9]))],
+        })
+        .unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+        wait_until("replica apply", || replica.store.clock() == 1);
+        replica.promote(1);
+
+        let raw_pull = |c: &mut Box<dyn Transport>| {
+            c.send(&Message::CompressedPull {
+                worker: 0,
+                epoch: EPOCH_UNFENCED,
+                delta: false,
+                base: 0,
+                keys: vec![0, 1],
+            })
+            .unwrap();
+            let mut frame = Vec::new();
+            c.recv_with(&mut |f| {
+                frame = f.to_vec();
+                Ok(())
+            })
+            .unwrap();
+            frame
+        };
+        let mut c2 = conn_to(&replica, &mut handles);
+        let from_primary = raw_pull(&mut c);
+        let from_replica = raw_pull(&mut c2);
+        assert!(wire::is_compressed_pull_reply(&from_primary));
+        assert_eq!(from_primary, from_replica, "failover changed pull reply bytes");
+        drop(c);
+        drop(c2);
+        primary.halt();
+        replica.halt();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn compressed_pulls_respect_role_and_epoch_fences() {
+        let shared = PsShared::new(
+            store_with(&[(0, vec![1.0])], Optimizer::Sgd { lr: 1.0 }),
+            UpdateMode::Async,
+        );
+        shared.set_role_replica();
+        let mut handles = Vec::new();
+        let mut c = conn_to(&shared, &mut handles);
+        let pull = |c: &mut Box<dyn Transport>, epoch: u64| {
+            c.send(&Message::CompressedPull {
+                worker: 0,
+                epoch,
+                delta: false,
+                base: 0,
+                keys: vec![0],
+            })
+            .unwrap();
+            c.recv().unwrap()
+        };
+        let Message::Error { what } = pull(&mut c, EPOCH_UNFENCED) else {
+            panic!("replica must reject compressed pulls");
+        };
+        assert!(what.contains(NOT_PRIMARY), "{what}");
+        shared.promote(5);
+        let Message::Error { what } = pull(&mut c, 3) else {
+            panic!("stale epoch stamp must fence the pull");
+        };
+        assert!(what.contains(STALE_EPOCH), "{what}");
+        assert!(matches!(pull(&mut c, 5), Message::CompressedPullReply { .. }));
+        drop(c);
+        shared.halt();
         for h in handles {
             h.join().unwrap();
         }

@@ -13,7 +13,7 @@
 
 use crate::data::loader::{Batch, PrefetchLoader};
 use crate::ps::client::PsClient;
-use crate::ps::compress::CodecKind;
+use crate::ps::compress::{CodecKind, PullCodec};
 use crate::runtime::exec::TrainExecutable;
 use crate::tensor::Tensor;
 use crate::worker::profiler::{Step, StepProfiler};
@@ -33,6 +33,9 @@ pub struct PipelineConfig {
     /// Gradient codec for distributed pushes (§1.1.1 traffic saver;
     /// ignored by local runs, which never touch a parameter server).
     pub codec: CodecKind,
+    /// Parameter codec for distributed pulls — the other direction of
+    /// Lemma 3.2's traffic term (ignored by local runs).
+    pub pull_codec: PullCodec,
 }
 
 impl Default for PipelineConfig {
@@ -44,6 +47,7 @@ impl Default for PipelineConfig {
             prefetch_depth: 2,
             log_every: 0,
             codec: CodecKind::None,
+            pull_codec: PullCodec::None,
         }
     }
 }
@@ -59,6 +63,9 @@ pub struct WorkerStats {
     /// Encoded push-body bytes sent to parameter servers (0 for local
     /// runs) — the measured side of Lemma 3.2's traffic term.
     pub push_wire_bytes: u64,
+    /// Pull-reply body bytes received from parameter servers (0 for
+    /// local runs) — the pull-direction twin of `push_wire_bytes`.
+    pub pull_wire_bytes: u64,
 }
 
 fn spawn_loader<F>(make: F, batch: usize, steps: usize, depth: usize) -> PrefetchLoader
@@ -123,7 +130,14 @@ where
     let throughput = (cfg.steps * batch_size) as f64 / wall_s;
     Ok((
         params,
-        WorkerStats { losses, profiler, wall_s, throughput, push_wire_bytes: 0 },
+        WorkerStats {
+            losses,
+            profiler,
+            wall_s,
+            throughput,
+            push_wire_bytes: 0,
+            pull_wire_bytes: 0,
+        },
     ))
 }
 
@@ -152,7 +166,9 @@ where
     let t0 = std::time::Instant::now();
     let batch_size = grad_exe.meta.batch;
     client.set_codec(cfg.codec);
+    client.set_pull_codec(cfg.pull_codec);
     let wire_bytes_before = client.push_wire_bytes();
+    let pull_bytes_before = client.pull_wire_bytes();
     // The loader resumes at the restart step's sample offset, so a
     // restarted worker re-reads exactly the batches it has not yet
     // committed.
@@ -202,6 +218,7 @@ where
         wall_s,
         throughput,
         push_wire_bytes: client.push_wire_bytes() - wire_bytes_before,
+        pull_wire_bytes: client.pull_wire_bytes() - pull_bytes_before,
     })
 }
 

@@ -29,7 +29,7 @@ use dtlsda::ps::replica::STALE_EPOCH;
 use dtlsda::ps::router::{ReplicatedTopology, Router};
 use dtlsda::ps::server::{catch_up_from_tail, serve, PsShared, UpdateMode};
 use dtlsda::ps::shard::{Optimizer, ShardStore};
-use dtlsda::ps::CodecKind;
+use dtlsda::ps::{CodecKind, PullCodec};
 use dtlsda::tensor::Tensor;
 use dtlsda::util::prop;
 use dtlsda::util::rng::Rng;
@@ -40,6 +40,25 @@ fn chaos_seed() -> u64 {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(1)
+}
+
+/// Per-direction codec pair for one chaos run: gradient pushes and
+/// parameter pulls each compress independently.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Codecs {
+    push: CodecKind,
+    pull: PullCodec,
+}
+
+/// Dense both directions — the seed protocol.
+const DENSE: Codecs = Codecs { push: CodecKind::None, pull: PullCodec::None };
+
+fn push_only(push: CodecKind) -> Codecs {
+    Codecs { push, ..DENSE }
+}
+
+fn pull_only(pull: PullCodec) -> Codecs {
+    Codecs { pull, ..DENSE }
 }
 
 /// Run `f` on its own thread with a hang watchdog. A scenario that
@@ -148,7 +167,7 @@ impl ChaosCluster {
 fn make_client(
     cluster: &Arc<ChaosCluster>,
     worker: u32,
-    codec: CodecKind,
+    codecs: Codecs,
     plan: FaultPlan,
     log: FaultLog,
     incarnation: u64,
@@ -158,7 +177,9 @@ fn make_client(
     let transports: Vec<Box<dyn Transport>> = (0..n_servers)
         .map(|s| cluster.connect(s, &plan, &log, conn_id(worker as usize, s, incarnation, 0)))
         .collect();
-    let mut client = PsClient::with_codec(worker, transports, cluster.router.clone(), codec);
+    let mut client =
+        PsClient::with_codec(worker, transports, cluster.router.clone(), codecs.push);
+    client.set_pull_codec(codecs.pull);
     client.set_retry_limit(retry);
     client.set_seq_base(incarnation << 32);
     let cl = Arc::clone(cluster);
@@ -224,7 +245,7 @@ fn run_chaos(
     sync: bool,
     steps: usize,
     lr: f32,
-    codec: CodecKind,
+    codecs: Codecs,
     plan: FaultPlan,
     retry: usize,
     barrier_timeout_ms: u64,
@@ -238,7 +259,7 @@ fn run_chaos(
         let log = log.clone();
         handles.push(thread::spawn(move || {
             let targets = cluster.targets.clone();
-            let mut client = make_client(&cluster, w as u32, codec, plan, log, 0, retry);
+            let mut client = make_client(&cluster, w as u32, codecs, plan, log, 0, retry);
             run_quad_worker(&mut client, &targets, 0, steps, sync, None)
         }));
     }
@@ -258,7 +279,7 @@ fn run_chaos(
         let mut control = make_client(
             &cluster,
             u32::MAX,
-            CodecKind::None,
+            DENSE,
             FaultPlan::default(),
             FaultLog::new(),
             0,
@@ -302,26 +323,38 @@ fn assert_bitwise_eq(a: &[Tensor], b: &[Tensor], what: &str) {
 fn duplicated_and_replayed_frames_leave_parameters_byte_identical() {
     let seed = chaos_seed();
     with_watchdog(180, "dup/replay byte-identity", move || {
-        for codec in [
-            CodecKind::None,
-            CodecKind::TopK { fraction: 0.5 },
-            CodecKind::Quant8,
-            CodecKind::Quant8Sr,
+        // Quant8-delta pulls are absent by design: a duplicated or
+        // replayed delta request advances the server's stamp, so the
+        // client's NEXT pull degrades to an absolute resync whose
+        // dequantized values differ bitwise from the uninterrupted
+        // delta chain (still correct — covered by the convergence and
+        // bit-reproducibility tests). Stateless quant8 pull replies
+        // are a pure function of the store, so they stay on the
+        // byte-identity matrix.
+        for codecs in [
+            DENSE,
+            push_only(CodecKind::TopK { fraction: 0.5 }),
+            push_only(CodecKind::Quant8),
+            push_only(CodecKind::Quant8Sr),
+            pull_only(PullCodec::Quant8),
         ] {
             let clean = run_chaos(
-                seed, 2, 2, true, 12, 0.1, codec, FaultPlan::default(), 0, 2000,
+                seed, 2, 2, true, 12, 0.1, codecs, FaultPlan::default(), 0, 2000,
             )
             .unwrap();
             assert!(clean.fault_log.is_empty());
 
-            // Wire-level duplicates: every dup'd push must fold once.
+            // Wire-level duplicates: every dup'd push must fold once,
+            // and a duplicated pull request must yield a reply the
+            // client swallows without touching its parameters twice.
             let dup_plan = FaultPlan { seed, dup_send: 0.3, ..Default::default() };
-            let dup = run_chaos(seed, 2, 2, true, 12, 0.1, codec, dup_plan, 6, 2000).unwrap();
-            assert!(!dup.fault_log.is_empty(), "{codec:?}: dup plan injected nothing");
+            let dup = run_chaos(seed, 2, 2, true, 12, 0.1, codecs, dup_plan, 6, 2000).unwrap();
+            assert!(!dup.fault_log.is_empty(), "{codecs:?}: dup plan injected nothing");
             assert_bitwise_eq(&clean.finals, &dup.finals, "dup vs clean");
 
             // Lost replies: the client replays full frames (same seq,
-            // same staged bytes); the server deduplicates them.
+            // same staged bytes); the server deduplicates pushes and
+            // re-serves stateless pulls byte-identically.
             let replay_plan = FaultPlan {
                 seed,
                 drop_recv: 0.2,
@@ -329,10 +362,10 @@ fn duplicated_and_replayed_frames_leave_parameters_byte_identical() {
                 ..Default::default()
             };
             let replay =
-                run_chaos(seed, 2, 2, true, 12, 0.1, codec, replay_plan, 10, 2000).unwrap();
+                run_chaos(seed, 2, 2, true, 12, 0.1, codecs, replay_plan, 10, 2000).unwrap();
             assert!(
                 !replay.fault_log.is_empty(),
-                "{codec:?}: replay plan injected nothing"
+                "{codecs:?}: replay plan injected nothing"
             );
             assert_bitwise_eq(&clean.finals, &replay.finals, "replay vs clean");
         }
@@ -352,21 +385,23 @@ fn drop_and_reconnect_still_converges_for_every_codec() {
             disconnect_after: Some(120),
             ..Default::default()
         };
-        for (codec, steps, tol) in [
-            (CodecKind::None, 70, 0.1f32),
-            (CodecKind::TopK { fraction: 0.5 }, 140, 0.3),
-            (CodecKind::Quant8, 100, 0.3),
+        for (codecs, steps, tol) in [
+            (DENSE, 70, 0.1f32),
+            (push_only(CodecKind::TopK { fraction: 0.5 }), 140, 0.3),
+            (push_only(CodecKind::Quant8), 100, 0.3),
+            (pull_only(PullCodec::Quant8), 100, 0.3),
+            (pull_only(PullCodec::Quant8Delta), 100, 0.3),
         ] {
-            let out = run_chaos(seed, 2, 2, false, steps, 0.05, codec, plan.clone(), 10, 300)
-                .unwrap_or_else(|e| panic!("{codec:?} failed under drops: {e}"));
+            let out = run_chaos(seed, 2, 2, false, steps, 0.05, codecs, plan.clone(), 10, 300)
+                .unwrap_or_else(|e| panic!("{codecs:?} failed under drops: {e}"));
             assert!(
                 !out.fault_log.is_empty(),
-                "{codec:?}: drop plan injected nothing"
+                "{codecs:?}: drop plan injected nothing"
             );
             let d = l2_distance(&out.finals, &out.targets);
             assert!(
                 d < tol,
-                "{codec:?} did not converge under 5% drops: distance {d} (tol {tol})"
+                "{codecs:?} did not converge under 5% drops: distance {d} (tol {tol})"
             );
         }
     });
@@ -416,7 +451,7 @@ fn sync_worker_death_restarts_from_checkpoint_and_stays_live() {
                 let mut client = make_client(
                     &cluster,
                     w as u32,
-                    CodecKind::None,
+                    DENSE,
                     plan,
                     log.clone(),
                     incarnation,
@@ -458,7 +493,7 @@ fn sync_worker_death_restarts_from_checkpoint_and_stays_live() {
                 let mut control = make_client(
                     &cluster2,
                     u32::MAX,
-                    CodecKind::None,
+                    DENSE,
                     FaultPlan::default(),
                     FaultLog::new(),
                     0,
@@ -492,7 +527,7 @@ fn sync_worker_death_restarts_from_checkpoint_and_stays_live() {
         let mut control = make_client(
             &cluster,
             u32::MAX,
-            CodecKind::None,
+            DENSE,
             FaultPlan::default(),
             FaultLog::new(),
             0,
@@ -508,7 +543,7 @@ fn sync_worker_death_restarts_from_checkpoint_and_stays_live() {
         true,
         steps,
         0.1,
-        CodecKind::None,
+        DENSE,
         FaultPlan::default(),
         0,
         2000,
@@ -543,16 +578,18 @@ fn any_fault_plan_converges_or_errors_never_hangs() {
             disconnect_after: if g.bool() { Some(g.u64(5, 60)) } else { None },
         };
         let sync = g.bool();
-        let codec = *g.choice(&[
-            CodecKind::None,
-            CodecKind::TopK { fraction: 0.25 },
-            CodecKind::Quant8,
-            CodecKind::Quant8Sr,
+        let codecs = *g.choice(&[
+            DENSE,
+            push_only(CodecKind::TopK { fraction: 0.25 }),
+            push_only(CodecKind::Quant8),
+            push_only(CodecKind::Quant8Sr),
+            pull_only(PullCodec::Quant8),
+            pull_only(PullCodec::Quant8Delta),
         ]);
         let retry = g.usize(0, 6);
-        let label = format!("{plan:?} sync={sync} codec={codec:?} retry={retry}");
+        let label = format!("{plan:?} sync={sync} codecs={codecs:?} retry={retry}");
         let result = with_watchdog(60, &label, move || {
-            run_chaos(plan.seed, 2, 2, sync, 8, 0.05, codec, plan.clone(), retry, 300)
+            run_chaos(plan.seed, 2, 2, sync, 8, 0.05, codecs, plan.clone(), retry, 300)
         });
         match result {
             Ok(out) => {
@@ -589,7 +626,7 @@ fn chaos_runs_are_bit_reproducible() {
                 true,
                 10,
                 0.1,
-                CodecKind::Quant8,
+                Codecs { push: CodecKind::Quant8, pull: PullCodec::Quant8Delta },
                 plan.clone(),
                 10,
                 2000,
@@ -887,12 +924,14 @@ impl ReplicatedCluster {
 fn make_replicated_client(
     cluster: &Arc<ReplicatedCluster>,
     worker: u32,
-    codec: CodecKind,
+    codecs: Codecs,
     retry: usize,
 ) -> PsClient {
     let transports: Vec<Box<dyn Transport>> =
         (0..cluster.router.n_servers()).map(|s| cluster.connect_primary(s)).collect();
-    let mut client = PsClient::with_codec(worker, transports, cluster.router.clone(), codec);
+    let mut client =
+        PsClient::with_codec(worker, transports, cluster.router.clone(), codecs.push);
+    client.set_pull_codec(codecs.pull);
     client.set_retry_limit(retry);
     let cl = Arc::clone(cluster);
     client.set_reconnect(Box::new(move |s| loop {
@@ -913,7 +952,7 @@ fn make_replicated_client(
 fn run_replicated_scenario(
     seed: u64,
     sync: bool,
-    codec: CodecKind,
+    codecs: Codecs,
     steps: usize,
     kill_at: Option<usize>,
 ) -> (Vec<Tensor>, Vec<Tensor>, u64) {
@@ -926,7 +965,7 @@ fn run_replicated_scenario(
         let progress = progress.clone();
         worker_joins.push(thread::spawn(move || {
             let targets = cluster.targets.clone();
-            let mut client = make_replicated_client(&cluster, w as u32, codec, 2000);
+            let mut client = make_replicated_client(&cluster, w as u32, codecs, 2000);
             run_quad_worker(
                 &mut client,
                 &targets,
@@ -949,7 +988,7 @@ fn run_replicated_scenario(
             .unwrap_or_else(|e| panic!("worker {w} failed: {e}"));
     }
     let finals = {
-        let mut control = make_replicated_client(&cluster, u32::MAX, CodecKind::None, 0);
+        let mut control = make_replicated_client(&cluster, u32::MAX, DENSE, 0);
         control.pull_all().unwrap()
     };
     let epoch = cluster.topology.read().unwrap().epoch();
@@ -967,29 +1006,39 @@ fn run_replicated_scenario(
 fn killing_a_primary_mid_run_is_byte_identical_to_fault_free() {
     let seed = chaos_seed();
     with_watchdog(300, "primary-kill byte-identity", move || {
-        for codec in [
-            CodecKind::None,
-            CodecKind::TopK { fraction: 0.5 },
-            CodecKind::Quant8,
+        // Quant8-delta pulls are deliberately absent: a failover wipes
+        // the promoted head's per-worker delta cache, forcing resync
+        // replies whose bytes differ from the uninterrupted run even
+        // though the reconstructed parameters do not. Delta pulls are
+        // covered by the drop/reconnect convergence matrix instead.
+        for codecs in [
+            DENSE,
+            push_only(CodecKind::TopK { fraction: 0.5 }),
+            push_only(CodecKind::Quant8),
+            push_only(CodecKind::Quant8Sr),
+            pull_only(PullCodec::Quant8),
         ] {
             for sync in [false, true] {
                 let steps = if sync { 20 } else { 40 };
                 let (clean, _, epoch0) =
-                    run_replicated_scenario(seed, sync, codec, steps, None);
-                assert_eq!(epoch0, 0, "{codec:?} sync={sync}: clean run failed over");
+                    run_replicated_scenario(seed, sync, codecs, steps, None);
+                assert_eq!(epoch0, 0, "{codecs:?} sync={sync}: clean run failed over");
                 let (killed, targets, epoch1) =
-                    run_replicated_scenario(seed, sync, codec, steps, Some(steps / 3));
-                assert_eq!(epoch1, 1, "{codec:?} sync={sync}: expected exactly one failover");
+                    run_replicated_scenario(seed, sync, codecs, steps, Some(steps / 3));
+                assert_eq!(
+                    epoch1, 1,
+                    "{codecs:?} sync={sync}: expected exactly one failover"
+                );
                 for (k, (a, b)) in clean.iter().zip(&killed).enumerate() {
                     assert_eq!(
                         a.data(),
                         b.data(),
-                        "{codec:?} sync={sync}: key {k} diverged after failover"
+                        "{codecs:?} sync={sync}: key {k} diverged after failover"
                     );
                 }
-                if codec == CodecKind::None {
+                if codecs == DENSE {
                     let d = l2_distance(&killed, &targets);
-                    assert!(d < 0.5, "{codec:?} sync={sync}: did not converge: {d}");
+                    assert!(d < 0.5, "{codecs:?} sync={sync}: did not converge: {d}");
                 }
             }
         }
@@ -1005,25 +1054,34 @@ fn killing_a_primary_mid_run_is_byte_identical_to_fault_free() {
 fn promoted_replica_serves_reads_and_writes_after_kill() {
     let seed = chaos_seed();
     with_watchdog(120, "post-failover steady state", move || {
-        let cluster = ReplicatedCluster::new(seed, 2, 1, false, 0.1, 500);
-        let mut client = make_replicated_client(&cluster, 0, CodecKind::None, 2000);
-        let targets = cluster.targets.clone();
-        run_quad_worker(&mut client, &targets, 0, 5, false, None).unwrap();
-        cluster.fail_over(0);
-        // The same client rides its reconnect handler onto the new head
-        // and keeps training.
-        run_quad_worker(&mut client, &targets, 5, 15, false, None).unwrap();
-        let finals = client.pull_all().unwrap();
-        assert!(finals.iter().all(|t| t.data().iter().all(|x| x.is_finite())));
-        // Shard 0 is now headed by its former replica at epoch 1; the
-        // untouched shard 1 still has both chain members.
-        let topo = cluster.topology.read().unwrap();
-        assert_eq!(topo.epoch(), 1);
-        assert_eq!(topo.primary_of(0), 1);
-        assert_eq!(topo.chain_of(1), &[2, 3]);
-        drop(topo);
-        drop(client);
-        cluster.join_serve_threads();
+        // The delta-pull arm proves the client's base stamp survives
+        // the failover: the promoted head has no delta cache for this
+        // worker, replies with an all-absolute resync, and the client
+        // rebuilds its reconstruction instead of erroring out.
+        for codecs in [DENSE, pull_only(PullCodec::Quant8Delta)] {
+            let cluster = ReplicatedCluster::new(seed, 2, 1, false, 0.1, 500);
+            let mut client = make_replicated_client(&cluster, 0, codecs, 2000);
+            let targets = cluster.targets.clone();
+            run_quad_worker(&mut client, &targets, 0, 5, false, None).unwrap();
+            cluster.fail_over(0);
+            // The same client rides its reconnect handler onto the new
+            // head and keeps training.
+            run_quad_worker(&mut client, &targets, 5, 15, false, None).unwrap();
+            let finals = client.pull_all().unwrap();
+            assert!(
+                finals.iter().all(|t| t.data().iter().all(|x| x.is_finite())),
+                "{codecs:?}: non-finite parameters after failover"
+            );
+            // Shard 0 is now headed by its former replica at epoch 1;
+            // the untouched shard 1 still has both chain members.
+            let topo = cluster.topology.read().unwrap();
+            assert_eq!(topo.epoch(), 1);
+            assert_eq!(topo.primary_of(0), 1);
+            assert_eq!(topo.chain_of(1), &[2, 3]);
+            drop(topo);
+            drop(client);
+            cluster.join_serve_threads();
+        }
     });
 }
 
@@ -1038,17 +1096,18 @@ fn promoted_replica_serves_reads_and_writes_after_kill() {
 fn replica_death_resync_then_primary_kill_is_byte_identical() {
     let seed = chaos_seed();
     with_watchdog(300, "resync byte-identity", move || {
-        for codec in [
-            CodecKind::None,
-            CodecKind::TopK { fraction: 0.5 },
-            CodecKind::Quant8,
+        for codecs in [
+            DENSE,
+            push_only(CodecKind::TopK { fraction: 0.5 }),
+            push_only(CodecKind::Quant8),
+            pull_only(PullCodec::Quant8),
         ] {
             let steps = 30usize;
-            let (clean, _, epoch0) = run_replicated_scenario(seed, false, codec, steps, None);
-            assert_eq!(epoch0, 0, "{codec:?}: clean run changed topology");
+            let (clean, _, epoch0) = run_replicated_scenario(seed, false, codecs, steps, None);
+            assert_eq!(epoch0, 0, "{codecs:?}: clean run changed topology");
             let cluster = ReplicatedCluster::new(seed, 2, 1, false, 0.1, 500);
             let targets = cluster.targets.clone();
-            let mut client = make_replicated_client(&cluster, 0, codec, 2000);
+            let mut client = make_replicated_client(&cluster, 0, codecs, 2000);
             run_quad_worker(&mut client, &targets, 0, 10, false, None).unwrap();
             // Mid-chain decay: shard 0 drops to a single copy...
             cluster.kill_replica(0);
@@ -1060,12 +1119,12 @@ fn replica_death_resync_then_primary_kill_is_byte_identical() {
             run_quad_worker(&mut client, &targets, 20, steps, false, None).unwrap();
             {
                 let topo = cluster.topology.read().unwrap();
-                assert_eq!(topo.primary_of(0), joiner, "{codec:?}: joiner not promoted");
+                assert_eq!(topo.primary_of(0), joiner, "{codecs:?}: joiner not promoted");
                 assert_eq!(topo.chain_of(0), &[joiner]);
-                assert_eq!(topo.epoch(), 3, "{codec:?}: remove + extend + promote");
+                assert_eq!(topo.epoch(), 3, "{codecs:?}: remove + extend + promote");
             }
             let finals = {
-                let mut control = make_replicated_client(&cluster, u32::MAX, CodecKind::None, 0);
+                let mut control = make_replicated_client(&cluster, u32::MAX, DENSE, 0);
                 control.pull_all().unwrap()
             };
             drop(client);
@@ -1083,16 +1142,17 @@ fn replica_death_resync_then_primary_kill_is_byte_identical() {
 fn add_server_joiner_is_byte_identical_after_double_failover() {
     let seed = chaos_seed();
     with_watchdog(300, "add-server byte-identity", move || {
-        for codec in [
-            CodecKind::None,
-            CodecKind::TopK { fraction: 0.5 },
-            CodecKind::Quant8,
+        for codecs in [
+            DENSE,
+            push_only(CodecKind::TopK { fraction: 0.5 }),
+            push_only(CodecKind::Quant8),
+            pull_only(PullCodec::Quant8),
         ] {
             let steps = 30usize;
-            let (clean, _, _) = run_replicated_scenario(seed, false, codec, steps, None);
+            let (clean, _, _) = run_replicated_scenario(seed, false, codecs, steps, None);
             let cluster = ReplicatedCluster::new(seed, 2, 1, false, 0.1, 500);
             let targets = cluster.targets.clone();
-            let mut client = make_replicated_client(&cluster, 0, codec, 2000);
+            let mut client = make_replicated_client(&cluster, 0, codecs, 2000);
             run_quad_worker(&mut client, &targets, 0, 5, false, None).unwrap();
             // Scale out: shard 0 grows a third copy mid-run.
             let joiner = cluster.grow(0);
@@ -1105,7 +1165,7 @@ fn add_server_joiner_is_byte_identical_after_double_failover() {
             run_quad_worker(&mut client, &targets, 25, steps, false, None).unwrap();
             assert_eq!(cluster.topology.read().unwrap().primary_of(0), joiner);
             let finals = {
-                let mut control = make_replicated_client(&cluster, u32::MAX, CodecKind::None, 0);
+                let mut control = make_replicated_client(&cluster, u32::MAX, DENSE, 0);
                 control.pull_all().unwrap()
             };
             drop(client);
@@ -1125,18 +1185,18 @@ fn whole_chain_loss_reprovisions_from_checkpoint() {
     with_watchdog(120, "chain-loss re-provision", move || {
         let cluster = ReplicatedCluster::new(seed, 2, 1, false, 0.1, 500);
         let targets = cluster.targets.clone();
-        let mut client = make_replicated_client(&cluster, 0, CodecKind::None, 2000);
+        let mut client = make_replicated_client(&cluster, 0, DENSE, 2000);
         run_quad_worker(&mut client, &targets, 0, 10, false, None).unwrap();
         // Checkpoint the authoritative parameters, then lose the chain.
         let ck = {
-            let mut control = make_replicated_client(&cluster, u32::MAX, CodecKind::None, 0);
+            let mut control = make_replicated_client(&cluster, u32::MAX, DENSE, 0);
             control.pull_all().unwrap()
         };
         cluster.kill_chain(0);
         let phys = cluster.reprovision(0, &ck);
         // The restored shard serves the checkpointed bytes verbatim.
         let restored = {
-            let mut control = make_replicated_client(&cluster, u32::MAX, CodecKind::None, 0);
+            let mut control = make_replicated_client(&cluster, u32::MAX, DENSE, 0);
             control.pull_all().unwrap()
         };
         assert_bitwise_eq(&ck, &restored, "restored vs checkpoint");
@@ -1170,7 +1230,7 @@ fn epoch_fence_blocks_gray_failed_deposed_primary() {
         let cluster = ReplicatedCluster::new(seed, 2, 1, false, 0.1, 500);
         let targets = cluster.targets.clone();
         let routing_epoch = Arc::new(AtomicU64::new(0));
-        let mut client = make_replicated_client(&cluster, 0, CodecKind::None, 2000);
+        let mut client = make_replicated_client(&cluster, 0, DENSE, 2000);
         client.set_epoch_source(routing_epoch.clone());
         run_quad_worker(&mut client, &targets, 0, 5, false, None).unwrap();
 
@@ -1244,7 +1304,7 @@ fn injected_latency_is_detected_as_straggler() {
                 };
                 let targets = cluster.targets.clone();
                 let mut client =
-                    make_client(&cluster, w as u32, CodecKind::None, plan, log, 0, 0);
+                    make_client(&cluster, w as u32, DENSE, plan, log, 0, 0);
                 let t0 = Instant::now();
                 run_quad_worker(&mut client, &targets, 0, steps, false, None).unwrap();
                 t0.elapsed().as_secs_f64() / steps as f64
