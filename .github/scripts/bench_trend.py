@@ -18,6 +18,10 @@ when present (absent keys are skipped, so old JSONs never fail):
   dense broadcast).
 * applyserve_pull_ops_per_s must be > 0 (pulls keep flowing while the
   batched optimizer apply runs in its freeze/thaw window).
+* allreduce_ring_rounds_per_s and allreduce_tree_rounds_per_s must be
+  > 0 (the --backend allreduce data path completes collective rounds).
+* allreduce_wire_ratio_dense_over_quant8 must be >= 1.5 (compressed
+  contributions must actually cut collective bytes-on-wire).
 """
 
 import json
@@ -25,6 +29,7 @@ import sys
 
 THRESHOLD = 0.75  # fail below 75% of baseline throughput (>25% drop)
 PULL_RATIO_FLOOR = 3.0  # compressed pulls must beat dense by >= 3x
+ALLREDUCE_RATIO_FLOOR = 1.5  # quant8 collectives must beat dense wire bytes
 
 
 def row_key(row):
@@ -59,6 +64,21 @@ def check_summary_gates(current):
         print(f"{verdict} {key}: {ops:.1f}")
         if ops <= 0:
             failures.append(f"{key} = {ops:.1f} (pulls stalled during apply)")
+    for key in ("allreduce_ring_rounds_per_s", "allreduce_tree_rounds_per_s"):
+        if key not in current:
+            continue
+        rounds = float(current[key])
+        verdict = "ok      " if rounds > 0 else "FAIL    "
+        print(f"{verdict} {key}: {rounds:.1f}")
+        if rounds <= 0:
+            failures.append(f"{key} = {rounds:.1f} (collective made no progress)")
+    key = "allreduce_wire_ratio_dense_over_quant8"
+    if key in current:
+        ratio = float(current[key])
+        verdict = "ok      " if ratio >= ALLREDUCE_RATIO_FLOOR else "FAIL    "
+        print(f"{verdict} {key}: {ratio:.2f}x (floor {ALLREDUCE_RATIO_FLOOR:.1f}x)")
+        if ratio < ALLREDUCE_RATIO_FLOOR:
+            failures.append(f"{key} = {ratio:.2f}x < {ALLREDUCE_RATIO_FLOOR:.1f}x")
     return failures
 
 

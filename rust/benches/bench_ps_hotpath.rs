@@ -17,6 +17,10 @@
 //!   workers race a background thread doing batched optimizer applies
 //!   through the double-buffered freeze/thaw window, demonstrating
 //!   nonzero pull throughput during (parallel) apply.
+//! * An allreduce series (`mode=allreduce-ring`/`allreduce-tree`): the
+//!   `--backend allreduce` data path over an in-proc mesh, dense and
+//!   quant8 contributions, recording collective rounds/s and real
+//!   bytes-on-wire per direction (reduce vs broadcast).
 //!
 //! The `MB/s` column stays *logical* (dense-equivalent bytes moved per
 //! second) so rows are comparable across codecs; `pushMB`/`pullMB` are
@@ -31,6 +35,7 @@ use std::sync::Arc;
 use std::thread;
 use std::time::Instant;
 
+use dtlsda::net::collective::{inproc_mesh, Collective, Topology};
 use dtlsda::net::transport::{connect, InProcTransport, Transport};
 use dtlsda::ps::client::PsClient;
 use dtlsda::ps::compress::{CodecKind, PullCodec};
@@ -40,6 +45,7 @@ use dtlsda::ps::shard::{Optimizer, ShardStore, DEFAULT_STRIPES};
 use dtlsda::tensor::Tensor;
 use dtlsda::util::bench::{fmt2, Table};
 use dtlsda::util::json::Json;
+use dtlsda::worker::aggregate::{AllreduceAggregator, GradAggregator};
 
 const N_KEYS: usize = 16;
 const ELEMS: usize = 2048; // 8 KB per tensor, 128 KB per direction per round
@@ -322,6 +328,66 @@ fn run_apply_serve(workers: usize, codecs: Codecs, rounds: usize) -> RunResult {
     }
 }
 
+/// The `--backend allreduce` data path: `workers` ranks over an in-proc
+/// mesh, each committing one (optionally compressed) collective round
+/// per step through the same aggregator `train-dist` drives. `ops/s`
+/// counts per-rank collective rounds; `pushMB`/`pullMB` are the real
+/// reduce-direction / broadcast-direction bytes.
+fn run_allreduce(workers: usize, topology: Topology, codecs: Codecs, rounds: usize) -> RunResult {
+    let shapes: Vec<Vec<usize>> = vec![vec![ELEMS]; N_KEYS];
+    let mesh = inproc_mesh(workers);
+    let t0 = Instant::now();
+    let mut wire = (0u64, 0u64);
+    thread::scope(|s| {
+        let handles: Vec<_> = mesh
+            .into_iter()
+            .enumerate()
+            .map(|(rank, links)| {
+                let shapes = shapes.clone();
+                s.spawn(move || {
+                    let init: Vec<Tensor> = shapes.iter().map(|sh| Tensor::zeros(sh)).collect();
+                    let c = Collective::new(rank, workers, links, topology, shapes).unwrap();
+                    let mut agg =
+                        AllreduceAggregator::new(c, Optimizer::Sgd { lr: 1e-3 }, codecs.push, init);
+                    let grads: Vec<Tensor> = (0..N_KEYS)
+                        .map(|_| Tensor::from_vec(&[ELEMS], vec![1e-4; ELEMS]))
+                        .collect();
+                    let mut params = Vec::new();
+                    for step in 0..rounds {
+                        agg.refresh(&mut params).unwrap();
+                        agg.commit(step as u64, &mut params, &grads).unwrap();
+                    }
+                    (agg.push_wire_bytes(), agg.pull_wire_bytes())
+                })
+            })
+            .collect();
+        for h in handles {
+            let (p, q) = h.join().unwrap();
+            wire.0 += p;
+            wire.1 += q;
+        }
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let ops = (workers * rounds) as f64;
+    let bytes = (workers * rounds * 2 * N_KEYS * ELEMS * 4) as f64;
+    RunResult {
+        transport: "inproc",
+        mode: match topology {
+            Topology::Ring => "allreduce-ring",
+            Topology::Tree => "allreduce-tree",
+        },
+        codec: codecs.push_name,
+        pull_codec: codecs.pull_name,
+        workers,
+        stripes: 0,
+        wall_s,
+        ops_per_s: ops / wall_s,
+        mb_per_s: bytes / 1e6 / wall_s,
+        push_mb: wire.0 as f64 / 1e6,
+        pull_mb: wire.1 as f64 / 1e6,
+    }
+}
+
 fn main() {
     let smoke = std::env::var("DTLSDA_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
     let rounds_inproc: usize = if smoke { 4 } else { 60 };
@@ -392,6 +458,15 @@ fn main() {
         &[DENSE, Codecs { pull: PullCodec::Quant8, pull_name: "quant8", ..DENSE }]
     {
         results.push(run_apply_serve(top_w, codecs, rounds_inproc));
+    }
+    // Allreduce series: ring and tree collectives at a fixed group
+    // size, dense and quant8 contributions.
+    let ar_w = if smoke { 2 } else { 4 };
+    let ar_quant8 = Codecs { push: CodecKind::Quant8, push_name: "quant8", ..DENSE };
+    for topology in [Topology::Ring, Topology::Tree] {
+        for &codecs in &[DENSE, ar_quant8] {
+            results.push(run_allreduce(ar_w, topology, codecs, rounds_inproc));
+        }
     }
 
     let mut t = Table::new(&[
@@ -476,6 +551,25 @@ fn main() {
         "apply-while-serving @ {top_w} workers: {applyserve_ops:.0} pulls/s during batched applies"
     );
 
+    // Headline 4: collective rounds/s and wire savings per topology.
+    let ar_row = |mode: &str, codec: &str| {
+        results.iter().find(|r| r.mode == mode && r.codec == codec).cloned()
+    };
+    let ar_rounds = |mode: &str| {
+        ar_row(mode, "none").map(|r| r.ops_per_s / r.workers as f64).unwrap_or(0.0)
+    };
+    let ring_rounds_per_s = ar_rounds("allreduce-ring");
+    let tree_rounds_per_s = ar_rounds("allreduce-tree");
+    let ar_bytes = |mode: &str, codec: &str| {
+        ar_row(mode, codec).map(|r| r.push_mb + r.pull_mb).unwrap_or(0.0)
+    };
+    let ar_ratio =
+        ar_bytes("allreduce-ring", "none") / ar_bytes("allreduce-ring", "quant8").max(1e-12);
+    println!(
+        "allreduce @ {ar_w} ranks: ring {ring_rounds_per_s:.0} rounds/s, tree \
+         {tree_rounds_per_s:.0} rounds/s, ring bytes-on-wire dense/quant8 {ar_ratio:.1}x"
+    );
+
     // Persist for trajectory tracking across PRs.
     let mut root: BTreeMap<String, Json> = BTreeMap::new();
     root.insert("bench".into(), Json::Str("ps_hotpath".into()));
@@ -508,6 +602,10 @@ fn main() {
         Json::Num(pull_ratio_delta),
     );
     root.insert("applyserve_pull_ops_per_s".into(), Json::Num(applyserve_ops));
+    root.insert("allreduce_ranks".into(), Json::Num(ar_w as f64));
+    root.insert("allreduce_ring_rounds_per_s".into(), Json::Num(ring_rounds_per_s));
+    root.insert("allreduce_tree_rounds_per_s".into(), Json::Num(tree_rounds_per_s));
+    root.insert("allreduce_wire_ratio_dense_over_quant8".into(), Json::Num(ar_ratio));
     root.insert(
         "results".into(),
         Json::Arr(

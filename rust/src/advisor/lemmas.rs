@@ -18,6 +18,8 @@
 //! only the push half doubles — plus the `R` physical machines per
 //! shard the fleet provisions.
 
+use crate::coordinator::distributed::Backend;
+use crate::net::collective::Topology;
 use crate::ps::compress::{CodecKind, PullCodec};
 
 /// Lemma 3.1: efficiency `α` of `g` GPUs given overhead ratio `r_o`.
@@ -231,6 +233,119 @@ pub fn ps_round_io_time_with_codec(
     codec: CodecKind,
 ) -> f64 {
     (s_p_bytes + codec.effective_push_bytes(s_p_bytes)) * n_w as f64 / (n_ps as f64 * b_ps)
+}
+
+// --- collective (allreduce) cost model ---------------------------------
+//
+// The second data-parallel backend has no PS tier: every round is one
+// allreduce over `net::collective`. Its cost model uses the same Lemma
+// 3.2 inputs (S_p, N_w, bandwidth) plus a per-message latency term α —
+// collectives pay latency per hop, which the single-round-trip PS
+// exchange mostly hides.
+
+/// Default per-message link latency (seconds) for the collective cost
+/// model: loopback/LAN-ish 100 µs.
+pub const DEFAULT_LINK_LATENCY_S: f64 = 1e-4;
+
+/// Default per-link bandwidth (bytes/s) when the caller has not
+/// measured one: 10 GbE.
+pub const DEFAULT_LINK_BANDWIDTH_BPS: f64 = 1.25e9;
+
+/// Ring allreduce round time: `2(N−1)` chunk exchanges (reduce-scatter
+/// then allgather), each moving `S_p/N` bytes — bandwidth-optimal at
+/// `2(N−1)/N · S_p` per node, but latency-linear in `N`.
+pub fn ring_allreduce_time(s_p_bytes: f64, n_ranks: usize, b_link: f64, alpha_s: f64) -> f64 {
+    assert!(s_p_bytes >= 0.0 && b_link > 0.0 && alpha_s >= 0.0);
+    if n_ranks <= 1 {
+        return 0.0;
+    }
+    let n = n_ranks as f64;
+    2.0 * (n - 1.0) * alpha_s + 2.0 * (n - 1.0) / n * s_p_bytes / b_link
+}
+
+/// Tree allreduce round time for `net::collective`'s gather-to-root
+/// tree: contributions (not partial sums — bit-parity requires a flat
+/// rank-order fold) funnel to the root, which ingests `(N−1)·S_p`, then
+/// the dense sum is relayed down `⌈log2 N⌉` levels. Latency-optimal
+/// (`2⌈log2 N⌉` hops vs the ring's `2(N−1)`), bandwidth-heavy at the
+/// root — the advisor picks it for tiny models or deep fleets.
+pub fn tree_allreduce_time(s_p_bytes: f64, n_ranks: usize, b_link: f64, alpha_s: f64) -> f64 {
+    assert!(s_p_bytes >= 0.0 && b_link > 0.0 && alpha_s >= 0.0);
+    if n_ranks <= 1 {
+        return 0.0;
+    }
+    let depth = (n_ranks as f64).log2().ceil();
+    let gather = (n_ranks as f64 - 1.0) * s_p_bytes / b_link;
+    let bcast = depth * s_p_bytes / b_link;
+    2.0 * depth * alpha_s + gather + bcast
+}
+
+/// Collective topology from the cost model at the default link latency
+/// and bandwidth: ring for bandwidth-bound payloads, tree when the
+/// round is latency-bound (tiny payload relative to the fleet depth).
+/// `train-dist --backend allreduce --topology auto` lands here.
+pub fn auto_topology(n_ranks: usize, s_p_bytes: f64) -> Topology {
+    let ring = ring_allreduce_time(
+        s_p_bytes,
+        n_ranks,
+        DEFAULT_LINK_BANDWIDTH_BPS,
+        DEFAULT_LINK_LATENCY_S,
+    );
+    let tree = tree_allreduce_time(
+        s_p_bytes,
+        n_ranks,
+        DEFAULT_LINK_BANDWIDTH_BPS,
+        DEFAULT_LINK_LATENCY_S,
+    );
+    if ring <= tree {
+        Topology::Ring
+    } else {
+        Topology::Tree
+    }
+}
+
+/// Outcome of [`choose_backend`]: the recommended backend and
+/// topology, with every candidate's predicted per-round
+/// communication time so the CLI can show its work.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BackendChoice {
+    pub backend: Backend,
+    /// Best collective topology (meaningful even when PS wins — it is
+    /// what `--backend allreduce` would use).
+    pub topology: Topology,
+    pub ring_time_s: f64,
+    pub tree_time_s: f64,
+    /// PS round I/O time at the Lemma 3.2 recommended fleet below.
+    pub ps_time_s: f64,
+    /// Lemma 3.2 server count the PS candidate is priced at.
+    pub n_ps: usize,
+}
+
+/// Pick the data-parallel backend from Lemma 3.2's inputs. The PS
+/// candidate is priced at its own recommended fleet (Lemma 3.2's
+/// `N_ps`, where round I/O just hides behind `T_C`); the collective
+/// candidates cost zero extra machines but pay per-hop latency
+/// (`alpha_s`). Allreduce wins when its best topology's round beats
+/// the PS round *without* provisioning any servers — the advisor's
+/// answer to "do I need a PS tier at all?".
+pub fn choose_backend(
+    s_p_bytes: f64,
+    n_w: usize,
+    b_ps: f64,
+    t_c: f64,
+    alpha_s: f64,
+) -> BackendChoice {
+    let n_ps = num_param_servers(s_p_bytes, n_w, b_ps, t_c);
+    let ps_time_s = ps_round_io_time(s_p_bytes, n_w, b_ps, n_ps);
+    let ring_time_s = ring_allreduce_time(s_p_bytes, n_w, b_ps, alpha_s);
+    let tree_time_s = tree_allreduce_time(s_p_bytes, n_w, b_ps, alpha_s);
+    let (topology, coll_time) = if ring_time_s <= tree_time_s {
+        (Topology::Ring, ring_time_s)
+    } else {
+        (Topology::Tree, tree_time_s)
+    };
+    let backend = if coll_time <= ps_time_s { Backend::Allreduce } else { Backend::Ps };
+    BackendChoice { backend, topology, ring_time_s, tree_time_s, ps_time_s, n_ps }
 }
 
 #[cfg(test)]
@@ -491,6 +606,50 @@ mod tests {
         let dense_solo = ps_round_io_time_replicated(s_p, n_w, b_ps, 4, CodecKind::None, 1);
         let dense_r2 = ps_round_io_time_replicated(s_p, n_w, b_ps, 4, CodecKind::None, 2);
         assert!((dense_r2 / dense_solo - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn collective_cost_model_pinned() {
+        // Ring, 4 ranks, 100 MB over 1.25 GB/s at α = 100 µs:
+        // 2·3·1e-4 + (6/4)·100e6/1.25e9 = 6e-4 + 0.12 s.
+        let ring = ring_allreduce_time(100e6, 4, 1.25e9, 1e-4);
+        assert!((ring - 0.1206).abs() < 1e-9, "{ring}");
+        // Tree, 4 ranks (depth 2): 2·2·1e-4 + (3+2)·100e6/1.25e9 = 0.4004 s.
+        let tree = tree_allreduce_time(100e6, 4, 1.25e9, 1e-4);
+        assert!((tree - 0.4004).abs() < 1e-9, "{tree}");
+        // A single rank never touches the wire.
+        assert_eq!(ring_allreduce_time(100e6, 1, 1.25e9, 1e-4), 0.0);
+        assert_eq!(tree_allreduce_time(100e6, 1, 1.25e9, 1e-4), 0.0);
+    }
+
+    #[test]
+    fn auto_topology_ring_for_bandwidth_tree_for_latency() {
+        // 100 MB payload: bandwidth-bound — ring.
+        assert_eq!(auto_topology(4, 100e6), Topology::Ring);
+        assert_eq!(auto_topology(16, 100e6), Topology::Ring);
+        // 1 KB payload over 16 ranks: the ring's 30 serialized hops
+        // dominate — tree.
+        assert_eq!(auto_topology(16, 1e3), Topology::Tree);
+    }
+
+    #[test]
+    fn choose_backend_alexnet_pinned() {
+        // AlexNet (244 MB), 4 workers, T_C = 2 s, α = 100 µs.
+        // 1 GbE: Lemma 3.2 wants 8 servers (I/O ≈ 1.95 s ≤ T_C); the
+        // ring needs 2.93 s/round on those same links — keep the PS
+        // tier and its fan-in.
+        let gbe = choose_backend(61e6 * 4.0, 4, 125e6, 2.0, 1e-4);
+        assert_eq!(gbe.backend, Backend::Ps);
+        assert_eq!(gbe.n_ps, 8);
+        assert!(gbe.ps_time_s < 2.0 && gbe.ring_time_s > 2.9);
+        // 10 GbE: one server would do, but the ring round (0.29 s)
+        // beats even that fleet's I/O (1.56 s) with zero servers.
+        let tengbe = choose_backend(61e6 * 4.0, 4, 1.25e9, 2.0, 1e-4);
+        assert_eq!(tengbe.backend, Backend::Allreduce);
+        assert_eq!(tengbe.topology, Topology::Ring);
+        assert!(tengbe.ring_time_s < tengbe.ps_time_s);
+        // The losing topology's prediction is still reported.
+        assert!(tengbe.tree_time_s > tengbe.ring_time_s);
     }
 
     #[test]

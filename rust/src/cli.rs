@@ -5,6 +5,7 @@
 //!   advisor-minibatch            §3.1: X_mini sweep + per-layer ILP
 //!   advisor-gpus                 §3.2: Lemma 3.1 sizing
 //!   advisor-ps                   §3.3: Lemma 3.2 sizing
+//!   advisor-backend              PS vs allreduce backend selection
 //!   train                        local training on one artifact
 //!   train-dist                   in-process distributed cluster
 //!   ps / worker                  one role of a real multi-machine job
@@ -50,6 +51,7 @@ subcommands:
   advisor-minibatch  optimal X_mini + per-layer conv algorithms (Eq. 6)
   advisor-gpus       GPU count / efficiency estimates (Lemma 3.1)
   advisor-ps         parameter-server count (Lemma 3.2)
+  advisor-backend    ps vs allreduce backend + topology selection
   train              local training on a train_step artifact
   train-dist         distributed training (in-process cluster)
   ps                 run one parameter-server role (real deployment)
@@ -66,6 +68,7 @@ pub fn run(argv: &[String]) -> Result<(), String> {
         "advisor-minibatch" => cmd_advisor_minibatch(rest),
         "advisor-gpus" => cmd_advisor_gpus(rest),
         "advisor-ps" => cmd_advisor_ps(rest),
+        "advisor-backend" => cmd_advisor_backend(rest),
         "train" => cmd_train(rest),
         "train-dist" => cmd_train_dist(rest),
         "ps" => cmd_ps_role(rest),
@@ -244,6 +247,66 @@ fn cmd_advisor_ps(argv: &[String]) -> Result<(), String> {
         ]);
     }
     t.print();
+    println!(
+        "(run `dtlsda advisor-backend` with the same inputs to check whether a \
+         serverless allreduce beats this PS tier)"
+    );
+    Ok(())
+}
+
+fn cmd_advisor_backend(argv: &[String]) -> Result<(), String> {
+    let spec = ArgSpec::new(
+        "dtlsda advisor-backend",
+        "choose ps vs allreduce from Lemma 3.2's inputs",
+    )
+    .opt("params-mb", Some("244"), "parameter size S_p in MB (AlexNet f32 ≈ 244)")
+    .opt("workers", Some("8"), "number of workers N_w")
+    .opt("bw-gbps", Some("10"), "per-node network bandwidth, Gbit/s")
+    .opt("tc", Some("2.0"), "compute seconds per round T_C")
+    .opt("latency-us", Some("100"), "per-message link latency α, microseconds");
+    let p = spec.parse(argv)?;
+    let s_p = p.f64("params-mb") * 1e6;
+    let n_w = p.usize("workers");
+    let b = p.f64("bw-gbps") * 1e9 / 8.0;
+    let t_c = p.f64("tc");
+    let alpha = p.f64("latency-us") * 1e-6;
+    let c = advisor::lemmas::choose_backend(s_p, n_w, b, t_c, alpha);
+    let mut t = Table::new(&["candidate", "round comm (s)", "hidden?", "extra machines"]);
+    let hidden = |io: f64| if io <= t_c { "yes".to_string() } else { "no".to_string() };
+    t.row(&[
+        format!("ps (N_ps={})", c.n_ps),
+        format!("{:.3}", c.ps_time_s),
+        hidden(c.ps_time_s),
+        c.n_ps.to_string(),
+    ]);
+    t.row(&[
+        "allreduce-ring".into(),
+        format!("{:.3}", c.ring_time_s),
+        hidden(c.ring_time_s),
+        "0".into(),
+    ]);
+    t.row(&[
+        "allreduce-tree".into(),
+        format!("{:.3}", c.tree_time_s),
+        hidden(c.tree_time_s),
+        "0".into(),
+    ]);
+    t.print();
+    match c.backend {
+        distributed::Backend::Allreduce => println!(
+            "recommended: train-dist --backend allreduce --topology {} --sync \
+             (beats the {}-server PS round with zero servers)",
+            c.topology.name(),
+            c.n_ps
+        ),
+        distributed::Backend::Ps => println!(
+            "recommended: train-dist --backend ps --servers {} \
+             (best collective, {}, still needs {:.3} s/round)",
+            c.n_ps,
+            c.topology.name(),
+            c.ring_time_s.min(c.tree_time_s)
+        ),
+    }
     Ok(())
 }
 
@@ -341,10 +404,36 @@ fn cmd_train_dist(argv: &[String]) -> Result<(), String> {
             "ps-deadline-ms",
             None,
             "worker-side reply deadline; default: bounded when replicated \
-             (sync: barrier timeout + 5s, async: 10s), else unbounded",
+             (sync: barrier timeout + 5s, async: 10s), else unbounded; \
+             for --backend allreduce, the collective's per-receive deadline",
         )
-        .flag("sync", "synchronous SGD (default async)");
+        .opt(
+            "backend",
+            Some("ps"),
+            "aggregation backend: ps (sharded parameter servers) or \
+             allreduce (peer-to-peer collective, requires --sync; \
+             `advisor-backend` compares them)",
+        )
+        .opt(
+            "topology",
+            Some("auto"),
+            "allreduce topology: ring|tree|auto (auto = Lemma 3.2 cost model)",
+        )
+        .flag("sync", "synchronous SGD (default async)")
+        .flag(
+            "straggler-backpressure",
+            "auto-enable backup workers when a worker is persistently \
+             flagged as a straggler (ps sync only)",
+        );
     let p = spec.parse(argv)?;
+    let backend = distributed::Backend::parse(&p.str("backend"))?;
+    let topology = match p.str("topology").as_str() {
+        "auto" => None,
+        other => Some(crate::net::collective::Topology::parse(other)?),
+    };
+    if backend == distributed::Backend::Allreduce && !p.flag("sync") {
+        return Err("--backend allreduce requires --sync: the collective is the barrier".into());
+    }
     let fault_plan = match p.get("fault-plan") {
         Some(spec) => Some(crate::net::fault::FaultPlan::parse(spec)?),
         None => None,
@@ -386,16 +475,30 @@ fn cmd_train_dist(argv: &[String]) -> Result<(), String> {
         add_server_at: parse_opt_u64(&p, "add-server")?,
         remove_server_at: parse_opt_u64(&p, "remove-server")?,
         read_deadline_ms: parse_opt_u64(&p, "ps-deadline-ms")?,
+        backend,
+        topology,
+        straggler_backpressure: p.flag("straggler-backpressure"),
     };
     let report = distributed::run_distributed(&PathBuf::from(p.str("artifacts")), &cfg)?;
-    println!(
-        "distributed run: {} workers x {} steps, {} servers ({}): {:.1} samples/s",
-        cfg.n_workers,
-        cfg.steps_per_worker,
-        cfg.n_servers,
-        if cfg.sync { "sync" } else { "async" },
-        report.throughput
-    );
+    match cfg.backend {
+        distributed::Backend::Ps => println!(
+            "distributed run [ps]: {} workers x {} steps, {} servers ({}): {:.1} samples/s",
+            cfg.n_workers,
+            cfg.steps_per_worker,
+            cfg.n_servers,
+            if cfg.sync { "sync" } else { "async" },
+            report.throughput
+        ),
+        distributed::Backend::Allreduce => println!(
+            "distributed run [allreduce-{}]: {} ranks x {} steps, 0 servers (sync): \
+             {:.1} samples/s, {} group reform(s)",
+            cfg.topology.map(|t| t.name()).unwrap_or("auto"),
+            cfg.n_workers,
+            cfg.steps_per_worker,
+            report.throughput,
+            report.ps_epoch
+        ),
+    }
     for (w, losses) in report.worker_losses.iter().enumerate() {
         println!(
             "worker {w}: loss {:.4} -> {:.4}, R_O={:.3}",
@@ -404,11 +507,13 @@ fn cmd_train_dist(argv: &[String]) -> Result<(), String> {
             report.worker_r_o[w]
         );
     }
-    let (pulls, pushes, updates) = report.ps_stats;
-    println!(
-        "ps: pulls={pulls} pushes={pushes} updates={updates} imbalance={:.3}",
-        report.router_imbalance
-    );
+    if cfg.backend == distributed::Backend::Ps {
+        let (pulls, pushes, updates) = report.ps_stats;
+        println!(
+            "ps: pulls={pulls} pushes={pushes} updates={updates} imbalance={:.3}",
+            report.router_imbalance
+        );
+    }
     if cfg.replicas > 1 {
         println!(
             "ps replication: {} copies per shard, routing epoch {} ({})",
@@ -585,6 +690,72 @@ mod tests {
         ]))
         .unwrap_err();
         assert!(err.contains("unknown pull codec"), "{err}");
+    }
+
+    #[test]
+    fn advisor_backend_runs() {
+        run(&argv(&["advisor-backend"])).unwrap();
+        // 1 GbE AlexNet: PS territory. 10 GbE: allreduce. Both must
+        // render without error.
+        run(&argv(&[
+            "advisor-backend",
+            "--params-mb",
+            "244",
+            "--workers",
+            "4",
+            "--bw-gbps",
+            "1",
+        ]))
+        .unwrap();
+        run(&argv(&[
+            "advisor-backend",
+            "--params-mb",
+            "244",
+            "--workers",
+            "4",
+            "--bw-gbps",
+            "10",
+            "--latency-us",
+            "100",
+        ]))
+        .unwrap();
+        assert!(run(&argv(&["advisor-backend", "--workers", "bogus"])).is_err());
+    }
+
+    #[test]
+    fn train_dist_backend_flag_validation() {
+        // allreduce without --sync is rejected before anything spins up.
+        let err = run(&argv(&[
+            "train-dist",
+            "--artifacts",
+            "/nonexistent",
+            "--backend",
+            "allreduce",
+        ]))
+        .unwrap_err();
+        assert!(err.contains("requires --sync"), "{err}");
+        // Unknown backend / topology are arg errors, not cluster errors.
+        let err = run(&argv(&[
+            "train-dist",
+            "--artifacts",
+            "/nonexistent",
+            "--backend",
+            "bogus",
+        ]))
+        .unwrap_err();
+        assert!(err.contains("unknown backend"), "{err}");
+        let err = run(&argv(&[
+            "train-dist",
+            "--artifacts",
+            "/nonexistent",
+            "--backend",
+            "allreduce",
+            "--sync",
+            "--topology",
+            "bogus",
+        ]))
+        .unwrap_err();
+        assert!(err.contains("unknown topology"), "{err}");
     }
 
     #[test]

@@ -55,6 +55,8 @@ use std::thread;
 use std::time::Duration;
 
 use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::straggler::StragglerMonitor;
+use crate::net::collective::{inproc_mesh, Collective, Topology};
 use crate::net::fault::{FaultLog, FaultPlan};
 use crate::net::message::Message;
 use crate::net::transport::{connect, connect_timeout, Transport};
@@ -67,7 +69,37 @@ use crate::ps::server::{
 use crate::ps::shard::{Optimizer, ShardStore};
 use crate::runtime::exec::Runtime;
 use crate::tensor::Tensor;
-use crate::worker::pipeline::{run_ps_worker, PipelineConfig};
+use crate::worker::aggregate::{AllreduceAggregator, GradAggregator};
+use crate::worker::pipeline::{run_agg_worker, run_ps_worker, PipelineConfig};
+
+/// Data-parallel aggregation backend (`train-dist --backend`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Sharded parameter servers — the paper's §3.3 topology; async or
+    /// sync, elastic, replicated.
+    Ps,
+    /// Peer-to-peer ring/tree allreduce over `net::collective` — no PS
+    /// tier at all. Inherently synchronous: the collective is the
+    /// barrier.
+    Allreduce,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Backend, String> {
+        match s {
+            "ps" => Ok(Backend::Ps),
+            "allreduce" => Ok(Backend::Allreduce),
+            other => Err(format!("unknown backend {other:?} (ps|allreduce)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Ps => "ps",
+            Backend::Allreduce => "allreduce",
+        }
+    }
+}
 
 /// Distributed job description.
 #[derive(Debug, Clone)]
@@ -115,8 +147,22 @@ pub struct DistConfig {
     pub remove_server_at: Option<u64>,
     /// Worker-side reply deadline (milliseconds). `None` picks a
     /// default when replicated (wedged primaries must surface as
-    /// timeouts) and leaves waits unbounded otherwise.
+    /// timeouts) and leaves waits unbounded otherwise. The allreduce
+    /// backend uses it as the collective's per-receive deadline.
     pub read_deadline_ms: Option<u64>,
+    /// Aggregation backend. `Allreduce` requires `sync` and ignores the
+    /// PS-tier knobs (`n_servers`, `replicas`, elastic scale events,
+    /// `pull_codec`).
+    pub backend: Backend,
+    /// Collective topology for the allreduce backend. `None` = let the
+    /// Lemma 3.2 cost model pick (`advisor::lemmas::auto_topology`).
+    pub topology: Option<Topology>,
+    /// Online straggler mitigation (PS sync only, opt-in): when the
+    /// [`StragglerMonitor`] flags a worker as persistently slow, raise
+    /// the barrier's backup-worker count so each step releases without
+    /// waiting for the tail. Off by default — dropping contributions
+    /// changes convergence accounting.
+    pub straggler_backpressure: bool,
 }
 
 impl Default for DistConfig {
@@ -143,6 +189,9 @@ impl Default for DistConfig {
             add_server_at: None,
             remove_server_at: None,
             read_deadline_ms: None,
+            backend: Backend::Ps,
+            topology: None,
+            straggler_backpressure: false,
         }
     }
 }
@@ -745,6 +794,9 @@ struct WorkerRun {
 
 /// Spawn servers + workers, train, tear down.
 pub fn run_distributed(artifacts_dir: &std::path::Path, cfg: &DistConfig) -> Result<DistReport, String> {
+    if cfg.backend == Backend::Allreduce {
+        return run_allreduce(artifacts_dir, cfg);
+    }
     // Leader-side metadata (cheap: no PJRT client needed for the index).
     let index = crate::runtime::artifact::ArtifactIndex::load(artifacts_dir)?;
     let meta = index.find(&cfg.grad_artifact)?.clone();
@@ -1173,6 +1225,10 @@ pub fn run_distributed(artifacts_dir: &std::path::Path, cfg: &DistConfig) -> Res
                 cfg.seed ^ (w as u64 + 1).wrapping_mul(0x9E37_79B9),
             );
             let stats = run_ps_worker(&exe, &mut client, batcher, &pcfg, cfg.sync, Some(progress))?;
+            // Clean exit: release this worker's pull-cache slot on every
+            // shard (bounded, best-effort). A worker that dies instead is
+            // evicted when its replacement's bumped incarnation arrives.
+            client.retire();
             let steps_run = cfg.steps_per_worker.saturating_sub(start_step).max(1);
             Ok(WorkerRun {
                 losses: stats.losses,
@@ -1247,11 +1303,51 @@ pub fn run_distributed(artifacts_dir: &std::path::Path, cfg: &DistConfig) -> Res
         })
     });
 
+    // Straggler backpressure (opt-in, sync only): sample the progress
+    // counters, and once a worker is persistently behind the fleet's
+    // per-window median, raise every server's backup-worker count so
+    // the barrier releases without the tail (§1.1.2 mitigation). The
+    // override only ever grows — the barrier never re-tightens mid-run.
+    let backpressure_thread = (cfg.straggler_backpressure && cfg.sync).then(|| {
+        let progress = progress.clone();
+        let stop = events_stop.clone();
+        let fleet = fleet.clone();
+        let factor = cfg.straggler_factor;
+        let n_workers = cfg.n_workers;
+        thread::spawn(move || {
+            let mut monitor = StragglerMonitor::new(n_workers, factor, 3);
+            let mut applied = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                thread::sleep(Duration::from_millis(50));
+                let snap: Vec<usize> =
+                    progress.iter().map(|p| p.load(Ordering::SeqCst)).collect();
+                let flagged = monitor.observe(&snap);
+                // Always leave a quorum of one: backups < n_workers.
+                let k = flagged.len().min(n_workers.saturating_sub(1));
+                if k > applied {
+                    applied = k;
+                    for s in fleet.servers.lock().unwrap().iter() {
+                        s.shared.set_backup_workers(k);
+                    }
+                    crate::warn_log!(
+                        "coordinator",
+                        "straggler backpressure engaged",
+                        backups = k,
+                        flagged = format!("{flagged:?}")
+                    );
+                }
+            }
+        })
+    });
+
     let outcomes =
         run_workers_with_restart_on(progress, cfg.max_worker_restarts, body, on_restart)?;
     let wall_s = t0.elapsed().as_secs_f64();
     events_stop.store(true, Ordering::Relaxed);
     if let Some(h) = events_thread {
+        let _ = h.join();
+    }
+    if let Some(h) = backpressure_thread {
         let _ = h.join();
     }
 
@@ -1308,6 +1404,268 @@ pub fn run_distributed(artifacts_dir: &std::path::Path, cfg: &DistConfig) -> Res
         stragglers,
         worker_restarts,
         ps_epoch,
+    })
+}
+
+/// One rank's result from one allreduce group formation.
+struct RankOutcome {
+    /// Last step fully committed (collective completed + update
+    /// applied). `params` is the state at exactly this step.
+    committed: usize,
+    params: Vec<Tensor>,
+    losses: Vec<f32>,
+    r_o: f64,
+    mean_step_s: f64,
+    push_bytes: u64,
+    pull_bytes: u64,
+    err: Option<String>,
+}
+
+/// The allreduce run path: no PS tier. `cfg.n_workers` ranks train in
+/// lockstep over an in-process full mesh (`net::collective`), each
+/// holding the full model and applying the identical mean update —
+/// with the same seeds this matches the sync PS backend's arithmetic
+/// byte for byte (see `worker::aggregate`).
+///
+/// # Fault tolerance: bounded group reform
+///
+/// A collective has no server to absorb a member's death — a dropped
+/// or wedged peer fails the *round*, surfacing at every rank as a
+/// deadline-bounded error (never a hang; see [`Collective`]). The
+/// coordinator then **reforms the group**: a fresh mesh is built, the
+/// most-advanced rank's committed parameters are adopted (safe: a rank
+/// can only commit step `k` after the step-`k` collective completed,
+/// i.e. with *every* rank's contribution already folded in), and all
+/// ranks resume from that step. `cfg.max_worker_restarts` bounds the
+/// number of reforms; past it the run aborts cleanly. Chaos wiring:
+/// `cfg.fault_plan` wraps every mesh link in a seeded
+/// [`FaultyTransport`](crate::net::fault::FaultyTransport), exactly
+/// like the PS path wraps worker connections.
+fn run_allreduce(artifacts_dir: &std::path::Path, cfg: &DistConfig) -> Result<DistReport, String> {
+    if !cfg.sync {
+        return Err("--backend allreduce requires --sync: the collective is the barrier".into());
+    }
+    let index = crate::runtime::artifact::ArtifactIndex::load(artifacts_dir)?;
+    let meta = index.find(&cfg.grad_artifact)?.clone();
+    if meta.kind != "grad_step" {
+        return Err(format!("{} is a {}, need grad_step", cfg.grad_artifact, meta.kind));
+    }
+    let manifest = index.manifest(&meta.family)?;
+    let init = manifest.load_init()?;
+    let n = cfg.n_workers.max(1);
+    let opt = if cfg.momentum > 0.0 {
+        Optimizer::Momentum { lr: cfg.lr, mu: cfg.momentum }
+    } else {
+        Optimizer::Sgd { lr: cfg.lr }
+    };
+    let shapes: Vec<Vec<usize>> = init.iter().map(|t| t.shape().to_vec()).collect();
+    let payload_bytes: usize = manifest.byte_sizes().iter().sum();
+    let topology = cfg
+        .topology
+        .unwrap_or_else(|| crate::advisor::lemmas::auto_topology(n, payload_bytes as f64));
+    crate::info!(
+        "coordinator",
+        "allreduce backend",
+        ranks = n,
+        topology = topology.name(),
+        payload_bytes = payload_bytes
+    );
+    let deadline = cfg.read_deadline_ms.map(Duration::from_millis);
+    let fault_log = FaultLog::new();
+    let t0 = std::time::Instant::now();
+
+    // Cross-formation state: the adopted parameters (bit-identical on
+    // every rank at `start_step`), stitched loss traces, and accounting.
+    let mut adopted = init;
+    let mut start_step = 0usize;
+    let mut stitched: Vec<Vec<f32>> = vec![Vec::new(); n];
+    let mut worker_restarts = vec![0u64; n];
+    let mut worker_r_o = vec![0.0f64; n];
+    let mut worker_step_s = vec![0.0f64; n];
+    let mut reforms = 0u64;
+    let mut push_wire_bytes = 0u64;
+    let mut pull_wire_bytes = 0u64;
+    let progress: Vec<Arc<AtomicUsize>> =
+        (0..n).map(|_| Arc::new(AtomicUsize::new(0))).collect();
+
+    loop {
+        let formation = reforms;
+        let mut mesh = inproc_mesh(n);
+        if let Some(plan) = cfg.fault_plan.as_ref().filter(|p| !p.is_noop()) {
+            for (i, links) in mesh.iter_mut().enumerate() {
+                for (j, link) in links.iter_mut().enumerate() {
+                    if let Some(inner) = link.take() {
+                        *link = Some(Box::new(plan.wrap(
+                            conn_id(i, j, formation, 0),
+                            fault_log.clone(),
+                            inner,
+                        )) as Box<dyn Transport>);
+                    }
+                }
+            }
+        }
+        let outcomes: Vec<RankOutcome> = thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(n);
+            for (rank, links) in mesh.into_iter().enumerate() {
+                let dir = artifacts_dir.to_path_buf();
+                let adopted = &adopted;
+                let shapes = &shapes;
+                let progress = progress[rank].clone();
+                handles.push(scope.spawn(move || -> RankOutcome {
+                    let mut out = RankOutcome {
+                        committed: start_step,
+                        params: Vec::new(),
+                        losses: Vec::new(),
+                        r_o: 0.0,
+                        mean_step_s: 0.0,
+                        push_bytes: 0,
+                        pull_bytes: 0,
+                        err: None,
+                    };
+                    // Each rank owns a full runtime, like a PS worker.
+                    let rt = match Runtime::new(&dir) {
+                        Ok(rt) => rt,
+                        Err(e) => return RankOutcome { err: Some(e), ..out },
+                    };
+                    let exe = match rt.load(&cfg.grad_artifact) {
+                        Ok(exe) => exe,
+                        Err(e) => return RankOutcome { err: Some(e), ..out },
+                    };
+                    let mut collective =
+                        match Collective::new(rank, n, links, topology, shapes.clone()) {
+                            Ok(c) => c,
+                            Err(e) => return RankOutcome { err: Some(e), ..out },
+                        };
+                    if let Some(d) = deadline {
+                        if let Err(e) = collective.set_deadline(d) {
+                            return RankOutcome { err: Some(e), ..out };
+                        }
+                    }
+                    let mut agg =
+                        AllreduceAggregator::new(collective, opt, cfg.codec, adopted.clone());
+                    let pcfg = PipelineConfig {
+                        lr: cfg.lr,
+                        steps: cfg.steps_per_worker,
+                        start_step,
+                        prefetch_depth: 2,
+                        log_every: 0,
+                        codec: cfg.codec,
+                        // Pulls never hit a wire: params are rank-local.
+                        pull_codec: PullCodec::None,
+                    };
+                    // Same per-rank seed fork as the PS path, so the two
+                    // backends consume identical data streams.
+                    let batcher = crate::coordinator::local::family_batcher(
+                        &exe.meta.family,
+                        cfg.seed ^ (rank as u64 + 1).wrapping_mul(0x9E37_79B9),
+                    );
+                    let mut params = Vec::new();
+                    match run_agg_worker(&exe, &mut agg, &mut params, batcher, &pcfg, Some(&progress))
+                    {
+                        Ok(stats) => {
+                            out.committed = cfg.steps_per_worker;
+                            out.losses = stats.losses;
+                            out.r_o = stats.profiler.r_o();
+                            let steps_run =
+                                cfg.steps_per_worker.saturating_sub(start_step).max(1);
+                            out.mean_step_s = stats.wall_s / steps_run as f64;
+                        }
+                        Err(e) => {
+                            // `progress` never runs ahead of the params
+                            // buffer: both advance only on a committed
+                            // step (and start_step clamps stale counts
+                            // from an earlier formation).
+                            out.committed =
+                                progress.load(Ordering::SeqCst).max(start_step);
+                            out.err = Some(e);
+                        }
+                    }
+                    out.params = params;
+                    out.push_bytes = agg.push_wire_bytes();
+                    out.pull_bytes = agg.pull_wire_bytes();
+                    out
+                }));
+            }
+            handles.into_iter().map(|h| h.join().expect("rank thread panicked")).collect()
+        });
+
+        push_wire_bytes += outcomes.iter().map(|o| o.push_bytes).sum::<u64>();
+        pull_wire_bytes += outcomes.iter().map(|o| o.pull_bytes).sum::<u64>();
+        for (r, o) in outcomes.iter().enumerate() {
+            stitched[r].truncate(start_step);
+            stitched[r].extend_from_slice(&o.losses);
+            worker_r_o[r] = o.r_o;
+            worker_step_s[r] = o.mean_step_s;
+        }
+        let failed: Vec<usize> = outcomes
+            .iter()
+            .enumerate()
+            .filter(|(_, o)| o.err.is_some())
+            .map(|(r, _)| r)
+            .collect();
+        if failed.is_empty() {
+            // Every rank applied the identical mean every step — adopt
+            // any rank's final parameters.
+            if let Some(o) = outcomes.into_iter().next() {
+                adopted = o.params;
+            }
+            break;
+        }
+        for &r in &failed {
+            worker_restarts[r] += 1;
+        }
+        reforms += 1;
+        if reforms > cfg.max_worker_restarts as u64 {
+            let cause = outcomes
+                .iter()
+                .find_map(|o| o.err.clone())
+                .unwrap_or_else(|| "unknown".into());
+            return Err(format!(
+                "allreduce group failed after {reforms} formations (budget {}): {cause}",
+                cfg.max_worker_restarts
+            ));
+        }
+        // Adopt the most-advanced committed state. Safe: committing
+        // step k required the step-k collective to complete, so every
+        // rank's step-k contribution is already folded into it — no
+        // gradient is lost by fast-forwarding the laggards.
+        if let Some(best) = outcomes
+            .iter()
+            .filter(|o| !o.params.is_empty())
+            .max_by_key(|o| o.committed)
+        {
+            if best.committed >= start_step {
+                start_step = best.committed;
+                adopted = best.params.clone();
+            }
+        }
+        crate::warn_log!(
+            "coordinator",
+            "allreduce group reform",
+            formation = reforms,
+            resume_step = start_step,
+            failed = format!("{failed:?}")
+        );
+    }
+
+    let wall_s = t0.elapsed().as_secs_f64();
+    let stragglers = detect_stragglers(&worker_step_s, cfg.straggler_factor);
+    let samples = n * cfg.steps_per_worker * meta.batch;
+    Ok(DistReport {
+        worker_losses: stitched,
+        worker_r_o,
+        final_params: adopted,
+        throughput: samples as f64 / wall_s,
+        // No PS tier: no server stats, no shard routing.
+        ps_stats: (0, 0, 0),
+        router_imbalance: 0.0,
+        push_wire_bytes,
+        pull_wire_bytes,
+        worker_step_s,
+        stragglers,
+        worker_restarts,
+        // The epoch slot reports group formations for this backend.
+        ps_epoch: reforms,
     })
 }
 

@@ -11,8 +11,10 @@ pub mod checkpoint;
 pub mod distributed;
 pub mod local;
 pub mod metrics;
+pub mod straggler;
 
 pub use checkpoint::Checkpoint;
-pub use distributed::{run_distributed, DistConfig, DistReport};
+pub use distributed::{run_distributed, Backend, DistConfig, DistReport};
+pub use straggler::StragglerMonitor;
 pub use local::{evaluate, train_local, EvalReport, LocalConfig};
 pub use metrics::{LossCurve, RunReport};

@@ -1,0 +1,123 @@
+//! Straggler backpressure: decide *when* persistent stragglers warrant
+//! backup-worker mitigation (§5's straggler discussion).
+//!
+//! [`super::distributed::detect_stragglers`] is a post-mortem check on
+//! mean step times; this module is the online counterpart. The
+//! coordinator samples per-worker progress counters on a fixed cadence
+//! and feeds the snapshots to a [`StragglerMonitor`]; once a worker has
+//! made less than `1/factor` of the median per-window progress for
+//! `patience` consecutive windows, the monitor reports it as
+//! persistently flagged. The actuator (raising the sync barrier's
+//! backup-worker count via `PsShared::set_backup_workers`) lives with
+//! the coordinator — this type is pure bookkeeping so the policy is
+//! unit-testable without threads or clocks.
+
+/// Online straggler detector over per-worker progress snapshots.
+#[derive(Debug)]
+pub struct StragglerMonitor {
+    /// A worker is flagged in a window when `delta * factor < median`.
+    factor: f64,
+    /// Consecutive flagged windows before a worker counts as persistent.
+    patience: usize,
+    last: Option<Vec<usize>>,
+    streak: Vec<usize>,
+}
+
+impl StragglerMonitor {
+    /// `factor` mirrors [`super::distributed::DistConfig::straggler_factor`]:
+    /// a worker advancing at less than `median / factor` per window is
+    /// flagged. `patience` is how many consecutive flagged windows make
+    /// that persistent (debounce against one slow batch or a GC pause).
+    pub fn new(n_workers: usize, factor: f64, patience: usize) -> StragglerMonitor {
+        StragglerMonitor {
+            factor: factor.max(1.0),
+            patience: patience.max(1),
+            last: None,
+            streak: vec![0; n_workers],
+        }
+    }
+
+    /// Feed one window's cumulative progress counters (committed steps
+    /// per worker). Returns the workers whose flagged streak has reached
+    /// `patience` as of this window. The first snapshot only establishes
+    /// the baseline and never flags.
+    pub fn observe(&mut self, progress: &[usize]) -> Vec<usize> {
+        assert_eq!(progress.len(), self.streak.len(), "worker count changed");
+        let Some(last) = self.last.replace(progress.to_vec()) else {
+            return Vec::new();
+        };
+        let deltas: Vec<usize> =
+            progress.iter().zip(&last).map(|(now, then)| now.saturating_sub(*then)).collect();
+        let mut sorted = deltas.clone();
+        sorted.sort_unstable();
+        let median = sorted[sorted.len() / 2];
+        // Nobody moved (barrier stall, warmup): that is not straggling,
+        // and flagging everyone would only thrash the actuator.
+        if median == 0 {
+            for s in &mut self.streak {
+                *s = 0;
+            }
+            return Vec::new();
+        }
+        let mut persistent = Vec::new();
+        for (w, delta) in deltas.iter().enumerate() {
+            if (*delta as f64) * self.factor < median as f64 {
+                self.streak[w] += 1;
+                if self.streak[w] >= self.patience {
+                    persistent.push(w);
+                }
+            } else {
+                self.streak[w] = 0;
+            }
+        }
+        persistent
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn steady_workers_are_never_flagged() {
+        let mut m = StragglerMonitor::new(4, 3.0, 2);
+        for window in 1..=5usize {
+            let progress = vec![10 * window; 4];
+            assert!(m.observe(&progress).is_empty(), "window {window}");
+        }
+    }
+
+    #[test]
+    fn persistent_straggler_flags_after_patience_windows() {
+        let mut m = StragglerMonitor::new(3, 3.0, 2);
+        // Baseline.
+        assert!(m.observe(&[0, 0, 0]).is_empty());
+        // Worker 2 crawls at 1 step/window vs a median of 10.
+        assert!(m.observe(&[10, 10, 1]).is_empty(), "patience not yet reached");
+        assert_eq!(m.observe(&[20, 20, 2]), vec![2]);
+        // Still flagged while it stays slow.
+        assert_eq!(m.observe(&[30, 30, 3]), vec![2]);
+    }
+
+    #[test]
+    fn recovery_resets_the_streak() {
+        let mut m = StragglerMonitor::new(3, 3.0, 2);
+        assert!(m.observe(&[0, 0, 0]).is_empty());
+        assert!(m.observe(&[10, 10, 1]).is_empty());
+        // Worker 2 catches up for one window: streak resets.
+        assert!(m.observe(&[20, 20, 11]).is_empty());
+        assert!(m.observe(&[30, 30, 12]).is_empty(), "streak restarted at 1");
+        assert_eq!(m.observe(&[40, 40, 13]), vec![2]);
+    }
+
+    #[test]
+    fn global_stall_flags_nobody_and_clears_streaks() {
+        let mut m = StragglerMonitor::new(2, 2.0, 1);
+        assert!(m.observe(&[0, 0]).is_empty());
+        assert!(m.observe(&[10, 1]).len() == 1);
+        // Barrier stall: no one moves — not a straggler signal.
+        assert!(m.observe(&[10, 1]).is_empty());
+        // And the stall cleared worker 1's streak.
+        assert_eq!(m.observe(&[20, 2]), vec![1], "patience 1 re-flags immediately");
+    }
+}

@@ -1,0 +1,912 @@
+//! Peer-to-peer collective aggregation: ring + tree allreduce.
+//!
+//! The second data-parallel backend (`train-dist --backend allreduce`)
+//! replaces the parameter-server fleet with a worker-only collective:
+//! every rank holds a full model replica, and each step the ranks
+//! allreduce their gradient contributions and apply the identical mean
+//! locally. FireCaffe (arXiv:1511.00175) showed reduction trees beating
+//! parameter servers at scale; Shi et al. (arXiv:1711.05979) model the
+//! PS-vs-allreduce trade-off this module realizes — see
+//! `advisor::lemmas::choose_backend` for the cost model that picks a
+//! side.
+//!
+//! # Topologies
+//!
+//! * **Ring, dense** — the classic chunked ring allreduce:
+//!   reduce-scatter (N−1 rounds, each rank accumulates one segment)
+//!   then allgather (N−1 rounds, the finished segments circulate).
+//!   Per-rank traffic is `2 (N−1)/N · S` regardless of N — bandwidth
+//!   optimal. Segment sums accumulate in ring order, so the result is a
+//!   *sum* with ring-rotation association (identical bytes on every
+//!   rank, since each segment is finished exactly once and then
+//!   copied).
+//! * **Ring, compressed** — codecs are per-key, stateful (top-k error
+//!   feedback) and non-linear, so compressed bodies cannot be summed
+//!   mid-ring. Instead each rank compresses its own gradient once and
+//!   the *contributions* relay around the ring verbatim (N−1 hops);
+//!   every rank then folds all N contributions **flat, in rank order**
+//!   — the same left-associated accumulation the PS sync fold uses, so
+//!   identical inputs produce bit-identical sums.
+//! * **Tree** — contributions stream up a binary tree to the root
+//!   (rank 0), which folds them flat in rank order — again exactly the
+//!   PS fold — and broadcasts the dense sum back down. Every rank
+//!   applies the root's bytes, so the replicas stay bit-identical.
+//!   Latency is `O(log N)` rounds; the root pays `O(N·S)` inbound.
+//!
+//! # Fault behavior
+//!
+//! Collectives hang when a peer wedges — unless every receive is
+//! bounded. All links carry a read deadline (default
+//! [`DEFAULT_DEADLINE_MS`]); a dropped, severed or wedged peer turns
+//! into a clean `Err` from the collective call, which the coordinator's
+//! reform loop (`coordinator::distributed::run_allreduce`) handles by
+//! rebuilding the group from the surviving ranks' committed state. A
+//! collective op never blocks forever — chaos-tested with
+//! `net::fault::FaultyTransport` in `tests/chaos.rs`.
+//!
+//! # Wire format
+//!
+//! Collective links are private rank-to-rank connections; their frames
+//! use tags ≥ 40, disjoint from `net::message` (which owns 1..=26), and
+//! never pass through `Message::decode`:
+//!
+//! | frame | payload |
+//! |-------|---------|
+//! | chunk (40) | `u64 step, u8 phase, u32 seg, u32 chunk, u32 n, n × f32` |
+//! | contribution (41) | `u64 step, u32 owner, u32 n, n × (u32 key, u8 kind, body)` |
+//! | dense sum (42) | `u64 step, u32 n, n × (u32 numel, numel × f32)` |
+//!
+//! Contribution bodies: kind 0 = dense (`u32 numel, numel × f32`),
+//! kind 1 = sparse top-k (`u32 numel, u32 k, k × u32 idx, k × f32
+//! val`), kind 2 = quant8 (`u32 numel, u32 qlen, f32 scale, qlen ×
+//! i8`) — the compressed bodies byte-match the `CompressedPush` entry
+//! bodies, so the advisor's traffic accounting transfers unchanged.
+
+use std::time::Duration;
+
+use crate::net::codec::{Reader, Writer};
+use crate::net::transport::{InProcTransport, Transport};
+use crate::ps::compress::Compressed;
+use crate::tensor::Tensor;
+
+/// Frame tags for collective links (disjoint from `net::message`).
+const F_CHUNK: u8 = 40;
+const F_CONTRIB: u8 = 41;
+const F_SUM: u8 = 42;
+
+/// Contribution-entry kind bytes.
+const K_DENSE: u8 = 0;
+const K_SPARSE: u8 = 1;
+const K_QUANT8: u8 = 2;
+
+/// Ring phase bytes (desync detection).
+const P_REDUCE: u8 = 0;
+const P_GATHER: u8 = 1;
+
+/// Default floats per ring chunk (64 KiB frames): big enough to
+/// amortize framing, small enough to pipeline send/recv and never
+/// deadlock head-to-head TCP sends.
+pub const DEFAULT_CHUNK_FLOATS: usize = 16_384;
+
+/// Default per-receive deadline on collective links. A wedged peer
+/// surfaces as an `Err` within this bound instead of hanging the
+/// collective.
+pub const DEFAULT_DEADLINE_MS: u64 = 5_000;
+
+/// Collective topology. `Ring` is bandwidth-optimal; `Tree` is
+/// latency-optimal — `advisor::lemmas::choose_backend` picks from the
+/// Lemma 3.2 inputs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topology {
+    Ring,
+    Tree,
+}
+
+impl Topology {
+    pub fn parse(s: &str) -> Result<Topology, String> {
+        match s {
+            "ring" => Ok(Topology::Ring),
+            "tree" => Ok(Topology::Tree),
+            other => Err(format!("unknown topology {other:?} (ring|tree)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Topology::Ring => "ring",
+            Topology::Tree => "tree",
+        }
+    }
+}
+
+/// One rank's per-key gradient contribution: dense, or compressed by
+/// the push codec (the exact same [`Compressed`] the PS client would
+/// have put on the wire).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Contrib {
+    Dense(Tensor),
+    Comp(Compressed),
+}
+
+/// One rank's links to its peers, indexed by peer rank (`None` at the
+/// rank's own slot).
+pub type Links = Vec<Option<Box<dyn Transport>>>;
+
+/// Build a full in-process mesh: `mesh(n)[i][j]` is rank `i`'s link to
+/// rank `j`. The run path wraps these in `FaultyTransport` for chaos
+/// runs; ring/tree only use the neighbor/parent-child subset.
+pub fn inproc_mesh(n: usize) -> Vec<Links> {
+    let mut rows: Vec<Links> = (0..n).map(|_| (0..n).map(|_| None).collect()).collect();
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let (a, b) = InProcTransport::pair();
+            rows[i][j] = Some(Box::new(a) as Box<dyn Transport>);
+            rows[j][i] = Some(Box::new(b) as Box<dyn Transport>);
+        }
+    }
+    rows
+}
+
+fn subtree_size(n: usize, i: usize) -> usize {
+    if i >= n {
+        0
+    } else {
+        1 + subtree_size(n, 2 * i + 1) + subtree_size(n, 2 * i + 2)
+    }
+}
+
+/// One rank's handle on the collective group: its links, the model's
+/// key shapes (every rank holds the full model), and wire-byte
+/// counters split by direction — `reduce` (reduce-scatter / relay /
+/// gather-up, the push-direction analogue) and `bcast` (allgather /
+/// broadcast-down, the pull-direction analogue).
+pub struct Collective {
+    rank: usize,
+    n: usize,
+    links: Links,
+    topology: Topology,
+    shapes: Vec<Vec<usize>>,
+    chunk_floats: usize,
+    reduce_bytes: u64,
+    bcast_bytes: u64,
+}
+
+impl Collective {
+    pub fn new(
+        rank: usize,
+        n: usize,
+        mut links: Links,
+        topology: Topology,
+        shapes: Vec<Vec<usize>>,
+    ) -> Result<Collective, String> {
+        if n == 0 || rank >= n {
+            return Err(format!("bad collective rank {rank} of {n}"));
+        }
+        if links.len() != n {
+            return Err(format!("rank {rank}: {} links for {n} ranks", links.len()));
+        }
+        if links[rank].is_some() {
+            return Err(format!("rank {rank}: self-link present"));
+        }
+        let d = Duration::from_millis(DEFAULT_DEADLINE_MS);
+        for l in links.iter_mut().flatten() {
+            l.set_read_deadline(Some(d))?;
+        }
+        Ok(Collective {
+            rank,
+            n,
+            links,
+            topology,
+            shapes,
+            chunk_floats: DEFAULT_CHUNK_FLOATS,
+            reduce_bytes: 0,
+            bcast_bytes: 0,
+        })
+    }
+
+    /// Bound every receive on this rank's links. The collective's
+    /// liveness guarantee — a wedged peer is an `Err`, never a hang —
+    /// is exactly this deadline.
+    pub fn set_deadline(&mut self, d: Duration) -> Result<(), String> {
+        for l in self.links.iter_mut().flatten() {
+            l.set_read_deadline(Some(d))?;
+        }
+        Ok(())
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.n
+    }
+
+    /// Bytes this rank sent in the reduce direction (reduce-scatter,
+    /// contribution relay, gather-up).
+    pub fn reduce_wire_bytes(&self) -> u64 {
+        self.reduce_bytes
+    }
+
+    /// Bytes this rank sent in the broadcast direction (allgather,
+    /// broadcast-down).
+    pub fn bcast_wire_bytes(&self) -> u64 {
+        self.bcast_bytes
+    }
+
+    fn link(&mut self, peer: usize) -> Result<&mut Box<dyn Transport>, String> {
+        self.links
+            .get_mut(peer)
+            .and_then(|l| l.as_mut())
+            .ok_or_else(|| format!("no link to rank {peer}"))
+    }
+
+    /// Allreduce this step's contributions into the per-key **sum**
+    /// over all ranks (callers scale by `1/N` — the same
+    /// scale-then-apply the PS sync release performs). Every rank
+    /// returns bit-identical tensors. Errors are clean and bounded:
+    /// a dead or wedged peer fails the call within the read deadline.
+    pub fn allreduce_sum(
+        &mut self,
+        step: u64,
+        mine: Vec<Contrib>,
+    ) -> Result<Vec<Tensor>, String> {
+        if mine.len() != self.shapes.len() {
+            return Err(format!(
+                "rank {}: {} contributions for {} keys",
+                self.rank,
+                mine.len(),
+                self.shapes.len()
+            ));
+        }
+        if self.n == 1 {
+            let shapes = self.shapes.clone();
+            return fold_rank_order(&shapes, &[mine]);
+        }
+        let all_dense = mine.iter().all(|c| matches!(c, Contrib::Dense(_)));
+        match self.topology {
+            Topology::Ring if all_dense => self.ring_dense(step, mine),
+            Topology::Ring => self.ring_relay(step, mine),
+            Topology::Tree => self.tree_sum(step, mine),
+        }
+    }
+
+    // ---- dense ring: chunked reduce-scatter + allgather ------------
+
+    fn ring_dense(&mut self, step: u64, mine: Vec<Contrib>) -> Result<Vec<Tensor>, String> {
+        let mut buf = Vec::new();
+        for (k, c) in mine.iter().enumerate() {
+            let Contrib::Dense(t) = c else { unreachable!() };
+            if t.shape() != &self.shapes[k][..] {
+                return Err(format!("rank {}: key {k} shape mismatch", self.rank));
+            }
+            buf.extend_from_slice(t.data());
+        }
+        let n = self.n;
+        // Reduce-scatter: after round r this rank has accumulated r+2
+        // contributions into segment (rank - r - 1) mod n; after n-1
+        // rounds it owns the finished segment (rank + 1) mod n.
+        for r in 0..n - 1 {
+            let send_seg = (self.rank + n - r) % n;
+            let recv_seg = (self.rank + n - r - 1) % n;
+            self.exchange_seg(step, P_REDUCE, send_seg, recv_seg, &mut buf, true)?;
+        }
+        // Allgather: finished segments circulate; receives overwrite.
+        for r in 0..n - 1 {
+            let send_seg = (self.rank + 1 + n - r) % n;
+            let recv_seg = (self.rank + n - r) % n;
+            self.exchange_seg(step, P_GATHER, send_seg, recv_seg, &mut buf, false)?;
+        }
+        // Unflatten back into per-key tensors.
+        let mut out = Vec::with_capacity(self.shapes.len());
+        let mut off = 0;
+        for shape in &self.shapes {
+            let numel: usize = shape.iter().product();
+            out.push(Tensor::from_vec(shape, buf[off..off + numel].to_vec()));
+            off += numel;
+        }
+        Ok(out)
+    }
+
+    fn seg_bounds(&self, len: usize, seg: usize) -> (usize, usize) {
+        (seg * len / self.n, (seg + 1) * len / self.n)
+    }
+
+    /// One ring round: send `send_seg` to the right neighbor while
+    /// receiving `recv_seg` from the left, chunk-interleaved so neither
+    /// side ever has more than one chunk outstanding past the socket
+    /// buffer (no head-to-head send deadlock over TCP).
+    fn exchange_seg(
+        &mut self,
+        step: u64,
+        phase: u8,
+        send_seg: usize,
+        recv_seg: usize,
+        buf: &mut [f32],
+        accumulate: bool,
+    ) -> Result<(), String> {
+        let right = (self.rank + 1) % self.n;
+        let left = (self.rank + self.n - 1) % self.n;
+        let (ss, se) = self.seg_bounds(buf.len(), send_seg);
+        let (rs, re) = self.seg_bounds(buf.len(), recv_seg);
+        let chunk = self.chunk_floats.max(1);
+        let n_send = (se - ss).div_ceil(chunk);
+        let n_recv = (re - rs).div_ceil(chunk);
+        for k in 0..n_send.max(n_recv) {
+            if k < n_send {
+                let a = ss + k * chunk;
+                let b = (a + chunk).min(se);
+                let slice = &buf[a..b];
+                let (seg32, k32, n32) = (send_seg as u32, k as u32, slice.len() as u32);
+                self.link(right)?.send_with(&mut |w: &mut Writer| {
+                    w.u8(F_CHUNK);
+                    w.u64(step);
+                    w.u8(phase);
+                    w.u32(seg32);
+                    w.u32(k32);
+                    w.u32(n32);
+                    w.f32_raw(slice);
+                })?;
+                let sent = 22 + 4 * (b - a) as u64;
+                if phase == P_REDUCE {
+                    self.reduce_bytes += sent;
+                } else {
+                    self.bcast_bytes += sent;
+                }
+            }
+            if k < n_recv {
+                let a = rs + k * chunk;
+                let b = (a + chunk).min(re);
+                let dst = &mut buf[a..b];
+                let mut res: Result<(), String> = Ok(());
+                self.links[left]
+                    .as_mut()
+                    .ok_or_else(|| format!("no link to rank {left}"))?
+                    .recv_with(&mut |body: &[u8]| {
+                        res = read_chunk_into(body, step, phase, recv_seg, k, dst, accumulate);
+                        Ok(())
+                    })?;
+                res?;
+            }
+        }
+        Ok(())
+    }
+
+    // ---- compressed ring: contribution relay -----------------------
+
+    fn ring_relay(&mut self, step: u64, mine: Vec<Contrib>) -> Result<Vec<Tensor>, String> {
+        let n = self.n;
+        let right = (self.rank + 1) % n;
+        let left = (self.rank + n - 1) % n;
+        // Send own contribution once; it relays all the way around.
+        let own = encode_contrib(step, self.rank as u32, &mine);
+        self.link(right)?.send_with(&mut |w: &mut Writer| w.raw(&own))?;
+        self.reduce_bytes += own.len() as u64;
+        let mut per_rank: Vec<Option<Vec<Contrib>>> = (0..n).map(|_| None).collect();
+        per_rank[self.rank] = Some(mine);
+        for r in 0..n - 1 {
+            let expect_owner = (self.rank + n - 1 - r) % n;
+            let mut frame = Vec::new();
+            self.links[left]
+                .as_mut()
+                .ok_or_else(|| format!("no link to rank {left}"))?
+                .recv_with(&mut |body: &[u8]| {
+                    frame.extend_from_slice(body);
+                    Ok(())
+                })?;
+            let (owner, entries) = decode_contrib(&frame, step, &self.shapes)?;
+            if owner as usize != expect_owner {
+                return Err(format!(
+                    "collective desync: contribution from rank {owner}, expected {expect_owner}"
+                ));
+            }
+            // Relay unless the right neighbor is the owner (frame has
+            // then completed its loop).
+            if right != owner as usize {
+                self.link(right)?.send_with(&mut |w: &mut Writer| w.raw(&frame))?;
+                self.reduce_bytes += frame.len() as u64;
+            }
+            per_rank[owner as usize] = Some(entries);
+        }
+        let ordered: Vec<Vec<Contrib>> = per_rank
+            .into_iter()
+            .map(|c| c.ok_or_else(|| "collective desync: missing contribution".to_string()))
+            .collect::<Result<_, _>>()?;
+        let shapes = self.shapes.clone();
+        fold_rank_order(&shapes, &ordered)
+    }
+
+    // ---- tree: gather contributions to root, broadcast dense sum ---
+
+    fn tree_sum(&mut self, step: u64, mine: Vec<Contrib>) -> Result<Vec<Tensor>, String> {
+        let n = self.n;
+        let parent = if self.rank == 0 { None } else { Some((self.rank - 1) / 2) };
+        let children: Vec<usize> =
+            [2 * self.rank + 1, 2 * self.rank + 2].into_iter().filter(|&c| c < n).collect();
+        // Gather up: own contribution first, then relay each child's
+        // subtree verbatim. The root decodes everything.
+        let mut per_rank: Vec<Option<Vec<Contrib>>> = (0..n).map(|_| None).collect();
+        if let Some(p) = parent {
+            let own = encode_contrib(step, self.rank as u32, &mine);
+            self.link(p)?.send_with(&mut |w: &mut Writer| w.raw(&own))?;
+            self.reduce_bytes += own.len() as u64;
+        }
+        per_rank[self.rank] = Some(mine);
+        for &c in &children {
+            for _ in 0..subtree_size(n, c) {
+                let mut frame = Vec::new();
+                self.links[c]
+                    .as_mut()
+                    .ok_or_else(|| format!("no link to rank {c}"))?
+                    .recv_with(&mut |body: &[u8]| {
+                        frame.extend_from_slice(body);
+                        Ok(())
+                    })?;
+                if let Some(p) = parent {
+                    self.link(p)?.send_with(&mut |w: &mut Writer| w.raw(&frame))?;
+                    self.reduce_bytes += frame.len() as u64;
+                } else {
+                    let (owner, entries) = decode_contrib(&frame, step, &self.shapes)?;
+                    if (owner as usize) >= n || per_rank[owner as usize].is_some() {
+                        return Err(format!(
+                            "collective desync: duplicate contribution from rank {owner}"
+                        ));
+                    }
+                    per_rank[owner as usize] = Some(entries);
+                }
+            }
+        }
+        // Root folds flat in rank order — the exact PS sync fold — and
+        // broadcasts the dense sum; everyone applies the same bytes.
+        let sums = if parent.is_none() {
+            let ordered: Vec<Vec<Contrib>> = per_rank
+                .into_iter()
+                .map(|c| c.ok_or_else(|| "collective desync: missing contribution".to_string()))
+                .collect::<Result<_, _>>()?;
+            let shapes = self.shapes.clone();
+            fold_rank_order(&shapes, &ordered)?
+        } else {
+            let p = parent.unwrap();
+            let mut frame = Vec::new();
+            self.links[p]
+                .as_mut()
+                .ok_or_else(|| format!("no link to rank {p}"))?
+                .recv_with(&mut |body: &[u8]| {
+                    frame.extend_from_slice(body);
+                    Ok(())
+                })?;
+            decode_sum(&frame, step, &self.shapes)?
+        };
+        if !children.is_empty() {
+            let frame = encode_sum(step, &sums);
+            for &c in &children {
+                self.link(c)?.send_with(&mut |w: &mut Writer| w.raw(&frame))?;
+                self.bcast_bytes += frame.len() as u64;
+            }
+        }
+        Ok(sums)
+    }
+}
+
+/// Fold per-rank contributions flat, left-associated, in rank order —
+/// byte-for-byte the arithmetic of the PS sync fold
+/// (`ps::server::fold_sync_*`): dense adds via `axpy(1.0)`, sparse and
+/// quant8 bodies via `scatter_axpy(1.0)` into a zeroed accumulator.
+fn fold_rank_order(
+    shapes: &[Vec<usize>],
+    per_rank: &[Vec<Contrib>],
+) -> Result<Vec<Tensor>, String> {
+    let mut out = Vec::with_capacity(shapes.len());
+    for (k, shape) in shapes.iter().enumerate() {
+        let numel: usize = shape.iter().product();
+        let mut sum: Option<Tensor> = None;
+        for (r, contribs) in per_rank.iter().enumerate() {
+            let c = contribs
+                .get(k)
+                .ok_or_else(|| format!("rank {r}: missing contribution for key {k}"))?;
+            match c {
+                Contrib::Dense(t) => {
+                    if t.shape() != &shape[..] {
+                        return Err(format!("rank {r}: key {k} shape mismatch"));
+                    }
+                    match &mut sum {
+                        None => sum = Some(t.clone()),
+                        Some(s) => s.axpy(1.0, t),
+                    }
+                }
+                Contrib::Comp(c) => {
+                    c.validate(numel).map_err(|e| format!("rank {r} key {k}: {e}"))?;
+                    let s = sum.get_or_insert_with(|| Tensor::zeros(shape));
+                    c.scatter_axpy(1.0, s.data_mut())
+                        .map_err(|e| format!("rank {r} key {k}: {e}"))?;
+                }
+            }
+        }
+        out.push(sum.unwrap_or_else(|| Tensor::zeros(shape)));
+    }
+    Ok(out)
+}
+
+fn read_chunk_into(
+    body: &[u8],
+    step: u64,
+    phase: u8,
+    seg: usize,
+    chunk: usize,
+    dst: &mut [f32],
+    accumulate: bool,
+) -> Result<(), String> {
+    let mut r = Reader::new(body);
+    if r.u8()? != F_CHUNK {
+        return Err("collective desync: expected chunk frame".into());
+    }
+    if r.u64()? != step || r.u8()? != phase {
+        return Err("collective desync: chunk from wrong step/phase".into());
+    }
+    if r.u32()? as usize != seg || r.u32()? as usize != chunk {
+        return Err("collective desync: unexpected segment/chunk index".into());
+    }
+    let n = r.u32()? as usize;
+    if n != dst.len() {
+        return Err(format!("collective desync: chunk of {n} floats, expected {}", dst.len()));
+    }
+    let raw = r.raw(4 * n)?;
+    if accumulate {
+        for (d, b) in dst.iter_mut().zip(raw.chunks_exact(4)) {
+            *d += f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+        }
+    } else {
+        for (d, b) in dst.iter_mut().zip(raw.chunks_exact(4)) {
+            *d = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+        }
+    }
+    if r.remaining() != 0 {
+        return Err("collective desync: trailing bytes in chunk".into());
+    }
+    Ok(())
+}
+
+fn encode_contrib(step: u64, owner: u32, entries: &[Contrib]) -> Vec<u8> {
+    let mut w = Writer::with_capacity(64);
+    w.u8(F_CONTRIB);
+    w.u64(step);
+    w.u32(owner);
+    w.u32(entries.len() as u32);
+    for (k, c) in entries.iter().enumerate() {
+        w.u32(k as u32);
+        match c {
+            Contrib::Dense(t) => {
+                w.u8(K_DENSE);
+                w.u32(t.len() as u32);
+                w.f32_raw(t.data());
+            }
+            Contrib::Comp(Compressed::Sparse { numel, idx, val }) => {
+                w.u8(K_SPARSE);
+                w.u32(*numel as u32);
+                w.u32(idx.len() as u32);
+                w.u32_raw(idx);
+                w.f32_raw(val);
+            }
+            Contrib::Comp(Compressed::Quant8 { numel, scale, q }) => {
+                w.u8(K_QUANT8);
+                w.u32(*numel as u32);
+                w.u32(q.len() as u32);
+                w.f32(*scale);
+                // SAFETY: i8 and u8 have identical size/alignment and
+                // every bit pattern is valid — one bulk append.
+                let bytes =
+                    unsafe { std::slice::from_raw_parts(q.as_ptr().cast::<u8>(), q.len()) };
+                w.raw(bytes);
+            }
+        }
+    }
+    w.finish()
+}
+
+fn decode_contrib(
+    body: &[u8],
+    step: u64,
+    shapes: &[Vec<usize>],
+) -> Result<(u32, Vec<Contrib>), String> {
+    let mut r = Reader::new(body);
+    if r.u8()? != F_CONTRIB {
+        return Err("collective desync: expected contribution frame".into());
+    }
+    if r.u64()? != step {
+        return Err("collective desync: contribution from wrong step".into());
+    }
+    let owner = r.u32()?;
+    let n = r.u32()? as usize;
+    if n != shapes.len() {
+        return Err(format!("contribution with {n} entries, expected {}", shapes.len()));
+    }
+    let mut entries = Vec::with_capacity(n);
+    for (k, shape) in shapes.iter().enumerate() {
+        if r.u32()? as usize != k {
+            return Err("collective desync: contribution keys out of order".into());
+        }
+        let expect: usize = shape.iter().product();
+        let kind = r.u8()?;
+        let numel = r.u32()? as usize;
+        if numel != expect {
+            return Err(format!("key {k}: {numel} elements, expected {expect}"));
+        }
+        match kind {
+            K_DENSE => {
+                let raw = r.raw(4 * numel)?;
+                let mut data = Vec::with_capacity(numel);
+                for b in raw.chunks_exact(4) {
+                    data.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+                }
+                entries.push(Contrib::Dense(Tensor::from_vec(shape, data)));
+            }
+            K_SPARSE => {
+                let nnz = r.u32()? as usize;
+                if nnz > numel {
+                    return Err(format!("key {k}: {nnz} sparse entries > {numel}"));
+                }
+                let idx_raw = r.raw(4 * nnz)?;
+                let mut idx = Vec::with_capacity(nnz);
+                for b in idx_raw.chunks_exact(4) {
+                    idx.push(u32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+                }
+                let val_raw = r.raw(4 * nnz)?;
+                let mut val = Vec::with_capacity(nnz);
+                for b in val_raw.chunks_exact(4) {
+                    val.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+                }
+                entries.push(Contrib::Comp(Compressed::Sparse { numel, idx, val }));
+            }
+            K_QUANT8 => {
+                let qlen = r.u32()? as usize;
+                if qlen != numel {
+                    return Err(format!("key {k}: quant8 qlen {qlen} != numel {numel}"));
+                }
+                let scale = r.f32()?;
+                let raw = r.raw(qlen)?;
+                let q: Vec<i8> = raw.iter().map(|&b| b as i8).collect();
+                entries.push(Contrib::Comp(Compressed::Quant8 { numel, scale, q }));
+            }
+            other => return Err(format!("unknown contribution kind {other}")),
+        }
+    }
+    if r.remaining() != 0 {
+        return Err("collective desync: trailing bytes in contribution".into());
+    }
+    Ok((owner, entries))
+}
+
+fn encode_sum(step: u64, sums: &[Tensor]) -> Vec<u8> {
+    let mut w = Writer::with_capacity(64);
+    w.u8(F_SUM);
+    w.u64(step);
+    w.u32(sums.len() as u32);
+    for t in sums {
+        w.u32(t.len() as u32);
+        w.f32_raw(t.data());
+    }
+    w.finish()
+}
+
+fn decode_sum(body: &[u8], step: u64, shapes: &[Vec<usize>]) -> Result<Vec<Tensor>, String> {
+    let mut r = Reader::new(body);
+    if r.u8()? != F_SUM {
+        return Err("collective desync: expected sum frame".into());
+    }
+    if r.u64()? != step {
+        return Err("collective desync: sum from wrong step".into());
+    }
+    let n = r.u32()? as usize;
+    if n != shapes.len() {
+        return Err(format!("sum with {n} entries, expected {}", shapes.len()));
+    }
+    let mut out = Vec::with_capacity(n);
+    for shape in shapes {
+        let expect: usize = shape.iter().product();
+        let numel = r.u32()? as usize;
+        if numel != expect {
+            return Err(format!("sum entry of {numel} elements, expected {expect}"));
+        }
+        let raw = r.raw(4 * numel)?;
+        let mut data = Vec::with_capacity(numel);
+        for b in raw.chunks_exact(4) {
+            data.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+        }
+        out.push(Tensor::from_vec(shape, data));
+    }
+    if r.remaining() != 0 {
+        return Err("collective desync: trailing bytes in sum".into());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ps::compress::quantize8;
+    use crate::util::rng::Rng;
+
+    fn shapes() -> Vec<Vec<usize>> {
+        vec![vec![3], vec![2, 2], vec![5]]
+    }
+
+    /// Per-rank dense contributions with integer values, so any
+    /// association of the f32 sum is exact and comparable bitwise.
+    fn int_contribs(rank: usize, shapes: &[Vec<usize>]) -> Vec<Contrib> {
+        shapes
+            .iter()
+            .enumerate()
+            .map(|(k, s)| {
+                let numel: usize = s.iter().product();
+                let data: Vec<f32> =
+                    (0..numel).map(|i| ((rank + 1) * (i + 3 * k + 1)) as f32).collect();
+                Contrib::Dense(Tensor::from_vec(s, data))
+            })
+            .collect()
+    }
+
+    fn run_ranks(
+        n: usize,
+        topology: Topology,
+        make: impl Fn(usize) -> Vec<Contrib> + Sync,
+    ) -> Vec<Result<Vec<Tensor>, String>> {
+        let mesh = inproc_mesh(n);
+        let shapes = shapes();
+        let mut out: Vec<Result<Vec<Tensor>, String>> = Vec::new();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = mesh
+                .into_iter()
+                .enumerate()
+                .map(|(rank, links)| {
+                    let shapes = shapes.clone();
+                    let make = &make;
+                    s.spawn(move || {
+                        let mut c = Collective::new(rank, n, links, topology, shapes)?;
+                        c.set_deadline(Duration::from_secs(5))?;
+                        c.allreduce_sum(7, make(rank))
+                    })
+                })
+                .collect();
+            for h in handles {
+                out.push(h.join().unwrap());
+            }
+        });
+        out
+    }
+
+    fn flat_fold(n: usize, make: impl Fn(usize) -> Vec<Contrib>) -> Vec<Tensor> {
+        let per_rank: Vec<Vec<Contrib>> = (0..n).map(&make).collect();
+        fold_rank_order(&shapes(), &per_rank).unwrap()
+    }
+
+    #[test]
+    fn ring_dense_sums_exactly() {
+        let n = 4;
+        let expect = flat_fold(n, |r| int_contribs(r, &shapes()));
+        for res in run_ranks(n, Topology::Ring, |r| int_contribs(r, &shapes())) {
+            assert_eq!(res.unwrap(), expect);
+        }
+    }
+
+    #[test]
+    fn tree_matches_flat_fold_bitwise() {
+        // Arbitrary (non-integer) values: the tree fold is the flat
+        // rank-order fold, so equality is bitwise, not just numeric.
+        let n = 5;
+        let make = |rank: usize| -> Vec<Contrib> {
+            let mut rng = Rng::new(0xABCD + rank as u64);
+            shapes()
+                .iter()
+                .map(|s| {
+                    let numel: usize = s.iter().product();
+                    let data: Vec<f32> =
+                        (0..numel).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+                    Contrib::Dense(Tensor::from_vec(s, data))
+                })
+                .collect()
+        };
+        let expect = flat_fold(n, make);
+        for res in run_ranks(n, Topology::Tree, make) {
+            assert_eq!(res.unwrap(), expect);
+        }
+    }
+
+    #[test]
+    fn ring_compressed_relay_matches_flat_fold() {
+        let n = 3;
+        let make = |rank: usize| -> Vec<Contrib> {
+            shapes()
+                .iter()
+                .enumerate()
+                .map(|(k, s)| {
+                    let numel: usize = s.iter().product();
+                    let data: Vec<f32> =
+                        (0..numel).map(|i| (rank as f32 + 1.0) * (i as f32 - k as f32)).collect();
+                    Contrib::Comp(quantize8(&Tensor::from_vec(s, data), None))
+                })
+                .collect()
+        };
+        let expect = flat_fold(n, make);
+        for res in run_ranks(n, Topology::Ring, make) {
+            assert_eq!(res.unwrap(), expect);
+        }
+    }
+
+    #[test]
+    fn single_rank_is_identity() {
+        let shapes = shapes();
+        let mine = int_contribs(0, &shapes);
+        let mut c = Collective::new(
+            0,
+            1,
+            vec![None],
+            Topology::Ring,
+            shapes.clone(),
+        )
+        .unwrap();
+        let out = c.allreduce_sum(0, mine.clone()).unwrap();
+        for (got, want) in out.iter().zip(mine.iter()) {
+            let Contrib::Dense(t) = want else { panic!() };
+            assert_eq!(got, t);
+        }
+    }
+
+    #[test]
+    fn wedged_peer_errors_within_deadline() {
+        // Rank 1 of 3 never shows up: the survivors' collective calls
+        // must fail within the read deadline, never hang.
+        let n = 3;
+        let mut mesh = inproc_mesh(n);
+        let links2 = mesh.pop().unwrap();
+        let _links1 = mesh.pop().unwrap(); // rank 1 wedged (links held open)
+        let links0 = mesh.pop().unwrap();
+        let shp = shapes();
+        std::thread::scope(|s| {
+            for (rank, links) in [(0usize, links0), (2usize, links2)] {
+                let shp = shp.clone();
+                s.spawn(move || {
+                    let mut c =
+                        Collective::new(rank, n, links, Topology::Ring, shp.clone()).unwrap();
+                    c.set_deadline(Duration::from_millis(200)).unwrap();
+                    let res = c.allreduce_sum(0, int_contribs(rank, &shp));
+                    assert!(res.is_err(), "rank {rank} should fail on wedged peer");
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn wire_byte_counters_split_by_direction() {
+        let n = 2;
+        let out = run_counters(n);
+        for (reduce, bcast) in out {
+            assert!(reduce > 0, "reduce bytes counted");
+            assert!(bcast > 0, "bcast bytes counted");
+        }
+    }
+
+    fn run_counters(n: usize) -> Vec<(u64, u64)> {
+        let mesh = inproc_mesh(n);
+        let shp = shapes();
+        let mut out = Vec::new();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = mesh
+                .into_iter()
+                .enumerate()
+                .map(|(rank, links)| {
+                    let shp = shp.clone();
+                    s.spawn(move || {
+                        let mut c =
+                            Collective::new(rank, n, links, Topology::Ring, shp.clone()).unwrap();
+                        c.allreduce_sum(1, int_contribs(rank, &shp)).unwrap();
+                        (c.reduce_wire_bytes(), c.bcast_wire_bytes())
+                    })
+                })
+                .collect();
+            for h in handles {
+                out.push(h.join().unwrap());
+            }
+        });
+        out
+    }
+}

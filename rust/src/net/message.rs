@@ -141,6 +141,23 @@ pub enum Message {
     /// connection into the link — frames forwarded after the cut arrive
     /// in order behind the snapshot).
     Join { epoch: u64 },
+    /// Replica -> predecessor (chain replication, upstream on the chain
+    /// link): cumulative tail-ack watermark. "The first `upto` forwarded
+    /// push frames on this connection have been durably applied by every
+    /// chain member at or below me." The tail emits one after each
+    /// applied forward; mid-chain members relay the count only once
+    /// their own downstream has confirmed it — so the primary gates
+    /// worker `PushAck`s on end-to-end chain durability without
+    /// per-frame round-trips.
+    ReplAck { upto: u64 },
+    /// Worker -> server: this worker is done (clean shutdown or
+    /// coordinator-driven retirement). The server drops any per-worker
+    /// soft state — today the delta-pull reconstruction cache — and
+    /// replies [`RetireAck`](Self::RetireAck). Purely an optimization:
+    /// correctness never depends on the cache, only memory does.
+    Retire { worker: u32 },
+    /// Server -> worker: retirement processed.
+    RetireAck,
 }
 
 /// One entry of a [`CompressedPullReply`](Message::CompressedPullReply):
@@ -181,6 +198,9 @@ const T_CATCH_UP_DONE: u8 = 20;
 const T_JOIN: u8 = 21;
 const T_COMPRESSED_PULL: u8 = 22;
 const T_COMPRESSED_PULL_REPLY: u8 = 23;
+const T_REPL_ACK: u8 = 24;
+const T_RETIRE: u8 = 25;
+const T_RETIRE_ACK: u8 = 26;
 
 /// Per-entry codec tags inside a `CompressedPush` body. A
 /// `CompressedPull`/`CompressedPullReply` reuses the same byte space for
@@ -343,6 +363,15 @@ impl Message {
                 w.u8(T_JOIN);
                 w.u64(*epoch);
             }
+            Message::ReplAck { upto } => {
+                w.u8(T_REPL_ACK);
+                w.u64(*upto);
+            }
+            Message::Retire { worker } => {
+                w.u8(T_RETIRE);
+                w.u32(*worker);
+            }
+            Message::RetireAck => w.u8(T_RETIRE_ACK),
         }
     }
 
@@ -496,6 +525,9 @@ impl Message {
                 }
             }
             T_JOIN => Message::Join { epoch: r.u64()? },
+            T_REPL_ACK => Message::ReplAck { upto: r.u64()? },
+            T_RETIRE => Message::Retire { worker: r.u32()? },
+            T_RETIRE_ACK => Message::RetireAck,
             other => return Err(format!("unknown message tag {other}")),
         };
         if r.remaining() != 0 {
@@ -1045,6 +1077,9 @@ mod tests {
         roundtrip(Message::Ping);
         roundtrip(Message::Pong { epoch: 2, is_primary: true });
         roundtrip(Message::Pong { epoch: 0, is_primary: false });
+        roundtrip(Message::ReplAck { upto: 12 });
+        roundtrip(Message::Retire { worker: 5 });
+        roundtrip(Message::RetireAck);
     }
 
     #[test]

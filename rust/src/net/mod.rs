@@ -1,13 +1,16 @@
 //! Networking substrate: binary codec, protocol messages, framed
-//! transports (TCP and in-process) and deterministic fault injection
-//! for the parameter-server protocol.
+//! transports (TCP and in-process), deterministic fault injection for
+//! the parameter-server protocol, and peer-to-peer collectives (ring +
+//! tree allreduce) for the PS-free backend.
 
 pub mod codec;
+pub mod collective;
 pub mod fault;
 pub mod message;
 pub mod transport;
 
 pub use codec::{Reader, Writer};
+pub use collective::{Collective, Contrib, Topology};
 pub use fault::{FaultEvent, FaultKind, FaultLog, FaultPlan, FaultyTransport};
 pub use message::Message;
 pub use transport::{connect, listen, InProcTransport, TcpTransport, Transport};

@@ -588,6 +588,28 @@ impl PsClient {
         }
         Ok((pulls, pushes, updates))
     }
+
+    /// Announce this worker's clean departure to every server so they
+    /// reclaim its per-worker soft state (the delta-pull reconstruction
+    /// cache). Best-effort by design: the cache is an optimization, so
+    /// a server that is down, demoted or ancient just misses the hint —
+    /// its eviction falls back to the incarnation-bump path. Never
+    /// retries, never fails the caller.
+    pub fn retire(&mut self) {
+        let worker = self.worker_id;
+        let restore = self.read_deadline;
+        for t in &mut self.transports {
+            if t.send(&Message::Retire { worker }).is_err() {
+                continue;
+            }
+            // One bounded reply read keeps the protocol in lockstep on
+            // this connection; any error or non-ack is ignored, and a
+            // wedged server can't stall the departure.
+            let _ = t.set_read_deadline(Some(Duration::from_millis(250)));
+            let _ = t.recv();
+            let _ = t.set_read_deadline(restore);
+        }
+    }
 }
 
 /// Routing epoch to stamp on the next encoded op: the source cell's

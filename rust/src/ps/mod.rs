@@ -13,8 +13,12 @@
 //! * [`replica`] — chain replication: each shard's primary forwards
 //!   admitted push frames (with their `(worker, step, seq)` tags, so
 //!   replicas build identical dedup watermarks) down a chain of R−1
-//!   replicas; [`router::ReplicatedTopology`] tracks which physical
-//!   server is each shard's primary and re-points it on failover.
+//!   replicas, and gates each worker's ack on the *tail's* cumulative
+//!   `ReplAck` watermark — an acked frame is durable on every chain
+//!   member, and a replica that stops acking within the bounded
+//!   timeout is dropped from the chain rather than wedging pushes.
+//!   [`router::ReplicatedTopology`] tracks which physical server is
+//!   each shard's primary and re-points it on failover.
 //!
 //! # Wire format
 //!
@@ -39,6 +43,9 @@
 //! | `Error`           | `str what` (u32 byte length || UTF-8)            |
 //! | `ReplForward`     | forwarded `Push`/`CompressedPush` frame, verbatim |
 //! | `ReplRelease`     | `u64 step`                                       |
+//! | `ReplAck`         | `u64 upto` (cumulative count of processed `ReplForward`s) |
+//! | `Retire`          | `u32 worker`                                     |
+//! | `RetireAck`       | —                                                |
 //! | `Promote`         | `u64 epoch`                                      |
 //! | `PromoteAck`      | `u64 epoch, u64 clock`                           |
 //! | `Ping`            | —                                                |
@@ -157,7 +164,11 @@
 //! re-resolve the shard's primary through their reconnect handler —
 //! killing a primary mid-run leaves final parameters byte-identical to
 //! a fault-free run (chaos-tested per codec — pull codecs included —
-//! async + sync).
+//! async + sync). Workers announce departure with `Retire`
+//! ([`PsClient::retire`]): servers drop that worker's per-worker state
+//! (the delta-pull reconstruction cache), and an incarnation bump in
+//! the seq tag's high bits evicts a restarted worker's stale entries —
+//! per-worker caches stay bounded by the live worker set.
 
 pub mod client;
 pub mod compress;

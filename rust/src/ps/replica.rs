@@ -13,19 +13,27 @@
 //!
 //! # Consistency contract
 //!
-//! * **Forward before ack.** A push is forwarded down-chain *before* its
-//!   `PushAck` goes back to the worker, under the replication order lock
-//!   ([`ReplicationState::guard`]). An acked update therefore exists on
-//!   every live chain member's inbound stream; an un-acked update is
-//!   replayed by the client against whichever node is primary next.
-//!   Either way no update is lost or doubled across a failover — the
-//!   chaos suite asserts final parameters byte-identical to a fault-free
-//!   run. Caveat (see ROADMAP): over in-proc channels the forwarded
-//!   frame's delivery is independent of the primary's life, but over TCP
-//!   a successful forward means bytes in the primary's kernel send
-//!   buffer — a host crash inside that window can lose an acked update.
-//!   Closing it for real networks means acking from the chain *tail*
-//!   instead of the head.
+//! * **Ack from the tail.** A push is forwarded down-chain under the
+//!   replication order lock ([`ReplicationState::guard`]), and the
+//!   worker's `PushAck` is then gated on the chain's cumulative
+//!   **tail-ack watermark**: each chain member counts the forwarded
+//!   push frames it applies and sends [`Message::ReplAck`] upstream on
+//!   the chain link once its own downstream (if any) has confirmed
+//!   everything it relayed. The primary acks the worker only when the
+//!   watermark covers the forwarded frame — so an acked update has been
+//!   *applied* by every live chain member, not merely handed to the
+//!   primary's kernel send buffer (the fire-and-forget hole this
+//!   closed: over TCP a host crash could previously lose an acked
+//!   update). Acks are cumulative and pipelined — no per-frame
+//!   round-trip; the wait ([`ReplicationState::await_tail_acks`]) is
+//!   bounded, and a link that cannot confirm within the bound is
+//!   dropped (degrade, never wedge — the supervisor re-provisions it).
+//!   An un-acked update is replayed by the client against whichever
+//!   node is primary next; either way no update is lost or doubled
+//!   across a failover — the chaos suite asserts final parameters
+//!   byte-identical to a fault-free run, and the ack-durability chaos
+//!   test proves every acked frame present on a promoted replica even
+//!   under seeded chain-link frame drops.
 //! * **Total replication order.** When a chain is attached, admission,
 //!   local apply/fold and the forward happen under one mutex, so the
 //!   down-chain stream is an exact serialization of the primary's state
@@ -67,8 +75,9 @@
 //! lock ([`ReplicationState::apply_shared`]); on the solo fast path
 //! that is one uncontended rwlock read acquisition.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::time::{Duration, Instant};
 
 use crate::net::message::{wire, Message};
 use crate::net::transport::Transport;
@@ -94,12 +103,30 @@ pub const STALE_EPOCH: &str = "stale epoch";
 /// and no lock.
 pub struct ReplicationState {
     active: AtomicBool,
-    downstream: Mutex<Vec<Box<dyn Transport>>>,
+    downstream: Mutex<Vec<Downlink>>,
+    /// Stable id source for [`Downlink`]s — ack waiters name links by
+    /// id, so a link dropped and replaced mid-wait is never confused
+    /// with its successor.
+    next_id: AtomicU64,
     /// The membership **cut lock**. Apply paths hold it shared; a join
     /// snapshot holds it exclusive across export-and-attach, so the
     /// snapshot plus the subsequent forward stream is a gap-free,
     /// overlap-free serialization of the store.
     cut: RwLock<()>,
+}
+
+/// One downstream chain link plus its cumulative ack watermark.
+/// `sent` counts push frames forwarded on this link since attach;
+/// `acked` is the highest tail-ack watermark received back on it
+/// ("the first `acked` forwarded frames are durable on every chain
+/// member below this link"). Per-connection FIFO ordering makes the
+/// pair a durability proof: `acked >= n` implies the first `n` frames
+/// forwarded on this link were applied down-chain.
+pub struct Downlink {
+    pub id: u64,
+    pub t: Box<dyn Transport>,
+    pub sent: u64,
+    pub acked: u64,
 }
 
 impl Default for ReplicationState {
@@ -113,7 +140,17 @@ impl ReplicationState {
         ReplicationState {
             active: AtomicBool::new(false),
             downstream: Mutex::new(Vec::new()),
+            next_id: AtomicU64::new(1),
             cut: RwLock::new(()),
+        }
+    }
+
+    fn wrap(&self, t: Box<dyn Transport>) -> Downlink {
+        Downlink {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            t,
+            sent: 0,
+            acked: 0,
         }
     }
 
@@ -136,17 +173,19 @@ impl ReplicationState {
     /// the cut lock held exclusively to guarantee no frame falls between
     /// the exported snapshot and the first forward.
     pub fn attach(&self, conn: Box<dyn Transport>) {
+        let link = self.wrap(conn);
         let mut d = self.downstream.lock().unwrap();
-        d.push(conn);
+        d.push(link);
         self.active.store(true, Ordering::Release);
     }
 
     /// Install (or replace) the downstream chain connections. An empty
     /// vector detaches replication (the solo fast path).
     pub fn set_downstream(&self, conns: Vec<Box<dyn Transport>>) {
+        let links: Vec<Downlink> = conns.into_iter().map(|c| self.wrap(c)).collect();
         let mut d = self.downstream.lock().unwrap();
-        self.active.store(!conns.is_empty(), Ordering::Release);
-        *d = conns;
+        self.active.store(!links.is_empty(), Ordering::Release);
+        *d = links;
     }
 
     /// Number of live downstream connections.
@@ -157,7 +196,7 @@ impl ReplicationState {
     /// Acquire the replication order lock, or `None` when no chain is
     /// attached. Self-heals: once every downstream link has died the
     /// fast-path flag flips back off.
-    pub fn guard(&self) -> Option<MutexGuard<'_, Vec<Box<dyn Transport>>>> {
+    pub fn guard(&self) -> Option<MutexGuard<'_, Vec<Downlink>>> {
         if !self.active.load(Ordering::Acquire) {
             return None;
         }
@@ -168,27 +207,137 @@ impl ReplicationState {
         }
         Some(g)
     }
+
+    /// Absorb any [`Message::ReplAck`]s queued on the downstream links
+    /// (non-blocking-ish: one short poll per link). Links that fail
+    /// with a non-timeout error are dropped. Returns `true` when every
+    /// surviving link is fully drained (`acked == sent`) — the
+    /// mid-chain relay condition.
+    pub fn drain_acks(&self) -> bool {
+        let Some(mut g) = self.guard() else { return true };
+        drain_acks_locked(&mut g);
+        g.iter().all(|l| l.acked >= l.sent)
+    }
+
+    /// Block until the tail-ack watermark covers every `(link id,
+    /// needed)` target, the link in question has died, or `timeout`
+    /// elapses — in which case the still-unsatisfied links are dropped
+    /// (the chain degrades rather than wedging the worker ack; the
+    /// supervisor re-provisions through the catch-up path). The guard
+    /// is re-acquired per poll slice so concurrent push handlers
+    /// interleave — acks pipeline, they don't round-trip per frame.
+    pub fn await_tail_acks(&self, targets: &[(u64, u64)], timeout: Duration) {
+        if targets.is_empty() {
+            return;
+        }
+        let t0 = Instant::now();
+        loop {
+            {
+                let Some(mut g) = self.guard() else { return };
+                drain_acks_locked(&mut g);
+                let satisfied = targets.iter().all(|&(id, needed)| {
+                    g.iter().find(|l| l.id == id).map(|l| l.acked >= needed).unwrap_or(true)
+                });
+                if satisfied {
+                    return;
+                }
+                if t0.elapsed() >= timeout {
+                    g.retain(|l| {
+                        let lagging = targets
+                            .iter()
+                            .any(|&(id, needed)| l.id == id && l.acked < needed);
+                        if lagging {
+                            crate::warn_log!(
+                                "ps",
+                                "tail ack timed out; dropping chain link",
+                                link = l.id,
+                                acked = l.acked,
+                                sent = l.sent
+                            );
+                        }
+                        !lagging
+                    });
+                    return;
+                }
+            }
+            std::thread::yield_now();
+        }
+    }
+}
+
+/// True for transient receive errors (deadline expiry) that mean "no
+/// ack queued right now", as opposed to a dead link. Shared with the
+/// serve loop, whose feed connections run a bounded read deadline to
+/// drive idle ack ticks.
+pub(crate) fn is_recv_timeout(e: &str) -> bool {
+    e.contains("timed out") || e.contains("temporarily unavailable") || e.contains("WouldBlock")
+}
+
+fn drain_acks_locked(g: &mut Vec<Downlink>) {
+    g.retain_mut(|l| {
+        // Nothing outstanding — don't touch the link.
+        if l.acked >= l.sent {
+            return true;
+        }
+        if l.t.set_read_deadline(Some(Duration::from_millis(1))).is_err() {
+            return false;
+        }
+        loop {
+            match l.t.recv() {
+                Ok(Message::ReplAck { upto }) => {
+                    l.acked = l.acked.max(upto);
+                    if l.acked >= l.sent {
+                        return true;
+                    }
+                }
+                Ok(m) => {
+                    crate::warn_log!(
+                        "ps",
+                        "unexpected message on chain link; dropping",
+                        msg = format!("{m:?}")
+                    );
+                    return false;
+                }
+                Err(e) if is_recv_timeout(&e) => return true,
+                Err(e) => {
+                    crate::warn_log!("ps", "chain link ack recv failed; dropping", err = e);
+                    return false;
+                }
+            }
+        }
+    });
 }
 
 /// Forward one admitted push frame verbatim down-chain. Dead links are
-/// dropped (the supervisor notices them independently via heartbeats);
-/// forwarding itself is fire-and-forget — the consistency contract
-/// needs ordering and forward-before-ack, not a replica round-trip.
-pub fn forward_frame(conns: &mut Vec<Box<dyn Transport>>, frame: &[u8]) {
-    conns.retain_mut(|t| match t.send_with(&mut |w| wire::repl_forward(w, frame)) {
-        Ok(()) => true,
+/// dropped (the supervisor notices them independently via heartbeats).
+/// Returns the `(link id, sent watermark)` targets the caller must
+/// cover via [`ReplicationState::await_tail_acks`] before acking the
+/// worker — the send itself stays pipelined (no per-frame round-trip),
+/// but the worker's `PushAck` is gated on the cumulative tail-ack
+/// watermark reaching each returned target.
+pub fn forward_frame(conns: &mut Vec<Downlink>, frame: &[u8]) -> Vec<(u64, u64)> {
+    let mut targets = Vec::with_capacity(conns.len());
+    conns.retain_mut(|l| match l.t.send_with(&mut |w| wire::repl_forward(w, frame)) {
+        Ok(()) => {
+            l.sent += 1;
+            targets.push((l.id, l.sent));
+            true
+        }
         Err(e) => {
             crate::warn_log!("ps", "replica forward failed; dropping link", err = e);
             false
         }
     });
+    targets
 }
 
 /// Forward a sync-mode release marker down-chain (ordered after every
-/// push folded into `step` by the replication order lock).
-pub fn forward_release(conns: &mut Vec<Box<dyn Transport>>, step: u64) {
+/// push folded into `step` by the replication order lock). Releases
+/// are deterministic re-derivable markers, not payload — they don't
+/// advance the durability watermark and aren't acked.
+pub fn forward_release(conns: &mut Vec<Downlink>, step: u64) {
     let msg = Message::ReplRelease { step };
-    conns.retain_mut(|t| match t.send(&msg) {
+    conns.retain_mut(|l| match l.t.send(&msg) {
         Ok(()) => true,
         Err(e) => {
             crate::warn_log!("ps", "replica release forward failed; dropping link", err = e);
@@ -227,8 +376,13 @@ mod tests {
         let inner = Message::Ping.encode();
         {
             let mut g = r.guard().expect("active");
-            forward_frame(&mut g, &inner);
+            let targets = forward_frame(&mut g, &inner);
             assert_eq!(g.len(), 1, "dead link dropped");
+            // Only the surviving link produced an ack target, at
+            // watermark 1 (first frame on the connection).
+            assert_eq!(targets.len(), 1);
+            assert_eq!(targets[0], (g[0].id, 1));
+            assert_eq!(g[0].sent, 1);
         }
         match alive_rx.recv().unwrap() {
             Message::ReplForward { inner: got } => assert_eq!(got, inner),
@@ -239,9 +393,50 @@ mod tests {
         drop(alive_rx);
         {
             let mut g = r.guard().expect("still active");
-            forward_frame(&mut g, &inner);
+            let targets = forward_frame(&mut g, &inner);
             assert!(g.is_empty());
+            assert!(targets.is_empty());
         }
+        assert!(r.guard().is_none());
+    }
+
+    #[test]
+    fn tail_acks_advance_the_watermark() {
+        let r = ReplicationState::new();
+        let (tx, mut rx) = InProcTransport::pair();
+        r.set_downstream(vec![Box::new(tx) as Box<dyn Transport>]);
+        let inner = Message::Ping.encode();
+        let mut targets = Vec::new();
+        {
+            let mut g = r.guard().unwrap();
+            for _ in 0..3 {
+                targets = forward_frame(&mut g, &inner);
+            }
+            assert_eq!(g[0].sent, 3);
+        }
+        // The replica acks cumulatively: one ReplAck { upto: 3 } covers
+        // all three frames (pipelined, not per-frame).
+        rx.send(&Message::ReplAck { upto: 3 }).unwrap();
+        r.await_tail_acks(&targets, Duration::from_secs(5));
+        let g = r.guard().unwrap();
+        assert_eq!(g.len(), 1, "link survived");
+        assert_eq!(g[0].acked, 3);
+    }
+
+    #[test]
+    fn ack_timeout_drops_the_lagging_link() {
+        let r = ReplicationState::new();
+        let (tx, _rx) = InProcTransport::pair(); // never acks
+        r.set_downstream(vec![Box::new(tx) as Box<dyn Transport>]);
+        let inner = Message::Ping.encode();
+        let targets = {
+            let mut g = r.guard().unwrap();
+            forward_frame(&mut g, &inner)
+        };
+        let t0 = Instant::now();
+        r.await_tail_acks(&targets, Duration::from_millis(50));
+        assert!(t0.elapsed() < Duration::from_secs(5), "wait is bounded");
+        // The silent link was dropped: degrade, never wedge.
         assert!(r.guard().is_none());
     }
 

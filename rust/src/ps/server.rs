@@ -81,6 +81,19 @@ pub const BARRIER_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(
 /// still-live old primary is a ROADMAP item).
 pub const PROMOTE_DRAIN_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(2);
 
+/// Default bound on the ack-from-tail wait: how long a worker-origin
+/// push blocks for the chain tail's cumulative ack before the primary
+/// drops the lagging links and acks anyway (availability over depth —
+/// the chain degrades, the worker never wedges). Tunable per server
+/// via [`PsShared::set_repl_ack_timeout`].
+pub const REPL_ACK_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(2);
+
+/// Read deadline on replication-feed connections once the first
+/// forwarded frame arrives: each expiry runs an idle ack tick (relay
+/// the downstream watermark up-chain) instead of blocking forever —
+/// otherwise the final frame's ack would strand until the next push.
+const FEED_ACK_TICK: std::time::Duration = std::time::Duration::from_millis(50);
+
 /// Cap on simultaneously-buffered sync steps. Workers run the barrier in
 /// lockstep, so live clients are never more than a step or two ahead of
 /// `released_below`; pushes beyond the cap can only come from runaway or
@@ -261,6 +274,15 @@ pub struct PsShared {
     /// stamps are >= 1; stamp 0 is the stateless-reply sentinel a
     /// client can never present as a valid base).
     pull_stamp: AtomicU64,
+    /// How long a worker-origin push blocks for the chain tail's
+    /// cumulative ack before degrading (dropping the lagging links).
+    /// Only consulted while a replication chain is attached; see
+    /// `ps::replica` for the watermark contract.
+    repl_ack_timeout_ms: AtomicU64,
+    /// Runtime backup-worker override for the sync barrier quorum
+    /// (straggler backpressure): the effective backup count is the max
+    /// of the static config and this. 0 = no override.
+    backup_workers_override: AtomicUsize,
 }
 
 impl PsShared {
@@ -286,6 +308,8 @@ impl PsShared {
             chain_feeds: AtomicUsize::new(0),
             pull_cache: Mutex::new(BTreeMap::new()),
             pull_stamp: AtomicU64::new(0),
+            repl_ack_timeout_ms: AtomicU64::new(REPL_ACK_TIMEOUT.as_millis() as u64),
+            backup_workers_override: AtomicUsize::new(0),
         })
     }
 
@@ -346,25 +370,74 @@ impl PsShared {
         std::time::Duration::from_millis(self.barrier_timeout_ms.load(Ordering::Relaxed))
     }
 
+    /// Override how long a worker-origin push waits for the chain
+    /// tail's cumulative ack before degrading (chaos tests set this low
+    /// so a wedged replica is dropped quickly).
+    pub fn set_repl_ack_timeout(&self, d: std::time::Duration) {
+        self.repl_ack_timeout_ms
+            .store((d.as_millis() as u64).max(1), Ordering::Relaxed);
+    }
+
+    fn repl_ack_timeout(&self) -> std::time::Duration {
+        std::time::Duration::from_millis(self.repl_ack_timeout_ms.load(Ordering::Relaxed))
+    }
+
+    /// Raise the sync-barrier backup-worker count at runtime (the
+    /// straggler-backpressure actuator): the quorum becomes
+    /// `expected_workers - max(static backups, override)`. Never lowers
+    /// the configured count; 0 clears the override. No-op in async
+    /// mode, where there is no barrier to shrink.
+    pub fn set_backup_workers(&self, k: usize) {
+        self.backup_workers_override.store(k, Ordering::Relaxed);
+    }
+
+    /// Live delta-pull reconstruction caches — one per worker that has
+    /// issued a quant8-delta pull and not yet been retired. Pinned by
+    /// tests: departures must not leak O(params) mirrors.
+    pub fn pull_cache_len(&self) -> usize {
+        self.pull_cache.lock().unwrap().len()
+    }
+
+    /// Drop a worker's delta-pull reconstruction cache. Purely a memory
+    /// reclaim: the cache is an optimization, so evicting a live
+    /// worker's entry at worst costs one full-resync pull.
+    fn evict_pull_cache(&self, worker: u32, why: &str) {
+        if self.pull_cache.lock().unwrap().remove(&worker).is_some() {
+            crate::info!("ps", "pull cache evicted", worker = worker, why = why);
+        }
+    }
+
     /// Async-mode push admission: true exactly once per `(worker, seq)`
     /// high-water mark (seqs are monotone per worker). Duplicates and
     /// replays are acked but not re-applied.
     fn admit_async_push(&self, worker: u32, seq: u64) -> bool {
-        let mut m = self.applied_seq.lock().unwrap();
-        match m.entry(worker) {
-            BtreeEntry::Occupied(mut o) => {
-                if seq > *o.get() {
-                    *o.get_mut() = seq;
-                    true
-                } else {
-                    false
+        let (admitted, bumped) = {
+            let mut m = self.applied_seq.lock().unwrap();
+            match m.entry(worker) {
+                BtreeEntry::Occupied(mut o) => {
+                    if seq > *o.get() {
+                        let bumped = (seq >> 32) > (*o.get() >> 32);
+                        *o.get_mut() = seq;
+                        (true, bumped)
+                    } else {
+                        (false, false)
+                    }
+                }
+                BtreeEntry::Vacant(v) => {
+                    v.insert(seq);
+                    (true, false)
                 }
             }
-            BtreeEntry::Vacant(v) => {
-                v.insert(seq);
-                true
-            }
+        };
+        if bumped {
+            // Incarnation bump (seq high bits advanced): the restarted
+            // worker's fresh client holds no delta-pull base, so the
+            // previous incarnation's mirror can never be presented
+            // again — drop it now instead of letting crash-loops
+            // accumulate dead O(params) entries.
+            self.evict_pull_cache(worker, "incarnation bump");
         }
+        admitted
     }
 
     /// Number of distinct sync steps currently buffered across arrival
@@ -423,6 +496,22 @@ fn stale_epoch_error(shared: &PsShared, op_epoch: u64) -> Option<Message> {
     }
 }
 
+/// Ack-from-tail gate, run by the push handlers AFTER the membership
+/// cut and replication guard are released (waiting under either would
+/// stall concurrent pushes and join snapshots): block — bounded by
+/// [`PsShared::set_repl_ack_timeout`] — until the cumulative tail-ack
+/// watermark covers every frame this push forwarded down-chain. On
+/// timeout the lagging links are dropped, so the ack that follows is
+/// again backed by every *surviving* chain member. Chain-origin frames
+/// never wait here: a relay stalling on its own downstream would turn
+/// the pipeline back into per-hop round-trips.
+fn await_tail_acks_for(shared: &PsShared, origin: PushOrigin, targets: &[(u64, u64)]) {
+    if targets.is_empty() || !matches!(origin, PushOrigin::Worker) {
+        return;
+    }
+    shared.repl.await_tail_acks(targets, shared.repl_ack_timeout());
+}
+
 /// Streaming compressed-push handler: entries decode as borrowed views
 /// straight from the frame (`wire::CompressedPushBody`) and scatter
 /// into the store (async) or the striped sync aggregation — no dense
@@ -456,40 +545,44 @@ fn handle_compressed_push(frame: &[u8], shared: &PsShared, origin: PushOrigin) -
     }
     match shared.mode {
         UpdateMode::Async => {
-            // Membership cut (shared side) outside the replication
-            // order lock: a join snapshot holding the cut exclusively
-            // sees either all of this apply or none of it, and the
-            // cut -> downstream-mutex order matches the snapshot's
-            // export-then-attach.
-            let _cut = shared.repl.apply_shared();
-            // Replication order lock (None when solo): admission, the
-            // down-chain forward and the local apply serialize as one
-            // unit, and the forward precedes the ack — an acked update
-            // exists on every live chain member. The halt re-check
-            // INSIDE the guard closes the failover race: a frame that
-            // slipped past the serve loop's check while the chain was
-            // being detached must not apply here and ack without ever
-            // reaching the replica — the stale-route error makes the
-            // client replay it against the promoted head instead.
-            let mut repl = shared.repl.guard();
-            if shared.stopped() {
-                return not_primary_error(shared);
-            }
-            if shared.admit_async_push(worker, seq) {
-                if let Some(conns) = repl.as_deref_mut() {
-                    replica::forward_frame(conns, frame);
+            let mut ack_targets = Vec::new();
+            {
+                // Membership cut (shared side) outside the replication
+                // order lock: a join snapshot holding the cut exclusively
+                // sees either all of this apply or none of it, and the
+                // cut -> downstream-mutex order matches the snapshot's
+                // export-then-attach.
+                let _cut = shared.repl.apply_shared();
+                // Replication order lock (None when solo): admission, the
+                // down-chain forward and the local apply serialize as one
+                // unit, and the forward precedes the ack — an acked update
+                // exists on every live chain member. The halt re-check
+                // INSIDE the guard closes the failover race: a frame that
+                // slipped past the serve loop's check while the chain was
+                // being detached must not apply here and ack without ever
+                // reaching the replica — the stale-route error makes the
+                // client replay it against the promoted head instead.
+                let mut repl = shared.repl.guard();
+                if shared.stopped() {
+                    return not_primary_error(shared);
                 }
-                while let Some(entry) = body.next_entry() {
-                    let (key, grad) = match entry {
-                        Ok(x) => x,
-                        Err(e) => return Message::Error { what: e },
-                    };
-                    if let Err(e) = shared.store.apply_compressed(key, &grad) {
-                        return Message::Error { what: e };
+                if shared.admit_async_push(worker, seq) {
+                    if let Some(conns) = repl.as_deref_mut() {
+                        ack_targets = replica::forward_frame(conns, frame);
                     }
-                    shared.counters.updates.fetch_add(1, Ordering::Relaxed);
+                    while let Some(entry) = body.next_entry() {
+                        let (key, grad) = match entry {
+                            Ok(x) => x,
+                            Err(e) => return Message::Error { what: e },
+                        };
+                        if let Err(e) = shared.store.apply_compressed(key, &grad) {
+                            return Message::Error { what: e };
+                        }
+                        shared.counters.updates.fetch_add(1, Ordering::Relaxed);
+                    }
                 }
             }
+            await_tail_acks_for(shared, origin, &ack_targets);
             Message::PushAck { clock: shared.store.clock() }
         }
         UpdateMode::Sync { .. } => {
@@ -498,37 +591,41 @@ fn handle_compressed_push(frame: &[u8], shared: &PsShared, origin: PushOrigin) -
             // before it (included on every chain member) or observes
             // the advanced horizon (discarded everywhere). Halt
             // re-check as in the async arm.
-            let _cut = shared.repl.apply_shared();
-            let mut repl = shared.repl.guard();
-            if shared.stopped() {
-                return not_primary_error(shared);
-            }
-            match shared.sync.push_window(step) {
-                PushWindow::Released => {
-                    // Straggler push for a released step — discarded.
+            let mut ack_targets = Vec::new();
+            {
+                let _cut = shared.repl.apply_shared();
+                let mut repl = shared.repl.guard();
+                if shared.stopped() {
+                    return not_primary_error(shared);
                 }
-                PushWindow::Beyond => {
-                    crate::warn_log!(
-                        "ps",
-                        "push beyond pending-step cap discarded",
-                        step = step
-                    );
-                }
-                PushWindow::Open => {
-                    if shared.sync.admit(step, worker) {
-                        if let Some(conns) = repl.as_deref_mut() {
-                            replica::forward_frame(conns, frame);
-                        }
-                        while let Some(entry) = body.next_entry() {
-                            let (key, grad) = match entry {
-                                Ok(x) => x,
-                                Err(e) => return Message::Error { what: e },
-                            };
-                            fold_sync_compressed(shared, step, key, &grad);
+                match shared.sync.push_window(step) {
+                    PushWindow::Released => {
+                        // Straggler push for a released step — discarded.
+                    }
+                    PushWindow::Beyond => {
+                        crate::warn_log!(
+                            "ps",
+                            "push beyond pending-step cap discarded",
+                            step = step
+                        );
+                    }
+                    PushWindow::Open => {
+                        if shared.sync.admit(step, worker) {
+                            if let Some(conns) = repl.as_deref_mut() {
+                                ack_targets = replica::forward_frame(conns, frame);
+                            }
+                            while let Some(entry) = body.next_entry() {
+                                let (key, grad) = match entry {
+                                    Ok(x) => x,
+                                    Err(e) => return Message::Error { what: e },
+                                };
+                                fold_sync_compressed(shared, step, key, &grad);
+                            }
                         }
                     }
                 }
             }
+            await_tail_acks_for(shared, origin, &ack_targets);
             Message::PushAck { clock: shared.store.clock() }
         }
     }
@@ -569,64 +666,73 @@ fn handle_dense_push(frame: &[u8], shared: &PsShared, origin: PushOrigin) -> Mes
     }
     match shared.mode {
         UpdateMode::Async => {
-            // See [`handle_compressed_push`]: forward-before-ack under
-            // the membership cut and replication order lock, with the
+            // See [`handle_compressed_push`]: forward under the
+            // membership cut and replication order lock, ack gated on
+            // the tail watermark after both are released, with the
             // halt re-check that keeps a dying primary from acking an
             // unforwarded frame.
-            let _cut = shared.repl.apply_shared();
-            let mut repl = shared.repl.guard();
-            if shared.stopped() {
-                return not_primary_error(shared);
-            }
-            if shared.admit_async_push(worker, seq) {
-                if let Some(conns) = repl.as_deref_mut() {
-                    replica::forward_frame(conns, frame);
+            let mut ack_targets = Vec::new();
+            {
+                let _cut = shared.repl.apply_shared();
+                let mut repl = shared.repl.guard();
+                if shared.stopped() {
+                    return not_primary_error(shared);
                 }
-                while let Some(entry) = body.next_entry() {
-                    let (key, grad) = match entry {
-                        Ok(x) => x,
-                        Err(e) => return Message::Error { what: e },
-                    };
-                    if let Err(e) = shared.store.apply_dense(key, &grad) {
-                        return Message::Error { what: e };
+                if shared.admit_async_push(worker, seq) {
+                    if let Some(conns) = repl.as_deref_mut() {
+                        ack_targets = replica::forward_frame(conns, frame);
                     }
-                    shared.counters.updates.fetch_add(1, Ordering::Relaxed);
+                    while let Some(entry) = body.next_entry() {
+                        let (key, grad) = match entry {
+                            Ok(x) => x,
+                            Err(e) => return Message::Error { what: e },
+                        };
+                        if let Err(e) = shared.store.apply_dense(key, &grad) {
+                            return Message::Error { what: e };
+                        }
+                        shared.counters.updates.fetch_add(1, Ordering::Relaxed);
+                    }
                 }
             }
+            await_tail_acks_for(shared, origin, &ack_targets);
             Message::PushAck { clock: shared.store.clock() }
         }
         UpdateMode::Sync { .. } => {
-            let _cut = shared.repl.apply_shared();
-            let mut repl = shared.repl.guard();
-            if shared.stopped() {
-                return not_primary_error(shared);
-            }
-            match shared.sync.push_window(step) {
-                PushWindow::Released => {
-                    // Straggler push for a released step — discarded.
+            let mut ack_targets = Vec::new();
+            {
+                let _cut = shared.repl.apply_shared();
+                let mut repl = shared.repl.guard();
+                if shared.stopped() {
+                    return not_primary_error(shared);
                 }
-                PushWindow::Beyond => {
-                    crate::warn_log!(
-                        "ps",
-                        "push beyond pending-step cap discarded",
-                        step = step
-                    );
-                }
-                PushWindow::Open => {
-                    if shared.sync.admit(step, worker) {
-                        if let Some(conns) = repl.as_deref_mut() {
-                            replica::forward_frame(conns, frame);
-                        }
-                        while let Some(entry) = body.next_entry() {
-                            let (key, grad) = match entry {
-                                Ok(x) => x,
-                                Err(e) => return Message::Error { what: e },
-                            };
-                            fold_sync_dense_ref(shared, step, key, &grad);
+                match shared.sync.push_window(step) {
+                    PushWindow::Released => {
+                        // Straggler push for a released step — discarded.
+                    }
+                    PushWindow::Beyond => {
+                        crate::warn_log!(
+                            "ps",
+                            "push beyond pending-step cap discarded",
+                            step = step
+                        );
+                    }
+                    PushWindow::Open => {
+                        if shared.sync.admit(step, worker) {
+                            if let Some(conns) = repl.as_deref_mut() {
+                                ack_targets = replica::forward_frame(conns, frame);
+                            }
+                            while let Some(entry) = body.next_entry() {
+                                let (key, grad) = match entry {
+                                    Ok(x) => x,
+                                    Err(e) => return Message::Error { what: e },
+                                };
+                                fold_sync_dense_ref(shared, step, key, &grad);
+                            }
                         }
                     }
                 }
             }
+            await_tail_acks_for(shared, origin, &ack_targets);
             Message::PushAck { clock: shared.store.clock() }
         }
     }
@@ -930,11 +1036,54 @@ impl Drop for FeedGuard<'_> {
     }
 }
 
+/// Up-chain relay of the cumulative tail ack on a feed connection:
+/// once every forwarded frame this node has processed is also covered
+/// by its OWN downstream watermark (vacuously true on the tail), send
+/// the new high-water mark back up the same connection the frames came
+/// down. Returns `false` when the up-chain peer is gone. Acks are
+/// cumulative and resend-free: one `ReplAck { upto }` covers every
+/// frame at or below it, so a relay that was waiting on its downstream
+/// simply acks later with a bigger watermark.
+fn feed_ack_tick(
+    t: &mut Box<dyn Transport>,
+    shared: &PsShared,
+    processed: u64,
+    acked: &mut u64,
+) -> bool {
+    if processed == *acked || !shared.repl.drain_acks() {
+        return true;
+    }
+    if t.send(&Message::ReplAck { upto: processed }).is_err() {
+        return false;
+    }
+    *acked = processed;
+    true
+}
+
 /// Handle one connection until Shutdown/disconnect. Usable directly with
 /// in-process transports or spawned per TCP accept.
 pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
     let mut feed = FeedGuard { shared: &shared, active: false };
+    // Ack-from-tail bookkeeping, live once this connection turns out to
+    // be a replication feed: how many forwarded push frames this node
+    // has processed off it (mirrors the sender's per-link `sent`
+    // counter — EVERY `ReplForward` counts, applied or rejected, or the
+    // two watermarks desync), and the highest count already acked
+    // up-chain.
+    let mut feed_processed: u64 = 0;
+    let mut feed_acked: u64 = 0;
+    let mut feed_deadline_set = false;
     loop {
+        if feed.active && !feed_deadline_set {
+            // Feed connections poll with a short deadline: each expiry
+            // runs an ack tick, so the last frame before an idle gap
+            // still gets its watermark relayed (and a mid-chain node
+            // re-checks its downstream's progress without new traffic).
+            feed_deadline_set = true;
+            if t.set_read_deadline(Some(FEED_ACK_TICK)).is_err() {
+                return;
+            }
+        }
         // Zero-copy receive: compressed pushes are dispatched by frame
         // tag into the streaming handler (no owned Message, no owned
         // tensors); everything else falls back to `Message::decode`.
@@ -943,6 +1092,7 @@ pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
         let mut fallback: Option<Message> = None;
         let mut reply: Option<Message> = None;
         let mut silent = false;
+        let mut feed_push = false;
         let received = t.recv_with(&mut |frame| {
             if shared.stopped() {
                 // Halted (chaos-killed or shutting down): admit nothing
@@ -951,6 +1101,7 @@ pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
                 silent = true;
             } else if wire::is_repl_forward(frame) {
                 feed.mark();
+                feed_push = true;
                 let inner = wire::repl_forward_inner(frame);
                 let outcome = if wire::is_compressed_push(inner) {
                     handle_compressed_push(inner, &shared, PushOrigin::Chain)
@@ -972,8 +1123,22 @@ pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
             }
             Ok(())
         });
-        if received.is_err() {
+        if let Err(e) = received {
+            if feed.active && !shared.stopped() && replica::is_recv_timeout(&e) {
+                // Idle feed connection: the deadline expiry is the ack
+                // tick, not EOF.
+                if !feed_ack_tick(&mut t, &shared, feed_processed, &mut feed_acked) {
+                    return;
+                }
+                continue;
+            }
             return; // peer hung up (or sent an undecodable frame)
+        }
+        if feed_push {
+            feed_processed += 1;
+            if !feed_ack_tick(&mut t, &shared, feed_processed, &mut feed_acked) {
+                return;
+            }
         }
         if silent {
             if shared.stopped() {
@@ -1112,7 +1277,12 @@ pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
                     });
                     continue;
                 }
-                let quorum = expected_workers.saturating_sub(backup_workers).max(1);
+                // Straggler backpressure can raise the backup count at
+                // runtime ([`PsShared::set_backup_workers`]); the
+                // static config is the floor, never lowered.
+                let backups = backup_workers
+                    .max(shared.backup_workers_override.load(Ordering::Relaxed));
+                let quorum = expected_workers.saturating_sub(backups).max(1);
                 // Arrival is a worker-id set: a retried barrier (fault
                 // recovery) re-inserts the same id and cannot inflate
                 // the quorum.
@@ -1250,6 +1420,17 @@ pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
                     is_primary: shared.is_primary(),
                 };
                 if t.send(&pong).is_err() {
+                    return;
+                }
+            }
+            Message::Retire { worker } => {
+                // Worker departure: reclaim its delta-pull
+                // reconstruction mirror. Deliberately ungated on role —
+                // the cache is soft state (a replica's is simply empty)
+                // and the client retires best-effort against every
+                // server it knows.
+                shared.evict_pull_cache(worker, "retired");
+                if t.send(&Message::RetireAck).is_err() {
                     return;
                 }
             }
@@ -3171,6 +3352,146 @@ mod tests {
         assert!(matches!(pull(&mut c, 5), Message::CompressedPullReply { .. }));
         drop(c);
         shared.halt();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn retire_and_incarnation_bump_evict_pull_cache() {
+        // The delta-pull cache holds O(params) per worker; departures
+        // must shrink it. Three ways an entry dies: explicit Retire,
+        // an incarnation bump on the worker's push path, and nothing
+        // else — a live worker's entry survives unrelated traffic.
+        let shared = PsShared::new(
+            store_with(&[(0, vec![1.0, 2.0])], Optimizer::Sgd { lr: 1.0 }),
+            UpdateMode::Async,
+        );
+        let mut handles = Vec::new();
+        let mut c = conn_to(&shared, &mut handles);
+        for worker in 0..3u32 {
+            c.send(&Message::CompressedPull {
+                worker,
+                epoch: EPOCH_UNFENCED,
+                delta: true,
+                base: 0,
+                keys: vec![0],
+            })
+            .unwrap();
+            assert!(matches!(c.recv().unwrap(), Message::CompressedPullReply { .. }));
+        }
+        assert_eq!(shared.pull_cache_len(), 3);
+
+        // Explicit retirement drops exactly that worker's mirror;
+        // retiring an unknown worker is an acked no-op.
+        c.send(&Message::Retire { worker: 1 }).unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::RetireAck));
+        assert_eq!(shared.pull_cache_len(), 2);
+        c.send(&Message::Retire { worker: 99 }).unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::RetireAck));
+        assert_eq!(shared.pull_cache_len(), 2);
+
+        // Same-incarnation pushes leave the cache alone...
+        let push = |seq: u64| Message::Push {
+            worker: 0,
+            step: 0,
+            seq,
+            epoch: EPOCH_UNFENCED,
+            entries: vec![(0, Tensor::from_vec(&[2], vec![1.0, 1.0]))],
+        };
+        c.send(&push(1)).unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+        assert_eq!(shared.pull_cache_len(), 2);
+        // ...but a restarted worker's first push (seq high bits
+        // advanced) evicts its dead mirror.
+        c.send(&push((1 << 32) + 1)).unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+        assert_eq!(shared.pull_cache_len(), 1);
+
+        drop(c);
+        shared.halt();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn push_ack_is_gated_on_the_tail_ack() {
+        // Durability-on-ack, chain of two: by the time the worker sees
+        // PushAck, the replica has already applied the frame — no
+        // wait_until, the ack itself is the proof.
+        let mut handles = Vec::new();
+        let primary = PsShared::new(
+            store_with(&[(0, vec![0.0])], Optimizer::Sgd { lr: 1.0 }),
+            UpdateMode::Async,
+        );
+        let replica = PsShared::new(
+            store_with(&[(0, vec![0.0])], Optimizer::Sgd { lr: 1.0 }),
+            UpdateMode::Async,
+        );
+        replica.set_role_replica();
+        primary.set_replicas(vec![conn_to(&replica, &mut handles)]);
+
+        let mut c = conn_to(&primary, &mut handles);
+        for seq in 0..3u64 {
+            c.send(&Message::Push {
+                worker: 0,
+                step: seq,
+                seq,
+                epoch: EPOCH_UNFENCED,
+                entries: vec![(0, Tensor::from_vec(&[1], vec![1.0]))],
+            })
+            .unwrap();
+            assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+            // Acked => already durable on the replica.
+            assert_eq!(replica.store.clock(), seq + 1);
+            assert_eq!(replica.store.get_clone(0).unwrap().data(), &[-(seq as f32) - 1.0]);
+        }
+        // The link survived: the acks came from the tail, not from the
+        // timeout fallback dropping it.
+        assert_eq!(primary.n_replicas(), 1);
+        drop(c);
+        primary.set_replicas(Vec::new());
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn wedged_replica_is_dropped_after_bounded_ack_wait() {
+        // A downstream link that accepts frames but never acks (serve
+        // loop not running — a wedged peer) must delay the worker ack
+        // only by the bounded ack timeout, then be dropped so later
+        // pushes ack at full speed on the degraded chain.
+        let primary = PsShared::new(
+            store_with(&[(0, vec![0.0])], Optimizer::Sgd { lr: 1.0 }),
+            UpdateMode::Async,
+        );
+        primary.set_repl_ack_timeout(std::time::Duration::from_millis(50));
+        let (wedged_end, held) = InProcTransport::pair();
+        primary.set_replicas(vec![Box::new(wedged_end)]);
+
+        let mut handles = Vec::new();
+        let mut c = conn_to(&primary, &mut handles);
+        let t0 = std::time::Instant::now();
+        c.send(&Message::Push {
+            worker: 0,
+            step: 0,
+            seq: 0,
+            epoch: EPOCH_UNFENCED,
+            entries: vec![(0, Tensor::from_vec(&[1], vec![2.0]))],
+        })
+        .unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(5),
+            "ack wait not bounded: {:?}",
+            t0.elapsed()
+        );
+        assert_eq!(primary.n_replicas(), 0, "lagging link must be dropped");
+        drop(held);
+        drop(c);
+        primary.halt();
         for h in handles {
             h.join().unwrap();
         }

@@ -1,0 +1,333 @@
+//! Backend-agnostic gradient aggregation for the worker loop.
+//!
+//! `worker::pipeline::run_agg_worker` drives training against any
+//! [`GradAggregator`]: the parameter-server backend
+//! ([`PsAggregator`], a thin wrapper over [`PsClient`]) or the
+//! peer-to-peer collective backend ([`AllreduceAggregator`], over
+//! [`net::collective`](crate::net::collective)). The worker loop itself
+//! — prefetching loader, profiler, progress counter — does not know
+//! which backend it is talking to; `train-dist --backend ps|allreduce`
+//! picks the implementation.
+//!
+//! # Parity contract
+//!
+//! The allreduce backend reproduces the PS sync arithmetic exactly:
+//! contributions are compressed with the same per-key codec state a
+//! `PsClient` would use (top-k error feedback, the same
+//! stochastic-rounding RNG stream per worker id), folded flat in rank
+//! order with the PS fold's `axpy(1.0)`/`scatter_axpy(1.0)` adds,
+//! scaled by `1/N` like the barrier release, and applied through the
+//! same [`Optimizer`] update the shard store runs. With identical
+//! seeds, sync PS and allreduce converge to byte-comparable losses —
+//! pinned by the backend-parity integration tests.
+
+use std::collections::BTreeMap;
+
+use crate::net::collective::{Collective, Contrib};
+use crate::ps::client::PsClient;
+use crate::ps::compress::{quantize8, CodecKind, TopK};
+use crate::ps::shard::Optimizer;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// One step's worth of gradient aggregation, from the worker loop's
+/// point of view: refresh parameters before compute, commit gradients
+/// after. `commit` must not return until the step is durable for its
+/// backend (push acked + barrier passed for PS; collective complete
+/// and applied for allreduce).
+pub trait GradAggregator {
+    /// Refill `params` with the parameters to compute against this
+    /// step (in-place; implementations reuse the buffer).
+    fn refresh(&mut self, params: &mut Vec<Tensor>) -> Result<(), String>;
+
+    /// Commit one step's gradients. Allreduce backends update `params`
+    /// in place (every rank applies the identical mean); the PS
+    /// backend leaves them to the next `refresh`.
+    fn commit(
+        &mut self,
+        step: u64,
+        params: &mut Vec<Tensor>,
+        grads: &[Tensor],
+    ) -> Result<(), String>;
+
+    /// Cumulative gradient-direction wire bytes sent by this worker.
+    fn push_wire_bytes(&self) -> u64;
+
+    /// Cumulative parameter-direction wire bytes for this worker.
+    fn pull_wire_bytes(&self) -> u64;
+}
+
+/// The parameter-server backend: pull from the fleet, push to it,
+/// barrier in sync mode. Pure delegation — codec staging, retries,
+/// reconnects and epoch fencing all live in [`PsClient`].
+pub struct PsAggregator<'a> {
+    client: &'a mut PsClient,
+    sync: bool,
+}
+
+impl<'a> PsAggregator<'a> {
+    pub fn new(client: &'a mut PsClient, sync: bool) -> Self {
+        PsAggregator { client, sync }
+    }
+}
+
+impl GradAggregator for PsAggregator<'_> {
+    fn refresh(&mut self, params: &mut Vec<Tensor>) -> Result<(), String> {
+        self.client.pull_all_into(params)
+    }
+
+    fn commit(
+        &mut self,
+        step: u64,
+        _params: &mut Vec<Tensor>,
+        grads: &[Tensor],
+    ) -> Result<(), String> {
+        self.client.push(step, grads)?;
+        if self.sync {
+            self.client.barrier(step)?;
+        }
+        Ok(())
+    }
+
+    fn push_wire_bytes(&self) -> u64 {
+        self.client.push_wire_bytes()
+    }
+
+    fn pull_wire_bytes(&self) -> u64 {
+        self.client.pull_wire_bytes()
+    }
+}
+
+/// The collective backend: every rank holds the full model, allreduces
+/// its (optionally compressed) gradient each step and applies the
+/// identical mean locally through the same [`Optimizer`] arithmetic the
+/// PS shard store uses. Inherently synchronous — the collective *is*
+/// the barrier.
+pub struct AllreduceAggregator {
+    collective: Collective,
+    optimizer: Optimizer,
+    /// Per-key momentum state, lazily created like the shard store's
+    /// velocity map — identical update order, identical bytes.
+    velocity: Vec<Option<Tensor>>,
+    codec: CodecKind,
+    /// Per-key top-k compressors (error-feedback residuals), exactly
+    /// the per-key state `PsClient::push` keeps.
+    topk: BTreeMap<u32, TopK>,
+    /// Stochastic-rounding stream for `quant8sr`, seeded per rank the
+    /// same way `PsClient` seeds per worker id — same worker, same
+    /// gradient, same bytes on either backend.
+    sr_rng: Rng,
+    /// Initial parameters, handed to the loop's buffer on the first
+    /// `refresh`. All ranks must be constructed with identical init.
+    init: Option<Vec<Tensor>>,
+}
+
+impl AllreduceAggregator {
+    pub fn new(
+        collective: Collective,
+        optimizer: Optimizer,
+        codec: CodecKind,
+        init: Vec<Tensor>,
+    ) -> Self {
+        let n_keys = init.len();
+        let rank = collective.rank() as u64;
+        AllreduceAggregator {
+            collective,
+            optimizer,
+            velocity: (0..n_keys).map(|_| None).collect(),
+            codec,
+            topk: BTreeMap::new(),
+            sr_rng: Rng::new(0xC0DE_C5EE_D000_0000 ^ (rank + 1)),
+            init: Some(init),
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.collective.rank()
+    }
+
+    fn contribution(&mut self, key: u32, g: &Tensor) -> Contrib {
+        match self.codec {
+            CodecKind::None => Contrib::Dense(g.clone()),
+            CodecKind::TopK { fraction } => {
+                let c = self
+                    .topk
+                    .entry(key)
+                    .or_insert_with(|| TopK::new(fraction, g.len()))
+                    .compress(g);
+                Contrib::Comp(c)
+            }
+            CodecKind::Quant8 => Contrib::Comp(quantize8(g, None)),
+            CodecKind::Quant8Sr => Contrib::Comp(quantize8(g, Some(&mut self.sr_rng))),
+        }
+    }
+}
+
+impl GradAggregator for AllreduceAggregator {
+    fn refresh(&mut self, params: &mut Vec<Tensor>) -> Result<(), String> {
+        // Parameters live rank-local; only the first refresh installs
+        // them (commit keeps them current thereafter).
+        if let Some(init) = self.init.take() {
+            *params = init;
+        }
+        if params.is_empty() {
+            return Err("allreduce aggregator has no parameters".into());
+        }
+        Ok(())
+    }
+
+    fn commit(
+        &mut self,
+        step: u64,
+        params: &mut Vec<Tensor>,
+        grads: &[Tensor],
+    ) -> Result<(), String> {
+        if grads.len() != params.len() {
+            return Err(format!("{} grads for {} params", grads.len(), params.len()));
+        }
+        let contribs: Vec<Contrib> =
+            grads.iter().enumerate().map(|(k, g)| self.contribution(k as u32, g)).collect();
+        let sums = self.collective.allreduce_sum(step, contribs)?;
+        let n = self.collective.n_ranks() as f32;
+        for (k, mut sum) in sums.into_iter().enumerate() {
+            // Scale-then-apply, byte-for-byte the PS barrier release
+            // (`apply_mean` -> `apply_grad`).
+            sum.scale(1.0 / n);
+            match self.optimizer {
+                Optimizer::Sgd { lr } => params[k].axpy(-lr, &sum),
+                Optimizer::Momentum { lr, mu } => {
+                    let v = self.velocity[k].get_or_insert_with(|| Tensor::zeros(sum.shape()));
+                    v.scale(mu);
+                    v.axpy(1.0, &sum);
+                    params[k].axpy(-lr, v);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn push_wire_bytes(&self) -> u64 {
+        self.collective.reduce_wire_bytes()
+    }
+
+    fn pull_wire_bytes(&self) -> u64 {
+        self.collective.bcast_wire_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::collective::{inproc_mesh, Topology};
+
+    fn quad_grad(params: &[Tensor], targets: &[Tensor]) -> Vec<Tensor> {
+        // d/dw ||w - t||^2 = 2 (w - t) — batch-independent, so every
+        // rank contributes identical gradients in lockstep.
+        params
+            .iter()
+            .zip(targets)
+            .map(|(w, t)| {
+                let mut g = w.clone();
+                g.axpy(-1.0, t);
+                g.scale(2.0);
+                g
+            })
+            .collect()
+    }
+
+    fn targets() -> Vec<Tensor> {
+        vec![Tensor::from_vec(&[3], vec![1.0, -2.0, 0.5]), Tensor::from_vec(&[2], vec![4.0, 0.0])]
+    }
+
+    fn init() -> Vec<Tensor> {
+        vec![Tensor::zeros(&[3]), Tensor::zeros(&[2])]
+    }
+
+    fn run_rank(
+        mut agg: AllreduceAggregator,
+        steps: u64,
+    ) -> Result<Vec<Tensor>, String> {
+        let t = targets();
+        let mut params = Vec::new();
+        agg.refresh(&mut params)?;
+        for step in 0..steps {
+            let grads = quad_grad(&params, &t);
+            agg.commit(step, &mut params, &grads)?;
+        }
+        Ok(params)
+    }
+
+    fn run_group(n: usize, topology: Topology, codec: CodecKind, opt: Optimizer) -> Vec<Vec<Tensor>> {
+        let shapes: Vec<Vec<usize>> = init().iter().map(|t| t.shape().to_vec()).collect();
+        let mesh = inproc_mesh(n);
+        let mut out = Vec::new();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = mesh
+                .into_iter()
+                .enumerate()
+                .map(|(rank, links)| {
+                    let shapes = shapes.clone();
+                    s.spawn(move || {
+                        let c = Collective::new(rank, n, links, topology, shapes).unwrap();
+                        run_rank(AllreduceAggregator::new(c, opt, codec, init()), 6).unwrap()
+                    })
+                })
+                .collect();
+            for h in handles {
+                out.push(h.join().unwrap());
+            }
+        });
+        out
+    }
+
+    /// Serial reference replicating the backend arithmetic exactly:
+    /// fold `n` identical contributions left-associated, scale by
+    /// `1/n`, apply — the same ops the PS sync release performs.
+    fn serial_ref(n: usize, lr: f32, steps: u64) -> Vec<Tensor> {
+        let t = targets();
+        let mut params = init();
+        for _ in 0..steps {
+            let grads = quad_grad(&params, &t);
+            for (w, g) in params.iter_mut().zip(&grads) {
+                let mut sum = g.clone();
+                for _ in 1..n {
+                    sum.axpy(1.0, g);
+                }
+                sum.scale(1.0 / n as f32);
+                w.axpy(-lr, &sum);
+            }
+        }
+        params
+    }
+
+    #[test]
+    fn dense_ring_matches_serial_ref_bitwise() {
+        let results = run_group(3, Topology::Ring, CodecKind::None, Optimizer::Sgd { lr: 0.1 });
+        let want = serial_ref(3, 0.1, 6);
+        for got in &results {
+            assert_eq!(got, &want);
+        }
+    }
+
+    #[test]
+    fn tree_ranks_stay_bit_identical_under_quant8() {
+        let results =
+            run_group(4, Topology::Tree, CodecKind::Quant8, Optimizer::Sgd { lr: 0.05 });
+        for got in &results[1..] {
+            assert_eq!(got, &results[0]);
+        }
+    }
+
+    #[test]
+    fn momentum_ranks_stay_bit_identical() {
+        let results = run_group(
+            2,
+            Topology::Ring,
+            CodecKind::None,
+            Optimizer::Momentum { lr: 0.05, mu: 0.9 },
+        );
+        assert_eq!(results[0], results[1]);
+        // And momentum actually moved things (velocity state engaged).
+        assert!(results[0][0].l2_norm() > 0.0);
+    }
+}

@@ -1,11 +1,13 @@
 //! Worker runtime: the 7-step mini-batch pipeline of Fig. 1, with
 //! per-step instrumentation that yields the `R_O` Lemma 3.1 consumes.
 
+pub mod aggregate;
 pub mod pipeline;
 pub mod schedule;
 pub mod trace;
 pub mod profiler;
 
+pub use aggregate::{AllreduceAggregator, GradAggregator, PsAggregator};
 pub use pipeline::{PipelineConfig, WorkerStats};
 pub use schedule::LrSchedule;
 pub use trace::TraceRecorder;

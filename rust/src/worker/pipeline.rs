@@ -16,6 +16,7 @@ use crate::ps::client::PsClient;
 use crate::ps::compress::{CodecKind, PullCodec};
 use crate::runtime::exec::TrainExecutable;
 use crate::tensor::Tensor;
+use crate::worker::aggregate::{GradAggregator, PsAggregator};
 use crate::worker::profiler::{Step, StepProfiler};
 
 /// Knobs for a worker run.
@@ -141,8 +142,11 @@ where
     ))
 }
 
-/// Distributed worker: pull -> grad_step -> push (steps 1–7), async or
-/// synchronous (barrier per step).
+/// Distributed worker against the parameter-server backend: pull ->
+/// grad_step -> push (steps 1–7), async or synchronous (barrier per
+/// step). A thin wrapper over [`run_agg_worker`] with a
+/// [`PsAggregator`] — signature and behavior unchanged from when this
+/// was the only backend.
 ///
 /// Runs steps `cfg.start_step..cfg.steps` (a restarted worker resumes
 /// where its previous incarnation died). After each fully committed
@@ -160,15 +164,42 @@ pub fn run_ps_worker<F>(
 where
     F: FnMut(u64, usize) -> Batch + Send + 'static,
 {
+    client.set_codec(cfg.codec);
+    client.set_pull_codec(cfg.pull_codec);
+    let mut agg = PsAggregator::new(client, sync);
+    let mut params = Vec::new();
+    run_agg_worker(grad_exe, &mut agg, &mut params, make_batch, cfg, progress)
+}
+
+/// Distributed worker loop over any aggregation backend. The loop owns
+/// the loader, profiler and progress accounting; the
+/// [`GradAggregator`] owns where gradients go (PS fleet or collective)
+/// — `train-dist --backend` swaps the aggregator, not the loop.
+///
+/// `params` is the caller-owned parameter buffer: refilled by the
+/// aggregator each refresh and left holding the last *committed* state
+/// on both success and error — the allreduce coordinator reads it back
+/// for reform adoption and the final report (the PS backend keeps
+/// authoritative state on the servers and ignores it).
+pub fn run_agg_worker<F, A>(
+    grad_exe: &TrainExecutable,
+    agg: &mut A,
+    params: &mut Vec<Tensor>,
+    make_batch: F,
+    cfg: &PipelineConfig,
+    progress: Option<&std::sync::atomic::AtomicUsize>,
+) -> Result<WorkerStats, String>
+where
+    F: FnMut(u64, usize) -> Batch + Send + 'static,
+    A: GradAggregator,
+{
     let mut profiler = StepProfiler::new();
     let n_steps = cfg.steps.saturating_sub(cfg.start_step);
     let mut losses = Vec::with_capacity(n_steps);
     let t0 = std::time::Instant::now();
     let batch_size = grad_exe.meta.batch;
-    client.set_codec(cfg.codec);
-    client.set_pull_codec(cfg.pull_codec);
-    let wire_bytes_before = client.push_wire_bytes();
-    let pull_bytes_before = client.pull_wire_bytes();
+    let wire_bytes_before = agg.push_wire_bytes();
+    let pull_bytes_before = agg.pull_wire_bytes();
     // The loader resumes at the restart step's sample offset, so a
     // restarted worker re-reads exactly the batches it has not yet
     // committed.
@@ -179,14 +210,10 @@ where
         n_steps,
         cfg.prefetch_depth.max(1),
     );
-    // One parameter buffer for the whole run: each refresh refills it in
-    // place instead of allocating a fresh Vec per step.
-    let mut params: Vec<Tensor> = Vec::new();
-
     for step in cfg.start_step..cfg.steps {
         {
             let _t = profiler.time(Step::ParamRefresh);
-            client.pull_all_into(&mut params)?;
+            agg.refresh(params)?;
         }
         let b = {
             let _t = profiler.time(Step::DataLoad);
@@ -194,14 +221,11 @@ where
         };
         let out = {
             let _t = profiler.time(Step::Compute);
-            grad_exe.run(&params, &b, None)?
+            grad_exe.run(params, &b, None)?
         };
         {
             let _t = profiler.time(Step::DistUpdate);
-            client.push(step as u64, &out.tensors)?;
-            if sync {
-                client.barrier(step as u64)?;
-            }
+            agg.commit(step as u64, params, &out.tensors)?;
         }
         if let Some(p) = progress {
             p.store(step + 1, std::sync::atomic::Ordering::SeqCst);
@@ -217,8 +241,8 @@ where
         profiler,
         wall_s,
         throughput,
-        push_wire_bytes: client.push_wire_bytes() - wire_bytes_before,
-        pull_wire_bytes: client.pull_wire_bytes() - pull_bytes_before,
+        push_wire_bytes: agg.push_wire_bytes() - wire_bytes_before,
+        pull_wire_bytes: agg.pull_wire_bytes() - pull_bytes_before,
     })
 }
 

@@ -21,6 +21,7 @@ use std::time::{Duration, Instant};
 
 use dtlsda::coordinator::checkpoint::Checkpoint;
 use dtlsda::coordinator::distributed::{conn_id, detect_stragglers, run_workers_with_restart};
+use dtlsda::net::collective::{inproc_mesh, Collective, Contrib, Topology};
 use dtlsda::net::fault::{FaultEvent, FaultLog, FaultPlan};
 use dtlsda::net::message::Message;
 use dtlsda::net::transport::{InProcTransport, Transport};
@@ -33,6 +34,7 @@ use dtlsda::ps::{CodecKind, PullCodec};
 use dtlsda::tensor::Tensor;
 use dtlsda::util::prop;
 use dtlsda::util::rng::Rng;
+use dtlsda::worker::aggregate::{AllreduceAggregator, GradAggregator};
 
 /// CI seed-matrix knob.
 fn chaos_seed() -> u64 {
@@ -1322,5 +1324,222 @@ fn injected_latency_is_detected_as_straggler() {
             .snapshot_sorted()
             .iter()
             .any(|e| matches!(e.kind, dtlsda::net::fault::FaultKind::LatencyMs(_))));
+    });
+}
+
+/// Allreduce liveness contract, half 1: a peer that is alive but never
+/// joins the collective (wedged process, stalled GPU) must turn into a
+/// clean bounded error on every participating rank — never a hang. The
+/// coordinator's group-reform loop depends on this error surfacing.
+#[test]
+fn allreduce_wedged_peer_fails_cleanly_within_deadline() {
+    with_watchdog(60, "allreduce wedged peer", || {
+        for topology in [Topology::Ring, Topology::Tree] {
+            let n = 4usize;
+            let shapes: Vec<Vec<usize>> = vec![vec![32], vec![4, 4]];
+            let mut mesh = inproc_mesh(n);
+            // Rank 3 is wedged: we keep its link ends alive (no EOF to
+            // lean on) but it never sends or receives a frame.
+            let wedged_links = mesh.pop().unwrap();
+            let handles: Vec<_> = mesh
+                .into_iter()
+                .enumerate()
+                .map(|(rank, links)| {
+                    let shapes = shapes.clone();
+                    thread::spawn(move || {
+                        let mut c =
+                            Collective::new(rank, n, links, topology, shapes.clone()).unwrap();
+                        c.set_deadline(Duration::from_millis(250)).unwrap();
+                        let contribs: Vec<Contrib> =
+                            shapes.iter().map(|s| Contrib::Dense(Tensor::zeros(s))).collect();
+                        let t0 = Instant::now();
+                        (c.allreduce_sum(0, contribs), t0.elapsed())
+                    })
+                })
+                .collect();
+            for (rank, h) in handles.into_iter().enumerate() {
+                let (r, took) = h.join().unwrap();
+                assert!(
+                    r.is_err(),
+                    "{topology:?} rank {rank}: collective with a wedged peer must error"
+                );
+                assert!(
+                    took < Duration::from_secs(20),
+                    "{topology:?} rank {rank}: error not bounded by the deadline: {took:?}"
+                );
+            }
+            drop(wedged_links);
+        }
+    });
+}
+
+/// Allreduce liveness contract, half 2: seeded frame drops on the mesh.
+/// Each rank either finishes its run or returns a clean `Err` within
+/// its read deadline — the suite-level watchdog is the hang detector.
+/// If every rank somehow finishes, their parameters must still agree
+/// bit-for-bit (a dropped frame is never silently papered over).
+#[test]
+fn allreduce_under_seeded_drops_never_hangs() {
+    let seed = chaos_seed();
+    with_watchdog(120, "allreduce seeded drops", move || {
+        let log = FaultLog::new();
+        for topology in [Topology::Ring, Topology::Tree] {
+            let n = 3usize;
+            let steps = 10u64;
+            let shapes: Vec<Vec<usize>> = vec![vec![48], vec![6, 6]];
+            let plan = FaultPlan { seed, drop_send: 0.1, drop_recv: 0.05, ..Default::default() };
+            let mut mesh = inproc_mesh(n);
+            for (i, links) in mesh.iter_mut().enumerate() {
+                for (j, slot) in links.iter_mut().enumerate() {
+                    if let Some(inner) = slot.take() {
+                        *slot =
+                            Some(Box::new(plan.wrap(conn_id(i, j, 0, 0), log.clone(), inner)));
+                    }
+                }
+            }
+            let results: Vec<Result<Vec<Tensor>, String>> = {
+                let handles: Vec<_> = mesh
+                    .into_iter()
+                    .enumerate()
+                    .map(|(rank, links)| {
+                        let shapes = shapes.clone();
+                        thread::spawn(move || -> Result<Vec<Tensor>, String> {
+                            let init: Vec<Tensor> =
+                                shapes.iter().map(|s| Tensor::zeros(s)).collect();
+                            let targets: Vec<Tensor> = shapes
+                                .iter()
+                                .map(|s| Tensor::from_vec(s, vec![1.0; s.iter().product()]))
+                                .collect();
+                            let mut c = Collective::new(rank, n, links, topology, shapes)?;
+                            c.set_deadline(Duration::from_millis(300))?;
+                            let mut agg = AllreduceAggregator::new(
+                                c,
+                                Optimizer::Sgd { lr: 0.1 },
+                                CodecKind::None,
+                                init,
+                            );
+                            let mut params = Vec::new();
+                            for step in 0..steps {
+                                agg.refresh(&mut params)?;
+                                let grads: Vec<Tensor> = params
+                                    .iter()
+                                    .zip(&targets)
+                                    .map(|(p, t)| {
+                                        let mut g = p.clone();
+                                        g.axpy(-1.0, t);
+                                        g.scale(2.0);
+                                        g
+                                    })
+                                    .collect();
+                                agg.commit(step, &mut params, &grads)?;
+                            }
+                            Ok(params)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            };
+            let oks: Vec<&Vec<Tensor>> = results.iter().filter_map(|r| r.as_ref().ok()).collect();
+            if oks.len() == results.len() {
+                for p in &oks[1..] {
+                    for (x, y) in p.iter().zip(oks[0]) {
+                        assert_eq!(x.data(), y.data(), "{topology:?}: surviving ranks diverged");
+                    }
+                }
+            }
+        }
+        // The plans must actually have injected faults for this run to
+        // mean anything (seeded: deterministic per DTLSDA_CHAOS_SEED).
+        assert!(!log.is_empty(), "seed {seed}: no faults injected across either topology");
+    });
+}
+
+/// Satellite pin for the ack-from-tail fix: a worker push is only acked
+/// once the tail replica has acked the forwarded frame, so every push
+/// acked while the chain was intact must survive on the promoted tail —
+/// even when the chain link silently drops frames. With lr = 1 and a
+/// unit gradient per push, the tail's stored value after m applied
+/// frames is exactly -m: its state *is* its frame count.
+#[test]
+fn acked_pushes_survive_on_promoted_tail_under_link_drops() {
+    let seed = chaos_seed();
+    with_watchdog(60, "ack-from-tail durability", move || {
+        let router = Router::new(&[4], 1);
+        let mk_store = || {
+            let mut store = ShardStore::new(Optimizer::Sgd { lr: 1.0 });
+            store.insert(0, Tensor::zeros(&[1]));
+            store
+        };
+        let primary = PsShared::new(mk_store(), UpdateMode::Async);
+        let tail = PsShared::new(mk_store(), UpdateMode::Async);
+        tail.set_role_replica();
+
+        // Chain link with seeded forward-direction drops only: acks
+        // flow back clean (dup/trunc would break the frame-count
+        // mirror this test reconstructs from the store value).
+        let log = FaultLog::new();
+        let plan = FaultPlan { seed, drop_send: 0.08, ..Default::default() };
+        let (link, tail_end) = InProcTransport::pair();
+        let tail_sh = tail.clone();
+        let feed = thread::spawn(move || serve(Box::new(tail_end), tail_sh));
+        primary.set_replicas(vec![Box::new(plan.wrap(
+            conn_id(0, 1, 0, 0),
+            log.clone(),
+            Box::new(link),
+        )) as Box<dyn Transport>]);
+        primary.set_repl_ack_timeout(Duration::from_millis(100));
+
+        // Worker against the primary over a clean connection.
+        let (wc, ws) = InProcTransport::pair();
+        let pr = primary.clone();
+        let serve_w = thread::spawn(move || serve(Box::new(ws), pr));
+        let mut client =
+            PsClient::new(0, vec![Box::new(wc) as Box<dyn Transport>], router.clone());
+
+        let mut acked_while_chained = 0u64;
+        for step in 0..400u64 {
+            client.push(step, &[Tensor::from_vec(&[1], vec![1.0])]).unwrap();
+            if primary.n_replicas() == 1 {
+                // The ack-from-tail gate: this ack was only released
+                // after the tail acked the frame, so the frame is
+                // durable downstream. (The link can only be dropped
+                // inside a push's ack wait — there is no concurrent
+                // traffic — so checking after the ack is race-free.)
+                acked_while_chained += 1;
+            } else {
+                // First dropped frame stalls the ack watermark, the
+                // primary severs the lagging link, and the durability
+                // window is over.
+                break;
+            }
+        }
+        // Consistency: an injected drop stalls the watermark and severs
+        // the link, so a fault in the log implies the loop broke early.
+        // (The converse can't be asserted — a slow tail can trip the
+        // ack timeout without any injected fault, which is fine.)
+        assert!(
+            log.is_empty() || acked_while_chained < 400,
+            "seed {seed}: drops were injected but the chain survived all 400 pushes"
+        );
+        drop(client);
+        primary.set_replicas(Vec::new());
+        let _ = feed.join();
+        let _ = serve_w.join();
+
+        // Fail over to the tail and read its state back over the wire.
+        tail.promote(1);
+        let (pc, ps_end) = InProcTransport::pair();
+        let t2 = tail.clone();
+        let serve_p = thread::spawn(move || serve(Box::new(ps_end), t2));
+        let mut probe = PsClient::new(9, vec![Box::new(pc) as Box<dyn Transport>], router);
+        let vals = probe.pull_all().unwrap();
+        let applied = (-vals[0].data()[0]) as u64;
+        assert!(
+            applied >= acked_while_chained,
+            "durability hole: {acked_while_chained} pushes acked under an intact chain, but \
+             the promoted tail only applied {applied}"
+        );
+        drop(probe);
+        let _ = serve_p.join();
     });
 }

@@ -10,6 +10,7 @@ use std::sync::Arc;
 
 use dtlsda::advisor;
 use dtlsda::advisor::netdefs;
+use dtlsda::net::collective::{inproc_mesh, Collective, Topology};
 use dtlsda::net::message::Message;
 use dtlsda::net::transport::{connect, InProcTransport, Transport};
 use dtlsda::ps::client::PsClient;
@@ -21,6 +22,51 @@ use dtlsda::sim::device::DeviceModel;
 use dtlsda::tensor::Tensor;
 use dtlsda::util::prop;
 use dtlsda::util::rng::Rng;
+use dtlsda::worker::aggregate::{AllreduceAggregator, GradAggregator};
+
+/// The synthetic quadratic task shared by the PS and allreduce drivers:
+/// params w (3 tensors), loss = Σ|w - target|², grad = 2(w - target).
+/// Both backends must generate targets/gradients through these exact
+/// helpers so the parity tests compare bit-identical arithmetic.
+fn quad_shapes() -> Vec<Vec<usize>> {
+    vec![vec![64], vec![8, 8], vec![128]]
+}
+
+fn quad_targets(shapes: &[Vec<usize>]) -> Vec<Tensor> {
+    let mut rng = Rng::new(77);
+    shapes
+        .iter()
+        .map(|s| {
+            let n: usize = s.iter().product();
+            Tensor::from_vec(s, (0..n).map(|_| rng.normal() as f32).collect())
+        })
+        .collect()
+}
+
+fn quad_grads(params: &[Tensor], targets: &[Tensor]) -> Vec<Tensor> {
+    params
+        .iter()
+        .zip(targets)
+        .map(|(p, t)| {
+            let mut g = p.clone();
+            g.axpy(-1.0, t);
+            g.scale(2.0);
+            g
+        })
+        .collect()
+}
+
+fn quad_loss(params: &[Tensor], targets: &[Tensor]) -> f32 {
+    params
+        .iter()
+        .zip(targets)
+        .map(|(w, t)| {
+            let mut d = w.clone();
+            d.axpy(-1.0, t);
+            d.l2_norm().powi(2)
+        })
+        .sum()
+}
 
 /// Synthetic convex task: params w (3 tensors), loss = Σ|w - target|²,
 /// grad = 2(w - target). SGD through the real PS cluster must converge
@@ -34,18 +80,10 @@ fn quad_cluster(
     lr: f32,
     codec: CodecKind,
 ) -> (Vec<Tensor>, Vec<Tensor>) {
-    let shapes: Vec<Vec<usize>> = vec![vec![64], vec![8, 8], vec![128]];
+    let shapes = quad_shapes();
     let sizes: Vec<usize> = shapes.iter().map(|s| s.iter().product::<usize>() * 4).collect();
     let router = Router::new(&sizes, n_servers);
-
-    let mut rng = Rng::new(77);
-    let targets: Vec<Tensor> = shapes
-        .iter()
-        .map(|s| {
-            let n: usize = s.iter().product();
-            Tensor::from_vec(s, (0..n).map(|_| rng.normal() as f32).collect())
-        })
-        .collect();
+    let targets = quad_targets(&shapes);
 
     let mode = if sync {
         UpdateMode::Sync { expected_workers: n_workers, backup_workers: 0 }
@@ -75,16 +113,7 @@ fn quad_cluster(
             let mut client = PsClient::with_codec(w as u32, transports, router, codec);
             for step in 0..steps {
                 let params = client.pull_all().unwrap();
-                let grads: Vec<Tensor> = params
-                    .iter()
-                    .zip(&targets)
-                    .map(|(p, t)| {
-                        let mut g = p.clone();
-                        g.axpy(-1.0, t);
-                        g.scale(2.0);
-                        g
-                    })
-                    .collect();
+                let grads = quad_grads(&params, &targets);
                 client.push(step as u64, &grads).unwrap();
                 if sync {
                     client.barrier(step as u64).unwrap();
@@ -107,6 +136,117 @@ fn quad_cluster(
         s.shutdown();
     }
     (finals, targets)
+}
+
+/// Sync PS driver that records each worker's loss trace (loss computed
+/// from the parameters it pulled before pushing, i.e. after `step`
+/// committed updates). Returns (final params, per-worker loss traces).
+fn quad_ps_sync_traced(
+    n_servers: usize,
+    n_workers: usize,
+    steps: usize,
+    lr: f32,
+    codec: CodecKind,
+) -> (Vec<Tensor>, Vec<Vec<f32>>) {
+    let shapes = quad_shapes();
+    let sizes: Vec<usize> = shapes.iter().map(|s| s.iter().product::<usize>() * 4).collect();
+    let router = Router::new(&sizes, n_servers);
+    let targets = quad_targets(&shapes);
+
+    let mode = UpdateMode::Sync { expected_workers: n_workers, backup_workers: 0 };
+    let mut servers = Vec::new();
+    for s in 0..n_servers {
+        let mut store = ShardStore::new(Optimizer::Sgd { lr });
+        for &k in router.keys_of(s) {
+            store.insert(k, Tensor::zeros(&shapes[k as usize]));
+        }
+        servers.push(PsServerHandle::spawn_tcp("127.0.0.1:0", store, mode).unwrap());
+    }
+    let addrs: Vec<_> = servers.iter().map(|s| s.addr).collect();
+
+    let mut handles = Vec::new();
+    for w in 0..n_workers {
+        let addrs = addrs.clone();
+        let router = router.clone();
+        let targets = targets.clone();
+        handles.push(std::thread::spawn(move || {
+            let transports: Vec<Box<dyn Transport>> = addrs
+                .iter()
+                .map(|a| Box::new(connect(a).unwrap()) as Box<dyn Transport>)
+                .collect();
+            let mut client = PsClient::with_codec(w as u32, transports, router, codec);
+            let mut trace = Vec::with_capacity(steps);
+            for step in 0..steps {
+                let params = client.pull_all().unwrap();
+                trace.push(quad_loss(&params, &targets));
+                let grads = quad_grads(&params, &targets);
+                client.push(step as u64, &grads).unwrap();
+                client.barrier(step as u64).unwrap();
+            }
+            trace
+        }));
+    }
+    let traces: Vec<Vec<f32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    let transports: Vec<Box<dyn Transport>> = addrs
+        .iter()
+        .map(|a| Box::new(connect(a).unwrap()) as Box<dyn Transport>)
+        .collect();
+    let mut client = PsClient::new(99, transports, router);
+    let finals = client.pull_all().unwrap();
+    drop(client);
+    for s in &mut servers {
+        s.shutdown();
+    }
+    (finals, traces)
+}
+
+/// Allreduce driver over an in-proc mesh: every rank runs the same
+/// quadratic task through an [`AllreduceAggregator`]. Returns each
+/// rank's final params and loss trace (loss from refreshed params
+/// before each commit, mirroring `quad_ps_sync_traced`'s pull point).
+fn quad_allreduce(
+    n_ranks: usize,
+    topology: Topology,
+    steps: usize,
+    lr: f32,
+    codec: CodecKind,
+) -> (Vec<Vec<Tensor>>, Vec<Vec<f32>>) {
+    let shapes = quad_shapes();
+    let targets = quad_targets(&shapes);
+    let mesh = inproc_mesh(n_ranks);
+    let mut finals = Vec::new();
+    let mut traces = Vec::new();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = mesh
+            .into_iter()
+            .enumerate()
+            .map(|(rank, links)| {
+                let shapes = shapes.clone();
+                let targets = targets.clone();
+                s.spawn(move || {
+                    let init: Vec<Tensor> = shapes.iter().map(|sh| Tensor::zeros(sh)).collect();
+                    let c = Collective::new(rank, n_ranks, links, topology, shapes).unwrap();
+                    let mut agg = AllreduceAggregator::new(c, Optimizer::Sgd { lr }, codec, init);
+                    let mut params = Vec::new();
+                    let mut trace = Vec::with_capacity(steps);
+                    for step in 0..steps {
+                        agg.refresh(&mut params).unwrap();
+                        trace.push(quad_loss(&params, &targets));
+                        let grads = quad_grads(&params, &targets);
+                        agg.commit(step as u64, &mut params, &grads).unwrap();
+                    }
+                    (params, trace)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (p, t) = h.join().unwrap();
+            finals.push(p);
+            traces.push(t);
+        }
+    });
+    (finals, traces)
 }
 
 fn l2_distance(a: &[Tensor], b: &[Tensor]) -> f32 {
@@ -144,6 +284,68 @@ fn sync_is_deterministic() {
     for (x, y) in a.iter().zip(&b) {
         assert_eq!(x.data(), y.data());
     }
+}
+
+/// Shared body for the backend-parity pins: a sync PS cluster and an
+/// allreduce group (both topologies) on the same task, seeds and codec
+/// must agree byte-for-byte on every loss and the final parameters.
+///
+/// Why bitwise parity is even possible: the quadratic gradient is
+/// batch-independent, so sync-lockstep workers submit *identical*
+/// contributions each step. Folding n identical f32 values through a
+/// linear accumulator chain gives the same bits regardless of arrival
+/// order (PS) or rank order (collective), and both backends then run
+/// scale(1/n) + the same Optimizer arithmetic. This is exactly the
+/// contract `worker::aggregate` documents. (Quant8Sr is excluded:
+/// per-worker stochastic-rounding streams make contributions differ,
+/// so the PS fold becomes arrival-order dependent.)
+fn assert_backend_parity(codec: CodecKind) {
+    let (n, steps, lr) = (3, 12, 0.1);
+    let (ps_finals, ps_traces) = quad_ps_sync_traced(2, n, steps, lr, codec);
+    // Sync lockstep: every PS worker saw the same losses.
+    for t in &ps_traces[1..] {
+        assert_eq!(t, &ps_traces[0], "{codec:?}: PS workers diverged");
+    }
+    for topology in [Topology::Ring, Topology::Tree] {
+        let (finals, traces) = quad_allreduce(n, topology, steps, lr, codec);
+        for (rank, f) in finals.iter().enumerate() {
+            for (x, y) in f.iter().zip(&ps_finals) {
+                assert_eq!(
+                    x.data(),
+                    y.data(),
+                    "{codec:?} {topology:?} rank {rank}: final params diverged from PS"
+                );
+            }
+        }
+        for (rank, trace) in traces.iter().enumerate() {
+            assert_eq!(
+                trace, &ps_traces[0],
+                "{codec:?} {topology:?} rank {rank}: loss trace diverged from PS"
+            );
+        }
+    }
+    // And the shared trajectory is a real optimization, not a fixpoint.
+    assert!(
+        ps_traces[0].last().unwrap() < ps_traces[0].first().unwrap(),
+        "{codec:?}: loss did not decrease"
+    );
+}
+
+#[test]
+fn allreduce_matches_ps_sync_dense_bitwise() {
+    assert_backend_parity(CodecKind::None);
+}
+
+#[test]
+fn allreduce_matches_ps_sync_quant8_bitwise() {
+    assert_backend_parity(CodecKind::Quant8);
+}
+
+#[test]
+fn allreduce_matches_ps_sync_topk_bitwise() {
+    // Top-k keeps per-key error-feedback state; both backends must
+    // evolve it identically.
+    assert_backend_parity(CodecKind::TopK { fraction: 0.5 });
 }
 
 #[test]
