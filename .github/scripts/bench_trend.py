@@ -18,10 +18,17 @@ when present (absent keys are skipped, so old JSONs never fail):
   dense broadcast).
 * applyserve_pull_ops_per_s must be > 0 (pulls keep flowing while the
   batched optimizer apply runs in its freeze/thaw window).
-* allreduce_ring_rounds_per_s and allreduce_tree_rounds_per_s must be
-  > 0 (the --backend allreduce data path completes collective rounds).
+* allreduce_ring_rounds_per_s, allreduce_tree_rounds_per_s and
+  allreduce_hd_rounds_per_s must be > 0 (the --backend allreduce data
+  path completes collective rounds on every topology).
 * allreduce_wire_ratio_dense_over_quant8 must be >= 1.5 (compressed
   contributions must actually cut collective bytes-on-wire).
+* each allreduce_*_overlap_rounds_per_s must stay >= OVERLAP_FLOOR of
+  its blocking twin, and ps_overlap_ops_per_s >= OVERLAP_FLOOR of
+  ps_sync_ops_per_s — the bucketized comms-thread committer must not
+  cost meaningful throughput even with nothing to overlap (the bench
+  has no compute between start_commit and wait_all; the floor is
+  deliberately loose because CI smoke runs only a handful of rounds).
 """
 
 import json
@@ -30,6 +37,10 @@ import sys
 THRESHOLD = 0.75  # fail below 75% of baseline throughput (>25% drop)
 PULL_RATIO_FLOOR = 3.0  # compressed pulls must beat dense by >= 3x
 ALLREDUCE_RATIO_FLOOR = 1.5  # quant8 collectives must beat dense wire bytes
+# Overlap-on must keep most of the blocking twin's throughput. Loose on
+# purpose: smoke runs measure ~4 rounds, so thread-spawn noise is large
+# relative to the signal; the full (non-smoke) runs sit near 1.0.
+OVERLAP_FLOOR = 0.6
 
 
 def row_key(row):
@@ -64,7 +75,11 @@ def check_summary_gates(current):
         print(f"{verdict} {key}: {ops:.1f}")
         if ops <= 0:
             failures.append(f"{key} = {ops:.1f} (pulls stalled during apply)")
-    for key in ("allreduce_ring_rounds_per_s", "allreduce_tree_rounds_per_s"):
+    for key in (
+        "allreduce_ring_rounds_per_s",
+        "allreduce_tree_rounds_per_s",
+        "allreduce_hd_rounds_per_s",
+    ):
         if key not in current:
             continue
         rounds = float(current[key])
@@ -72,6 +87,31 @@ def check_summary_gates(current):
         print(f"{verdict} {key}: {rounds:.1f}")
         if rounds <= 0:
             failures.append(f"{key} = {rounds:.1f} (collective made no progress)")
+    # Overlap-on vs blocking twins: both keys must be present for the
+    # gate to engage (old JSONs skip it entirely).
+    for overlap_key, blocking_key in (
+        ("allreduce_ring_overlap_rounds_per_s", "allreduce_ring_rounds_per_s"),
+        ("allreduce_tree_overlap_rounds_per_s", "allreduce_tree_rounds_per_s"),
+        ("allreduce_hd_overlap_rounds_per_s", "allreduce_hd_rounds_per_s"),
+        ("ps_overlap_ops_per_s", "ps_sync_ops_per_s"),
+    ):
+        if overlap_key not in current or blocking_key not in current:
+            continue
+        overlap = float(current[overlap_key])
+        blocking = float(current[blocking_key])
+        if blocking <= 0:
+            continue
+        ratio = overlap / blocking
+        verdict = "ok      " if ratio >= OVERLAP_FLOOR else "FAIL    "
+        print(
+            f"{verdict} {overlap_key}: {overlap:.1f} vs {blocking:.1f} "
+            f"({ratio:.2f}x, floor {OVERLAP_FLOOR:.2f}x)"
+        )
+        if ratio < OVERLAP_FLOOR:
+            failures.append(
+                f"{overlap_key} = {ratio:.2f}x of {blocking_key} "
+                f"< {OVERLAP_FLOOR:.2f}x"
+            )
     key = "allreduce_wire_ratio_dense_over_quant8"
     if key in current:
         ratio = float(current[key])

@@ -17,10 +17,18 @@
 //!   workers race a background thread doing batched optimizer applies
 //!   through the double-buffered freeze/thaw window, demonstrating
 //!   nonzero pull throughput during (parallel) apply.
-//! * An allreduce series (`mode=allreduce-ring`/`allreduce-tree`): the
-//!   `--backend allreduce` data path over an in-proc mesh, dense and
-//!   quant8 contributions, recording collective rounds/s and real
-//!   bytes-on-wire per direction (reduce vs broadcast).
+//! * An allreduce series (`mode=allreduce-ring`/`allreduce-tree`/
+//!   `allreduce-hd`): the `--backend allreduce` data path over an
+//!   in-proc mesh, dense and quant8 contributions, recording collective
+//!   rounds/s and real bytes-on-wire per direction (reduce vs
+//!   broadcast).
+//! * An overlap series (`mode=*-overlap`, `ps-overlap`): the same
+//!   rounds through the bucketized `start_commit`/`wait_all` split
+//!   (`--bucket-bytes`) — collectives stream on the comms thread (PS:
+//!   split push_send/push_wait) while the caller is free to compute.
+//!   Each row records `blocked_s` (stalled in wait) vs `comm_s` (wire
+//!   busy); `blocked/comm` is the fraction of communication NOT hidden
+//!   (1.0 = no overlap).
 //!
 //! The `MB/s` column stays *logical* (dense-equivalent bytes moved per
 //! second) so rows are comparable across codecs; `pushMB`/`pullMB` are
@@ -91,6 +99,12 @@ struct RunResult {
     push_mb: f64,
     /// Measured pull-reply body MB over the whole run (bytes on wire).
     pull_mb: f64,
+    /// Seconds stalled waiting on in-flight commits, summed over
+    /// workers (overlap rows only; 0 elsewhere).
+    blocked_s: f64,
+    /// Seconds the wire was busy committing, summed over workers
+    /// (overlap rows only; 0 elsewhere).
+    comm_s: f64,
 }
 
 fn seeded_store(elems: usize) -> ShardStore {
@@ -153,6 +167,8 @@ fn result(
         mb_per_s: bytes / 1e6 / wall_s,
         push_mb: wire.0 as f64 / 1e6,
         pull_mb: wire.1 as f64 / 1e6,
+        blocked_s: 0.0,
+        comm_s: 0.0,
     }
 }
 
@@ -325,19 +341,108 @@ fn run_apply_serve(workers: usize, codecs: Codecs, rounds: usize) -> RunResult {
         mb_per_s: bytes / 1e6 / wall_s,
         push_mb: 0.0,
         pull_mb: pull_bytes as f64 / 1e6,
+        blocked_s: 0.0,
+        comm_s: 0.0,
     }
 }
+
+/// Sync PS rounds through the split push (`--bucket-bytes` on the PS
+/// backend): `push_send` streams the frames to every shard, the gap
+/// where a real worker folds the next batch sits in between, and
+/// `push_wait` collects the acks before the barrier. `blocked_s` is the
+/// wait+barrier stall; `comm_s` spans send through barrier.
+fn run_ps_overlap(workers: usize, rounds: usize) -> RunResult {
+    let mode = UpdateMode::Sync { expected_workers: workers, backup_workers: 0 };
+    let shared = PsShared::with_stripes(seeded_store(ELEMS), mode, DEFAULT_STRIPES);
+    let rt = router(ELEMS);
+
+    let mut serve_handles = Vec::new();
+    let mut worker_handles = Vec::new();
+    let t0 = Instant::now();
+    for w in 0..workers {
+        let (client_end, server_end) = InProcTransport::pair();
+        let sh = shared.clone();
+        serve_handles.push(thread::spawn(move || serve(Box::new(server_end), sh)));
+        let rt = rt.clone();
+        worker_handles.push(thread::spawn(move || {
+            let mut client = make_client(w, Box::new(client_end), rt, DENSE);
+            let grads: Vec<Tensor> =
+                (0..N_KEYS).map(|_| Tensor::from_vec(&[ELEMS], vec![1e-4; ELEMS])).collect();
+            let mut params = Vec::new();
+            let (mut blocked, mut comm) = (0.0f64, 0.0f64);
+            for step in 0..rounds {
+                client.pull_all_into(&mut params).unwrap();
+                let t_send = Instant::now();
+                client.push_send(step as u64, &grads).unwrap();
+                let sent = t_send.elapsed().as_secs_f64();
+                // (a real worker folds the next batch here)
+                let t_wait = Instant::now();
+                client.push_wait(step as u64, &grads).unwrap();
+                client.barrier(step as u64).unwrap();
+                let waited = t_wait.elapsed().as_secs_f64();
+                blocked += waited;
+                comm += sent + waited;
+            }
+            (client.push_wire_bytes(), client.pull_wire_bytes(), blocked, comm)
+        }));
+    }
+    let mut wire = (0u64, 0u64);
+    let (mut blocked_s, mut comm_s) = (0.0f64, 0.0f64);
+    for h in worker_handles {
+        let (p, q, b, c) = h.join().unwrap();
+        wire.0 += p;
+        wire.1 += q;
+        blocked_s += b;
+        comm_s += c;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    for h in serve_handles {
+        h.join().unwrap();
+    }
+    let ops = (workers * rounds * 2) as f64;
+    let bytes = (workers * rounds * 2 * N_KEYS * ELEMS * 4) as f64;
+    RunResult {
+        transport: "inproc",
+        mode: "ps-overlap",
+        codec: DENSE.push_name,
+        pull_codec: DENSE.pull_name,
+        workers,
+        stripes: DEFAULT_STRIPES,
+        wall_s,
+        ops_per_s: ops / wall_s,
+        mb_per_s: bytes / 1e6 / wall_s,
+        push_mb: wire.0 as f64 / 1e6,
+        pull_mb: wire.1 as f64 / 1e6,
+        blocked_s,
+        comm_s,
+    }
+}
+
+/// Bucket size for the overlap rows: 4 keys (8 KB each) per bucket, so
+/// the 16-key payload ships as 4 buckets down the comms thread.
+const AR_BUCKET_BYTES: usize = 32 * 1024;
 
 /// The `--backend allreduce` data path: `workers` ranks over an in-proc
 /// mesh, each committing one (optionally compressed) collective round
 /// per step through the same aggregator `train-dist` drives. `ops/s`
 /// counts per-rank collective rounds; `pushMB`/`pullMB` are the real
-/// reduce-direction / broadcast-direction bytes.
-fn run_allreduce(workers: usize, topology: Topology, codecs: Codecs, rounds: usize) -> RunResult {
+/// reduce-direction / broadcast-direction bytes. With
+/// `bucket_bytes = Some(..)` the rounds run through the overlapped
+/// committer: `start_commit` ships buckets to the comms thread, the
+/// next round's `wait_all` collects them — the same schedule
+/// `worker::pipeline` drives under `--bucket-bytes`.
+fn run_allreduce(
+    workers: usize,
+    topology: Topology,
+    codecs: Codecs,
+    rounds: usize,
+    bucket_bytes: Option<usize>,
+) -> RunResult {
     let shapes: Vec<Vec<usize>> = vec![vec![ELEMS]; N_KEYS];
     let mesh = inproc_mesh(workers);
     let t0 = Instant::now();
     let mut wire = (0u64, 0u64);
+    let (mut blocked_s, mut comm_s) = (0.0f64, 0.0f64);
     thread::scope(|s| {
         let handles: Vec<_> = mesh
             .into_iter()
@@ -347,24 +452,43 @@ fn run_allreduce(workers: usize, topology: Topology, codecs: Codecs, rounds: usi
                 s.spawn(move || {
                     let init: Vec<Tensor> = shapes.iter().map(|sh| Tensor::zeros(sh)).collect();
                     let c = Collective::new(rank, workers, links, topology, shapes).unwrap();
-                    let mut agg =
-                        AllreduceAggregator::new(c, Optimizer::Sgd { lr: 1e-3 }, codecs.push, init);
+                    let opt = Optimizer::Sgd { lr: 1e-3 };
+                    let mut agg = match bucket_bytes {
+                        None => AllreduceAggregator::new(c, opt, codecs.push, init),
+                        Some(bb) => {
+                            AllreduceAggregator::with_overlap(c, opt, codecs.push, init, bb)
+                        }
+                    };
                     let grads: Vec<Tensor> = (0..N_KEYS)
                         .map(|_| Tensor::from_vec(&[ELEMS], vec![1e-4; ELEMS]))
                         .collect();
                     let mut params = Vec::new();
-                    for step in 0..rounds {
-                        agg.refresh(&mut params).unwrap();
-                        agg.commit(step as u64, &mut params, &grads).unwrap();
+                    if bucket_bytes.is_some() {
+                        for step in 0..rounds {
+                            if step > 0 {
+                                agg.wait_all(&mut params).unwrap();
+                            }
+                            agg.refresh(&mut params).unwrap();
+                            agg.start_commit(step as u64, &mut params, &grads).unwrap();
+                        }
+                        agg.wait_all(&mut params).unwrap();
+                    } else {
+                        for step in 0..rounds {
+                            agg.refresh(&mut params).unwrap();
+                            agg.commit(step as u64, &mut params, &grads).unwrap();
+                        }
                     }
-                    (agg.push_wire_bytes(), agg.pull_wire_bytes())
+                    let (blocked, comm) = agg.overlap_stats();
+                    (agg.push_wire_bytes(), agg.pull_wire_bytes(), blocked, comm)
                 })
             })
             .collect();
         for h in handles {
-            let (p, q) = h.join().unwrap();
+            let (p, q, b, c) = h.join().unwrap();
             wire.0 += p;
             wire.1 += q;
+            blocked_s += b;
+            comm_s += c;
         }
     });
     let wall_s = t0.elapsed().as_secs_f64();
@@ -372,9 +496,13 @@ fn run_allreduce(workers: usize, topology: Topology, codecs: Codecs, rounds: usi
     let bytes = (workers * rounds * 2 * N_KEYS * ELEMS * 4) as f64;
     RunResult {
         transport: "inproc",
-        mode: match topology {
-            Topology::Ring => "allreduce-ring",
-            Topology::Tree => "allreduce-tree",
+        mode: match (topology, bucket_bytes.is_some()) {
+            (Topology::Ring, false) => "allreduce-ring",
+            (Topology::Tree, false) => "allreduce-tree",
+            (Topology::Hd, false) => "allreduce-hd",
+            (Topology::Ring, true) => "allreduce-ring-overlap",
+            (Topology::Tree, true) => "allreduce-tree-overlap",
+            (Topology::Hd, true) => "allreduce-hd-overlap",
         },
         codec: codecs.push_name,
         pull_codec: codecs.pull_name,
@@ -385,6 +513,8 @@ fn run_allreduce(workers: usize, topology: Topology, codecs: Codecs, rounds: usi
         mb_per_s: bytes / 1e6 / wall_s,
         push_mb: wire.0 as f64 / 1e6,
         pull_mb: wire.1 as f64 / 1e6,
+        blocked_s,
+        comm_s,
     }
 }
 
@@ -459,19 +589,29 @@ fn main() {
     {
         results.push(run_apply_serve(top_w, codecs, rounds_inproc));
     }
-    // Allreduce series: ring and tree collectives at a fixed group
-    // size, dense and quant8 contributions.
+    // Allreduce series: ring, tree and hd collectives at a fixed
+    // group size, dense and quant8 contributions, plus an overlap-on
+    // twin per topology (bucketized commits on the comms thread).
     let ar_w = if smoke { 2 } else { 4 };
     let ar_quant8 = Codecs { push: CodecKind::Quant8, push_name: "quant8", ..DENSE };
-    for topology in [Topology::Ring, Topology::Tree] {
+    for topology in [Topology::Ring, Topology::Tree, Topology::Hd] {
         for &codecs in &[DENSE, ar_quant8] {
-            results.push(run_allreduce(ar_w, topology, codecs, rounds_inproc));
+            results.push(run_allreduce(ar_w, topology, codecs, rounds_inproc, None));
         }
+        results.push(run_allreduce(
+            ar_w,
+            topology,
+            DENSE,
+            rounds_inproc,
+            Some(AR_BUCKET_BYTES),
+        ));
     }
+    // PS overlap twin: sync rounds through the split push_send/push_wait.
+    results.push(run_ps_overlap(top_w, rounds_inproc));
 
     let mut t = Table::new(&[
         "transport", "mode", "codec", "pull", "workers", "stripes", "ops/s", "MB/s", "pushMB",
-        "pullMB",
+        "pullMB", "stall",
     ]);
     for r in &results {
         t.row(&[
@@ -485,6 +625,11 @@ fn main() {
             fmt2(r.mb_per_s),
             fmt2(r.push_mb),
             fmt2(r.pull_mb),
+            if r.comm_s > 0.0 {
+                format!("{:.0}%", 100.0 * r.blocked_s / r.comm_s)
+            } else {
+                "-".into()
+            },
         ]);
     }
     t.print();
@@ -565,9 +710,37 @@ fn main() {
     };
     let ar_ratio =
         ar_bytes("allreduce-ring", "none") / ar_bytes("allreduce-ring", "quant8").max(1e-12);
+    let hd_rounds_per_s = ar_rounds("allreduce-hd");
     println!(
         "allreduce @ {ar_w} ranks: ring {ring_rounds_per_s:.0} rounds/s, tree \
-         {tree_rounds_per_s:.0} rounds/s, ring bytes-on-wire dense/quant8 {ar_ratio:.1}x"
+         {tree_rounds_per_s:.0} rounds/s, hd {hd_rounds_per_s:.0} rounds/s, \
+         ring bytes-on-wire dense/quant8 {ar_ratio:.1}x"
+    );
+
+    // Headline 5: overlap-on vs overlap-off, and the stalled fraction
+    // of communication (blocked_s/comm_s — 1.0 means the caller waited
+    // out every collective, →0 means the wire fully hid behind it).
+    let ov = |mode: &str| results.iter().find(|r| r.mode == mode).cloned();
+    let ov_rounds =
+        |mode: &str| ov(mode).map(|r| r.ops_per_s / r.workers as f64).unwrap_or(0.0);
+    let ov_stall = |mode: &str| {
+        ov(mode)
+            .map(|r| if r.comm_s > 0.0 { r.blocked_s / r.comm_s } else { 1.0 })
+            .unwrap_or(1.0)
+    };
+    let ps_overlap_ops = ov("ps-overlap").map(|r| r.ops_per_s).unwrap_or(0.0);
+    let ps_sync_ops = find("sync", top_w, DEFAULT_STRIPES);
+    println!(
+        "overlap @ {ar_w} ranks: ring {:.0}, tree {:.0}, hd {:.0} rounds/s \
+         (stalled comm fraction {:.2}/{:.2}/{:.2}); ps split-push {:.0} vs sync {:.0} ops/s",
+        ov_rounds("allreduce-ring-overlap"),
+        ov_rounds("allreduce-tree-overlap"),
+        ov_rounds("allreduce-hd-overlap"),
+        ov_stall("allreduce-ring-overlap"),
+        ov_stall("allreduce-tree-overlap"),
+        ov_stall("allreduce-hd-overlap"),
+        ps_overlap_ops,
+        ps_sync_ops,
     );
 
     // Persist for trajectory tracking across PRs.
@@ -605,7 +778,37 @@ fn main() {
     root.insert("allreduce_ranks".into(), Json::Num(ar_w as f64));
     root.insert("allreduce_ring_rounds_per_s".into(), Json::Num(ring_rounds_per_s));
     root.insert("allreduce_tree_rounds_per_s".into(), Json::Num(tree_rounds_per_s));
+    root.insert("allreduce_hd_rounds_per_s".into(), Json::Num(hd_rounds_per_s));
     root.insert("allreduce_wire_ratio_dense_over_quant8".into(), Json::Num(ar_ratio));
+    // Overlap twins: rounds/s plus the blocked/comm stall fraction
+    // (lower = more communication hidden behind the caller's compute).
+    root.insert(
+        "allreduce_ring_overlap_rounds_per_s".into(),
+        Json::Num(ov_rounds("allreduce-ring-overlap")),
+    );
+    root.insert(
+        "allreduce_tree_overlap_rounds_per_s".into(),
+        Json::Num(ov_rounds("allreduce-tree-overlap")),
+    );
+    root.insert(
+        "allreduce_hd_overlap_rounds_per_s".into(),
+        Json::Num(ov_rounds("allreduce-hd-overlap")),
+    );
+    root.insert(
+        "overlap_efficiency_ring".into(),
+        Json::Num(ov_stall("allreduce-ring-overlap")),
+    );
+    root.insert(
+        "overlap_efficiency_tree".into(),
+        Json::Num(ov_stall("allreduce-tree-overlap")),
+    );
+    root.insert(
+        "overlap_efficiency_hd".into(),
+        Json::Num(ov_stall("allreduce-hd-overlap")),
+    );
+    root.insert("overlap_efficiency_ps".into(), Json::Num(ov_stall("ps-overlap")));
+    root.insert("ps_overlap_ops_per_s".into(), Json::Num(ps_overlap_ops));
+    root.insert("ps_sync_ops_per_s".into(), Json::Num(ps_sync_ops));
     root.insert(
         "results".into(),
         Json::Arr(
@@ -624,6 +827,8 @@ fn main() {
                     o.insert("mb_per_s".into(), Json::Num(r.mb_per_s));
                     o.insert("push_mb".into(), Json::Num(r.push_mb));
                     o.insert("pull_mb".into(), Json::Num(r.pull_mb));
+                    o.insert("blocked_s".into(), Json::Num(r.blocked_s));
+                    o.insert("comm_s".into(), Json::Num(r.comm_s));
                     Json::Obj(o)
                 })
                 .collect(),

@@ -21,6 +21,7 @@
 use crate::coordinator::distributed::Backend;
 use crate::net::collective::Topology;
 use crate::ps::compress::{CodecKind, PullCodec};
+use crate::util::json::Json;
 
 /// Lemma 3.1: efficiency `α` of `g` GPUs given overhead ratio `r_o`.
 pub fn efficiency(g: usize, r_o: f64) -> f64 {
@@ -280,6 +281,110 @@ pub fn tree_allreduce_time(s_p_bytes: f64, n_ranks: usize, b_link: f64, alpha_s:
     2.0 * depth * alpha_s + gather + bcast
 }
 
+/// Recursive halving-doubling allreduce round time (`--topology hd`):
+/// `⌈log2 N⌉` halving exchanges (reduce-scatter) plus `⌈log2 N⌉`
+/// doubling exchanges (allgather), each hop moving a geometrically
+/// shrinking span — `2·⌈log2 N⌉·α + 2·(N−1)/N·S/B`. Bandwidth-optimal
+/// like the ring but with a logarithmic hop count, so the closed form
+/// prices it at-or-below the ring everywhere. The advisor reports it as
+/// an extra candidate rather than folding it into the recommendation
+/// ([`choose_backend`] keeps its pinned ring/tree picks) because the
+/// wire implementation pays costs the model omits: non-power-of-two
+/// groups add a full-payload pre/post exchange with the folded-in extra
+/// ranks, and compressed contributions fall back to the ring relay
+/// entirely.
+pub fn hd_allreduce_time(s_p_bytes: f64, n_ranks: usize, b_link: f64, alpha_s: f64) -> f64 {
+    assert!(s_p_bytes >= 0.0 && b_link > 0.0 && alpha_s >= 0.0);
+    if n_ranks <= 1 {
+        return 0.0;
+    }
+    let n = n_ranks as f64;
+    let depth = n.log2().ceil();
+    2.0 * depth * alpha_s + 2.0 * (n - 1.0) / n * s_p_bytes / b_link
+}
+
+/// Non-overlappable slack per overlapped round: thread handoff, the
+/// first bucket's compression (nothing to overlap it with), and the
+/// final bucket's apply. Used by `advisor-backend`'s overlap estimate.
+pub const DEFAULT_OVERLAP_EPSILON_S: f64 = 1e-3;
+
+/// Overlap-adjusted round time: with `--bucket-bytes` the comms thread
+/// streams bucket `i` while compute folds bucket `i+1`, so a round
+/// costs `max(T_comm, T_compute) + ε` instead of their sum. When
+/// `T_comm > T_compute` the round is comm-bound and overlap can only
+/// hide the (smaller) compute term — shrink the payload (codec) or add
+/// bandwidth instead.
+pub fn overlapped_round_time(t_comm_s: f64, t_compute_s: f64, epsilon_s: f64) -> f64 {
+    t_comm_s.max(t_compute_s) + epsilon_s
+}
+
+/// Link constants fitted from a recorded `bench_ps_hotpath` summary
+/// (`advisor-backend --measured BENCH_ps_hotpath.json`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CalibratedLink {
+    /// Per-message latency α, seconds.
+    pub alpha_s: f64,
+    /// Per-link bandwidth, bytes/s.
+    pub bandwidth_bps: f64,
+    /// False when the bench rows were degenerate (missing or
+    /// non-positive rates, singular fit) and the defaults were kept.
+    pub fitted: bool,
+}
+
+/// Fit α and B from a recorded bench summary instead of trusting the
+/// defaults. The bench's dense ring and tree rows measure the same
+/// payload (`S = n_keys·elems_per_key·4` bytes) over the same links, so
+/// their round times form a 2×2 linear system in `(α, S/B)`:
+///
+/// ```text
+/// T_ring = 2(N−1)·α        + 2(N−1)/N·(S/B)
+/// T_tree = 2⌈log2 N⌉·α     + (N−1+⌈log2 N⌉)·(S/B)
+/// ```
+///
+/// with `T = 1 / rounds_per_s`. Invalid JSON is an error; missing keys
+/// or a degenerate fit (singular system, non-positive α or B — e.g.
+/// loopback rows where the model's latency term vanishes) falls back to
+/// [`DEFAULT_LINK_LATENCY_S`] / [`DEFAULT_LINK_BANDWIDTH_BPS`] with
+/// `fitted = false` so the caller can say so.
+pub fn calibrate_from_bench(json: &str) -> Result<CalibratedLink, String> {
+    let j = Json::parse(json)?;
+    let fallback = CalibratedLink {
+        alpha_s: DEFAULT_LINK_LATENCY_S,
+        bandwidth_bps: DEFAULT_LINK_BANDWIDTH_BPS,
+        fitted: false,
+    };
+    let num = |key: &str| j.get(key).and_then(Json::as_f64);
+    let (Some(n), Some(n_keys), Some(elems), Some(ring_rps), Some(tree_rps)) = (
+        num("allreduce_ranks"),
+        num("n_keys"),
+        num("elems_per_key"),
+        num("allreduce_ring_rounds_per_s"),
+        num("allreduce_tree_rounds_per_s"),
+    ) else {
+        return Ok(fallback);
+    };
+    if n < 2.0 || n_keys <= 0.0 || elems <= 0.0 || ring_rps <= 0.0 || tree_rps <= 0.0 {
+        return Ok(fallback);
+    }
+    let s = n_keys * elems * 4.0;
+    let t_ring = 1.0 / ring_rps;
+    let t_tree = 1.0 / tree_rps;
+    let depth = n.log2().ceil();
+    // T_ring = a1·α + b1·(S/B); T_tree = a2·α + b2·(S/B).
+    let (a1, b1) = (2.0 * (n - 1.0), 2.0 * (n - 1.0) / n);
+    let (a2, b2) = (2.0 * depth, n - 1.0 + depth);
+    let det = a1 * b2 - a2 * b1;
+    if det.abs() < 1e-12 {
+        return Ok(fallback);
+    }
+    let alpha_s = (t_ring * b2 - t_tree * b1) / det;
+    let s_over_b = (a1 * t_tree - a2 * t_ring) / det;
+    if alpha_s <= 0.0 || s_over_b <= 0.0 {
+        return Ok(fallback);
+    }
+    Ok(CalibratedLink { alpha_s, bandwidth_bps: s / s_over_b, fitted: true })
+}
+
 /// Collective topology from the cost model at the default link latency
 /// and bandwidth: ring for bandwidth-bound payloads, tree when the
 /// round is latency-bound (tiny payload relative to the fleet depth).
@@ -315,6 +420,10 @@ pub struct BackendChoice {
     pub topology: Topology,
     pub ring_time_s: f64,
     pub tree_time_s: f64,
+    /// Halving-doubling prediction, reported for comparison only — the
+    /// recommendation sticks to ring/tree (see [`hd_allreduce_time`]
+    /// for why the model flatters `hd`).
+    pub hd_time_s: f64,
     /// PS round I/O time at the Lemma 3.2 recommended fleet below.
     pub ps_time_s: f64,
     /// Lemma 3.2 server count the PS candidate is priced at.
@@ -339,13 +448,14 @@ pub fn choose_backend(
     let ps_time_s = ps_round_io_time(s_p_bytes, n_w, b_ps, n_ps);
     let ring_time_s = ring_allreduce_time(s_p_bytes, n_w, b_ps, alpha_s);
     let tree_time_s = tree_allreduce_time(s_p_bytes, n_w, b_ps, alpha_s);
+    let hd_time_s = hd_allreduce_time(s_p_bytes, n_w, b_ps, alpha_s);
     let (topology, coll_time) = if ring_time_s <= tree_time_s {
         (Topology::Ring, ring_time_s)
     } else {
         (Topology::Tree, tree_time_s)
     };
     let backend = if coll_time <= ps_time_s { Backend::Allreduce } else { Backend::Ps };
-    BackendChoice { backend, topology, ring_time_s, tree_time_s, ps_time_s, n_ps }
+    BackendChoice { backend, topology, ring_time_s, tree_time_s, hd_time_s, ps_time_s, n_ps }
 }
 
 #[cfg(test)]
@@ -650,6 +760,82 @@ mod tests {
         assert!(tengbe.ring_time_s < tengbe.ps_time_s);
         // The losing topology's prediction is still reported.
         assert!(tengbe.tree_time_s > tengbe.ring_time_s);
+    }
+
+    #[test]
+    fn hd_cost_model_pinned() {
+        // HD, 4 ranks, 100 MB over 1.25 GB/s at α = 100 µs:
+        // 2·2·1e-4 + (6/4)·100e6/1.25e9 = 4e-4 + 0.12 s.
+        let hd = hd_allreduce_time(100e6, 4, 1.25e9, 1e-4);
+        assert!((hd - 0.1204).abs() < 1e-9, "{hd}");
+        assert_eq!(hd_allreduce_time(100e6, 1, 1.25e9, 1e-4), 0.0);
+        // Same bandwidth term as the ring, fewer latency hops: the
+        // model never prices hd above the ring…
+        for n in [2usize, 3, 4, 8, 16] {
+            for s_p in [1e3, 1e6, 100e6] {
+                let hd = hd_allreduce_time(s_p, n, 1.25e9, 1e-4);
+                let ring = ring_allreduce_time(s_p, n, 1.25e9, 1e-4);
+                assert!(hd <= ring + 1e-12, "n={n} s_p={s_p}: {hd} > {ring}");
+            }
+        }
+        // …which is exactly why choose_backend reports it without
+        // letting it steal the pinned ring/tree recommendation.
+        let c = choose_backend(61e6 * 4.0, 4, 1.25e9, 2.0, 1e-4);
+        assert_eq!(c.topology, Topology::Ring);
+        assert!(c.hd_time_s <= c.ring_time_s);
+    }
+
+    #[test]
+    fn overlap_adjusted_round_time() {
+        // Compute-bound: the collective hides entirely behind T_C.
+        assert!((overlapped_round_time(0.3, 2.0, 1e-3) - 2.001).abs() < 1e-12);
+        // Comm-bound: overlap can only hide the compute term.
+        assert!((overlapped_round_time(2.9, 2.0, 1e-3) - 2.901).abs() < 1e-12);
+        // Always at least as good as the serial sum (for small ε).
+        assert!(overlapped_round_time(0.3, 2.0, 1e-3) <= 0.3 + 2.0);
+    }
+
+    #[test]
+    fn calibration_recovers_pinned_link_constants() {
+        // The checked-in fixture records dense ring/tree rounds/s
+        // generated from α = 50 µs, B = 2 GB/s at 4 ranks over the
+        // bench payload (16 keys × 2048 f32 = 131072 bytes):
+        // T_ring = 6α + 1.5·S/B, T_tree = 4α + 5·S/B.
+        let src = include_str!("../../tests/fixtures/bench_calibration.json");
+        let c = calibrate_from_bench(src).unwrap();
+        assert!(c.fitted);
+        assert!((c.alpha_s - 5e-5).abs() < 1e-9, "{}", c.alpha_s);
+        assert!((c.bandwidth_bps - 2e9).abs() < 1e4, "{}", c.bandwidth_bps);
+        // Pinned pick at the calibrated constants: AlexNet (244 MB),
+        // 4 workers, T_C = 2 s on a 2 GB/s link — the ring round
+        // (0.183 s) beats the one-server PS round (0.976 s).
+        let pick = choose_backend(61e6 * 4.0, 4, c.bandwidth_bps, 2.0, c.alpha_s);
+        assert_eq!(pick.backend, Backend::Allreduce);
+        assert_eq!(pick.topology, Topology::Ring);
+        assert_eq!(pick.n_ps, 1);
+        assert!(pick.hd_time_s < pick.ring_time_s);
+    }
+
+    #[test]
+    fn calibration_falls_back_on_degenerate_rows() {
+        // Invalid JSON is an error, not a silent default.
+        assert!(calibrate_from_bench("{not json").is_err());
+        // Missing keys: defaults, flagged unfitted.
+        let c = calibrate_from_bench("{}").unwrap();
+        assert!(!c.fitted);
+        assert_eq!(c.alpha_s, DEFAULT_LINK_LATENCY_S);
+        assert_eq!(c.bandwidth_bps, DEFAULT_LINK_BANDWIDTH_BPS);
+        // Non-positive rates: defaults too.
+        let z = r#"{"allreduce_ranks":4,"n_keys":16,"elems_per_key":2048,
+                    "allreduce_ring_rounds_per_s":0,
+                    "allreduce_tree_rounds_per_s":100}"#;
+        assert!(!calibrate_from_bench(z).unwrap().fitted);
+        // A fit implying negative latency (tree implausibly fast
+        // relative to ring): defaults rather than nonsense.
+        let neg = r#"{"allreduce_ranks":4,"n_keys":16,"elems_per_key":2048,
+                      "allreduce_ring_rounds_per_s":100,
+                      "allreduce_tree_rounds_per_s":100000}"#;
+        assert!(!calibrate_from_bench(neg).unwrap().fitted);
     }
 
     #[test]

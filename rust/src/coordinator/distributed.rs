@@ -157,6 +157,11 @@ pub struct DistConfig {
     /// Collective topology for the allreduce backend. `None` = let the
     /// Lemma 3.2 cost model pick (`advisor::lemmas::auto_topology`).
     pub topology: Option<Topology>,
+    /// Fixed-byte gradient buckets for the overlapped committer
+    /// (`--bucket-bytes`): commits ship asynchronously while the next
+    /// batch is prefetched and computed, bit-identical to the blocking
+    /// schedule. `None` = serial commits.
+    pub bucket_bytes: Option<usize>,
     /// Online straggler mitigation (PS sync only, opt-in): when the
     /// [`StragglerMonitor`] flags a worker as persistently slow, raise
     /// the barrier's backup-worker count so each step releases without
@@ -191,6 +196,7 @@ impl Default for DistConfig {
             read_deadline_ms: None,
             backend: Backend::Ps,
             topology: None,
+            bucket_bytes: None,
             straggler_backpressure: false,
         }
     }
@@ -1218,6 +1224,7 @@ pub fn run_distributed(artifacts_dir: &std::path::Path, cfg: &DistConfig) -> Res
                 log_every: 0,
                 codec: cfg.codec,
                 pull_codec: cfg.pull_codec,
+                bucket_bytes: cfg.bucket_bytes,
             };
             // Disjoint data streams per worker via the seed fork.
             let batcher = crate::coordinator::local::family_batcher(
@@ -1541,8 +1548,18 @@ fn run_allreduce(artifacts_dir: &std::path::Path, cfg: &DistConfig) -> Result<Di
                             return RankOutcome { err: Some(e), ..out };
                         }
                     }
-                    let mut agg =
-                        AllreduceAggregator::new(collective, opt, cfg.codec, adopted.clone());
+                    let mut agg = match cfg.bucket_bytes {
+                        None => {
+                            AllreduceAggregator::new(collective, opt, cfg.codec, adopted.clone())
+                        }
+                        Some(bb) => AllreduceAggregator::with_overlap(
+                            collective,
+                            opt,
+                            cfg.codec,
+                            adopted.clone(),
+                            bb,
+                        ),
+                    };
                     let pcfg = PipelineConfig {
                         lr: cfg.lr,
                         steps: cfg.steps_per_worker,
@@ -1552,6 +1569,7 @@ fn run_allreduce(artifacts_dir: &std::path::Path, cfg: &DistConfig) -> Result<Di
                         codec: cfg.codec,
                         // Pulls never hit a wire: params are rank-local.
                         pull_codec: PullCodec::None,
+                        bucket_bytes: cfg.bucket_bytes,
                     };
                     // Same per-rank seed fork as the PS path, so the two
                     // backends consume identical data streams.

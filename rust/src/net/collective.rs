@@ -32,16 +32,36 @@
 //!   PS fold — and broadcasts the dense sum back down. Every rank
 //!   applies the root's bytes, so the replicas stay bit-identical.
 //!   Latency is `O(log N)` rounds; the root pays `O(N·S)` inbound.
+//! * **Halving-doubling (`hd`), dense** — recursive halving
+//!   reduce-scatter (`log₂ N` rounds, partner `rank ^ s`, each round
+//!   exchanges half the live range) followed by recursive doubling
+//!   allgather (Shi et al. arXiv:1711.05979): bandwidth-optimal like
+//!   the ring (`2 (N−1)/N · S` per rank) but only `2 log₂ N` latency
+//!   terms instead of `2 (N−1)`. Non-power-of-two groups pre-combine
+//!   the extra ranks into their `rank − p` partner and broadcast the
+//!   result back after the core exchange. Each segment is finished by
+//!   exactly one rank and then copied, so replicas stay bit-identical.
+//! * **Halving-doubling, compressed** — compressed bodies cannot be
+//!   summed mid-exchange (stateful, non-linear codecs), so `hd` falls
+//!   back to the ring's contribution relay and the flat rank-order
+//!   fold — identical bytes to the compressed ring.
 //!
 //! # Fault behavior
 //!
 //! Collectives hang when a peer wedges — unless every receive is
-//! bounded. All links carry a read deadline (default
-//! [`DEFAULT_DEADLINE_MS`]); a dropped, severed or wedged peer turns
-//! into a clean `Err` from the collective call, which the coordinator's
-//! reform loop (`coordinator::distributed::run_allreduce`) handles by
-//! rebuilding the group from the surviving ranks' committed state. A
-//! collective op never blocks forever — chaos-tested with
+//! bounded. All links carry a read deadline: a per-chunk base (default
+//! [`DEFAULT_DEADLINE_MS`], settable via
+//! [`Collective::set_deadline`]) scaled by how many chunks — and, for
+//! the overlapped committer, how many concurrent buckets — may
+//! legitimately be queued ahead of any single receive, clamped to
+//! [`DEFAULT_DEADLINE_CAP_MS`] (a fixed deadline fires spuriously on
+//! large overlapped transfers; a scaled one stays proportional to the
+//! outstanding work while the cap keeps every wait bounded). A
+//! dropped, severed or wedged peer turns into a clean `Err` from the
+//! collective call, which the coordinator's reform loop
+//! (`coordinator::distributed::run_allreduce`) handles by rebuilding
+//! the group from the surviving ranks' committed state. A collective
+//! op never blocks forever — chaos-tested with
 //! `net::fault::FaultyTransport` in `tests/chaos.rs`.
 //!
 //! # Wire format
@@ -88,18 +108,30 @@ const P_GATHER: u8 = 1;
 /// deadlock head-to-head TCP sends.
 pub const DEFAULT_CHUNK_FLOATS: usize = 16_384;
 
-/// Default per-receive deadline on collective links. A wedged peer
-/// surfaces as an `Err` within this bound instead of hanging the
-/// collective.
+/// Default per-chunk receive-deadline base on collective links. A
+/// wedged peer surfaces as an `Err` within the scaled bound instead of
+/// hanging the collective.
 pub const DEFAULT_DEADLINE_MS: u64 = 5_000;
 
+/// Hard ceiling on any single effective receive deadline, however many
+/// chunks or overlapped buckets are in flight. Liveness stays bounded
+/// even for huge transfers.
+pub const DEFAULT_DEADLINE_CAP_MS: u64 = 60_000;
+
+/// Sentinel segment index for the halving-doubling pre-combine /
+/// post-broadcast exchanges with extra (non-power-of-two) ranks.
+const HD_PRE_SEG: usize = u32::MAX as usize;
+
 /// Collective topology. `Ring` is bandwidth-optimal; `Tree` is
-/// latency-optimal — `advisor::lemmas::choose_backend` picks from the
-/// Lemma 3.2 inputs.
+/// latency-optimal; `Hd` (recursive halving-doubling) matches the
+/// ring's bandwidth with only `2 log₂ N` latency terms —
+/// `advisor::lemmas::choose_backend` prices all three from the Lemma
+/// 3.2 inputs (`hd` is opt-in via `--topology hd`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Topology {
     Ring,
     Tree,
+    Hd,
 }
 
 impl Topology {
@@ -107,7 +139,8 @@ impl Topology {
         match s {
             "ring" => Ok(Topology::Ring),
             "tree" => Ok(Topology::Tree),
-            other => Err(format!("unknown topology {other:?} (ring|tree)")),
+            "hd" => Ok(Topology::Hd),
+            other => Err(format!("unknown topology {other:?} (ring|tree|hd)")),
         }
     }
 
@@ -115,6 +148,7 @@ impl Topology {
         match self {
             Topology::Ring => "ring",
             Topology::Tree => "tree",
+            Topology::Hd => "hd",
         }
     }
 }
@@ -167,6 +201,16 @@ pub struct Collective {
     topology: Topology,
     shapes: Vec<Vec<usize>>,
     chunk_floats: usize,
+    /// Per-chunk read-deadline base; the effective per-receive deadline
+    /// is scaled by the transfer's chunk count (see [`scaled_deadline`])
+    /// at every allreduce entry.
+    deadline_base: Duration,
+    /// Ceiling on any effective receive deadline.
+    deadline_cap: Duration,
+    /// Concurrent-bucket hint from the overlapped committer: with k
+    /// buckets queued behind one link, any single receive may
+    /// legitimately wait k times longer.
+    inflight_buckets: usize,
     reduce_bytes: u64,
     bcast_bytes: u64,
 }
@@ -199,6 +243,9 @@ impl Collective {
             topology,
             shapes,
             chunk_floats: DEFAULT_CHUNK_FLOATS,
+            deadline_base: d,
+            deadline_cap: Duration::from_millis(DEFAULT_DEADLINE_CAP_MS),
+            inflight_buckets: 1,
             reduce_bytes: 0,
             bcast_bytes: 0,
         })
@@ -206,12 +253,20 @@ impl Collective {
 
     /// Bound every receive on this rank's links. The collective's
     /// liveness guarantee — a wedged peer is an `Err`, never a hang —
-    /// is exactly this deadline.
+    /// is this per-chunk base, scaled per transfer by the in-flight
+    /// chunk/bucket count and clamped to the cap.
     pub fn set_deadline(&mut self, d: Duration) -> Result<(), String> {
+        self.deadline_base = d;
         for l in self.links.iter_mut().flatten() {
             l.set_read_deadline(Some(d))?;
         }
         Ok(())
+    }
+
+    /// Tell the deadline scaler how many buckets the overlapped
+    /// committer may queue concurrently (1 = serial commits).
+    pub fn set_inflight_buckets(&mut self, buckets: usize) {
+        self.inflight_buckets = buckets.max(1);
     }
 
     pub fn rank(&self) -> usize {
@@ -251,33 +306,80 @@ impl Collective {
         step: u64,
         mine: Vec<Contrib>,
     ) -> Result<Vec<Tensor>, String> {
-        if mine.len() != self.shapes.len() {
+        let keys: Vec<usize> = (0..self.shapes.len()).collect();
+        self.allreduce_sum_keys(step, &keys, mine)
+    }
+
+    /// Allreduce a **subset** of keys under a caller-chosen `tag` — the
+    /// bucketized entry point for the overlapped committer, which runs
+    /// one collective per bucket with `tag = (step << 16) | bucket`.
+    /// `keys` must be ascending, in-range indices into the registered
+    /// shape list, and `mine[i]` the contribution for `keys[i]`. Every
+    /// rank must call with the same `(tag, keys)` sequence; the tag
+    /// rides the wire frames exactly where the step used to, so any
+    /// desync between ranks is a clean decode error.
+    pub fn allreduce_sum_keys(
+        &mut self,
+        tag: u64,
+        keys: &[usize],
+        mine: Vec<Contrib>,
+    ) -> Result<Vec<Tensor>, String> {
+        if mine.len() != keys.len() {
             return Err(format!(
                 "rank {}: {} contributions for {} keys",
                 self.rank,
                 mine.len(),
-                self.shapes.len()
+                keys.len()
             ));
         }
+        if keys.windows(2).any(|w| w[0] >= w[1]) || keys.iter().any(|&k| k >= self.shapes.len()) {
+            return Err(format!("rank {}: bad key set {keys:?}", self.rank));
+        }
+        let sub: Vec<Vec<usize>> = keys.iter().map(|&k| self.shapes[k].clone()).collect();
         if self.n == 1 {
-            let shapes = self.shapes.clone();
-            return fold_rank_order(&shapes, &[mine]);
+            return fold_rank_order(&sub, &[mine]);
+        }
+        // Scale every link's receive deadline to what this transfer can
+        // legitimately queue ahead of a single receive: its own chunk
+        // count times however many buckets the committer keeps in
+        // flight. A fixed per-receive deadline fires spuriously on
+        // large overlapped transfers.
+        let total: usize = sub.iter().map(|s| s.iter().product::<usize>()).sum();
+        let d = scaled_deadline(
+            self.deadline_base,
+            self.deadline_cap,
+            self.chunk_floats,
+            total,
+            self.inflight_buckets,
+        );
+        for l in self.links.iter_mut().flatten() {
+            l.set_read_deadline(Some(d))?;
         }
         let all_dense = mine.iter().all(|c| matches!(c, Contrib::Dense(_)));
         match self.topology {
-            Topology::Ring if all_dense => self.ring_dense(step, mine),
-            Topology::Ring => self.ring_relay(step, mine),
-            Topology::Tree => self.tree_sum(step, mine),
+            Topology::Ring if all_dense => self.ring_dense(tag, &sub, mine),
+            Topology::Ring => self.ring_relay(tag, &sub, mine),
+            Topology::Hd if all_dense => self.hd_dense(tag, &sub, mine),
+            // Compressed bodies can't be summed mid-exchange, so hd
+            // falls back to the flat rank-order contribution relay —
+            // identical bytes to the compressed ring.
+            Topology::Hd => self.ring_relay(tag, &sub, mine),
+            Topology::Tree => self.tree_sum(tag, &sub, mine),
         }
     }
 
     // ---- dense ring: chunked reduce-scatter + allgather ------------
 
-    fn ring_dense(&mut self, step: u64, mine: Vec<Contrib>) -> Result<Vec<Tensor>, String> {
+    fn ring_dense(
+        &mut self,
+        tag: u64,
+        shapes: &[Vec<usize>],
+        mine: Vec<Contrib>,
+    ) -> Result<Vec<Tensor>, String> {
         let mut buf = Vec::new();
         for (k, c) in mine.iter().enumerate() {
             let Contrib::Dense(t) = c else { unreachable!() };
-            if t.shape() != &self.shapes[k][..] {
+            if t.shape() != &shapes[k][..] {
                 return Err(format!("rank {}: key {k} shape mismatch", self.rank));
             }
             buf.extend_from_slice(t.data());
@@ -289,23 +391,15 @@ impl Collective {
         for r in 0..n - 1 {
             let send_seg = (self.rank + n - r) % n;
             let recv_seg = (self.rank + n - r - 1) % n;
-            self.exchange_seg(step, P_REDUCE, send_seg, recv_seg, &mut buf, true)?;
+            self.exchange_seg(tag, P_REDUCE, send_seg, recv_seg, &mut buf, true)?;
         }
         // Allgather: finished segments circulate; receives overwrite.
         for r in 0..n - 1 {
             let send_seg = (self.rank + 1 + n - r) % n;
             let recv_seg = (self.rank + n - r) % n;
-            self.exchange_seg(step, P_GATHER, send_seg, recv_seg, &mut buf, false)?;
+            self.exchange_seg(tag, P_GATHER, send_seg, recv_seg, &mut buf, false)?;
         }
-        // Unflatten back into per-key tensors.
-        let mut out = Vec::with_capacity(self.shapes.len());
-        let mut off = 0;
-        for shape in &self.shapes {
-            let numel: usize = shape.iter().product();
-            out.push(Tensor::from_vec(shape, buf[off..off + numel].to_vec()));
-            off += numel;
-        }
-        Ok(out)
+        Ok(unflatten(shapes, &buf))
     }
 
     fn seg_bounds(&self, len: usize, seg: usize) -> (usize, usize) {
@@ -374,12 +468,17 @@ impl Collective {
 
     // ---- compressed ring: contribution relay -----------------------
 
-    fn ring_relay(&mut self, step: u64, mine: Vec<Contrib>) -> Result<Vec<Tensor>, String> {
+    fn ring_relay(
+        &mut self,
+        tag: u64,
+        shapes: &[Vec<usize>],
+        mine: Vec<Contrib>,
+    ) -> Result<Vec<Tensor>, String> {
         let n = self.n;
         let right = (self.rank + 1) % n;
         let left = (self.rank + n - 1) % n;
         // Send own contribution once; it relays all the way around.
-        let own = encode_contrib(step, self.rank as u32, &mine);
+        let own = encode_contrib(tag, self.rank as u32, &mine);
         self.link(right)?.send_with(&mut |w: &mut Writer| w.raw(&own))?;
         self.reduce_bytes += own.len() as u64;
         let mut per_rank: Vec<Option<Vec<Contrib>>> = (0..n).map(|_| None).collect();
@@ -394,7 +493,7 @@ impl Collective {
                     frame.extend_from_slice(body);
                     Ok(())
                 })?;
-            let (owner, entries) = decode_contrib(&frame, step, &self.shapes)?;
+            let (owner, entries) = decode_contrib(&frame, tag, shapes)?;
             if owner as usize != expect_owner {
                 return Err(format!(
                     "collective desync: contribution from rank {owner}, expected {expect_owner}"
@@ -412,13 +511,17 @@ impl Collective {
             .into_iter()
             .map(|c| c.ok_or_else(|| "collective desync: missing contribution".to_string()))
             .collect::<Result<_, _>>()?;
-        let shapes = self.shapes.clone();
-        fold_rank_order(&shapes, &ordered)
+        fold_rank_order(shapes, &ordered)
     }
 
     // ---- tree: gather contributions to root, broadcast dense sum ---
 
-    fn tree_sum(&mut self, step: u64, mine: Vec<Contrib>) -> Result<Vec<Tensor>, String> {
+    fn tree_sum(
+        &mut self,
+        tag: u64,
+        shapes: &[Vec<usize>],
+        mine: Vec<Contrib>,
+    ) -> Result<Vec<Tensor>, String> {
         let n = self.n;
         let parent = if self.rank == 0 { None } else { Some((self.rank - 1) / 2) };
         let children: Vec<usize> =
@@ -427,7 +530,7 @@ impl Collective {
         // subtree verbatim. The root decodes everything.
         let mut per_rank: Vec<Option<Vec<Contrib>>> = (0..n).map(|_| None).collect();
         if let Some(p) = parent {
-            let own = encode_contrib(step, self.rank as u32, &mine);
+            let own = encode_contrib(tag, self.rank as u32, &mine);
             self.link(p)?.send_with(&mut |w: &mut Writer| w.raw(&own))?;
             self.reduce_bytes += own.len() as u64;
         }
@@ -446,7 +549,7 @@ impl Collective {
                     self.link(p)?.send_with(&mut |w: &mut Writer| w.raw(&frame))?;
                     self.reduce_bytes += frame.len() as u64;
                 } else {
-                    let (owner, entries) = decode_contrib(&frame, step, &self.shapes)?;
+                    let (owner, entries) = decode_contrib(&frame, tag, shapes)?;
                     if (owner as usize) >= n || per_rank[owner as usize].is_some() {
                         return Err(format!(
                             "collective desync: duplicate contribution from rank {owner}"
@@ -463,8 +566,7 @@ impl Collective {
                 .into_iter()
                 .map(|c| c.ok_or_else(|| "collective desync: missing contribution".to_string()))
                 .collect::<Result<_, _>>()?;
-            let shapes = self.shapes.clone();
-            fold_rank_order(&shapes, &ordered)?
+            fold_rank_order(shapes, &ordered)?
         } else {
             let p = parent.unwrap();
             let mut frame = Vec::new();
@@ -475,10 +577,10 @@ impl Collective {
                     frame.extend_from_slice(body);
                     Ok(())
                 })?;
-            decode_sum(&frame, step, &self.shapes)?
+            decode_sum(&frame, tag, shapes)?
         };
         if !children.is_empty() {
-            let frame = encode_sum(step, &sums);
+            let frame = encode_sum(tag, &sums);
             for &c in &children {
                 self.link(c)?.send_with(&mut |w: &mut Writer| w.raw(&frame))?;
                 self.bcast_bytes += frame.len() as u64;
@@ -486,6 +588,253 @@ impl Collective {
         }
         Ok(sums)
     }
+
+    // ---- dense halving-doubling: recursive reduce-scatter + allgather
+
+    fn hd_dense(
+        &mut self,
+        tag: u64,
+        shapes: &[Vec<usize>],
+        mine: Vec<Contrib>,
+    ) -> Result<Vec<Tensor>, String> {
+        let mut buf = Vec::new();
+        for (k, c) in mine.iter().enumerate() {
+            let Contrib::Dense(t) = c else { unreachable!() };
+            if t.shape() != &shapes[k][..] {
+                return Err(format!("rank {}: key {k} shape mismatch", self.rank));
+            }
+            buf.extend_from_slice(t.data());
+        }
+        let n = self.n;
+        let p = pow2_floor(n);
+        let len = buf.len();
+        if self.rank >= p {
+            // Extra rank: fold the whole contribution into rank - p,
+            // then receive the finished result back. No core exchange.
+            let peer = self.rank - p;
+            self.exchange_range(
+                tag,
+                peer,
+                RangeXfer {
+                    phase: P_REDUCE,
+                    seg: HD_PRE_SEG,
+                    send: (0, len),
+                    recv: (0, 0),
+                    accumulate: false,
+                },
+                &mut buf,
+            )?;
+            self.exchange_range(
+                tag,
+                peer,
+                RangeXfer {
+                    phase: P_GATHER,
+                    seg: HD_PRE_SEG,
+                    send: (0, 0),
+                    recv: (0, len),
+                    accumulate: false,
+                },
+                &mut buf,
+            )?;
+            return Ok(unflatten(shapes, &buf));
+        }
+        if self.rank + p < n {
+            // Pre-combine the paired extra rank's full contribution so
+            // the core exchange sums all n ranks.
+            let peer = self.rank + p;
+            self.exchange_range(
+                tag,
+                peer,
+                RangeXfer {
+                    phase: P_REDUCE,
+                    seg: HD_PRE_SEG,
+                    send: (0, 0),
+                    recv: (0, len),
+                    accumulate: true,
+                },
+                &mut buf,
+            )?;
+        }
+        // Recursive halving reduce-scatter: each round swaps halves
+        // with partner `rank ^ s` and accumulates the kept half; after
+        // log2(p) rounds this rank owns one finished 1/p span.
+        let mut s = p / 2;
+        let mut round = 0usize;
+        while s >= 1 {
+            let partner = self.rank ^ s;
+            let send = hd_span(len, p, partner, s);
+            let recv = hd_span(len, p, self.rank, s);
+            self.exchange_range(
+                tag,
+                partner,
+                RangeXfer { phase: P_REDUCE, seg: round, send, recv, accumulate: true },
+                &mut buf,
+            )?;
+            s /= 2;
+            round += 1;
+        }
+        // Recursive doubling allgather: finished spans double each
+        // round; receives overwrite, so every replica copies the exact
+        // bytes the owning rank finished.
+        let mut s = 1;
+        let mut round = 0usize;
+        while s < p {
+            let partner = self.rank ^ s;
+            let send = hd_span(len, p, self.rank, s);
+            let recv = hd_span(len, p, partner, s);
+            self.exchange_range(
+                tag,
+                partner,
+                RangeXfer { phase: P_GATHER, seg: round, send, recv, accumulate: false },
+                &mut buf,
+            )?;
+            s *= 2;
+            round += 1;
+        }
+        if self.rank + p < n {
+            // Broadcast the finished result back to the extra rank.
+            let peer = self.rank + p;
+            self.exchange_range(
+                tag,
+                peer,
+                RangeXfer {
+                    phase: P_GATHER,
+                    seg: HD_PRE_SEG,
+                    send: (0, len),
+                    recv: (0, 0),
+                    accumulate: false,
+                },
+                &mut buf,
+            )?;
+        }
+        Ok(unflatten(shapes, &buf))
+    }
+
+    /// One pairwise halving-doubling round: stream `x.send` to `peer`
+    /// while receiving `x.recv` from the same peer, chunk-interleaved
+    /// exactly like [`Collective::exchange_seg`] so neither side ever
+    /// has more than one chunk outstanding past the socket buffer. An
+    /// empty range on either side is simply zero chunks.
+    fn exchange_range(
+        &mut self,
+        tag: u64,
+        peer: usize,
+        x: RangeXfer,
+        buf: &mut [f32],
+    ) -> Result<(), String> {
+        let (ss, se) = x.send;
+        let (rs, re) = x.recv;
+        let chunk = self.chunk_floats.max(1);
+        let n_send = (se - ss).div_ceil(chunk);
+        let n_recv = (re - rs).div_ceil(chunk);
+        for k in 0..n_send.max(n_recv) {
+            if k < n_send {
+                let a = ss + k * chunk;
+                let b = (a + chunk).min(se);
+                let slice = &buf[a..b];
+                let (seg32, k32, n32) = (x.seg as u32, k as u32, slice.len() as u32);
+                self.link(peer)?.send_with(&mut |w: &mut Writer| {
+                    w.u8(F_CHUNK);
+                    w.u64(tag);
+                    w.u8(x.phase);
+                    w.u32(seg32);
+                    w.u32(k32);
+                    w.u32(n32);
+                    w.f32_raw(slice);
+                })?;
+                let sent = 22 + 4 * (b - a) as u64;
+                if x.phase == P_REDUCE {
+                    self.reduce_bytes += sent;
+                } else {
+                    self.bcast_bytes += sent;
+                }
+            }
+            if k < n_recv {
+                let a = rs + k * chunk;
+                let b = (a + chunk).min(re);
+                let dst = &mut buf[a..b];
+                let mut res: Result<(), String> = Ok(());
+                self.links[peer]
+                    .as_mut()
+                    .ok_or_else(|| format!("no link to rank {peer}"))?
+                    .recv_with(&mut |body: &[u8]| {
+                        res = read_chunk_into(body, tag, x.phase, x.seg, k, dst, x.accumulate);
+                        Ok(())
+                    })?;
+                res?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One halving-doubling pairwise transfer: which range of the flat
+/// buffer goes out, which comes in, and how the incoming floats land.
+struct RangeXfer {
+    phase: u8,
+    seg: usize,
+    send: (usize, usize),
+    recv: (usize, usize),
+    accumulate: bool,
+}
+
+/// Effective per-receive deadline for one transfer: the per-chunk base
+/// times how many chunks (across all concurrently in-flight buckets)
+/// may legitimately be queued ahead of any single receive, clamped to
+/// `cap` so a misconfigured bucket count still fails in bounded time.
+fn scaled_deadline(
+    base: Duration,
+    cap: Duration,
+    chunk_floats: usize,
+    total_floats: usize,
+    inflight_buckets: usize,
+) -> Duration {
+    let chunks = total_floats.div_ceil(chunk_floats.max(1)).max(1) as u64;
+    let scale = chunks.saturating_mul(inflight_buckets.max(1) as u64);
+    let scale32 = u32::try_from(scale).unwrap_or(u32::MAX);
+    cap.min(base.saturating_mul(scale32))
+}
+
+/// Largest power of two ≤ `n` (the halving-doubling core group size).
+fn pow2_floor(n: usize) -> usize {
+    let mut p = 1;
+    while p * 2 <= n {
+        p *= 2;
+    }
+    p
+}
+
+/// The sub-range of a `len`-float buffer that rank `r` (of a `p`-rank
+/// power-of-two core) works on once the recursive bisection has
+/// reached stride `s_min`: bisect from the top, keeping the half that
+/// contains `r` at each stride. `s_min = 1` is rank `r`'s finished
+/// 1/p span; larger strides are the partially-merged spans the
+/// allgather sends back out.
+fn hd_span(len: usize, p: usize, r: usize, s_min: usize) -> (usize, usize) {
+    let (mut lo, mut hi) = (0, len);
+    let mut s = p / 2;
+    while s >= s_min.max(1) {
+        let mid = lo + (hi - lo) / 2;
+        if r & s == 0 {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+        s /= 2;
+    }
+    (lo, hi)
+}
+
+/// Split a flat float buffer back into per-key tensors.
+fn unflatten(shapes: &[Vec<usize>], buf: &[f32]) -> Vec<Tensor> {
+    let mut out = Vec::with_capacity(shapes.len());
+    let mut off = 0;
+    for shape in shapes {
+        let numel: usize = shape.iter().product();
+        out.push(Tensor::from_vec(shape, buf[off..off + numel].to_vec()));
+        off += numel;
+    }
+    out
 }
 
 /// Fold per-rank contributions flat, left-associated, in rank order —
@@ -854,25 +1203,180 @@ mod tests {
     #[test]
     fn wedged_peer_errors_within_deadline() {
         // Rank 1 of 3 never shows up: the survivors' collective calls
-        // must fail within the read deadline, never hang.
+        // must fail within the read deadline, never hang — on every
+        // topology.
         let n = 3;
-        let mut mesh = inproc_mesh(n);
-        let links2 = mesh.pop().unwrap();
-        let _links1 = mesh.pop().unwrap(); // rank 1 wedged (links held open)
-        let links0 = mesh.pop().unwrap();
+        for topology in [Topology::Ring, Topology::Tree, Topology::Hd] {
+            let mut mesh = inproc_mesh(n);
+            let links2 = mesh.pop().unwrap();
+            let _links1 = mesh.pop().unwrap(); // rank 1 wedged (links held open)
+            let links0 = mesh.pop().unwrap();
+            let shp = shapes();
+            std::thread::scope(|s| {
+                for (rank, links) in [(0usize, links0), (2usize, links2)] {
+                    let shp = shp.clone();
+                    s.spawn(move || {
+                        let mut c =
+                            Collective::new(rank, n, links, topology, shp.clone()).unwrap();
+                        c.set_deadline(Duration::from_millis(200)).unwrap();
+                        let res = c.allreduce_sum(0, int_contribs(rank, &shp));
+                        assert!(
+                            res.is_err(),
+                            "rank {rank} should fail on wedged peer ({topology:?})"
+                        );
+                    });
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn hd_sums_exactly() {
+        // Power-of-two and extra-rank group sizes, integer values so
+        // any association of the f32 sum is exact.
+        for n in [2usize, 4, 5] {
+            let expect = flat_fold(n, |r| int_contribs(r, &shapes()));
+            for res in run_ranks(n, Topology::Hd, |r| int_contribs(r, &shapes())) {
+                assert_eq!(res.unwrap(), expect, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn hd_ranks_agree_bitwise() {
+        // Arbitrary float values: every rank must return the exact
+        // same bytes (each span is finished by one rank, then copied).
+        let n = 6;
+        let make = |rank: usize| -> Vec<Contrib> {
+            let mut rng = Rng::new(0x5EED + rank as u64);
+            shapes()
+                .iter()
+                .map(|s| {
+                    let numel: usize = s.iter().product();
+                    let data: Vec<f32> =
+                        (0..numel).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+                    Contrib::Dense(Tensor::from_vec(s, data))
+                })
+                .collect()
+        };
+        let out: Vec<Vec<Tensor>> =
+            run_ranks(n, Topology::Hd, make).into_iter().map(|r| r.unwrap()).collect();
+        for got in &out[1..] {
+            assert_eq!(got, &out[0]);
+        }
+    }
+
+    #[test]
+    fn hd_compressed_matches_flat_fold() {
+        // Compressed contributions fall back to the rank-order relay:
+        // bitwise-identical to the compressed ring / PS sync fold.
+        let n = 3;
+        let make = |rank: usize| -> Vec<Contrib> {
+            shapes()
+                .iter()
+                .enumerate()
+                .map(|(k, s)| {
+                    let numel: usize = s.iter().product();
+                    let data: Vec<f32> =
+                        (0..numel).map(|i| (rank as f32 + 1.0) * (i as f32 - k as f32)).collect();
+                    Contrib::Comp(quantize8(&Tensor::from_vec(s, data), None))
+                })
+                .collect()
+        };
+        let expect = flat_fold(n, make);
+        for res in run_ranks(n, Topology::Hd, make) {
+            assert_eq!(res.unwrap(), expect);
+        }
+    }
+
+    #[test]
+    fn subset_allreduce_matches_per_key_sums() {
+        // The bucketized entry point: reduce keys [0, 2] only, under a
+        // caller-chosen tag, and get exactly those keys' sums back.
+        let n = 3;
         let shp = shapes();
+        let keys = [0usize, 2];
+        let full = flat_fold(n, |r| int_contribs(r, &shp));
+        let mesh = inproc_mesh(n);
         std::thread::scope(|s| {
-            for (rank, links) in [(0usize, links0), (2usize, links2)] {
-                let shp = shp.clone();
-                s.spawn(move || {
-                    let mut c =
-                        Collective::new(rank, n, links, Topology::Ring, shp.clone()).unwrap();
-                    c.set_deadline(Duration::from_millis(200)).unwrap();
-                    let res = c.allreduce_sum(0, int_contribs(rank, &shp));
-                    assert!(res.is_err(), "rank {rank} should fail on wedged peer");
-                });
+            let handles: Vec<_> = mesh
+                .into_iter()
+                .enumerate()
+                .map(|(rank, links)| {
+                    let shp = shp.clone();
+                    s.spawn(move || {
+                        let mut c =
+                            Collective::new(rank, n, links, Topology::Ring, shp.clone()).unwrap();
+                        c.set_deadline(Duration::from_secs(5)).unwrap();
+                        let all = int_contribs(rank, &shp);
+                        let mine: Vec<Contrib> = all
+                            .into_iter()
+                            .enumerate()
+                            .filter(|(k, _)| keys.contains(k))
+                            .map(|(_, c)| c)
+                            .collect();
+                        c.allreduce_sum_keys((9 << 16) | 1, &keys, mine).unwrap()
+                    })
+                })
+                .collect();
+            for h in handles {
+                let got = h.join().unwrap();
+                assert_eq!(got.len(), keys.len());
+                for (i, &k) in keys.iter().enumerate() {
+                    assert_eq!(got[i], full[k]);
+                }
             }
         });
+    }
+
+    #[test]
+    fn bad_key_sets_are_rejected() {
+        let shp = shapes();
+        let mut c = Collective::new(0, 1, vec![None], Topology::Ring, shp.clone()).unwrap();
+        let mine = vec![Contrib::Dense(Tensor::zeros(&shp[0]))];
+        assert!(c.allreduce_sum_keys(0, &[7], mine.clone()).is_err(), "out of range");
+        let two = vec![
+            Contrib::Dense(Tensor::zeros(&shp[1])),
+            Contrib::Dense(Tensor::zeros(&shp[0])),
+        ];
+        assert!(c.allreduce_sum_keys(0, &[1, 0], two).is_err(), "not ascending");
+        assert!(c.allreduce_sum_keys(0, &[0, 1], mine).is_err(), "count mismatch");
+    }
+
+    #[test]
+    fn scaled_deadline_grows_with_chunks_and_buckets() {
+        let base = Duration::from_millis(100);
+        let cap = Duration::from_secs(60);
+        // One chunk, one bucket: the base.
+        assert_eq!(scaled_deadline(base, cap, 16384, 100, 1), base);
+        // Eight chunks: 8x the base.
+        assert_eq!(
+            scaled_deadline(base, cap, 16384, 16384 * 8, 1),
+            Duration::from_millis(800)
+        );
+        // Four buckets in flight multiply again.
+        assert_eq!(
+            scaled_deadline(base, cap, 16384, 16384 * 8, 4),
+            Duration::from_millis(3200)
+        );
+        // The cap bounds runaway scaling.
+        assert_eq!(scaled_deadline(base, cap, 1, usize::MAX, 64), cap);
+    }
+
+    #[test]
+    fn hd_span_partitions_the_buffer() {
+        // At s_min = 1 the p spans tile [0, len) in rank order of the
+        // bit-reversal walk — verify they are disjoint and complete.
+        let (len, p) = (103usize, 8usize);
+        let mut covered = vec![false; len];
+        for r in 0..p {
+            let (lo, hi) = hd_span(len, p, r, 1);
+            for c in &mut covered[lo..hi] {
+                assert!(!*c, "overlap at rank {r}");
+                *c = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c), "spans must cover the buffer");
     }
 
     #[test]

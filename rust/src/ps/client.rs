@@ -100,6 +100,9 @@ pub struct PsClient {
     pull_recon: BTreeMap<u32, Vec<f32>>,
     /// Next push sequence number (monotone per worker).
     seq: u64,
+    /// Sequence number of a `push_send` whose acks have not been
+    /// collected yet (`push_wait` pending).
+    push_inflight: Option<u64>,
     /// Extra attempts per op after the first (0 = fail fast).
     retry_limit: usize,
     reconnect: Option<Reconnect>,
@@ -144,6 +147,7 @@ impl PsClient {
             pull_base: vec![0; n_servers],
             pull_recon: BTreeMap::new(),
             seq: 0,
+            push_inflight: None,
             retry_limit: 0,
             reconnect: None,
             epoch_source: None,
@@ -441,8 +445,25 @@ impl PsClient {
     /// identical frames under the same seq (the server deduplicates).
     /// Either way the encoded body bytes are added to
     /// [`push_wire_bytes`](Self::push_wire_bytes).
+    ///
+    /// Exactly [`push_send`](Self::push_send) followed by
+    /// [`push_wait`](Self::push_wait) — the overlapped committer calls
+    /// the halves itself so the ack round-trips hide behind the next
+    /// batch's prefetch and compute.
     pub fn push(&mut self, step: u64, grads: &[Tensor]) -> Result<(), String> {
+        self.push_send(step, grads)?;
+        self.push_wait(step, grads)
+    }
+
+    /// First half of a push: compress/stage this step's gradients and
+    /// send every server its frame, without waiting for a single ack.
+    /// Must be paired with [`push_wait`](Self::push_wait) before the
+    /// next push or pull.
+    pub fn push_send(&mut self, step: u64, grads: &[Tensor]) -> Result<(), String> {
         assert_eq!(grads.len(), self.router.n_keys());
+        if self.push_inflight.is_some() {
+            return Err("push already in flight (missing push_wait)".into());
+        }
         let seq = self.seq;
         self.seq += 1;
         let n_servers = self.transports.len();
@@ -480,52 +501,78 @@ impl PsClient {
             transports, router, staged, reconnect, retry_limit, epoch_source, read_deadline, ..
         } = &mut *self;
         let deadline = *read_deadline;
-        // Phase 1: send every server's frame (transfers overlap on the
-        // wire); phase 2: collect acks, replaying through reconnects on
-        // transport errors.
-        for phase in 0..2 {
-            for (s, t) in transports.iter_mut().enumerate() {
-                let keys = router.keys_of(s);
-                if keys.is_empty() {
-                    continue;
-                }
-                let staged_s: &[(u32, Compressed)] =
-                    if dense { &[] } else { &staged[s] };
-                let mut encode = |w: &mut Writer| {
-                    let start = w.len();
-                    // Epoch is stamped per encode, not per push: a
-                    // replay after re-resolution must carry the fresh
-                    // epoch even though the body bytes are identical.
-                    let epoch = stamp(epoch_source);
-                    if dense {
-                        wire::push_header(w, worker, step, seq, epoch, keys.len() as u32);
-                        for &k in keys {
-                            wire::entry(w, k, &grads[k as usize]);
-                        }
-                    } else {
-                        wire::compressed_push_header(
-                            w,
-                            worker,
-                            step,
-                            seq,
-                            epoch,
-                            staged_s.len() as u32,
-                        );
-                        for (k, c) in staged_s {
-                            wire::compressed_entry(w, *k, c);
-                        }
+        for (s, t) in transports.iter_mut().enumerate() {
+            let keys = router.keys_of(s);
+            if keys.is_empty() {
+                continue;
+            }
+            let staged_s: &[(u32, Compressed)] = if dense { &[] } else { &staged[s] };
+            let mut encode = |w: &mut Writer| {
+                let start = w.len();
+                // Epoch is stamped per encode, not per push: a replay
+                // after re-resolution must carry the fresh epoch even
+                // though the body bytes are identical.
+                let epoch = stamp(epoch_source);
+                if dense {
+                    wire::push_header(w, worker, step, seq, epoch, keys.len() as u32);
+                    for &k in keys {
+                        wire::entry(w, k, &grads[k as usize]);
                     }
-                    sent += (w.len() - start) as u64;
-                };
-                if phase == 0 {
-                    send_retry(t, reconnect, *retry_limit, deadline, s, &mut encode)?;
                 } else {
-                    match recv_retry(t, reconnect, *retry_limit, deadline, s, &mut encode)? {
-                        Message::PushAck { .. } => {}
-                        Message::Error { what } => return Err(format!("server {s}: {what}")),
-                        m => return Err(format!("unexpected push reply {m:?}")),
+                    wire::compressed_push_header(w, worker, step, seq, epoch, staged_s.len() as u32);
+                    for (k, c) in staged_s {
+                        wire::compressed_entry(w, *k, c);
                     }
                 }
+                sent += (w.len() - start) as u64;
+            };
+            send_retry(t, reconnect, *retry_limit, deadline, s, &mut encode)?;
+        }
+        self.push_wire_bytes += sent;
+        self.push_inflight = Some(seq);
+        Ok(())
+    }
+
+    /// Second half of a push: collect every server's ack, replaying
+    /// the frame through reconnects on transport errors. `grads` must
+    /// be the tensors handed to the matching
+    /// [`push_send`](Self::push_send) — a dense replay re-encodes from
+    /// them (compressed replays reuse the staged entries).
+    pub fn push_wait(&mut self, step: u64, grads: &[Tensor]) -> Result<(), String> {
+        let seq = self.push_inflight.take().ok_or("no push in flight (missing push_send)")?;
+        let worker = self.worker_id;
+        let dense = self.codec == CodecKind::None;
+        let mut sent = 0u64;
+        let PsClient {
+            transports, router, staged, reconnect, retry_limit, epoch_source, read_deadline, ..
+        } = &mut *self;
+        let deadline = *read_deadline;
+        for (s, t) in transports.iter_mut().enumerate() {
+            let keys = router.keys_of(s);
+            if keys.is_empty() {
+                continue;
+            }
+            let staged_s: &[(u32, Compressed)] = if dense { &[] } else { &staged[s] };
+            let mut encode = |w: &mut Writer| {
+                let start = w.len();
+                let epoch = stamp(epoch_source);
+                if dense {
+                    wire::push_header(w, worker, step, seq, epoch, keys.len() as u32);
+                    for &k in keys {
+                        wire::entry(w, k, &grads[k as usize]);
+                    }
+                } else {
+                    wire::compressed_push_header(w, worker, step, seq, epoch, staged_s.len() as u32);
+                    for (k, c) in staged_s {
+                        wire::compressed_entry(w, *k, c);
+                    }
+                }
+                sent += (w.len() - start) as u64;
+            };
+            match recv_retry(t, reconnect, *retry_limit, deadline, s, &mut encode)? {
+                Message::PushAck { .. } => {}
+                Message::Error { what } => return Err(format!("server {s}: {what}")),
+                m => return Err(format!("unexpected push reply {m:?}")),
             }
         }
         self.push_wire_bytes += sent;

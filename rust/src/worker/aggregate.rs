@@ -9,6 +9,22 @@
 //! which backend it is talking to; `train-dist --backend ps|allreduce`
 //! picks the implementation.
 //!
+//! # Overlapping communication with computation
+//!
+//! Besides the blocking `commit`, the trait exposes a
+//! [`start_commit`](GradAggregator::start_commit) /
+//! [`wait_all`](GradAggregator::wait_all) split so the pipeline can
+//! ship this step's gradients while it already prefetches and computes
+//! the next batch. With `--bucket-bytes` the allreduce backend
+//! partitions the parameter list into fixed-byte buckets
+//! (layer-order-reversed, so the last-computed gradients ship first)
+//! and runs each bucket's collective on a dedicated comms thread:
+//! bucket *i* streams while the worker still compresses bucket *i+1*.
+//! The PS backend defers its ack collection and sync barrier instead.
+//! Either way the arithmetic — fold order, scale, optimizer apply — is
+//! byte-for-byte the blocking path's, so overlap-on and overlap-off
+//! runs produce bit-identical parameters (pinned by the parity tests).
+//!
 //! # Parity contract
 //!
 //! The allreduce backend reproduces the PS sync arithmetic exactly:
@@ -50,6 +66,30 @@ pub trait GradAggregator {
         grads: &[Tensor],
     ) -> Result<(), String>;
 
+    /// Begin committing one step's gradients without waiting for
+    /// durability — the overlap half-call. The default is the blocking
+    /// [`commit`](GradAggregator::commit); overlapped backends ship
+    /// buckets to a comms thread (or defer ack collection) and return
+    /// while the wire is still busy. Callers MUST `wait_all` before
+    /// the next `refresh` and before reading `params`.
+    fn start_commit(
+        &mut self,
+        step: u64,
+        params: &mut Vec<Tensor>,
+        grads: &[Tensor],
+    ) -> Result<(), String> {
+        self.commit(step, params, grads)
+    }
+
+    /// Wait until every in-flight `start_commit` is durable and
+    /// applied. All-or-nothing: on `Err` no partial bucket has been
+    /// applied — `params` still hold the last committed step, so a
+    /// group reform replays the failed step exactly once, never twice.
+    fn wait_all(&mut self, params: &mut Vec<Tensor>) -> Result<(), String> {
+        let _ = params;
+        Ok(())
+    }
+
     /// Cumulative gradient-direction wire bytes sent by this worker.
     fn push_wire_bytes(&self) -> u64;
 
@@ -59,15 +99,23 @@ pub trait GradAggregator {
 
 /// The parameter-server backend: pull from the fleet, push to it,
 /// barrier in sync mode. Pure delegation — codec staging, retries,
-/// reconnects and epoch fencing all live in [`PsClient`].
+/// reconnects and epoch fencing all live in [`PsClient`]. The overlap
+/// split maps onto the push's two wire phases: `start_commit` sends
+/// the (compressed) frames to every shard, `wait_all` collects the
+/// acks and runs the sync barrier — so the ack round-trips hide behind
+/// the next batch's prefetch and forward pass.
 pub struct PsAggregator<'a> {
     client: &'a mut PsClient,
     sync: bool,
+    /// An in-flight `start_commit`: step plus a gradient snapshot,
+    /// kept because a reconnect mid-wait must replay the dense push
+    /// from the original tensors.
+    pending: Option<(u64, Vec<Tensor>)>,
 }
 
 impl<'a> PsAggregator<'a> {
     pub fn new(client: &'a mut PsClient, sync: bool) -> Self {
-        PsAggregator { client, sync }
+        PsAggregator { client, sync, pending: None }
     }
 }
 
@@ -89,6 +137,31 @@ impl GradAggregator for PsAggregator<'_> {
         Ok(())
     }
 
+    fn start_commit(
+        &mut self,
+        step: u64,
+        _params: &mut Vec<Tensor>,
+        grads: &[Tensor],
+    ) -> Result<(), String> {
+        if self.pending.is_some() {
+            return Err("ps push already in flight (missing wait_all)".into());
+        }
+        self.client.push_send(step, grads)?;
+        self.pending = Some((step, grads.to_vec()));
+        Ok(())
+    }
+
+    fn wait_all(&mut self, _params: &mut Vec<Tensor>) -> Result<(), String> {
+        let Some((step, grads)) = self.pending.take() else {
+            return Ok(());
+        };
+        self.client.push_wait(step, &grads)?;
+        if self.sync {
+            self.client.barrier(step)?;
+        }
+        Ok(())
+    }
+
     fn push_wire_bytes(&self) -> u64 {
         self.client.push_wire_bytes()
     }
@@ -98,13 +171,24 @@ impl GradAggregator for PsAggregator<'_> {
     }
 }
 
+/// How the allreduce backend runs its collectives: inline on the
+/// worker thread (serial, the PR 8 behavior), or bucketized on a
+/// dedicated comms thread so communication overlaps compute.
+enum Driver {
+    Serial(Collective),
+    #[cfg(feature = "overlap-commit")]
+    Overlap(overlap::CommitPipe),
+}
+
 /// The collective backend: every rank holds the full model, allreduces
 /// its (optionally compressed) gradient each step and applies the
 /// identical mean locally through the same [`Optimizer`] arithmetic the
 /// PS shard store uses. Inherently synchronous — the collective *is*
 /// the barrier.
 pub struct AllreduceAggregator {
-    collective: Collective,
+    driver: Driver,
+    rank: usize,
+    n_ranks: usize,
     optimizer: Optimizer,
     /// Per-key momentum state, lazily created like the shard store's
     /// velocity map — identical update order, identical bytes.
@@ -120,6 +204,8 @@ pub struct AllreduceAggregator {
     /// Initial parameters, handed to the loop's buffer on the first
     /// `refresh`. All ranks must be constructed with identical init.
     init: Option<Vec<Tensor>>,
+    /// Key buckets for the overlapped committer (empty when serial).
+    buckets: Vec<Vec<usize>>,
 }
 
 impl AllreduceAggregator {
@@ -130,35 +216,109 @@ impl AllreduceAggregator {
         init: Vec<Tensor>,
     ) -> Self {
         let n_keys = init.len();
-        let rank = collective.rank() as u64;
+        let rank = collective.rank();
+        let n_ranks = collective.n_ranks();
         AllreduceAggregator {
-            collective,
+            driver: Driver::Serial(collective),
+            rank,
+            n_ranks,
             optimizer,
             velocity: (0..n_keys).map(|_| None).collect(),
             codec,
             topk: BTreeMap::new(),
-            sr_rng: Rng::new(0xC0DE_C5EE_D000_0000 ^ (rank + 1)),
+            sr_rng: Rng::new(0xC0DE_C5EE_D000_0000 ^ (rank as u64 + 1)),
             init: Some(init),
+            buckets: Vec::new(),
         }
     }
 
+    /// Build the overlapped committer: partition keys into fixed-byte
+    /// buckets and hand the collective to a dedicated comms thread.
+    /// Results are bit-identical to [`AllreduceAggregator::new`] —
+    /// only the schedule changes.
+    #[cfg(feature = "overlap-commit")]
+    pub fn with_overlap(
+        mut collective: Collective,
+        optimizer: Optimizer,
+        codec: CodecKind,
+        init: Vec<Tensor>,
+        bucket_bytes: usize,
+    ) -> Self {
+        let shapes: Vec<Vec<usize>> = init.iter().map(|t| t.shape().to_vec()).collect();
+        let buckets = partition_buckets(&shapes, bucket_bytes);
+        let n_keys = init.len();
+        let rank = collective.rank();
+        let n_ranks = collective.n_ranks();
+        collective.set_inflight_buckets(buckets.len());
+        AllreduceAggregator {
+            driver: Driver::Overlap(overlap::CommitPipe::spawn(collective)),
+            rank,
+            n_ranks,
+            optimizer,
+            velocity: (0..n_keys).map(|_| None).collect(),
+            codec,
+            topk: BTreeMap::new(),
+            sr_rng: Rng::new(0xC0DE_C5EE_D000_0000 ^ (rank as u64 + 1)),
+            init: Some(init),
+            buckets,
+        }
+    }
+
+    /// Without the `overlap-commit` feature the committer stays
+    /// serial — same bytes, no comms thread.
+    #[cfg(not(feature = "overlap-commit"))]
+    pub fn with_overlap(
+        collective: Collective,
+        optimizer: Optimizer,
+        codec: CodecKind,
+        init: Vec<Tensor>,
+        bucket_bytes: usize,
+    ) -> Self {
+        let _ = bucket_bytes;
+        Self::new(collective, optimizer, codec, init)
+    }
+
     pub fn rank(&self) -> usize {
-        self.collective.rank()
+        self.rank
+    }
+
+    /// The key buckets the overlapped committer ships, in send order
+    /// (empty for the serial committer).
+    pub fn buckets(&self) -> &[Vec<usize>] {
+        &self.buckets
+    }
+
+    /// Overlap accounting: `(blocked_s, comm_s)` — seconds the worker
+    /// spent stalled in `wait_all` vs seconds the comms thread spent
+    /// inside collectives. `blocked/comm` is the fraction of
+    /// communication NOT hidden behind compute (1.0 = no overlap, →0 =
+    /// fully hidden). Zeros for the serial committer.
+    pub fn overlap_stats(&self) -> (f64, f64) {
+        match &self.driver {
+            Driver::Serial(_) => (0.0, 0.0),
+            #[cfg(feature = "overlap-commit")]
+            Driver::Overlap(p) => (p.blocked_s(), p.comm_s()),
+        }
     }
 
     fn contribution(&mut self, key: u32, g: &Tensor) -> Contrib {
-        match self.codec {
-            CodecKind::None => Contrib::Dense(g.clone()),
-            CodecKind::TopK { fraction } => {
-                let c = self
-                    .topk
-                    .entry(key)
-                    .or_insert_with(|| TopK::new(fraction, g.len()))
-                    .compress(g);
-                Contrib::Comp(c)
+        compress_one(self.codec, &mut self.topk, &mut self.sr_rng, key, g)
+    }
+
+    /// Scale-then-apply one key's allreduced sum, byte-for-byte the PS
+    /// barrier release (`apply_mean` -> `apply_grad`). All optimizer
+    /// state is per-key, so the order buckets land in cannot change a
+    /// single byte of the result.
+    fn apply_key(&mut self, params: &mut [Tensor], k: usize, mut sum: Tensor) {
+        sum.scale(1.0 / self.n_ranks as f32);
+        match self.optimizer {
+            Optimizer::Sgd { lr } => params[k].axpy(-lr, &sum),
+            Optimizer::Momentum { lr, mu } => {
+                let v = self.velocity[k].get_or_insert_with(|| Tensor::zeros(sum.shape()));
+                v.scale(mu);
+                v.axpy(1.0, &sum);
+                params[k].axpy(-lr, v);
             }
-            CodecKind::Quant8 => Contrib::Comp(quantize8(g, None)),
-            CodecKind::Quant8Sr => Contrib::Comp(quantize8(g, Some(&mut self.sr_rng))),
         }
     }
 }
@@ -182,36 +342,284 @@ impl GradAggregator for AllreduceAggregator {
         params: &mut Vec<Tensor>,
         grads: &[Tensor],
     ) -> Result<(), String> {
+        #[cfg(feature = "overlap-commit")]
+        if matches!(self.driver, Driver::Overlap(_)) {
+            self.start_commit(step, params, grads)?;
+            return self.wait_all(params);
+        }
         if grads.len() != params.len() {
             return Err(format!("{} grads for {} params", grads.len(), params.len()));
         }
         let contribs: Vec<Contrib> =
             grads.iter().enumerate().map(|(k, g)| self.contribution(k as u32, g)).collect();
-        let sums = self.collective.allreduce_sum(step, contribs)?;
-        let n = self.collective.n_ranks() as f32;
-        for (k, mut sum) in sums.into_iter().enumerate() {
-            // Scale-then-apply, byte-for-byte the PS barrier release
-            // (`apply_mean` -> `apply_grad`).
-            sum.scale(1.0 / n);
-            match self.optimizer {
-                Optimizer::Sgd { lr } => params[k].axpy(-lr, &sum),
-                Optimizer::Momentum { lr, mu } => {
-                    let v = self.velocity[k].get_or_insert_with(|| Tensor::zeros(sum.shape()));
-                    v.scale(mu);
-                    v.axpy(1.0, &sum);
-                    params[k].axpy(-lr, v);
-                }
-            }
+        let sums = match &mut self.driver {
+            Driver::Serial(c) => c.allreduce_sum(step, contribs)?,
+            #[cfg(feature = "overlap-commit")]
+            Driver::Overlap(_) => unreachable!("overlapped commit handled above"),
+        };
+        for (k, sum) in sums.into_iter().enumerate() {
+            self.apply_key(params, k, sum);
         }
         Ok(())
     }
 
+    fn start_commit(
+        &mut self,
+        step: u64,
+        params: &mut Vec<Tensor>,
+        grads: &[Tensor],
+    ) -> Result<(), String> {
+        if grads.len() != params.len() {
+            return Err(format!("{} grads for {} params", grads.len(), params.len()));
+        }
+        #[cfg(feature = "overlap-commit")]
+        {
+            let AllreduceAggregator { driver, buckets, codec, topk, sr_rng, .. } = self;
+            if let Driver::Overlap(pipe) = driver {
+                // Compress bucket-by-bucket and enqueue each one as
+                // soon as it is ready: bucket i's collective streams
+                // on the comms thread while bucket i+1 is still being
+                // folded here. Tags carry (step, bucket) so any
+                // cross-rank desync is a clean decode error.
+                for (b, keys) in buckets.iter().enumerate() {
+                    let contribs: Vec<Contrib> = keys
+                        .iter()
+                        .map(|&k| compress_one(*codec, topk, sr_rng, k as u32, &grads[k]))
+                        .collect();
+                    pipe.send(overlap::Job {
+                        tag: (step << 16) | b as u64,
+                        keys: keys.clone(),
+                        contribs,
+                    })?;
+                }
+                return Ok(());
+            }
+        }
+        self.commit(step, params, grads)
+    }
+
+    fn wait_all(&mut self, params: &mut Vec<Tensor>) -> Result<(), String> {
+        #[cfg(feature = "overlap-commit")]
+        if let Driver::Overlap(pipe) = &mut self.driver {
+            let drained = pipe.drain()?;
+            for (keys, sums) in drained {
+                for (&k, sum) in keys.iter().zip(sums) {
+                    self.apply_key(params, k, sum);
+                }
+            }
+            return Ok(());
+        }
+        let _ = params;
+        Ok(())
+    }
+
     fn push_wire_bytes(&self) -> u64 {
-        self.collective.reduce_wire_bytes()
+        match &self.driver {
+            Driver::Serial(c) => c.reduce_wire_bytes(),
+            #[cfg(feature = "overlap-commit")]
+            Driver::Overlap(p) => p.reduce_bytes(),
+        }
     }
 
     fn pull_wire_bytes(&self) -> u64 {
-        self.collective.bcast_wire_bytes()
+        match &self.driver {
+            Driver::Serial(c) => c.bcast_wire_bytes(),
+            #[cfg(feature = "overlap-commit")]
+            Driver::Overlap(p) => p.bcast_bytes(),
+        }
+    }
+}
+
+/// Partition the key list into fixed-byte buckets,
+/// **layer-order-reversed**: the bucket holding the highest-numbered
+/// keys — the gradients backprop finishes first — ships first. Keys
+/// inside a bucket stay ascending (the collective requires it); a
+/// single key larger than the cap gets a bucket of its own.
+pub fn partition_buckets(shapes: &[Vec<usize>], bucket_bytes: usize) -> Vec<Vec<usize>> {
+    let cap = bucket_bytes.max(1);
+    let mut buckets: Vec<Vec<usize>> = Vec::new();
+    let mut cur: Vec<usize> = Vec::new();
+    let mut cur_bytes = 0usize;
+    for k in (0..shapes.len()).rev() {
+        let bytes = 4 * shapes[k].iter().product::<usize>();
+        if !cur.is_empty() && cur_bytes + bytes > cap {
+            cur.sort_unstable();
+            buckets.push(std::mem::take(&mut cur));
+            cur_bytes = 0;
+        }
+        cur.push(k);
+        cur_bytes += bytes;
+    }
+    if !cur.is_empty() {
+        cur.sort_unstable();
+        buckets.push(cur);
+    }
+    buckets
+}
+
+/// One key's codec transform — the exact arithmetic and per-key state
+/// (`PsClient`-identical) whether called from the serial committer or
+/// the bucketized one. NOTE: `Quant8Sr` draws from a single sequential
+/// RNG stream, so it alone is sensitive to key *order*; the bucketized
+/// committer compresses in reversed-bucket order and therefore only
+/// pins bitwise overlap parity for `none`/`quant8`/`topk`.
+fn compress_one(
+    codec: CodecKind,
+    topk: &mut BTreeMap<u32, TopK>,
+    sr_rng: &mut Rng,
+    key: u32,
+    g: &Tensor,
+) -> Contrib {
+    match codec {
+        CodecKind::None => Contrib::Dense(g.clone()),
+        CodecKind::TopK { fraction } => {
+            let c = topk.entry(key).or_insert_with(|| TopK::new(fraction, g.len())).compress(g);
+            Contrib::Comp(c)
+        }
+        CodecKind::Quant8 => Contrib::Comp(quantize8(g, None)),
+        CodecKind::Quant8Sr => Contrib::Comp(quantize8(g, Some(sr_rng))),
+    }
+}
+
+/// The dedicated comms thread behind the overlapped allreduce
+/// committer: a job queue of (tag, keys, contributions) buckets and a
+/// reply queue of summed tensors. The worker thread never touches the
+/// wire; the comms thread never touches parameters.
+#[cfg(feature = "overlap-commit")]
+mod overlap {
+    use std::sync::mpsc::{channel, Receiver, Sender};
+    use std::thread::JoinHandle;
+    use std::time::Instant;
+
+    use crate::net::collective::{Collective, Contrib};
+    use crate::tensor::Tensor;
+
+    /// One bucket's collective, queued to the comms thread.
+    pub struct Job {
+        pub tag: u64,
+        pub keys: Vec<usize>,
+        pub contribs: Vec<Contrib>,
+    }
+
+    struct Reply {
+        keys: Vec<usize>,
+        sums: Result<Vec<Tensor>, String>,
+        comm_s: f64,
+        reduce_bytes: u64,
+        bcast_bytes: u64,
+    }
+
+    pub struct CommitPipe {
+        tx: Option<Sender<Job>>,
+        rx: Receiver<Reply>,
+        handle: Option<JoinHandle<()>>,
+        in_flight: usize,
+        blocked_s: f64,
+        comm_s: f64,
+        reduce_bytes: u64,
+        bcast_bytes: u64,
+    }
+
+    impl CommitPipe {
+        pub fn spawn(mut collective: Collective) -> Self {
+            let (jtx, jrx) = channel::<Job>();
+            let (rtx, rrx) = channel::<Reply>();
+            let handle = std::thread::Builder::new()
+                .name("allreduce-comms".into())
+                .spawn(move || {
+                    while let Ok(job) = jrx.recv() {
+                        let t0 = Instant::now();
+                        let sums = collective.allreduce_sum_keys(job.tag, &job.keys, job.contribs);
+                        let reply = Reply {
+                            keys: job.keys,
+                            sums,
+                            comm_s: t0.elapsed().as_secs_f64(),
+                            reduce_bytes: collective.reduce_wire_bytes(),
+                            bcast_bytes: collective.bcast_wire_bytes(),
+                        };
+                        if rtx.send(reply).is_err() {
+                            break;
+                        }
+                    }
+                })
+                .expect("spawn allreduce comms thread");
+            CommitPipe {
+                tx: Some(jtx),
+                rx: rrx,
+                handle: Some(handle),
+                in_flight: 0,
+                blocked_s: 0.0,
+                comm_s: 0.0,
+                reduce_bytes: 0,
+                bcast_bytes: 0,
+            }
+        }
+
+        pub fn send(&mut self, job: Job) -> Result<(), String> {
+            self.tx
+                .as_ref()
+                .expect("commit pipe closed")
+                .send(job)
+                .map_err(|_| "allreduce comms thread died".to_string())?;
+            self.in_flight += 1;
+            Ok(())
+        }
+
+        /// Collect every in-flight bucket's reply. All-or-nothing: on
+        /// any failure the remaining replies are still consumed and
+        /// the first error is returned with NO sums handed back —
+        /// parameters stay at the last committed step, so a group
+        /// reform replays the step exactly once, never applying a
+        /// bucket twice.
+        pub fn drain(&mut self) -> Result<Vec<(Vec<usize>, Vec<Tensor>)>, String> {
+            let t0 = Instant::now();
+            let mut out = Vec::with_capacity(self.in_flight);
+            let mut first_err: Option<String> = None;
+            while self.in_flight > 0 {
+                let reply =
+                    self.rx.recv().map_err(|_| "allreduce comms thread died".to_string())?;
+                self.in_flight -= 1;
+                self.comm_s += reply.comm_s;
+                self.reduce_bytes = reply.reduce_bytes;
+                self.bcast_bytes = reply.bcast_bytes;
+                match reply.sums {
+                    Ok(sums) => out.push((reply.keys, sums)),
+                    Err(e) => first_err = first_err.or(Some(e)),
+                }
+            }
+            self.blocked_s += t0.elapsed().as_secs_f64();
+            match first_err {
+                None => Ok(out),
+                Some(e) => Err(e),
+            }
+        }
+
+        pub fn reduce_bytes(&self) -> u64 {
+            self.reduce_bytes
+        }
+
+        pub fn bcast_bytes(&self) -> u64 {
+            self.bcast_bytes
+        }
+
+        pub fn blocked_s(&self) -> f64 {
+            self.blocked_s
+        }
+
+        pub fn comm_s(&self) -> f64 {
+            self.comm_s
+        }
+    }
+
+    impl Drop for CommitPipe {
+        fn drop(&mut self) {
+            // Closing the job channel ends the comms loop. Every
+            // collective wait is deadline-bounded, so the join is too.
+            self.tx.take();
+            if let Some(h) = self.handle.take() {
+                let _ = h.join();
+            }
+        }
     }
 }
 
@@ -246,18 +654,33 @@ mod tests {
     fn run_rank(
         mut agg: AllreduceAggregator,
         steps: u64,
+        split: bool,
     ) -> Result<Vec<Tensor>, String> {
         let t = targets();
         let mut params = Vec::new();
         agg.refresh(&mut params)?;
         for step in 0..steps {
             let grads = quad_grad(&params, &t);
-            agg.commit(step, &mut params, &grads)?;
+            if split {
+                // The pipeline's overlap schedule: launch, then drain
+                // where the next step's compute would run.
+                agg.start_commit(step, &mut params, &grads)?;
+                agg.wait_all(&mut params)?;
+            } else {
+                agg.commit(step, &mut params, &grads)?;
+            }
         }
         Ok(params)
     }
 
-    fn run_group(n: usize, topology: Topology, codec: CodecKind, opt: Optimizer) -> Vec<Vec<Tensor>> {
+    fn run_group(
+        n: usize,
+        topology: Topology,
+        codec: CodecKind,
+        opt: Optimizer,
+        bucket_bytes: Option<usize>,
+        split: bool,
+    ) -> Vec<Vec<Tensor>> {
         let shapes: Vec<Vec<usize>> = init().iter().map(|t| t.shape().to_vec()).collect();
         let mesh = inproc_mesh(n);
         let mut out = Vec::new();
@@ -269,7 +692,13 @@ mod tests {
                     let shapes = shapes.clone();
                     s.spawn(move || {
                         let c = Collective::new(rank, n, links, topology, shapes).unwrap();
-                        run_rank(AllreduceAggregator::new(c, opt, codec, init()), 6).unwrap()
+                        let agg = match bucket_bytes {
+                            None => AllreduceAggregator::new(c, opt, codec, init()),
+                            Some(bb) => {
+                                AllreduceAggregator::with_overlap(c, opt, codec, init(), bb)
+                            }
+                        };
+                        run_rank(agg, 6, split).unwrap()
                     })
                 })
                 .collect();
@@ -302,7 +731,8 @@ mod tests {
 
     #[test]
     fn dense_ring_matches_serial_ref_bitwise() {
-        let results = run_group(3, Topology::Ring, CodecKind::None, Optimizer::Sgd { lr: 0.1 });
+        let results =
+            run_group(3, Topology::Ring, CodecKind::None, Optimizer::Sgd { lr: 0.1 }, None, false);
         let want = serial_ref(3, 0.1, 6);
         for got in &results {
             assert_eq!(got, &want);
@@ -311,8 +741,8 @@ mod tests {
 
     #[test]
     fn tree_ranks_stay_bit_identical_under_quant8() {
-        let results =
-            run_group(4, Topology::Tree, CodecKind::Quant8, Optimizer::Sgd { lr: 0.05 });
+        let opt = Optimizer::Sgd { lr: 0.05 };
+        let results = run_group(4, Topology::Tree, CodecKind::Quant8, opt, None, false);
         for got in &results[1..] {
             assert_eq!(got, &results[0]);
         }
@@ -325,9 +755,77 @@ mod tests {
             Topology::Ring,
             CodecKind::None,
             Optimizer::Momentum { lr: 0.05, mu: 0.9 },
+            None,
+            false,
         );
         assert_eq!(results[0], results[1]);
         // And momentum actually moved things (velocity state engaged).
         assert!(results[0][0].l2_norm() > 0.0);
+    }
+
+    #[test]
+    fn overlap_matches_serial_bitwise() {
+        // 8-byte cap: key 1 (2 floats) fills one bucket, key 0 (3
+        // floats) the next — two buckets in flight per step, reversed
+        // layer order. Final params must equal the serial committer's
+        // byte-for-byte, on both topologies and with the split
+        // schedule the pipeline actually runs.
+        let opt = Optimizer::Sgd { lr: 0.1 };
+        for topology in [Topology::Ring, Topology::Tree, Topology::Hd] {
+            let want = run_group(3, topology, CodecKind::None, opt, None, false);
+            for split in [false, true] {
+                let got = run_group(3, topology, CodecKind::None, opt, Some(8), split);
+                assert_eq!(got, want, "{topology:?} split={split}");
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_matches_serial_under_momentum_and_quant8() {
+        let opt = Optimizer::Momentum { lr: 0.05, mu: 0.9 };
+        let want = run_group(2, Topology::Ring, CodecKind::Quant8, opt, None, false);
+        let got = run_group(2, Topology::Ring, CodecKind::Quant8, opt, Some(8), true);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn overlap_reports_stats_and_buckets() {
+        let shapes: Vec<Vec<usize>> = init().iter().map(|t| t.shape().to_vec()).collect();
+        let c = Collective::new(0, 1, vec![None], Topology::Ring, shapes).unwrap();
+        let mut agg = AllreduceAggregator::with_overlap(
+            c,
+            Optimizer::Sgd { lr: 0.1 },
+            CodecKind::None,
+            init(),
+            8,
+        );
+        if cfg!(feature = "overlap-commit") {
+            assert_eq!(agg.buckets(), &[vec![1], vec![0]], "reversed layer order");
+        } else {
+            assert!(agg.buckets().is_empty());
+        }
+        let mut params = Vec::new();
+        agg.refresh(&mut params).unwrap();
+        let grads = quad_grad(&params, &targets());
+        agg.start_commit(0, &mut params, &grads).unwrap();
+        agg.wait_all(&mut params).unwrap();
+        let (blocked, comm) = agg.overlap_stats();
+        assert!(blocked >= 0.0 && comm >= 0.0);
+    }
+
+    #[test]
+    fn partition_buckets_reverses_and_packs() {
+        let shapes: Vec<Vec<usize>> = vec![vec![4], vec![2], vec![2], vec![10]];
+        // 16-byte cap: reversed walk sees 40, 8, 8, 16 bytes.
+        let buckets = partition_buckets(&shapes, 16);
+        assert_eq!(buckets, vec![vec![3], vec![1, 2], vec![0]]);
+        // Oversized key 3 (40 bytes) still got exactly one bucket, and
+        // every key appears exactly once.
+        let mut all: Vec<usize> = buckets.into_iter().flatten().collect();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3]);
+        // Degenerate cap: one key per bucket, reversed.
+        let tiny = partition_buckets(&shapes, 1);
+        assert_eq!(tiny, vec![vec![3], vec![2], vec![1], vec![0]]);
     }
 }

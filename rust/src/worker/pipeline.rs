@@ -37,6 +37,11 @@ pub struct PipelineConfig {
     /// Parameter codec for distributed pulls — the other direction of
     /// Lemma 3.2's traffic term (ignored by local runs).
     pub pull_codec: PullCodec,
+    /// Fixed-byte gradient bucket size enabling the overlapped
+    /// committer (`start_commit`/`wait_all`): this step's buckets
+    /// stream while the next batch is prefetched and computed. `None`
+    /// keeps the serial blocking commit.
+    pub bucket_bytes: Option<usize>,
 }
 
 impl Default for PipelineConfig {
@@ -49,6 +54,7 @@ impl Default for PipelineConfig {
             log_every: 0,
             codec: CodecKind::None,
             pull_codec: PullCodec::None,
+            bucket_bytes: None,
         }
     }
 }
@@ -181,6 +187,15 @@ where
 /// on both success and error — the allreduce coordinator reads it back
 /// for reform adoption and the final report (the PS backend keeps
 /// authoritative state on the servers and ignores it).
+///
+/// With `cfg.bucket_bytes` set (and the `overlap-commit` feature on)
+/// the loop runs the overlapped schedule instead: step `s`'s gradients
+/// are launched with `start_commit` and drained with `wait_all` at the
+/// top of step `s+1` — the wire stays busy while the next batch is
+/// prefetched and computed. The progress counter still advances only
+/// after a step's commit is durable, and `wait_all`'s all-or-nothing
+/// contract keeps `params` at the last committed step on error, so
+/// restart/reform semantics are unchanged from the blocking schedule.
 pub fn run_agg_worker<F, A>(
     grad_exe: &TrainExecutable,
     agg: &mut A,
@@ -210,14 +225,41 @@ where
         n_steps,
         cfg.prefetch_depth.max(1),
     );
+    let overlap = cfg!(feature = "overlap-commit") && cfg.bucket_bytes.is_some();
     for step in cfg.start_step..cfg.steps {
+        // In the overlapped schedule the batch is fetched *before*
+        // draining the previous step's buckets, so any exposed
+        // prefetch wait hides behind the in-flight communication.
+        let mut early_batch = None;
+        if overlap {
+            {
+                let _t = profiler.time(Step::DataLoad);
+                early_batch = Some(loader.next().ok_or("loader exhausted early")?);
+            }
+            // Drain the previous step's in-flight buckets — their
+            // collectives streamed while this batch was prefetched.
+            // Only once they are durable does the previous step count
+            // as committed.
+            {
+                let _t = profiler.time(Step::DistUpdate);
+                agg.wait_all(params)?;
+            }
+            if let Some(p) = progress {
+                if step > cfg.start_step {
+                    p.store(step, std::sync::atomic::Ordering::SeqCst);
+                }
+            }
+        }
         {
             let _t = profiler.time(Step::ParamRefresh);
             agg.refresh(params)?;
         }
-        let b = {
-            let _t = profiler.time(Step::DataLoad);
-            loader.next().ok_or("loader exhausted early")?
+        let b = match early_batch {
+            Some(b) => b,
+            None => {
+                let _t = profiler.time(Step::DataLoad);
+                loader.next().ok_or("loader exhausted early")?
+            }
         };
         let out = {
             let _t = profiler.time(Step::Compute);
@@ -225,13 +267,28 @@ where
         };
         {
             let _t = profiler.time(Step::DistUpdate);
-            agg.commit(step as u64, params, &out.tensors)?;
+            if overlap {
+                agg.start_commit(step as u64, params, &out.tensors)?;
+            } else {
+                agg.commit(step as u64, params, &out.tensors)?;
+            }
         }
-        if let Some(p) = progress {
-            p.store(step + 1, std::sync::atomic::Ordering::SeqCst);
+        if !overlap {
+            if let Some(p) = progress {
+                p.store(step + 1, std::sync::atomic::Ordering::SeqCst);
+            }
         }
         losses.push(out.loss);
         maybe_log(cfg, step, out.loss);
+    }
+    if overlap && cfg.start_step < cfg.steps {
+        {
+            let _t = profiler.time(Step::DistUpdate);
+            agg.wait_all(params)?;
+        }
+        if let Some(p) = progress {
+            p.store(cfg.steps, std::sync::atomic::Ordering::SeqCst);
+        }
     }
 
     let wall_s = t0.elapsed().as_secs_f64();

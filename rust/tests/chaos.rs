@@ -1334,7 +1334,7 @@ fn injected_latency_is_detected_as_straggler() {
 #[test]
 fn allreduce_wedged_peer_fails_cleanly_within_deadline() {
     with_watchdog(60, "allreduce wedged peer", || {
-        for topology in [Topology::Ring, Topology::Tree] {
+        for topology in [Topology::Ring, Topology::Tree, Topology::Hd] {
             let n = 4usize;
             let shapes: Vec<Vec<usize>> = vec![vec![32], vec![4, 4]];
             let mut mesh = inproc_mesh(n);
@@ -1383,7 +1383,7 @@ fn allreduce_under_seeded_drops_never_hangs() {
     let seed = chaos_seed();
     with_watchdog(120, "allreduce seeded drops", move || {
         let log = FaultLog::new();
-        for topology in [Topology::Ring, Topology::Tree] {
+        for topology in [Topology::Ring, Topology::Tree, Topology::Hd] {
             let n = 3usize;
             let steps = 10u64;
             let shapes: Vec<Vec<usize>> = vec![vec![48], vec![6, 6]];
@@ -1450,7 +1450,161 @@ fn allreduce_under_seeded_drops_never_hangs() {
         }
         // The plans must actually have injected faults for this run to
         // mean anything (seeded: deterministic per DTLSDA_CHAOS_SEED).
-        assert!(!log.is_empty(), "seed {seed}: no faults injected across either topology");
+        assert!(!log.is_empty(), "seed {seed}: no faults injected across any topology");
+    });
+}
+
+/// Drive the overlapped committer the way `worker::pipeline` does under
+/// `--bucket-bytes`: wait out the previous step's buckets, refresh,
+/// then hand the next step to the comms thread; the trailing `wait_all`
+/// settles the last in-flight step.
+fn drive_overlap(
+    agg: &mut AllreduceAggregator,
+    params: &mut Vec<Tensor>,
+    targets: &[Tensor],
+    steps: u64,
+) -> Result<(), String> {
+    for step in 0..steps {
+        if step > 0 {
+            agg.wait_all(params)?;
+        }
+        agg.refresh(params)?;
+        let grads = quad_grads(params, targets);
+        agg.start_commit(step, params, &grads)?;
+    }
+    agg.wait_all(params)
+}
+
+/// Overlapped-commit chaos: a peer drops out mid-run while buckets are
+/// in flight on the comms threads. Every healthy rank must surface a
+/// clean bounded `Err` (never a hang), and the commit pipe's atomic
+/// drain means the failed step applies NOTHING: surviving parameters
+/// are byte-identical to a clean serial run of exactly the steps that
+/// completed — no partial step, no double-applied bucket.
+#[test]
+fn allreduce_overlapped_commit_peer_loss_fails_cleanly() {
+    with_watchdog(120, "overlapped commit peer loss", || {
+        let shapes: Vec<Vec<usize>> = vec![vec![32], vec![4, 4]];
+        // 128-byte buckets split the [32]/[4,4] keys into two buckets
+        // (reverse layer order: [4,4] ships first), so the comms thread
+        // always has a second bucket behind the one on the wire.
+        let bucket_bytes = 128usize;
+        let (n, steps, die_at) = (4usize, 6u64, 2u64);
+        let targets: Vec<Tensor> = shapes
+            .iter()
+            .map(|s| Tensor::from_vec(s, vec![1.0; s.iter().product()]))
+            .collect();
+        for topology in [Topology::Ring, Topology::Tree, Topology::Hd] {
+            // Clean reference: the steps every rank completed before the
+            // death, on the serial committer (overlap parity with serial
+            // is pinned separately in the integration suite).
+            let reference: Vec<Tensor> = {
+                let mesh = inproc_mesh(n);
+                let handles: Vec<_> = mesh
+                    .into_iter()
+                    .enumerate()
+                    .map(|(rank, links)| {
+                        let shapes = shapes.clone();
+                        let targets = targets.clone();
+                        thread::spawn(move || {
+                            let init: Vec<Tensor> =
+                                shapes.iter().map(|s| Tensor::zeros(s)).collect();
+                            let c = Collective::new(rank, n, links, topology, shapes).unwrap();
+                            let mut agg = AllreduceAggregator::new(
+                                c,
+                                Optimizer::Sgd { lr: 0.1 },
+                                CodecKind::None,
+                                init,
+                            );
+                            let mut params = Vec::new();
+                            for step in 0..die_at {
+                                agg.refresh(&mut params).unwrap();
+                                let grads = quad_grads(&params, &targets);
+                                agg.commit(step, &mut params, &grads).unwrap();
+                            }
+                            params
+                        })
+                    })
+                    .collect();
+                let mut finals: Vec<Vec<Tensor>> =
+                    handles.into_iter().map(|h| h.join().unwrap()).collect();
+                finals.pop().unwrap()
+            };
+
+            let (stop_tx, stop_rx) = mpsc::channel::<()>();
+            let mut mesh = inproc_mesh(n);
+            let dying_links = mesh.pop().unwrap();
+            let dying = {
+                let shapes = shapes.clone();
+                let targets = targets.clone();
+                thread::spawn(move || {
+                    let init: Vec<Tensor> = shapes.iter().map(|s| Tensor::zeros(s)).collect();
+                    let mut c = Collective::new(n - 1, n, dying_links, topology, shapes).unwrap();
+                    c.set_deadline(Duration::from_millis(250)).unwrap();
+                    let mut agg = AllreduceAggregator::with_overlap(
+                        c,
+                        Optimizer::Sgd { lr: 0.1 },
+                        CodecKind::None,
+                        init,
+                        bucket_bytes,
+                    );
+                    let mut params = Vec::new();
+                    drive_overlap(&mut agg, &mut params, &targets, die_at).unwrap();
+                    // Dead to the collective, but its link ends stay open
+                    // (no EOF to lean on): survivors must ride their read
+                    // deadlines to the error.
+                    let _ = stop_rx.recv();
+                })
+            };
+            let healthy: Vec<_> = mesh
+                .into_iter()
+                .enumerate()
+                .map(|(rank, links)| {
+                    let shapes = shapes.clone();
+                    let targets = targets.clone();
+                    thread::spawn(move || {
+                        let init: Vec<Tensor> = shapes.iter().map(|s| Tensor::zeros(s)).collect();
+                        let mut c = Collective::new(rank, n, links, topology, shapes).unwrap();
+                        c.set_deadline(Duration::from_millis(250)).unwrap();
+                        let mut agg = AllreduceAggregator::with_overlap(
+                            c,
+                            Optimizer::Sgd { lr: 0.1 },
+                            CodecKind::None,
+                            init,
+                            bucket_bytes,
+                        );
+                        let mut params = Vec::new();
+                        let t0 = Instant::now();
+                        let run = drive_overlap(&mut agg, &mut params, &targets, steps);
+                        (params, run, t0.elapsed())
+                    })
+                })
+                .collect();
+            for (rank, h) in healthy.into_iter().enumerate() {
+                let (params, run, took) = h.join().unwrap();
+                match run {
+                    Ok(()) => panic!(
+                        "{topology:?} rank {rank}: overlapped commit with a dead peer must error"
+                    ),
+                    Err(e) => assert!(!e.is_empty(), "{topology:?} rank {rank}: empty error"),
+                }
+                assert!(
+                    took < Duration::from_secs(30),
+                    "{topology:?} rank {rank}: error not bounded by the deadline: {took:?}"
+                );
+                assert_eq!(params.len(), reference.len());
+                for (k, (x, y)) in params.iter().zip(&reference).enumerate() {
+                    assert_eq!(
+                        x.data(),
+                        y.data(),
+                        "{topology:?} rank {rank} key {k}: failed step leaked a bucket \
+                         (partial or double apply)"
+                    );
+                }
+            }
+            stop_tx.send(()).unwrap();
+            dying.join().unwrap();
+        }
     });
 }
 

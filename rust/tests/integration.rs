@@ -205,12 +205,16 @@ fn quad_ps_sync_traced(
 /// quadratic task through an [`AllreduceAggregator`]. Returns each
 /// rank's final params and loss trace (loss from refreshed params
 /// before each commit, mirroring `quad_ps_sync_traced`'s pull point).
+/// With `bucket_bytes = Some(..)` the ranks drive the overlapped
+/// committer through the same `wait_all` → `refresh` → `start_commit`
+/// schedule `worker::pipeline` uses under `--bucket-bytes`.
 fn quad_allreduce(
     n_ranks: usize,
     topology: Topology,
     steps: usize,
     lr: f32,
     codec: CodecKind,
+    bucket_bytes: Option<usize>,
 ) -> (Vec<Vec<Tensor>>, Vec<Vec<f32>>) {
     let shapes = quad_shapes();
     let targets = quad_targets(&shapes);
@@ -227,14 +231,29 @@ fn quad_allreduce(
                 s.spawn(move || {
                     let init: Vec<Tensor> = shapes.iter().map(|sh| Tensor::zeros(sh)).collect();
                     let c = Collective::new(rank, n_ranks, links, topology, shapes).unwrap();
-                    let mut agg = AllreduceAggregator::new(c, Optimizer::Sgd { lr }, codec, init);
+                    let opt = Optimizer::Sgd { lr };
+                    let mut agg = match bucket_bytes {
+                        None => AllreduceAggregator::new(c, opt, codec, init),
+                        Some(bb) => AllreduceAggregator::with_overlap(c, opt, codec, init, bb),
+                    };
+                    let overlap = bucket_bytes.is_some();
                     let mut params = Vec::new();
                     let mut trace = Vec::with_capacity(steps);
                     for step in 0..steps {
+                        if overlap && step > 0 {
+                            agg.wait_all(&mut params).unwrap();
+                        }
                         agg.refresh(&mut params).unwrap();
                         trace.push(quad_loss(&params, &targets));
                         let grads = quad_grads(&params, &targets);
-                        agg.commit(step as u64, &mut params, &grads).unwrap();
+                        if overlap {
+                            agg.start_commit(step as u64, &mut params, &grads).unwrap();
+                        } else {
+                            agg.commit(step as u64, &mut params, &grads).unwrap();
+                        }
+                    }
+                    if overlap {
+                        agg.wait_all(&mut params).unwrap();
                     }
                     (params, trace)
                 })
@@ -306,8 +325,8 @@ fn assert_backend_parity(codec: CodecKind) {
     for t in &ps_traces[1..] {
         assert_eq!(t, &ps_traces[0], "{codec:?}: PS workers diverged");
     }
-    for topology in [Topology::Ring, Topology::Tree] {
-        let (finals, traces) = quad_allreduce(n, topology, steps, lr, codec);
+    for topology in [Topology::Ring, Topology::Tree, Topology::Hd] {
+        let (finals, traces) = quad_allreduce(n, topology, steps, lr, codec, None);
         for (rank, f) in finals.iter().enumerate() {
             for (x, y) in f.iter().zip(&ps_finals) {
                 assert_eq!(
@@ -346,6 +365,67 @@ fn allreduce_matches_ps_sync_topk_bitwise() {
     // Top-k keeps per-key error-feedback state; both backends must
     // evolve it identically.
     assert_backend_parity(CodecKind::TopK { fraction: 0.5 });
+}
+
+/// Shared body for the overlap pins: the bucketized comms-thread
+/// committer (`--bucket-bytes`) may only change the *schedule*, never
+/// the bytes. Each topology runs the same task twice — blocking commit
+/// vs overlapped start_commit/wait_all with 512-byte buckets, which
+/// splits the [64]/[8,8]/[128] quad shapes into two buckets shipped in
+/// reverse layer order — and must agree byte-for-byte on every loss
+/// and the final parameters, which in turn must match the PS
+/// reference (so these tests subsume the blocking parity pin).
+fn assert_overlap_parity(codec: CodecKind) {
+    let (n, steps, lr) = (3, 12, 0.1);
+    let (ps_finals, ps_traces) = quad_ps_sync_traced(2, n, steps, lr, codec);
+    for topology in [Topology::Ring, Topology::Tree, Topology::Hd] {
+        let (blocking, blocking_traces) = quad_allreduce(n, topology, steps, lr, codec, None);
+        let (overlap, overlap_traces) = quad_allreduce(n, topology, steps, lr, codec, Some(512));
+        for (rank, (of, bf)) in overlap.iter().zip(&blocking).enumerate() {
+            for ((x, y), p) in of.iter().zip(bf).zip(&ps_finals) {
+                assert_eq!(
+                    x.data(),
+                    y.data(),
+                    "{codec:?} {topology:?} rank {rank}: overlap final diverged from blocking"
+                );
+                assert_eq!(
+                    x.data(),
+                    p.data(),
+                    "{codec:?} {topology:?} rank {rank}: overlap final diverged from PS"
+                );
+            }
+        }
+        for (rank, (ot, bt)) in overlap_traces.iter().zip(&blocking_traces).enumerate() {
+            assert_eq!(
+                ot, bt,
+                "{codec:?} {topology:?} rank {rank}: overlap trace diverged from blocking"
+            );
+            assert_eq!(
+                ot, &ps_traces[0],
+                "{codec:?} {topology:?} rank {rank}: overlap trace diverged from PS"
+            );
+        }
+    }
+}
+
+#[test]
+fn allreduce_matches_ps_sync_overlap_dense_bitwise() {
+    assert_overlap_parity(CodecKind::None);
+}
+
+#[test]
+fn allreduce_matches_ps_sync_overlap_quant8_bitwise() {
+    // Buckets compress per-key on the comms thread; quant8's scale is
+    // derived per key, so bucket boundaries cannot perturb it.
+    assert_overlap_parity(CodecKind::Quant8);
+}
+
+#[test]
+fn allreduce_matches_ps_sync_overlap_topk_bitwise() {
+    // Error-feedback residuals live per key and are updated at
+    // compression time; reversed bucket order must not reorder any
+    // key's residual stream relative to the serial committer.
+    assert_overlap_parity(CodecKind::TopK { fraction: 0.5 });
 }
 
 #[test]
