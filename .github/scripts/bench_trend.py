@@ -1,7 +1,8 @@
 #!/usr/bin/env python3
 """Compare two BENCH_ps_hotpath.json files and fail on regressions.
 
-Usage: bench_trend.py <baseline.json> <current.json>
+Usage: bench_trend.py <baseline.json> <current.json> \\
+                      [<serve_baseline.json|-> <serve_current.json>]
 
 Every result row is keyed by (transport, mode, codec, pull_codec,
 workers, stripes); a row whose ops_per_s falls below 75% of the
@@ -10,6 +11,18 @@ baseline's matching row is a regression. Rows present in only one file
 so the bench can evolve without chicken-and-egg gating. Older baselines
 without the pull_codec axis default it to "none", so their dense rows
 keep matching.
+
+The optional third/fourth arguments wire in BENCH_serve.json (the
+`serve` subcommand's serving-tier QPS benchmark): serve rows are keyed
+by (name, codec, clients) and trend-compared on qps with the same 75%
+threshold; pass "-" as the serve baseline to gate the current serve
+file without a trend comparison (first run, or baseline predates the
+serve bench). Serve summary gates (presence-guarded like the rest):
+* serve_dense_qps, serve_quant8_qps and serve_during_training_qps must
+  be > 0 (the read tier answers closed-loop pulls, including while
+  training pushes land and snapshot versions churn).
+* serve_wire_ratio_dense_over_quant8 must be >= 3 (quant8 snapshot
+  serving must cut bytes-on-wire at least 3x vs dense).
 
 Beyond row-vs-row trends, the current file's summary ratios are gated
 when present (absent keys are skipped, so old JSONs never fail):
@@ -43,6 +56,9 @@ ALLREDUCE_RATIO_FLOOR = 1.5  # quant8 collectives must beat dense wire bytes
 OVERLAP_FLOOR = 0.6
 
 
+SERVE_RATIO_FLOOR = 3.0  # quant8 serving must beat dense wire bytes >= 3x
+
+
 def row_key(row):
     return (
         row["transport"],
@@ -52,6 +68,64 @@ def row_key(row):
         int(row["workers"]),
         int(row["stripes"]),
     )
+
+
+def serve_row_key(row):
+    return (row["name"], row["codec"], int(row["clients"]))
+
+
+def compare_rows(baseline_rows, current_rows, key_fn, metric):
+    """Row-by-row trend compare; returns (regressions, compared)."""
+    old_rows = {key_fn(r): r for r in baseline_rows}
+    regressions = []
+    compared = 0
+    for row in current_rows:
+        key = key_fn(row)
+        tag = "/".join(str(p) for p in key)
+        old = old_rows.pop(key, None)
+        if old is None:
+            print(f"NEW      {tag}: {row[metric]:.1f} {metric} (no baseline)")
+            continue
+        if old[metric] <= 0:
+            print(f"SKIP     {tag}: baseline reported zero throughput")
+            continue
+        ratio = row[metric] / old[metric]
+        verdict = "REGRESS " if ratio < THRESHOLD else "ok      "
+        print(
+            f"{verdict} {tag}: {old[metric]:.1f} -> "
+            f"{row[metric]:.1f} {metric} ({ratio:.2f}x)"
+        )
+        compared += 1
+        if ratio < THRESHOLD:
+            regressions.append((tag, ratio))
+    for key in old_rows:
+        print(f"RETIRED  {'/'.join(str(p) for p in key)}: gone from current bench")
+    return regressions, compared
+
+
+def check_serve_gates(current):
+    """Presence-guarded gates on the serve benchmark's summary."""
+    failures = []
+    for key in (
+        "serve_dense_qps",
+        "serve_quant8_qps",
+        "serve_during_training_qps",
+    ):
+        if key not in current:
+            continue
+        qps = float(current[key])
+        verdict = "ok      " if qps > 0 else "FAIL    "
+        print(f"{verdict} {key}: {qps:.1f}")
+        if qps <= 0:
+            failures.append(f"{key} = {qps:.1f} (serving tier made no progress)")
+    key = "serve_wire_ratio_dense_over_quant8"
+    if key in current:
+        ratio = float(current[key])
+        verdict = "ok      " if ratio >= SERVE_RATIO_FLOOR else "FAIL    "
+        print(f"{verdict} {key}: {ratio:.2f}x (floor {SERVE_RATIO_FLOOR:.0f}x)")
+        if ratio < SERVE_RATIO_FLOOR:
+            failures.append(f"{key} = {ratio:.2f}x < {SERVE_RATIO_FLOOR:.0f}x")
+    return failures
 
 
 def check_summary_gates(current):
@@ -122,38 +196,34 @@ def check_summary_gates(current):
     return failures
 
 
-def main(baseline_path, current_path):
+def main(baseline_path, current_path, serve_baseline_path=None, serve_current_path=None):
     with open(baseline_path) as f:
         baseline = json.load(f)
     with open(current_path) as f:
         current = json.load(f)
 
-    old_rows = {row_key(r): r for r in baseline.get("results", [])}
-    regressions = []
-    compared = 0
-    for row in current.get("results", []):
-        key = row_key(row)
-        tag = "/".join(str(p) for p in key)
-        old = old_rows.pop(key, None)
-        if old is None:
-            print(f"NEW      {tag}: {row['ops_per_s']:.1f} ops/s (no baseline)")
-            continue
-        if old["ops_per_s"] <= 0:
-            print(f"SKIP     {tag}: baseline reported zero throughput")
-            continue
-        ratio = row["ops_per_s"] / old["ops_per_s"]
-        verdict = "REGRESS " if ratio < THRESHOLD else "ok      "
-        print(
-            f"{verdict} {tag}: {old['ops_per_s']:.1f} -> "
-            f"{row['ops_per_s']:.1f} ops/s ({ratio:.2f}x)"
-        )
-        compared += 1
-        if ratio < THRESHOLD:
-            regressions.append((tag, ratio))
-    for key in old_rows:
-        print(f"RETIRED  {'/'.join(str(p) for p in key)}: gone from current bench")
-
+    regressions, compared = compare_rows(
+        baseline.get("results", []), current.get("results", []), row_key, "ops_per_s"
+    )
     gate_failures = check_summary_gates(current)
+
+    if serve_current_path is not None:
+        with open(serve_current_path) as f:
+            serve_current = json.load(f)
+        serve_baseline = {}
+        if serve_baseline_path not in (None, "-"):
+            with open(serve_baseline_path) as f:
+                serve_baseline = json.load(f)
+        print("\nserving tier (BENCH_serve):")
+        serve_regressions, serve_compared = compare_rows(
+            serve_baseline.get("results", []),
+            serve_current.get("results", []),
+            serve_row_key,
+            "qps",
+        )
+        regressions += serve_regressions
+        compared += serve_compared
+        gate_failures += check_serve_gates(serve_current)
 
     print(f"\ncompared {compared} columns against baseline")
     failed = False
@@ -175,7 +245,7 @@ def main(baseline_path, current_path):
 
 
 if __name__ == "__main__":
-    if len(sys.argv) != 3:
+    if len(sys.argv) not in (3, 5):
         print(__doc__, file=sys.stderr)
         sys.exit(2)
-    sys.exit(main(sys.argv[1], sys.argv[2]))
+    sys.exit(main(*sys.argv[1:]))

@@ -98,6 +98,26 @@ pub fn num_param_servers_with_codec(
 /// pull codec shrinks its half toward `S_p / 4` (1 byte/param plus
 /// per-tensor headers), so pairing it with a quantized push codec cuts
 /// the recommended server count roughly 4x vs dense in both directions.
+///
+/// # Examples
+///
+/// AlexNet (244 MB of f32 parameters) on 1 GbE (125 MB/s) with 4
+/// workers and 2 s of compute per round:
+///
+/// ```
+/// use dtlsda::advisor::lemmas::num_param_servers_with_codecs;
+/// use dtlsda::ps::compress::{CodecKind, PullCodec};
+///
+/// // Dense in both directions: 2·S_p·N_w / (B·T_C) needs 8 servers.
+/// let dense = num_param_servers_with_codecs(
+///     244e6, 4, 125e6, 2.0, CodecKind::None, PullCodec::None);
+/// assert_eq!(dense, 8);
+///
+/// // quant8 in both directions (~1 byte/param each way) drops to 2.
+/// let quant = num_param_servers_with_codecs(
+///     244e6, 4, 125e6, 2.0, CodecKind::Quant8, PullCodec::Quant8);
+/// assert_eq!(quant, 2);
+/// ```
 pub fn num_param_servers_with_codecs(
     s_p_bytes: f64,
     n_w: usize,
@@ -182,6 +202,67 @@ pub fn num_param_servers_replicated_with_codecs(
 pub fn num_physical_servers(n_shards: usize, replicas: usize) -> usize {
     assert!(n_shards >= 1 && replicas >= 1);
     n_shards * replicas
+}
+
+/// Serving-capacity lemma — the read-path sibling of Lemma 3.2. One
+/// read replica answering whole-model snapshot pulls (`ps::serve`)
+/// saturates its NIC, not its CPU: snapshot reads are immutable
+/// `Arc`-shared bytes streamed zero-copy, so the sustainable rate is
+///
+/// `Q_replica = B / codec_pull(S_p)`
+///
+/// where `codec_pull` is the serve codec's effective wire bytes for the
+/// model ([`PullCodec::effective_pull_bytes`] — the same accounting
+/// Lemma 3.2 uses for training pulls). The quant8 serve codec cuts the
+/// per-request bytes ~4x and therefore multiplies per-replica QPS ~4x.
+///
+/// # Examples
+///
+/// ```
+/// use dtlsda::advisor::lemmas::serve_qps_per_replica;
+/// use dtlsda::ps::compress::PullCodec;
+///
+/// // AlexNet (244 MB) served over one 10 GbE NIC (1.25 GB/s):
+/// let dense = serve_qps_per_replica(244e6, 1.25e9, PullCodec::None);
+/// assert!((dense - 5.12).abs() < 0.01);
+///
+/// // quant8 snapshots ship ~4x fewer bytes, so ~4x the QPS.
+/// let quant = serve_qps_per_replica(244e6, 1.25e9, PullCodec::Quant8);
+/// assert!(quant / dense > 3.9);
+/// ```
+pub fn serve_qps_per_replica(s_p_bytes: f64, b_bytes_per_s: f64, codec: PullCodec) -> f64 {
+    assert!(s_p_bytes > 0.0 && b_bytes_per_s > 0.0);
+    b_bytes_per_s / codec.effective_pull_bytes(s_p_bytes)
+}
+
+/// Read replicas needed to sustain `target_qps` whole-model pulls per
+/// second: `ceil(Q / Q_replica)` with `Q_replica` from
+/// [`serve_qps_per_replica`]. This is the `advisor-ps --serve-qps`
+/// answer to "how many read replicas for Q QPS" — chain replicas
+/// answer snapshot reads directly (no primary gate), so serving
+/// capacity scales with the chain length without touching the write
+/// path.
+///
+/// # Examples
+///
+/// ```
+/// use dtlsda::advisor::lemmas::num_serve_replicas;
+/// use dtlsda::ps::compress::PullCodec;
+///
+/// // 100 QPS of AlexNet over 10 GbE NICs: 20 dense replicas…
+/// assert_eq!(num_serve_replicas(244e6, 1.25e9, PullCodec::None, 100.0), 20);
+/// // …or 5 once the snapshots ship quant8.
+/// assert_eq!(num_serve_replicas(244e6, 1.25e9, PullCodec::Quant8, 100.0), 5);
+/// ```
+pub fn num_serve_replicas(
+    s_p_bytes: f64,
+    b_bytes_per_s: f64,
+    codec: PullCodec,
+    target_qps: f64,
+) -> usize {
+    assert!(target_qps > 0.0);
+    let per = serve_qps_per_replica(s_p_bytes, b_bytes_per_s, codec);
+    ((target_qps / per).ceil() as usize).max(1)
 }
 
 /// Replication-aware round I/O time at the busiest chain member (the
@@ -437,6 +518,25 @@ pub struct BackendChoice {
 /// (`alpha_s`). Allreduce wins when its best topology's round beats
 /// the PS round *without* provisioning any servers — the advisor's
 /// answer to "do I need a PS tier at all?".
+///
+/// # Examples
+///
+/// ```
+/// use dtlsda::advisor::lemmas::choose_backend;
+/// use dtlsda::coordinator::distributed::Backend;
+///
+/// // AlexNet (244 MB), 4 workers, T_C = 2 s, α = 100 µs. On 1 GbE
+/// // the ring round (~2.9 s) loses to a Lemma 3.2 PS fleet (~2.0 s
+/// // across 8 servers): keep the PS tier.
+/// let slow = choose_backend(244e6, 4, 125e6, 2.0, 1e-4);
+/// assert_eq!(slow.backend, Backend::Ps);
+/// assert_eq!(slow.n_ps, 8);
+///
+/// // On 10 GbE the ring (~0.3 s) beats even a provisioned PS round —
+/// // allreduce wins with zero extra machines.
+/// let fast = choose_backend(244e6, 4, 1.25e9, 2.0, 1e-4);
+/// assert_eq!(fast.backend, Backend::Allreduce);
+/// ```
 pub fn choose_backend(
     s_p_bytes: f64,
     n_w: usize,
@@ -845,5 +945,31 @@ mod tests {
         assert!(num_param_servers(100e6, 4, 1e9, 1.0) >= base);
         assert!(num_param_servers(50e6, 4, 2e9, 1.0) <= base);
         assert!(num_param_servers(50e6, 4, 1e9, 2.0) <= base);
+    }
+
+    #[test]
+    fn serve_lemma_dense_is_bandwidth_over_model() {
+        // Dense serving: exactly B / S_p requests per second.
+        let q = serve_qps_per_replica(244e6, 1.25e9, PullCodec::None);
+        assert!((q - 1.25e9 / 244e6).abs() < 1e-9);
+        // quant8 multiplies QPS by the codec's wire ratio (~4x).
+        let q8 = serve_qps_per_replica(244e6, 1.25e9, PullCodec::Quant8);
+        assert!(q8 / q > 3.9 && q8 / q < 4.1);
+    }
+
+    #[test]
+    fn serve_replicas_ceil_and_floor() {
+        // Just over one replica's capacity rounds up to 2.
+        let per = serve_qps_per_replica(100e6, 1e9, PullCodec::None); // 10 QPS
+        assert!((per - 10.0).abs() < 1e-9);
+        assert_eq!(num_serve_replicas(100e6, 1e9, PullCodec::None, 10.0), 1);
+        assert_eq!(num_serve_replicas(100e6, 1e9, PullCodec::None, 10.1), 2);
+        // Tiny targets still provision one replica.
+        assert_eq!(num_serve_replicas(100e6, 1e9, PullCodec::None, 0.01), 1);
+        // quant8 needs ~4x fewer replicas at the same target.
+        let dense = num_serve_replicas(244e6, 1.25e9, PullCodec::None, 100.0);
+        let quant = num_serve_replicas(244e6, 1.25e9, PullCodec::Quant8, 100.0);
+        assert_eq!(dense, 20);
+        assert_eq!(quant, 5);
     }
 }

@@ -122,6 +122,21 @@ pub struct MinibatchPlan {
 
 /// §3.1 procedure: evaluate the ILP across `candidates` (the range that
 /// converges acceptably per Fig. 3) and pick the throughput maximizer.
+///
+/// # Examples
+///
+/// ```
+/// use dtlsda::advisor::{netdefs, optimize_minibatch};
+/// use dtlsda::sim::device::DeviceModel;
+///
+/// // Sweep AlexNet mini-batch candidates on a K80 profile and take
+/// // the throughput-optimal X_mini (images/s, not step latency).
+/// let plan = optimize_minibatch(&netdefs::alexnet(), &DeviceModel::k80(), &[64, 128, 256])
+///     .expect("at least one candidate fits device memory");
+/// assert!([64, 128, 256].contains(&plan.best.xmini));
+/// assert!(plan.best.step_time > 0.0);
+/// assert_eq!(plan.sweep.len(), 3);
+/// ```
 pub fn optimize_minibatch(
     net: &Network,
     dev: &DeviceModel,

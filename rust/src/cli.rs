@@ -55,6 +55,7 @@ subcommands:
   train              local training on a train_step artifact
   train-dist         distributed training (in-process cluster)
   ps                 run one parameter-server role (real deployment)
+  serve              serving-tier QPS benchmark (snapshot reads)
 
 run `dtlsda <subcommand> --help` for options.";
 
@@ -72,6 +73,7 @@ pub fn run(argv: &[String]) -> Result<(), String> {
         "train" => cmd_train(rest),
         "train-dist" => cmd_train_dist(rest),
         "ps" => cmd_ps_role(rest),
+        "serve" => cmd_serve(rest),
         "--help" | "-h" | "help" => Err(USAGE.to_string()),
         other => Err(format!("unknown subcommand {other:?}\n\n{USAGE}")),
     }
@@ -195,7 +197,14 @@ fn cmd_advisor_ps(argv: &[String]) -> Result<(), String> {
             "chain copies per shard R (failover; R-1 replicas). The fleet \
              is elastic at runtime (train-dist --add-server/--remove-server \
              grows/retires chain tails), so size for the steady-state R",
-        );
+        )
+        .opt(
+            "serve-qps",
+            None,
+            "also size the read tier: replicas needed to sustain this many \
+             whole-model snapshot pulls per second",
+        )
+        .opt("serve-codec", Some("none"), "serving codec for --serve-qps: none|quant8");
     let p = spec.parse(argv)?;
     let s_p = p.f64("params-mb") * 1e6;
     let n_w = p.usize("workers");
@@ -247,6 +256,21 @@ fn cmd_advisor_ps(argv: &[String]) -> Result<(), String> {
         ]);
     }
     t.print();
+    if let Some(q) = p.get("serve-qps") {
+        let target: f64 = q.parse().map_err(|e| format!("bad serve-qps {q:?}: {e}"))?;
+        if target <= 0.0 {
+            return Err("bad serve-qps: must be positive".into());
+        }
+        let serve_codec = PullCodec::parse(&p.str("serve-codec"))?;
+        let per = advisor::lemmas::serve_qps_per_replica(s_p, b_ps, serve_codec);
+        let n = advisor::lemmas::num_serve_replicas(s_p, b_ps, serve_codec, target);
+        println!(
+            "serving lemma: one replica sustains B / codec_pull(S_p) = {per:.1} \
+             whole-model QPS ({} codec); {target} QPS needs {n} read replica{}",
+            serve_codec.name(),
+            if n == 1 { "" } else { "s" }
+        );
+    }
     println!(
         "(run `dtlsda advisor-backend` with the same inputs to check whether a \
          serverless allreduce beats this PS tier)"
@@ -467,6 +491,13 @@ fn cmd_train_dist(argv: &[String]) -> Result<(), String> {
              push_send/push_wait (ps) while compute folds the next \
              bucket; results are bit-identical to the serial commit",
         )
+        .opt(
+            "serve-publish-every",
+            None,
+            "publish a read-only serve snapshot every N store updates \
+             (sync mode publishes at step boundaries regardless, so the \
+             chain stays byte-identical; see the serve subcommand)",
+        )
         .flag("sync", "synchronous SGD (default async)")
         .flag(
             "straggler-backpressure",
@@ -537,6 +568,7 @@ fn cmd_train_dist(argv: &[String]) -> Result<(), String> {
         topology,
         bucket_bytes,
         straggler_backpressure: p.flag("straggler-backpressure"),
+        serve_publish_every: parse_opt_u64(&p, "serve-publish-every")?,
     };
     let report = distributed::run_distributed(&PathBuf::from(p.str("artifacts")), &cfg)?;
     match cfg.backend {
@@ -668,6 +700,232 @@ fn cmd_ps_role(argv: &[String]) -> Result<(), String> {
 
 struct PsServerRoleGuard(crate::ps::server::PsServerHandle);
 
+/// One measured serving configuration (all clients merged).
+struct ServeRow {
+    qps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    wire_bytes: u64,
+}
+
+/// Closed-loop round: `clients` threads each issue `requests`
+/// whole-model snapshot pulls back-to-back; QPS is total completions
+/// over wall time, latencies are merged across clients.
+fn serve_round(
+    addr: &str,
+    codec: PullCodec,
+    clients: usize,
+    requests: usize,
+) -> Result<ServeRow, String> {
+    use std::time::Instant;
+    let start = Instant::now();
+    let mut handles = Vec::new();
+    for _ in 0..clients {
+        let addr = addr.to_string();
+        handles.push(std::thread::spawn(move || -> Result<(Vec<f64>, u64), String> {
+            let t = crate::net::transport::connect(&addr)?;
+            let mut c = crate::ps::serve::ServeClient::new(Box::new(t));
+            c.set_codec(codec);
+            let redial = addr.clone();
+            c.set_reconnect(Box::new(move |_| {
+                crate::net::transport::connect(&redial)
+                    .map(|t| Box::new(t) as Box<dyn crate::net::transport::Transport>)
+            }));
+            let mut lat = Vec::with_capacity(requests);
+            for _ in 0..requests {
+                let t0 = Instant::now();
+                c.pull_model()?;
+                lat.push(t0.elapsed().as_secs_f64() * 1e3);
+            }
+            Ok((lat, c.wire_bytes))
+        }));
+    }
+    let mut lat = Vec::new();
+    let mut wire_bytes = 0u64;
+    for h in handles {
+        let (l, b) = h.join().map_err(|_| "serve client panicked".to_string())??;
+        lat.extend(l);
+        wire_bytes += b;
+    }
+    let wall = start.elapsed().as_secs_f64();
+    lat.sort_by(|a, b| a.total_cmp(b));
+    let pct = |q: f64| lat[((lat.len() - 1) as f64 * q).round() as usize];
+    Ok(ServeRow {
+        qps: lat.len() as f64 / wall.max(1e-9),
+        p50_ms: pct(0.50),
+        p99_ms: pct(0.99),
+        wire_bytes,
+    })
+}
+
+/// Background training load for the serve-during-training row: each
+/// pusher streams dense `Push` frames (unfenced epoch sentinel) over
+/// its own connection until `stop`, returning its push count.
+fn spawn_serve_pushers(
+    addr: &str,
+    n: usize,
+    n_keys: usize,
+    elems: usize,
+    stop: std::sync::Arc<std::sync::atomic::AtomicBool>,
+) -> Vec<std::thread::JoinHandle<Result<u64, String>>> {
+    use std::sync::atomic::Ordering;
+    (0..n)
+        .map(|i| {
+            let addr = addr.to_string();
+            let stop = stop.clone();
+            std::thread::spawn(move || -> Result<u64, String> {
+                let mut t = crate::net::transport::connect(&addr)?;
+                let grad = crate::tensor::Tensor::from_vec(&[elems], vec![1e-3; elems]);
+                let mut seq = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    seq += 1;
+                    let msg = crate::net::message::Message::Push {
+                        worker: 1_000 + i as u32,
+                        step: seq,
+                        seq,
+                        epoch: u64::MAX,
+                        entries: vec![((seq % n_keys as u64) as u32, grad.clone())],
+                    };
+                    t.send(&msg)?;
+                    match t.recv()? {
+                        crate::net::message::Message::PushAck { .. } => {}
+                        crate::net::message::Message::Error { what } => return Err(what),
+                        other => return Err(format!("unexpected push reply {other:?}")),
+                    }
+                }
+                Ok(seq)
+            })
+        })
+        .collect()
+}
+
+/// Closed-loop QPS benchmark of the read-only serving tier. Spawns one
+/// TCP parameter server over a deterministic synthetic model and
+/// measures whole-model snapshot pulls per second per codec — idle,
+/// and again while training pushes hammer the same store with snapshot
+/// publishes on a cadence — then writes the JSON that CI's bench-trend
+/// gates consume.
+fn cmd_serve(argv: &[String]) -> Result<(), String> {
+    use std::collections::BTreeMap;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    use crate::util::json::Json;
+
+    let spec = ArgSpec::new("dtlsda serve", "serving-tier QPS benchmark (snapshot reads)")
+        .opt("params-mb", Some("8"), "synthetic model size in MB")
+        .opt("keys", Some("64"), "tensors the model splits into")
+        .opt("clients", Some("4"), "concurrent closed-loop serve clients")
+        .opt("requests", Some("50"), "whole-model pulls per client")
+        .opt(
+            "train-pushers",
+            Some("2"),
+            "concurrent training pushers for the serve-during-training row",
+        )
+        .opt(
+            "publish-every",
+            Some("8"),
+            "snapshot publish cadence (store updates) while training pushes land",
+        )
+        .opt("out", Some("BENCH_serve.json"), "output JSON path");
+    let p = spec.parse(argv)?;
+    let smoke = std::env::var("DTLSDA_BENCH_SMOKE").is_ok();
+    let params_mb = if smoke { 1.0 } else { p.f64("params-mb") };
+    let n_keys = p.usize("keys").max(1);
+    let clients = if smoke { 2 } else { p.usize("clients").max(1) };
+    let requests = if smoke { 8 } else { p.usize("requests").max(1) };
+    let pushers = if smoke { 1 } else { p.usize("train-pushers").max(1) };
+    let publish_every = p.u64("publish-every").max(1);
+
+    let elems = (((params_mb * 1e6 / 4.0) / n_keys as f64).max(1.0)) as usize;
+    let mut store =
+        crate::ps::shard::ShardStore::new(crate::ps::shard::Optimizer::Sgd { lr: 0.01 });
+    for k in 0..n_keys as u32 {
+        let data: Vec<f32> =
+            (0..elems).map(|i| ((k as usize * 31 + i) % 251) as f32 * 0.01 - 1.0).collect();
+        store.insert(k, crate::tensor::Tensor::from_vec(&[elems], data));
+    }
+    let mut srv = crate::ps::server::PsServerHandle::spawn_tcp(
+        "127.0.0.1:0",
+        store,
+        crate::ps::server::UpdateMode::Async,
+    )?;
+    srv.shared.store.publish_version();
+    let addr = srv.addr.to_string();
+    println!(
+        "serving {n_keys} keys x {elems} elems (~{:.1} MB) at {addr}: \
+         {clients} clients x {requests} pulls per row",
+        (n_keys * elems * 4) as f64 / 1e6
+    );
+
+    let dense = serve_round(&addr, PullCodec::None, clients, requests)?;
+    let quant = serve_round(&addr, PullCodec::Quant8, clients, requests)?;
+
+    // Serve-during-training: enable cadence publishing, hammer the
+    // store with pushes, and measure the same closed loop — pins must
+    // keep serving publish-time bytes while versions churn underneath.
+    srv.shared.set_serve_publish_every(publish_every);
+    let stop = Arc::new(AtomicBool::new(false));
+    let push_threads = spawn_serve_pushers(&addr, pushers, n_keys, elems, stop.clone());
+    let during = serve_round(&addr, PullCodec::Quant8, clients, requests)?;
+    stop.store(true, Ordering::Relaxed);
+    let mut train_pushes = 0u64;
+    for h in push_threads {
+        train_pushes += h.join().map_err(|_| "pusher panicked".to_string())??;
+    }
+
+    let wire_ratio = dense.wire_bytes as f64 / (quant.wire_bytes as f64).max(1.0);
+    let mut t = Table::new(&["row", "codec", "clients", "QPS", "p50 ms", "p99 ms", "wire MB"]);
+    let mut results = Vec::new();
+    for (name, codec, row) in [
+        ("serve", "none", &dense),
+        ("serve", "quant8", &quant),
+        ("serve-during-training", "quant8", &during),
+    ] {
+        t.row(&[
+            name.into(),
+            codec.into(),
+            clients.to_string(),
+            format!("{:.1}", row.qps),
+            format!("{:.3}", row.p50_ms),
+            format!("{:.3}", row.p99_ms),
+            format!("{:.2}", row.wire_bytes as f64 / 1e6),
+        ]);
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(name.into()));
+        m.insert("codec".to_string(), Json::Str(codec.into()));
+        m.insert("clients".to_string(), Json::Num(clients as f64));
+        m.insert("requests".to_string(), Json::Num((clients * requests) as f64));
+        m.insert("qps".to_string(), Json::Num(row.qps));
+        m.insert("p50_ms".to_string(), Json::Num(row.p50_ms));
+        m.insert("p99_ms".to_string(), Json::Num(row.p99_ms));
+        m.insert("wire_mb".to_string(), Json::Num(row.wire_bytes as f64 / 1e6));
+        results.push(Json::Obj(m));
+    }
+    t.print();
+    println!(
+        "quant8 serves {wire_ratio:.1}x fewer bytes per model than dense; \
+         {train_pushes} training pushes landed during the serving row"
+    );
+
+    let mut root = BTreeMap::new();
+    root.insert("results".to_string(), Json::Arr(results));
+    root.insert("serve_dense_qps".to_string(), Json::Num(dense.qps));
+    root.insert("serve_quant8_qps".to_string(), Json::Num(quant.qps));
+    root.insert("serve_during_training_qps".to_string(), Json::Num(during.qps));
+    root.insert(
+        "serve_wire_ratio_dense_over_quant8".to_string(),
+        Json::Num(wire_ratio),
+    );
+    root.insert("train_pushes_during_serve".to_string(), Json::Num(train_pushes as f64));
+    let out = p.str("out");
+    std::fs::write(&out, format!("{}\n", Json::Obj(root)))
+        .map_err(|e| format!("write {out}: {e}"))?;
+    println!("wrote {out}");
+    srv.shutdown();
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -725,6 +983,59 @@ mod tests {
         .unwrap();
         assert!(run(&argv(&["advisor-ps", "--codec", "bogus"])).is_err());
         assert!(run(&argv(&["advisor-ps", "--pull-codec", "bogus"])).is_err());
+    }
+
+    #[test]
+    fn advisor_ps_serving_lemma() {
+        run(&argv(&["advisor-ps", "--serve-qps", "100"])).unwrap();
+        run(&argv(&["advisor-ps", "--serve-qps", "100", "--serve-codec", "quant8"])).unwrap();
+        assert!(run(&argv(&["advisor-ps", "--serve-qps", "0"])).is_err());
+        assert!(run(&argv(&["advisor-ps", "--serve-qps", "bogus"])).is_err());
+        assert!(run(&argv(&["advisor-ps", "--serve-qps", "10", "--serve-codec", "bogus"]))
+            .is_err());
+    }
+
+    #[test]
+    fn serve_bench_writes_gated_json() {
+        // A tiny end-to-end run of the serving benchmark: real TCP
+        // server, closed-loop clients, training pushers — the JSON it
+        // writes must carry the summary keys bench-trend gates on.
+        let out = std::env::temp_dir().join(format!("BENCH_serve_test_{}.json", std::process::id()));
+        run(&argv(&[
+            "serve",
+            "--params-mb",
+            "0.02",
+            "--keys",
+            "4",
+            "--clients",
+            "2",
+            "--requests",
+            "3",
+            "--train-pushers",
+            "1",
+            "--publish-every",
+            "2",
+            "--out",
+            out.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        std::fs::remove_file(&out).ok();
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        for key in [
+            "serve_dense_qps",
+            "serve_quant8_qps",
+            "serve_during_training_qps",
+        ] {
+            let v = j.get(key).and_then(crate::util::json::Json::as_f64).unwrap();
+            assert!(v > 0.0, "{key} = {v}");
+        }
+        let ratio = j
+            .get("serve_wire_ratio_dense_over_quant8")
+            .and_then(crate::util::json::Json::as_f64)
+            .unwrap();
+        assert!(ratio >= 3.0, "wire ratio {ratio}");
+        assert_eq!(j.arr_field("results").unwrap().len(), 3);
     }
 
     #[test]

@@ -168,6 +168,11 @@ pub struct DistConfig {
     /// waiting for the tail. Off by default — dropping contributions
     /// changes convergence accounting.
     pub straggler_backpressure: bool,
+    /// Serving-tier snapshot cadence in store-clock ticks
+    /// (`--serve-publish-every`): every chain member publishes
+    /// versioned read snapshots so serve clients (`ps::serve`) can pin
+    /// and stream them during training. `None` = serving disabled.
+    pub serve_publish_every: Option<u64>,
 }
 
 impl Default for DistConfig {
@@ -198,6 +203,7 @@ impl Default for DistConfig {
             topology: None,
             bucket_bytes: None,
             straggler_backpressure: false,
+            serve_publish_every: None,
         }
     }
 }
@@ -838,6 +844,7 @@ pub fn run_distributed(artifacts_dir: &std::path::Path, cfg: &DistConfig) -> Res
     // every topology change.
     let routing_epoch = Arc::new(AtomicU64::new(0));
     let barrier_timeout = cfg.barrier_timeout_ms.map(Duration::from_millis);
+    let serve_publish_every = cfg.serve_publish_every;
 
     // Spawn one physical member of `shard`. `seed` = parameters to
     // preload (None = empty: a catch-up joiner receives its state via
@@ -858,6 +865,11 @@ pub fn run_distributed(artifacts_dir: &std::path::Path, cfg: &DistConfig) -> Res
             }
             if let Some(d) = barrier_timeout {
                 srv.shared.set_barrier_timeout(d);
+            }
+            if let Some(every) = serve_publish_every {
+                // Every chain member publishes (replicas included):
+                // serve reads are answered wherever they land.
+                srv.shared.set_serve_publish_every(every);
             }
             Ok(fleet.push(srv))
         })

@@ -67,7 +67,7 @@
 //! # Wire format
 //!
 //! Collective links are private rank-to-rank connections; their frames
-//! use tags ≥ 40, disjoint from `net::message` (which owns 1..=26), and
+//! use tags ≥ 40, disjoint from `net::message` (which owns 1..=29), and
 //! never pass through `Message::decode`:
 //!
 //! | frame | payload |
@@ -135,6 +135,7 @@ pub enum Topology {
 }
 
 impl Topology {
+    /// Parse a `--topology` flag value (`ring`, `tree` or `hd`).
     pub fn parse(s: &str) -> Result<Topology, String> {
         match s {
             "ring" => Ok(Topology::Ring),
@@ -144,6 +145,7 @@ impl Topology {
         }
     }
 
+    /// The flag spelling this topology parses from (for reports).
     pub fn name(&self) -> &'static str {
         match self {
             Topology::Ring => "ring",
@@ -216,6 +218,10 @@ pub struct Collective {
 }
 
 impl Collective {
+    /// Join the group as `rank` of `n`: validates the link table
+    /// (exactly `n` slots, no self-link) and arms every link's read
+    /// deadline. `shapes` registers the full model's key shapes —
+    /// identical on every rank, since any rank may finish any segment.
     pub fn new(
         rank: usize,
         n: usize,
@@ -269,10 +275,12 @@ impl Collective {
         self.inflight_buckets = buckets.max(1);
     }
 
+    /// This rank's index within the group.
     pub fn rank(&self) -> usize {
         self.rank
     }
 
+    /// Group size N.
     pub fn n_ranks(&self) -> usize {
         self.n
     }

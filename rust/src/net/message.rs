@@ -158,6 +158,32 @@ pub enum Message {
     Retire { worker: u32 },
     /// Server -> worker: retirement processed.
     RetireAck,
+    /// Serve client -> any chain member: describe the latest published
+    /// parameter snapshot (the read-only serving tier's version
+    /// resolution step). Deliberately **not** primary-gated and **not**
+    /// epoch-fenced: snapshots are immutable published versions, so a
+    /// replica — even a deposed one — answers serve reads directly
+    /// instead of bouncing them to the primary.
+    SnapshotInfo,
+    /// Any chain member -> serve client: the latest published snapshot.
+    /// `version` is the store clock at publish time — publishes happen
+    /// at deterministic points of the replicated apply stream (sync
+    /// step boundaries), so every chain member assigns the same version
+    /// numbers to the same bytes. `n_keys` is the snapshot's parameter
+    /// count (a whole-model pull streams exactly that many entries).
+    /// A server with nothing published answers `Error` instead.
+    SnapshotInfoReply { version: u64, clock: u64, n_keys: u32 },
+    /// Serve client -> any chain member: stream the parameters of the
+    /// **pinned** snapshot `version`. Empty `keys` means every key in
+    /// the snapshot. `quant8` selects the reply frame: a dense
+    /// [`PullReply`](Self::PullReply) (codec `none`) or a stateless
+    /// [`CompressedPullReply`](Self::CompressedPullReply) (codec
+    /// `quant8`, stamp 0) — both reply `clock` fields carry the
+    /// snapshot's `version`, so the client can verify its pin. A
+    /// version that has been retired from the server's bounded
+    /// retention window is answered with a `version retired` error the
+    /// client treats as "re-resolve and re-pin".
+    SnapshotPull { version: u64, quant8: bool, keys: Vec<u32> },
 }
 
 /// One entry of a [`CompressedPullReply`](Message::CompressedPullReply):
@@ -201,6 +227,9 @@ const T_COMPRESSED_PULL_REPLY: u8 = 23;
 const T_REPL_ACK: u8 = 24;
 const T_RETIRE: u8 = 25;
 const T_RETIRE_ACK: u8 = 26;
+const T_SNAPSHOT_INFO: u8 = 27;
+const T_SNAPSHOT_INFO_REPLY: u8 = 28;
+const T_SNAPSHOT_PULL: u8 = 29;
 
 /// Per-entry codec tags inside a `CompressedPush` body. A
 /// `CompressedPull`/`CompressedPullReply` reuses the same byte space for
@@ -210,6 +239,9 @@ const T_RETIRE_ACK: u8 = 26;
 const C_SPARSE: u8 = 1;
 const C_QUANT8: u8 = 2;
 const C_QUANT8_DELTA: u8 = 3;
+/// Codec byte of a `SnapshotPull` requesting dense (uncompressed)
+/// bodies; `C_QUANT8` requests the stateless quant8 encoding.
+const C_SERVE_DENSE: u8 = 0;
 
 impl Message {
     pub fn encode(&self) -> Vec<u8> {
@@ -372,6 +404,22 @@ impl Message {
                 w.u32(*worker);
             }
             Message::RetireAck => w.u8(T_RETIRE_ACK),
+            Message::SnapshotInfo => w.u8(T_SNAPSHOT_INFO),
+            Message::SnapshotInfoReply { version, clock, n_keys } => {
+                w.u8(T_SNAPSHOT_INFO_REPLY);
+                w.u64(*version);
+                w.u64(*clock);
+                w.u32(*n_keys);
+            }
+            Message::SnapshotPull { version, quant8, keys } => {
+                w.u8(T_SNAPSHOT_PULL);
+                w.u64(*version);
+                w.u8(if *quant8 { C_QUANT8 } else { C_SERVE_DENSE });
+                w.u32(keys.len() as u32);
+                for &k in keys {
+                    w.u32(k);
+                }
+            }
         }
     }
 
@@ -528,6 +576,26 @@ impl Message {
             T_REPL_ACK => Message::ReplAck { upto: r.u64()? },
             T_RETIRE => Message::Retire { worker: r.u32()? },
             T_RETIRE_ACK => Message::RetireAck,
+            T_SNAPSHOT_INFO => Message::SnapshotInfo,
+            T_SNAPSHOT_INFO_REPLY => Message::SnapshotInfoReply {
+                version: r.u64()?,
+                clock: r.u64()?,
+                n_keys: r.u32()?,
+            },
+            T_SNAPSHOT_PULL => {
+                let version = r.u64()?;
+                let quant8 = match r.u8()? {
+                    C_SERVE_DENSE => false,
+                    C_QUANT8 => true,
+                    other => return Err(format!("unknown serve codec {other}")),
+                };
+                let n = r.u32()? as usize;
+                let mut keys = Vec::with_capacity(n.min(1 << 16));
+                for _ in 0..n {
+                    keys.push(r.u32()?);
+                }
+                Message::SnapshotPull { version, quant8, keys }
+            }
             other => return Err(format!("unknown message tag {other}")),
         };
         if r.remaining() != 0 {
@@ -1080,6 +1148,30 @@ mod tests {
         roundtrip(Message::ReplAck { upto: 12 });
         roundtrip(Message::Retire { worker: 5 });
         roundtrip(Message::RetireAck);
+    }
+
+    #[test]
+    fn serve_snapshot_variants_roundtrip() {
+        roundtrip(Message::SnapshotInfo);
+        roundtrip(Message::SnapshotInfoReply { version: 42, clock: 42, n_keys: 7 });
+        roundtrip(Message::SnapshotInfoReply { version: 0, clock: 0, n_keys: 0 });
+        roundtrip(Message::SnapshotPull { version: 42, quant8: false, keys: vec![0, 3, 9] });
+        roundtrip(Message::SnapshotPull { version: 1, quant8: true, keys: vec![] });
+    }
+
+    #[test]
+    fn serve_snapshot_pull_rejects_malformed() {
+        // Unknown codec byte in the request.
+        let mut buf = Message::SnapshotPull { version: 5, quant8: true, keys: vec![1] }.encode();
+        buf[9] = 99; // the codec byte sits right after tag + u64 version
+        assert!(Message::decode(&buf).is_err());
+        // Trailing bytes after the key list.
+        let mut buf = Message::SnapshotPull { version: 5, quant8: false, keys: vec![1] }.encode();
+        buf.push(0);
+        assert!(Message::decode(&buf).is_err());
+        // Truncated info reply.
+        let buf = Message::SnapshotInfoReply { version: 1, clock: 2, n_keys: 3 }.encode();
+        assert!(Message::decode(&buf[..buf.len() - 1]).is_err());
     }
 
     #[test]

@@ -117,6 +117,7 @@ pub struct PsClient {
 }
 
 impl PsClient {
+    /// Build a client with no gradient compression ([`CodecKind::None`]).
     pub fn new(worker_id: u32, transports: Vec<Box<dyn Transport>>, router: Router) -> Self {
         Self::with_codec(worker_id, transports, router, CodecKind::None)
     }
@@ -214,6 +215,7 @@ impl PsClient {
         self.codec = codec;
     }
 
+    /// The active push-direction gradient codec.
     pub fn codec(&self) -> CodecKind {
         self.codec
     }
@@ -232,6 +234,7 @@ impl PsClient {
         self.pull_codec = codec;
     }
 
+    /// The active pull-direction codec.
     pub fn pull_codec(&self) -> PullCodec {
         self.pull_codec
     }
@@ -253,6 +256,7 @@ impl PsClient {
         self.pull_wire_bytes
     }
 
+    /// The key→server routing table this client shards requests with.
     pub fn router(&self) -> &Router {
         &self.router
     }

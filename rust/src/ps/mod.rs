@@ -10,6 +10,9 @@
 //! * [`client`] — worker-side connection fan-out: pull/push across all
 //!   servers, with a prefetch thread to hide I/O behind compute (§3.3's
 //!   ideal-pipeline condition).
+//! * [`serve`](mod@serve)  — read-only serving tier: clients pin a published
+//!   snapshot version and stream it from any chain member
+//!   ([`ServeClient`]); the write path never blocks these reads.
 //! * [`replica`] — chain replication: each shard's primary forwards
 //!   admitted push frames (with their `(worker, step, seq)` tags, so
 //!   replicas build identical dedup watermarks) down a chain of R−1
@@ -54,6 +57,9 @@
 //! | `SnapshotChunk`   | `u32 n, n × (u32 key, tensor, u8 has_vel, [tensor])` |
 //! | `CatchUpDone`     | `u64 clock, u64 epoch, seq watermarks + sync state (see `net::message`)` |
 //! | `Join`            | `u64 epoch`                                      |
+//! | `SnapshotInfo`    | —                                                |
+//! | `SnapshotInfoReply` | `u64 version, u64 clock, u32 n_keys`           |
+//! | `SnapshotPull`    | `u64 version, u8 codec (0 dense / 2 quant8), u32 n, n × u32 key` |
 //!
 //! The worker-op `epoch` stamp is the client's routing epoch — servers
 //! fence ops whose stamp does not exactly match their own (see
@@ -174,6 +180,7 @@ pub mod client;
 pub mod compress;
 pub mod replica;
 pub mod router;
+pub mod serve;
 pub mod server;
 pub mod shard;
 
@@ -183,5 +190,6 @@ pub use compress::{
 };
 pub use replica::NOT_PRIMARY;
 pub use router::{ReplicatedTopology, Router};
+pub use serve::{ServeClient, SnapshotStat, NO_SNAPSHOT, VERSION_RETIRED};
 pub use server::{serve, PsServerHandle, PsShared, UpdateMode};
-pub use shard::{Optimizer, ShardStore, StripedStore, DEFAULT_STRIPES};
+pub use shard::{Optimizer, ShardStore, Snapshot, StripedStore, DEFAULT_SERVE_VERSIONS, DEFAULT_STRIPES};

@@ -1,0 +1,444 @@
+//! Read-only parameter serving tier (the inference read path).
+//!
+//! Training produces a model; this module is how that model is *read*
+//! at scale. The [`StripedStore`](super::shard::StripedStore) publishes
+//! versioned, immutable [`Snapshot`](super::shard::Snapshot)s at
+//! deterministic points of the replicated apply stream (sync step
+//! boundaries, or clock intervals in async mode), and every chain
+//! member — primary *and* replicas — answers the serve wire ops
+//! directly:
+//!
+//! * `SnapshotInfo` / `SnapshotInfoReply` — resolve the latest
+//!   published version (its version stamp, store clock, key count).
+//! * `SnapshotPull` — stream the parameters of a **pinned** version,
+//!   either as a dense `PullReply` (codec `none`) or a stateless quant8
+//!   `CompressedPullReply` (codec `quant8`); both reply `clock` fields
+//!   echo the pinned version.
+//!
+//! The consistency contract: a client pins one version for a whole
+//! forward pass, and every pull against that pin returns the
+//! publish-time bytes no matter how much training lands concurrently —
+//! snapshots are immutable `Arc`s, so serve reads never take a stripe
+//! lock and training pushes never block reads. Versions eventually
+//! retire (bounded retention); a [`VERSION_RETIRED`] error tells the
+//! client to re-resolve and re-pin, which [`ServeClient::pull_model`]
+//! does automatically.
+//!
+//! Failover: serve ops are deliberately **not** primary-gated and
+//! **not** epoch-fenced. Versions are assigned from the store clock at
+//! deterministic publish points of the replicated apply stream, so
+//! every chain member holds the same versions with the same bytes, and
+//! the quant8 encoding is a pure function of those bytes
+//! ([`quantize8_dense`](super::compress::quantize8_dense)) — any
+//! replica serves a pinned version byte-identically after the client
+//! fails over mid-pass (chaos-pinned in `tests/chaos.rs`).
+//!
+//! Capacity planning: `advisor::lemmas::serve_qps_per_replica` /
+//! `num_serve_replicas` answer "how many read replicas for Q QPS" from
+//! the model size, the per-replica bandwidth and the codec ratio; the
+//! `serve` CLI subcommand measures the same numbers with a closed-loop
+//! QPS benchmark (`BENCH_serve.json`, gated in bench-trend).
+
+use std::collections::BTreeMap;
+
+use crate::net::message::Message;
+use crate::net::transport::Transport;
+use crate::ps::compress::PullCodec;
+use crate::tensor::Tensor;
+
+/// Error marker a server returns for a `SnapshotPull` of a version that
+/// has been evicted from its bounded retention window. Clients treat it
+/// as "re-resolve the latest version and re-pin", never as fatal.
+pub const VERSION_RETIRED: &str = "version retired";
+
+/// Error marker for `SnapshotInfo` on a server that has not published
+/// any snapshot yet (serving disabled, or the first publish point has
+/// not been reached).
+pub const NO_SNAPSHOT: &str = "no snapshot published";
+
+/// True when a server error string is the [`VERSION_RETIRED`] marker.
+pub fn is_version_retired(e: &str) -> bool {
+    e.contains(VERSION_RETIRED)
+}
+
+/// The latest published snapshot as reported by `SnapshotInfoReply`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SnapshotStat {
+    /// Version stamp (the serving identity a client pins).
+    pub version: u64,
+    /// The server's live store clock at reply time (how far training
+    /// has advanced past the snapshot).
+    pub clock: u64,
+    /// Parameters in the snapshot.
+    pub n_keys: u32,
+}
+
+/// Re-dial handler invoked when the serving connection fails: attempt
+/// number (1-based) in, fresh transport out. The serve CLI hands out a
+/// closure that round-robins the chain members, which is what turns a
+/// replica kill into a transparent failover.
+pub type Reconnect = Box<dyn FnMut(usize) -> Result<Box<dyn Transport>, String> + Send>;
+
+/// Read-only serving client: resolves snapshot versions, pins one, and
+/// streams its parameters from any chain member.
+///
+/// Unlike [`PsClient`](super::client::PsClient) this client never
+/// writes: no epoch stamps, no seq watermarks, no per-worker server
+/// state. Every pull names an explicit pinned version, so a reconnect
+/// mid-pass (crash of the serving replica) simply re-issues the same
+/// pull against the next endpoint and receives byte-identical data.
+pub struct ServeClient {
+    t: Box<dyn Transport>,
+    reconnect: Option<Reconnect>,
+    retry_limit: usize,
+    codec: PullCodec,
+    pinned: Option<u64>,
+    /// Reply bytes received off the wire (per-codec traffic
+    /// accounting for the serve benchmark).
+    pub wire_bytes: u64,
+}
+
+impl ServeClient {
+    pub fn new(t: Box<dyn Transport>) -> Self {
+        ServeClient {
+            t,
+            reconnect: None,
+            retry_limit: 3,
+            codec: PullCodec::None,
+            pinned: None,
+            wire_bytes: 0,
+        }
+    }
+
+    /// Install the failover re-dial handler (no reconnect without one:
+    /// the first transport error is final).
+    pub fn set_reconnect(&mut self, f: Reconnect) {
+        self.reconnect = Some(f);
+    }
+
+    /// How many reconnect-and-retry rounds an op attempts before its
+    /// transport error becomes the caller's.
+    pub fn set_retry_limit(&mut self, n: usize) {
+        self.retry_limit = n;
+    }
+
+    /// Reply codec for pulls. Serve pulls are stateless, so
+    /// [`PullCodec::Quant8Delta`] is served as plain quant8.
+    pub fn set_codec(&mut self, codec: PullCodec) {
+        self.codec = codec;
+    }
+
+    /// The currently pinned version, if any.
+    pub fn pinned(&self) -> Option<u64> {
+        self.pinned
+    }
+
+    /// Pin an explicit version (tests, cross-replica byte comparisons).
+    pub fn pin(&mut self, version: u64) {
+        self.pinned = Some(version);
+    }
+
+    /// Resolve the server's latest published snapshot.
+    pub fn info(&mut self) -> Result<SnapshotStat, String> {
+        match self.rpc(&Message::SnapshotInfo)? {
+            Message::SnapshotInfoReply { version, clock, n_keys } => {
+                Ok(SnapshotStat { version, clock, n_keys })
+            }
+            Message::Error { what } => Err(what),
+            other => Err(format!("unexpected info reply {other:?}")),
+        }
+    }
+
+    /// Resolve the latest version and pin it for subsequent pulls.
+    pub fn pin_latest(&mut self) -> Result<u64, String> {
+        let stat = self.info()?;
+        self.pinned = Some(stat.version);
+        Ok(stat.version)
+    }
+
+    /// Pull `keys` (empty = the whole model) of the pinned version.
+    /// Every entry carries the publish-time bytes of that version —
+    /// concurrent training never shows through a pin. A
+    /// [`VERSION_RETIRED`] server error surfaces as `Err` (the caller
+    /// re-resolves, or uses [`pull_model`](Self::pull_model) which
+    /// does); transport errors fail over through the reconnect handler
+    /// and re-issue the same versioned pull.
+    pub fn pull(&mut self, keys: &[u32]) -> Result<BTreeMap<u32, Tensor>, String> {
+        let version = self.pinned.ok_or("no version pinned")?;
+        let quant8 = !matches!(self.codec, PullCodec::None);
+        let req = Message::SnapshotPull { version, quant8, keys: keys.to_vec() };
+        match self.rpc(&req)? {
+            Message::PullReply { clock, entries } => {
+                if clock != version {
+                    return Err(format!("reply version {clock} != pinned {version}"));
+                }
+                Ok(entries.into_iter().collect())
+            }
+            Message::CompressedPullReply { clock, stamp: _, entries } => {
+                if clock != version {
+                    return Err(format!("reply version {clock} != pinned {version}"));
+                }
+                let mut out = BTreeMap::new();
+                for e in entries {
+                    if e.delta {
+                        return Err(format!("serve pull entry {} is a delta", e.key));
+                    }
+                    out.insert(e.key, e.body.decompress(&e.shape));
+                }
+                Ok(out)
+            }
+            Message::Error { what } => Err(what),
+            other => Err(format!("unexpected pull reply {other:?}")),
+        }
+    }
+
+    /// Pull the whole model at the latest servable version: pin, pull
+    /// every key, and transparently re-resolve when the pin retires
+    /// under us (training published past the retention window while we
+    /// streamed). Returns the served version and its parameters.
+    pub fn pull_model(&mut self) -> Result<(u64, BTreeMap<u32, Tensor>), String> {
+        // One re-resolve per retained version is the worst case; a few
+        // extra rounds absorb failover races.
+        for _ in 0..8 {
+            let version = self.pin_latest()?;
+            match self.pull(&[]) {
+                Ok(entries) => return Ok((version, entries)),
+                Err(e) if is_version_retired(&e) => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Err("version retired on every re-resolve attempt".into())
+    }
+
+    /// One request/reply round with failover: a transport error
+    /// re-dials through the reconnect handler and re-sends the same
+    /// request, up to the retry limit. Server-side `Error` frames are
+    /// NOT retried — they are protocol answers (retired version,
+    /// unknown key), not connectivity.
+    fn rpc(&mut self, msg: &Message) -> Result<Message, String> {
+        let mut attempt = 0;
+        loop {
+            let sent = self.t.send(msg).and_then(|()| self.recv_counted());
+            match sent {
+                Ok(reply) => return Ok(reply),
+                Err(e) => {
+                    attempt += 1;
+                    let Some(reconnect) = self.reconnect.as_mut() else {
+                        return Err(e);
+                    };
+                    if attempt > self.retry_limit {
+                        return Err(format!("serve retry limit exceeded: {e}"));
+                    }
+                    match reconnect(attempt) {
+                        Ok(t) => self.t = t,
+                        Err(re) => return Err(format!("{e}; reconnect failed: {re}")),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Receive one frame, decode it, and account its wire bytes.
+    fn recv_counted(&mut self) -> Result<Message, String> {
+        let mut decoded: Option<Message> = None;
+        let mut bytes = 0u64;
+        self.t.recv_with(&mut |frame| {
+            bytes = frame.len() as u64;
+            decoded = Some(Message::decode(frame)?);
+            Ok(())
+        })?;
+        self.wire_bytes += bytes;
+        decoded.ok_or_else(|| "empty serve reply".into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+    use std::thread;
+
+    use super::*;
+    use crate::net::transport::InProcTransport;
+    use crate::ps::server::{serve, PsShared, UpdateMode};
+    use crate::ps::shard::{Optimizer, ShardStore};
+
+    fn store_with(keys: &[(u32, Vec<f32>)]) -> ShardStore {
+        let mut s = ShardStore::new(Optimizer::Sgd { lr: 0.5 });
+        for (k, v) in keys {
+            s.insert(*k, Tensor::from_vec(&[v.len()], v.clone()));
+        }
+        s
+    }
+
+    fn client_to(shared: &Arc<PsShared>) -> ServeClient {
+        let (a, b) = InProcTransport::pair();
+        let sh = shared.clone();
+        thread::spawn(move || serve(Box::new(b), sh));
+        ServeClient::new(Box::new(a))
+    }
+
+    #[test]
+    fn info_before_any_publish_is_no_snapshot() {
+        let shared = PsShared::new(store_with(&[(0, vec![1.0])]), UpdateMode::Async);
+        let mut c = client_to(&shared);
+        let err = c.info().unwrap_err();
+        assert!(err.contains(NO_SNAPSHOT), "{err}");
+        shared.halt();
+    }
+
+    #[test]
+    fn pinned_version_survives_concurrent_training_byte_identically() {
+        // The torn-read pin: a serve client streaming a pinned version
+        // while training pushes hammer the store must receive exactly
+        // the publish-time bytes, for both codecs.
+        let shared = PsShared::new(
+            store_with(&[(0, vec![1.0, 2.0, 3.0]), (1, vec![-4.0]), (2, vec![0.5; 64])]),
+            UpdateMode::Async,
+        );
+        let v = shared.store.publish_version();
+        let reference: Vec<(u32, Tensor)> =
+            [0u32, 1, 2].iter().map(|&k| (k, shared.store.get_clone(k).unwrap())).collect();
+        // Training mutates the store concurrently with the pulls below.
+        let trainer = {
+            let shared = shared.clone();
+            thread::spawn(move || {
+                for i in 0..200 {
+                    let k = i % 3;
+                    let len = [3, 1, 64][k as usize];
+                    let g = Tensor::from_vec(&[len], vec![0.1; len]);
+                    shared.store.apply_grad(k, &g).unwrap();
+                }
+            })
+        };
+        for codec in [PullCodec::None, PullCodec::Quant8] {
+            let mut c = client_to(&shared);
+            c.set_codec(codec);
+            c.pin(v);
+            for _ in 0..20 {
+                let got = c.pull(&[]).unwrap();
+                assert_eq!(got.len(), 3);
+                for (k, want) in &reference {
+                    let got = &got[k];
+                    if codec == PullCodec::None {
+                        assert_eq!(got.data(), want.data(), "key {k} dense");
+                    } else {
+                        // Quant8 is lossy but deterministic: compare
+                        // against quantizing the pinned reference.
+                        let q = crate::ps::compress::quantize8_dense(want.data());
+                        assert_eq!(got.data(), q.decompress(want.shape()).data(), "key {k} q8");
+                    }
+                }
+            }
+            assert!(c.wire_bytes > 0);
+        }
+        trainer.join().unwrap();
+        // The live store has moved on; a fresh pin serves the new bytes.
+        let v2 = shared.store.publish_version();
+        assert!(v2 > v);
+        let mut c = client_to(&shared);
+        let stat = c.info().unwrap();
+        assert_eq!(stat.version, v2);
+        assert_eq!(stat.n_keys, 3);
+        shared.halt();
+    }
+
+    #[test]
+    fn quant8_pull_is_smaller_on_the_wire_than_dense() {
+        let shared =
+            PsShared::new(store_with(&[(0, vec![0.25; 4096])]), UpdateMode::Async);
+        shared.store.publish_version();
+        let mut bytes = Vec::new();
+        for codec in [PullCodec::None, PullCodec::Quant8] {
+            let mut c = client_to(&shared);
+            c.set_codec(codec);
+            c.pin_latest().unwrap();
+            c.pull(&[]).unwrap();
+            bytes.push(c.wire_bytes);
+        }
+        assert!(
+            bytes[0] as f64 / bytes[1] as f64 >= 3.0,
+            "dense {} vs quant8 {}",
+            bytes[0],
+            bytes[1]
+        );
+        shared.halt();
+    }
+
+    #[test]
+    fn retired_version_errors_and_pull_model_re_resolves() {
+        let shared = PsShared::new(store_with(&[(0, vec![0.0; 4])]), UpdateMode::Async);
+        let v1 = shared.store.publish_version();
+        let mut c = client_to(&shared);
+        c.pin(v1);
+        // Publish past the retention bound (default keeps 2): v1 dies.
+        for _ in 0..2 {
+            shared.store.apply_grad(0, &Tensor::from_vec(&[4], vec![1.0; 4])).unwrap();
+            shared.store.publish_version();
+        }
+        let err = c.pull(&[]).unwrap_err();
+        assert!(is_version_retired(&err), "{err}");
+        // pull_model re-resolves to a servable version.
+        let (v, entries) = c.pull_model().unwrap();
+        assert!(v > v1);
+        assert_eq!(entries.len(), 1);
+        shared.halt();
+    }
+
+    #[test]
+    fn unknown_key_and_unpinned_pull_error() {
+        let shared = PsShared::new(store_with(&[(0, vec![1.0])]), UpdateMode::Async);
+        shared.store.publish_version();
+        let mut c = client_to(&shared);
+        assert!(c.pull(&[0]).unwrap_err().contains("no version pinned"));
+        c.pin_latest().unwrap();
+        let err = c.pull(&[0, 9]).unwrap_err();
+        assert!(err.contains("unknown key 9"), "{err}");
+        shared.halt();
+    }
+
+    #[test]
+    fn replicas_serve_reads_and_failover_is_byte_identical() {
+        // Two chain members holding the same store bytes publish the
+        // same version; killing the one a client streams from fails the
+        // pull over to the other, byte-identically — the serve tier's
+        // failover contract (the TCP + mid-training variant lives in
+        // tests/chaos.rs).
+        let seed: &[(u32, Vec<f32>)] = &[(0, vec![1.5, -2.5]), (1, vec![0.125; 32])];
+        let a = PsShared::new(store_with(seed), UpdateMode::Async);
+        let b = PsShared::new(store_with(seed), UpdateMode::Async);
+        b.set_role_replica();
+        let va = a.store.publish_version();
+        let vb = b.store.publish_version();
+        assert_eq!(va, vb);
+        for codec in [PullCodec::None, PullCodec::Quant8] {
+            let mut c = client_to(&a);
+            c.set_codec(codec);
+            c.pin(va);
+            let from_a = c.pull(&[]).unwrap();
+            // A replica answers serve reads directly, primary gate and
+            // epoch fence notwithstanding.
+            let mut cb = client_to(&b);
+            cb.set_codec(codec);
+            cb.pin(vb);
+            let from_b = cb.pull(&[]).unwrap();
+            assert_eq!(from_a, from_b);
+            // Kill the connection mid-pass: the reconnect handler dials
+            // the replica and the SAME pinned pull completes with the
+            // SAME bytes.
+            let mut dead = ServeClient::new(Box::new(InProcTransport::pair().0));
+            dead.set_codec(codec);
+            dead.pin(va);
+            let b2 = b.clone();
+            dead.set_reconnect(Box::new(move |_| {
+                let (x, y) = InProcTransport::pair();
+                let sh = b2.clone();
+                thread::spawn(move || serve(Box::new(y), sh));
+                Ok(Box::new(x))
+            }));
+            let failed_over = dead.pull(&[]).unwrap();
+            assert_eq!(failed_over, from_a);
+        }
+        a.halt();
+        b.halt();
+    }
+}

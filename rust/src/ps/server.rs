@@ -64,6 +64,7 @@ use std::thread::{self, JoinHandle};
 
 use super::compress::{quantize8_dense, CompressedRef, DenseRef};
 use super::replica::{self, ReplicationState, NOT_PRIMARY, STALE_EPOCH};
+use super::serve::{NO_SNAPSHOT, VERSION_RETIRED};
 use super::shard::{ShardStore, StripedStore, DEFAULT_STRIPES};
 use crate::net::message::{wire, Message, EPOCH_UNFENCED};
 use crate::net::transport::{TcpTransport, Transport};
@@ -123,6 +124,12 @@ pub struct Counters {
     /// Reply bytes sent in the pull direction (dense and compressed),
     /// counted per successfully encoded reply frame.
     pub pull_wire_bytes: AtomicU64,
+    /// `SnapshotPull` requests answered (the serving-tier read path;
+    /// worker `pulls` are counted separately).
+    pub serve_pulls: AtomicU64,
+    /// Reply bytes sent for `SnapshotPull`s, per successfully encoded
+    /// frame — the serve benchmark's bytes-on-wire source.
+    pub serve_wire_bytes: AtomicU64,
 }
 
 /// One stripe's sync aggregation: `step -> key -> (running gradient
@@ -283,6 +290,12 @@ pub struct PsShared {
     /// (straggler backpressure): the effective backup count is the max
     /// of the static config and this. 0 = no override.
     backup_workers_override: AtomicUsize,
+    /// Serve-snapshot publish cadence in store-clock ticks; 0 disables
+    /// publishing (the default — serving is opt-in per server).
+    serve_publish_every: AtomicU64,
+    /// Store clock at the last snapshot publish (cadence bookkeeping
+    /// for [`maybe_publish`](Self::maybe_publish)).
+    last_published: AtomicU64,
 }
 
 impl PsShared {
@@ -310,6 +323,8 @@ impl PsShared {
             pull_stamp: AtomicU64::new(0),
             repl_ack_timeout_ms: AtomicU64::new(REPL_ACK_TIMEOUT.as_millis() as u64),
             backup_workers_override: AtomicUsize::new(0),
+            serve_publish_every: AtomicU64::new(0),
+            last_published: AtomicU64::new(0),
         })
     }
 
@@ -438,6 +453,43 @@ impl PsShared {
             self.evict_pull_cache(worker, "incarnation bump");
         }
         admitted
+    }
+
+    /// Enable serve-snapshot publishing every `every` store-clock ticks
+    /// (0 disables). Publishes once immediately when enabling, so a
+    /// freshly-seeded server is servable before the first push lands.
+    ///
+    /// In **sync** mode publishes happen at step-release boundaries —
+    /// points every chain member reaches at the same replicated-stream
+    /// position — so the same versions hold the same bytes on the
+    /// primary and every replica (the serving tier's failover
+    /// contract). In **async** mode publish points are per-server
+    /// best-effort: concurrent worker threads race the clock threshold,
+    /// so replicas may publish at slightly different clocks than the
+    /// primary; pin-and-compare across members only where the applied
+    /// prefix is known equal (e.g. quiesced stores).
+    pub fn set_serve_publish_every(&self, every: u64) {
+        self.serve_publish_every.store(every, Ordering::Relaxed);
+        if every > 0 {
+            let v = self.store.publish_version();
+            self.last_published.store(v, Ordering::Relaxed);
+        }
+    }
+
+    /// Publish a serve snapshot if the cadence is enabled and the store
+    /// clock advanced past the last publish by at least the cadence.
+    /// One relaxed atomic load when disabled — cheap enough for the
+    /// push hot path.
+    fn maybe_publish(&self) {
+        let every = self.serve_publish_every.load(Ordering::Relaxed);
+        if every == 0 {
+            return;
+        }
+        let clock = self.store.clock();
+        if clock >= self.last_published.load(Ordering::Relaxed).saturating_add(every) {
+            let v = self.store.publish_version();
+            self.last_published.store(v, Ordering::Relaxed);
+        }
     }
 
     /// Number of distinct sync steps currently buffered across arrival
@@ -583,6 +635,10 @@ fn handle_compressed_push(frame: &[u8], shared: &PsShared, origin: PushOrigin) -
                 }
             }
             await_tail_acks_for(shared, origin, &ack_targets);
+            // Async-mode serve publish point (per-server cadence; see
+            // [`PsShared::set_serve_publish_every`] for the weaker
+            // cross-member determinism in this mode).
+            shared.maybe_publish();
             Message::PushAck { clock: shared.store.clock() }
         }
         UpdateMode::Sync { .. } => {
@@ -695,6 +751,10 @@ fn handle_dense_push(frame: &[u8], shared: &PsShared, origin: PushOrigin) -> Mes
                 }
             }
             await_tail_acks_for(shared, origin, &ack_targets);
+            // Async-mode serve publish point (per-server cadence; see
+            // [`PsShared::set_serve_publish_every`] for the weaker
+            // cross-member determinism in this mode).
+            shared.maybe_publish();
             Message::PushAck { clock: shared.store.clock() }
         }
         UpdateMode::Sync { .. } => {
@@ -896,6 +956,13 @@ fn release_step(shared: &PsShared, bar: &mut BarrierState, step: u64) -> bool {
     if let Some(conns) = repl.as_deref_mut() {
         replica::forward_release(conns, step);
     }
+    // Serve-snapshot publish point: a step release happens at the same
+    // replicated-stream position on every chain member (the primary
+    // releases here from its barrier; replicas release from the
+    // forwarded `ReplRelease`), so published versions and their bytes
+    // match chain-wide — any member serves a pinned version
+    // byte-identically.
+    shared.maybe_publish();
     true
 }
 
@@ -931,6 +998,67 @@ fn send_stateless_pull(
         shared
             .counters
             .pull_wire_bytes
+            .fetch_add((w.len() - frame_start) as u64, Ordering::Relaxed);
+    })
+}
+
+/// Answer a `SnapshotPull` against a pinned published version: the
+/// reply streams the snapshot's immutable `Arc`-shared stripes — never
+/// the live store, never a stripe lock — so concurrent training cannot
+/// tear or even delay the read. Dense requests get a `PullReply`,
+/// quant8 requests a stateless `CompressedPullReply` (stamp 0, every
+/// entry absolute); both reply `clock` fields carry the snapshot
+/// version so the client can verify its pin. Empty `keys` means the
+/// whole model. A version outside the retention window gets a
+/// [`VERSION_RETIRED`] error (the client re-resolves); an unknown key
+/// rolls the partial body back into an `Error` frame like the worker
+/// pull paths.
+fn send_snapshot_pull(
+    t: &mut Box<dyn Transport>,
+    shared: &PsShared,
+    version: u64,
+    quant8: bool,
+    keys: &[u32],
+) -> Result<(), String> {
+    shared.counters.serve_pulls.fetch_add(1, Ordering::Relaxed);
+    let Some(snap) = shared.store.snapshot_at(version) else {
+        return t.send(&Message::Error {
+            what: format!(
+                "{VERSION_RETIRED}: {version} (retained {:?})",
+                shared.store.published_versions()
+            ),
+        });
+    };
+    let all_keys;
+    let keys = if keys.is_empty() {
+        all_keys = snap.keys();
+        &all_keys[..]
+    } else {
+        keys
+    };
+    t.send_with(&mut |w| {
+        let frame_start = w.len();
+        if quant8 {
+            wire::compressed_pull_reply_header(w, snap.version(), 0, keys.len() as u32);
+        } else {
+            wire::pull_reply_header(w, snap.version(), keys.len() as u32);
+        }
+        for &k in keys {
+            let Some(tensor) = snap.get(k) else {
+                w.truncate(frame_start);
+                Message::Error { what: format!("unknown key {k}") }.encode_into(w);
+                return;
+            };
+            if quant8 {
+                let c = quantize8_dense(tensor.data());
+                wire::compressed_pull_entry(&mut *w, k, false, tensor.shape(), &c);
+            } else {
+                wire::entry(&mut *w, k, tensor);
+            }
+        }
+        shared
+            .counters
+            .serve_wire_bytes
             .fetch_add((w.len() - frame_start) as u64, Ordering::Relaxed);
     })
 }
@@ -1438,6 +1566,29 @@ pub fn serve(mut t: Box<dyn Transport>, shared: Arc<PsShared>) {
                 shared.halt();
                 return;
             }
+            Message::SnapshotInfo => {
+                // Serving-tier version resolution. Deliberately neither
+                // primary-gated nor epoch-fenced: snapshot reads are
+                // version-pinned and immutable, so replicas answer them
+                // directly — that IS the read-scaling story.
+                let reply = match shared.store.latest_snapshot() {
+                    Some(snap) => Message::SnapshotInfoReply {
+                        version: snap.version(),
+                        clock: shared.store.clock(),
+                        n_keys: snap.n_keys() as u32,
+                    },
+                    None => Message::Error { what: NO_SNAPSHOT.into() },
+                };
+                if t.send(&reply).is_err() {
+                    return;
+                }
+            }
+            Message::SnapshotPull { version, quant8, keys } => {
+                // Version-pinned serve read; ungated like SnapshotInfo.
+                if send_snapshot_pull(&mut t, &shared, version, quant8, &keys).is_err() {
+                    return;
+                }
+            }
             other => {
                 let _ = t.send(&Message::Error {
                     what: format!("unexpected message {other:?}"),
@@ -1707,6 +1858,54 @@ mod tests {
             }
             m => panic!("{m:?}"),
         }
+        drop(c);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn serve_publish_cadence_tracks_pushes() {
+        // Enabling the cadence publishes immediately (a seeded server is
+        // servable before any training); each push past the cadence
+        // publishes a fresh version pinned at that clock.
+        let store = store_with(&[(0, vec![0.0])], Optimizer::Sgd { lr: 1.0 });
+        let shared = PsShared::new(store, UpdateMode::Async);
+        assert!(shared.store.latest_snapshot().is_none());
+        shared.set_serve_publish_every(1);
+        let v0 = shared.store.latest_snapshot().unwrap().version();
+        let (client_end, server_end) = InProcTransport::pair();
+        let h = thread::spawn({
+            let sh = shared.clone();
+            move || serve(Box::new(server_end), sh)
+        });
+        let mut c: Box<dyn Transport> = Box::new(client_end);
+        for seq in 0..3 {
+            c.send(&Message::Push {
+                worker: 0,
+                step: seq,
+                seq,
+                epoch: u64::MAX,
+                entries: vec![(0, Tensor::from_vec(&[1], vec![1.0]))],
+            })
+            .unwrap();
+            assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+        }
+        let latest = shared.store.latest_snapshot().unwrap();
+        assert!(latest.version() > v0);
+        assert_eq!(latest.version(), shared.store.clock());
+        // The snapshot pins the post-push bytes.
+        assert_eq!(latest.get(0).unwrap().data(), &[-3.0]);
+        // Serve counters moved through the wire path.
+        c.send(&Message::SnapshotPull { version: latest.version(), quant8: false, keys: vec![0] })
+            .unwrap();
+        match c.recv().unwrap() {
+            Message::PullReply { clock, entries } => {
+                assert_eq!(clock, latest.version());
+                assert_eq!(entries[0].1.data(), &[-3.0]);
+            }
+            m => panic!("{m:?}"),
+        }
+        assert_eq!(shared.counters.serve_pulls.load(Ordering::Relaxed), 1);
+        assert!(shared.counters.serve_wire_bytes.load(Ordering::Relaxed) > 0);
         drop(c);
         h.join().unwrap();
     }

@@ -11,7 +11,7 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::RwLock;
+use std::sync::{Arc, RwLock};
 
 use super::compress::{CompressedRef, DenseRef};
 use crate::tensor::Tensor;
@@ -119,12 +119,75 @@ impl ShardStore {
 /// count keeps collision probability low without bloating memory.
 pub const DEFAULT_STRIPES: usize = 16;
 
+/// How many published serve snapshots a store retains by default. Two
+/// lets an in-flight serve client finish streaming its pinned version
+/// while the next one is already published; older versions answer
+/// `version retired` and the client re-resolves.
+pub const DEFAULT_SERVE_VERSIONS: usize = 2;
+
 /// One stripe's mutable state: the subset of parameters whose
 /// `key % n_stripes` lands here, plus their momentum velocity.
 #[derive(Debug, Default)]
 struct Stripe {
     params: BTreeMap<u32, Tensor>,
     velocity: BTreeMap<u32, Tensor>,
+    /// Set by every parameter mutation, cleared when a serve snapshot
+    /// clones this stripe: [`StripedStore::publish_version`] reuses the
+    /// previous snapshot's `Arc` for stripes that have not changed
+    /// (copy-on-write at stripe granularity), so steady-state publishes
+    /// of a partly-quiet model cost only the dirty stripes.
+    dirty: AtomicBool,
+}
+
+/// One published, immutable serving snapshot: every parameter of the
+/// store at a single consistent cut, stamped with the store clock at
+/// publish time as its `version`.
+///
+/// Snapshots are held and handed out as `Arc`s — a serve read touches
+/// only this immutable structure, never a stripe lock, so training
+/// pushes and snapshot streaming never block each other. Publishes at
+/// deterministic points of the replicated apply stream (sync step
+/// boundaries via `ReplRelease`) assign identical versions to identical
+/// bytes on every chain member, which is what lets any replica serve a
+/// pinned version byte-identically after a failover.
+#[derive(Debug)]
+pub struct Snapshot {
+    version: u64,
+    /// Per-stripe parameter maps; clean stripes share the previous
+    /// snapshot's `Arc` (copy-on-write).
+    stripes: Vec<Arc<BTreeMap<u32, Tensor>>>,
+}
+
+impl Snapshot {
+    /// The store clock at publish time — the snapshot's identity.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Total parameters in the snapshot.
+    pub fn n_keys(&self) -> usize {
+        self.stripes.iter().map(|s| s.len()).sum()
+    }
+
+    /// The pinned value of `key`, if the store held it at publish time.
+    pub fn get(&self, key: u32) -> Option<&Tensor> {
+        self.stripes[key as usize % self.stripes.len()].get(&key)
+    }
+
+    /// Every key in the snapshot, ascending.
+    pub fn keys(&self) -> Vec<u32> {
+        let mut keys: Vec<u32> =
+            self.stripes.iter().flat_map(|s| s.keys().copied()).collect();
+        keys.sort_unstable();
+        keys
+    }
+}
+
+/// The store's published serve versions, newest last.
+#[derive(Debug)]
+struct ServeVersions {
+    versions: Vec<Arc<Snapshot>>,
+    keep: usize,
 }
 
 /// Lock-striped concurrent parameter store.
@@ -152,6 +215,11 @@ pub struct StripedStore {
     /// and dropped by [`thaw`](Self::thaw). `None` outside a freeze
     /// window (the common case: reads cost one extra atomic load).
     published: Vec<RwLock<Option<BTreeMap<u32, Tensor>>>>,
+    /// Versioned serving snapshots ([`publish_version`]
+    /// (Self::publish_version)), bounded by the retention count. Lock
+    /// order: stripe guards may be held when this lock is taken
+    /// (publish); snapshot lookups take only this lock.
+    serve: RwLock<ServeVersions>,
 }
 
 /// Below this many total gradient elements a batched apply stays serial
@@ -173,12 +241,21 @@ impl StripedStore {
         for (k, v) in velocity {
             stripes[k as usize % n_stripes].velocity.insert(k, v);
         }
+        for s in &mut stripes {
+            // First publish must clone every stripe (no prior snapshot
+            // to share with).
+            s.dirty = AtomicBool::new(true);
+        }
         StripedStore {
             stripes: stripes.into_iter().map(RwLock::new).collect(),
             opt,
             clock: AtomicU64::new(clock),
             frozen: AtomicBool::new(false),
             published: (0..n_stripes).map(|_| RwLock::new(None)).collect(),
+            serve: RwLock::new(ServeVersions {
+                versions: Vec::new(),
+                keep: DEFAULT_SERVE_VERSIONS,
+            }),
         }
     }
 
@@ -254,7 +331,7 @@ impl StripedStore {
     /// Takes `&self`: only the key's stripe is write-locked.
     pub fn apply_grad(&self, key: u32, grad: &Tensor) -> Result<(), String> {
         let mut guard = self.stripe(key).write().unwrap();
-        let Stripe { params, velocity } = &mut *guard;
+        let Stripe { params, velocity, dirty } = &mut *guard;
         let w = params
             .get_mut(&key)
             .ok_or_else(|| format!("unknown key {key}"))?;
@@ -278,6 +355,7 @@ impl StripedStore {
                 w.axpy(-lr, v);
             }
         }
+        dirty.store(true, Ordering::Relaxed);
         drop(guard);
         self.clock.fetch_add(1, Ordering::Relaxed);
         Ok(())
@@ -292,7 +370,7 @@ impl StripedStore {
     /// untouched (`CompressedRef::validate` runs before any mutation).
     pub fn apply_compressed(&self, key: u32, grad: &CompressedRef) -> Result<(), String> {
         let mut guard = self.stripe(key).write().unwrap();
-        let Stripe { params, velocity } = &mut *guard;
+        let Stripe { params, velocity, dirty } = &mut *guard;
         let w = params
             .get_mut(&key)
             .ok_or_else(|| format!("unknown key {key}"))?;
@@ -313,6 +391,7 @@ impl StripedStore {
                 w.axpy(-lr, v);
             }
         }
+        dirty.store(true, Ordering::Relaxed);
         drop(guard);
         self.clock.fetch_add(1, Ordering::Relaxed);
         Ok(())
@@ -326,7 +405,7 @@ impl StripedStore {
     /// optimizer state untouched.
     pub fn apply_dense(&self, key: u32, grad: &DenseRef) -> Result<(), String> {
         let mut guard = self.stripe(key).write().unwrap();
-        let Stripe { params, velocity } = &mut *guard;
+        let Stripe { params, velocity, dirty } = &mut *guard;
         let w = params
             .get_mut(&key)
             .ok_or_else(|| format!("unknown key {key}"))?;
@@ -352,6 +431,7 @@ impl StripedStore {
                 w.axpy(-lr, v);
             }
         }
+        dirty.store(true, Ordering::Relaxed);
         drop(guard);
         self.clock.fetch_add(1, Ordering::Relaxed);
         Ok(())
@@ -486,12 +566,92 @@ impl StripedStore {
             Some(v) => guard.velocity.insert(key, v),
             None => guard.velocity.remove(&key),
         };
+        guard.dirty.store(true, Ordering::Relaxed);
     }
 
     /// Overwrite the update clock (join install only — the newcomer
     /// adopts the tail's clock so staleness accounting lines up).
     pub fn set_clock(&self, clock: u64) {
         self.clock.store(clock, Ordering::SeqCst);
+    }
+
+    // --------------------------------------------- serving snapshots
+
+    /// Publish a versioned, immutable serving [`Snapshot`] of the whole
+    /// store and return its version (the store clock at publish).
+    ///
+    /// Consistency: all stripe read guards are held simultaneously
+    /// while the snapshot is taken — writers lock one stripe at a time,
+    /// so no update can land between two stripes of the same publish
+    /// (a true cross-stripe cut, unlike [`with_tensor`]
+    /// (Self::with_tensor) reads). Copy-on-write: only stripes mutated
+    /// since the previous publish are cloned; clean stripes share the
+    /// previous snapshot's per-stripe `Arc`.
+    ///
+    /// Publishing at the same clock twice is idempotent (every
+    /// optimizer apply bumps the clock, so an unchanged clock means
+    /// unchanged bytes). Retention is bounded
+    /// ([`set_serve_retention`](Self::set_serve_retention), default
+    /// [`DEFAULT_SERVE_VERSIONS`]): publishing evicts the oldest
+    /// versions beyond the bound, which serve reads then observe as
+    /// `version retired`.
+    pub fn publish_version(&self) -> u64 {
+        let guards: Vec<_> = self.stripes.iter().map(|s| s.read().unwrap()).collect();
+        let version = self.clock();
+        let mut sv = self.serve.write().unwrap();
+        if let Some(last) = sv.versions.last() {
+            if last.version == version {
+                return version;
+            }
+        }
+        let prev = sv.versions.last().cloned();
+        let stripes: Vec<Arc<BTreeMap<u32, Tensor>>> = guards
+            .iter()
+            .enumerate()
+            .map(|(i, g)| {
+                if !g.dirty.load(Ordering::Relaxed) {
+                    if let Some(p) = &prev {
+                        return Arc::clone(&p.stripes[i]);
+                    }
+                }
+                g.dirty.store(false, Ordering::Relaxed);
+                Arc::new(g.params.clone())
+            })
+            .collect();
+        sv.versions.push(Arc::new(Snapshot { version, stripes }));
+        let keep = sv.keep;
+        while sv.versions.len() > keep {
+            sv.versions.remove(0);
+        }
+        version
+    }
+
+    /// The newest published snapshot, if any.
+    pub fn latest_snapshot(&self) -> Option<Arc<Snapshot>> {
+        self.serve.read().unwrap().versions.last().cloned()
+    }
+
+    /// The retained snapshot published at exactly `version`; `None`
+    /// once it has been retired (or was never published).
+    pub fn snapshot_at(&self, version: u64) -> Option<Arc<Snapshot>> {
+        self.serve
+            .read()
+            .unwrap()
+            .versions
+            .iter()
+            .find(|s| s.version == version)
+            .cloned()
+    }
+
+    /// Versions currently retained, oldest first (observability/tests).
+    pub fn published_versions(&self) -> Vec<u64> {
+        self.serve.read().unwrap().versions.iter().map(|s| s.version).collect()
+    }
+
+    /// Bound how many published versions are retained (min 1). Lowering
+    /// the bound evicts the oldest versions at the next publish.
+    pub fn set_serve_retention(&self, keep: usize) {
+        self.serve.write().unwrap().keep = keep.max(1);
     }
 }
 
@@ -870,6 +1030,72 @@ mod tests {
         assert_eq!(got.data(), &[7.0]);
         drop(guard);
         s.thaw();
+    }
+
+    #[test]
+    fn publish_version_pins_bytes_against_later_training() {
+        let s = striped_with(&[(0, vec![1.0, 2.0]), (1, vec![3.0])], Optimizer::Sgd { lr: 1.0 }, 2);
+        let v1 = s.publish_version();
+        assert_eq!(v1, s.clock());
+        let snap1 = s.latest_snapshot().unwrap();
+        assert_eq!(snap1.version(), v1);
+        assert_eq!(snap1.n_keys(), 2);
+        assert_eq!(snap1.keys(), vec![0, 1]);
+        // Concurrent training mutates the store; the pinned snapshot
+        // keeps serving the publish-time bytes.
+        s.apply_grad(0, &t(&[1.0, 1.0])).unwrap();
+        s.apply_grad(1, &t(&[1.0])).unwrap();
+        assert_eq!(snap1.get(0).unwrap().data(), &[1.0, 2.0]);
+        assert_eq!(snap1.get(1).unwrap().data(), &[3.0]);
+        assert!(snap1.get(9).is_none());
+        // A later publish captures the post-training bytes under a new
+        // version; the old version is still resolvable while retained.
+        let v2 = s.publish_version();
+        assert!(v2 > v1);
+        let snap2 = s.snapshot_at(v2).unwrap();
+        assert_eq!(snap2.get(0).unwrap().data(), &[0.0, 1.0]);
+        assert_eq!(s.snapshot_at(v1).unwrap().get(1).unwrap().data(), &[3.0]);
+    }
+
+    #[test]
+    fn publish_version_is_idempotent_and_bounded() {
+        let s = striped_with(&[(0, vec![0.0])], Optimizer::Sgd { lr: 1.0 }, 1);
+        let v1 = s.publish_version();
+        // No writes since: re-publish returns the same version and
+        // retains a single copy.
+        assert_eq!(s.publish_version(), v1);
+        assert_eq!(s.published_versions(), vec![v1]);
+        // Default retention is DEFAULT_SERVE_VERSIONS: publishing a
+        // third version retires the first.
+        let mut versions = vec![v1];
+        for _ in 0..2 {
+            s.apply_grad(0, &t(&[1.0])).unwrap();
+            versions.push(s.publish_version());
+        }
+        assert_eq!(s.published_versions(), versions[1..].to_vec());
+        assert!(s.snapshot_at(versions[0]).is_none());
+        assert!(s.snapshot_at(versions[1]).is_some());
+        // Retention floor of one: the latest always survives.
+        s.set_serve_retention(0);
+        s.apply_grad(0, &t(&[1.0])).unwrap();
+        let v4 = s.publish_version();
+        assert_eq!(s.published_versions(), vec![v4]);
+    }
+
+    #[test]
+    fn publish_version_reuses_clean_stripe_arcs() {
+        // Keys 0 and 1 land on different stripes (n_stripes = 2). After
+        // touching only key 0, a re-publish must clone stripe 0 but
+        // share stripe 1's Arc with the previous snapshot.
+        let s = striped_with(&[(0, vec![0.0]), (1, vec![0.0])], Optimizer::Sgd { lr: 1.0 }, 2);
+        let v1 = s.publish_version();
+        s.apply_grad(0, &t(&[1.0])).unwrap();
+        let v2 = s.publish_version();
+        let (a, b) = (s.snapshot_at(v1).unwrap(), s.snapshot_at(v2).unwrap());
+        assert!(!Arc::ptr_eq(&a.stripes[0], &b.stripes[0]));
+        assert!(Arc::ptr_eq(&a.stripes[1], &b.stripes[1]));
+        assert_eq!(b.get(0).unwrap().data(), &[-1.0]);
+        assert_eq!(b.get(1).unwrap().data(), &[0.0]);
     }
 
     #[test]

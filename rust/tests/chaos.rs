@@ -30,7 +30,7 @@ use dtlsda::ps::replica::STALE_EPOCH;
 use dtlsda::ps::router::{ReplicatedTopology, Router};
 use dtlsda::ps::server::{catch_up_from_tail, serve, PsShared, UpdateMode};
 use dtlsda::ps::shard::{Optimizer, ShardStore};
-use dtlsda::ps::{CodecKind, PullCodec};
+use dtlsda::ps::{CodecKind, PullCodec, ServeClient};
 use dtlsda::tensor::Tensor;
 use dtlsda::util::prop;
 use dtlsda::util::rng::Rng;
@@ -1695,5 +1695,80 @@ fn acked_pushes_survive_on_promoted_tail_under_link_drops() {
         );
         drop(probe);
         let _ = serve_p.join();
+    });
+}
+
+// ------------------------------------------------ serving tier failover
+
+/// Tentpole acceptance for the serving tier: a client streaming a
+/// pinned snapshot version loses its serving replica mid-pass while
+/// training keeps pushing through the chain, fails over to another
+/// chain member, and completes the SAME versioned pull byte-identically
+/// — for both serve codecs. Sync mode publishes at step-release points
+/// of the replicated apply stream, so every chain member assigns the
+/// same version stamps to the same store bytes; quant8 is a pure
+/// function of those bytes, which is what makes the failover invisible.
+#[test]
+fn serving_replica_kill_mid_stream_fails_over_byte_identically() {
+    let seed = chaos_seed();
+    with_watchdog(120, "serve failover", move || {
+        let sync = true;
+        let steps = 12;
+        let cluster = ReplicatedCluster::new(seed, 1, 1, sync, 0.1, 500);
+        // Publish a serve snapshot at every release point; keep plenty
+        // of versions so a pin taken mid-run can't retire under the
+        // cross-member comparison below.
+        for phys in [0usize, 1] {
+            let sh = cluster.shared_of(phys);
+            sh.store.set_serve_retention(64);
+            sh.set_serve_publish_every(1);
+        }
+        let progress = Arc::new(AtomicUsize::new(0));
+        let worker = {
+            let cluster = Arc::clone(&cluster);
+            let progress = progress.clone();
+            thread::spawn(move || {
+                let targets = cluster.targets.clone();
+                let mut client = make_replicated_client(&cluster, 0, DENSE, 2000);
+                run_quad_worker(&mut client, &targets, 0, steps, sync, Some(&*progress))
+            })
+        };
+        // Let training commit a few steps so versions are churning,
+        // then pin on the REPLICA while pushes keep landing.
+        while progress.load(Ordering::SeqCst) < 4 {
+            thread::sleep(Duration::from_millis(1));
+        }
+        let (primary, replica) = {
+            let topo = cluster.topology.read().unwrap();
+            let chain = topo.chain_of(0);
+            (chain[0], chain[1])
+        };
+        for codec in [PullCodec::None, PullCodec::Quant8] {
+            let mut on_replica = ServeClient::new(cluster.connect_phys(replica));
+            on_replica.set_codec(codec);
+            let v = on_replica.pin_latest().unwrap();
+            let before_kill = on_replica.pull(&[]).unwrap();
+            assert_eq!(before_kill.len(), cluster.targets.len());
+            // The serving connection dies mid-pass: a client still
+            // pinned to `v` starts over on a dead transport and fails
+            // over to the PRIMARY through its reconnect handler. The
+            // replica's publish-time bytes must come back exactly.
+            let cl = Arc::clone(&cluster);
+            let mut failed_over = ServeClient::new(Box::new(InProcTransport::pair().0));
+            failed_over.set_codec(codec);
+            failed_over.pin(v);
+            failed_over.set_reconnect(Box::new(move |_| Ok(cl.connect_phys(primary))));
+            let after_kill = failed_over.pull(&[]).unwrap();
+            assert_eq!(before_kill, after_kill, "serve failover diverged at version {v}");
+        }
+        worker.join().unwrap().unwrap();
+        // Now actually crash the replica and resolve through the
+        // topology: the surviving member serves the latest version.
+        cluster.kill_replica(0);
+        let mut c = ServeClient::new(cluster.connect_primary(0));
+        let (v, model) = c.pull_model().unwrap();
+        assert!(v > 0, "no snapshot published by the end of training");
+        assert_eq!(model.len(), cluster.targets.len());
+        cluster.join_serve_threads();
     });
 }
